@@ -1,0 +1,106 @@
+//! Runtime accuracy/throughput mode switching (paper §IV-D).
+//!
+//! CNN-A is approximated with M=4 binary levels but the hardware has
+//! M_arch=2 PA columns: the *same* accelerator serves
+//!
+//! * high-accuracy mode — two passes per convolution (all 4 levels), and
+//! * high-throughput mode — one pass (first 2 levels only),
+//!
+//! selectable per request at run time.  This example measures both modes'
+//! accuracy and simulated throughput on the calibration set, demonstrating
+//! the trade-off the paper's Table I attributes to M_arch.
+//!
+//! Run: `cargo run --release --example mode_switch`
+
+use std::time::Duration;
+
+use binarray::artifacts::{self, CalibBatch, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem, CLOCK_HZ};
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts::default_dir();
+    let net = QuantNetwork::load(&dir.join("cnn_a.weights.bin"))?;
+    let calib = CalibBatch::load(&dir.join("calib.bin"))?;
+    let array = ArrayConfig::new(1, 8, 2);
+    println!(
+        "CNN-A approximated with M={}, hardware M_arch={} → mode switch available\n",
+        net.max_m(),
+        array.m_arch
+    );
+
+    // --- direct system-level comparison ---------------------------------
+    let mut sys = BinArraySystem::new(array, net.clone())?;
+    let mut report = |label: &str, m_run: Option<usize>| -> anyhow::Result<(f64, f64)> {
+        sys.set_mode(m_run);
+        let (mut correct, mut cycles) = (0u64, 0u64);
+        for i in 0..calib.n {
+            let (logits, stats) = sys.run_frame(calib.image(i))?;
+            if binarray::golden::argmax(&logits) as i32 == calib.labels[i] {
+                correct += 1;
+            }
+            cycles += stats.cycles;
+        }
+        let acc = 100.0 * correct as f64 / calib.n as f64;
+        let fps = calib.n as f64 * CLOCK_HZ / cycles as f64;
+        println!(
+            "{label:<18} acc {acc:6.2}%   {:>10.1} fps @400 MHz   ({} cycles/frame)",
+            fps,
+            cycles / calib.n as u64
+        );
+        Ok((acc, fps))
+    };
+    let (acc_hi, fps_hi) = report("high-accuracy", None)?;
+    let (acc_lo, fps_lo) = report("high-throughput", Some(array.m_arch))?;
+    println!(
+        "\nspeedup {:.2}× for {:+.2} accuracy points — §IV-D's runtime dial\n",
+        fps_lo / fps_hi,
+        acc_lo - acc_hi
+    );
+
+    // --- the same switch through the serving stack ----------------------
+    println!("mixed-mode serving (same coordinator, both modes in flight):");
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array,
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(1),
+            },
+        },
+        net,
+    )?;
+    let mut rxs = Vec::new();
+    for i in 0..64 {
+        let mode = if i % 2 == 0 {
+            Mode::HighAccuracy
+        } else {
+            Mode::HighThroughput
+        };
+        rxs.push((mode, coord.submit(calib.image(i % calib.n).to_vec(), mode)));
+    }
+    let (mut cyc_hi, mut n_hi, mut cyc_lo, mut n_lo) = (0u64, 0u64, 0u64, 0u64);
+    for (mode, rx) in rxs {
+        let r = rx.recv()?;
+        match mode {
+            Mode::HighAccuracy => {
+                cyc_hi += r.cycles;
+                n_hi += 1;
+            }
+            Mode::HighThroughput => {
+                cyc_lo += r.cycles;
+                n_lo += 1;
+            }
+        }
+    }
+    let m = coord.shutdown();
+    println!("{}", m.summary());
+    println!(
+        "per-mode cycles/frame: accurate {} | fast {} (ratio {:.2}×)",
+        cyc_hi / n_hi,
+        cyc_lo / n_lo,
+        (cyc_hi as f64 / n_hi as f64) / (cyc_lo as f64 / n_lo as f64)
+    );
+    Ok(())
+}

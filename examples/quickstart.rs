@@ -1,0 +1,109 @@
+//! Quickstart: the BinArray public API in five minutes.
+//!
+//! 1. binary-approximate a real-valued filter (paper §II, Algorithms 1+2);
+//! 2. compare reconstruction errors (Fig. 2's iterative refinement);
+//! 3. run a convolution through the cycle-accurate systolic array and
+//!    check it against the bit-accurate golden model;
+//! 4. query the analytical performance and area models.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use binarray::approx::{algorithm1, algorithm2, compression_factor};
+use binarray::artifacts::{LayerKind, QuantLayer};
+use binarray::binarray::{ArrayConfig, SaEngine};
+use binarray::tensor::{FeatureMap, Shape};
+use binarray::util::rng::Xoshiro256;
+use binarray::{area, golden, nn, perf};
+
+fn main() {
+    let mut rng = Xoshiro256::new(42);
+
+    // --- 1. approximate a 7×7×3 filter with M = 1..5 binary levels -----
+    println!("== binary approximation (paper §II) ==");
+    let w: Vec<f32> = (0..7 * 7 * 3).map(|_| rng.normal() as f32).collect();
+    println!("{:<4} {:>12} {:>12} {:>8}", "M", "err(Alg1)", "err(Alg2)", "cf");
+    for m in 1..=5 {
+        let a1 = algorithm1(&w, m);
+        let a2 = algorithm2(&w, m, 100);
+        println!(
+            "{:<4} {:>12.5} {:>12.5} {:>8.2}",
+            m,
+            a1.rel_error(&w),
+            a2.rel_error(&w),
+            compression_factor(w.len(), m, 32, 8)
+        );
+    }
+    println!("(Algorithm 2 never does worse — the paper's §V-B1 claim)\n");
+
+    // --- 2. quantize one conv layer and run it on the simulated SA -----
+    println!("== systolic array vs golden model ==");
+    let m = 2;
+    let d_out = 4;
+    let approxs: Vec<_> = (0..d_out)
+        .map(|_| {
+            let w: Vec<f32> = (0..3 * 3 * 2).map(|_| rng.normal() as f32).collect();
+            algorithm2(&w, m, 100)
+        })
+        .collect();
+    let layer = QuantLayer {
+        kind: LayerKind::Conv,
+        planes: approxs
+            .iter()
+            .flat_map(|a| a.planes.iter().flatten().copied())
+            .collect(),
+        alpha_q: approxs
+            .iter()
+            .flat_map(|a| a.alpha.iter().map(|&x| (x * 32.0).round() as i8))
+            .collect(),
+        bias_q: vec![0; d_out],
+        d: d_out,
+        m,
+        kh: 3,
+        kw: 3,
+        c: 2,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 6,
+        relu: true,
+        pool: 2,
+        stride: 1,
+    };
+    let input = FeatureMap::from_vec(
+        Shape::new(10, 10, 2),
+        (0..200).map(|_| rng.i8()).collect(),
+    );
+    let sa = SaEngine::new(8, 2);
+    let (out, stats) = sa.conv_layer(&layer, &input, m);
+    let want = golden::relu_maxpool(&golden::conv_layer(&layer, &input, m), 2);
+    assert_eq!(out, want, "simulator must match the golden model");
+    println!(
+        "conv 10×10×2 → {}×{}×{}: {} cycles, {} windows, PE util {:.1}% — matches golden ✓\n",
+        out.shape.h,
+        out.shape.w,
+        out.shape.c,
+        stats.cycles,
+        stats.windows,
+        100.0 * stats.pe_utilization(8, 2)
+    );
+
+    // --- 3. analytical models ------------------------------------------
+    println!("== analytical models (paper §IV-E, Table III/IV) ==");
+    let net = nn::cnn_a();
+    for cfg in [ArrayConfig::new(1, 8, 2), ArrayConfig::new(1, 32, 2)] {
+        let fps = perf::fps(&net, cfg, 2, false);
+        let util = area::resources(cfg, &net, 2).utilization();
+        println!(
+            "BinArray{}: CNN-A @ M=2 → {:.1} fps | LUT {:.2}% FF {:.2}% DSP {:.2}%",
+            cfg.label(),
+            fps,
+            util.lut,
+            util.ff,
+            util.dsp
+        );
+    }
+    println!(
+        "hypothetical 1-GOPS CPU: {:.1} fps (the paper's baseline)",
+        perf::cpu_fps(&net)
+    );
+}

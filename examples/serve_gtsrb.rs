@@ -1,0 +1,137 @@
+//! End-to-end driver: serve traffic-sign inference through the full stack.
+//!
+//! Exercises every layer of the reproduction on a real small workload:
+//!
+//! * artifacts built by Python/JAX/Pallas (`make artifacts`): quantized
+//!   binary-approximated CNN-A weights + calibration images + HLO graphs;
+//! * the Rust coordinator (router → batcher → worker pool);
+//! * each worker running frames on the cycle-accurate BinArray simulator;
+//! * the PJRT runtime cross-scoring a sample of frames on the AOT-lowered
+//!   float model (Python never runs here);
+//! * the analytical model (Eq. 18) cross-checked against simulated cycles.
+//!
+//! Run: `cargo run --release --example serve_gtsrb -- [frames] [workers]`
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::{Duration, Instant};
+
+use binarray::artifacts::{self, CalibBatch, QuantNetwork};
+use binarray::binarray::ArrayConfig;
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode,
+};
+use binarray::runtime::Runtime;
+use binarray::{nn, perf};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let frames: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let dir = artifacts::default_dir();
+    let net = QuantNetwork::load(&dir.join("cnn_a.weights.bin"))?;
+    let calib = CalibBatch::load(&dir.join("calib.bin"))?;
+    let array = ArrayConfig::new(1, 8, 2);
+    println!(
+        "BinArray{} × {workers} workers | CNN-A M={} | {frames} frames from calib.bin",
+        array.label(),
+        net.max_m()
+    );
+
+    // --- serve ----------------------------------------------------------
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array,
+            workers,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+            },
+        },
+        net.clone(),
+    )?;
+
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(frames);
+    let mut labels = Vec::with_capacity(frames);
+    for i in 0..frames {
+        let idx = i % calib.n;
+        rxs.push(coord.submit(calib.image(idx).to_vec(), Mode::HighAccuracy));
+        labels.push(calib.labels[idx]);
+    }
+    let mut correct = 0usize;
+    let mut cycles_per_frame = Vec::with_capacity(frames);
+    let mut sample_logits = Vec::new();
+    for (i, (rx, label)) in rxs.into_iter().zip(&labels).enumerate() {
+        let reply = rx.recv()?;
+        if reply.class as i32 == *label {
+            correct += 1;
+        }
+        cycles_per_frame.push(reply.cycles);
+        if i < 8 {
+            sample_logits.push((i % calib.n, reply.class));
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = coord.shutdown();
+
+    println!("\n== serving report ==");
+    println!("{}", metrics.summary());
+    println!(
+        "end-to-end wall: {:.2}s → {:.1} frames/s of *simulation* throughput",
+        wall.as_secs_f64(),
+        frames as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "top-1 accuracy: {:.2}% ({}/{} — int8 binary-approximated network)",
+        100.0 * correct as f64 / frames as f64,
+        correct,
+        frames
+    );
+
+    // --- analytical cross-check (the paper's §V-A3 methodology) ---------
+    let mean_cycles =
+        cycles_per_frame.iter().sum::<u64>() as f64 / cycles_per_frame.len() as f64;
+    let analytic = perf::network_cycles(&nn::cnn_a(), array, net.max_m(), false);
+    println!("\n== analytical model vs cycle-accurate simulation ==");
+    println!("analytical Eq.18 cycles/frame : {analytic:>12.0}");
+    println!("simulated cycles/frame (mean) : {mean_cycles:>12.0}");
+    println!(
+        "model error: {:+.2}% (paper reports −1.1‰ for its analytical-vs-VHDL check)",
+        100.0 * (analytic - mean_cycles) / mean_cycles
+    );
+    println!(
+        "simulated accelerator throughput @400 MHz: {:.1} fps (analytical: {:.1} fps)",
+        metrics.simulated_fps(),
+        perf::fps(&nn::cnn_a(), array, net.max_m(), false),
+    );
+
+    // --- PJRT float-model cross-score on a few frames --------------------
+    println!("\n== PJRT cross-check (AOT HLO from JAX, no Python at runtime) ==");
+    match Runtime::cpu() {
+        Ok(rt) => {
+            let model =
+                rt.load_hlo(&dir.join("cnn_a_float_b1.hlo.txt"), &[1, 48, 48, 3])?;
+            let mut agree = 0;
+            for &(idx, sim_class) in &sample_logits {
+                let logits = model.run_quantized(calib.image(idx), calib.f_input)?;
+                let float_class = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap();
+                if float_class == sim_class {
+                    agree += 1;
+                }
+            }
+            println!(
+                "float-model vs int8-simulator top-1 agreement: {agree}/{} sampled frames",
+                sample_logits.len()
+            );
+        }
+        Err(e) => println!("PJRT unavailable ({e}); skipping float cross-check"),
+    }
+
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table II cross-check (Rust side): compression factors and the
+//! Algorithm 1 vs Algorithm 2 approximation quality, per layer of CNN-A.
+//!
+//! The accuracy half of Table II (training + retraining) runs in Python
+//! (`python -m compile.table2`); this example reproduces the parts that
+//! are independent of the training loop — the compression-factor column
+//! (Eq. 6) and the per-filter reconstruction-error improvement of
+//! Algorithm 2 — directly on the real CNN-A weight statistics, from Rust.
+//!
+//! Run: `cargo run --release --example table2_compression`
+
+use binarray::approx::{algorithm1, algorithm2, compression_factor};
+use binarray::nn::{self, Layer};
+use binarray::util::rng::Xoshiro256;
+
+fn main() {
+    let net = nn::cnn_a();
+    println!("== Eq. 6 compression factors, CNN-A (bits_w=32, bits_α=8) ==");
+    println!(
+        "{:<22} {:>6} {:>8} {:>8} {:>8}",
+        "layer", "N_c", "M=2", "M=3", "M=4"
+    );
+    let (mut orig_bits, mut comp_bits) = (vec![0u64; 3], vec![0u64; 3]);
+    for l in &net.layers {
+        let n_c = l.n_c();
+        let d = l.d_out();
+        let name = match l {
+            Layer::Conv { kh, kw, c_in, .. } => format!("conv {kh}x{kw}x{c_in} ({d})"),
+            Layer::Dense { n_in, n_out } => format!("dense {n_in}->{n_out}"),
+            _ => "other".into(),
+        };
+        print!("{name:<22} {n_c:>6}");
+        for (i, m) in [2usize, 3, 4].iter().enumerate() {
+            print!(" {:>8.2}", compression_factor(n_c, *m, 32, 8));
+            orig_bits[i] += d as u64 * (n_c as u64 + 1) * 32;
+            comp_bits[i] += d as u64 * *m as u64 * (n_c as u64 + 8);
+        }
+        println!();
+    }
+    print!("{:<22} {:>6}", "network total", "");
+    for i in 0..3 {
+        print!(" {:>8.2}", orig_bits[i] as f64 / comp_bits[i] as f64);
+    }
+    println!("\n(paper Table II: cf = 15.8, 10.6, 7.9 for CNN-A at M = 2, 3, 4)");
+
+    println!("\n== Algorithm 1 vs Algorithm 2 reconstruction error ==");
+    println!("(mean relative L2 error over 64 He-initialized filters per layer)");
+    println!(
+        "{:<22} {:>4} {:>12} {:>12} {:>10}",
+        "layer", "M", "Alg1", "Alg2", "gain"
+    );
+    let mut rng = Xoshiro256::new(7);
+    for l in &net.layers {
+        let n_c = l.n_c();
+        let name = match l {
+            Layer::Conv { kh, kw, c_in, .. } => format!("conv {kh}x{kw}x{c_in}"),
+            Layer::Dense { n_in, .. } => format!("dense n_in={n_in}"),
+            _ => continue,
+        };
+        for m in [2usize, 4] {
+            let trials = 64;
+            let (mut e1, mut e2) = (0.0f64, 0.0f64);
+            for _ in 0..trials {
+                let scale = (2.0 / n_c as f64).sqrt() as f32;
+                let w: Vec<f32> = (0..n_c)
+                    .map(|_| rng.normal() as f32 * scale)
+                    .collect();
+                e1 += algorithm1(&w, m).rel_error(&w);
+                e2 += algorithm2(&w, m, 100).rel_error(&w);
+            }
+            e1 /= trials as f64;
+            e2 /= trials as f64;
+            println!(
+                "{name:<22} {m:>4} {e1:>12.5} {e2:>12.5} {:>9.1}%",
+                100.0 * (e1 - e2) / e1
+            );
+        }
+    }
+    println!("\nAlgorithm 2 must improve (or match) every row — the §V-B1 claim.");
+}

@@ -1,0 +1,105 @@
+//! Design-space sweep: throughput vs resources over the three design
+//! parameters (paper Table I: N_SA, D_arch, M_arch).
+//!
+//! This is the "end-to-end framework" use case the paper's conclusion
+//! sketches: given application constraints (fps target, device budget),
+//! enumerate configurations, apply the analytical performance model
+//! (§IV-E) and the resource model (Table IV), and print the Pareto set.
+//!
+//! Run: `cargo run --release --example tradeoff_sweep -- [cnn_a|cnn_b1|cnn_b2] [M]`
+
+use binarray::binarray::ArrayConfig;
+use binarray::{area, nn, perf};
+
+struct Point {
+    cfg: ArrayConfig,
+    fps: f64,
+    lut_pct: f64,
+    bram_pct: f64,
+    dsp: u64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let net_name = args.first().map(String::as_str).unwrap_or("cnn_a");
+    let (net, m, offload) = match net_name {
+        "cnn_b1" => (nn::cnn_b1(), 4, true),
+        "cnn_b2" => (nn::cnn_b2(), 4, true),
+        _ => (nn::cnn_a(), 2, false),
+    };
+    let m: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(m);
+
+    println!("design-space sweep: {} at M={m}", net.name);
+    let mut points = Vec::new();
+    for n_sa in [1usize, 2, 4, 8, 16] {
+        for d_arch in [8usize, 16, 32, 64] {
+            for m_arch in [1usize, 2, 4] {
+                if m_arch > m {
+                    continue;
+                }
+                let cfg = ArrayConfig::new(n_sa, d_arch, m_arch);
+                let res = area::resources(cfg, &net, m);
+                let u = res.utilization();
+                // device feasibility gate
+                if u.lut > 100.0 || u.bram > 100.0 || u.dsp > 100.0 {
+                    continue;
+                }
+                points.push(Point {
+                    cfg,
+                    fps: perf::fps(&net, cfg, m, offload),
+                    lut_pct: u.lut,
+                    bram_pct: u.bram,
+                    dsp: res.dsp,
+                });
+            }
+        }
+    }
+
+    // Pareto front: no other point with ≥ fps and ≤ LUT.
+    let pareto: Vec<bool> = points
+        .iter()
+        .map(|p| {
+            !points.iter().any(|q| {
+                (q.fps > p.fps && q.lut_pct <= p.lut_pct)
+                    || (q.fps >= p.fps && q.lut_pct < p.lut_pct)
+            })
+        })
+        .collect();
+
+    println!(
+        "{:<12} {:>10} {:>8} {:>8} {:>6}  pareto",
+        "config", "fps", "LUT%", "BRAM%", "DSP"
+    );
+    let mut shown = 0;
+    for (p, par) in points.iter().zip(&pareto) {
+        if !par && shown > 40 {
+            continue; // keep the table readable; always show the front
+        }
+        println!(
+            "{:<12} {:>10.1} {:>8.2} {:>8.2} {:>6}  {}",
+            p.cfg.label(),
+            p.fps,
+            p.lut_pct,
+            p.bram_pct,
+            p.dsp,
+            if *par { "◆" } else { "" }
+        );
+        shown += 1;
+    }
+    let best = points
+        .iter()
+        .max_by(|a, b| a.fps.total_cmp(&b.fps))
+        .expect("nonempty sweep");
+    println!(
+        "\nfastest feasible: BinArray{} at {:.1} fps ({:.1}% LUT, {} DSP)",
+        best.cfg.label(),
+        best.fps,
+        best.lut_pct,
+        best.dsp
+    );
+    println!(
+        "CPU baseline: {:.1} fps | paper's EdgeTPU point (CNN-B2): {:.1} fps",
+        perf::cpu_fps(&net),
+        perf::published::EDGE_TPU_CNN_B2_FPS
+    );
+}

@@ -1,0 +1,213 @@
+"""AOT compile path: train → binarize → quantize → export artifacts.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged).  Outputs
+in ``artifacts/``:
+
+* ``cnn_a_float_b{N}.hlo.txt``   — float reference model, batch N
+* ``cnn_a_pallas_b{N}.hlo.txt``  — binary-approximated model through the
+  L1 Pallas kernels (the request-path graph the Rust runtime loads)
+* ``cnn_a.manifest``             — text manifest: layer specs + quant params
+* ``cnn_a.weights.bin``          — BAW1: sign planes / α_q / bias_q per layer
+* ``calib.bin``                  — BAC1: int8 test images + labels
+* ``params.npz``                 — cached float training result
+* ``golden.bin``                 — BAG1: int8 logits of the numpy golden
+  model on the calib batch (cross-check target for the Rust golden model)
+
+Interchange is HLO **text**, not serialized protos — jax ≥ 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as dsgen
+from . import model as mdl
+from . import quantize as qz
+from . import train as trn
+
+MAGIC_WEIGHTS = 0x31574142  # "BAW1"
+MAGIC_CALIB = 0x31434142  # "BAC1"
+MAGIC_GOLDEN = 0x31474142  # "BAG1"
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function's stablehlo to XLA HLO text.
+
+    ``as_hlo_text(True)`` = print_large_constants: the network weights are
+    closed over as constants, and the default printer elides them as
+    ``{...}`` — which parses but compiles to a *zero-weight* model on the
+    Rust side.  Printing them keeps the text artifact self-contained.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def export_hlo(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+# --- binary export formats (read by rust/src/artifacts/) -------------------
+
+
+def write_weights(path: str, qnet: qz.QNetwork) -> None:
+    """BAW1: little-endian flat binary of all quantized layers."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", MAGIC_WEIGHTS, len(qnet.layers)))
+        f.write(struct.pack("<I", qnet.f_input))
+        for layer in qnet.layers:
+            kind = 0 if layer.kind == "conv" else 1
+            planes = layer.planes
+            if layer.kind == "conv":
+                d, m, kh, kw, c = planes.shape
+                dims = (d, m, kh, kw, c)
+            else:
+                d, m, nin = planes.shape
+                dims = (d, m, nin, 0, 0)
+            f.write(struct.pack("<I5I", kind, *dims))
+            f.write(
+                struct.pack(
+                    "<iiiiIII",
+                    layer.f_alpha,
+                    layer.f_in,
+                    layer.f_out,
+                    layer.shift,
+                    1 if layer.relu else 0,
+                    layer.pool,
+                    layer.stride,
+                )
+            )
+            f.write(planes.astype(np.int8).tobytes())
+            f.write(layer.alpha_q.astype(np.int8).tobytes())
+            f.write(layer.bias_q.astype("<i4").tobytes())
+    print(f"  wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+def write_manifest(path: str, spec: mdl.NetSpec, qnet: qz.QNetwork) -> None:
+    """Human-readable manifest mirroring the BAW1 contents."""
+    with open(path, "w") as f:
+        f.write(f"net {spec.name}\n")
+        f.write(f"input {spec.input_hw} {spec.input_hw} {spec.input_c}\n")
+        f.write(f"f_input {qnet.f_input}\n")
+        for i, layer in enumerate(qnet.layers):
+            if layer.kind == "conv":
+                d, m, kh, kw, c = layer.planes.shape
+                f.write(
+                    f"conv {i} d {d} m {m} kh {kh} kw {kw} c {c} "
+                    f"stride {layer.stride} pool {layer.pool} "
+                    f"f_alpha {layer.f_alpha} f_in {layer.f_in} "
+                    f"f_out {layer.f_out} shift {layer.shift} relu {int(layer.relu)}\n"
+                )
+            else:
+                d, m, nin = layer.planes.shape
+                f.write(
+                    f"dense {i} d {d} m {m} nin {nin} "
+                    f"f_alpha {layer.f_alpha} f_in {layer.f_in} "
+                    f"f_out {layer.f_out} shift {layer.shift} relu {int(layer.relu)}\n"
+                )
+    print(f"  wrote {path}")
+
+
+def write_calib(path: str, x_q: np.ndarray, labels: np.ndarray, f_input: int) -> None:
+    """BAC1: int8 NHWC images + int32 labels."""
+    n, h, w, c = x_q.shape
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I5I", MAGIC_CALIB, n, h, w, c, f_input))
+        f.write(x_q.astype(np.int8).tobytes())
+        f.write(labels.astype("<i4").tobytes())
+    print(f"  wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+def write_golden(path: str, logits_q: np.ndarray) -> None:
+    """BAG1: int8 logits of the numpy int8 oracle on the calib batch."""
+    n, k = logits_q.shape
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC_GOLDEN, n, k))
+        f.write(logits_q.astype(np.int8).tobytes())
+    print(f"  wrote {path}")
+
+
+# --- main ------------------------------------------------------------------
+
+
+def build(out_dir: str, steps: int, M: int, algorithm: int, seed: int) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    spec = mdl.CNN_A
+
+    cache = os.path.join(out_dir, "params.npz")
+    if os.path.exists(cache):
+        print(f"loading cached float params from {cache}")
+        with np.load(cache) as z:
+            params = {k: jnp.asarray(v) for k, v in z.items()}
+    else:
+        print(f"training float {spec.name} baseline ({steps} steps)")
+        params, acc = trn.train_float(spec, seed=seed, steps=steps)
+        np.savez(cache, **{k: np.asarray(v) for k, v in params.items()})
+        print(f"  cached params (float acc {acc:.4f})")
+
+    print(f"binarizing with Algorithm {algorithm}, M={M}")
+    bp = mdl.binarize_params(spec, params, M, algorithm)
+
+    # calibration batch + quantization
+    _, (xte, yte) = dsgen.make_dataset(seed, 1, 256)
+    qnet = qz.quantize_network(spec, bp, jnp.asarray(xte[:64]))
+    x_q = qz.quantize_input(xte, qnet.f_input)
+
+    # numpy int8 oracle → golden.bin (Rust golden model must match exactly)
+    logits_q = qz.forward_int8(qnet, x_q[:64])
+    int8_acc = float(np.mean(np.argmax(logits_q, -1) == yte[:64]))
+    print(f"  int8 oracle accuracy on calib batch: {int8_acc:.4f}")
+
+    # artifacts
+    write_weights(os.path.join(out_dir, "cnn_a.weights.bin"), qnet)
+    write_manifest(os.path.join(out_dir, "cnn_a.manifest"), spec, qnet)
+    write_calib(os.path.join(out_dir, "calib.bin"), x_q, yte, qnet.f_input)
+    write_golden(os.path.join(out_dir, "golden.bin"), logits_q)
+
+    # HLO artifacts
+    for batch in (1, 8):
+        x_spec = jax.ShapeDtypeStruct(
+            (batch, spec.input_hw, spec.input_hw, spec.input_c), jnp.float32
+        )
+        export_hlo(
+            lambda x: (mdl.forward_float(spec, params, x),),
+            (x_spec,),
+            os.path.join(out_dir, f"cnn_a_float_b{batch}.hlo.txt"),
+        )
+        export_hlo(
+            lambda x: (mdl.forward_pallas(spec, bp, x),),
+            (x_spec,),
+            os.path.join(out_dir, f"cnn_a_pallas_b{batch}.hlo.txt"),
+        )
+    print("artifacts complete")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--M", type=int, default=4)
+    ap.add_argument("--algorithm", type=int, default=2, choices=(1, 2))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(args.out, args.steps, args.M, args.algorithm, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Multi-level binary weight approximation (paper §II).
+
+Implements both procedures evaluated in the paper:
+
+* ``algorithm1`` — the greedy residual procedure of Guo et al. [7]
+  (paper Algorithm 1): binary tensors are chosen as the sign of the
+  running residual, each scaled by the *estimated* factor
+  ``mean(|residual|)``; the final scaling factors come from one
+  least-squares solve.
+
+* ``algorithm2`` — the paper's improvement (Algorithm 2): alternate
+  between re-deriving the binary tensors from the *least-squares*
+  scaling factors and re-solving for the factors, until the binary
+  tensors are stable or ``K`` iterations have elapsed.
+
+Both operate on an arbitrarily-shaped weight tensor ``W`` and return
+``(B, alpha)`` with ``B`` of shape ``(M, *W.shape)`` holding ±1 values and
+``alpha`` of shape ``(M,)``.  Convolution layers are approximated one
+output-channel filter at a time (paper §II-B); use :func:`approximate_conv`
+/ :func:`approximate_dense` for the vmapped per-filter variants.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BinaryApprox(NamedTuple):
+    """Result of a multi-level binary approximation of one tensor.
+
+    Attributes:
+        B: ``(M, *w_shape)`` array of ±1 (stored as the compute dtype).
+        alpha: ``(M,)`` scaling factors, descending in typical magnitude.
+    """
+
+    B: jax.Array
+    alpha: jax.Array
+
+    def reconstruct(self) -> jax.Array:
+        """Return ``sum_m B_m * alpha_m`` (Eq. 1)."""
+        a = self.alpha.reshape((-1,) + (1,) * (self.B.ndim - 1))
+        return jnp.sum(self.B * a, axis=0)
+
+
+def _solve_alpha(w_flat: jax.Array, B_flat: jax.Array) -> jax.Array:
+    """Least-squares solve of Eq. (5): ``min_a ||w - B a||^2``.
+
+    Args:
+        w_flat: ``(Nc,)`` original coefficients.
+        B_flat: ``(M, Nc)`` binary tensors (±1).
+
+    Uses the normal equations: ``(B B^T) a = B w``.  ``B B^T`` is ``(M, M)``
+    with diagonal ``Nc`` — tiny and symmetric, so a direct solve is exact
+    enough and cheap to vmap over filters.  A small Tikhonov term guards the
+    degenerate case of duplicated binary tensors (possible for M > 1 when a
+    residual is exactly zero).
+    """
+    G = B_flat @ B_flat.T  # (M, M) Gram matrix
+    rhs = B_flat @ w_flat  # (M,)
+    M = B_flat.shape[0]
+    G = G + 1e-6 * jnp.eye(M, dtype=G.dtype)
+    return jnp.linalg.solve(G, rhs)
+
+
+def _greedy_tensors(w_flat: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Re-derive binary tensors given fixed scaling factors.
+
+    One pass of Algorithm 2 lines 6-9: ``B_m = sign(residual)`` with the
+    residual updated using the *current* least-squares alphas rather than
+    the running means of Algorithm 1.
+    """
+
+    def step(dw, a_m):
+        b_m = jnp.where(dw >= 0, 1.0, -1.0).astype(dw.dtype)
+        return dw - b_m * a_m, b_m
+
+    _, B = jax.lax.scan(step, w_flat, alpha)
+    return B
+
+
+def algorithm1(w: jax.Array, M: int) -> BinaryApprox:
+    """Greedy multi-level binarization of ``w`` (paper Algorithm 1, from [7]).
+
+    Args:
+        w: weight tensor, any shape.
+        M: number of binary tensors.
+    """
+    w_flat = w.reshape(-1)
+
+    def step(dw, _):
+        b_m = jnp.where(dw >= 0, 1.0, -1.0).astype(dw.dtype)
+        a_hat = jnp.mean(jnp.abs(dw))  # mean(ΔW ⊙ B_m) == mean(|ΔW|)
+        return dw - b_m * a_hat, b_m
+
+    _, B_flat = jax.lax.scan(step, w_flat, None, length=M)
+    alpha = _solve_alpha(w_flat, B_flat)
+    return BinaryApprox(B_flat.reshape((M,) + w.shape), alpha)
+
+
+def algorithm2(w: jax.Array, M: int, K: int = 100) -> BinaryApprox:
+    """Recursive refinement of Algorithm 1 (paper Algorithm 2, ours).
+
+    Alternates ``B <- greedy(w, alpha)`` and ``alpha <- lstsq(w, B)`` until
+    the binary tensors are stable or ``K`` iterations elapsed.  Implemented
+    with ``lax.while_loop`` so it jits and vmaps over filters.
+
+    Args:
+        w: weight tensor, any shape.
+        M: number of binary tensors.
+        K: iteration cap (paper uses K=100).
+    """
+    w_flat = w.reshape(-1)
+    init = algorithm1(w, M)
+    B0 = init.B.reshape(M, -1)
+
+    def cond(state):
+        it, B, _, changed = state
+        return jnp.logical_and(changed, it < K)
+
+    def body(state):
+        it, B, alpha, _ = state
+        B_new = _greedy_tensors(w_flat, alpha)
+        alpha_new = _solve_alpha(w_flat, B_new)
+        changed = jnp.any(B_new != B)
+        return it + 1, B_new, alpha_new, changed
+
+    _, B, alpha, _ = jax.lax.while_loop(
+        cond, body, (jnp.array(0), B0, init.alpha, jnp.array(True))
+    )
+    return BinaryApprox(B.reshape((M,) + w.shape), alpha)
+
+
+def _per_filter(fn, w_filters: jax.Array, M: int, **kw) -> BinaryApprox:
+    """vmap an approximation procedure over the leading (filter) axis."""
+    res = jax.vmap(lambda w: fn(w, M, **kw))(w_filters)
+    # vmapped result: B (D, M, ...), alpha (D, M)
+    return BinaryApprox(res.B, res.alpha)
+
+
+def approximate_conv(
+    w: jax.Array, M: int, algorithm: int = 2, K: int = 100
+) -> BinaryApprox:
+    """Approximate a conv kernel ``(kh, kw, C, D)`` per output filter.
+
+    Returns ``B`` of shape ``(D, M, kh, kw, C)`` and ``alpha`` ``(D, M)`` —
+    one binary expansion per output channel, as the paper's SA expects
+    (each PE row holds one output channel's binary filter).
+    """
+    w_filters = jnp.moveaxis(w, -1, 0)  # (D, kh, kw, C)
+    fn = algorithm2 if algorithm == 2 else algorithm1
+    kw = {"K": K} if algorithm == 2 else {}
+    return _per_filter(fn, w_filters, M, **kw)
+
+
+def approximate_dense(
+    w: jax.Array, M: int, algorithm: int = 2, K: int = 100
+) -> BinaryApprox:
+    """Approximate a dense weight matrix ``(N_in, N_out)`` per neuron.
+
+    Returns ``B`` of shape ``(N_out, M, N_in)`` and ``alpha`` ``(N_out, M)``
+    (paper §II-C: "M 1D binary tensors for each neuron").
+    """
+    w_neurons = w.T  # (N_out, N_in)
+    fn = algorithm2 if algorithm == 2 else algorithm1
+    kw = {"K": K} if algorithm == 2 else {}
+    return _per_filter(fn, w_neurons, M, **kw)
+
+
+def approximate_depthwise(
+    w: jax.Array, M: int, algorithm: int = 2, K: int = 100
+) -> BinaryApprox:
+    """Approximate a depthwise kernel ``(kh, kw, C, 1)`` channel-wise.
+
+    Paper §V-A1: "The depth-wise layers of MobileNetV1 were approximated
+    channel-wise, as there exists only a single convolution filter."
+    Returns ``B`` ``(C, M, kh, kw)`` and ``alpha`` ``(C, M)``.
+    """
+    w_ch = jnp.moveaxis(w[..., 0], -1, 0)  # (C, kh, kw)
+    fn = algorithm2 if algorithm == 2 else algorithm1
+    kw = {"K": K} if algorithm == 2 else {}
+    return _per_filter(fn, w_ch, M, **kw)
+
+
+def reconstruction_error(w: jax.Array, approx: BinaryApprox) -> jax.Array:
+    """Relative L2 reconstruction error ``||W - Ŵ|| / ||W||`` of Eq. (4)."""
+    w_hat = approx.reconstruct()
+    if w_hat.shape != w.shape:  # per-filter layout: move D axis back
+        w_hat = jnp.moveaxis(
+            jax.vmap(lambda b, a: BinaryApprox(b, a).reconstruct())(
+                approx.B, approx.alpha
+            ),
+            0,
+            -1,
+        )
+    return jnp.linalg.norm(w - w_hat) / (jnp.linalg.norm(w) + 1e-12)
+
+
+def compression_factor(
+    n_c: int, M: int, bits_w: int = 32, bits_alpha: int = 8
+) -> float:
+    """Weight compression factor of Eq. (6) for a filter with ``n_c`` coeffs.
+
+    ``(N_c + 1)·bits_w / (M·(N_c + bits_alpha))`` — the numerator counts the
+    original coefficients plus one bias, the denominator the M binary planes
+    plus M fixed-point scaling factors.
+    """
+    return ((n_c + 1) * bits_w) / (M * (n_c + bits_alpha))
+
+
+def network_compression_factor(
+    layer_sizes: list[tuple[int, int]], M: int, bits_w: int = 32, bits_alpha: int = 8
+) -> float:
+    """Whole-network compression factor.
+
+    Args:
+        layer_sizes: per-layer ``(num_filters, coeffs_per_filter)``.
+    """
+    orig = sum(d * (nc + 1) * bits_w for d, nc in layer_sizes)
+    comp = sum(d * M * (nc + bits_alpha) for d, nc in layer_sizes)
+    return orig / comp
+
+
+# --- Straight-through-estimator retraining support (paper §V-B1) ---------
+
+
+@jax.custom_vjp
+def ste_reconstruct(w: jax.Array, M: int, algorithm: int):
+    """Binary-approximate ``w`` in the forward pass, identity gradient.
+
+    Retraining uses the straight-through estimator of BinaryNet [5]: the
+    forward pass sees the quantized (binary-approximated) weights, the
+    backward pass treats the approximation as identity so the underlying
+    float weights keep learning.
+    """
+    return _reconstruct_now(w, M, algorithm)
+
+
+def _reconstruct_now(w, M, algorithm):
+    if w.ndim == 2:
+        ap = approximate_dense(w, M, algorithm=algorithm, K=20)
+        recon = jax.vmap(lambda b, a: BinaryApprox(b, a).reconstruct())(
+            ap.B, ap.alpha
+        )
+        return recon.T
+    ap = approximate_conv(w, M, algorithm=algorithm, K=20)
+    recon = jax.vmap(lambda b, a: BinaryApprox(b, a).reconstruct())(ap.B, ap.alpha)
+    return jnp.moveaxis(recon, 0, -1)
+
+
+def _ste_fwd(w, M, algorithm):
+    return _reconstruct_now(w, M, algorithm), None
+
+
+def _ste_bwd(_, g):
+    return (g, None, None)
+
+
+ste_reconstruct.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,120 @@
+"""Procedural synthetic stand-in for GTSRB (43-class traffic signs).
+
+GTSRB itself is not available offline, so Table II's accuracy experiments
+run on a procedurally generated 43-class sign dataset with the same input
+geometry as CNN-A (48×48×3).  Each class is a distinct combination of
+(background shape, shape hue, glyph pattern); samples vary by translation,
+scale, brightness, and pixel noise, so the task is learnable but not
+trivial — exactly what the accuracy-delta study needs (see DESIGN.md
+§Substitutions).
+
+The generator is a pure function of (seed, index).  ``aot.py`` exports a
+calibration/test batch to ``artifacts/`` so the Rust serving examples feed
+the very same images the Python side trained on; ``rust/src/data/`` also
+has an independent procedural generator (same recipe, own PRNG) for
+unbounded load generation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 43
+IMG = 48  # CNN-A input width (Listing 1: W_I = 48)
+
+# Per-class style table: (shape_id, hue, glyph_id) — deterministic.
+_SHAPES = 4  # disc, triangle, square, diamond
+_GLYPHS = 6  # bar, cross, dot-grid, chevron, ring, slash
+
+
+def _class_style(cls: int) -> tuple[int, float, int]:
+    shape = cls % _SHAPES
+    glyph = (cls // _SHAPES) % _GLYPHS
+    hue = (cls * 0.6180339887) % 1.0  # golden-ratio hue spacing
+    return shape, hue, glyph
+
+
+def _hsv_to_rgb(h: float, s: float, v: float) -> np.ndarray:
+    i = int(h * 6.0) % 6
+    f = h * 6.0 - int(h * 6.0)
+    p, q, t = v * (1 - s), v * (1 - f * s), v * (1 - (1 - f) * s)
+    rgb = [(v, t, p), (q, v, p), (p, v, t), (p, q, v), (t, p, v), (v, p, q)][i]
+    return np.array(rgb, np.float32)
+
+
+def _shape_mask(shape: int, yy: np.ndarray, xx: np.ndarray, r: float) -> np.ndarray:
+    if shape == 0:  # disc
+        return (yy**2 + xx**2) <= r**2
+    if shape == 1:  # triangle (pointing up)
+        return (yy <= r * 0.8) & (yy >= -r + np.abs(xx) * 1.7)
+    if shape == 2:  # square
+        return (np.abs(yy) <= r * 0.85) & (np.abs(xx) <= r * 0.85)
+    return (np.abs(yy) + np.abs(xx)) <= r * 1.1  # diamond
+
+
+def _glyph_mask(glyph: int, yy: np.ndarray, xx: np.ndarray, r: float) -> np.ndarray:
+    g = r * 0.45
+    if glyph == 0:  # horizontal bar
+        return (np.abs(yy) <= g * 0.35) & (np.abs(xx) <= g)
+    if glyph == 1:  # cross
+        return ((np.abs(yy) <= g * 0.3) & (np.abs(xx) <= g)) | (
+            (np.abs(xx) <= g * 0.3) & (np.abs(yy) <= g)
+        )
+    if glyph == 2:  # 2x2 dot grid
+        dy = np.minimum(np.abs(yy - g * 0.5), np.abs(yy + g * 0.5))
+        dx = np.minimum(np.abs(xx - g * 0.5), np.abs(xx + g * 0.5))
+        return (dy**2 + dx**2) <= (g * 0.35) ** 2
+    if glyph == 3:  # chevron
+        return (np.abs(yy - np.abs(xx) * 0.7) <= g * 0.3) & (np.abs(xx) <= g)
+    if glyph == 4:  # ring
+        rr = np.sqrt(yy**2 + xx**2)
+        return (rr >= g * 0.55) & (rr <= g)
+    return np.abs(yy - xx) <= g * 0.3  # slash
+
+
+def make_sample(seed: int, index: int, cls: int | None = None):
+    """Render one (image, label) pair.  Deterministic in (seed, index)."""
+    rng = np.random.Generator(np.random.PCG64(np.random.SeedSequence([seed, index])))
+    if cls is None:
+        cls = int(rng.integers(0, NUM_CLASSES))
+    shape, hue, glyph = _class_style(cls)
+
+    cy = IMG / 2 + rng.uniform(-4, 4)
+    cx = IMG / 2 + rng.uniform(-4, 4)
+    r = IMG * rng.uniform(0.30, 0.42)
+    bright = rng.uniform(0.6, 1.0)
+
+    ys = np.arange(IMG, dtype=np.float32)
+    yy, xx = np.meshgrid(ys - cy, ys - cx, indexing="ij")
+
+    bg_col = rng.uniform(0.05, 0.35, size=3).astype(np.float32)
+    img = np.broadcast_to(bg_col, (IMG, IMG, 3)).copy()
+
+    sign_col = _hsv_to_rgb(hue, 0.85, bright)
+    mask = _shape_mask(shape, yy, xx, r)
+    img[mask] = sign_col
+
+    glyph_col = _hsv_to_rgb((hue + 0.5) % 1.0, 0.2, min(1.0, bright + 0.3))
+    gmask = _glyph_mask(glyph, yy, xx, r) & mask
+    img[gmask] = glyph_col
+
+    img += rng.normal(0.0, 0.04, size=img.shape).astype(np.float32)
+    img = np.clip(img, 0.0, 1.0)
+    return img.astype(np.float32), cls
+
+
+def make_batch(seed: int, start: int, n: int, balanced: bool = False):
+    """Render ``n`` samples starting at dataset index ``start``."""
+    imgs = np.empty((n, IMG, IMG, 3), np.float32)
+    labels = np.empty((n,), np.int32)
+    for k in range(n):
+        cls = (start + k) % NUM_CLASSES if balanced else None
+        imgs[k], labels[k] = make_sample(seed, start + k, cls)
+    return imgs, labels
+
+
+def make_dataset(seed: int, n_train: int, n_test: int):
+    """Train/test split with balanced test classes."""
+    xtr, ytr = make_batch(seed, 0, n_train)
+    xte, yte = make_batch(seed + 1, 0, n_test, balanced=True)
+    return (xtr, ytr), (xte, yte)

@@ -1,0 +1,63 @@
+"""Pallas kernel for the Activation Max-pooling Unit (paper §III-B, Fig. 6).
+
+The AMU fuses ReLU and max-pooling using their commutativity:
+``relu(max(window)) == max over window of relu`` — the hardware runs the
+running max against an initial value of 0, which *is* the ReLU (a positive
+result survives iff at least one window element was positive, Eq. 13).
+
+The kernel mirrors that fusion: one pass over the input tile computes the
+pooled, rectified output with no intermediate feature map — the same
+"no extra buffer" property the hardware gets from processing the PA output
+stream directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _amu_kernel(x_ref, o_ref, *, pool: int):
+    """Fused ReLU + max-pool for one (batch-row) tile.
+
+    x_ref: (1, H, W, C) input features; o_ref: (1, H//pool, W//pool, C).
+    The running max is seeded with 0 exactly like the AMU shift register
+    (Eq. 13 with y_0 = 0), which implements ReLU for free.
+    """
+    x = x_ref[...]
+    _, h, w, c = x.shape
+    y = jnp.zeros((1, h // pool, w // pool, c), x.dtype)  # y_0 = 0  (ReLU)
+    for dy in range(pool):  # static unroll — pool is a compile-time constant
+        for dx in range(pool):
+            y = jnp.maximum(y, x[:, dy::pool, dx::pool, :][:, : h // pool, : w // pool, :])
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("pool",))
+def relu_maxpool(x: jax.Array, pool: int) -> jax.Array:
+    """Fused ReLU + ``pool×pool`` max-pool (downsampling only, §III-B).
+
+    Args:
+        x: ``(batch, H, W, C)`` features.  ``H`` and ``W`` must be integer
+            multiples of ``pool`` — the paper's AMU supports downsampling
+            only, not resampling.
+        pool: pooling window / stride N_p.
+    """
+    b, h, w, c = x.shape
+    if h % pool or w % pool:
+        raise ValueError(
+            f"AMU implements downsampling only: {h}x{w} not divisible by {pool}"
+        )
+    return pl.pallas_call(
+        functools.partial(_amu_kernel, pool=pool),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (1, h // pool, w // pool, c), lambda i: (i, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h // pool, w // pool, c), x.dtype),
+        interpret=True,
+    )(x)

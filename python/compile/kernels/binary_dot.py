@@ -1,0 +1,173 @@
+"""Pallas kernel for the multi-level binary dot product (paper Eq. 8).
+
+This is the compute hot-spot of the whole stack: the operation the paper's
+systolic array performs in hardware,
+
+    O[b, d] = bias[d] + sum_m alpha[d, m] * sum_i x[b, i] * B[d, m, i]
+
+with ``B in {+1, -1}``.  On the paper's FPGA each inner sum is a chain of
+sign-controlled accumulations (the PE array) and the outer sum an M_arch-deep
+cascade of DSP multiply-adds.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the win is memory-side —
+M sign planes replace the wide weight matrix.  The kernel keeps the sign
+planes resident in VMEM as int8, streams activation tiles HBM→VMEM once per
+(batch-tile, d-tile) grid cell, and evaluates the M scale-accumulate passes
+inside the cell so every activation element is read from HBM exactly once —
+the same feature-reuse argument the paper makes for its systolic array.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_BLOCK_B = 32  # batch-tile rows
+DEF_BLOCK_D = 32  # output-channel tile
+
+
+def _binary_dot_kernel(x_ref, b_ref, alpha_ref, bias_ref, o_ref):
+    """One (batch-tile × d-tile) output block.
+
+    x_ref:     (TB, Nc)      activations
+    b_ref:     (TD, M, Nc)   sign planes, ±1 (int8)
+    alpha_ref: (TD, M)       scaling factors
+    bias_ref:  (TD,)         bias β_d, injected at the m=0 cascade input
+    o_ref:     (TB, TD)      output block
+    """
+    x = x_ref[...]
+    planes = b_ref[...].astype(x.dtype)  # (TD, M, Nc)
+    alpha = alpha_ref[...].astype(x.dtype)  # (TD, M)
+    # p[b, d, m] = sum_i x[b, i] * B[d, m, i]  — the PE partial sums (Eq. 9)
+    p = jnp.einsum("bi,dmi->bdm", x, planes)
+    # cascade: o_d = beta_d + sum_m alpha[d, m] * p[b, d, m]    (Eq. 11)
+    o = jnp.einsum("bdm,dm->bd", p, alpha) + bias_ref[...].astype(x.dtype)
+    o_ref[...] = o
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d"))
+def binary_dot(
+    x: jax.Array,
+    b_planes: jax.Array,
+    alpha: jax.Array,
+    bias: jax.Array,
+    *,
+    block_b: int = DEF_BLOCK_B,
+    block_d: int = DEF_BLOCK_D,
+) -> jax.Array:
+    """Multi-level binary matrix product  ``(batch, Nc) -> (batch, D)``.
+
+    Args:
+        x: ``(batch, Nc)`` activations (float).
+        b_planes: ``(D, M, Nc)`` binary tensors as ±1 (any dtype; stored int8).
+        alpha: ``(D, M)`` scaling factors.
+        bias: ``(D,)`` per-output-channel bias.
+        block_b / block_d: VMEM tile sizes (the L1 analogue of D_arch).
+    """
+    batch, n_c = x.shape
+    d_out, m_lvl, n_c2 = b_planes.shape
+    assert n_c == n_c2, f"Nc mismatch: {n_c} vs {n_c2}"
+    assert alpha.shape == (d_out, m_lvl)
+    assert bias.shape == (d_out,)
+
+    tb = min(block_b, batch)
+    td = min(block_d, d_out)
+    grid = (pl.cdiv(batch, tb), pl.cdiv(d_out, td))
+
+    return pl.pallas_call(
+        _binary_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n_c), lambda i, j: (i, 0)),
+            pl.BlockSpec((td, m_lvl, n_c), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((td, m_lvl), lambda i, j: (j, 0)),
+            pl.BlockSpec((td,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tb, td), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), x.dtype),
+        interpret=True,
+    )(x, b_planes.astype(jnp.int8), alpha, bias)
+
+
+def _binary_dot_int8_kernel(
+    x_ref, b_ref, alpha_ref, bias_ref, shift_ref, o_ref
+):
+    """Bit-exact integer path mirroring the hardware datapath (§III-C).
+
+    Activations are int8, PE accumulators are int32 (the paper's 28-bit
+    MULW path is a subset), alpha is an int8 fixed-point value with
+    ALPHA_FRAC fractional bits, bias is pre-shifted into the alpha scale,
+    and the QS block rounds-to-nearest and saturates back to int8 after
+    shifting by the per-layer ``shift``.
+    """
+    x = x_ref[...].astype(jnp.int32)  # (TB, Nc)
+    planes = b_ref[...].astype(jnp.int32)  # (TD, M, Nc)
+    alpha = alpha_ref[...].astype(jnp.int32)  # (TD, M)
+    p = jnp.einsum(
+        "bi,dmi->bdm", x, planes, preferred_element_type=jnp.int32
+    )
+    acc = jnp.einsum(
+        "bdm,dm->bd", p, alpha, preferred_element_type=jnp.int32
+    ) + bias_ref[...].astype(jnp.int32)
+    # QS: round-half-away-from-zero at `shift`, then saturate to DW=8 bits.
+    shift = shift_ref[0]
+    half = jnp.where(shift > 0, (1 << (shift - 1).clip(0)).astype(jnp.int32), 0)
+    # round half away from zero (>> floors, so shift the magnitude)
+    rounded = jnp.where(
+        acc >= 0, (acc + half) >> shift, -((-acc + half) >> shift)
+    )
+    o_ref[...] = jnp.clip(rounded, -128, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d"))
+def binary_dot_int8(
+    x: jax.Array,
+    b_planes: jax.Array,
+    alpha_q: jax.Array,
+    bias_q: jax.Array,
+    shift: jax.Array,
+    *,
+    block_b: int = DEF_BLOCK_B,
+    block_d: int = DEF_BLOCK_D,
+) -> jax.Array:
+    """Integer-exact binary dot product matching the RTL datapath.
+
+    Args:
+        x: ``(batch, Nc)`` int8 activations.
+        b_planes: ``(D, M, Nc)`` ±1 int8 sign planes.
+        alpha_q: ``(D, M)`` int8 fixed-point scaling factors.
+        bias_q: ``(D,)`` int32 bias, already in the post-alpha scale.
+        shift: scalar int32 — per-layer QS right shift (binary point).
+    """
+    batch, n_c = x.shape
+    d_out, m_lvl, _ = b_planes.shape
+    tb = min(block_b, batch)
+    td = min(block_d, d_out)
+    grid = (pl.cdiv(batch, tb), pl.cdiv(d_out, td))
+    return pl.pallas_call(
+        _binary_dot_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, n_c), lambda i, j: (i, 0)),
+            pl.BlockSpec((td, m_lvl, n_c), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((td, m_lvl), lambda i, j: (j, 0)),
+            pl.BlockSpec((td,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, td), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), jnp.int8),
+        interpret=True,
+    )(
+        x.astype(jnp.int8),
+        b_planes.astype(jnp.int8),
+        alpha_q.astype(jnp.int8),
+        bias_q.astype(jnp.int32),
+        jnp.asarray(shift, jnp.int32).reshape(1),
+    )

@@ -1,0 +1,125 @@
+"""Pallas kernel: binary-approximated 2-D convolution (paper §III-A + §IV-A).
+
+The systolic array computes a convolution as a stream of binary dot
+products — one per (output position, output channel, binary level).  This
+kernel expresses the same decomposition for the TPU memory hierarchy:
+
+  grid cell = one batch image × one block of output rows
+  VMEM      = the kernel-height band of input rows + all M sign planes
+  compute   = kh·kw static shifts build the im2col patches in-register,
+              then Eq. 8 as einsum over (patch, plane) and (level, alpha)
+
+Feature reuse: each input row band is loaded once and used by every output
+channel and every binary level, mirroring the PA's input-forwarding chain.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _binconv_kernel(x_ref, b_ref, alpha_ref, bias_ref, o_ref, *, kh, kw, stride):
+    """x_ref: (1, Hband, W, C); b_ref: (D, M, kh, kw, C); o_ref: (1, TU, V, D)."""
+    x = x_ref[...]
+    _, hband, w_in, c = x.shape
+    tu = o_ref.shape[1]
+    v = o_ref.shape[2]
+
+    # Build patches for this row band: (TU, V, kh*kw*C) from static slices.
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = jax.lax.slice(
+                x,
+                (0, ky, kx, 0),
+                (1, ky + (tu - 1) * stride + 1, kx + (v - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl)
+    patches = jnp.concatenate(cols, axis=-1).reshape(tu * v, kh * kw * c)
+
+    planes = b_ref[...].astype(x.dtype).reshape(
+        b_ref.shape[0], b_ref.shape[1], kh * kw * c
+    )  # (D, M, Nc)
+    alpha = alpha_ref[...].astype(x.dtype)  # (D, M)
+    p = jnp.einsum("pi,dmi->pdm", patches, planes)  # PE partial sums
+    o = jnp.einsum("pdm,dm->pd", p, alpha) + bias_ref[...].astype(x.dtype)
+    o_ref[...] = o.reshape(1, tu, v, o.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "block_u"))
+def binconv(
+    x: jax.Array,
+    b_planes: jax.Array,
+    alpha: jax.Array,
+    bias: jax.Array,
+    *,
+    stride: int = 1,
+    block_u: int = 8,
+) -> jax.Array:
+    """Binary-approximated valid conv ``(B,H,W,C) -> (B,U,V,D)``.
+
+    Args:
+        x: input features ``(B, H, W, C)``.
+        b_planes: ``(D, M, kh, kw, C)`` ±1 sign planes per output filter.
+        alpha: ``(D, M)`` scaling factors.
+        bias: ``(D,)``.
+        stride: convolution stride S.
+        block_u: output rows computed per grid cell (VMEM row band height
+            is ``(block_u-1)*stride + kh``).
+    """
+    bsz, h, w, c = x.shape
+    d_out, m_lvl, kh, kw, c2 = b_planes.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    u = (h - kh) // stride + 1
+    v = (w - kw) // stride + 1
+    tu = min(block_u, u)
+    if u % tu:  # keep the grid uniform; fall back to one band per image
+        tu = u if u <= 2 * block_u else 1
+        while u % tu:
+            tu -= 1
+    hband = (tu - 1) * stride + kh
+    grid = (bsz, u // tu)
+
+    return pl.pallas_call(
+        functools.partial(_binconv_kernel, kh=kh, kw=kw, stride=stride),
+        grid=grid,
+        in_specs=[
+            # Consecutive output-row bands need overlapping input rows (the
+            # kh-1 halo), which blocked indexing cannot express directly, so
+            # _expand_row_bands pre-gathers band j into rows
+            # [j*hband, (j+1)*hband) and block index j selects it exactly.
+            pl.BlockSpec((1, hband, w, c), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((d_out, m_lvl, kh, kw, c), lambda i, j: (0, 0, 0, 0, 0)),
+            pl.BlockSpec((d_out, m_lvl), lambda i, j: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tu, v, d_out), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, u, v, d_out), x.dtype),
+        interpret=True,
+    )(_expand_row_bands(x, tu, stride, kh, u), b_planes.astype(jnp.int8), alpha, bias)
+
+
+def _expand_row_bands(
+    x: jax.Array, tu: int, stride: int, kh: int, u: int
+) -> jax.Array:
+    """Materialize overlapping row bands so blocked indexing lines up.
+
+    Pallas blocked indexing slices input rows in multiples of the block
+    height, but consecutive output-row bands need *overlapping* input rows
+    (the kh-1 halo).  We pre-gather the bands: output ``(B, n_bands*hband,
+    W, C)`` where band j holds input rows ``[j*tu*stride, j*tu*stride+hband)``.
+    The copy is cheap at build time and keeps the kernel itself pure.
+    """
+    bsz, h, w, c = x.shape
+    hband = (tu - 1) * stride + kh
+    n_bands = u // tu
+    bands = [
+        jax.lax.slice(x, (0, j * tu * stride, 0, 0), (bsz, j * tu * stride + hband, w, c))
+        for j in range(n_bands)
+    ]
+    return jnp.concatenate(bands, axis=1)

@@ -1,0 +1,119 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here written with plain
+``jax.numpy`` ops only — no Pallas, no fancy layouts.  pytest asserts
+allclose (float path) / exact equality (int8 path) between kernel and
+oracle across hypothesis-generated shapes; these oracles are also what the
+L2 model uses when ``use_pallas=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binary_dot_ref(
+    x: jax.Array, b_planes: jax.Array, alpha: jax.Array, bias: jax.Array
+) -> jax.Array:
+    """Eq. 8 evaluated directly: ``O = β + Σ_m α_m (x · B_m)``."""
+    p = jnp.einsum("bi,dmi->bdm", x, b_planes.astype(x.dtype))
+    return jnp.einsum("bdm,dm->bd", p, alpha.astype(x.dtype)) + bias.astype(
+        x.dtype
+    )
+
+
+def binary_dot_int8_ref(
+    x: jax.Array,
+    b_planes: jax.Array,
+    alpha_q: jax.Array,
+    bias_q: jax.Array,
+    shift: int,
+) -> jax.Array:
+    """Integer-exact Eq. 8 + QS quantization (§III-C), in plain jnp.
+
+    Round half-away-from-zero at ``shift`` fractional bits, saturate to
+    int8 — the behaviour of the QS block after the 28-bit DSP cascade.
+    """
+    x32 = x.astype(jnp.int32)
+    p = jnp.einsum(
+        "bi,dmi->bdm",
+        x32,
+        b_planes.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    acc = jnp.einsum(
+        "bdm,dm->bd",
+        p,
+        alpha_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ) + bias_q.astype(jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    half = jnp.where(shift > 0, 1 << jnp.maximum(shift - 1, 0), 0)
+    # round half away from zero: shift the magnitude (>> floors negatives)
+    rounded = jnp.where(
+        acc >= 0, (acc + half) >> shift, -((-acc + half) >> shift)
+    )
+    return jnp.clip(rounded, -128, 127).astype(jnp.int8)
+
+
+def relu_maxpool_ref(x: jax.Array, pool: int) -> jax.Array:
+    """ReLU then max-pool via reshape — the textbook formulation."""
+    b, h, w, c = x.shape
+    r = jnp.maximum(x, 0)
+    r = r.reshape(b, h // pool, pool, w // pool, pool, c)
+    return r.max(axis=(2, 4))
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, bias: jax.Array, stride: int = 1
+) -> jax.Array:
+    """Float valid-padding conv ``(B,H,W,C) * (kh,kw,C,D) -> (B,U,V,D)``."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + bias
+
+
+def extract_patches(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """im2col: ``(B,H,W,C) -> (B, U, V, kh*kw*C)`` valid padding.
+
+    The flattening order (ky, kx, c) matches the AGU's row-major walk of
+    the convolution window and the Rust golden model's weight layout.
+    """
+    b, h, w, c = x.shape
+    u = (h - kh) // stride + 1
+    v = (w - kw) // stride + 1
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    x,
+                    (0, ky, kx, 0),
+                    (b, ky + (u - 1) * stride + 1, kx + (v - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(cols, axis=-1).reshape(b, u, v, kh * kw * c)
+
+
+def binconv_ref(
+    x: jax.Array,
+    b_planes: jax.Array,
+    alpha: jax.Array,
+    bias: jax.Array,
+    stride: int = 1,
+) -> jax.Array:
+    """Binary-approximated conv: reconstruct Ŵ then convolve (float oracle).
+
+    ``b_planes``: (D, M, kh, kw, C); ``alpha``: (D, M).  This is the
+    ground-truth semantics of Eq. 1 applied to a conv layer; the Pallas
+    path (patches → binary_dot) must match it to float tolerance.
+    """
+    w_hat = jnp.einsum("dmhwc,dm->hwcd", b_planes.astype(x.dtype), alpha)
+    return conv2d_ref(x, w_hat, bias, stride)

@@ -1,0 +1,255 @@
+"""L2: network definitions — CNN-A and a compact MobileNet — in JAX.
+
+Three forward paths per network, all sharing one parameter pytree:
+
+* ``*_float``      — float32 reference (training / baseline accuracy).
+* ``*_binapprox``  — weights replaced by their multi-level binary
+  reconstruction (Eq. 1); used for Table II "no retrain" rows and as the
+  STE forward during retraining.
+* ``*_pallas``     — the same binary-approximated network but evaluated
+  through the L1 Pallas kernels (binconv / binary_dot / relu_maxpool), the
+  graph that ``aot.py`` lowers to HLO for the Rust runtime.
+
+CNN-A (paper §V-A1): conv 5@7×7×3 → pool 2×2 → conv 150@4×4×5 → pool 6×6 →
+dense 1350→340 → dense 340→490 → dense 490→43, on 48×48×3 inputs.  The
+pooling sizes are inferred: Listing 1 fixes W_I=48, W_B=7 for layer 1 and
+W_I=21, W_B=4 for layer 2, so pool-1 is 2×2 (42→21); the first dense layer
+has 1350 = 3·3·150 inputs, so pool-2 maps 18→3, i.e. 6×6.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import approx
+from .kernels import ref as kref
+from .kernels.amu import relu_maxpool
+from .kernels.binary_dot import binary_dot
+from .kernels.binconv import binconv
+
+
+class ConvSpec(NamedTuple):
+    kh: int
+    kw: int
+    c_in: int
+    d_out: int
+    stride: int
+    pool: int  # N_p after this conv; 1 = no pooling
+
+
+class DenseSpec(NamedTuple):
+    n_in: int
+    n_out: int
+    relu: bool
+
+
+class NetSpec(NamedTuple):
+    """A BinArray-compatible network: convs (each with fused pool) + denses."""
+
+    name: str
+    input_hw: int
+    input_c: int
+    convs: tuple[ConvSpec, ...]
+    denses: tuple[DenseSpec, ...]
+
+    @property
+    def num_classes(self) -> int:
+        return self.denses[-1].n_out
+
+    def macs(self) -> int:
+        """Multiply-accumulate count per inference (conv + dense)."""
+        total = 0
+        hw = self.input_hw
+        for cv in self.convs:
+            u = (hw - cv.kh) // cv.stride + 1
+            total += u * u * cv.kh * cv.kw * cv.c_in * cv.d_out
+            hw = u // cv.pool
+        for dn in self.denses:
+            total += dn.n_in * dn.n_out
+        return total
+
+
+CNN_A = NetSpec(
+    name="cnn_a",
+    input_hw=48,
+    input_c=3,
+    convs=(
+        ConvSpec(7, 7, 3, 5, 1, 2),    # 48→42, pool→21
+        ConvSpec(4, 4, 5, 150, 1, 6),  # 21→18, pool→3
+    ),
+    denses=(
+        DenseSpec(1350, 340, True),
+        DenseSpec(340, 490, True),
+        DenseSpec(490, 43, False),
+    ),
+)
+
+# Compact MobileNet-style net for the Table II accuracy *trends* on the
+# synthetic dataset (full MobileNetV1 topologies for the *performance*
+# tables live in rust/src/nn/ where only shapes matter).
+CNN_B_COMPACT = NetSpec(
+    name="cnn_b_compact",
+    input_hw=32,
+    input_c=3,
+    convs=(
+        ConvSpec(3, 3, 3, 16, 1, 2),    # 32→30, pool→15
+        ConvSpec(4, 4, 16, 32, 1, 2),   # 15→12, pool→6
+        ConvSpec(3, 3, 32, 64, 1, 4),   # 6→4, pool→1
+    ),
+    denses=(
+        DenseSpec(64, 96, True),
+        DenseSpec(96, 32, False),
+    ),
+)
+
+
+def init_params(spec: NetSpec, key: jax.Array) -> dict[str, Any]:
+    """He-initialised float parameters for ``spec``."""
+    params: dict[str, Any] = {}
+    for li, cv in enumerate(spec.convs):
+        key, k1 = jax.random.split(key)
+        fan_in = cv.kh * cv.kw * cv.c_in
+        params[f"conv{li}_w"] = jax.random.normal(
+            k1, (cv.kh, cv.kw, cv.c_in, cv.d_out), jnp.float32
+        ) * jnp.sqrt(2.0 / fan_in)
+        params[f"conv{li}_b"] = jnp.zeros((cv.d_out,), jnp.float32)
+    for li, dn in enumerate(spec.denses):
+        key, k1 = jax.random.split(key)
+        params[f"dense{li}_w"] = jax.random.normal(
+            k1, (dn.n_in, dn.n_out), jnp.float32
+        ) * jnp.sqrt(2.0 / dn.n_in)
+        params[f"dense{li}_b"] = jnp.zeros((dn.n_out,), jnp.float32)
+    return params
+
+
+def _flatten_features(x: jax.Array) -> jax.Array:
+    """(B, H, W, C) → (B, H*W*C) in the row-major order the ODG writes."""
+    return x.reshape(x.shape[0], -1)
+
+
+def forward_float(spec: NetSpec, params: dict[str, Any], x: jax.Array) -> jax.Array:
+    """Float32 reference forward pass (logits)."""
+    for li, cv in enumerate(spec.convs):
+        x = kref.conv2d_ref(x, params[f"conv{li}_w"], params[f"conv{li}_b"], cv.stride)
+        if cv.pool > 1:
+            x = kref.relu_maxpool_ref(x, cv.pool)
+        else:
+            x = jnp.maximum(x, 0)
+    x = _flatten_features(x)
+    for li, dn in enumerate(spec.denses):
+        x = x @ params[f"dense{li}_w"] + params[f"dense{li}_b"]
+        if dn.relu:
+            x = jnp.maximum(x, 0)
+    return x
+
+
+def forward_ste(
+    spec: NetSpec,
+    params: dict[str, Any],
+    x: jax.Array,
+    M: int,
+    algorithm: int = 2,
+) -> jax.Array:
+    """Forward with binary-approximated weights, STE gradients (retraining)."""
+    for li, cv in enumerate(spec.convs):
+        w = approx.ste_reconstruct(params[f"conv{li}_w"], M, algorithm)
+        x = kref.conv2d_ref(x, w, params[f"conv{li}_b"], cv.stride)
+        x = kref.relu_maxpool_ref(x, cv.pool) if cv.pool > 1 else jnp.maximum(x, 0)
+    x = _flatten_features(x)
+    for li, dn in enumerate(spec.denses):
+        w = approx.ste_reconstruct(params[f"dense{li}_w"], M, algorithm)
+        x = x @ w + params[f"dense{li}_b"]
+        if dn.relu:
+            x = jnp.maximum(x, 0)
+    return x
+
+
+class BinParams(NamedTuple):
+    """Binary-approximated parameter set for one network (Eq. 1 per layer)."""
+
+    conv_planes: tuple[jax.Array, ...]  # each (D, M, kh, kw, C) ±1
+    conv_alpha: tuple[jax.Array, ...]   # each (D, M)
+    conv_bias: tuple[jax.Array, ...]
+    dense_planes: tuple[jax.Array, ...]  # each (N_out, M, N_in) ±1
+    dense_alpha: tuple[jax.Array, ...]
+    dense_bias: tuple[jax.Array, ...]
+
+
+def binarize_params(
+    spec: NetSpec, params: dict[str, Any], M: int, algorithm: int = 2, K: int = 100
+) -> BinParams:
+    """Run the approximation procedure on every layer of the network."""
+    cp, ca, cb, dp, da, db = [], [], [], [], [], []
+    for li, _ in enumerate(spec.convs):
+        ap = approx.approximate_conv(params[f"conv{li}_w"], M, algorithm, K)
+        cp.append(ap.B)
+        ca.append(ap.alpha)
+        cb.append(params[f"conv{li}_b"])
+    for li, _ in enumerate(spec.denses):
+        ap = approx.approximate_dense(params[f"dense{li}_w"], M, algorithm, K)
+        dp.append(ap.B)
+        da.append(ap.alpha)
+        db.append(params[f"dense{li}_b"])
+    return BinParams(tuple(cp), tuple(ca), tuple(cb), tuple(dp), tuple(da), tuple(db))
+
+
+def forward_binapprox(
+    spec: NetSpec, bp: BinParams, x: jax.Array, m_run: int | None = None
+) -> jax.Array:
+    """Binary-approximated forward (jnp oracle path).
+
+    ``m_run`` truncates evaluation to the first ``m_run`` binary levels —
+    the high-throughput runtime mode of §IV-D (None = all M levels,
+    high-accuracy mode).
+    """
+    for li, cv in enumerate(spec.convs):
+        planes, alpha = _truncate(bp.conv_planes[li], bp.conv_alpha[li], m_run)
+        x = kref.binconv_ref(x, planes, alpha, bp.conv_bias[li], cv.stride)
+        x = kref.relu_maxpool_ref(x, cv.pool) if cv.pool > 1 else jnp.maximum(x, 0)
+    x = _flatten_features(x)
+    for li, dn in enumerate(spec.denses):
+        planes, alpha = _truncate(bp.dense_planes[li], bp.dense_alpha[li], m_run)
+        x = kref.binary_dot_ref(x, planes, alpha, bp.dense_bias[li])
+        if dn.relu:
+            x = jnp.maximum(x, 0)
+    return x
+
+
+def forward_pallas(
+    spec: NetSpec, bp: BinParams, x: jax.Array, m_run: int | None = None
+) -> jax.Array:
+    """Binary-approximated forward through the L1 Pallas kernels.
+
+    This is the graph lowered to HLO for the Rust runtime: binconv for conv
+    layers, the fused AMU kernel for ReLU+pool, binary_dot for dense layers.
+    """
+    for li, cv in enumerate(spec.convs):
+        planes, alpha = _truncate(bp.conv_planes[li], bp.conv_alpha[li], m_run)
+        x = binconv(x, planes, alpha, bp.conv_bias[li], stride=cv.stride)
+        x = relu_maxpool(x, cv.pool) if cv.pool > 1 else jnp.maximum(x, 0)
+    x = _flatten_features(x)
+    for li, dn in enumerate(spec.denses):
+        planes, alpha = _truncate(bp.dense_planes[li], bp.dense_alpha[li], m_run)
+        x = binary_dot(x, planes, alpha, bp.dense_bias[li])
+        if dn.relu:
+            x = jnp.maximum(x, 0)
+    return x
+
+
+def _truncate(planes: jax.Array, alpha: jax.Array, m_run: int | None):
+    if m_run is None or m_run >= planes.shape[1]:
+        return planes, alpha
+    return planes[:, :m_run], alpha[:, :m_run]
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.argmax(logits, -1) == labels)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

@@ -1,0 +1,210 @@
+"""Fixed-point quantization of a binary-approximated network (paper §III-C).
+
+The hardware datapath is:
+
+  activations  int8   (DW = 8), per-layer binary point f_act
+  PE accum     int28  (MULW = 28) — we use int32, a strict superset
+  alpha        int8   fixed-point, per-layer fractional bits f_alpha
+  bias         full-precision fixed point, injected at the m=0 cascade
+  QS           round-off LSBs + saturate back to DW at a per-layer shift
+
+Scales are powers of two throughout (binary points, not arbitrary scales),
+exactly as the RTL's barrel shifter requires.  Calibration picks each
+layer's activation binary point from the max |activation| observed on a
+calibration batch through the *float binary-approximated* network.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as mdl
+from .kernels import ref as kref
+
+
+class QLayer(NamedTuple):
+    """Quantized parameters of one BinArray layer (conv or dense)."""
+
+    kind: str  # "conv" | "dense"
+    planes: np.ndarray  # int8 ±1; conv (D,M,kh,kw,C), dense (D,M,Nin)
+    alpha_q: np.ndarray  # int8 (D, M)
+    bias_q: np.ndarray  # int32 (D,) in the post-alpha scale 2^-(f_in+f_alpha)
+    f_alpha: int  # fractional bits of alpha_q
+    f_in: int  # binary point of input activations
+    f_out: int  # binary point of output activations
+    shift: int  # QS right-shift = f_in + f_alpha - f_out
+    relu: bool
+    pool: int  # 1 = none
+    stride: int
+
+
+class QNetwork(NamedTuple):
+    spec: mdl.NetSpec
+    f_input: int  # binary point of the int8 network input
+    layers: tuple[QLayer, ...]
+
+
+def _binary_point(max_abs: float, width: int = 8) -> int:
+    """Largest power-of-two fractional part such that max_abs fits signed
+    ``width`` bits: value range ±(2^(width-1)-1) · 2^-f."""
+    if max_abs <= 0:
+        return width - 1
+    int_bits = max(0, math.ceil(math.log2(max_abs + 1e-12)))
+    return max(0, min(width - 1, width - 1 - int_bits))
+
+
+def quantize_network(
+    spec: mdl.NetSpec,
+    bp: mdl.BinParams,
+    calib_x: jax.Array,
+) -> QNetwork:
+    """Calibrate binary points and quantize alphas/biases layer by layer.
+
+    ``calib_x``: float calibration batch in [0, 1] (B, H, W, C).
+    """
+    f_input = 7  # inputs in [0,1] → Q0.7
+    layers: list[QLayer] = []
+    x = calib_x
+    f_in = f_input
+
+    for li, cv in enumerate(spec.convs):
+        planes, alpha, bias = bp.conv_planes[li], bp.conv_alpha[li], bp.conv_bias[li]
+        y = kref.binconv_ref(x, planes, alpha, bias, cv.stride)
+        y_act = kref.relu_maxpool_ref(y, cv.pool) if cv.pool > 1 else jnp.maximum(y, 0)
+        f_out = _binary_point(float(jnp.max(jnp.abs(y))))
+        f_alpha = _binary_point(float(jnp.max(jnp.abs(alpha))))
+        layers.append(
+            _quantize_layer(
+                "conv", planes, alpha, bias, f_alpha, f_in, f_out, True, cv.pool, cv.stride
+            )
+        )
+        x, f_in = y_act, f_out
+
+    x = x.reshape(x.shape[0], -1)
+    for li, dn in enumerate(spec.denses):
+        planes, alpha, bias = (
+            bp.dense_planes[li],
+            bp.dense_alpha[li],
+            bp.dense_bias[li],
+        )
+        y = kref.binary_dot_ref(x, planes, alpha, bias)
+        y_act = jnp.maximum(y, 0) if dn.relu else y
+        f_out = _binary_point(float(jnp.max(jnp.abs(y))))
+        f_alpha = _binary_point(float(jnp.max(jnp.abs(alpha))))
+        layers.append(
+            _quantize_layer(
+                "dense", planes, alpha, bias, f_alpha, f_in, f_out, dn.relu, 1, 1
+            )
+        )
+        x, f_in = y_act, f_out
+
+    return QNetwork(spec, f_input, tuple(layers))
+
+
+def _quantize_layer(
+    kind, planes, alpha, bias, f_alpha, f_in, f_out, relu, pool, stride
+) -> QLayer:
+    alpha_q = np.clip(
+        np.round(np.asarray(alpha) * (1 << f_alpha)), -127, 127
+    ).astype(np.int8)
+    # bias lives in the post-alpha accumulator scale 2^-(f_in + f_alpha)
+    bias_q = np.round(np.asarray(bias) * (1 << (f_in + f_alpha))).astype(np.int64)
+    bias_q = np.clip(bias_q, -(2**31), 2**31 - 1).astype(np.int32)
+    shift = f_in + f_alpha - f_out
+    assert shift >= 0, f"negative QS shift {shift} (f_in={f_in}, f_out={f_out})"
+    return QLayer(
+        kind,
+        np.asarray(planes, np.int8),
+        alpha_q,
+        bias_q,
+        f_alpha,
+        f_in,
+        f_out,
+        shift,
+        relu,
+        pool,
+        stride,
+    )
+
+
+def quantize_input(x: jax.Array | np.ndarray, f_input: int) -> np.ndarray:
+    """Float [0,1] image → int8 activations at binary point ``f_input``."""
+    q = np.round(np.asarray(x) * (1 << f_input))
+    return np.clip(q, -128, 127).astype(np.int8)
+
+
+# --- int8 forward oracle (mirrors the Rust golden model exactly) ----------
+
+
+def forward_int8(qnet: QNetwork, x_q: np.ndarray) -> np.ndarray:
+    """Run the full quantized network with numpy integer arithmetic.
+
+    Bit-for-bit the semantics of ``rust/src/golden``: int32 accumulation,
+    round-half-away-from-zero QS shift, int8 saturation, ReLU+maxpool.
+    Returns int8 logits (B, num_classes).
+    """
+    x = x_q.astype(np.int32)  # (B, H, W, C)
+    for layer in qnet.layers:
+        if layer.kind == "conv":
+            x = _conv_int8(x, layer)
+            if layer.pool > 1:
+                x = _relu_maxpool_int8(x, layer.pool)
+            else:
+                x = np.maximum(x, 0)
+        else:
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = _dense_int8(x, layer)
+            if layer.relu:
+                x = np.maximum(x, 0)
+    return x.astype(np.int8)
+
+
+def _qs(acc: np.ndarray, shift: int) -> np.ndarray:
+    """QS block: round half away from zero at ``shift``, saturate to int8."""
+    if shift > 0:
+        half = 1 << (shift - 1)
+        # arithmetic >> floors, so negatives are rounded on their magnitude
+        acc = np.where(acc >= 0, (acc + half) >> shift, -((-acc + half) >> shift))
+    return np.clip(acc, -128, 127).astype(np.int32)
+
+
+def _conv_int8(x: np.ndarray, layer: QLayer) -> np.ndarray:
+    b, h, w, c = x.shape
+    d, m, kh, kw, _ = layer.planes.shape
+    s = layer.stride
+    u = (h - kh) // s + 1
+    v = (w - kw) // s + 1
+    # im2col (ky, kx, c) ordering — matches kref.extract_patches
+    patches = np.empty((b, u, v, kh * kw * c), np.int32)
+    idx = 0
+    for ky in range(kh):
+        for kx in range(kw):
+            patches[..., idx * c : (idx + 1) * c] = x[
+                :, ky : ky + u * s : s, kx : kx + v * s : s, :
+            ]
+            idx += 1
+    planes = layer.planes.reshape(d, m, kh * kw * c).astype(np.int32)
+    p = np.einsum("buvi,dmi->buvdm", patches, planes)
+    acc = np.einsum("buvdm,dm->buvd", p, layer.alpha_q.astype(np.int32))
+    acc = acc + layer.bias_q.astype(np.int32)
+    return _qs(acc, layer.shift)
+
+
+def _dense_int8(x: np.ndarray, layer: QLayer) -> np.ndarray:
+    p = np.einsum("bi,dmi->bdm", x, layer.planes.astype(np.int32))
+    acc = np.einsum("bdm,dm->bd", p, layer.alpha_q.astype(np.int32))
+    acc = acc + layer.bias_q.astype(np.int32)
+    return _qs(acc, layer.shift)
+
+
+def _relu_maxpool_int8(x: np.ndarray, pool: int) -> np.ndarray:
+    b, h, w, c = x.shape
+    r = np.maximum(x, 0)
+    r = r.reshape(b, h // pool, pool, w // pool, pool, c)
+    return r.max(axis=(2, 4))

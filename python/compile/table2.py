@@ -1,0 +1,132 @@
+"""Table II reproduction: compression factor and top-1 accuracy of the two
+binary-approximation procedures, with and without retraining.
+
+Paper protocol (§V-B1): approximate a trained float network with
+Algorithm 1 [7] and our Algorithm 2 (K=100), measure test accuracy without
+retraining, then retrain for one epoch with straight-through-estimator
+gradients (Adam 1e-4 for CNN-A; SGD+momentum for CNN-B) and measure again.
+
+Substitution (DESIGN.md): GTSRB → synthetic 43-class signs for CNN-A;
+ImageNet-MobileNet → the compact MobileNet-style net on 32 synthetic
+classes.  Absolute accuracies differ from the paper; the claims under test
+are the *relations*: Alg2 ≥ Alg1, monotone in M for Alg2, retraining
+recovers most of the float baseline, cf matches Eq. 6.
+
+Run: ``python -m compile.table2`` (writes table2_results.txt; slow — does
+the full retraining grid).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from . import approx, model as mdl, train as trn
+
+
+def run_network(spec, ms, optimizer, steps_float, out):
+    t0 = time.time()
+    out(f"== {spec.name}: float baseline ({steps_float} steps) ==")
+    params, base_acc = trn.train_float(
+        spec, seed=0, steps=steps_float, n_train=2048, verbose=False
+    )
+    out(f"baseline acc. {100 * base_acc:.2f}%")
+
+    layer_sizes = [
+        (cv.d_out, cv.kh * cv.kw * cv.c_in) for cv in spec.convs
+    ] + [(dn.n_out, dn.n_in) for dn in spec.denses]
+
+    out(
+        f"{'M':>2} {'cf':>6} | {'alg1 no-rt':>10} {'alg1 rt':>10} | "
+        f"{'alg2 no-rt':>10} {'alg2 rt':>10}"
+    )
+    rows = []
+    for m in ms:
+        cf = approx.network_compression_factor(layer_sizes, m)
+        accs = {}
+        for alg in (1, 2):
+            a_no = trn.eval_binapprox(spec, params, m, alg, seed=0)
+            _, a_rt = trn.retrain_ste(
+                spec,
+                params,
+                m,
+                alg,
+                seed=0,
+                epochs=1,
+                n_train=2048,
+                optimizer=optimizer,
+                verbose=False,
+            )
+            accs[(alg, "no")] = a_no
+            accs[(alg, "rt")] = a_rt
+        out(
+            f"{m:>2} {cf:>6.1f} | {100 * accs[(1, 'no')]:>9.2f}% "
+            f"{100 * accs[(1, 'rt')]:>9.2f}% | {100 * accs[(2, 'no')]:>9.2f}% "
+            f"{100 * accs[(2, 'rt')]:>9.2f}%"
+        )
+        rows.append((m, cf, accs))
+
+    # --- the paper's qualitative claims, checked programmatically --------
+    checks = []
+    alg2_rt = [r[2][(2, "rt")] for r in rows]
+    alg2_no = [r[2][(2, "no")] for r in rows]
+    checks.append(
+        (
+            "Alg2 no-retrain monotone non-decreasing in M",
+            all(b >= a - 0.02 for a, b in zip(alg2_no, alg2_no[1:])),
+        )
+    )
+    # The paper's own wording (§V-B1): "Algorithm 2 outperforms
+    # Algorithm 1 in almost every situation" — reconstruction error is
+    # provably ≤, but task accuracy may flip on isolated cells, so allow
+    # one exception per network (the paper's Table II CNN-A M=3 retrain
+    # cell is itself such an exception: 97.51 vs 97.29).
+    wins = sum(r[2][(2, "no")] >= r[2][(1, "no")] - 0.02 for r in rows)
+    checks.append(
+        (
+            f"Alg2 ≥ Alg1 without retraining in almost every M ({wins}/{len(rows)})",
+            wins >= len(rows) - 1,
+        )
+    )
+    checks.append(
+        (
+            "retraining recovers ≥80% of baseline at largest M (Alg2)",
+            alg2_rt[-1] >= 0.8 * base_acc,
+        )
+    )
+    checks.append(
+        (
+            "retraining always helps Alg2",
+            all(r[2][(2, "rt")] >= r[2][(2, "no")] - 0.02 for r in rows),
+        )
+    )
+    for label, ok in checks:
+        out(f"  [{'ok' if ok else 'FAIL'}] {label}")
+    out(f"({spec.name} done in {time.time() - t0:.0f}s)\n")
+    return base_acc, rows, checks
+
+
+def main():
+    lines = []
+
+    def out(s):
+        print(s, flush=True)
+        lines.append(s)
+
+    out("=== Table II reproduction (synthetic datasets — see DESIGN.md) ===\n")
+    all_checks = []
+    _, _, c1 = run_network(mdl.CNN_A, (2, 3, 4), "adam", 300, out)
+    all_checks += c1
+    _, _, c2 = run_network(mdl.CNN_B_COMPACT, (4, 5, 6), "sgdm", 300, out)
+    all_checks += c2
+
+    out("paper's cf column (CNN-A): 15.8 / 10.6 / 7.9 at M = 2 / 3 / 4")
+    with open("../artifacts/table2_results.txt", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("wrote ../artifacts/table2_results.txt")
+    if not all(ok for _, ok in all_checks):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Build-time training: float baseline + STE retraining (paper §V-B1).
+
+The paper trains the reference networks in TensorFlow, binary-approximates
+the weights, then retrains for one epoch with straight-through-estimator
+gradients.  We do the same in JAX on the synthetic dataset:
+
+* ``train_float``   — baseline training (Adam).
+* ``retrain_ste``   — one-epoch STE retraining after binarization, using
+  the paper's optimizer choices: Adam(1e-4, 0.9, 0.999) for CNN-A and SGD
+  with momentum 0.9 + exponential decay from 5e-4 for the CNN-B stand-in
+  (the paper found Adam susceptible to exploding gradients there).
+
+Optimizers are hand-rolled (no optax dependency needed for two rules).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as dsgen
+from . import model as mdl
+
+
+# --- minimal optimizers ----------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.array(0)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+    new = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def sgdm_init(params):
+    return {"mom": jax.tree.map(jnp.zeros_like, params), "t": jnp.array(0)}
+
+
+def sgdm_update(params, grads, state, lr, beta=0.9):
+    mom = jax.tree.map(lambda m_, g: beta * m_ + g, state["mom"], grads)
+    new = jax.tree.map(lambda p, m_: p - lr * m_, params, mom)
+    return new, {"mom": mom, "t": state["t"] + 1}
+
+
+# --- training loops --------------------------------------------------------
+
+
+def train_float(
+    spec: mdl.NetSpec,
+    seed: int = 0,
+    steps: int = 200,
+    batch: int = 64,
+    n_train: int = 4096,
+    lr: float = 1e-3,
+    verbose: bool = True,
+) -> tuple[dict[str, Any], float]:
+    """Train the float baseline; returns (params, test_accuracy)."""
+    (xtr, ytr), (xte, yte) = dsgen.make_dataset(seed, n_train, 1024)
+    if spec.input_hw != dsgen.IMG:
+        xtr = _resize(xtr, spec.input_hw)
+        xte = _resize(xte, spec.input_hw)
+    if spec.num_classes != dsgen.NUM_CLASSES:
+        ytr = ytr % spec.num_classes
+        yte = yte % spec.num_classes
+
+    params = mdl.init_params(spec, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        def loss_fn(p):
+            return mdl.cross_entropy(mdl.forward_float(spec, p, xb), yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    for it in range(steps):
+        idx = rng.integers(0, len(xtr), size=batch)
+        params, opt, loss = step(params, opt, xtr[idx], ytr[idx])
+        if verbose and (it % 50 == 0 or it == steps - 1):
+            print(f"  [float {spec.name}] step {it:4d} loss {float(loss):.4f}")
+
+    acc = _eval_acc(lambda xb: mdl.forward_float(spec, params, xb), xte, yte)
+    if verbose:
+        print(f"  [float {spec.name}] test accuracy {acc:.4f}")
+    return params, acc
+
+
+def retrain_ste(
+    spec: mdl.NetSpec,
+    params: dict[str, Any],
+    M: int,
+    algorithm: int,
+    seed: int = 0,
+    epochs: int = 1,
+    batch: int = 64,
+    n_train: int = 4096,
+    optimizer: str = "adam",
+    verbose: bool = True,
+) -> tuple[dict[str, Any], float]:
+    """One-epoch (default) STE retraining after binarization.
+
+    Returns the retrained float master weights and the test accuracy of
+    the *binary-approximated* network evaluated from them.
+    """
+    (xtr, ytr), (xte, yte) = dsgen.make_dataset(seed, n_train, 1024)
+    if spec.input_hw != dsgen.IMG:
+        xtr, xte = _resize(xtr, spec.input_hw), _resize(xte, spec.input_hw)
+    if spec.num_classes != dsgen.NUM_CLASSES:
+        ytr, yte = ytr % spec.num_classes, yte % spec.num_classes
+
+    params = jax.tree.map(jnp.asarray, params)
+    if optimizer == "adam":
+        opt = adam_init(params)
+        lr0 = 1e-4  # paper: Adam α=1e-4 for CNN-A
+    else:
+        opt = sgdm_init(params)
+        lr0 = 5e-4  # paper: SGD momentum, α0=5e-4, exponential decay
+
+    steps_per_epoch = max(1, n_train // batch)
+    total = epochs * steps_per_epoch
+
+    @functools.partial(jax.jit, static_argnames=())
+    def step(params, opt, xb, yb, lr):
+        def loss_fn(p):
+            return mdl.cross_entropy(
+                mdl.forward_ste(spec, p, xb, M, algorithm), yb
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if optimizer == "adam":
+            params, opt = adam_update(params, grads, opt, lr=lr)
+        else:
+            params, opt = sgdm_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed + 17)
+    for it in range(total):
+        lr = lr0 * (0.1 ** (it / total)) if optimizer == "sgdm" else lr0
+        idx = rng.integers(0, len(xtr), size=batch)
+        params, opt, loss = step(params, opt, xtr[idx], ytr[idx], lr)
+        if verbose and it % 20 == 0:
+            print(
+                f"  [ste {spec.name} M={M} alg{algorithm}] "
+                f"step {it:4d}/{total} loss {float(loss):.4f}"
+            )
+
+    bp = mdl.binarize_params(spec, params, M, algorithm)
+    acc = _eval_acc(lambda xb: mdl.forward_binapprox(spec, bp, xb), xte, yte)
+    if verbose:
+        print(f"  [ste {spec.name} M={M} alg{algorithm}] test accuracy {acc:.4f}")
+    return params, acc
+
+
+def eval_binapprox(
+    spec: mdl.NetSpec, params: dict[str, Any], M: int, algorithm: int, seed: int = 0
+) -> float:
+    """Accuracy of the binary-approximated network without retraining."""
+    _, (xte, yte) = dsgen.make_dataset(seed, 1, 1024)
+    if spec.input_hw != dsgen.IMG:
+        xte = _resize(xte, spec.input_hw)
+    if spec.num_classes != dsgen.NUM_CLASSES:
+        yte = yte % spec.num_classes
+    bp = mdl.binarize_params(spec, params, M, algorithm)
+    return _eval_acc(lambda xb: mdl.forward_binapprox(spec, bp, xb), xte, yte)
+
+
+def _eval_acc(fwd: Callable, xte, yte, batch: int = 256) -> float:
+    correct = 0
+    for i in range(0, len(xte), batch):
+        logits = fwd(jnp.asarray(xte[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == yte[i : i + batch]))
+    return correct / len(xte)
+
+
+def _resize(x: np.ndarray, hw: int) -> np.ndarray:
+    """Nearest-neighbour resize (B, H, W, C) → (B, hw, hw, C)."""
+    b, h, w, c = x.shape
+    yi = (np.arange(hw) * h // hw).clip(0, h - 1)
+    xi = (np.arange(hw) * w // hw).clip(0, w - 1)
+    return x[:, yi][:, :, xi]

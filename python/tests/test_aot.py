@@ -1,0 +1,136 @@
+"""AOT artifact format tests: the Python→Rust boundary contract.
+
+Builds tiny artifacts in a temp dir and re-parses them with struct —
+pinning the BAW1/BAC1/BAG1 layouts the Rust readers implement — plus an
+HLO-text sanity check (large constants must be materialized, not elided).
+"""
+
+import io
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data as dsgen, model as mdl, quantize as qz
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def tiny_qnet():
+    spec = mdl.CNN_B_COMPACT
+    params = mdl.init_params(spec, jax.random.PRNGKey(0))
+    bp = mdl.binarize_params(spec, params, M=2, algorithm=2, K=5)
+    calib = jax.random.uniform(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    return spec, qz.quantize_network(spec, bp, calib)
+
+
+class TestBAW1:
+    def test_roundtrip_layout(self, tiny_qnet, tmp_path):
+        spec, qnet = tiny_qnet
+        path = tmp_path / "w.bin"
+        aot.write_weights(str(path), qnet)
+        raw = path.read_bytes()
+        magic, n_layers = struct.unpack_from("<II", raw, 0)
+        assert magic == aot.MAGIC_WEIGHTS
+        assert n_layers == len(qnet.layers)
+        (f_input,) = struct.unpack_from("<I", raw, 8)
+        assert f_input == qnet.f_input
+
+        # walk the layers exactly like the Rust reader
+        off = 12
+        for layer in qnet.layers:
+            kind, d, m, a, b, c = struct.unpack_from("<I5I", raw, off)
+            off += 24
+            assert kind == (0 if layer.kind == "conv" else 1)
+            assert (d, m) == layer.planes.shape[:2]
+            f_alpha, f_in, f_out, shift, relu, pool, stride = struct.unpack_from(
+                "<iiiiIII", raw, off
+            )
+            off += 28
+            assert (f_alpha, f_in, f_out) == (layer.f_alpha, layer.f_in, layer.f_out)
+            assert shift == layer.shift
+            assert bool(relu) == layer.relu
+            n_c = a * b * c if kind == 0 else a
+            planes = np.frombuffer(raw, np.int8, d * m * n_c, off)
+            off += d * m * n_c
+            np.testing.assert_array_equal(
+                planes, layer.planes.reshape(-1)
+            )
+            off += d * m  # alpha
+            off += 4 * d  # bias
+        assert off == len(raw), "no trailing bytes"
+
+    def test_planes_are_signs(self, tiny_qnet, tmp_path):
+        _, qnet = tiny_qnet
+        for layer in qnet.layers:
+            vals = np.unique(layer.planes)
+            assert set(vals.tolist()) <= {-1, 1}
+
+
+class TestBAC1:
+    def test_calib_roundtrip(self, tmp_path):
+        x = np.arange(2 * 4 * 4 * 3, dtype=np.int8).reshape(2, 4, 4, 3)
+        labels = np.array([7, 9], np.int32)
+        path = tmp_path / "c.bin"
+        aot.write_calib(str(path), x, labels, 7)
+        raw = path.read_bytes()
+        magic, n, h, w, c, f = struct.unpack_from("<I5I", raw, 0)
+        assert (magic, n, h, w, c, f) == (aot.MAGIC_CALIB, 2, 4, 4, 3, 7)
+        imgs = np.frombuffer(raw, np.int8, n * h * w * c, 24).reshape(x.shape)
+        np.testing.assert_array_equal(imgs, x)
+        lab = np.frombuffer(raw, "<i4", n, 24 + x.size)
+        np.testing.assert_array_equal(lab, labels)
+
+
+class TestBAG1:
+    def test_golden_roundtrip(self, tmp_path):
+        logits = np.array([[1, -2, 3], [4, 5, -6]], np.int8)
+        path = tmp_path / "g.bin"
+        aot.write_golden(str(path), logits)
+        raw = path.read_bytes()
+        magic, n, k = struct.unpack_from("<III", raw, 0)
+        assert (magic, n, k) == (aot.MAGIC_GOLDEN, 2, 3)
+        out = np.frombuffer(raw, np.int8, 6, 12).reshape(2, 3)
+        np.testing.assert_array_equal(out, logits)
+
+
+class TestHloText:
+    def test_large_constants_materialized(self):
+        """Regression for the elided-weights bug: an HLO text export of a
+        graph closing over a big constant must contain its values, not
+        ``constant({...})`` placeholders."""
+        w = jnp.asarray(np.full((64, 64), 3.14159, np.float32))
+        lowered = jax.jit(lambda x: (x @ w,)).lower(
+            jax.ShapeDtypeStruct((2, 64), jnp.float32)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "3.14159" in text, "weight values must be materialized"
+        assert "constant({...})" not in text
+
+    def test_entry_layout_matches(self):
+        lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+            jax.ShapeDtypeStruct((1, 8), jnp.float32)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "f32[1,8]" in text
+
+
+class TestManifest:
+    def test_manifest_fields(self, tiny_qnet, tmp_path):
+        spec, qnet = tiny_qnet
+        path = tmp_path / "m.txt"
+        aot.write_manifest(str(path), spec, qnet)
+        text = path.read_text()
+        assert f"net {spec.name}" in text
+        assert f"f_input {qnet.f_input}" in text
+        assert text.count("conv ") == len(
+            [l for l in qnet.layers if l.kind == "conv"]
+        )
+        assert text.count("dense ") == len(
+            [l for l in qnet.layers if l.kind == "dense"]
+        )

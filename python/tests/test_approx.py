@@ -1,0 +1,199 @@
+"""Tests for the multi-level binary approximation procedures (paper §II)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import approx
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestAlgorithm1:
+    def test_m1_is_sign_times_mean(self):
+        """For M=1 the optimal tensor is sign(W) scaled by mean(|W|) —
+        and the least-squares alpha for B=sign(W) equals mean(|W|)."""
+        w = _rand((5, 5))
+        ap = approx.algorithm1(w, 1)
+        assert jnp.all(ap.B[0] == jnp.sign(w))
+        np.testing.assert_allclose(
+            float(ap.alpha[0]), float(jnp.mean(jnp.abs(w))), rtol=1e-5
+        )
+
+    def test_binary_values(self):
+        ap = approx.algorithm1(_rand((3, 3, 3)), 4)
+        assert set(np.unique(np.asarray(ap.B))) <= {-1.0, 1.0}
+
+    def test_error_decreases_with_m(self):
+        w = _rand((7, 7, 3), seed=1)
+        errs = [
+            float(approx.reconstruction_error(w, approx.algorithm1(w, m)))
+            for m in range(1, 6)
+        ]
+        for lo, hi in zip(errs[1:], errs[:-1]):
+            assert lo <= hi + 1e-6, f"error not monotone: {errs}"
+
+    def test_alpha_is_lstsq_optimal(self):
+        """The returned alpha must minimize ||w - B a||² for the returned B."""
+        w = _rand((4, 4), seed=2)
+        ap = approx.algorithm1(w, 3)
+        B = np.asarray(ap.B).reshape(3, -1)
+        a_np, *_ = np.linalg.lstsq(B.T, np.asarray(w).reshape(-1), rcond=None)
+        np.testing.assert_allclose(np.asarray(ap.alpha), a_np, atol=1e-4)
+
+
+class TestAlgorithm2:
+    def test_not_worse_than_algorithm1(self):
+        """Paper claim: Algorithm 2 outperforms Algorithm 1 (§V-B1)."""
+        for seed in range(8):
+            w = _rand((7, 7, 3), seed=seed)
+            for m in (2, 3, 4):
+                e1 = float(approx.reconstruction_error(w, approx.algorithm1(w, m)))
+                e2 = float(approx.reconstruction_error(w, approx.algorithm2(w, m)))
+                assert e2 <= e1 + 1e-5, f"seed={seed} M={m}: {e2} > {e1}"
+
+    def test_monotone_in_m(self):
+        """Paper claim: monotone accuracy increase with M (Algorithm 2)."""
+        w = _rand((5, 5, 8), seed=3)
+        errs = [
+            float(approx.reconstruction_error(w, approx.algorithm2(w, m)))
+            for m in range(1, 7)
+        ]
+        for lo, hi in zip(errs[1:], errs[:-1]):
+            assert lo <= hi + 1e-5, f"not monotone: {errs}"
+
+    def test_fixed_point_is_stable(self):
+        """Running Algorithm 2 on its own reconstruction is a no-op-ish:
+        error of re-approximating Ŵ is ~0 (Ŵ is exactly representable)."""
+        w = _rand((4, 4), seed=4)
+        ap = approx.algorithm2(w, 2)
+        w_hat = ap.reconstruct()
+        ap2 = approx.algorithm2(w_hat, 2)
+        err = float(approx.reconstruction_error(w_hat, ap2))
+        assert err < 1e-5
+
+    def test_k_cap_respected(self):
+        # K=0 means no refinement beyond Algorithm 1's output
+        w = _rand((6, 6), seed=5)
+        a1 = approx.algorithm1(w, 3)
+        a2 = approx.algorithm2(w, 3, K=0)
+        np.testing.assert_array_equal(np.asarray(a1.B), np.asarray(a2.B))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        st.integers(2, 64),
+        st.integers(1, 4),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_property_improvement(self, n, m, seed):
+        """Hypothesis: for any tensor/M, alg2 error ≤ alg1 error and both
+        alphas are finite."""
+        w = _rand((n,), seed=seed)
+        a1 = approx.algorithm1(w, m)
+        a2 = approx.algorithm2(w, m)
+        e1 = float(approx.reconstruction_error(w, a1))
+        e2 = float(approx.reconstruction_error(w, a2))
+        assert e2 <= e1 + 1e-5
+        assert np.all(np.isfinite(np.asarray(a1.alpha)))
+        assert np.all(np.isfinite(np.asarray(a2.alpha)))
+
+
+class TestPerFilterVariants:
+    def test_conv_shapes(self):
+        w = _rand((5, 5, 3, 8))
+        ap = approx.approximate_conv(w, 3)
+        assert ap.B.shape == (8, 3, 5, 5, 3)
+        assert ap.alpha.shape == (8, 3)
+
+    def test_dense_shapes(self):
+        w = _rand((20, 10))
+        ap = approx.approximate_dense(w, 2)
+        assert ap.B.shape == (10, 2, 20)
+        assert ap.alpha.shape == (10, 2)
+
+    def test_depthwise_shapes(self):
+        w = _rand((3, 3, 16, 1))
+        ap = approx.approximate_depthwise(w, 2)
+        assert ap.B.shape == (16, 2, 3, 3)
+        assert ap.alpha.shape == (16, 2)
+
+    def test_conv_matches_per_filter_scalar_path(self):
+        w = _rand((3, 3, 2, 4), seed=7)
+        ap = approx.approximate_conv(w, 2, algorithm=1)
+        for d in range(4):
+            single = approx.algorithm1(w[..., d], 2)
+            np.testing.assert_array_equal(
+                np.asarray(ap.B[d]), np.asarray(single.B)
+            )
+            np.testing.assert_allclose(
+                np.asarray(ap.alpha[d]), np.asarray(single.alpha), rtol=1e-5
+            )
+
+
+class TestCompression:
+    def test_eq6_limit(self):
+        """cf → bits_w / M for large filters (paper: 16, 10.7, 8)."""
+        for m, lim in ((2, 16.0), (3, 32 / 3), (4, 8.0)):
+            cf = approx.compression_factor(100000, m)
+            assert abs(cf - lim) < 0.1
+
+    def test_eq6_exact(self):
+        # (Nc+1)*bits_w / (M*(Nc+bits_alpha))
+        assert approx.compression_factor(147, 2, 32, 8) == pytest.approx(
+            (148 * 32) / (2 * 155)
+        )
+
+    def test_network_cf(self):
+        cf = approx.network_compression_factor([(5, 147), (150, 80)], 2)
+        orig = 5 * 148 * 32 + 150 * 81 * 32
+        comp = 5 * 2 * 155 + 150 * 2 * 88
+        assert cf == pytest.approx(orig / comp)
+
+
+class TestSTE:
+    def test_forward_is_reconstruction(self):
+        w = _rand((4, 4, 2, 3), seed=8)
+        out = approx.ste_reconstruct(w, 2, 2)
+        ap = approx.approximate_conv(w, 2, algorithm=2, K=20)
+        recon = jnp.moveaxis(
+            jax.vmap(lambda b, a: approx.BinaryApprox(b, a).reconstruct())(
+                ap.B, ap.alpha
+            ),
+            0,
+            -1,
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(recon), atol=1e-5)
+
+    def test_gradient_is_identity(self):
+        w = _rand((8, 4), seed=9)
+        g = jax.grad(lambda w_: jnp.sum(approx.ste_reconstruct(w_, 2, 2) ** 2))(w)
+        # STE: d/dw sum(f(w)^2) = 2*f(w) (as if f were identity)
+        f = approx.ste_reconstruct(w, 2, 2)
+        np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(f), atol=1e-5)
+
+
+class TestEdgeCases:
+    def test_zero_tensor(self):
+        w = jnp.zeros((4, 4))
+        ap = approx.algorithm2(w, 2)
+        assert np.all(np.isfinite(np.asarray(ap.alpha)))
+        err = float(jnp.linalg.norm(ap.reconstruct()))
+        assert err < 1e-3
+
+    def test_constant_tensor(self):
+        w = jnp.full((5, 5), 0.7)
+        ap = approx.algorithm2(w, 2)
+        np.testing.assert_allclose(
+            np.asarray(ap.reconstruct()), np.asarray(w), atol=1e-5
+        )
+
+    def test_single_element(self):
+        w = jnp.array([2.5])
+        ap = approx.algorithm1(w, 1)
+        np.testing.assert_allclose(float(ap.reconstruct()[0]), 2.5, rtol=1e-6)

@@ -1,0 +1,189 @@
+"""Pallas kernel vs pure-jnp oracle parity (the core L1 correctness signal).
+
+hypothesis sweeps shapes/dtypes; float paths assert allclose, the int8
+path asserts exact equality (it models the RTL datapath bit-for-bit).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as kref
+from compile.kernels.amu import relu_maxpool
+from compile.kernels.binary_dot import binary_dot, binary_dot_int8
+from compile.kernels.binconv import binconv
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+def _signs(key, shape):
+    return jnp.where(jax.random.bernoulli(key, 0.5, shape), 1.0, -1.0)
+
+
+class TestBinaryDot:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(1, 48),  # batch
+        st.integers(1, 96),  # Nc
+        st.integers(1, 40),  # D
+        st.integers(1, 5),  # M
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, nc, d, m, seed):
+        k1, k2, k3, k4 = jax.random.split(_key(seed), 4)
+        x = jax.random.normal(k1, (b, nc))
+        planes = _signs(k2, (d, m, nc))
+        alpha = jax.random.uniform(k3, (d, m), minval=0.01, maxval=1.0)
+        bias = jax.random.normal(k4, (d,))
+        got = binary_dot(x, planes, alpha, bias)
+        want = kref.binary_dot_ref(x, planes, alpha, bias)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_block_boundary_shapes(self):
+        """Shapes straddling the default 32-wide tiles must still be exact."""
+        for b, d in [(31, 33), (32, 32), (33, 31), (1, 1), (64, 65)]:
+            k = _key(b * 100 + d)
+            x = jax.random.normal(k, (b, 17))
+            planes = _signs(k, (d, 2, 17))
+            alpha = jnp.ones((d, 2)) * 0.5
+            bias = jnp.zeros((d,))
+            got = binary_dot(x, planes, alpha, bias)
+            want = kref.binary_dot_ref(x, planes, alpha, bias)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_zero_alpha_gives_bias(self):
+        x = jax.random.normal(_key(0), (4, 10))
+        planes = _signs(_key(1), (6, 3, 10))
+        alpha = jnp.zeros((6, 3))
+        bias = jnp.arange(6.0)
+        got = binary_dot(x, planes, alpha, bias)
+        np.testing.assert_allclose(
+            np.asarray(got), np.tile(np.arange(6.0), (4, 1)), atol=1e-6
+        )
+
+
+class TestBinaryDotInt8:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(1, 16),
+        st.integers(1, 64),
+        st.integers(1, 24),
+        st.integers(1, 4),
+        st.integers(0, 14),  # shift
+        st.integers(0, 2**31 - 1),
+    )
+    def test_bit_exact(self, b, nc, d, m, shift, seed):
+        k1, k2, k3, k4 = jax.random.split(_key(seed), 4)
+        x = jax.random.randint(k1, (b, nc), -128, 128, jnp.int8)
+        planes = _signs(k2, (d, m, nc)).astype(jnp.int8)
+        alpha = jax.random.randint(k3, (d, m), -127, 128, jnp.int8)
+        bias = jax.random.randint(k4, (d,), -(2**16), 2**16, jnp.int32)
+        got = binary_dot_int8(x, planes, alpha, bias, shift)
+        want = kref.binary_dot_int8_ref(x, planes, alpha, bias, shift)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_saturation(self):
+        """Large accumulations must clamp to ±127/−128, not wrap."""
+        x = jnp.full((1, 64), 127, jnp.int8)
+        planes = jnp.ones((1, 1, 64), jnp.int8)
+        alpha = jnp.full((1, 1), 127, jnp.int8)
+        bias = jnp.zeros((1,), jnp.int32)
+        got = binary_dot_int8(x, planes, alpha, bias, 0)
+        assert int(got[0, 0]) == 127
+        got_neg = binary_dot_int8(-x, planes, alpha, bias, 0)
+        assert int(got_neg[0, 0]) == -128
+
+    def test_rounding_half_away_from_zero(self):
+        # acc = +3 with shift 1 → (3+1)>>1 = 2 ; acc = -3 → -(2) = -2
+        x = jnp.array([[3]], jnp.int8)
+        planes = jnp.ones((1, 1, 1), jnp.int8)
+        alpha = jnp.ones((1, 1), jnp.int8)
+        bias = jnp.zeros((1,), jnp.int32)
+        assert int(binary_dot_int8(x, planes, alpha, bias, 1)[0, 0]) == 2
+        assert int(binary_dot_int8(-x, planes, alpha, bias, 1)[0, 0]) == -2
+
+
+class TestBinconv:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        st.integers(1, 3),  # batch
+        st.integers(6, 20),  # H=W
+        st.integers(1, 4),  # C
+        st.sampled_from([1, 3, 4, 5]),  # k
+        st.integers(1, 8),  # D
+        st.integers(1, 3),  # M
+        st.sampled_from([1, 2]),  # stride
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, hw, c, k, d, m, stride, seed):
+        if k > hw:
+            return
+        k1, k2, k3, k4 = jax.random.split(_key(seed), 4)
+        x = jax.random.normal(k1, (b, hw, hw, c))
+        planes = _signs(k2, (d, m, k, k, c))
+        alpha = jax.random.uniform(k3, (d, m), minval=0.05, maxval=1.0)
+        bias = jax.random.normal(k4, (d,))
+        got = binconv(x, planes, alpha, bias, stride=stride)
+        want = kref.binconv_ref(x, planes, alpha, bias, stride=stride)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3
+        )
+
+    def test_cnn_a_layer_shapes(self):
+        """The two CNN-A conv layers exactly as the SA will see them."""
+        for (hw, c, k, d) in [(48, 3, 7, 5), (21, 5, 4, 150)]:
+            key = _key(hw)
+            x = jax.random.normal(key, (2, hw, hw, c))
+            planes = _signs(key, (d, 2, k, k, c))
+            alpha = jnp.full((d, 2), 0.1)
+            bias = jnp.zeros((d,))
+            got = binconv(x, planes, alpha, bias)
+            want = kref.binconv_ref(x, planes, alpha, bias)
+            assert got.shape == want.shape == (2, hw - k + 1, hw - k + 1, d)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=2e-3, rtol=1e-3
+            )
+
+
+class TestAMU:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(1, 4),
+        st.sampled_from([2, 3, 4, 6]),
+        st.integers(1, 5),
+        st.integers(1, 12),
+        st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, pool, mult, c, seed):
+        hw = pool * mult
+        x = jax.random.normal(_key(seed), (b, hw, hw, c))
+        got = relu_maxpool(x, pool)
+        want = kref.relu_maxpool_ref(x, pool)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+    def test_relu_from_zero_seed(self):
+        """All-negative window → 0 (the Eq. 13 y_0=0 trick IS the ReLU)."""
+        x = -jnp.ones((1, 4, 4, 2))
+        got = relu_maxpool(x, 2)
+        np.testing.assert_array_equal(np.asarray(got), np.zeros((1, 2, 2, 2)))
+
+    def test_rejects_non_divisible(self):
+        import pytest
+
+        with pytest.raises(ValueError):
+            relu_maxpool(jnp.zeros((1, 5, 5, 1)), 2)
+
+    def test_commutativity_identity(self):
+        """relu∘maxpool == maxpool∘relu — the property §III-B exploits."""
+        x = jax.random.normal(_key(3), (2, 8, 8, 3))
+        a = kref.relu_maxpool_ref(x, 2)
+        b, h, w, c = x.shape
+        pooled = x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+        np.testing.assert_allclose(
+            np.asarray(a), np.maximum(np.asarray(pooled), 0), atol=1e-6
+        )

@@ -1,0 +1,120 @@
+"""Model-level tests: shapes, pallas-vs-oracle parity, mode switching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import approx, model as mdl
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def cnn_a_setup():
+    params = mdl.init_params(mdl.CNN_A, jax.random.PRNGKey(0))
+    bp = mdl.binarize_params(mdl.CNN_A, params, M=2, algorithm=2, K=10)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 48, 48, 3))
+    return params, bp, x
+
+
+class TestShapes:
+    def test_cnn_a_float_logits(self, cnn_a_setup):
+        params, _, x = cnn_a_setup
+        logits = mdl.forward_float(mdl.CNN_A, params, x)
+        assert logits.shape == (2, 43)
+
+    def test_cnn_a_intermediate_dims(self):
+        """Dimension walk must match Listing 1: W_I=48,W_B=7 then W_I=21,W_B=4,
+        and the first dense layer must see exactly 1350 features."""
+        spec = mdl.CNN_A
+        hw = spec.input_hw
+        dims = []
+        for cv in spec.convs:
+            hw = (hw - cv.kh) // cv.stride + 1
+            dims.append(hw)
+            hw //= cv.pool
+            dims.append(hw)
+        assert dims == [42, 21, 18, 3]
+        assert hw * hw * spec.convs[-1].d_out == 1350
+        assert spec.denses[0].n_in == 1350
+
+    def test_macs(self):
+        """Conv MACs: 42²·7²·3·5 + 18²·4²·5·150; dense: 1350·340+340·490+490·43."""
+        want = (
+            42 * 42 * 7 * 7 * 3 * 5
+            + 18 * 18 * 4 * 4 * 5 * 150
+            + 1350 * 340
+            + 340 * 490
+            + 490 * 43
+        )
+        assert mdl.CNN_A.macs() == want
+
+    def test_binparams_shapes(self, cnn_a_setup):
+        _, bp, _ = cnn_a_setup
+        assert bp.conv_planes[0].shape == (5, 2, 7, 7, 3)
+        assert bp.conv_planes[1].shape == (150, 2, 4, 4, 5)
+        assert bp.dense_planes[0].shape == (340, 2, 1350)
+        assert bp.conv_alpha[1].shape == (150, 2)
+
+
+class TestForwardPaths:
+    def test_pallas_matches_oracle(self, cnn_a_setup):
+        """The AOT-lowered Pallas graph must equal the jnp oracle graph."""
+        _, bp, x = cnn_a_setup
+        got = mdl.forward_pallas(mdl.CNN_A, bp, x)
+        want = mdl.forward_binapprox(mdl.CNN_A, bp, x)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-2, rtol=1e-3
+        )
+
+    def test_binapprox_approaches_float_with_m(self):
+        """Logit error vs float model must shrink as M grows."""
+        spec = mdl.CNN_B_COMPACT
+        params = mdl.init_params(spec, jax.random.PRNGKey(2))
+        x = jax.random.uniform(jax.random.PRNGKey(3), (4, 32, 32, 3))
+        ref = mdl.forward_float(spec, params, x)
+        errs = []
+        for m in (1, 2, 4, 6):
+            bp = mdl.binarize_params(spec, params, m, algorithm=2, K=20)
+            out = mdl.forward_binapprox(spec, bp, x)
+            errs.append(float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref)))
+        assert errs[-1] < errs[0], f"errors {errs}"
+        assert errs[-1] < 0.15, f"M=6 should be close to float: {errs}"
+
+    def test_mode_truncation(self, cnn_a_setup):
+        """m_run=M equals the full forward; m_run=1 differs (it's the
+        high-throughput mode using only the first binary level)."""
+        _, bp, x = cnn_a_setup
+        full = mdl.forward_binapprox(mdl.CNN_A, bp, x)
+        same = mdl.forward_binapprox(mdl.CNN_A, bp, x, m_run=2)
+        trunc = mdl.forward_binapprox(mdl.CNN_A, bp, x, m_run=1)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(same), atol=1e-6)
+        assert float(jnp.max(jnp.abs(full - trunc))) > 1e-3
+
+    def test_ste_forward_matches_binapprox(self):
+        """STE forward == oracle forward with the same (M, algorithm)."""
+        spec = mdl.CNN_B_COMPACT
+        params = mdl.init_params(spec, jax.random.PRNGKey(4))
+        x = jax.random.uniform(jax.random.PRNGKey(5), (2, 32, 32, 3))
+        got = mdl.forward_ste(spec, params, x, M=2, algorithm=2)
+        bp = mdl.binarize_params(spec, params, 2, algorithm=2, K=20)
+        want = mdl.forward_binapprox(spec, bp, x)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3
+        )
+
+    def test_ste_is_trainable(self):
+        """Gradients flow through the STE forward to every parameter."""
+        spec = mdl.CNN_B_COMPACT
+        params = mdl.init_params(spec, jax.random.PRNGKey(6))
+        x = jax.random.uniform(jax.random.PRNGKey(7), (2, 32, 32, 3))
+        y = jnp.array([1, 2])
+
+        g = jax.grad(
+            lambda p: mdl.cross_entropy(mdl.forward_ste(spec, p, x, 2, 2), y)
+        )(params)
+        for name, grad in g.items():
+            assert np.all(np.isfinite(np.asarray(grad))), name
+            if "w" in name:
+                assert float(jnp.abs(grad).max()) > 0, f"dead gradient: {name}"

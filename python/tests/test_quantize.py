@@ -1,0 +1,120 @@
+"""Quantization tests: int8 oracle vs kernels, QS semantics, calibration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as dsgen, model as mdl, quantize as qz
+from compile.kernels import ref as kref
+from compile.kernels.binary_dot import binary_dot_int8
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def qnet_setup():
+    spec = mdl.CNN_B_COMPACT
+    params = mdl.init_params(spec, jax.random.PRNGKey(0))
+    bp = mdl.binarize_params(spec, params, M=3, algorithm=2, K=10)
+    calib = jax.random.uniform(jax.random.PRNGKey(1), (16, 32, 32, 3))
+    qnet = qz.quantize_network(spec, bp, calib)
+    return spec, bp, qnet, calib
+
+
+class TestBinaryPoint:
+    def test_small_values_get_max_frac(self):
+        assert qz._binary_point(0.4) == 7
+        assert qz._binary_point(0.0) == 7
+
+    def test_large_values_reduce_frac(self):
+        assert qz._binary_point(1.5) == 6
+        assert qz._binary_point(3.0) == 5
+        assert qz._binary_point(100.0) == 0
+
+    def test_representable(self):
+        """max_abs must be representable at the chosen binary point."""
+        for v in (0.3, 0.99, 1.7, 5.0, 63.0):
+            f = qz._binary_point(v)
+            assert v * (1 << f) <= 127.5 or f == 0
+
+
+class TestQSBlock:
+    def test_round_half_away(self):
+        acc = np.array([3, -3, 2, -2, 1, -1], np.int32)
+        out = qz._qs(acc, 1)
+        np.testing.assert_array_equal(out, [2, -2, 1, -1, 1, -1])
+
+    def test_saturation(self):
+        acc = np.array([100000, -100000], np.int32)
+        np.testing.assert_array_equal(qz._qs(acc, 2), [127, -128])
+
+    def test_shift_zero(self):
+        acc = np.array([5, -7], np.int32)
+        np.testing.assert_array_equal(qz._qs(acc, 0), [5, -7])
+
+
+class TestQuantizedForward:
+    def test_dense_matches_pallas_int8_kernel(self, qnet_setup):
+        """numpy oracle dense layer == Pallas int8 kernel, bit for bit."""
+        _, _, qnet, _ = qnet_setup
+        layer = next(l for l in qnet.layers if l.kind == "dense")
+        rng = np.random.default_rng(0)
+        x = rng.integers(-128, 128, (8, layer.planes.shape[2]), dtype=np.int8)
+        got = np.asarray(
+            binary_dot_int8(
+                jnp.asarray(x),
+                jnp.asarray(layer.planes),
+                jnp.asarray(layer.alpha_q),
+                jnp.asarray(layer.bias_q),
+                layer.shift,
+            )
+        )
+        want_acc = qz._dense_int8(x.astype(np.int32), layer)
+        want = np.clip(want_acc, -128, 127).astype(np.int8)
+        np.testing.assert_array_equal(got, want)
+
+    def test_int8_net_close_to_float(self, qnet_setup):
+        """Quantized logits must broadly agree with the float binapprox net:
+        top-1 agreement on most samples."""
+        spec, bp, qnet, calib = qnet_setup
+        x_q = qz.quantize_input(np.asarray(calib), qnet.f_input)
+        qi = qz.forward_int8(qnet, x_q)
+        qf = np.asarray(mdl.forward_binapprox(spec, bp, calib))
+        agree = np.mean(np.argmax(qi, -1) == np.argmax(qf, -1))
+        assert agree >= 0.7, f"top-1 agreement {agree}"
+
+    def test_shift_consistency(self, qnet_setup):
+        """Chained binary points must satisfy shift = f_in + f_alpha − f_out
+        and f_in of layer k+1 == f_out of layer k."""
+        _, _, qnet, _ = qnet_setup
+        f_prev = qnet.f_input
+        for layer in qnet.layers:
+            assert layer.f_in == f_prev
+            assert layer.shift == layer.f_in + layer.f_alpha - layer.f_out
+            assert layer.shift >= 0
+            f_prev = layer.f_out
+
+    def test_quantize_input_range(self):
+        x = np.linspace(0, 1, 11, dtype=np.float32).reshape(1, 1, 11, 1)
+        q = qz.quantize_input(x, 7)
+        assert q.min() >= 0 and q.max() == 127
+        assert q.dtype == np.int8
+
+
+class TestEndToEndInt8:
+    def test_cnn_a_int8_pipeline(self):
+        """Full CNN-A: binarize → quantize → int8 forward keeps the
+        float-net top-1 on a majority of easy synthetic samples."""
+        spec = mdl.CNN_A
+        params = mdl.init_params(spec, jax.random.PRNGKey(3))
+        bp = mdl.binarize_params(spec, params, M=2, algorithm=2, K=5)
+        (x, _), _ = dsgen.make_dataset(0, 8, 1)
+        qnet = qz.quantize_network(spec, bp, jnp.asarray(x))
+        x_q = qz.quantize_input(x, qnet.f_input)
+        logits = qz.forward_int8(qnet, x_q)
+        assert logits.shape == (8, 43)
+        assert logits.dtype == np.int8
+        ref = np.asarray(mdl.forward_binapprox(spec, bp, jnp.asarray(x)))
+        agree = np.mean(np.argmax(logits, -1) == np.argmax(ref, -1))
+        assert agree >= 0.5, f"agreement {agree}"

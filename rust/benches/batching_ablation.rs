@@ -1,0 +1,100 @@
+//! Ablation: the coordinator's dynamic-batching policy.
+//!
+//! Sweeps (max_batch, max_delay) under a Poisson-ish open-loop load and
+//! reports p50/p99 latency, throughput, and mean batch size — the L3
+//! design-space study for the serving layer (DESIGN.md §Perf: the
+//! coordinator must not be the bottleneck).
+//!
+//! Run: `cargo bench --bench batching_ablation`
+
+use std::time::{Duration, Instant};
+
+use binarray::artifacts::{self, CalibBatch, QuantNetwork};
+use binarray::binarray::ArrayConfig;
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+use binarray::util::rng::Xoshiro256;
+
+fn run_policy(
+    net: &QuantNetwork,
+    calib: &CalibBatch,
+    max_batch: usize,
+    max_delay_ms: u64,
+    frames: usize,
+) -> (f64, Duration, Duration, f64) {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_millis(max_delay_ms),
+            },
+        },
+        net.clone(),
+    )
+    .unwrap();
+
+    // open-loop arrivals with exponential gaps (mean 2 ms)
+    let mut rng = Xoshiro256::new(99);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(frames);
+    for i in 0..frames {
+        rxs.push(coord.submit(calib.image(i % calib.n).to_vec(), Mode::HighThroughput));
+        let gap = (-rng.f64().max(1e-9).ln() * 2.0).min(8.0);
+        std::thread::sleep(Duration::from_micros((gap * 1000.0) as u64));
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed();
+    let m = coord.shutdown();
+    (
+        frames as f64 / wall.as_secs_f64(),
+        m.latency.percentile(50.0),
+        m.latency.percentile(99.0),
+        m.mean_batch(),
+    )
+}
+
+fn main() {
+    let dir = artifacts::default_dir();
+    let net = match QuantNetwork::load(&dir.join("cnn_a.weights.bin")) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("artifacts not built ({e})");
+            std::process::exit(1);
+        }
+    };
+    let calib = CalibBatch::load(&dir.join("calib.bin")).unwrap();
+
+    println!("=== batching policy ablation (open-loop load, 2 workers) ===\n");
+    println!(
+        "{:>9} {:>10} | {:>10} {:>12} {:>12} {:>10}",
+        "max_batch", "max_delay", "fps(wall)", "p50", "p99", "avg batch"
+    );
+    let frames = 96;
+    let mut results = Vec::new();
+    for (mb, md) in [(1usize, 0u64), (4, 1), (8, 2), (16, 5), (32, 20)] {
+        let (fps, p50, p99, ab) = run_policy(&net, &calib, mb, md, frames);
+        println!(
+            "{:>9} {:>8}ms | {:>10.1} {:>12.2?} {:>12.2?} {:>10.1}",
+            mb, md, fps, p50, p99, ab
+        );
+        results.push((mb, fps, p99, ab));
+    }
+
+    println!("\nchecks:");
+    let no_batch = results[0].3;
+    let batched = results[2].3;
+    println!(
+        "  [{}] batching engages under load (avg batch {:.1} → {:.1})",
+        if batched > no_batch { "ok" } else { "FAIL" },
+        no_batch,
+        batched
+    );
+    println!("  (batch=1 is the no-batching baseline; larger batches amortize the");
+    println!("   mode switch and keep the ping-pong pipeline full, at p99 cost)");
+    if batched <= no_batch {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,82 @@
+//! §V-A3 reproduction: verify the analytical performance model against
+//! the cycle-accurate simulator.
+//!
+//! The paper predicts 466'668 cc with Eq. 18 for the first two layers of
+//! CNN-A and measures 467'200 cc in VHDL simulation — a −1.1‰ error from
+//! pipeline registers and CU instruction time, "sufficiently small to be
+//! neglected".  We repeat the experiment with our corrected Eq. 18 and
+//! our cycle-accurate simulator: the same two layers, the same config
+//! class, and assert the same sub-percent error band.
+//!
+//! Run: `cargo bench --bench model_verification`
+
+use binarray::artifacts::{self, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem};
+use binarray::{nn, perf};
+
+fn main() {
+    let dir = artifacts::default_dir();
+    let qnet = match QuantNetwork::load(&dir.join("cnn_a.weights.bin")) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    let calib = artifacts::CalibBatch::load(&dir.join("calib.bin")).ok();
+    let image: Vec<i8> = calib
+        .as_ref()
+        .map(|c| c.image(0).to_vec())
+        .unwrap_or_else(|| vec![64; 48 * 48 * 3]);
+    let net = nn::cnn_a();
+
+    println!("=== §V-A3: analytical model vs cycle-accurate simulation ===");
+    println!("(paper: 466'668 cc predicted vs 467'200 cc simulated, −1.1‰)\n");
+    println!(
+        "{:<10} {:>4} | {:>14} {:>14} {:>9}",
+        "config", "M", "Eq.18 (cc)", "simulated (cc)", "error"
+    );
+
+    let mut worst: f64 = 0.0;
+    for cfg in [
+        ArrayConfig::new(1, 8, 2),
+        ArrayConfig::new(1, 32, 2),
+        ArrayConfig::new(1, 8, 4),
+    ] {
+        for m in [2usize, 4] {
+            if m < cfg.m_arch {
+                continue;
+            }
+            // analytical: first two conv layers only
+            let analytic: f64 = net.layers[..2]
+                .iter()
+                .map(|l| perf::layer_cycles(l, cfg, m).cycles)
+                .sum();
+            // simulated: run a frame, take the first two layer_cycles
+            let mut sys = BinArraySystem::new(cfg, qnet.clone()).unwrap();
+            sys.set_mode(Some(m));
+            let (_, stats) = sys.run_frame(&image).unwrap();
+            let simulated: u64 = stats.layer_cycles[..2].iter().sum();
+            let err = 100.0 * (analytic - simulated as f64) / simulated as f64;
+            worst = worst.max(err.abs());
+            println!(
+                "{:<10} {:>4} | {:>14.0} {:>14} {:>8.3}%",
+                cfg.label(),
+                m,
+                analytic,
+                simulated,
+                err
+            );
+        }
+    }
+
+    println!("\nworst |error| = {worst:.3}%  (paper's own discrepancy: 0.11%)");
+    println!("sources: pipeline drain (D_arch + 4 regs per pass) and CU STI time,");
+    println!("exactly the two effects the paper names for its −1.1‰.");
+    // The model must stay in the same "negligible" band the paper claims.
+    if worst > 1.0 {
+        eprintln!("FAIL: analytical model diverges >1% from cycle-accurate sim");
+        std::process::exit(1);
+    }
+    println!("[ok] within ±1% — the paper's 'sufficiently small to be neglected' band");
+}

@@ -1,0 +1,134 @@
+//! Simulator hot-path benchmark — the instrument for the §Perf pass.
+//!
+//! Measures the L3 request path end to end:
+//!   * frames/second of the cycle-accurate simulator (CNN-A, per config);
+//!   * simulated-cycles/second (the simulator's own "clock rate");
+//!   * coordinator overhead: serve N frames through the full router →
+//!     batcher → worker stack vs calling the simulator directly.
+//!
+//! Targets (DESIGN.md §Perf): ≥50 M simulated PE-cycles/s/core so the
+//! simulated 400 MHz accelerator is the bottleneck in reporting, and <5%
+//! coordinator overhead.
+//!
+//! Run: `cargo bench --bench sim_hotpath`
+
+use std::time::{Duration, Instant};
+
+use binarray::artifacts::{self, CalibBatch, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem};
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+
+fn bench<F: FnMut() -> u64>(label: &str, iters: usize, mut f: F) -> (f64, u64) {
+    // warmup
+    let mut cycles = 0u64;
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        cycles += f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let per = dt / iters as f64;
+    println!(
+        "{label:<44} {:>9.3} ms/frame  {:>8.1} fps  {:>8.1} Mcc/s",
+        per * 1e3,
+        1.0 / per,
+        cycles as f64 / dt / 1e6
+    );
+    (per, cycles / iters as u64)
+}
+
+fn main() {
+    let dir = artifacts::default_dir();
+    let qnet = match QuantNetwork::load(&dir.join("cnn_a.weights.bin")) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("artifacts not built ({e})");
+            std::process::exit(1);
+        }
+    };
+    let calib = CalibBatch::load(&dir.join("calib.bin")).expect("calib.bin");
+    let image = calib.image(0).to_vec();
+
+    println!("=== simulator hot path (CNN-A, full frame) ===");
+    let mut direct_per = 0.0;
+    for cfg in [
+        ArrayConfig::new(1, 8, 2),
+        ArrayConfig::new(1, 32, 2),
+        ArrayConfig::new(4, 32, 4),
+    ] {
+        let mut sys = BinArraySystem::new(cfg, qnet.clone()).unwrap();
+        let (per, _) = bench(&format!("direct BinArraySystem {}", cfg.label()), 20, || {
+            sys.run_frame(&image).unwrap().1.cycles
+        });
+        if cfg.n_sa == 1 && cfg.d_arch == 8 {
+            direct_per = per;
+        }
+    }
+
+    println!("\n=== high-throughput mode (m_run = M_arch) ===");
+    {
+        let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), qnet.clone()).unwrap();
+        sys.set_mode(Some(2));
+        bench("direct [1,8,2] fast mode", 20, || {
+            sys.run_frame(&image).unwrap().1.cycles
+        });
+    }
+
+    println!("\n=== coordinator overhead (1 worker, batch 8) ===");
+    let frames = 64usize;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_micros(500),
+            },
+        },
+        qnet.clone(),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..frames)
+        .map(|i| coord.submit(calib.image(i % calib.n).to_vec(), Mode::HighAccuracy))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let served = t0.elapsed().as_secs_f64();
+    let m = coord.shutdown();
+    let per_served = served / frames as f64;
+    let overhead = (per_served - direct_per) / direct_per * 100.0;
+    println!(
+        "served {frames} frames in {served:.3}s → {:.3} ms/frame (direct {:.3} ms) — overhead {overhead:+.1}%",
+        per_served * 1e3,
+        direct_per * 1e3,
+    );
+    println!("metrics: {}", m.summary());
+
+    println!("\n=== scaling: workers ===");
+    for workers in [1usize, 2, 4] {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(1, 8, 2),
+                workers,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_delay: Duration::from_micros(500),
+                },
+            },
+            qnet.clone(),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..128)
+            .map(|i| coord.submit(calib.image(i % calib.n).to_vec(), Mode::HighAccuracy))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        coord.shutdown();
+        println!("  {workers} workers: {:>8.1} frames/s wall", 128.0 / dt);
+    }
+}

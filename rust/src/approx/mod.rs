@@ -1,0 +1,295 @@
+//! Multi-level binary weight approximation in Rust (paper §II).
+//!
+//! Mirrors `python/compile/approx.py` so the toolchain can binarize
+//! weights without a Python round-trip (used by the quickstart example,
+//! the Table II cross-check, and property tests).  The inner least-squares
+//! solve uses the M×M normal equations — M ≤ 8 in every practical
+//! configuration, so a direct Gaussian elimination is exact enough.
+
+/// Result of approximating one weight tensor with M binary levels.
+#[derive(Clone, Debug)]
+pub struct BinaryApprox {
+    /// `M` sign planes, each of length `n_c`, values ±1.
+    pub planes: Vec<Vec<i8>>,
+    /// `M` scaling factors α.
+    pub alpha: Vec<f32>,
+}
+
+impl BinaryApprox {
+    pub fn m(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Reconstruct Ŵ = Σ_m α_m · B_m (Eq. 1).
+    pub fn reconstruct(&self) -> Vec<f32> {
+        let n = self.planes[0].len();
+        let mut out = vec![0f32; n];
+        for (plane, &a) in self.planes.iter().zip(&self.alpha) {
+            for (o, &b) in out.iter_mut().zip(plane) {
+                *o += f32::from(b) * a;
+            }
+        }
+        out
+    }
+
+    /// Relative L2 reconstruction error vs the original weights.
+    pub fn rel_error(&self, w: &[f32]) -> f64 {
+        let w_hat = self.reconstruct();
+        let num: f64 = w
+            .iter()
+            .zip(&w_hat)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = w.iter().map(|&a| (a as f64).powi(2)).sum();
+        (num / den.max(1e-24)).sqrt()
+    }
+}
+
+/// Solve the M×M normal equations `(B Bᵀ + λI) α = B w` (Eq. 5).
+fn solve_alpha(w: &[f32], planes: &[Vec<i8>]) -> Vec<f32> {
+    let m = planes.len();
+    let n = w.len();
+    // Gram matrix G[i][j] = B_i · B_j ; rhs[i] = B_i · w
+    let mut g = vec![vec![0f64; m]; m];
+    let mut rhs = vec![0f64; m];
+    for i in 0..m {
+        for j in i..m {
+            let dot: i64 = planes[i]
+                .iter()
+                .zip(&planes[j])
+                .map(|(&a, &b)| i64::from(a) * i64::from(b))
+                .sum();
+            g[i][j] = dot as f64;
+            g[j][i] = dot as f64;
+        }
+        rhs[i] = planes[i]
+            .iter()
+            .zip(w)
+            .map(|(&b, &x)| f64::from(b) * f64::from(x))
+            .sum();
+        g[i][i] += 1e-6 * n as f64; // Tikhonov guard for duplicated planes
+    }
+    gauss_solve(&mut g, &mut rhs);
+    rhs.iter().map(|&v| v as f32).collect()
+}
+
+/// In-place Gaussian elimination with partial pivoting; result in `rhs`.
+fn gauss_solve(a: &mut [Vec<f64>], rhs: &mut [f64]) {
+    let n = rhs.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        a.swap(col, piv);
+        rhs.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-30 {
+            continue; // singular direction; Tikhonov should prevent this
+        }
+        for row in col + 1..n {
+            let f = a[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            rhs[row] -= f * rhs[col];
+        }
+    }
+    for col in (0..n).rev() {
+        let d = a[col][col];
+        if d.abs() < 1e-30 {
+            rhs[col] = 0.0;
+            continue;
+        }
+        rhs[col] /= d;
+        let v = rhs[col];
+        for row in 0..col {
+            rhs[row] -= a[row][col] * v;
+        }
+    }
+}
+
+fn sign_plane(residual: &[f32]) -> Vec<i8> {
+    residual.iter().map(|&v| if v >= 0.0 { 1 } else { -1 }).collect()
+}
+
+/// Paper Algorithm 1 (after Guo et al. [7]): greedy residual signs with
+/// running-mean scale estimates, one final least-squares solve for α.
+pub fn algorithm1(w: &[f32], m: usize) -> BinaryApprox {
+    assert!(m >= 1 && !w.is_empty());
+    let mut residual = w.to_vec();
+    let mut planes = Vec::with_capacity(m);
+    for _ in 0..m {
+        let plane = sign_plane(&residual);
+        let a_hat: f32 =
+            residual.iter().map(|&v| v.abs()).sum::<f32>() / residual.len() as f32;
+        for (r, &b) in residual.iter_mut().zip(&plane) {
+            *r -= f32::from(b) * a_hat;
+        }
+        planes.push(plane);
+    }
+    let alpha = solve_alpha(w, &planes);
+    BinaryApprox { planes, alpha }
+}
+
+/// Paper Algorithm 2 (the paper's contribution): alternate the greedy
+/// plane derivation (using the *least-squares* α) with re-solving for α,
+/// until the planes are stable or `k` iterations elapsed.
+pub fn algorithm2(w: &[f32], m: usize, k: usize) -> BinaryApprox {
+    let mut cur = algorithm1(w, m);
+    for _ in 0..k {
+        let mut residual = w.to_vec();
+        let mut planes = Vec::with_capacity(m);
+        for mi in 0..m {
+            let plane = sign_plane(&residual);
+            for (r, &b) in residual.iter_mut().zip(&plane) {
+                *r -= f32::from(b) * cur.alpha[mi];
+            }
+            planes.push(plane);
+        }
+        let stable = planes == cur.planes;
+        let alpha = solve_alpha(w, &planes);
+        cur = BinaryApprox { planes, alpha };
+        if stable {
+            break;
+        }
+    }
+    cur
+}
+
+/// Compression factor of Eq. 6 for one filter with `n_c` coefficients.
+pub fn compression_factor(n_c: usize, m: usize, bits_w: u32, bits_alpha: u32) -> f64 {
+    ((n_c + 1) as f64 * f64::from(bits_w)) / (m as f64 * (n_c as f64 + f64::from(bits_alpha)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Xoshiro256};
+
+    fn randn(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn m1_matches_closed_form() {
+        let mut rng = Xoshiro256::new(1);
+        let w = randn(&mut rng, 64);
+        let ap = algorithm1(&w, 1);
+        let mean_abs: f32 = w.iter().map(|v| v.abs()).sum::<f32>() / 64.0;
+        assert!((ap.alpha[0] - mean_abs).abs() < 1e-4);
+        for (b, &x) in ap.planes[0].iter().zip(&w) {
+            assert_eq!(*b, if x >= 0.0 { 1 } else { -1 });
+        }
+    }
+
+    #[test]
+    fn alg2_not_worse_than_alg1() {
+        prop::check(60, "alg2 error <= alg1 error", |rng| {
+            let n = 4 + rng.below(96) as usize;
+            let m = 1 + rng.below(4) as usize;
+            let w = randn(rng, n);
+            let e1 = algorithm1(&w, m).rel_error(&w);
+            let e2 = algorithm2(&w, m, 100).rel_error(&w);
+            assert!(e2 <= e1 + 1e-5, "n={n} m={m}: {e2} > {e1}");
+        });
+    }
+
+    #[test]
+    fn alg2_monotone_in_m() {
+        prop::check(30, "alg2 error monotone non-increasing in M", |rng| {
+            let w = randn(rng, 80);
+            let mut prev = f64::INFINITY;
+            for m in 1..=6 {
+                let e = algorithm2(&w, m, 100).rel_error(&w);
+                assert!(e <= prev + 1e-5, "M={m}: {e} > {prev}");
+                prev = e;
+            }
+        });
+    }
+
+    #[test]
+    fn alpha_is_lstsq_optimal() {
+        // perturbing any alpha must not reduce the squared error
+        prop::check(40, "alpha at least-squares optimum", |rng| {
+            let w = randn(rng, 32);
+            let ap = algorithm2(&w, 3, 50);
+            let base: f64 = sq_err(&w, &ap);
+            for mi in 0..3 {
+                for delta in [-1e-3f32, 1e-3] {
+                    let mut p = ap.clone();
+                    p.alpha[mi] += delta;
+                    assert!(sq_err(&w, &p) >= base - 1e-6);
+                }
+            }
+        });
+    }
+
+    fn sq_err(w: &[f32], ap: &BinaryApprox) -> f64 {
+        let r = ap.reconstruct();
+        w.iter()
+            .zip(&r)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    #[test]
+    fn exactly_representable_is_exact() {
+        // W built from known planes/alphas must reconstruct ~perfectly
+        let mut rng = Xoshiro256::new(9);
+        let planes: Vec<Vec<i8>> = (0..2).map(|_| prop::sign_vec(&mut rng, 40)).collect();
+        let alpha = [0.75f32, 0.25];
+        let w: Vec<f32> = (0..40)
+            .map(|i| f32::from(planes[0][i]) * alpha[0] + f32::from(planes[1][i]) * alpha[1])
+            .collect();
+        let ap = algorithm2(&w, 2, 100);
+        assert!(ap.rel_error(&w) < 1e-4, "err {}", ap.rel_error(&w));
+    }
+
+    #[test]
+    fn zero_weights_dont_nan() {
+        let w = vec![0f32; 16];
+        let ap = algorithm2(&w, 2, 10);
+        assert!(ap.alpha.iter().all(|a| a.is_finite()));
+        assert!(ap.reconstruct().iter().all(|v| v.abs() < 1e-2));
+    }
+
+    #[test]
+    fn compression_factors_paper_limits() {
+        // paper §II-C: cf → 16, 10.7, 8 for M = 2, 3, 4 at bits_w=32
+        for (m, lim) in [(2, 16.0), (3, 32.0 / 3.0), (4, 8.0)] {
+            let cf = compression_factor(100_000, m, 32, 8);
+            assert!((cf - lim).abs() < 0.05, "M={m}: {cf}");
+        }
+        // exact small case
+        let cf = compression_factor(147, 2, 32, 8);
+        assert!((cf - (148.0 * 32.0) / (2.0 * 155.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauss_solver_random_systems() {
+        prop::check(100, "gauss solve vs residual check", |rng| {
+            let n = 1 + rng.below(6) as usize;
+            let mut a = vec![vec![0f64; n]; n];
+            // diagonally dominant → well-conditioned
+            for i in 0..n {
+                for j in 0..n {
+                    a[i][j] = rng.normal();
+                }
+                a[i][i] += n as f64 * 4.0;
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut rhs: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[i][j] * x_true[j]).sum())
+                .collect();
+            let mut a2 = a.clone();
+            gauss_solve(&mut a2, &mut rhs);
+            for i in 0..n {
+                assert!((rhs[i] - x_true[i]).abs() < 1e-8, "{:?} vs {:?}", rhs, x_true);
+            }
+        });
+    }
+}

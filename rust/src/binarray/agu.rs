@@ -1,0 +1,247 @@
+//! Address generator unit (paper §IV-B, Algorithm 3, Figs. 8–9).
+//!
+//! Convolution anchors are *not* emitted in raster order: because the AMU
+//! downsamples the output stream directly, all convolutions whose outputs
+//! fall into the same pooling window must be produced consecutively.  The
+//! AGU therefore walks: conv anchor → across the pooling window (case 1),
+//! down within the pooling window (case 2), pooling window right (case 3),
+//! pooling window down (case 4) — maintaining anchor addresses with
+//! additions only (no multipliers in the RTL).
+//!
+//! This implementation keeps both the output coordinates and the
+//! incrementally maintained byte addresses; a debug assertion checks the
+//! add-only address against the multiplicative closed form, which is the
+//! property the paper's Algorithm 3 exists to guarantee.
+
+/// One convolution anchor emitted by the AGU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Anchor {
+    /// Conv output coordinates (row, col) = (u, v).
+    pub u: usize,
+    pub v: usize,
+    /// Input-feature anchor address (row-major, channel-minor).
+    pub addr: usize,
+    /// True for the last conv of its pooling window (AMU emits after it).
+    pub last_in_pool: bool,
+}
+
+/// AGU for convolutional layers.
+///
+/// `w_i`: input width, `c_i`: input channels, `stride`: S,
+/// `u_out`/`v_out`: conv output dims, `h_p`/`w_p`: pooling window.
+/// For layers without pooling pass `h_p = w_p = 1` (raster order results).
+#[derive(Clone, Debug)]
+pub struct Agu {
+    w_i: usize,
+    c_i: usize,
+    stride: usize,
+    u_out: usize,
+    v_out: usize,
+    h_p: usize,
+    w_p: usize,
+    // paper state: indexes within the pooling window + anchors
+    p_w: usize,
+    p_h: usize,
+    pool_u: usize,
+    pool_v: usize,
+    /// a_cv — current conv anchor address (add-only maintenance).
+    a_cv: usize,
+    /// a_cl — first address of the current row in the current pool window.
+    a_cl: usize,
+    /// a_po — start address of the current pooling window.
+    a_po: usize,
+    done: bool,
+}
+
+impl Agu {
+    pub fn new(
+        w_i: usize,
+        c_i: usize,
+        stride: usize,
+        u_out: usize,
+        v_out: usize,
+        h_p: usize,
+        w_p: usize,
+    ) -> Self {
+        assert!(u_out % h_p == 0 && v_out % w_p == 0,
+            "AGU requires pooling to tile the conv output exactly ({u_out}x{v_out} vs {h_p}x{w_p})");
+        Self {
+            w_i,
+            c_i,
+            stride,
+            u_out,
+            v_out,
+            h_p,
+            w_p,
+            p_w: 0,
+            p_h: 0,
+            pool_u: 0,
+            pool_v: 0,
+            a_cv: 0,
+            a_cl: 0,
+            a_po: 0,
+            done: u_out == 0 || v_out == 0,
+        }
+    }
+
+    /// Closed-form anchor address (for the debug cross-check only).
+    fn addr_of(&self, u: usize, v: usize) -> usize {
+        (u * self.stride * self.w_i + v * self.stride) * self.c_i
+    }
+}
+
+impl Iterator for Agu {
+    type Item = Anchor;
+
+    fn next(&mut self) -> Option<Anchor> {
+        if self.done {
+            return None;
+        }
+        let u = self.pool_u * self.h_p + self.p_h;
+        let v = self.pool_v * self.w_p + self.p_w;
+        debug_assert_eq!(
+            self.a_cv,
+            self.addr_of(u, v),
+            "add-only AGU address diverged at ({u},{v})"
+        );
+        let last_in_pool = self.p_w + 1 == self.w_p && self.p_h + 1 == self.h_p;
+        let anchor = Anchor {
+            u,
+            v,
+            addr: self.a_cv,
+            last_in_pool,
+        };
+
+        // Algorithm 3's four cases, add-only address updates.
+        let sc = self.stride * self.c_i; // one conv step right
+        let row = self.stride * self.w_i * self.c_i; // one conv step down
+        if self.p_w + 1 < self.w_p {
+            // case 1: move conv to next column within the pooling window
+            self.a_cv += sc;
+            self.p_w += 1;
+        } else if self.p_h + 1 < self.h_p {
+            // case 2: move conv to next row within the pooling window
+            self.a_cl = if self.p_h == 0 { self.a_po } else { self.a_cl };
+            self.a_cl += row;
+            self.a_cv = self.a_cl;
+            self.p_h += 1;
+            self.p_w = 0;
+        } else if (self.pool_v + 1) * self.w_p < self.v_out {
+            // case 3: move pooling window right
+            self.a_po += self.w_p * sc;
+            self.a_cv = self.a_po;
+            self.a_cl = self.a_po;
+            self.pool_v += 1;
+            self.p_w = 0;
+            self.p_h = 0;
+        } else if (self.pool_u + 1) * self.h_p < self.u_out {
+            // case 4: move pooling window down (back to column 0)
+            self.a_po += self.h_p * row - self.pool_v * self.w_p * sc;
+            self.a_cv = self.a_po;
+            self.a_cl = self.a_po;
+            self.pool_u += 1;
+            self.pool_v = 0;
+            self.p_w = 0;
+            self.p_h = 0;
+        } else {
+            self.done = true;
+        }
+        Some(anchor)
+    }
+}
+
+/// AGU for dense layers: a simple linear counter over `n_in` features
+/// (§IV-B2 — "the AGU implements a simple linear counter").
+pub fn dense_addresses(n_in: usize) -> impl Iterator<Item = usize> {
+    0..n_in
+}
+
+/// Reference enumerator (nested loops, with multiplications) used by tests
+/// and by documentation to define the required ordering.
+pub fn reference_order(
+    u_out: usize,
+    v_out: usize,
+    h_p: usize,
+    w_p: usize,
+) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(u_out * v_out);
+    for pu in 0..u_out / h_p {
+        for pv in 0..v_out / w_p {
+            for ph in 0..h_p {
+                for pw in 0..w_p {
+                    out.push((pu * h_p + ph, pv * w_p + pw));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matches_reference_order_fig8() {
+        // Fig. 8 scenario: 3×3 conv over a feature map with 2×2 pooling.
+        let agu = Agu::new(8, 1, 1, 6, 6, 2, 2);
+        let got: Vec<(usize, usize)> = agu.map(|a| (a.u, a.v)).collect();
+        assert_eq!(got, reference_order(6, 6, 2, 2));
+        // The first four anchors form the first pooling window.
+        assert_eq!(&got[..4], &[(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn property_matches_reference() {
+        prop::check(150, "AGU order == reference for all geometries", |rng| {
+            let h_p = 1 + rng.below(3) as usize;
+            let w_p = 1 + rng.below(3) as usize;
+            let u_out = h_p * (1 + rng.below(6) as usize);
+            let v_out = w_p * (1 + rng.below(6) as usize);
+            let stride = 1 + rng.below(2) as usize;
+            let c = 1 + rng.below(4) as usize;
+            let kw = 1 + rng.below(3) as usize;
+            let w_i = (v_out - 1) * stride + kw;
+            let agu = Agu::new(w_i, c, stride, u_out, v_out, h_p, w_p);
+            let got: Vec<Anchor> = agu.collect();
+            let want = reference_order(u_out, v_out, h_p, w_p);
+            assert_eq!(got.len(), want.len());
+            for (a, (u, v)) in got.iter().zip(&want) {
+                assert_eq!((a.u, a.v), (*u, *v));
+                assert_eq!(a.addr, (u * stride * w_i + v * stride) * c);
+            }
+        });
+    }
+
+    #[test]
+    fn last_in_pool_marks_exactly_every_np2() {
+        let agu = Agu::new(10, 3, 1, 6, 6, 2, 2);
+        let flags: Vec<bool> = agu.map(|a| a.last_in_pool).collect();
+        assert_eq!(flags.len(), 36);
+        for (i, f) in flags.iter().enumerate() {
+            assert_eq!(*f, i % 4 == 3, "index {i}");
+        }
+    }
+
+    #[test]
+    fn no_pooling_is_raster_order() {
+        let agu = Agu::new(5, 1, 1, 3, 3, 1, 1);
+        let got: Vec<(usize, usize)> = agu.map(|a| (a.u, a.v)).collect();
+        let want: Vec<(usize, usize)> =
+            (0..3).flat_map(|u| (0..3).map(move |v| (u, v))).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn anchor_count_total() {
+        let agu = Agu::new(48, 3, 1, 42, 42, 2, 2);
+        assert_eq!(agu.count(), 42 * 42);
+    }
+
+    #[test]
+    fn dense_counter() {
+        let addrs: Vec<usize> = dense_addresses(5).collect();
+        assert_eq!(addrs, vec![0, 1, 2, 3, 4]);
+    }
+}

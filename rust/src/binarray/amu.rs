@@ -1,0 +1,157 @@
+//! Activation max-pooling unit + output data gatherer (paper §III-B,
+//! Fig. 6, and §IV-A).
+//!
+//! The AMU receives the QS-quantized output stream of the SA in
+//! *channel-first* order (all `D_arch` channels of one conv position,
+//! then the next position) and performs fused ReLU + max-pooling with a
+//! `D_arch`-deep shift register of running maxima seeded with 0
+//! (Eq. 13: `y_0 = 0` makes the running max implement ReLU for free).
+//!
+//! The ODG assigns row-major feature-buffer addresses to the pooled
+//! values, converting the channel-first stream back to `(y, x, c)` layout.
+
+/// Streaming AMU for one pass of `d_arch` channels.
+#[derive(Clone, Debug)]
+pub struct Amu {
+    /// Shift register of intermediate maxima, one per channel.
+    sreg: Vec<i8>,
+    /// Convolutions seen in the current pooling window.
+    seen: usize,
+    /// Total convs per pooling window (N_p²; 1 = pooling bypassed).
+    np2: usize,
+    relu_only: bool,
+}
+
+impl Amu {
+    /// `np`: pooling factor N_p (1 = bypass, pure ReLU).  `relu`: whether
+    /// the activation applies (dense layers bypass the AMU entirely).
+    pub fn new(d_arch: usize, np: usize, relu: bool) -> Self {
+        Self {
+            sreg: vec![0; d_arch],
+            seen: 0,
+            np2: np * np,
+            relu_only: !relu,
+        }
+    }
+
+    /// Push the `d_arch` outputs of one conv position (channel-first).
+    /// Returns `Some(pooled)` when the pooling window completes.
+    pub fn push(&mut self, values: &[i8]) -> Option<Vec<i8>> {
+        debug_assert_eq!(values.len(), self.sreg.len());
+        debug_assert!(!self.relu_only, "use push_raw for non-activated layers");
+        for (m, &v) in self.sreg.iter_mut().zip(values) {
+            *m = (*m).max(v); // running max against y_0 = 0 ⇒ ReLU
+        }
+        self.seen += 1;
+        if self.seen == self.np2 {
+            let out = std::mem::replace(&mut self.sreg, vec![0; values.len()]);
+            self.seen = 0;
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Bypass path (dense layers / layers without activation): values pass
+    /// through unchanged.
+    pub fn push_raw(&mut self, values: &[i8]) -> Vec<i8> {
+        values.to_vec()
+    }
+}
+
+/// Output data gatherer: converts the AMU's channel-first pooled stream to
+/// row-major `(y, x, c)` addresses in the feature buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct Odg {
+    /// Output feature width (pooled) and channel count of the full layer.
+    pub out_w: usize,
+    pub out_c: usize,
+    /// Base address of the output feature map.
+    pub base: usize,
+}
+
+impl Odg {
+    /// Address of pooled output `(y, x)`, channel `ch`.
+    #[inline]
+    pub fn addr(&self, y: usize, x: usize, ch: usize) -> usize {
+        self.base + (y * self.out_w + x) * self.out_c + ch
+    }
+
+    /// Scatter one pooled vector (channels `ch0..ch0+len`) into the buffer.
+    pub fn write(&self, buf: &mut [i8], y: usize, x: usize, ch0: usize, vals: &[i8]) {
+        for (i, &v) in vals.iter().enumerate() {
+            buf[self.addr(y, x, ch0 + i)] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn pooling_window_max_and_relu() {
+        let mut amu = Amu::new(2, 2, true);
+        assert_eq!(amu.push(&[-5, 1]), None);
+        assert_eq!(amu.push(&[3, -1]), None);
+        assert_eq!(amu.push(&[-7, -9]), None);
+        let out = amu.push(&[2, -2]).unwrap();
+        assert_eq!(out, vec![3, 1]); // max over window, negatives → relu'd
+    }
+
+    #[test]
+    fn all_negative_emits_zero() {
+        let mut amu = Amu::new(3, 2, true);
+        for _ in 0..3 {
+            assert!(amu.push(&[-1, -2, -3]).is_none());
+        }
+        assert_eq!(amu.push(&[-4, -5, -6]).unwrap(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn shift_register_resets_between_windows() {
+        let mut amu = Amu::new(1, 1, true); // np=1: emit every push
+        assert_eq!(amu.push(&[100]).unwrap(), vec![100]);
+        assert_eq!(amu.push(&[-100]).unwrap(), vec![0]); // no leak from 100
+    }
+
+    #[test]
+    fn matches_naive_relu_maxpool() {
+        prop::check(100, "streaming AMU == relu∘max", |rng| {
+            let d = 1 + rng.below(8) as usize;
+            let np = 1 + rng.below(3) as usize;
+            let mut amu = Amu::new(d, np, true);
+            let windows = 1 + rng.below(5) as usize;
+            for _ in 0..windows {
+                let vals: Vec<Vec<i8>> =
+                    (0..np * np).map(|_| prop::i8_vec(rng, d)).collect();
+                let mut out = None;
+                for v in &vals {
+                    out = amu.push(v);
+                }
+                let got = out.expect("window must complete");
+                for ch in 0..d {
+                    let want = vals.iter().map(|v| v[ch]).max().unwrap().max(0);
+                    assert_eq!(got[ch], want);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn odg_row_major_addresses() {
+        let odg = Odg {
+            out_w: 4,
+            out_c: 3,
+            base: 100,
+        };
+        assert_eq!(odg.addr(0, 0, 0), 100);
+        assert_eq!(odg.addr(0, 1, 0), 103);
+        assert_eq!(odg.addr(1, 0, 2), 100 + 4 * 3 + 2);
+        let mut buf = vec![0i8; 200];
+        odg.write(&mut buf, 1, 2, 1, &[7, 8]);
+        assert_eq!(buf[odg.addr(1, 2, 1)], 7);
+        assert_eq!(buf[odg.addr(1, 2, 2)], 8);
+    }
+}

@@ -1,0 +1,114 @@
+//! Cycle-accurate simulator of the BinArray accelerator (paper §III–IV).
+//!
+//! This is the environment's substitute for the paper's VHDL RTL on the
+//! Zynq XC7Z045 (see DESIGN.md §Substitutions): every architectural block
+//! is modelled structurally with the RTL's arithmetic, and a cycle counter
+//! follows the paper's timing contract:
+//!
+//! * each PE performs one sign-controlled accumulation per clock cycle —
+//!   streaming one `N_c`-element window through a PA costs `N_c` cc
+//!   (§IV-E paradigm 1: the α-multiplies overlap with accumulation and
+//!   cost latency, not throughput);
+//! * the staggered output serialization adds a `D_arch + PIPE_DEPTH`
+//!   drain at the end of each pass (visible in the Fig. 5 trace and in
+//!   the −1.1‰-class analytical-vs-simulated discrepancy of §V-A3);
+//! * the control unit spends one cycle per instruction (§IV-C: CU does
+//!   not pipeline; STI setup is negligible vs layer processing);
+//! * multi-pass operation per Eqs. 15–17: `⌈M/M_arch⌉` passes for
+//!   high-accuracy mode, `⌈D/(D_arch·N_LSA)⌉` passes when output
+//!   channels exceed the array, input tiling when `D < D_arch·N_SA`.
+//!
+//! Module layout mirrors the block diagram (Figs. 3, 4, 6, 7, 10):
+//! [`pe`] → [`agu`] → [`amu`] → [`sa`] → [`cu`] → [`system`].
+
+pub mod agu;
+pub mod amu;
+pub mod cu;
+pub mod pe;
+pub mod sa;
+pub mod system;
+
+pub use cu::ControlUnit;
+pub use sa::{SaEngine, SimStats};
+pub use system::BinArraySystem;
+
+/// Pipeline registers between PA output, barrel shifter, QS and AMU —
+/// the depth that makes VHDL simulation slightly slower than Eq. 18.
+pub const PIPE_DEPTH: u64 = 4;
+
+/// The three configurable design parameters of BinArray (paper Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArrayConfig {
+    /// Number of parallel systolic arrays (throughput).
+    pub n_sa: usize,
+    /// PEs per PA = output channels in parallel (throughput).
+    pub d_arch: usize,
+    /// PAs per SA = binary tensors in parallel (throughput/accuracy).
+    pub m_arch: usize,
+}
+
+impl ArrayConfig {
+    pub const fn new(n_sa: usize, d_arch: usize, m_arch: usize) -> Self {
+        Self {
+            n_sa,
+            d_arch,
+            m_arch,
+        }
+    }
+
+    /// `BinArray[N_SA, D_arch, M_arch]` display form used by the paper.
+    pub fn label(&self) -> String {
+        format!("[{},{},{}]", self.n_sa, self.d_arch, self.m_arch)
+    }
+
+    /// Logical SAs for a network approximated with `m` levels (Eq. 15):
+    /// `N_LSA = N_SA / ⌈M / M_arch⌉`, saturating at ≥ 1 pass groups.
+    pub fn logical_sas(&self, m: usize) -> f64 {
+        self.n_sa as f64 / (m as f64 / self.m_arch as f64).ceil()
+    }
+
+    /// Number of sequential level-group passes for `m` binary levels.
+    pub fn m_passes(&self, m: usize) -> usize {
+        m.div_ceil(self.m_arch)
+    }
+}
+
+/// Paper configurations used throughout the evaluation section.
+pub const PAPER_CONFIGS: [ArrayConfig; 4] = [
+    ArrayConfig::new(1, 8, 2),
+    ArrayConfig::new(1, 32, 2),
+    ArrayConfig::new(4, 32, 4),
+    ArrayConfig::new(16, 32, 4),
+];
+
+/// BinArray's clock frequency on the XC7Z045-2 (§V-B2).
+pub const CLOCK_HZ: f64 = 400.0e6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_format_matches_paper() {
+        assert_eq!(ArrayConfig::new(1, 32, 2).label(), "[1,32,2]");
+    }
+
+    #[test]
+    fn logical_sas_eq15() {
+        let c = ArrayConfig::new(4, 32, 2);
+        assert_eq!(c.logical_sas(2), 4.0); // M = M_arch → all SAs logical
+        assert_eq!(c.logical_sas(4), 2.0); // M = 2·M_arch → halved
+        assert_eq!(c.logical_sas(6), 4.0 / 3.0);
+        assert_eq!(ArrayConfig::new(1, 8, 2).logical_sas(4), 0.5);
+    }
+
+    #[test]
+    fn m_passes() {
+        let c = ArrayConfig::new(1, 8, 2);
+        assert_eq!(c.m_passes(1), 1);
+        assert_eq!(c.m_passes(2), 1);
+        assert_eq!(c.m_passes(3), 2);
+        assert_eq!(c.m_passes(4), 2);
+        assert_eq!(c.m_passes(6), 3);
+    }
+}

@@ -1,0 +1,322 @@
+//! Processing element and processing array — structural per-clock model
+//! (paper Figs. 3–5).
+//!
+//! This level ticks cycle by cycle, including the one-cc input-forwarding
+//! delay between vertically chained PEs and the serialized DSP output
+//! stream — it is what the `fig5_timing` bench traces and what validates
+//! the aggregated timing model in [`super::sa`].
+
+use crate::fixp;
+
+/// One processing element (Fig. 3): conditional sign change, adder,
+/// accumulation register, output register.
+#[derive(Clone, Debug, Default)]
+pub struct Pe {
+    acc: i32,
+    out: i32,
+}
+
+impl Pe {
+    /// One clock: accumulate `b·x`; if `last` this is the final element of
+    /// the window — the result moves to the output register and the
+    /// accumulator clears, ready for the next window with no idle cycle.
+    #[inline]
+    pub fn tick(&mut self, x: i8, b: i8, last: bool) {
+        // conditional sign change + add (the only arithmetic in a PE)
+        let addend = if b >= 0 { i32::from(x) } else { -i32::from(x) };
+        self.acc += addend;
+        debug_assert!(fixp::fits_mulw(self.acc), "PE accumulator overflow");
+        if last {
+            self.out = self.acc;
+            self.acc = 0;
+        }
+    }
+
+    /// The PE output register (partial result `p_m` of Eq. 9).
+    pub fn output(&self) -> i32 {
+        self.out
+    }
+}
+
+/// A weight buffer row: the `N_c` binary weights of one output channel for
+/// one binary level, stored as packed bits (the BRAM of Fig. 4).
+#[derive(Clone, Debug)]
+pub struct WeightRow {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl WeightRow {
+    pub fn from_signs(signs: &[i8]) -> Self {
+        let mut bits = vec![0u64; signs.len().div_ceil(64)];
+        for (i, &s) in signs.iter().enumerate() {
+            if s >= 0 {
+                bits[i / 64] |= 1 << (i % 64);
+            }
+        }
+        Self {
+            bits,
+            len: signs.len(),
+        }
+    }
+
+    /// Weight bit `i` as ±1.
+    #[inline]
+    pub fn sign(&self, i: usize) -> i8 {
+        debug_assert!(i < self.len);
+        if (self.bits[i / 64] >> (i % 64)) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Storage bits used (for BRAM accounting: N_c bits per channel).
+    pub fn storage_bits(&self) -> usize {
+        self.len
+    }
+}
+
+/// Output event of a PA's serialized DSP stream (Fig. 5): the final
+/// cascade value `o_{d,m}` for channel `d` at clock `cc`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PaOutput {
+    pub cc: u64,
+    pub d: usize,
+    /// `r_{d,m} + o_{d,m-1}` — this PA's cascade output.
+    pub o: i32,
+}
+
+/// A processing array (Fig. 4): `D_arch` vertically chained PEs sharing a
+/// one-cc-delayed input feature stream, a weight BRAM, an α memory, and a
+/// single time-shared DSP multiply-add.
+#[derive(Clone, Debug)]
+pub struct Pa {
+    pes: Vec<Pe>,
+    /// Input delay line: `x_delay[d]` holds the feature PE `d` sees next.
+    x_delay: Vec<Option<(i8, usize, bool)>>,
+    /// Per-channel weight rows for the currently loaded level.
+    weights: Vec<WeightRow>,
+    /// α_q per channel (this PA computes one binary level `m`).
+    alpha: Vec<i8>,
+    clock: u64,
+    /// Completed window outputs awaiting DSP serialization: (ready_cc, d, p).
+    pending: std::collections::VecDeque<(u64, usize, i32)>,
+    /// Next cc at which the shared DSP is free.
+    dsp_free_at: u64,
+}
+
+impl Pa {
+    /// Build a PA with `d_arch` PEs. `weights[d]` is channel `d`'s sign row;
+    /// `alpha[d]` its scaling factor.
+    pub fn new(weights: Vec<WeightRow>, alpha: Vec<i8>) -> Self {
+        let d_arch = weights.len();
+        assert_eq!(alpha.len(), d_arch);
+        Self {
+            pes: vec![Pe::default(); d_arch],
+            x_delay: vec![None; d_arch],
+            weights,
+            alpha,
+            clock: 0,
+            pending: std::collections::VecDeque::new(),
+            dsp_free_at: 0,
+        }
+    }
+
+    pub fn d_arch(&self) -> usize {
+        self.pes.len()
+    }
+
+    /// Feed one input feature `x` with window-relative index `i`
+    /// (`last` marks the window's final element) into PE 0; returns any
+    /// DSP outputs that complete this clock.  `cascade_in(d)` supplies
+    /// `o_{d,m-1}` from the previous PA (bias β_d for the first PA).
+    pub fn tick<F: Fn(usize) -> i32>(
+        &mut self,
+        x: Option<(i8, usize, bool)>,
+        cascade_in: F,
+        out: &mut Vec<PaOutput>,
+    ) {
+        self.clock += 1;
+        // Shift the input down the PE chain: PE d sees the feature d cc
+        // after PE 0 (input forwarding with one-cc delay, §III-A).
+        for d in (1..self.pes.len()).rev() {
+            self.x_delay[d] = self.x_delay[d - 1];
+        }
+        if !self.pes.is_empty() {
+            self.x_delay[0] = x;
+        }
+        for d in 0..self.pes.len() {
+            if let Some((xv, i, last)) = self.x_delay[d] {
+                let b = self.weights[d].sign(i);
+                self.pes[d].tick(xv, b, last);
+                if last {
+                    // p_{d,m} captured; queue for the serialized DSP.
+                    self.pending.push_back((self.clock, d, self.pes[d].output()));
+                }
+            }
+        }
+        // The single DSP retires one multiply-add per clock.
+        if let Some(&(ready, d, p)) = self.pending.front() {
+            let start = self.dsp_free_at.max(ready);
+            if self.clock >= start {
+                self.pending.pop_front();
+                self.dsp_free_at = self.clock + 1;
+                let r = p * i32::from(self.alpha[d]); // r_{d,m} = p_{d,m}·α_{d,m}
+                out.push(PaOutput {
+                    cc: self.clock,
+                    d,
+                    o: r + cascade_in(d), // Eq. 11 cascade
+                });
+            }
+        }
+    }
+
+    /// Drain remaining outputs after the input stream ends.
+    pub fn drain<F: Fn(usize) -> i32>(&mut self, cascade_in: F, out: &mut Vec<PaOutput>) {
+        while !self.pending.is_empty() || self.x_delay.iter().any(Option::is_some) {
+            self.tick(None, &cascade_in, out);
+        }
+    }
+
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Xoshiro256};
+
+    #[test]
+    fn pe_accumulates_and_clears() {
+        let mut pe = Pe::default();
+        pe.tick(10, 1, false);
+        pe.tick(5, -1, false);
+        pe.tick(2, 1, true);
+        assert_eq!(pe.output(), 10 - 5 + 2);
+        // next window starts clean
+        pe.tick(1, 1, true);
+        assert_eq!(pe.output(), 1);
+    }
+
+    #[test]
+    fn weight_row_roundtrip() {
+        prop::check(100, "WeightRow stores signs exactly", |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let signs = prop::sign_vec(rng, n);
+            let row = WeightRow::from_signs(&signs);
+            assert_eq!(row.len(), n);
+            for (i, &s) in signs.iter().enumerate() {
+                assert_eq!(row.sign(i), s);
+            }
+        });
+    }
+
+    /// Drive a full window through a PA and compare against naive math.
+    fn run_window(
+        d_arch: usize,
+        signs: &[Vec<i8>],
+        alpha: &[i8],
+        xs: &[i8],
+        bias: &[i32],
+    ) -> Vec<(usize, i32)> {
+        let rows = signs.iter().map(|s| WeightRow::from_signs(s)).collect();
+        let mut pa = Pa::new(rows, alpha.to_vec());
+        let mut outs = Vec::new();
+        let n = xs.len();
+        for (i, &x) in xs.iter().enumerate() {
+            pa.tick(Some((x, i, i == n - 1)), |d| bias[d], &mut outs);
+        }
+        pa.drain(|d| bias[d], &mut outs);
+        assert_eq!(outs.len(), d_arch);
+        outs.iter().map(|o| (o.d, o.o)).collect()
+    }
+
+    #[test]
+    fn pa_computes_all_channels() {
+        prop::check(60, "PA window == naive dot products", |rng| {
+            let d_arch = 1 + rng.below(8) as usize;
+            let n = 2 + rng.below(40) as usize;
+            let signs: Vec<Vec<i8>> =
+                (0..d_arch).map(|_| prop::sign_vec(rng, n)).collect();
+            let alpha: Vec<i8> = (0..d_arch).map(|_| rng.range_i64(1, 60) as i8).collect();
+            let bias: Vec<i32> = (0..d_arch).map(|_| rng.range_i64(-99, 99) as i32).collect();
+            let xs = prop::i8_vec(rng, n);
+            let outs = run_window(d_arch, &signs, &alpha, &xs, &bias);
+            for (d, o) in outs {
+                let p: i32 = xs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &x)| i32::from(signs[d][i]) * i32::from(x))
+                    .sum();
+                assert_eq!(o, p * i32::from(alpha[d]) + bias[d], "channel {d}");
+            }
+        });
+    }
+
+    #[test]
+    fn pa_outputs_are_staggered_one_cc() {
+        // Fig. 5: channels complete in consecutive cycles (serialized DSP
+        // + one-cc input forwarding).
+        let d_arch = 4;
+        let n = 10;
+        let signs: Vec<Vec<i8>> = (0..d_arch).map(|_| vec![1i8; n]).collect();
+        let rows = signs.iter().map(|s| WeightRow::from_signs(s)).collect();
+        let mut pa = Pa::new(rows, vec![1; d_arch]);
+        let mut outs = Vec::new();
+        for i in 0..n {
+            pa.tick(Some((1, i, i == n - 1)), |_| 0, &mut outs);
+        }
+        pa.drain(|_| 0, &mut outs);
+        let ccs: Vec<u64> = outs.iter().map(|o| o.cc).collect();
+        for w in ccs.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "outputs must be 1 cc apart: {ccs:?}");
+        }
+        // channel order is 0..D_arch
+        let ds: Vec<usize> = outs.iter().map(|o| o.d).collect();
+        assert_eq!(ds, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn back_to_back_windows_no_idle() {
+        // Two consecutive windows of length n ≥ D_arch keep every PE busy;
+        // total clocks ≈ 2n + drain.
+        let d_arch = 2;
+        let n = 6;
+        let signs: Vec<Vec<i8>> = (0..d_arch).map(|_| vec![1i8; n]).collect();
+        let rows: Vec<WeightRow> = signs.iter().map(|s| WeightRow::from_signs(s)).collect();
+        let mut pa = Pa::new(rows, vec![1; d_arch]);
+        let mut outs = Vec::new();
+        let mut rng = Xoshiro256::new(1);
+        let xs1 = prop::i8_vec(&mut rng, n);
+        let xs2 = prop::i8_vec(&mut rng, n);
+        for (i, &x) in xs1.iter().enumerate() {
+            pa.tick(Some((x, i, i == n - 1)), |_| 0, &mut outs);
+        }
+        for (i, &x) in xs2.iter().enumerate() {
+            pa.tick(Some((x, i, i == n - 1)), |_| 0, &mut outs);
+        }
+        pa.drain(|_| 0, &mut outs);
+        assert_eq!(outs.len(), 2 * d_arch);
+        let w1: i32 = xs1.iter().map(|&x| i32::from(x)).sum();
+        let w2: i32 = xs2.iter().map(|&x| i32::from(x)).sum();
+        assert_eq!(outs[0].o, w1);
+        assert_eq!(outs[2].o, w2);
+        // drain cost is bounded by D_arch + DSP serialization
+        assert!(
+            pa.clock() <= (2 * n) as u64 + d_arch as u64 + 2,
+            "clock {} too high",
+            pa.clock()
+        );
+    }
+}

@@ -1,0 +1,397 @@
+//! Systolic-array layer engine (paper §IV-A, Fig. 7).
+//!
+//! Executes whole layers with the RTL's arithmetic (identical to
+//! [`crate::golden`], asserted by tests) while counting clock cycles per
+//! the timing contract in [`super`]:
+//!
+//! * streaming one `N_c`-element window through the PE array costs `N_c`
+//!   cycles — α-multiplies and cascades overlap with accumulation;
+//! * if `N_c < D_arch` the serialized per-PA DSP becomes the bottleneck
+//!   and the window costs `D_arch` cycles (the structural [`super::pe`]
+//!   model exhibits exactly this, and depth-wise MobileNet layers hit it);
+//! * each (channel-pass × level-group) re-streams the input;
+//! * every pass ends with a `D_arch + PIPE_DEPTH` pipeline drain.
+
+use std::ops::Range;
+
+use crate::artifacts::{LayerKind, QuantLayer};
+use crate::fixp;
+use crate::tensor::{FeatureMap, Shape};
+
+use super::agu::Agu;
+use super::amu::{Amu, Odg};
+use super::PIPE_DEPTH;
+
+/// Cycle/occupancy statistics of one simulated unit of work.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Clock cycles consumed.
+    pub cycles: u64,
+    /// Convolution windows (dot products per channel group) processed.
+    pub windows: u64,
+    /// Input features streamed into the PE array.
+    pub features: u64,
+    /// (channel-pass × level-group) passes executed.
+    pub passes: u64,
+    /// PE sign-accumulate operations actually performed (utilization).
+    pub pe_ops: u64,
+    /// DSP multiply-add operations (α scaling) performed.
+    pub dsp_ops: u64,
+}
+
+impl SimStats {
+    pub fn add(&mut self, other: SimStats) {
+        self.cycles += other.cycles;
+        self.windows += other.windows;
+        self.features += other.features;
+        self.passes += other.passes;
+        self.pe_ops += other.pe_ops;
+        self.dsp_ops += other.dsp_ops;
+    }
+
+    /// PE utilization: useful sign-accumulates / (cycles × PEs available).
+    pub fn pe_utilization(&self, d_arch: usize, m_arch: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.pe_ops as f64 / (self.cycles as f64 * (d_arch * m_arch) as f64)
+    }
+}
+
+/// One systolic array's layer-execution engine.
+#[derive(Clone, Copy, Debug)]
+pub struct SaEngine {
+    pub d_arch: usize,
+    pub m_arch: usize,
+}
+
+impl SaEngine {
+    pub fn new(d_arch: usize, m_arch: usize) -> Self {
+        Self { d_arch, m_arch }
+    }
+
+    /// Clock cost of streaming one window: `max(N_c, D_arch)` — the DSP
+    /// serialization bound kicks in for very short windows (§V-A3's
+    /// depth-wise caveat).
+    #[inline]
+    fn window_cost(&self, n_c: usize) -> u64 {
+        n_c.max(self.d_arch) as u64
+    }
+
+    /// Execute one tile of a convolution layer: pooled-output rows
+    /// `pooled_rows` × output channels `d_range`, writing pooled+activated
+    /// results into `out`.  `m_run ≤ layer.m` selects the runtime accuracy
+    /// mode (§IV-D); `seq_m` is the number of *sequential* level-group
+    /// passes this physical SA performs (1 when level groups are spread
+    /// across parallel SAs per Eq. 15, `⌈M/M_arch⌉` on a single SA).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_tile(
+        &self,
+        layer: &QuantLayer,
+        input: &FeatureMap,
+        pooled_rows: Range<usize>,
+        d_range: Range<usize>,
+        m_run: usize,
+        seq_m: u64,
+        out: &mut FeatureMap,
+        stats: &mut SimStats,
+    ) {
+        assert_eq!(layer.kind, LayerKind::Conv);
+        let np = layer.pool.max(1);
+        let conv_shape = input
+            .shape
+            .conv_out(layer.kh, layer.kw, layer.stride, layer.d);
+        let (u_out, v_out) = (conv_shape.h, conv_shape.w);
+        assert!(u_out % np == 0 && v_out % np == 0, "AMU downsampling only");
+        assert_eq!(out.shape.c, layer.d);
+
+        let n_c = layer.n_c();
+        let m_run = m_run.min(layer.m).max(1);
+        let m_groups = seq_m;
+        let d_passes = d_range.len().div_ceil(self.d_arch);
+        let mut patch = Vec::with_capacity(n_c);
+
+        // conv rows covered by this tile of pooled rows
+        let conv_row0 = pooled_rows.start * np;
+        let conv_rows = (pooled_rows.end - pooled_rows.start) * np;
+        if conv_rows == 0 {
+            return;
+        }
+
+        // One AMU per channel pass (the hardware runs passes sequentially;
+        // the host walks windows outermost so each im2col patch is
+        // extracted once and reused across all D/D_arch passes — same
+        // outputs, same cycle accounting, ~20 % less host work).
+        let odg = Odg {
+            out_w: out.shape.w,
+            out_c: out.shape.c,
+            base: 0,
+        };
+        let mut amus: Vec<Amu> = (0..d_passes)
+            .map(|dp| {
+                let d0 = d_range.start + dp * self.d_arch;
+                let d1 = (d0 + self.d_arch).min(d_range.end);
+                Amu::new(d1 - d0, np, layer.relu)
+            })
+            .collect();
+        // AGU walks this tile's conv rows in pooling order.
+        let agu = Agu::new(
+            input.shape.w,
+            input.shape.c,
+            layer.stride,
+            conv_rows,
+            v_out,
+            np,
+            np,
+        );
+        let mut vals = vec![0i8; self.d_arch];
+        for anchor in agu {
+            // stream the window: N_c features through all M_arch PAs.
+            // (anchor.addr is the AGU's add-only address within the tile;
+            // patch() re-derives (y, x) for the host-side copy.)
+            input.patch(
+                (conv_row0 + anchor.u) * layer.stride,
+                anchor.v * layer.stride,
+                layer.kh,
+                layer.kw,
+                &mut patch,
+            );
+            for (dp, amu) in amus.iter_mut().enumerate() {
+                let d0 = d_range.start + dp * self.d_arch;
+                let d1 = (d0 + self.d_arch).min(d_range.end);
+                let chans = d1 - d0;
+                stats.windows += 1;
+                stats.features += n_c as u64;
+                stats.cycles += self.window_cost(n_c) * m_groups;
+                stats.pe_ops += (n_c * chans * m_run) as u64;
+                stats.dsp_ops += (chans * m_run) as u64;
+
+                for (k, d) in (d0..d1).enumerate() {
+                    let acc = crate::golden::binary_dot(layer, d, &patch, m_run);
+                    vals[k] = fixp::qs(acc, layer.shift);
+                }
+                if layer.relu || np > 1 {
+                    if let Some(pooled) = amu.push(&vals[..chans]) {
+                        let py = pooled_rows.start + anchor.u / np;
+                        let px = anchor.v / np;
+                        odg.write(&mut out.data, py, px, d0, &pooled);
+                    }
+                } else {
+                    // no activation, no pooling: direct ODG write
+                    let py = pooled_rows.start + anchor.u;
+                    odg.write(&mut out.data, py, anchor.v, d0, &vals[..chans]);
+                }
+            }
+        }
+        stats.passes += d_passes as u64 * m_groups;
+        stats.cycles += d_passes as u64 * (self.d_arch as u64 + PIPE_DEPTH) * m_groups;
+    }
+
+    /// Execute a dense layer for output neurons `d_range`.  `seq_m` as in
+    /// [`Self::conv_tile`].
+    pub fn dense_tile(
+        &self,
+        layer: &QuantLayer,
+        input: &[i8],
+        d_range: Range<usize>,
+        m_run: usize,
+        seq_m: u64,
+        out: &mut [i8],
+        stats: &mut SimStats,
+    ) {
+        assert_eq!(layer.kind, LayerKind::Dense);
+        let n_c = layer.n_c();
+        assert_eq!(input.len(), n_c);
+        let m_run = m_run.min(layer.m).max(1);
+        let m_groups = seq_m;
+        let d_passes = d_range.len().div_ceil(self.d_arch);
+
+        for dp in 0..d_passes {
+            let d0 = d_range.start + dp * self.d_arch;
+            let d1 = (d0 + self.d_arch).min(d_range.end);
+            stats.windows += 1;
+            stats.features += n_c as u64;
+            stats.cycles += self.window_cost(n_c) * m_groups;
+            stats.pe_ops += (n_c * (d1 - d0) * m_run) as u64;
+            stats.dsp_ops += ((d1 - d0) * m_run) as u64;
+            for d in d0..d1 {
+                let mut v = fixp::qs(
+                    crate::golden::binary_dot(layer, d, input, m_run),
+                    layer.shift,
+                );
+                if layer.relu {
+                    v = v.max(0);
+                }
+                out[d] = v;
+            }
+            stats.passes += m_groups;
+            stats.cycles += (self.d_arch as u64 + PIPE_DEPTH) * m_groups;
+        }
+    }
+
+    /// Sequential level-group passes when this SA handles all of `m_run`
+    /// alone: `⌈⌈m_run/M_arch⌉⌉`.
+    pub fn seq_m(&self, m_run: usize) -> u64 {
+        m_run.max(1).div_ceil(self.m_arch) as u64
+    }
+
+    /// Convenience: run a conv layer without tiling (single SA).
+    pub fn conv_layer(
+        &self,
+        layer: &QuantLayer,
+        input: &FeatureMap,
+        m_run: usize,
+    ) -> (FeatureMap, SimStats) {
+        let np = layer.pool.max(1);
+        let conv = input
+            .shape
+            .conv_out(layer.kh, layer.kw, layer.stride, layer.d);
+        let mut out = FeatureMap::zeros(Shape::new(conv.h / np, conv.w / np, layer.d));
+        let mut stats = SimStats::default();
+        let rows = 0..out.shape.h;
+        self.conv_tile(
+            layer,
+            input,
+            rows,
+            0..layer.d,
+            m_run,
+            self.seq_m(m_run.min(layer.m)),
+            &mut out,
+            &mut stats,
+        );
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden;
+    use crate::isa::compiler::tests_support::cnn_a_quant;
+    use crate::util::{prop, rng::Xoshiro256};
+
+    #[test]
+    fn conv_matches_golden_model() {
+        let mut rng = Xoshiro256::new(1);
+        let net = cnn_a_quant(&mut rng, 2);
+        let layer = &net.layers[0];
+        let input = FeatureMap::from_vec(
+            Shape::new(48, 48, 3),
+            prop::i8_vec(&mut rng, 48 * 48 * 3),
+        );
+        let sa = SaEngine::new(8, 2);
+        let (got, stats) = sa.conv_layer(layer, &input, 2);
+        let conv = golden::conv_layer(layer, &input, 2);
+        let want = golden::relu_maxpool(&conv, 2);
+        assert_eq!(got, want);
+        // Eq. 18 sanity: 42·42·147 feature-stream cycles + drains
+        let want_stream = 42 * 42 * 147u64;
+        assert!(stats.cycles >= want_stream);
+        assert!(stats.cycles < want_stream + 1000, "cycles {}", stats.cycles);
+    }
+
+    #[test]
+    fn multi_channel_pass_matches_golden() {
+        let mut rng = Xoshiro256::new(2);
+        let net = cnn_a_quant(&mut rng, 2);
+        let layer = &net.layers[1]; // 150 channels → 19 passes at D_arch=8
+        let input = FeatureMap::from_vec(
+            Shape::new(21, 21, 5),
+            prop::i8_vec(&mut rng, 21 * 21 * 5),
+        );
+        let sa = SaEngine::new(8, 2);
+        let (got, stats) = sa.conv_layer(layer, &input, 2);
+        let want = golden::relu_maxpool(&golden::conv_layer(layer, &input, 2), 6);
+        assert_eq!(got, want);
+        let d_passes = 150u64.div_ceil(8);
+        assert_eq!(stats.windows, 18 * 18 * d_passes);
+    }
+
+    #[test]
+    fn m_passes_double_cycles() {
+        let mut rng = Xoshiro256::new(3);
+        let net = cnn_a_quant(&mut rng, 4); // M=4 on M_arch=2 → 2 level groups
+        let layer = &net.layers[0];
+        let input = FeatureMap::from_vec(
+            Shape::new(48, 48, 3),
+            prop::i8_vec(&mut rng, 48 * 48 * 3),
+        );
+        let sa = SaEngine::new(8, 2);
+        let (_, s_full) = sa.conv_layer(layer, &input, 4); // high accuracy
+        let (_, s_fast) = sa.conv_layer(layer, &input, 2); // high throughput
+        let stream = 42 * 42 * 147u64;
+        assert!(s_full.cycles >= 2 * stream);
+        assert!(s_fast.cycles < 2 * stream);
+        assert!(
+            s_full.cycles >= 2 * s_fast.cycles - 100,
+            "full {} fast {}",
+            s_full.cycles,
+            s_fast.cycles
+        );
+    }
+
+    #[test]
+    fn dense_matches_golden() {
+        let mut rng = Xoshiro256::new(4);
+        let net = cnn_a_quant(&mut rng, 2);
+        let layer = &net.layers[2];
+        let input = prop::i8_vec(&mut rng, 1350);
+        let sa = SaEngine::new(8, 2);
+        let mut out = vec![0i8; 340];
+        let mut stats = SimStats::default();
+        sa.dense_tile(layer, &input, 0..340, 2, 1, &mut out, &mut stats);
+        let want = golden::dense_layer(layer, &input, 2);
+        assert_eq!(out, want);
+        // 43 channel passes × 1350 features
+        assert_eq!(stats.windows, 340u64.div_ceil(8));
+        assert!(stats.cycles >= 43 * 1350);
+    }
+
+    #[test]
+    fn tiled_conv_equals_untiled() {
+        let mut rng = Xoshiro256::new(5);
+        let net = cnn_a_quant(&mut rng, 2);
+        let layer = &net.layers[0];
+        let input = FeatureMap::from_vec(
+            Shape::new(48, 48, 3),
+            prop::i8_vec(&mut rng, 48 * 48 * 3),
+        );
+        let sa = SaEngine::new(8, 2);
+        let (want, _) = sa.conv_layer(layer, &input, 2);
+        // two tiles: pooled rows 0..10 and 10..21
+        let mut out = FeatureMap::zeros(want.shape);
+        let mut s1 = SimStats::default();
+        let mut s2 = SimStats::default();
+        sa.conv_tile(layer, &input, 0..10, 0..5, 2, 1, &mut out, &mut s1);
+        sa.conv_tile(layer, &input, 10..21, 0..5, 2, 1, &mut out, &mut s2);
+        assert_eq!(out, want);
+        // tiles split the work
+        assert!(s1.cycles < s2.cycles);
+    }
+
+    #[test]
+    fn short_window_hits_dsp_bound() {
+        // N_c < D_arch: the DSP serialization dominates (depth-wise case)
+        let sa = SaEngine::new(32, 2);
+        assert_eq!(sa.window_cost(9), 32);
+        assert_eq!(sa.window_cost(147), 147);
+    }
+
+    #[test]
+    fn utilization_drops_when_channels_underfill() {
+        // CNN-A layer 1 has D=5 on D_arch=32: 15% utilization (paper §V-B3)
+        let mut rng = Xoshiro256::new(6);
+        let net = cnn_a_quant(&mut rng, 2);
+        let layer = &net.layers[0];
+        let input = FeatureMap::from_vec(
+            Shape::new(48, 48, 3),
+            prop::i8_vec(&mut rng, 48 * 48 * 3),
+        );
+        let (_, s8) = SaEngine::new(8, 2).conv_layer(layer, &input, 2);
+        let (_, s32) = SaEngine::new(32, 2).conv_layer(layer, &input, 2);
+        let u8 = s8.pe_utilization(8, 2);
+        let u32 = s32.pe_utilization(32, 2);
+        assert!(u8 > 0.5, "D=5 on 8 PEs should be ~62%: {u8}");
+        assert!((0.10..0.20).contains(&u32), "D=5 on 32 PEs ≈ 15%: {u32}");
+    }
+}

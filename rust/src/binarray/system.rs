@@ -1,0 +1,373 @@
+//! The BinArray system (paper §IV-D, Fig. 10): `N_SA` systolic arrays, a
+//! global feature buffer, the control unit, and the scatter/gather block
+//! that distributes work across arrays.
+//!
+//! Scheduling follows the paper's parallelism model (§IV-E):
+//!
+//! 1. level-group parallelism — `⌈M/M_arch⌉` groups spread over SAs
+//!    (Eq. 15's logical SAs); leftover groups run sequentially;
+//! 2. channel-pass parallelism — `⌈D/D_arch⌉` passes distributed over
+//!    logical SAs (Eq. 17);
+//! 3. input tiling — when channel passes underfill the logical SAs, the
+//!    input is tiled along pooled-output rows (Eq. 16, width/height only,
+//!    never depth — keeps convolutions atomic).
+//!
+//! Layer wall-clock = the maximum cycle count over physical SAs (they run
+//! in parallel), plus the CU's per-instruction cycles.
+
+use anyhow::{bail, Result};
+
+use crate::artifacts::{LayerKind, QuantNetwork};
+use crate::isa::{compile_network, Program};
+use crate::tensor::{FeatureMap, Shape};
+
+use super::cu::{ControlUnit, CuRun};
+use super::sa::{SaEngine, SimStats};
+use super::ArrayConfig;
+
+/// Per-frame execution report.
+#[derive(Clone, Debug, Default)]
+pub struct FrameStats {
+    /// Wall-clock cycles of the frame (CU + max-over-SA layer cycles).
+    pub cycles: u64,
+    /// Per-layer wall cycles.
+    pub layer_cycles: Vec<u64>,
+    /// Aggregated per-SA work statistics (sum over layers).
+    pub sa_stats: Vec<SimStats>,
+    /// CU instruction cycles.
+    pub instr_cycles: u64,
+}
+
+impl FrameStats {
+    /// Seconds at the BinArray clock (400 MHz).
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / super::CLOCK_HZ
+    }
+
+    /// Frames per second at the BinArray clock.
+    pub fn fps(&self) -> f64 {
+        1.0 / self.seconds()
+    }
+}
+
+/// One unit of schedulable work for a layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct WorkUnit {
+    /// Pooled-output row range (conv) — full range for dense.
+    rows: std::ops::Range<usize>,
+    /// Output-channel range.
+    d: std::ops::Range<usize>,
+}
+
+/// The complete accelerator instance.
+pub struct BinArraySystem {
+    pub cfg: ArrayConfig,
+    pub net: QuantNetwork,
+    pub prog: Program,
+    cu: ControlUnit,
+    engine: SaEngine,
+    /// Global/local feature buffer (ping-pong halves per the compiler).
+    fbuf: Vec<i8>,
+    /// Input dims inferred by the compiler.
+    pub input_shape: Shape,
+    /// Runtime accuracy mode: number of binary levels to evaluate
+    /// (`None` = all — high accuracy; `Some(m)` truncates — §IV-D).
+    pub m_run: Option<usize>,
+}
+
+impl BinArraySystem {
+    pub fn new(cfg: ArrayConfig, net: QuantNetwork) -> Result<Self> {
+        if net.layers.is_empty() {
+            bail!("empty network");
+        }
+        let prog = compile_network(&net);
+        let dims = crate::isa::compiler::infer_input_dims(&net);
+        Ok(Self {
+            cfg,
+            engine: SaEngine::new(cfg.d_arch, cfg.m_arch),
+            fbuf: vec![0; prog.fbuf_words],
+            input_shape: Shape::new(dims.1, dims.0, dims.2),
+            prog,
+            net,
+            cu: ControlUnit::new(),
+            m_run: None,
+        })
+    }
+
+    /// Run one frame: load `image` (int8, row-major HWC), execute the CNN
+    /// processing program, return (logits, stats).
+    pub fn run_frame(&mut self, image: &[i8]) -> Result<(Vec<i8>, FrameStats)> {
+        let in_len = self.input_shape.len();
+        if image.len() != in_len {
+            bail!("image len {} != {}", image.len(), in_len);
+        }
+        // DMA: CPU loads the frame into the first layer's input region.
+        let in_base = self.prog.bindings[0].in_base;
+        self.fbuf[in_base..in_base + in_len].copy_from_slice(image);
+
+        let mut stats = FrameStats {
+            sa_stats: vec![SimStats::default(); self.cfg.n_sa],
+            ..Default::default()
+        };
+
+        // Borrow-splitting: the CU callback needs &mut self fields.
+        let net = &self.net;
+        let bindings = &self.prog.bindings;
+        let engine = self.engine;
+        let cfg = self.cfg;
+        let fbuf = &mut self.fbuf;
+        let input_shape = self.input_shape;
+        let m_run_mode = self.m_run;
+        let layer_cycles = &mut stats.layer_cycles;
+        let sa_stats = &mut stats.sa_stats;
+
+        let cu_run: CuRun = self.cu.run_frame(&self.prog, |lr| {
+            let li = lr.layer_id as usize;
+            let layer = &net.layers[li];
+            let b = &bindings[li];
+            let m_run = m_run_mode.unwrap_or(layer.m).min(layer.m).max(1);
+
+            let wall = match layer.kind {
+                LayerKind::Conv => {
+                    let in_shape = if li == 0 {
+                        input_shape
+                    } else {
+                        Shape::new(b.in_dims.1, b.in_dims.0, b.in_dims.2)
+                    };
+                    let in_len = in_shape.len();
+                    let input = FeatureMap::from_vec(
+                        in_shape,
+                        fbuf[b.in_base..b.in_base + in_len].to_vec(),
+                    );
+                    let out_shape = Shape::new(b.out_dims.1, b.out_dims.0, b.out_dims.2);
+                    let mut out = FeatureMap::zeros(out_shape);
+                    let (assignments, seq_m) =
+                        Self::schedule_static(cfg, layer.d, out_shape.h, m_run);
+                    let mut wall = 0u64;
+                    for (g, units) in assignments.iter().enumerate() {
+                        let mut s = SimStats::default();
+                        for u in units {
+                            engine.conv_tile(
+                                layer,
+                                &input,
+                                u.rows.clone(),
+                                u.d.clone(),
+                                m_run,
+                                seq_m,
+                                &mut out,
+                                &mut s,
+                            );
+                        }
+                        // group g occupies physical SAs [g*gsz, ...); charge
+                        // the group's work to its first physical SA.
+                        sa_stats[g % cfg.n_sa].add(s);
+                        wall = wall.max(s.cycles);
+                    }
+                    let out_len = out_shape.len();
+                    fbuf[b.out_base..b.out_base + out_len].copy_from_slice(&out.data);
+                    wall
+                }
+                LayerKind::Dense => {
+                    let n_in = layer.n_c();
+                    let input = fbuf[b.in_base..b.in_base + n_in].to_vec();
+                    let mut out = vec![0i8; layer.d];
+                    let (assignments, seq_m) = Self::schedule_static(cfg, layer.d, 1, m_run);
+                    let mut wall = 0u64;
+                    for (g, units) in assignments.iter().enumerate() {
+                        let mut s = SimStats::default();
+                        for u in units {
+                            engine.dense_tile(
+                                layer,
+                                &input,
+                                u.d.clone(),
+                                m_run,
+                                seq_m,
+                                &mut out,
+                                &mut s,
+                            );
+                        }
+                        sa_stats[g % cfg.n_sa].add(s);
+                        wall = wall.max(s.cycles);
+                    }
+                    fbuf[b.out_base..b.out_base + layer.d].copy_from_slice(&out);
+                    wall
+                }
+            };
+            layer_cycles.push(wall);
+            wall
+        });
+
+        stats.instr_cycles = cu_run.instr_cycles;
+        stats.cycles = cu_run.total_cycles();
+
+        // Logits live at the last layer's output region.
+        let last = bindings.last().unwrap();
+        let k = net.layers.last().unwrap().d;
+        let logits = self.fbuf[last.out_base..last.out_base + k].to_vec();
+        Ok((logits, stats))
+    }
+
+    /// `schedule` without `&self` (for use inside the CU closure).
+    fn schedule_static(
+        cfg: ArrayConfig,
+        d_out: usize,
+        pooled_rows: usize,
+        m_run: usize,
+    ) -> (Vec<Vec<WorkUnit>>, u64) {
+        // mirrors `schedule`; kept static for borrow reasons
+        let tmp = BinArraySystemScheduler { cfg };
+        tmp.schedule(d_out, pooled_rows, m_run)
+    }
+
+    /// Switch runtime accuracy mode (§IV-D): `None` = high accuracy (all
+    /// M levels), `Some(m)` = evaluate only the first `m` levels.
+    pub fn set_mode(&mut self, m_run: Option<usize>) {
+        self.m_run = m_run;
+    }
+}
+
+/// Scheduling policy, factored out so it is callable without borrowing the
+/// whole system (and unit-testable in isolation).
+struct BinArraySystemScheduler {
+    cfg: ArrayConfig,
+}
+
+impl BinArraySystemScheduler {
+    fn schedule(&self, d_out: usize, pooled_rows: usize, m_run: usize) -> (Vec<Vec<WorkUnit>>, u64) {
+        let m_groups = m_run.div_ceil(self.cfg.m_arch);
+        let n_lsa = (self.cfg.n_sa / m_groups).max(1);
+        let seq_m = m_groups.div_ceil(self.cfg.n_sa.min(m_groups)) as u64;
+
+        let d_passes = d_out.div_ceil(self.cfg.d_arch);
+        let mut n_t = (n_lsa / d_passes).max(1);
+        n_t = n_t.min(pooled_rows.max(1));
+        while n_t > 1 && pooled_rows / n_t < 2 {
+            n_t -= 1;
+        }
+
+        let mut assignments: Vec<Vec<WorkUnit>> = vec![Vec::new(); n_lsa];
+        let row_tiles = crate::tensor::tile_ranges(pooled_rows.max(1), n_t, 0);
+        let mut lsa = 0usize;
+        for (r0, r1) in row_tiles {
+            for dp in 0..d_passes {
+                let d0 = dp * self.cfg.d_arch;
+                let d1 = (d0 + self.cfg.d_arch).min(d_out);
+                assignments[lsa].push(WorkUnit {
+                    rows: r0..r1,
+                    d: d0..d1,
+                });
+                lsa = (lsa + 1) % n_lsa;
+            }
+        }
+        (assignments, seq_m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden;
+    use crate::isa::compiler::tests_support::cnn_a_quant;
+    use crate::util::{prop, rng::Xoshiro256};
+
+    fn image(rng: &mut Xoshiro256) -> Vec<i8> {
+        prop::i8_vec(rng, 48 * 48 * 3)
+    }
+
+    #[test]
+    fn frame_matches_golden_model() {
+        let mut rng = Xoshiro256::new(1);
+        let net = cnn_a_quant(&mut rng, 2);
+        let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), net.clone()).unwrap();
+        for _ in 0..3 {
+            let img = image(&mut rng);
+            let (logits, _) = sys.run_frame(&img).unwrap();
+            let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+            assert_eq!(logits, want);
+        }
+    }
+
+    #[test]
+    fn all_paper_configs_same_outputs() {
+        // Outputs must be invariant across [N_SA, D_arch, M_arch].
+        let mut rng = Xoshiro256::new(2);
+        let net = cnn_a_quant(&mut rng, 2);
+        let img = image(&mut rng);
+        let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+        for cfg in super::super::PAPER_CONFIGS {
+            let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+            let (logits, _) = sys.run_frame(&img).unwrap();
+            assert_eq!(logits, want, "config {}", cfg.label());
+        }
+    }
+
+    #[test]
+    fn bigger_arrays_are_faster() {
+        let mut rng = Xoshiro256::new(3);
+        let net = cnn_a_quant(&mut rng, 2);
+        let img = image(&mut rng);
+        let mut cycles = Vec::new();
+        for cfg in [
+            ArrayConfig::new(1, 8, 2),
+            ArrayConfig::new(1, 32, 2),
+            ArrayConfig::new(4, 32, 4),
+        ] {
+            let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+            let (_, stats) = sys.run_frame(&img).unwrap();
+            cycles.push(stats.cycles);
+        }
+        assert!(cycles[0] > cycles[1], "{cycles:?}");
+        assert!(cycles[1] >= cycles[2], "{cycles:?}");
+    }
+
+    #[test]
+    fn mode_switch_trades_cycles_for_levels() {
+        // M=4 net on M_arch=2 hardware: high-accuracy (2 passes) vs
+        // high-throughput (1 pass) — §IV-D.
+        let mut rng = Xoshiro256::new(4);
+        let net = cnn_a_quant(&mut rng, 4);
+        let img = image(&mut rng);
+        let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), net.clone()).unwrap();
+        let (logits_full, s_full) = sys.run_frame(&img).unwrap();
+        sys.set_mode(Some(2));
+        let (logits_fast, s_fast) = sys.run_frame(&img).unwrap();
+        assert!(s_full.cycles > s_fast.cycles * 3 / 2);
+        // and the fast mode equals golden with m_run=2
+        let want = golden::forward(&net, &img, Shape::new(48, 48, 3), Some(2));
+        assert_eq!(logits_fast, want);
+        let want_full = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+        assert_eq!(logits_full, want_full);
+    }
+
+    #[test]
+    fn frame_stats_accounting() {
+        let mut rng = Xoshiro256::new(5);
+        let net = cnn_a_quant(&mut rng, 2);
+        let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), net).unwrap();
+        let (_, stats) = sys.run_frame(&image(&mut rng)).unwrap();
+        assert_eq!(stats.layer_cycles.len(), 5);
+        let sum: u64 = stats.layer_cycles.iter().sum();
+        assert_eq!(stats.cycles, sum + stats.instr_cycles);
+        assert!(stats.fps() > 0.0);
+        // CNN-A at [1,8,2] should land in the Eq.-18 ballpark (~0.8 M cc)
+        assert!(
+            (700_000..1_100_000).contains(&stats.cycles),
+            "cycles {}",
+            stats.cycles
+        );
+    }
+
+    #[test]
+    fn multi_sa_tiling_preserves_outputs() {
+        let mut rng = Xoshiro256::new(6);
+        let net = cnn_a_quant(&mut rng, 2);
+        let img = image(&mut rng);
+        let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+        // N_SA=16 with D_arch=8 → layer 0 (D=5) tiles across many SAs
+        let mut sys = BinArraySystem::new(ArrayConfig::new(16, 8, 2), net).unwrap();
+        let (logits, stats) = sys.run_frame(&img).unwrap();
+        assert_eq!(logits, want);
+        // tiling must cut layer-0 wall cycles vs a single SA
+        assert!(stats.layer_cycles[0] < 42 * 42 * 147 / 2);
+    }
+}

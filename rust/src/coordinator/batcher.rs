@@ -1,0 +1,213 @@
+//! Dynamic batcher: max-batch-size / max-delay admission, one lane per
+//! accuracy mode.
+//!
+//! Mirrors the vLLM-style continuous-batching idea scaled to this system:
+//! the accelerator processes one frame at a time, so a "batch" is a run
+//! of frames executed back-to-back without re-triggering the host — the
+//! ping-pong feature buffer (§IV-D) makes consecutive frames free of DMA
+//! stalls, which is exactly what batching buys here.  Requests of the
+//! same [`Mode`] are grouped so the accelerator doesn't thrash its
+//! `m_run` configuration between frames.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::{Mode, Request};
+
+/// Admission policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum frames per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch is cut.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_delay: Duration::from_millis(5),
+        }
+    }
+}
+
+/// A cut batch, ready for a worker.
+#[derive(Debug)]
+pub struct Batch {
+    pub mode: Mode,
+    pub requests: Vec<Request>,
+}
+
+/// Two-lane (per-mode) FIFO batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    lanes: [VecDeque<Request>; 2],
+}
+
+fn lane(mode: Mode) -> usize {
+    match mode {
+        Mode::HighAccuracy => 0,
+        Mode::HighThroughput => 1,
+    }
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            lanes: [VecDeque::new(), VecDeque::new()],
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.lanes[lane(req.mode)].push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+
+    /// Cut the next batch if the policy allows: a lane is ripe when it has
+    /// `max_batch` requests or its oldest request has waited `max_delay`.
+    /// The lane with the older head wins (FIFO fairness across modes).
+    pub fn cut(&mut self, now: Instant) -> Option<Batch> {
+        let ripe = |q: &VecDeque<Request>| -> bool {
+            q.len() >= self.policy.max_batch
+                || q.front()
+                    .map(|r| now.duration_since(r.submitted) >= self.policy.max_delay)
+                    .unwrap_or(false)
+        };
+        let head_age = |q: &VecDeque<Request>| q.front().map(|r| r.submitted);
+
+        let mut pick: Option<usize> = None;
+        for i in 0..2 {
+            if ripe(&self.lanes[i]) {
+                pick = match pick {
+                    None => Some(i),
+                    Some(j) => {
+                        // older head first
+                        if head_age(&self.lanes[i]) < head_age(&self.lanes[j]) {
+                            Some(i)
+                        } else {
+                            Some(j)
+                        }
+                    }
+                };
+            }
+        }
+        let i = pick?;
+        let n = self.lanes[i].len().min(self.policy.max_batch);
+        let requests: Vec<Request> = self.lanes[i].drain(..n).collect();
+        let mode = requests[0].mode;
+        Some(Batch { mode, requests })
+    }
+
+    /// Cut whatever is left (drain at shutdown).
+    pub fn flush(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for i in 0..2 {
+            while !self.lanes[i].is_empty() {
+                let n = self.lanes[i].len().min(self.policy.max_batch);
+                let requests: Vec<Request> = self.lanes[i].drain(..n).collect();
+                out.push(Batch {
+                    mode: requests[0].mode,
+                    requests,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, mode: Mode, at: Instant) -> Request {
+        Request {
+            id,
+            image: vec![],
+            mode,
+            submitted: at,
+        }
+    }
+
+    #[test]
+    fn cuts_on_max_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_delay: Duration::from_secs(100),
+        });
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, Mode::HighAccuracy, t0));
+        }
+        let batch = b.cut(t0).expect("3 requests is a full batch");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.requests[0].id, 0);
+        assert!(b.cut(t0).is_none(), "2 leftovers, not ripe yet");
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn cuts_on_max_delay() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_millis(10),
+        });
+        let t0 = Instant::now();
+        b.push(req(1, Mode::HighThroughput, t0));
+        assert!(b.cut(t0).is_none());
+        let batch = b.cut(t0 + Duration::from_millis(11)).expect("aged out");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.mode, Mode::HighThroughput);
+    }
+
+    #[test]
+    fn modes_never_mix() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, Mode::HighAccuracy, t0));
+        b.push(req(2, Mode::HighThroughput, t0));
+        b.push(req(3, Mode::HighAccuracy, t0));
+        let mut seen = Vec::new();
+        while let Some(batch) = b.cut(t0) {
+            assert!(batch.requests.iter().all(|r| r.mode == batch.mode));
+            seen.push(batch.requests.len());
+        }
+        assert_eq!(seen.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn fifo_across_lanes_oldest_head_first() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, Mode::HighThroughput, t0));
+        b.push(req(2, Mode::HighAccuracy, t0 + Duration::from_millis(1)));
+        let first = b.cut(t0 + Duration::from_secs(1)).unwrap();
+        assert_eq!(first.requests[0].id, 1, "older head must cut first");
+    }
+
+    #[test]
+    fn flush_drains_everything() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_secs(100),
+        });
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, Mode::HighAccuracy, t0));
+        }
+        let batches = b.flush();
+        assert_eq!(batches.len(), 3); // 2 + 2 + 1
+        assert_eq!(b.pending(), 0);
+    }
+}

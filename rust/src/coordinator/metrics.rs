@@ -1,0 +1,191 @@
+//! Serving metrics: latency distributions and dual-clock throughput.
+//!
+//! Two clocks matter in this system: the *host* wall clock (how fast the
+//! simulator + coordinator actually run) and the *simulated accelerator*
+//! clock (cycles × 400 MHz — the number the paper's Table III reports).
+//! Both are tracked so the end-to-end example can report "simulated
+//! BinArray fps" next to "simulation wall fps".
+
+use std::time::Duration;
+
+/// Streaming latency statistics (exact percentiles from a sorted buffer —
+/// request counts here are small enough that a full buffer is fine).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        Duration::from_micros(v[idx.min(v.len() - 1)])
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(
+            self.samples_us.iter().sum::<u64>() / self.samples_us.len() as u64,
+        )
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub latency: LatencyStats,
+    /// Queue wait portion of latency.
+    pub queue_wait: LatencyStats,
+    /// Requests completed.
+    pub completed: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Total simulated accelerator cycles.
+    pub sim_cycles: u64,
+    /// Total host wall time spent inside the simulator.
+    pub sim_wall: Duration,
+    /// Correct top-1 predictions (when labels are known).
+    pub correct: u64,
+    /// Requests with labels.
+    pub labelled: u64,
+}
+
+impl Metrics {
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latency
+            .samples_us
+            .extend_from_slice(&other.latency.samples_us);
+        self.queue_wait
+            .samples_us
+            .extend_from_slice(&other.queue_wait.samples_us);
+        self.completed += other.completed;
+        self.batches += other.batches;
+        self.sim_cycles += other.sim_cycles;
+        self.sim_wall += other.sim_wall;
+        self.correct += other.correct;
+        self.labelled += other.labelled;
+    }
+
+    /// Simulated-accelerator throughput (frames / simulated second at
+    /// 400 MHz) — comparable to the paper's Table III.
+    pub fn simulated_fps(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 * crate::binarray::CLOCK_HZ / self.sim_cycles as f64
+    }
+
+    /// Host-side throughput of the simulation (frames / wall second).
+    pub fn wall_fps(&self) -> f64 {
+        let s = self.sim_wall.as_secs_f64();
+        if s == 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / s
+    }
+
+    pub fn accuracy(&self) -> Option<f64> {
+        (self.labelled > 0).then(|| self.correct as f64 / self.labelled as f64)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.batches as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} batches={} (avg {:.1}/batch) | sim {:.1} fps @400MHz | wall {:.1} fps | p50 {:?} p99 {:?}{}",
+            self.completed,
+            self.batches,
+            self.mean_batch(),
+            self.simulated_fps(),
+            self.wall_fps(),
+            self.latency.percentile(50.0),
+            self.latency.percentile(99.0),
+            match self.accuracy() {
+                Some(a) => format!(" | acc {:.2}%", 100.0 * a),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100u64 {
+            l.record(Duration::from_micros(i));
+        }
+        assert!(l.percentile(50.0) <= l.percentile(90.0));
+        assert!(l.percentile(90.0) <= l.percentile(99.0));
+        assert_eq!(l.percentile(0.0), Duration::from_micros(1));
+        assert_eq!(l.percentile(100.0), Duration::from_micros(100));
+        assert_eq!(l.mean(), Duration::from_micros(50));
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let l = LatencyStats::default();
+        assert_eq!(l.percentile(99.0), Duration::ZERO);
+        assert_eq!(l.mean(), Duration::ZERO);
+        let m = Metrics::default();
+        assert_eq!(m.simulated_fps(), 0.0);
+        assert_eq!(m.wall_fps(), 0.0);
+        assert!(m.accuracy().is_none());
+    }
+
+    #[test]
+    fn simulated_fps_uses_400mhz() {
+        let m = Metrics {
+            completed: 10,
+            sim_cycles: 4_000_000, // 10 frames in 4 M cc → 1 k fps
+            ..Default::default()
+        };
+        assert!((m.simulated_fps() - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics {
+            completed: 2,
+            batches: 1,
+            sim_cycles: 100,
+            ..Default::default()
+        };
+        let b = Metrics {
+            completed: 3,
+            batches: 2,
+            sim_cycles: 200,
+            correct: 2,
+            labelled: 3,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.completed, 5);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.sim_cycles, 300);
+        assert_eq!(a.accuracy(), Some(2.0 / 3.0));
+    }
+}

@@ -1,0 +1,70 @@
+//! Serving coordinator — the CPU ("PS") side of the heterogeneous system
+//! (paper §IV-D) grown into a production-style request path.
+//!
+//! The paper's Zynq integration has the CPU load frames into the global
+//! feature buffer through DMA, trigger the accelerator's HLT loop, and
+//! collect results (ping-pong buffering overlaps acquisition with
+//! inference).  This module is that CPU role as a serving stack:
+//!
+//! * [`batcher`] — dynamic batching with a max-batch / max-delay policy,
+//!   one queue per accuracy mode;
+//! * [`server`] — a worker pool where each worker owns one simulated
+//!   BinArray instance (one card), pulls batches, and runs frames
+//!   back-to-back exactly like the ping-pong DMA pipeline;
+//! * [`metrics`] — latency/throughput accounting (wall-clock of the
+//!   simulator *and* simulated 400 MHz accelerator time).
+//!
+//! Runtime accuracy/throughput switching (§IV-D): every request carries a
+//! [`Mode`]; the worker flips the simulated accelerator's `m_run` between
+//! batches — the same hardware serves both modes.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use metrics::{LatencyStats, Metrics};
+pub use server::{Coordinator, CoordinatorConfig, Reply};
+
+/// Runtime accuracy mode of a request (paper §IV-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Evaluate all M binary levels (multiple passes if M > M_arch).
+    HighAccuracy,
+    /// Evaluate only the first M_arch levels in a single pass.
+    HighThroughput,
+}
+
+impl Mode {
+    /// The `m_run` this mode requests on hardware with `m_arch` columns,
+    /// for a network approximated with `m` levels.
+    pub fn m_run(&self, m: usize, m_arch: usize) -> usize {
+        match self {
+            Mode::HighAccuracy => m,
+            Mode::HighThroughput => m_arch.min(m),
+        }
+    }
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// int8 image, row-major HWC, at the network's input binary point.
+    pub image: Vec<i8>,
+    pub mode: Mode,
+    pub submitted: std::time::Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_m_run() {
+        assert_eq!(Mode::HighAccuracy.m_run(4, 2), 4);
+        assert_eq!(Mode::HighThroughput.m_run(4, 2), 2);
+        assert_eq!(Mode::HighThroughput.m_run(2, 4), 2);
+        assert_eq!(Mode::HighAccuracy.m_run(2, 2), 2);
+    }
+}

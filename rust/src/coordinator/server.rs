@@ -1,0 +1,366 @@
+//! The coordinator proper: router thread + worker pool over simulated
+//! BinArray instances.
+//!
+//! Topology (one process, std threads — the request path has no Python
+//! and no async runtime dependency):
+//!
+//! ```text
+//!   submit() ──mpsc──▶ router thread ──(Batcher)──▶ worker queue ─┬▶ worker 0 (BinArraySystem)
+//!                                                                 ├▶ worker 1 (BinArraySystem)
+//!                                                                 └▶ ...
+//!   replies ◀───────────── per-request mpsc channels ◀────────────┘
+//! ```
+//!
+//! Each worker owns a full simulated accelerator (its own weight BRAM and
+//! feature buffers — one "card").  Mode switches (§IV-D) happen per batch
+//! by flipping the card's `m_run`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::artifacts::QuantNetwork;
+use crate::binarray::{ArrayConfig, BinArraySystem};
+use crate::golden;
+
+use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::{Mode, Request};
+
+/// A completed inference.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub id: u64,
+    pub logits: Vec<i8>,
+    pub class: usize,
+    /// Simulated accelerator cycles spent on this frame.
+    pub cycles: u64,
+    /// End-to-end host latency (submit → reply).
+    pub latency: Duration,
+    pub mode: Mode,
+}
+
+/// Coordinator construction parameters.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub array: ArrayConfig,
+    /// Number of worker cards (each a full BinArray instance).
+    pub workers: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 1,
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+enum RouterMsg {
+    Submit(Request, Sender<Reply>),
+    Shutdown,
+}
+
+enum WorkerMsg {
+    Run(Batch, Vec<Sender<Reply>>),
+    Shutdown,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    router_tx: Sender<RouterMsg>,
+    router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<Metrics>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Coordinator {
+    /// Spin up the router and `cfg.workers` accelerator workers.
+    pub fn start(cfg: CoordinatorConfig, net: QuantNetwork) -> Result<Self> {
+        let (router_tx, router_rx) = channel::<RouterMsg>();
+        let (work_tx, work_rx) = channel::<WorkerMsg>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let rx = Arc::clone(&work_rx);
+            let sys = BinArraySystem::new(cfg.array, net.clone())?;
+            let global = Arc::clone(&metrics);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("binarray-worker-{w}"))
+                    .spawn(move || worker_loop(sys, rx, global))?,
+            );
+        }
+
+        let policy = cfg.policy;
+        let n_workers = cfg.workers;
+        let router = std::thread::Builder::new()
+            .name("binarray-router".into())
+            .spawn(move || router_loop(router_rx, work_tx, policy, n_workers))?;
+
+        Ok(Self {
+            router_tx,
+            router: Some(router),
+            workers,
+            next_id: AtomicU64::new(0),
+            metrics,
+        })
+    }
+
+    /// Submit a request; returns a receiver for the reply.
+    pub fn submit(&self, image: Vec<i8>, mode: Mode) -> Receiver<Reply> {
+        let (tx, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            mode,
+            submitted: Instant::now(),
+        };
+        // If the router is gone the receiver will simply yield RecvError.
+        let _ = self.router_tx.send(RouterMsg::Submit(req, tx));
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
+        Ok(self.submit(image, mode).recv()?)
+    }
+
+    /// Drain and stop all threads, returning the final metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.router_tx.send(RouterMsg::Shutdown);
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        let mut total = Metrics::default();
+        for w in self.workers.drain(..) {
+            if let Ok(m) = w.join() {
+                total.merge(&m);
+            }
+        }
+        total
+    }
+}
+
+fn router_loop(
+    rx: Receiver<RouterMsg>,
+    work_tx: Sender<WorkerMsg>,
+    policy: BatchPolicy,
+    n_workers: usize,
+) {
+    let mut batcher = Batcher::new(policy);
+    let mut reply_txs: std::collections::HashMap<u64, Sender<Reply>> =
+        std::collections::HashMap::new();
+    loop {
+        // Deadline-driven wait: block indefinitely when idle; otherwise
+        // sleep exactly until the oldest request's max_delay expires.
+        // (A fixed polling tick burns the core the workers need — it cost
+        // ~20 % end-to-end on a single-core host; EXPERIMENTS.md §Perf.)
+        let msg = if batcher.pending() == 0 {
+            rx.recv().map_err(|_| std::sync::mpsc::RecvTimeoutError::Disconnected)
+        } else {
+            rx.recv_timeout(policy.max_delay.min(Duration::from_millis(50)))
+        };
+        match msg {
+            Ok(RouterMsg::Submit(req, tx)) => {
+                reply_txs.insert(req.id, tx);
+                batcher.push(req);
+            }
+            Ok(RouterMsg::Shutdown) => {
+                for batch in batcher.flush() {
+                    dispatch(&work_tx, batch, &mut reply_txs);
+                }
+                for _ in 0..n_workers {
+                    let _ = work_tx.send(WorkerMsg::Shutdown);
+                }
+                return;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                for batch in batcher.flush() {
+                    dispatch(&work_tx, batch, &mut reply_txs);
+                }
+                for _ in 0..n_workers {
+                    let _ = work_tx.send(WorkerMsg::Shutdown);
+                }
+                return;
+            }
+        }
+        let now = Instant::now();
+        while let Some(batch) = batcher.cut(now) {
+            dispatch(&work_tx, batch, &mut reply_txs);
+        }
+    }
+}
+
+fn dispatch(
+    work_tx: &Sender<WorkerMsg>,
+    batch: Batch,
+    reply_txs: &mut std::collections::HashMap<u64, Sender<Reply>>,
+) {
+    let txs: Vec<Sender<Reply>> = batch
+        .requests
+        .iter()
+        .map(|r| reply_txs.remove(&r.id).expect("reply channel registered"))
+        .collect();
+    let _ = work_tx.send(WorkerMsg::Run(batch, txs));
+}
+
+fn worker_loop(
+    mut sys: BinArraySystem,
+    rx: Arc<Mutex<Receiver<WorkerMsg>>>,
+    global: Arc<Mutex<Metrics>>,
+) -> Metrics {
+    let mut local = Metrics::default();
+    let max_m = sys.net.max_m();
+    let m_arch = sys.cfg.m_arch;
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("worker rx poisoned");
+            guard.recv()
+        };
+        let Ok(msg) = msg else { break };
+        match msg {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Run(batch, txs) => {
+                // §IV-D: one mode switch per batch, not per frame.
+                let m_run = batch.mode.m_run(max_m, m_arch);
+                sys.set_mode(Some(m_run));
+                let mut delta = Metrics::default();
+                delta.batches += 1;
+                for (req, tx) in batch.requests.into_iter().zip(txs) {
+                    let t0 = Instant::now();
+                    let (logits, stats) =
+                        sys.run_frame(&req.image).expect("frame failed");
+                    let sim_wall = t0.elapsed();
+                    let latency = req.submitted.elapsed();
+                    delta.completed += 1;
+                    delta.sim_cycles += stats.cycles;
+                    delta.sim_wall += sim_wall;
+                    delta.latency.record(latency);
+                    delta
+                        .queue_wait
+                        .record(latency.saturating_sub(sim_wall));
+                    let reply = Reply {
+                        id: req.id,
+                        class: golden::argmax(&logits),
+                        logits,
+                        cycles: stats.cycles,
+                        latency,
+                        mode: req.mode,
+                    };
+                    let _ = tx.send(reply);
+                }
+                local.merge(&delta);
+                if let Ok(mut g) = global.lock() {
+                    g.merge(&delta); // live view across all workers
+                }
+            }
+        }
+    }
+    local
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::compiler::tests_support::cnn_a_quant;
+    use crate::tensor::Shape;
+    use crate::util::{prop, rng::Xoshiro256};
+
+    fn quick_cfg(workers: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+            },
+        }
+    }
+
+    #[test]
+    fn serves_and_matches_golden() {
+        let mut rng = Xoshiro256::new(1);
+        let net = cnn_a_quant(&mut rng, 2);
+        let coord = Coordinator::start(quick_cfg(1), net.clone()).unwrap();
+        let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
+        let reply = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
+        let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+        assert_eq!(reply.logits, want);
+        assert_eq!(reply.class, golden::argmax(&want));
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let mut rng = Xoshiro256::new(2);
+        let net = cnn_a_quant(&mut rng, 2);
+        let coord = Coordinator::start(quick_cfg(2), net).unwrap();
+        let rxs: Vec<_> = (0..12)
+            .map(|_| {
+                coord.submit(prop::i8_vec(&mut rng, 48 * 48 * 3), Mode::HighAccuracy)
+            })
+            .collect();
+        let mut ids = Vec::new();
+        for rx in rxs {
+            ids.push(rx.recv().unwrap().id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 12);
+        assert!(m.batches >= 3, "12 reqs / max_batch 4 ⇒ ≥3 batches");
+    }
+
+    #[test]
+    fn mode_switch_serves_both_modes() {
+        let mut rng = Xoshiro256::new(3);
+        let net = cnn_a_quant(&mut rng, 4); // M=4 on M_arch=2
+        let coord = Coordinator::start(quick_cfg(1), net.clone()).unwrap();
+        let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
+        let fast = coord.infer(img.clone(), Mode::HighThroughput).unwrap();
+        let slow = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
+        assert!(slow.cycles > fast.cycles * 3 / 2, "{} vs {}", slow.cycles, fast.cycles);
+        let want_fast = golden::forward(&net, &img, Shape::new(48, 48, 3), Some(2));
+        assert_eq!(fast.logits, want_fast);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let mut rng = Xoshiro256::new(4);
+        let net = cnn_a_quant(&mut rng, 2);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                policy: BatchPolicy {
+                    max_batch: 64,
+                    max_delay: Duration::from_secs(60), // never ripe on its own
+                },
+                ..quick_cfg(1)
+            },
+            net,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..3)
+            .map(|_| coord.submit(prop::i8_vec(&mut rng, 48 * 48 * 3), Mode::HighAccuracy))
+            .collect();
+        std::thread::sleep(Duration::from_millis(5));
+        let m = coord.shutdown(); // flush must run the stragglers
+        assert_eq!(m.completed, 3);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Synthetic traffic-sign workload generator (Rust side).
+//!
+//! Mirrors the *recipe* of `python/compile/data.py` (43 classes keyed by
+//! shape × hue × glyph, randomized pose/brightness/noise) with the crate's
+//! own PRNG.  The exact training/calibration images cross the language
+//! boundary via `calib.bin`; this generator provides unbounded extra load
+//! for the serving examples and benchmarks.
+
+use crate::tensor::{FeatureMap, Shape};
+use crate::util::rng::Xoshiro256;
+
+pub const NUM_CLASSES: usize = 43;
+pub const IMG: usize = 48;
+
+const SHAPES: usize = 4;
+const GLYPHS: usize = 6;
+
+/// Per-class style (shape, hue, glyph) — deterministic, same table as the
+/// Python generator.
+pub fn class_style(cls: usize) -> (usize, f32, usize) {
+    let shape = cls % SHAPES;
+    let glyph = (cls / SHAPES) % GLYPHS;
+    let hue = ((cls as f64 * 0.618_033_988_7) % 1.0) as f32;
+    (shape, hue, glyph)
+}
+
+fn hsv_to_rgb(h: f32, s: f32, v: f32) -> [f32; 3] {
+    let i = ((h * 6.0) as usize) % 6;
+    let f = h * 6.0 - (h * 6.0).floor();
+    let (p, q, t) = (v * (1.0 - s), v * (1.0 - f * s), v * (1.0 - (1.0 - f) * s));
+    match i {
+        0 => [v, t, p],
+        1 => [q, v, p],
+        2 => [p, v, t],
+        3 => [p, q, v],
+        4 => [t, p, v],
+        _ => [v, p, q],
+    }
+}
+
+fn shape_mask(shape: usize, yy: f32, xx: f32, r: f32) -> bool {
+    match shape {
+        0 => yy * yy + xx * xx <= r * r,
+        1 => yy <= r * 0.8 && yy >= -r + xx.abs() * 1.7,
+        2 => yy.abs() <= r * 0.85 && xx.abs() <= r * 0.85,
+        _ => yy.abs() + xx.abs() <= r * 1.1,
+    }
+}
+
+fn glyph_mask(glyph: usize, yy: f32, xx: f32, r: f32) -> bool {
+    let g = r * 0.45;
+    match glyph {
+        0 => yy.abs() <= g * 0.35 && xx.abs() <= g,
+        1 => {
+            (yy.abs() <= g * 0.3 && xx.abs() <= g) || (xx.abs() <= g * 0.3 && yy.abs() <= g)
+        }
+        2 => {
+            let dy = (yy - g * 0.5).abs().min((yy + g * 0.5).abs());
+            let dx = (xx - g * 0.5).abs().min((xx + g * 0.5).abs());
+            dy * dy + dx * dx <= (g * 0.35) * (g * 0.35)
+        }
+        3 => (yy - xx.abs() * 0.7).abs() <= g * 0.3 && xx.abs() <= g,
+        4 => {
+            let rr = (yy * yy + xx * xx).sqrt();
+            rr >= g * 0.55 && rr <= g
+        }
+        _ => (yy - xx).abs() <= g * 0.3,
+    }
+}
+
+/// Render one int8 sample at activation binary point `f_input`.
+pub fn make_sample(rng: &mut Xoshiro256, cls: usize, f_input: i32) -> FeatureMap {
+    let cy = IMG as f32 / 2.0 + rng.f32_range(-4.0, 4.0);
+    let cx = IMG as f32 / 2.0 + rng.f32_range(-4.0, 4.0);
+    let r = IMG as f32 * rng.f32_range(0.30, 0.42);
+    let bright = rng.f32_range(0.6, 1.0);
+    let (shape, hue, glyph) = class_style(cls);
+    let bg: [f32; 3] = [
+        rng.f32_range(0.05, 0.35),
+        rng.f32_range(0.05, 0.35),
+        rng.f32_range(0.05, 0.35),
+    ];
+    let sign_col = hsv_to_rgb(hue, 0.85, bright);
+    let glyph_col = hsv_to_rgb((hue + 0.5) % 1.0, 0.2, (bright + 0.3).min(1.0));
+
+    let scale = (1i32 << f_input) as f32;
+    let mut fm = FeatureMap::zeros(Shape::new(IMG, IMG, 3));
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let (yy, xx) = (y as f32 - cy, x as f32 - cx);
+            let base = if glyph_mask(glyph, yy, xx, r) && shape_mask(shape, yy, xx, r) {
+                glyph_col
+            } else if shape_mask(shape, yy, xx, r) {
+                sign_col
+            } else {
+                bg
+            };
+            for c in 0..3 {
+                let v = (base[c] + rng.normal() as f32 * 0.04).clamp(0.0, 1.0);
+                fm.set(y, x, c, ((v * scale).round() as i32).clamp(-128, 127) as i8);
+            }
+        }
+    }
+    fm
+}
+
+/// An endless request generator for load testing.
+pub struct LoadGen {
+    rng: Xoshiro256,
+    pub f_input: i32,
+    next_cls: usize,
+}
+
+impl LoadGen {
+    pub fn new(seed: u64, f_input: i32) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            f_input,
+            next_cls: 0,
+        }
+    }
+
+    /// Produce the next (image, label) pair, classes round-robin.
+    pub fn next_sample(&mut self) -> (FeatureMap, usize) {
+        let cls = self.next_cls;
+        self.next_cls = (self.next_cls + 1) % NUM_CLASSES;
+        (make_sample(&mut self.rng, cls, self.f_input), cls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_shape_and_range() {
+        let mut rng = Xoshiro256::new(1);
+        let fm = make_sample(&mut rng, 7, 7);
+        assert_eq!(fm.shape, Shape::new(48, 48, 3));
+        assert!(fm.data.iter().all(|&v| v >= 0)); // inputs in [0,1] at Q0.7
+    }
+
+    #[test]
+    fn styles_distinct_across_classes() {
+        let styles: std::collections::HashSet<_> = (0..NUM_CLASSES)
+            .map(|c| {
+                let (s, h, g) = class_style(c);
+                (s, (h * 1000.0) as i32, g)
+            })
+            .collect();
+        assert_eq!(styles.len(), NUM_CLASSES);
+    }
+
+    #[test]
+    fn loadgen_round_robins_classes() {
+        let mut lg = LoadGen::new(3, 7);
+        let labels: Vec<usize> = (0..NUM_CLASSES).map(|_| lg.next_sample().1).collect();
+        let mut sorted = labels.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..NUM_CLASSES).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn different_classes_render_differently() {
+        let mut r1 = Xoshiro256::new(5);
+        let mut r2 = Xoshiro256::new(5);
+        let a = make_sample(&mut r1, 0, 7);
+        let b = make_sample(&mut r2, 21, 7);
+        let diff = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .filter(|(x, y)| x != y)
+            .count();
+        assert!(diff > 100, "classes 0 and 21 too similar: {diff} px differ");
+    }
+}

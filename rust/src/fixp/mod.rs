@@ -1,0 +1,194 @@
+//! Fixed-point arithmetic of the BinArray datapath (paper §III-C).
+//!
+//! * activations: `i8` (DW = 8 bits), per-layer binary point
+//! * PA accumulators / DSP cascade: 28-bit (MULW) — modelled as `i32`,
+//!   with [`MULW_MIN`]/[`MULW_MAX`] range checks available for assertions
+//! * α scaling factors: `i8` fixed point with a per-layer fractional width
+//! * QS block: round half away from zero at a per-layer shift, saturate
+//!   back to DW bits
+//! * barrel shifter: power-of-two alignment of partial results between
+//!   cascaded PAs
+
+/// Data width of activations (bits).
+pub const DW: u32 = 8;
+/// Width of the DSP multiply/accumulate path (bits).
+pub const MULW: u32 = 28;
+/// Smallest representable MULW value.
+pub const MULW_MIN: i32 = -(1 << (MULW - 1));
+/// Largest representable MULW value.
+pub const MULW_MAX: i32 = (1 << (MULW - 1)) - 1;
+
+/// Quantize-and-saturate: the QS block between the last PA and the AMU.
+///
+/// Rounds half away from zero at `shift` fractional bits, then saturates
+/// into the signed `DW`-bit activation range.
+#[inline]
+pub fn qs(acc: i32, shift: u32) -> i8 {
+    let rounded = round_shift(acc, shift);
+    saturate_i8(rounded)
+}
+
+/// Round half away from zero at `shift` bits (no saturation).
+#[inline]
+pub fn round_shift(acc: i32, shift: u32) -> i32 {
+    if shift == 0 {
+        return acc;
+    }
+    let half = 1i32 << (shift - 1);
+    // i32 is wide enough: |acc| ≤ 2^27 and half ≤ 2^26.  Arithmetic >>
+    // floors, so negatives shift their magnitude (half away from zero).
+    if acc >= 0 {
+        (acc + half) >> shift
+    } else {
+        -((-acc + half) >> shift)
+    }
+}
+
+/// Saturate an i32 into the i8 activation range.
+#[inline]
+pub fn saturate_i8(v: i32) -> i8 {
+    v.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+}
+
+/// Check a value fits the 28-bit MULW accumulator (debug assertion aid).
+#[inline]
+pub fn fits_mulw(v: i32) -> bool {
+    (MULW_MIN..=MULW_MAX).contains(&v)
+}
+
+/// Barrel shifter: align a partial result by a signed power-of-two shift
+/// (positive = left). Used between cascaded PAs when the fixed-point
+/// formats of neighbouring binary levels differ (paper §III-A).
+#[inline]
+pub fn barrel_shift(v: i32, amount: i32) -> i32 {
+    if amount >= 0 {
+        v.wrapping_shl(amount as u32)
+    } else {
+        v >> (-amount) as u32
+    }
+}
+
+/// Quantize a float to a signed fixed-point integer with `frac` fractional
+/// bits and `width` total bits (round to nearest, saturate).
+pub fn quantize(v: f32, frac: u32, width: u32) -> i32 {
+    let scaled = v as f64 * (1u64 << frac) as f64;
+    let r = scaled.round();
+    let max = ((1i64 << (width - 1)) - 1) as f64;
+    let min = -(1i64 << (width - 1)) as f64;
+    r.clamp(min, max) as i32
+}
+
+/// Dequantize a fixed-point integer back to float.
+pub fn dequantize(v: i32, frac: u32) -> f32 {
+    v as f32 / (1u64 << frac) as f32
+}
+
+/// Largest fractional width such that `max_abs` still fits signed `width`
+/// bits — the calibration rule used by `python/compile/quantize.py`.
+pub fn binary_point(max_abs: f32, width: u32) -> u32 {
+    if max_abs <= 0.0 {
+        return width - 1;
+    }
+    let int_bits = (max_abs as f64 + 1e-12).log2().ceil().max(0.0) as u32;
+    (width - 1).saturating_sub(int_bits).min(width - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn qs_rounds_half_away_from_zero() {
+        assert_eq!(qs(3, 1), 2); // (3+1)>>1
+        assert_eq!(qs(-3, 1), -2); // -(3+1)>>1
+        assert_eq!(qs(2, 1), 1);
+        assert_eq!(qs(-2, 1), -1);
+        assert_eq!(qs(1, 1), 1); // 0.5 rounds away → 1
+        assert_eq!(qs(-1, 1), -1);
+    }
+
+    #[test]
+    fn qs_saturates_both_ways() {
+        assert_eq!(qs(1_000_000, 2), 127);
+        assert_eq!(qs(-1_000_000, 2), -128);
+        assert_eq!(qs(127, 0), 127);
+        assert_eq!(qs(128, 0), 127);
+        assert_eq!(qs(-128, 0), -128);
+        assert_eq!(qs(-129, 0), -128);
+    }
+
+    #[test]
+    fn qs_shift_zero_is_saturate_only() {
+        for v in -200..200 {
+            assert_eq!(qs(v, 0), saturate_i8(v));
+        }
+    }
+
+    #[test]
+    fn round_shift_matches_float_rounding() {
+        prop::check(500, "round_shift == round(v / 2^s)", |rng| {
+            let v = rng.range_i64(-(1 << 26), 1 << 26) as i32;
+            let s = rng.below(12) as u32;
+            let want = (v as f64 / f64::from(1u32 << s)).abs().round() as i32
+                * v.signum();
+            assert_eq!(round_shift(v, s), want, "v={v} s={s}");
+        });
+    }
+
+    #[test]
+    fn barrel_shift_inverse() {
+        prop::check(200, "left-then-right barrel shift is identity", |rng| {
+            let v = rng.range_i64(-(1 << 20), 1 << 20) as i32;
+            let s = rng.below(7) as i32;
+            assert_eq!(barrel_shift(barrel_shift(v, s), -s), v);
+        });
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bounded() {
+        prop::check(300, "quantization error ≤ half LSB", |rng| {
+            let v = rng.f32_range(-0.9, 0.9);
+            let q = quantize(v, 7, 8);
+            let back = dequantize(q, 7);
+            assert!(
+                (back - v).abs() <= 0.5 / 128.0 + 1e-6,
+                "v={v} q={q} back={back}"
+            );
+        });
+    }
+
+    #[test]
+    fn binary_point_rule() {
+        assert_eq!(binary_point(0.4, 8), 7);
+        assert_eq!(binary_point(1.5, 8), 6);
+        assert_eq!(binary_point(3.0, 8), 5);
+        assert_eq!(binary_point(100.0, 8), 0); // needs all 7 integer bits
+        assert_eq!(binary_point(0.0, 8), 7);
+    }
+
+    #[test]
+    fn binary_point_value_fits() {
+        prop::check(300, "max_abs representable at chosen point", |rng| {
+            let v = rng.f32_range(0.01, 60.0);
+            let f = binary_point(v, 8);
+            // value scaled by 2^f must fit in 8 signed bits (±127), except
+            // the degenerate f=0 case where the integer part saturates.
+            if f > 0 {
+                assert!(
+                    (v as f64 * f64::from(1u32 << f)) <= 127.5 * 2.0,
+                    "v={v} f={f}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mulw_bounds() {
+        assert!(fits_mulw(0));
+        assert!(fits_mulw(MULW_MAX));
+        assert!(fits_mulw(MULW_MIN));
+        assert!(!fits_mulw(MULW_MAX + 1));
+        assert!(!fits_mulw(MULW_MIN - 1));
+    }
+}

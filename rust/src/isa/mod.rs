@@ -1,0 +1,369 @@
+//! BinArray instruction set (paper §IV-C) — encoding, assembler, and the
+//! network→program compiler.
+//!
+//! The control unit executes a small set of 32-bit instructions:
+//!
+//! | op   | meaning                                                        |
+//! |------|----------------------------------------------------------------|
+//! | STI  | store immediate into a configuration register                  |
+//! | HLT  | pause until the CPU (coordinator) sends a trigger              |
+//! | CONV | run the configured convolutional layer to completion           |
+//! | DENSE| run the configured dense layer to completion                   |
+//! | BRA  | unconditional branch (program loops per input image)           |
+//! | NOP  | no operation                                                   |
+//!
+//! Encoding: `[31:26] opcode | [25:21] register | [20:0] immediate`.
+//! The paper folds DENSE into CONV via a layer-type register; we give it
+//! its own opcode for program readability — the CU treats both as "run
+//! layer".  Programs are generated from a [`crate::nn::Network`] by
+//! [`compile_network`], mirroring Listing 1 of the paper.
+
+pub mod compiler;
+
+pub use compiler::{compile_network, LayerBinding, Program};
+
+/// Configuration registers of the control unit (§IV-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Reg {
+    /// Input feature width W_I.
+    WIn = 0,
+    /// Input feature height H_I.
+    HIn = 1,
+    /// Input channels C_I.
+    CIn = 2,
+    /// Kernel width W_B.
+    WKer = 3,
+    /// Kernel height H_B.
+    HKer = 4,
+    /// Output channels D.
+    DOut = 5,
+    /// Stride S.
+    Stride = 6,
+    /// Pooling window W_P = H_P (downsampling factor N_p; 1 = bypass AMU).
+    Pool = 7,
+    /// Number of binary levels M to evaluate for this layer.
+    MLvl = 8,
+    /// Weight memory base address (per-PA BRAM image offset).
+    WgtBase = 9,
+    /// α/bias memory base address.
+    AlphaBase = 10,
+    /// Input feature buffer base address.
+    InBase = 11,
+    /// Output feature buffer base address.
+    OutBase = 12,
+    /// QS right-shift for this layer (binary point alignment).
+    QsShift = 13,
+    /// Flags: bit0 = ReLU enable, bit1 = dense layer, bit2 = last layer.
+    Flags = 14,
+    /// Dense layer input length N_in (W_I·H_I·C_I for convs).
+    NIn = 15,
+}
+
+impl Reg {
+    pub const COUNT: usize = 16;
+
+    pub fn from_u8(v: u8) -> Option<Reg> {
+        use Reg::*;
+        Some(match v {
+            0 => WIn,
+            1 => HIn,
+            2 => CIn,
+            3 => WKer,
+            4 => HKer,
+            5 => DOut,
+            6 => Stride,
+            7 => Pool,
+            8 => MLvl,
+            9 => WgtBase,
+            10 => AlphaBase,
+            11 => InBase,
+            12 => OutBase,
+            13 => QsShift,
+            14 => Flags,
+            15 => NIn,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        use Reg::*;
+        match self {
+            WIn => "W_I",
+            HIn => "H_I",
+            CIn => "C_I",
+            WKer => "W_B",
+            HKer => "H_B",
+            DOut => "D",
+            Stride => "S",
+            Pool => "N_P",
+            MLvl => "M",
+            WgtBase => "WGT",
+            AlphaBase => "ALPHA",
+            InBase => "IN",
+            OutBase => "OUT",
+            QsShift => "QS",
+            Flags => "FLAGS",
+            NIn => "N_IN",
+        }
+    }
+}
+
+/// Flag bits for [`Reg::Flags`].
+pub mod flags {
+    pub const RELU: u32 = 1 << 0;
+    pub const DENSE: u32 = 1 << 1;
+    pub const LAST: u32 = 1 << 2;
+}
+
+/// A decoded instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    /// Set configuration register to a zero-extended 21-bit immediate.
+    Sti(Reg, u32),
+    /// Set the *high* bits of a configuration register: the register
+    /// becomes `(imm << 21) | (reg & 0x1F_FFFF)`.  Emitted by the
+    /// compiler before `STI` when an address exceeds 21 bits (e.g. the
+    /// weight-memory base of a late dense layer).
+    StiH(Reg, u32),
+    /// Halt until external trigger.
+    Hlt,
+    /// Run the configured convolutional layer; imm = layer id (diagnostic).
+    Conv(u32),
+    /// Run the configured dense layer; imm = layer id.
+    Dense(u32),
+    /// Branch to absolute instruction address.
+    Bra(u32),
+    /// No operation.
+    Nop,
+}
+
+const OP_STI: u32 = 0x01;
+const OP_HLT: u32 = 0x02;
+const OP_CONV: u32 = 0x03;
+const OP_BRA: u32 = 0x04;
+const OP_DENSE: u32 = 0x05;
+const OP_STIH: u32 = 0x06;
+const OP_NOP: u32 = 0x00;
+
+/// Low-immediate width (bits [20:0] of the instruction word).
+pub const IMM_BITS: u32 = 21;
+const IMM_MASK: u32 = (1 << IMM_BITS) - 1;
+
+/// Emit the one- or two-instruction sequence that loads `value` into
+/// `reg` (STIH + STI when the value exceeds the 21-bit immediate).
+pub fn load_reg(reg: Reg, value: u32) -> Vec<Instr> {
+    if value <= IMM_MASK {
+        vec![Instr::Sti(reg, value)]
+    } else {
+        // STI zero-extends (clears the high bits), so it must run first.
+        vec![
+            Instr::Sti(reg, value & IMM_MASK),
+            Instr::StiH(reg, value >> IMM_BITS),
+        ]
+    }
+}
+
+impl Instr {
+    /// Encode to the 32-bit machine word.
+    pub fn encode(&self) -> u32 {
+        match *self {
+            Instr::Sti(reg, imm) => {
+                assert!(imm <= IMM_MASK, "STI immediate {imm} exceeds 21 bits");
+                (OP_STI << 26) | ((reg as u32) << 21) | imm
+            }
+            Instr::StiH(reg, imm) => {
+                assert!(imm <= IMM_MASK, "STIH immediate {imm} exceeds 21 bits");
+                (OP_STIH << 26) | ((reg as u32) << 21) | imm
+            }
+            Instr::Hlt => OP_HLT << 26,
+            Instr::Conv(id) => (OP_CONV << 26) | (id & IMM_MASK),
+            Instr::Dense(id) => (OP_DENSE << 26) | (id & IMM_MASK),
+            Instr::Bra(addr) => (OP_BRA << 26) | (addr & IMM_MASK),
+            Instr::Nop => OP_NOP << 26,
+        }
+    }
+
+    /// Decode from a 32-bit machine word.
+    pub fn decode(word: u32) -> Result<Instr, IsaError> {
+        let op = word >> 26;
+        let reg = ((word >> 21) & 0x1F) as u8;
+        let imm = word & IMM_MASK;
+        Ok(match op {
+            OP_STI => Instr::Sti(
+                Reg::from_u8(reg).ok_or(IsaError::BadRegister(reg))?,
+                imm,
+            ),
+            OP_STIH => Instr::StiH(
+                Reg::from_u8(reg).ok_or(IsaError::BadRegister(reg))?,
+                imm,
+            ),
+            OP_HLT => Instr::Hlt,
+            OP_CONV => Instr::Conv(imm),
+            OP_DENSE => Instr::Dense(imm),
+            OP_BRA => Instr::Bra(imm),
+            OP_NOP => Instr::Nop,
+            _ => return Err(IsaError::BadOpcode(op)),
+        })
+    }
+
+    /// Assembly text form (Listing-1 style).
+    pub fn disassemble(&self) -> String {
+        match *self {
+            Instr::Sti(reg, imm) => format!("STI {} {}", reg.name(), imm),
+            Instr::StiH(reg, imm) => format!("STIH {} {}", reg.name(), imm),
+            Instr::Hlt => "HLT".into(),
+            Instr::Conv(id) => format!("CONV {id}"),
+            Instr::Dense(id) => format!("DENSE {id}"),
+            Instr::Bra(a) => format!("BRA {a}"),
+            Instr::Nop => "NOP".into(),
+        }
+    }
+
+    /// Parse one line of assembly (inverse of [`Instr::disassemble`]).
+    pub fn assemble(line: &str) -> Result<Instr, IsaError> {
+        let line = line.split(';').next().unwrap_or("").trim();
+        let mut it = line.split_whitespace();
+        let mnemonic = it.next().ok_or(IsaError::EmptyLine)?;
+        let parse_imm = |s: Option<&str>| -> Result<u32, IsaError> {
+            s.ok_or(IsaError::MissingOperand)?
+                .parse()
+                .map_err(|_| IsaError::BadImmediate)
+        };
+        Ok(match mnemonic.to_ascii_uppercase().as_str() {
+            mn @ ("STI" | "STIH") => {
+                let reg_name = it.next().ok_or(IsaError::MissingOperand)?;
+                let reg = (0..Reg::COUNT as u8)
+                    .filter_map(Reg::from_u8)
+                    .find(|r| r.name() == reg_name)
+                    .ok_or(IsaError::UnknownRegName)?;
+                let imm = parse_imm(it.next())?;
+                if mn == "STI" {
+                    Instr::Sti(reg, imm)
+                } else {
+                    Instr::StiH(reg, imm)
+                }
+            }
+            "HLT" => Instr::Hlt,
+            "CONV" => Instr::Conv(parse_imm(it.next())?),
+            "DENSE" => Instr::Dense(parse_imm(it.next())?),
+            "BRA" => Instr::Bra(parse_imm(it.next())?),
+            "NOP" => Instr::Nop,
+            _ => return Err(IsaError::UnknownMnemonic),
+        })
+    }
+}
+
+/// ISA-level errors.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum IsaError {
+    #[error("unknown opcode {0:#x}")]
+    BadOpcode(u32),
+    #[error("bad register id {0}")]
+    BadRegister(u8),
+    #[error("empty line")]
+    EmptyLine,
+    #[error("missing operand")]
+    MissingOperand,
+    #[error("bad immediate")]
+    BadImmediate,
+    #[error("unknown register name")]
+    UnknownRegName,
+    #[error("unknown mnemonic")]
+    UnknownMnemonic,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn encode_decode_roundtrip_all_variants() {
+        let cases = [
+            Instr::Sti(Reg::WIn, 48),
+            Instr::Sti(Reg::Flags, flags::RELU | flags::LAST),
+            Instr::Sti(Reg::WgtBase, IMM_MASK),
+            Instr::StiH(Reg::WgtBase, 37),
+            Instr::Hlt,
+            Instr::Conv(0),
+            Instr::Conv(7),
+            Instr::Dense(3),
+            Instr::Bra(1),
+            Instr::Nop,
+        ];
+        for i in cases {
+            assert_eq!(Instr::decode(i.encode()).unwrap(), i, "{i:?}");
+        }
+    }
+
+    #[test]
+    fn assemble_disassemble_roundtrip() {
+        prop::check(200, "asm/disasm roundtrip", |rng| {
+            let i = match rng.below(5) {
+                0 => Instr::Sti(
+                    Reg::from_u8(rng.below(16) as u8).unwrap(),
+                    rng.below(1 << 21) as u32,
+                ),
+                1 => Instr::Hlt,
+                2 => Instr::Conv(rng.below(100) as u32),
+                3 => Instr::Dense(rng.below(100) as u32),
+                _ => Instr::Bra(rng.below(1000) as u32),
+            };
+            assert_eq!(Instr::assemble(&i.disassemble()).unwrap(), i);
+        });
+    }
+
+    #[test]
+    fn listing1_program_parses() {
+        // The exact program of paper Listing 1 (with comments).
+        let text = [
+            "STI W_I 48 ; Set input width to 48 pixels",
+            "STI W_B 7  ; Set kernel width to 7 pixels",
+            "HLT        ; Wait for trigger from PS",
+            "CONV 0     ; Start CONV of 1st layer",
+            "STI W_I 21",
+            "STI W_B 4",
+            "CONV 1     ; 2nd CONV layer, mark last layer",
+            "BRA 1",
+        ];
+        let prog: Vec<Instr> = text
+            .iter()
+            .map(|l| Instr::assemble(l).unwrap())
+            .collect();
+        assert_eq!(prog[0], Instr::Sti(Reg::WIn, 48));
+        assert_eq!(prog[2], Instr::Hlt);
+        assert_eq!(prog[7], Instr::Bra(1));
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        assert_eq!(Instr::decode(0x3F << 26), Err(IsaError::BadOpcode(0x3F)));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 21 bits")]
+    fn sti_immediate_overflow_panics() {
+        let _ = Instr::Sti(Reg::WIn, 1 << 21).encode();
+    }
+
+    #[test]
+    fn load_reg_splits_wide_values() {
+        assert_eq!(load_reg(Reg::WIn, 48), vec![Instr::Sti(Reg::WIn, 48)]);
+        let wide = 2_637_620u32; // CNN-A's last weight base
+        let seq = load_reg(Reg::WgtBase, wide);
+        assert_eq!(seq.len(), 2);
+        assert_eq!(seq[0], Instr::Sti(Reg::WgtBase, wide & IMM_MASK));
+        assert_eq!(seq[1], Instr::StiH(Reg::WgtBase, wide >> IMM_BITS));
+        // simulate the CU's register update
+        let mut reg = 0u32;
+        for i in seq {
+            match i {
+                Instr::Sti(_, v) => reg = v,
+                Instr::StiH(_, v) => reg = (reg & IMM_MASK) | (v << IMM_BITS),
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(reg, wide);
+    }
+}

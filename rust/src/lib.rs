@@ -1,0 +1,41 @@
+//! # BinArray — a scalable accelerator for binary-approximated CNNs
+//!
+//! Full-system reproduction of *"BinArray: A Scalable Hardware Accelerator
+//! for Binary Approximated CNNs"* (Fischer & Wassner, 2020) as a
+//! three-layer Rust + JAX + Pallas stack.  This crate is the request-path
+//! layer (L3): the cycle-accurate simulator standing in for the FPGA RTL,
+//! the analytical performance/area models, the instruction-set toolchain,
+//! the bit-accurate golden model, a serving coordinator, and a PJRT
+//! runtime that executes the AOT-lowered JAX graphs.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`approx`] — multi-level binary weight approximation (paper §II)
+//! * [`fixp`] — the fixed-point datapath semantics (§III-C)
+//! * [`tensor`] — row-major feature maps
+//! * [`nn`] — reference network descriptions (CNN-A, MobileNetV1 B1/B2)
+//! * [`isa`] — instruction set + assembler + network compiler (§IV-C)
+//! * [`golden`] — bit-accurate int8 functional model (§V-A2)
+//! * [`artifacts`] — readers for the Python-side AOT outputs
+//! * [`binarray`] — the cycle-accurate simulator: PE/PA/SA/AMU/AGU/CU (§III–IV)
+//! * [`perf`] — analytical performance model, Eqs. 14–18 (§IV-E)
+//! * [`area`] — FPGA resource model (Table IV)
+//! * [`coordinator`] — request router / batcher / worker pool (§IV-D)
+//! * [`runtime`] — PJRT CPU client for `artifacts/*.hlo.txt`
+//! * [`data`] — synthetic GTSRB-like workload generator
+//! * [`util`] — PRNG, property-test harness, binary IO
+
+pub mod approx;
+pub mod area;
+pub mod artifacts;
+pub mod binarray;
+pub mod coordinator;
+pub mod data;
+pub mod fixp;
+pub mod golden;
+pub mod isa;
+pub mod nn;
+pub mod perf;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

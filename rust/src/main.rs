@@ -1,0 +1,325 @@
+//! BinArray CLI — leader entrypoint.
+//!
+//! ```text
+//! binarray info                         # artifacts + network summary
+//! binarray serve  [--config 1,8,2] [--workers N] [--frames N] [--mode fast|accurate]
+//! binarray perf   [--m M]               # Table III analytical model
+//! binarray area                         # Table IV resource model
+//! binarray listing                      # compiled CNN processing program
+//! binarray verify                       # golden model vs golden.bin + simulator
+//! ```
+//!
+//! Argument parsing is hand-rolled (the build is fully offline; no clap).
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode,
+};
+use binarray::tensor::Shape;
+use binarray::{area, golden, isa, nn, perf};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Result<Self> {
+        let mut flags = std::collections::HashMap::new();
+        let mut it = rest.iter();
+        while let Some(k) = it.next() {
+            let Some(key) = k.strip_prefix("--") else {
+                bail!("unexpected argument '{k}' (expected --flag value)");
+            };
+            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), v.clone());
+        }
+        Ok(Self { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
+        }
+    }
+
+    fn config(&self, default: ArrayConfig) -> Result<ArrayConfig> {
+        match self.flags.get("config") {
+            None => Ok(default),
+            Some(s) => parse_config(s),
+        }
+    }
+}
+
+fn parse_config(s: &str) -> Result<ArrayConfig> {
+    let parts: Vec<usize> = s
+        .trim_matches(|c| c == '[' || c == ']')
+        .split(',')
+        .map(|p| p.trim().parse())
+        .collect::<Result<_, _>>()
+        .with_context(|| format!("config '{s}' must be N_SA,D_arch,M_arch"))?;
+    if parts.len() != 3 {
+        bail!("config '{s}' must have three fields");
+    }
+    Ok(ArrayConfig::new(parts[0], parts[1], parts[2]))
+}
+
+fn load_net() -> Result<QuantNetwork> {
+    let dir = binarray::artifacts::default_dir();
+    QuantNetwork::load(&dir.join("cnn_a.weights.bin")).with_context(|| {
+        format!(
+            "loading artifacts from {} — run `make artifacts` first",
+            dir.display()
+        )
+    })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(argv.get(1..).unwrap_or(&[]))?;
+
+    match cmd {
+        "info" => info(),
+        "serve" => serve(&args),
+        "perf" => perf_cmd(&args),
+        "area" => area_cmd(),
+        "listing" => listing(),
+        "verify" => verify(),
+        "asm" => asm(&args),
+        "disasm" => disasm(&args),
+        _ => {
+            println!(
+                "usage: binarray <info|serve|perf|area|listing|verify|asm|disasm> [--flags]\n\
+                 see `rust/src/main.rs` docs for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Assemble a CNN-processing-program text file to a machine-code image
+/// (one little-endian u32 per instruction — the IMEM format of Fig. 10).
+fn asm(args: &Args) -> Result<()> {
+    let src: String = args.get("in", String::new())?;
+    if src.is_empty() {
+        bail!("asm needs --in <file.s> (and optional --out <file.bin>)");
+    }
+    let text = std::fs::read_to_string(&src)?;
+    let mut words = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.split(';').next().unwrap_or("").trim().is_empty() {
+            continue;
+        }
+        let ins = isa::Instr::assemble(line)
+            .map_err(|e| anyhow::anyhow!("{src}:{}: {e}", ln + 1))?;
+        words.push(ins.encode());
+    }
+    let out: String = args.get("out", format!("{src}.bin"))?;
+    let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    std::fs::write(&out, bytes)?;
+    println!("assembled {} instructions → {out}", words.len());
+    Ok(())
+}
+
+/// Disassemble a machine-code image back to text.
+fn disasm(args: &Args) -> Result<()> {
+    let src: String = args.get("in", String::new())?;
+    if src.is_empty() {
+        bail!("disasm needs --in <file.bin>");
+    }
+    let bytes = std::fs::read(&src)?;
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        let w = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        let ins = isa::Instr::decode(w)
+            .map_err(|e| anyhow::anyhow!("word {i} ({w:#010x}): {e}"))?;
+        println!("{i:3}: {}", ins.disassemble());
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let net = load_net()?;
+    println!("BinArray reproduction — network: CNN-A ({} layers)", net.layers.len());
+    println!("  f_input = Q0.{}", net.f_input);
+    for (i, l) in net.layers.iter().enumerate() {
+        println!(
+            "  layer {i}: {:?} d={} m={} n_c={} shift={} pool={} relu={}",
+            l.kind,
+            l.d,
+            l.m,
+            l.n_c(),
+            l.shift,
+            l.pool,
+            l.relu
+        );
+    }
+    let prog = isa::compile_network(&net);
+    println!(
+        "  program: {} instructions, fbuf {} words, weights {} plane-bits",
+        prog.instrs.len(),
+        prog.fbuf_words,
+        prog.wgt_words
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let net = load_net()?;
+    let cfg = CoordinatorConfig {
+        array: args.config(ArrayConfig::new(1, 8, 2))?,
+        workers: args.get("workers", 2)?,
+        policy: BatchPolicy {
+            max_batch: args.get("batch", 8)?,
+            max_delay: Duration::from_millis(args.get("delay-ms", 2)?),
+        },
+    };
+    let frames: usize = args.get("frames", 64)?;
+    let mode = match args.get::<String>("mode", "accurate".into())?.as_str() {
+        "fast" => Mode::HighThroughput,
+        _ => Mode::HighAccuracy,
+    };
+    let dir = binarray::artifacts::default_dir();
+    let calib = CalibBatch::load(&dir.join("calib.bin"))?;
+
+    println!(
+        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}",
+        cfg.array.label(),
+        cfg.workers
+    );
+    let coord = Coordinator::start(cfg, net)?;
+    let mut rxs = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..frames {
+        let idx = i % calib.n;
+        rxs.push(coord.submit(calib.image(idx).to_vec(), mode));
+        labels.push(calib.labels[idx]);
+    }
+    let mut correct = 0u64;
+    for (rx, label) in rxs.into_iter().zip(labels) {
+        let reply = rx.recv()?;
+        if reply.class as i32 == label {
+            correct += 1;
+        }
+    }
+    let m = coord.shutdown();
+    println!("{}", m.summary());
+    println!(
+        "top-1 vs labels: {:.2}% ({}/{} frames)",
+        100.0 * correct as f64 / frames as f64,
+        correct,
+        frames
+    );
+    Ok(())
+}
+
+fn perf_cmd(args: &Args) -> Result<()> {
+    let m_cnn_a: usize = args.get("m", 2)?;
+    println!("Table III (analytical model, 400 MHz) — fps");
+    println!("{:<8} {:>3} {:>10} {:>10} {:>10} {:>10} {:>8}", "CNN", "M", "[1,8,2]", "[1,32,2]", "[4,32,4]", "[16,32,4]", "CPU");
+    let nets: [(&str, nn::Network, usize, bool); 5] = [
+        ("-A", nn::cnn_a(), m_cnn_a, false),
+        ("-B1", nn::cnn_b1(), 4, true),
+        ("-B2", nn::cnn_b2(), 4, true),
+        ("-B1", nn::cnn_b1(), 6, true),
+        ("-B2", nn::cnn_b2(), 6, true),
+    ];
+    for (name, net, m, offload) in nets {
+        print!("{name:<8} {m:>3}");
+        for cfg in PAPER_CONFIGS {
+            print!(" {:>10.1}", perf::fps(&net, cfg, m, offload));
+        }
+        println!(" {:>8.1}", perf::cpu_fps(&net));
+    }
+    Ok(())
+}
+
+fn area_cmd() -> Result<()> {
+    println!("Table IV (resource model, XC7Z045) — % utilization");
+    println!(
+        "{:<12} {:>9} {:>9} {:>9} {:>9}",
+        "", "[1,8,2]", "[1,32,2]", "[4,32,4]", "[16,32,4]"
+    );
+    let rows: [(&str, Box<dyn Fn(ArrayConfig) -> f64>); 5] = [
+        ("LUT", Box::new(|c| area::logic(c).utilization().lut)),
+        ("FF", Box::new(|c| area::logic(c).utilization().ff)),
+        (
+            "BRAM CNN-A",
+            Box::new(|c| {
+                area::resources(c, &nn::cnn_a(), 2).utilization().bram
+            }),
+        ),
+        (
+            "BRAM CNN-B",
+            Box::new(|c| {
+                area::resources(c, &nn::cnn_b2(), 4).utilization().bram
+            }),
+        ),
+        ("DSP", Box::new(|c| area::logic(c).utilization().dsp)),
+    ];
+    for (name, f) in rows {
+        print!("{name:<12}");
+        for cfg in PAPER_CONFIGS {
+            print!(" {:>9.2}", f(cfg));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn listing() -> Result<()> {
+    let net = load_net()?;
+    println!("{}", isa::compile_network(&net).listing());
+    Ok(())
+}
+
+fn verify() -> Result<()> {
+    let dir = binarray::artifacts::default_dir();
+    let net = load_net()?;
+    let calib = CalibBatch::load(&dir.join("calib.bin"))?;
+    let golden_ref = GoldenLogits::load(&dir.join("golden.bin"))?;
+    let shape = Shape::new(calib.h, calib.w, calib.c);
+
+    // 1. Rust golden model vs numpy oracle logits: must be bit-exact.
+    let mut exact = 0;
+    for i in 0..golden_ref.n {
+        let logits = golden::forward(&net, calib.image(i), shape, None);
+        if logits.as_slice() == golden_ref.row(i) {
+            exact += 1;
+        }
+    }
+    println!(
+        "golden model vs numpy oracle: {exact}/{} bit-exact",
+        golden_ref.n
+    );
+    if exact != golden_ref.n {
+        bail!("golden model mismatch");
+    }
+
+    // 2. Cycle-accurate simulator vs golden model on a few frames.
+    let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), net.clone())?;
+    for i in 0..8.min(calib.n) {
+        let (logits, _) = sys.run_frame(calib.image(i))?;
+        let want = golden::forward(&net, calib.image(i), shape, None);
+        if logits != want {
+            bail!("simulator mismatch on frame {i}");
+        }
+    }
+    println!("simulator vs golden model: 8/8 bit-exact");
+    Ok(())
+}

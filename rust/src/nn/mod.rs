@@ -1,0 +1,384 @@
+//! Network descriptions: layer specs, the paper's reference networks, and
+//! MAC accounting.
+//!
+//! The performance (Table III) and resource (Table IV) experiments need
+//! exact layer *shapes* of the three reference networks:
+//!
+//! * **CNN-A** — 2 conv + 3 dense on 48×48×3 (GTSRB), ~5.8 M MACs
+//! * **CNN-B1** — MobileNetV1 ρ=0.57 (input 128), α=0.5, ≈49 M MACs
+//! * **CNN-B2** — MobileNetV1 ρ=1 (input 224), α=1, ≈569 M MACs
+//!
+//! MobileNet depth-wise layers are flagged so the performance model can
+//! apply the paper's §V-A3 rule (D_arch=1 — no output-channel parallelism
+//! for depth-wise convolutions).
+
+/// One BinArray-schedulable layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    /// Standard convolution (valid padding unless `pad > 0`).
+    Conv {
+        w_in: usize,
+        h_in: usize,
+        c_in: usize,
+        kh: usize,
+        kw: usize,
+        d_out: usize,
+        stride: usize,
+        pad: usize,
+        /// N_p of the fused max-pool after this conv (1 = none).
+        pool: usize,
+    },
+    /// Depth-wise convolution: one filter per input channel.
+    DepthwiseConv {
+        w_in: usize,
+        h_in: usize,
+        c_in: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Fully-connected layer.
+    Dense { n_in: usize, n_out: usize },
+    /// Global average pool — offloaded to the CPU in the paper (§V-B3);
+    /// carried in the spec so MAC accounting and offload decisions see it.
+    GlobalAvgPool { w_in: usize, h_in: usize, c: usize },
+}
+
+impl Layer {
+    /// Output spatial dims (U, V, D) of Eq. 14 (for layers that have them).
+    pub fn out_dims(&self) -> (usize, usize, usize) {
+        match *self {
+            Layer::Conv {
+                w_in,
+                h_in,
+                kh,
+                kw,
+                d_out,
+                stride,
+                pad,
+                ..
+            } => (
+                (h_in - kh + 2 * pad) / stride + 1,
+                (w_in - kw + 2 * pad) / stride + 1,
+                d_out,
+            ),
+            Layer::DepthwiseConv {
+                w_in,
+                h_in,
+                c_in,
+                kh,
+                kw,
+                stride,
+                pad,
+            } => (
+                (h_in - kh + 2 * pad) / stride + 1,
+                (w_in - kw + 2 * pad) / stride + 1,
+                c_in,
+            ),
+            Layer::Dense { n_out, .. } => (1, 1, n_out),
+            Layer::GlobalAvgPool { c, .. } => (1, 1, c),
+        }
+    }
+
+    /// Multiply-accumulate operations per inference.
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Layer::Conv {
+                c_in, kh, kw, d_out, ..
+            } => {
+                let (u, v, _) = self.out_dims();
+                (u * v * kh * kw * c_in * d_out) as u64
+            }
+            Layer::DepthwiseConv {
+                c_in, kh, kw, ..
+            } => {
+                let (u, v, _) = self.out_dims();
+                (u * v * kh * kw * c_in) as u64
+            }
+            Layer::Dense { n_in, n_out } => (n_in * n_out) as u64,
+            Layer::GlobalAvgPool { w_in, h_in, c } => (w_in * h_in * c) as u64,
+        }
+    }
+
+    /// Coefficients per output filter N_c (the binary dot-product length).
+    pub fn n_c(&self) -> usize {
+        match *self {
+            Layer::Conv { c_in, kh, kw, .. } => kh * kw * c_in,
+            Layer::DepthwiseConv { kh, kw, .. } => kh * kw,
+            Layer::Dense { n_in, .. } => n_in,
+            Layer::GlobalAvgPool { .. } => 0,
+        }
+    }
+
+    /// Number of output filters D (rows of weight storage).
+    pub fn d_out(&self) -> usize {
+        self.out_dims().2
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        matches!(self, Layer::DepthwiseConv { .. })
+    }
+}
+
+/// A full network: ordered layers + metadata.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// MACs excluding layers the paper offloads to the CPU for MobileNet
+    /// (global average pool + the final dense classifier, §V-B3).
+    pub fn accelerated_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| !matches!(l, Layer::GlobalAvgPool { .. }))
+            .map(Layer::macs)
+            .sum()
+    }
+
+    /// Total weight coefficients (for compression/BRAM accounting).
+    pub fn weight_coeffs(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| (l.n_c() * l.d_out()) as u64)
+            .sum()
+    }
+}
+
+/// CNN-A (paper §V-A1): the GTSRB network, dims per Listing 1.
+pub fn cnn_a() -> Network {
+    Network {
+        name: "CNN-A".into(),
+        layers: vec![
+            Layer::Conv {
+                w_in: 48,
+                h_in: 48,
+                c_in: 3,
+                kh: 7,
+                kw: 7,
+                d_out: 5,
+                stride: 1,
+                pad: 0,
+                pool: 2,
+            },
+            Layer::Conv {
+                w_in: 21,
+                h_in: 21,
+                c_in: 5,
+                kh: 4,
+                kw: 4,
+                d_out: 150,
+                stride: 1,
+                pad: 0,
+                pool: 6,
+            },
+            Layer::Dense {
+                n_in: 1350,
+                n_out: 340,
+            },
+            Layer::Dense {
+                n_in: 340,
+                n_out: 490,
+            },
+            Layer::Dense {
+                n_in: 490,
+                n_out: 43,
+            },
+        ],
+    }
+}
+
+/// MobileNetV1 (Howard et al. [11]) with width multiplier `alpha` and
+/// input resolution `input` (the paper's ρ expressed as pixels).
+///
+/// Standard topology: conv3×3/2, then 13 depthwise-separable blocks
+/// (dw3×3 + pw1×1), global average pool, dense 1024α→1000.
+pub fn mobilenet_v1(input: usize, alpha: f64) -> Network {
+    let ch = |c: usize| ((c as f64 * alpha).round() as usize).max(1);
+    let mut layers = Vec::new();
+    let mut hw = input;
+    let mut c = 3usize;
+
+    // Initial full conv: 32α filters, stride 2, 'same' padding (pad=1).
+    let d0 = ch(32);
+    layers.push(Layer::Conv {
+        w_in: hw,
+        h_in: hw,
+        c_in: c,
+        kh: 3,
+        kw: 3,
+        d_out: d0,
+        stride: 2,
+        pad: 1,
+        pool: 1,
+    });
+    hw = hw.div_ceil(2);
+    c = d0;
+
+    // (out_channels, stride) of the 13 separable blocks.
+    let blocks: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (d, s) in blocks {
+        layers.push(Layer::DepthwiseConv {
+            w_in: hw,
+            h_in: hw,
+            c_in: c,
+            kh: 3,
+            kw: 3,
+            stride: s,
+            pad: 1,
+        });
+        if s == 2 {
+            hw = hw.div_ceil(2);
+        }
+        let dd = ch(d);
+        layers.push(Layer::Conv {
+            w_in: hw,
+            h_in: hw,
+            c_in: c,
+            kh: 1,
+            kw: 1,
+            d_out: dd,
+            stride: 1,
+            pad: 0,
+            pool: 1,
+        });
+        c = dd;
+    }
+
+    layers.push(Layer::GlobalAvgPool {
+        w_in: hw,
+        h_in: hw,
+        c,
+    });
+    layers.push(Layer::Dense {
+        n_in: c,
+        n_out: 1000,
+    });
+
+    Network {
+        name: format!("MobileNetV1-{input}-a{alpha}"),
+        layers,
+    }
+}
+
+/// CNN-B1: MobileNetV1 ρ=0.57 (128×128 input), α=0.5 — ≈49 M MACs.
+pub fn cnn_b1() -> Network {
+    let mut n = mobilenet_v1(128, 0.5);
+    n.name = "CNN-B1".into();
+    n
+}
+
+/// CNN-B2: MobileNetV1 ρ=1 (224×224 input), α=1 — ≈569 M MACs.
+pub fn cnn_b2() -> Network {
+    let mut n = mobilenet_v1(224, 1.0);
+    n.name = "CNN-B2".into();
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnn_a_macs_match_hand_count() {
+        let want = 42 * 42 * 7 * 7 * 3 * 5
+            + 18 * 18 * 4 * 4 * 5 * 150
+            + 1350 * 340
+            + 340 * 490
+            + 490 * 43;
+        assert_eq!(cnn_a().macs(), want as u64);
+    }
+
+    #[test]
+    fn cnn_a_dense_input_is_1350() {
+        let net = cnn_a();
+        let Layer::Dense { n_in, .. } = net.layers[2] else {
+            panic!("layer 2 should be dense");
+        };
+        assert_eq!(n_in, 1350);
+        // and the conv stack actually produces 1350 features: 3*3*150
+        let Layer::Conv { d_out, pool, .. } = net.layers[1] else {
+            panic!()
+        };
+        let (u, _, _) = net.layers[1].out_dims();
+        assert_eq!((u / pool) * (u / pool) * d_out, 1350);
+    }
+
+    #[test]
+    fn cnn_b1_macs_near_paper_49m() {
+        let m = cnn_b1().macs();
+        // paper: "a total of 49M MACs"
+        assert!(
+            (40_000_000..60_000_000).contains(&m),
+            "CNN-B1 MACs {m} outside 49M±20%"
+        );
+    }
+
+    #[test]
+    fn cnn_b2_macs_near_paper_569m() {
+        let m = cnn_b2().macs();
+        assert!(
+            (500_000_000..640_000_000).contains(&m),
+            "CNN-B2 MACs {m} outside 569M±12%"
+        );
+    }
+
+    #[test]
+    fn mobilenet_layer_count() {
+        // 1 + 13*2 conv-ish layers + gap + dense
+        assert_eq!(cnn_b2().layers.len(), 1 + 26 + 1 + 1);
+    }
+
+    #[test]
+    fn depthwise_flagging() {
+        let net = cnn_b1();
+        let dw = net.layers.iter().filter(|l| l.is_depthwise()).count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn out_dims_stride_padding() {
+        let l = Layer::Conv {
+            w_in: 224,
+            h_in: 224,
+            c_in: 3,
+            kh: 3,
+            kw: 3,
+            d_out: 32,
+            stride: 2,
+            pad: 1,
+            pool: 1,
+        };
+        let (u, v, d) = l.out_dims();
+        assert_eq!((u, v, d), (112, 112, 32));
+    }
+
+    #[test]
+    fn n_c_values() {
+        let net = cnn_a();
+        assert_eq!(net.layers[0].n_c(), 147); // 7*7*3
+        assert_eq!(net.layers[1].n_c(), 80); // 4*4*5
+        assert_eq!(net.layers[2].n_c(), 1350);
+    }
+}

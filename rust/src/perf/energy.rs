@@ -1,0 +1,135 @@
+//! Energy model (paper §V-B4).
+//!
+//! The paper's argument: a 32-bit off-chip SDRAM read costs ≈100× an
+//! internal SRAM read, and a 32-bit multiplication ≈100× an 8-bit
+//! addition (both from Sze et al. [14]).  BinArray keeps weights and
+//! features in BRAM and replaces almost all multiplications with 8-bit
+//! additions, so memory and arithmetic energy are each ~100× lower than
+//! the hypothetical CPU; with a 10× safety margin the paper claims ≥10×
+//! energy efficiency.  This module implements that accounting.
+
+use crate::nn::{Layer, Network};
+
+/// Relative energy units (normalized to one 8-bit addition = 1).
+/// Values follow the Sze et al. ratios the paper cites.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyCosts {
+    /// 8-bit add (the PE operation).
+    pub add8: f64,
+    /// 32-bit multiply (CPU MAC's multiplier).
+    pub mul32: f64,
+    /// Internal SRAM/BRAM 32-bit read.
+    pub sram_read: f64,
+    /// External SDRAM 32-bit read.
+    pub sdram_read: f64,
+    /// DSP multiply-add (α scaling, 8×28 bit).
+    pub dsp_madd: f64,
+}
+
+impl Default for EnergyCosts {
+    fn default() -> Self {
+        Self {
+            add8: 1.0,
+            mul32: 100.0,  // ≈100× an 8-bit add (§V-B4)
+            sram_read: 1.0,
+            sdram_read: 100.0, // ≈100× internal SRAM (§V-B4, [14])
+            dsp_madd: 25.0,    // narrow multiply: between add8 and mul32
+        }
+    }
+}
+
+/// Energy estimate (relative units) for one inference.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyEstimate {
+    pub arithmetic: f64,
+    pub memory: f64,
+}
+
+impl EnergyEstimate {
+    pub fn total(&self) -> f64 {
+        self.arithmetic + self.memory
+    }
+}
+
+/// BinArray energy: per MAC-equivalent, one 8-bit add (PE) + amortized α
+/// DSP multiply-adds; all feature/weight traffic from BRAM.  Weights are
+/// 1-bit so M plane-bits replace each 8–32-bit weight read.
+pub fn binarray_energy(net: &Network, m: usize, costs: &EnergyCosts) -> EnergyEstimate {
+    let mut e = EnergyEstimate::default();
+    for l in &net.layers {
+        let macs = l.macs() as f64;
+        let (u, v, d) = l.out_dims();
+        match l {
+            Layer::GlobalAvgPool { .. } => {
+                e.arithmetic += macs * costs.add8;
+                e.memory += macs * costs.sram_read / 4.0;
+            }
+            _ => {
+                // PE accumulations: M sign-adds per original MAC
+                e.arithmetic += macs * m as f64 * costs.add8;
+                // α cascade: M DSP multiply-adds per output value
+                e.arithmetic += (u * v * d) as f64 * m as f64 * costs.dsp_madd;
+                // features: each input feature read once per channel-pass
+                // group from BRAM (8-bit → 1/4 of a 32-bit read)
+                e.memory += macs * m as f64 * (costs.sram_read / 4.0) / 8.0;
+                // weight bits: 1-bit reads, 1/32 of a 32-bit read
+                e.memory += macs * m as f64 * (costs.sram_read / 32.0);
+            }
+        }
+    }
+    e
+}
+
+/// Hypothetical CPU energy: every MAC is a 32-bit multiply + 32-bit
+/// accumulate, with operands fetched from external SDRAM (§V-B4 "assuming
+/// only external data access and 32-bit multiplications").
+pub fn cpu_energy(net: &Network, costs: &EnergyCosts) -> EnergyEstimate {
+    let macs = net.macs() as f64;
+    EnergyEstimate {
+        arithmetic: macs * (costs.mul32 + 4.0 * costs.add8),
+        memory: macs * 2.0 * costs.sdram_read, // weight + activation per MAC
+    }
+}
+
+/// The paper's headline ratio: CPU energy / BinArray energy.
+pub fn efficiency_ratio(net: &Network, m: usize) -> f64 {
+    let costs = EnergyCosts::default();
+    cpu_energy(net, &costs).total() / binarray_energy(net, m, &costs).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn;
+
+    #[test]
+    fn at_least_10x_claim_cnn_a() {
+        // §V-B4: "at least 10× more energy efficient"
+        let r = efficiency_ratio(&nn::cnn_a(), 2);
+        assert!(r >= 10.0, "CNN-A M=2 ratio {r}");
+    }
+
+    #[test]
+    fn at_least_10x_claim_mobilenets() {
+        for (net, m) in [(nn::cnn_b1(), 4), (nn::cnn_b2(), 4), (nn::cnn_b2(), 6)] {
+            let r = efficiency_ratio(&net, m);
+            assert!(r >= 10.0, "{} M={m} ratio {r}", net.name);
+        }
+    }
+
+    #[test]
+    fn higher_m_costs_more_energy() {
+        let net = nn::cnn_a();
+        let c = EnergyCosts::default();
+        let e2 = binarray_energy(&net, 2, &c).total();
+        let e4 = binarray_energy(&net, 4, &c).total();
+        assert!(e4 > e2 * 1.5 && e4 < e2 * 2.5);
+    }
+
+    #[test]
+    fn memory_dominates_cpu_energy() {
+        // the paper's point: external access is the CPU's energy sink
+        let e = cpu_energy(&nn::cnn_b2(), &EnergyCosts::default());
+        assert!(e.memory > e.arithmetic);
+    }
+}

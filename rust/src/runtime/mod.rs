@@ -1,0 +1,147 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX graphs.
+//!
+//! The Python side lowers the float reference model and the Pallas-kernel
+//! binary-approximated model to HLO *text* once at build time
+//! (`make artifacts`); this module compiles those artifacts on the PJRT
+//! CPU client and runs them from Rust.  Python is never on the request
+//! path — the executables are self-contained after `compile()`.
+//!
+//! Used for (a) golden-model cross-checks of the int8 pipeline against the
+//! float binary-approximated network, and (b) the `serve_gtsrb` example's
+//! float scoring path.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO executable with fixed input geometry.
+pub struct HloModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shape (batch, h, w, c) the graph was lowered for.
+    pub input_dims: Vec<usize>,
+}
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text artifact and compile it.
+    ///
+    /// `input_dims`: the example-input geometry the graph was lowered with
+    /// (e.g. `[8, 48, 48, 3]` for `cnn_a_pallas_b8.hlo.txt`).
+    pub fn load_hlo(&self, path: &Path, input_dims: &[usize]) -> Result<HloModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(HloModel {
+            exe,
+            input_dims: input_dims.to_vec(),
+        })
+    }
+}
+
+impl HloModel {
+    /// Run the model on a float batch (row-major NHWC), returning logits
+    /// as a flat `Vec<f32>` (batch × classes).
+    ///
+    /// The graphs are lowered with `return_tuple=True`, so the output is a
+    /// 1-tuple literal (see /opt/xla-example/README.md).
+    pub fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+        let want: usize = self.input_dims.iter().product();
+        anyhow::ensure!(
+            batch.len() == want,
+            "batch len {} != expected {want}",
+            batch.len()
+        );
+        let dims: Vec<i64> = self.input_dims.iter().map(|&d| d as i64).collect();
+        let x = xla::Literal::vec1(batch).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Convenience: int8 activations (binary point `f_input`) → float
+    /// batch → logits.
+    pub fn run_quantized(&self, batch_q: &[i8], f_input: i32) -> Result<Vec<f32>> {
+        let scale = 1.0 / (1i64 << f_input) as f32;
+        let floats: Vec<f32> = batch_q.iter().map(|&v| f32::from(v) * scale).collect();
+        self.run(&floats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        crate::artifacts::default_dir()
+            .join("cnn_a_float_b1.hlo.txt")
+            .exists()
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn float_model_runs_batch1() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let dir = crate::artifacts::default_dir();
+        let model = rt
+            .load_hlo(&dir.join("cnn_a_float_b1.hlo.txt"), &[1, 48, 48, 3])
+            .unwrap();
+        let x = vec![0.5f32; 48 * 48 * 3];
+        let logits = model.run(&x).unwrap();
+        assert_eq!(logits.len(), 43);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pallas_model_runs_and_is_finite() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let dir = crate::artifacts::default_dir();
+        let pl = rt
+            .load_hlo(&dir.join("cnn_a_pallas_b1.hlo.txt"), &[1, 48, 48, 3])
+            .unwrap();
+        let calib = crate::artifacts::CalibBatch::load(&dir.join("calib.bin")).ok();
+        let x: Vec<f32> = match &calib {
+            Some(c) => c
+                .image(0)
+                .iter()
+                .map(|&v| f32::from(v) / (1 << c.f_input) as f32)
+                .collect(),
+            None => vec![0.5f32; 48 * 48 * 3],
+        };
+        let logits = pl.run(&x).unwrap();
+        assert_eq!(logits.len(), 43);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,214 @@
+//! Row-major feature-map tensors and shape algebra.
+//!
+//! The feature buffers of the paper store activations in row-major
+//! `(H, W, C)` order (§IV-A "the buffer is organized in row-major order");
+//! the ODG converts the SA's channel-first output stream back to this
+//! layout.  This module provides the host-side equivalents used by the
+//! golden model, the simulator test benches, and the coordinator.
+
+/// Shape of a feature map: height, width, channels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c }
+    }
+
+    pub fn len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row-major linear address of `(y, x, ch)` — the FBUF addressing rule.
+    #[inline]
+    pub fn addr(&self, y: usize, x: usize, ch: usize) -> usize {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        (y * self.w + x) * self.c + ch
+    }
+
+    /// Output shape of a valid convolution with `k`×`k` kernel, stride `s`.
+    pub fn conv_out(&self, kh: usize, kw: usize, s: usize, d_out: usize) -> Shape {
+        Shape::new((self.h - kh) / s + 1, (self.w - kw) / s + 1, d_out)
+    }
+
+    /// Output shape after an `Np`×`Np` downsampling pool.
+    pub fn pool_out(&self, np: usize) -> Shape {
+        Shape::new(self.h / np, self.w / np, self.c)
+    }
+}
+
+/// An int8 feature map (one image / one layer's activations).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FeatureMap {
+    pub shape: Shape,
+    pub data: Vec<i8>,
+}
+
+impl FeatureMap {
+    pub fn zeros(shape: Shape) -> Self {
+        Self {
+            data: vec![0; shape.len()],
+            shape,
+        }
+    }
+
+    pub fn from_vec(shape: Shape, data: Vec<i8>) -> Self {
+        assert_eq!(data.len(), shape.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> i8 {
+        self.data[self.shape.addr(y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: i8) {
+        let a = self.shape.addr(y, x, ch);
+        self.data[a] = v;
+    }
+
+    /// Flatten to the dense-layer input vector (row-major, matching the
+    /// python model's `_flatten_features`).
+    pub fn flatten(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Extract the `kh×kw×C` im2col patch anchored at `(y, x)` in
+    /// `(ky, kx, c)` order — the AGU's walk order within a window.
+    pub fn patch(&self, y: usize, x: usize, kh: usize, kw: usize, out: &mut Vec<i8>) {
+        out.clear();
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let base = self.shape.addr(y + ky, x + kx, 0);
+                out.extend_from_slice(&self.data[base..base + self.shape.c]);
+            }
+        }
+    }
+
+    /// Horizontal tile split: divide the width dimension into `n` near-equal
+    /// tiles (the scatter/gather block's policy for N_SA > 1), returning
+    /// per-tile column ranges that overlap by `halo` columns.
+    pub fn tile_columns(&self, n: usize, halo: usize) -> Vec<(usize, usize)> {
+        tile_ranges(self.shape.w, n, halo)
+    }
+}
+
+/// Split `len` into `n` near-equal ranges with `halo` overlap on each seam.
+pub fn tile_ranges(len: usize, n: usize, halo: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 1 && n <= len, "cannot split {len} into {n} tiles");
+    let base = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for i in 0..n {
+        let w = base + usize::from(i < rem);
+        let lo = start.saturating_sub(halo);
+        let hi = (start + w + halo).min(len);
+        out.push((lo, hi));
+        start += w;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Xoshiro256};
+
+    #[test]
+    fn addr_is_row_major() {
+        let s = Shape::new(4, 5, 3);
+        assert_eq!(s.addr(0, 0, 0), 0);
+        assert_eq!(s.addr(0, 0, 2), 2);
+        assert_eq!(s.addr(0, 1, 0), 3);
+        assert_eq!(s.addr(1, 0, 0), 15);
+        assert_eq!(s.addr(3, 4, 2), 4 * 5 * 3 - 1);
+    }
+
+    #[test]
+    fn conv_pool_shapes_cnn_a() {
+        // CNN-A walk: 48 → conv7 → 42 → pool2 → 21 → conv4 → 18 → pool6 → 3
+        let s = Shape::new(48, 48, 3);
+        let c1 = s.conv_out(7, 7, 1, 5);
+        assert_eq!((c1.h, c1.w, c1.c), (42, 42, 5));
+        let p1 = c1.pool_out(2);
+        assert_eq!((p1.h, p1.w), (21, 21));
+        let c2 = p1.conv_out(4, 4, 1, 150);
+        assert_eq!((c2.h, c2.w, c2.c), (18, 18, 150));
+        let p2 = c2.pool_out(6);
+        assert_eq!(p2.len(), 1350);
+    }
+
+    #[test]
+    fn patch_order_matches_reference() {
+        // 3x3x2 map, 2x2 patch at (1,0): rows (1,0),(1,1),(2,0),(2,1)
+        let mut fm = FeatureMap::zeros(Shape::new(3, 3, 2));
+        for y in 0..3 {
+            for x in 0..3 {
+                for c in 0..2 {
+                    fm.set(y, x, c, (y * 9 + x * 3 + c) as i8);
+                }
+            }
+        }
+        let mut p = Vec::new();
+        fm.patch(1, 0, 2, 2, &mut p);
+        assert_eq!(p, vec![9, 10, 12, 13, 18, 19, 21, 22]);
+    }
+
+    #[test]
+    fn patch_covers_whole_kernel() {
+        prop::check(100, "patch length = kh*kw*C", |rng| {
+            let h = 3 + rng.below(10) as usize;
+            let w = 3 + rng.below(10) as usize;
+            let c = 1 + rng.below(4) as usize;
+            let kh = 1 + rng.below(3.min(h as u64)) as usize;
+            let kw = 1 + rng.below(3.min(w as u64)) as usize;
+            let fm = FeatureMap::zeros(Shape::new(h, w, c));
+            let y = rng.below((h - kh + 1) as u64) as usize;
+            let x = rng.below((w - kw + 1) as u64) as usize;
+            let mut p = Vec::new();
+            fm.patch(y, x, kh, kw, &mut p);
+            assert_eq!(p.len(), kh * kw * c);
+        });
+    }
+
+    #[test]
+    fn tiles_cover_and_order() {
+        prop::check(200, "tiles cover [0,len) in order", |rng| {
+            let len = 2 + rng.below(100) as usize;
+            let n = 1 + rng.below(len.min(8) as u64) as usize;
+            let halo = rng.below(3) as usize;
+            let tiles = tile_ranges(len, n, halo);
+            assert_eq!(tiles.len(), n);
+            assert_eq!(tiles[0].0, 0);
+            assert_eq!(tiles[n - 1].1, len);
+            // Non-halo cores must be contiguous and disjoint.
+            let mut covered = vec![false; len];
+            let mut rng2 = Xoshiro256::new(0);
+            let _ = &mut rng2;
+            let base = len / n;
+            let rem = len % n;
+            let mut start = 0;
+            for i in 0..n {
+                let w = base + usize::from(i < rem);
+                for k in start..start + w {
+                    assert!(!covered[k]);
+                    covered[k] = true;
+                }
+                // each core must fall inside its (halo-extended) tile
+                assert!(tiles[i].0 <= start && start + w <= tiles[i].1);
+                start += w;
+            }
+            assert!(covered.iter().all(|&b| b));
+        });
+    }
+}

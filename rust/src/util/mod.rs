@@ -1,0 +1,71 @@
+//! Shared utilities: deterministic PRNG, a tiny property-test harness
+//! (the environment has no network access, so `proptest` is replaced by
+//! [`prop`]), and little-endian binary IO helpers for the artifact formats.
+
+pub mod prop;
+pub mod rng;
+
+use std::io::{self, Read};
+
+/// Read a little-endian `u32` from a reader.
+pub fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read a little-endian `i32` from a reader.
+pub fn read_i32<R: Read>(r: &mut R) -> io::Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(i32::from_le_bytes(b))
+}
+
+/// Read `n` raw `i8` values.
+pub fn read_i8_vec<R: Read>(r: &mut R, n: usize) -> io::Result<Vec<i8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf.into_iter().map(|b| b as i8).collect())
+}
+
+/// Read `n` little-endian `i32` values.
+pub fn read_i32_vec<R: Read>(r: &mut R, n: usize) -> io::Result<Vec<i32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_u32_i32() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        buf.extend_from_slice(&(-12345i32).to_le_bytes());
+        let mut cur = io::Cursor::new(buf);
+        assert_eq!(read_u32(&mut cur).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_i32(&mut cur).unwrap(), -12345);
+    }
+
+    #[test]
+    fn i8_vec_sign_preserved() {
+        let raw = vec![0xFFu8, 0x01, 0x80, 0x7F];
+        let mut cur = io::Cursor::new(raw);
+        assert_eq!(read_i8_vec(&mut cur, 4).unwrap(), vec![-1, 1, -128, 127]);
+    }
+
+    #[test]
+    fn i32_vec_le() {
+        let mut buf = Vec::new();
+        for v in [-1i32, 0, 65536] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut cur = io::Cursor::new(buf);
+        assert_eq!(read_i32_vec(&mut cur, 3).unwrap(), vec![-1, 0, 65536]);
+    }
+}

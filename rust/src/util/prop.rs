@@ -1,0 +1,85 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! Runs a property over `n` seeded random cases; on failure it reports the
+//! failing case index and seed so the case reproduces exactly.  Shrinking
+//! is intentionally out of scope — failures print their full input via the
+//! property's own panic message.
+//!
+//! ```
+//! use binarray::util::{prop, rng::Xoshiro256};
+//! prop::check(100, "addition commutes", |rng| {
+//!     let (a, b) = (rng.range_i64(-1000, 1000), rng.range_i64(-1000, 1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// Base seed for all property runs; change to re-roll the corpus.
+pub const BASE_SEED: u64 = 0xB1AA_4201;
+
+/// Run `property` on `cases` seeded inputs. Panics with case/seed info on
+/// the first failure.
+pub fn check<F: FnMut(&mut Xoshiro256)>(cases: u32, name: &str, mut property: F) {
+    for case in 0..cases {
+        let seed = BASE_SEED ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random vector of `i8` activations.
+pub fn i8_vec(rng: &mut Xoshiro256, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.i8()).collect()
+}
+
+/// Generate a random ±1 sign vector.
+pub fn sign_vec(rng: &mut Xoshiro256, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.sign()).collect()
+}
+
+/// Generate a random f32 vector from N(0, 1).
+pub fn normal_vec(rng: &mut Xoshiro256, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, "trivial", |rng| {
+            let v = rng.below(10);
+            assert!(v < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn reports_failure_with_context() {
+        check(50, "must fail", |rng| {
+            assert!(rng.below(100) < 1, "value too big");
+        });
+    }
+
+    #[test]
+    fn generators_have_right_lengths() {
+        let mut rng = Xoshiro256::new(1);
+        assert_eq!(i8_vec(&mut rng, 17).len(), 17);
+        assert_eq!(sign_vec(&mut rng, 9).iter().all(|&s| s == 1 || s == -1), true);
+        assert_eq!(normal_vec(&mut rng, 5).len(), 5);
+    }
+}

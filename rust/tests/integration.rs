@@ -1,0 +1,201 @@
+//! End-to-end integration tests over the real build artifacts.
+//!
+//! These tests require `make artifacts` to have run (they are skipped
+//! gracefully otherwise, so `cargo test` works on a fresh checkout).
+//! They pin the full cross-language contract:
+//!
+//!   numpy int8 oracle  ==  Rust golden model  ==  cycle-accurate sim
+//!                      ==  coordinator serving path
+//!   analytical model   ≈   simulator cycles (sub-percent)
+//!   PJRT float model   ≈   int8 pipeline (top-1 agreement)
+
+use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+use binarray::tensor::Shape;
+use binarray::{golden, isa, nn, perf};
+
+fn load() -> Option<(QuantNetwork, CalibBatch, GoldenLogits)> {
+    let dir = binarray::artifacts::default_dir();
+    let net = QuantNetwork::load(&dir.join("cnn_a.weights.bin")).ok()?;
+    let calib = CalibBatch::load(&dir.join("calib.bin")).ok()?;
+    let gold = GoldenLogits::load(&dir.join("golden.bin")).ok()?;
+    Some((net, calib, gold))
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match load() {
+            Some(v) => v,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn golden_model_bit_exact_vs_numpy_oracle() {
+    let (net, calib, gold) = need_artifacts!();
+    let shape = Shape::new(calib.h, calib.w, calib.c);
+    for i in 0..gold.n {
+        let logits = golden::forward(&net, calib.image(i), shape, None);
+        assert_eq!(
+            logits.as_slice(),
+            gold.row(i),
+            "frame {i}: Rust golden model != numpy oracle"
+        );
+    }
+}
+
+#[test]
+fn simulator_bit_exact_vs_golden_all_configs() {
+    let (net, calib, _) = need_artifacts!();
+    let shape = Shape::new(calib.h, calib.w, calib.c);
+    for cfg in PAPER_CONFIGS {
+        let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+        for i in 0..4 {
+            let (logits, _) = sys.run_frame(calib.image(i)).unwrap();
+            let want = golden::forward(&net, calib.image(i), shape, None);
+            assert_eq!(logits, want, "config {} frame {i}", cfg.label());
+        }
+    }
+}
+
+#[test]
+fn accuracy_on_calib_set_is_high() {
+    // The trained + binarized + quantized network must still classify the
+    // synthetic test set well — the end-to-end signal that nothing in the
+    // pipeline (approximation, quantization, simulation) silently died.
+    let (net, calib, _) = need_artifacts!();
+    let shape = Shape::new(calib.h, calib.w, calib.c);
+    let mut correct = 0;
+    for i in 0..calib.n {
+        let logits = golden::forward(&net, calib.image(i), shape, None);
+        if golden::argmax(&logits) as i32 == calib.labels[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / calib.n as f64;
+    assert!(acc > 0.80, "int8 accuracy {acc} too low — pipeline regression");
+}
+
+#[test]
+fn high_throughput_mode_loses_little_accuracy() {
+    // §IV-D: the M_arch-level fast mode trades a controlled amount of
+    // accuracy; with M=4→2 on this easy task it should stay usable.
+    let (net, calib, _) = need_artifacts!();
+    let shape = Shape::new(calib.h, calib.w, calib.c);
+    let mut correct_fast = 0;
+    for i in 0..calib.n {
+        let logits = golden::forward(&net, calib.image(i), shape, Some(2));
+        if golden::argmax(&logits) as i32 == calib.labels[i] {
+            correct_fast += 1;
+        }
+    }
+    let acc = correct_fast as f64 / calib.n as f64;
+    assert!(acc > 0.5, "fast-mode accuracy collapsed: {acc}");
+}
+
+#[test]
+fn analytical_model_tracks_simulator_full_network() {
+    let (net, calib, _) = need_artifacts!();
+    for cfg in [ArrayConfig::new(1, 8, 2), ArrayConfig::new(1, 32, 2)] {
+        let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+        sys.set_mode(Some(2));
+        let (_, stats) = sys.run_frame(calib.image(0)).unwrap();
+        let analytic = perf::network_cycles(&nn::cnn_a(), cfg, 2, false);
+        let err = (analytic - stats.cycles as f64).abs() / stats.cycles as f64;
+        assert!(
+            err < 0.01,
+            "config {}: analytic {analytic} vs sim {} ({err:.4})",
+            cfg.label(),
+            stats.cycles
+        );
+    }
+}
+
+#[test]
+fn serving_path_equals_direct_simulation() {
+    let (net, calib, _) = need_artifacts!();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 2,
+            policy: BatchPolicy::default(),
+        },
+        net.clone(),
+    )
+    .unwrap();
+    let shape = Shape::new(calib.h, calib.w, calib.c);
+    let rxs: Vec<_> = (0..16)
+        .map(|i| coord.submit(calib.image(i).to_vec(), Mode::HighAccuracy))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx.recv().unwrap();
+        let want = golden::forward(&net, calib.image(i), shape, None);
+        assert_eq!(reply.logits, want, "served frame {i}");
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 16);
+}
+
+#[test]
+fn program_compiles_and_mentions_listing1_values() {
+    let (net, _, _) = need_artifacts!();
+    let prog = isa::compile_network(&net);
+    let listing = prog.listing();
+    // Listing 1's layer parameters for CNN-A
+    assert!(listing.contains("STI W_I 48"));
+    assert!(listing.contains("STI W_B 7"));
+    assert!(listing.contains("STI W_I 21"));
+    assert!(listing.contains("STI W_B 4"));
+    assert!(listing.contains("HLT"));
+    assert!(listing.contains("BRA 1"));
+    // machine-code roundtrip of the whole program
+    for ins in &prog.instrs {
+        assert_eq!(isa::Instr::decode(ins.encode()).unwrap(), *ins);
+    }
+}
+
+#[test]
+fn compression_factor_matches_eq6_on_real_network() {
+    // Table II cf column: CNN-A at M = 2/3/4 → ~15.8/10.6/7.9
+    let (net, _, _) = need_artifacts!();
+    let _ = net;
+    let layer_sizes: Vec<(usize, usize)> = nn::cnn_a()
+        .layers
+        .iter()
+        .map(|l| (l.d_out(), l.n_c()))
+        .collect();
+    for (m, want) in [(2usize, 15.8f64), (3, 10.6), (4, 7.9)] {
+        let orig: u64 = layer_sizes
+            .iter()
+            .map(|&(d, nc)| (d * (nc + 1) * 32) as u64)
+            .sum();
+        let comp: u64 = layer_sizes
+            .iter()
+            .map(|&(d, nc)| (d * m * (nc + 8)) as u64)
+            .sum();
+        let cf = orig as f64 / comp as f64;
+        assert!(
+            (cf - want).abs() < 0.35,
+            "M={m}: cf {cf:.2} vs paper {want}"
+        );
+    }
+}
+
+#[test]
+fn mode_switch_cycle_ratio_near_two() {
+    let (net, calib, _) = need_artifacts!();
+    let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), net).unwrap();
+    let (_, full) = sys.run_frame(calib.image(0)).unwrap();
+    sys.set_mode(Some(2));
+    let (_, fast) = sys.run_frame(calib.image(0)).unwrap();
+    let ratio = full.cycles as f64 / fast.cycles as f64;
+    assert!(
+        (1.8..2.2).contains(&ratio),
+        "M=4 vs M=2 cycle ratio {ratio} (expect ≈2)"
+    );
+}

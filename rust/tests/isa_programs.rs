@@ -1,0 +1,125 @@
+//! ISA-level integration: assembling Listing-1-style programs by hand and
+//! executing them on the control unit, independent of the compiler.
+
+use binarray::binarray::cu::ControlUnit;
+use binarray::isa::{flags, Instr, Program, Reg};
+
+/// Assemble a program from text lines (comments allowed).
+fn assemble(lines: &[&str]) -> Vec<Instr> {
+    lines
+        .iter()
+        .filter(|l| !l.split(';').next().unwrap_or("").trim().is_empty())
+        .map(|l| Instr::assemble(l).expect(l))
+        .collect()
+}
+
+fn wrap(instrs: Vec<Instr>) -> Program {
+    Program {
+        entry: instrs
+            .iter()
+            .position(|i| matches!(i, Instr::Hlt))
+            .unwrap_or(0),
+        instrs,
+        bindings: vec![],
+        fbuf_words: 0,
+        wgt_words: 0,
+        alpha_words: 0,
+    }
+}
+
+#[test]
+fn listing1_executes_two_conv_layers() {
+    // The paper's Listing 1, verbatim semantics.
+    let prog = wrap(assemble(&[
+        "STI W_I 48 ; Set input width to 48 pixels",
+        "STI W_B 7  ; Set kernel width to 7 pixels",
+        "HLT        ; Wait for trigger from PS",
+        "CONV 0     ; Start CONV of 1st layer",
+        "STI W_I 21 ; Set input width to 21 pixels",
+        "STI W_B 4  ; Set kernel width to 4 pixels",
+        "CONV 1     ; 2nd CONV layer",
+        "BRA 0      ; Branch back to step 1 (the paper's 'BRA 1', 0-indexed)",
+    ]));
+    let mut cu = ControlUnit::new();
+    // Frame 1: initial STIs run, then the CU parks on HLT... the first
+    // trigger carries it through both CONVs and back to the HLT.
+    let mut seen = Vec::new();
+    let run = cu.run_frame(&prog, |lr| {
+        seen.push((lr.layer_id, lr.reg(Reg::WIn), lr.reg(Reg::WKer)));
+        100
+    });
+    assert_eq!(seen, vec![(0, 48, 7), (1, 21, 4)]);
+    assert_eq!(run.layers_run, 2);
+    assert_eq!(run.layer_cycles, 200);
+
+    // Frame 2 repeats identically (BRA loop).
+    seen.clear();
+    cu.run_frame(&prog, |lr| {
+        seen.push((lr.layer_id, lr.reg(Reg::WIn), lr.reg(Reg::WKer)));
+        100
+    });
+    assert_eq!(seen, vec![(0, 48, 7), (1, 21, 4)]);
+}
+
+#[test]
+fn dense_and_flags_roundtrip() {
+    let prog = wrap(assemble(&[
+        "HLT",
+        &format!("STI FLAGS {}", flags::RELU | flags::DENSE),
+        "STI N_IN 1350",
+        "STI D 340",
+        "DENSE 2",
+        &format!("STI FLAGS {}", flags::LAST),
+        "DENSE 3",
+        "BRA 0",
+    ]));
+    let mut cu = ControlUnit::new();
+    let mut got = Vec::new();
+    let run = cu.run_frame(&prog, |lr| {
+        got.push((lr.layer_id, lr.dense, lr.flag(flags::RELU), lr.flag(flags::LAST)));
+        1
+    });
+    assert_eq!(got, vec![(2, true, true, false), (3, true, false, true)]);
+    assert!(run.frame_done);
+}
+
+#[test]
+fn machine_code_image_runs_after_decode() {
+    // encode → u32 memory image → decode → execute: the IMEM path of
+    // Fig. 10 (the CPU loads the program into instruction memory).
+    let src = wrap(assemble(&["HLT", "STI W_I 9", "CONV 0", "BRA 0"]));
+    let image: Vec<u32> = src.instrs.iter().map(Instr::encode).collect();
+    let decoded: Vec<Instr> = image
+        .iter()
+        .map(|&w| Instr::decode(w).unwrap())
+        .collect();
+    assert_eq!(decoded, src.instrs);
+    let prog = wrap(decoded);
+    let mut cu = ControlUnit::new();
+    let mut widths = Vec::new();
+    cu.run_frame(&prog, |lr| {
+        widths.push(lr.reg(Reg::WIn));
+        0
+    });
+    assert_eq!(widths, vec![9]);
+}
+
+#[test]
+fn nop_only_program_terminates() {
+    let prog = wrap(vec![Instr::Nop, Instr::Hlt, Instr::Nop, Instr::Bra(1)]);
+    let mut cu = ControlUnit::new();
+    let run = cu.run_frame(&prog, |_| 0);
+    assert_eq!(run.layers_run, 0);
+    // second frame also terminates (parks back on HLT via BRA)
+    let run2 = cu.run_frame(&prog, |_| 0);
+    assert_eq!(run2.layers_run, 0);
+}
+
+#[test]
+fn assembler_rejects_garbage() {
+    assert!(Instr::assemble("FLY 1").is_err());
+    assert!(Instr::assemble("STI NOPE 3").is_err());
+    assert!(Instr::assemble("STI W_I").is_err());
+    assert!(Instr::assemble("CONV banana").is_err());
+    assert!(Instr::assemble("   ; only a comment").is_err());
+}

@@ -1,0 +1,146 @@
+//! Cross-model consistency: the analytical performance model, the area
+//! model, and the energy model must agree with each other and with the
+//! architecture's identities wherever their domains overlap.
+
+use binarray::binarray::{ArrayConfig, CLOCK_HZ, PAPER_CONFIGS};
+use binarray::perf::energy::{binarray_energy, cpu_energy, EnergyCosts};
+use binarray::util::prop;
+use binarray::{area, nn, perf};
+
+#[test]
+fn fps_times_cycles_is_clock() {
+    // fps = CLOCK / cycles must hold exactly for every (net, cfg, M)
+    for net in [nn::cnn_a(), nn::cnn_b1(), nn::cnn_b2()] {
+        for cfg in PAPER_CONFIGS {
+            for m in [2usize, 4, 6] {
+                let cc = perf::network_cycles(&net, cfg, m, false);
+                let fps = perf::fps(&net, cfg, m, false);
+                assert!((fps * cc - CLOCK_HZ).abs() / CLOCK_HZ < 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn offloading_the_tail_never_hurts() {
+    for net in [nn::cnn_b1(), nn::cnn_b2()] {
+        for cfg in PAPER_CONFIGS {
+            let with = perf::network_cycles(&net, cfg, 4, true);
+            let without = perf::network_cycles(&net, cfg, 4, false);
+            assert!(with <= without, "{}: {with} > {without}", cfg.label());
+        }
+    }
+}
+
+#[test]
+fn perf_monotone_in_each_design_parameter() {
+    // Growing any single design parameter must never *reduce* fps, for
+    // networks whose N_c always covers D_arch (CNN-A's smallest N_c is 80).
+    let net = nn::cnn_a();
+    prop::check(100, "fps monotone in N_SA / D_arch / M_arch", |rng| {
+        let base = ArrayConfig::new(
+            1 + rng.below(8) as usize,
+            [8usize, 16, 32][rng.below(3) as usize],
+            1 + rng.below(4) as usize,
+        );
+        let m = base.m_arch; // M = M_arch: single level group
+        let f0 = perf::fps(&net, base, m, false);
+        let more_sa = ArrayConfig::new(base.n_sa * 2, base.d_arch, base.m_arch);
+        assert!(perf::fps(&net, more_sa, m, false) >= f0 - 1e-9);
+        if base.d_arch < 64 {
+            let more_d = ArrayConfig::new(base.n_sa, base.d_arch * 2, base.m_arch);
+            assert!(perf::fps(&net, more_d, m, false) >= f0 * 0.99);
+        }
+    });
+}
+
+#[test]
+fn area_monotone_in_each_design_parameter() {
+    prop::check(100, "LUT/FF/DSP monotone in design params", |rng| {
+        let base = ArrayConfig::new(
+            1 + rng.below(8) as usize,
+            4 + rng.below(60) as usize,
+            1 + rng.below(4) as usize,
+        );
+        let l0 = area::logic(base);
+        for bigger in [
+            ArrayConfig::new(base.n_sa + 1, base.d_arch, base.m_arch),
+            ArrayConfig::new(base.n_sa, base.d_arch + 8, base.m_arch),
+            ArrayConfig::new(base.n_sa, base.d_arch, base.m_arch + 1),
+        ] {
+            let l1 = area::logic(bigger);
+            assert!(l1.lut >= l0.lut && l1.ff >= l0.ff && l1.dsp >= l0.dsp);
+        }
+    });
+}
+
+#[test]
+fn dsp_identity_for_arbitrary_configs() {
+    prop::check(200, "DSP == N_SA * M_arch always", |rng| {
+        let cfg = ArrayConfig::new(
+            1 + rng.below(32) as usize,
+            1 + rng.below(64) as usize,
+            1 + rng.below(8) as usize,
+        );
+        assert_eq!(area::logic(cfg).dsp as usize, cfg.n_sa * cfg.m_arch);
+    });
+}
+
+#[test]
+fn energy_scales_linearly_in_m_arithmetic() {
+    let costs = EnergyCosts::default();
+    for net in [nn::cnn_a(), nn::cnn_b2()] {
+        let e1 = binarray_energy(&net, 1, &costs);
+        let e4 = binarray_energy(&net, 4, &costs);
+        // arithmetic is exactly linear in M (M sign-adds per MAC)
+        let ratio = e4.arithmetic / e1.arithmetic;
+        assert!((ratio - 4.0).abs() < 0.01, "{}: ratio {ratio}", net.name);
+    }
+}
+
+#[test]
+fn cpu_energy_independent_of_binarization() {
+    let costs = EnergyCosts::default();
+    let net = nn::cnn_a();
+    let a = cpu_energy(&net, &costs).total();
+    let b = cpu_energy(&net, &costs).total();
+    assert_eq!(a, b);
+    // and strictly greater than BinArray for every M the paper uses
+    for m in 1..=6 {
+        assert!(a > binarray_energy(&net, m, &costs).total() * 10.0);
+    }
+}
+
+#[test]
+fn weight_storage_vs_compression_factor_consistent() {
+    // Eq. 6's network compression factor equals
+    // float_bits / weight_storage_bits computed by the area module.
+    let net = nn::cnn_a();
+    for m in [2usize, 3, 4] {
+        let storage = area::weight_storage_bits(&net, m) as f64;
+        let float_bits: f64 = net
+            .layers
+            .iter()
+            .map(|l| (l.d_out() * (l.n_c() + 1) * 32) as f64)
+            .sum();
+        let cf = float_bits / storage;
+        // paper Table II column: 15.8 / 10.6 / 7.9
+        let want = [15.8, 10.6, 7.9][m - 2];
+        // area counts bias at 32 bits vs Eq. 6's bits_alpha=8 per level —
+        // allow the corresponding slack
+        assert!(
+            (cf - want).abs() < 0.9,
+            "M={m}: storage-based cf {cf:.2} vs Eq.6 {want}"
+        );
+    }
+}
+
+#[test]
+fn eyeriss_and_edgetpu_reference_points_in_range() {
+    // Table III context columns: our largest configs should bracket the
+    // published accelerator points within an order of magnitude.
+    let b1_best = perf::fps(&nn::cnn_b1(), PAPER_CONFIGS[3], 4, true);
+    let b2_best = perf::fps(&nn::cnn_b2(), PAPER_CONFIGS[3], 4, true);
+    assert!(b1_best > perf::published::EYERISS_V2_CNN_B1_FPS * 0.3);
+    assert!(b2_best > perf::published::EDGE_TPU_CNN_B2_FPS * 0.3);
+}

@@ -1,0 +1,244 @@
+//! Fuzz-style equivalence: random network topologies through the whole
+//! Rust pipeline — approximation → quantization → compiler → simulator —
+//! checked against the golden model at every step.
+//!
+//! This is the deepest invariant in the repo: for ANY network the
+//! compiler accepts and ANY [N_SA, D_arch, M_arch], the cycle-accurate
+//! simulator must be output-identical to the bit-accurate functional
+//! model, in both accuracy modes.
+
+use binarray::approx::algorithm2;
+use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// Build a random conv layer whose planes/alphas come from a *real*
+/// Algorithm 2 run on random float weights (not just random signs) so the
+/// value distributions match production use.
+fn random_conv(
+    rng: &mut Xoshiro256,
+    c_in: usize,
+    m: usize,
+    max_d: usize,
+    kh: usize,
+    pool: usize,
+) -> QuantLayer {
+    let d = 1 + rng.below(max_d as u64) as usize;
+    let n_c = kh * kh * c_in;
+    let mut planes = Vec::with_capacity(d * m * n_c);
+    let mut alpha_q = Vec::with_capacity(d * m);
+    for _ in 0..d {
+        let w: Vec<f32> = (0..n_c).map(|_| rng.normal() as f32 * 0.3).collect();
+        let ap = algorithm2(&w, m, 50);
+        for p in &ap.planes {
+            planes.extend_from_slice(p);
+        }
+        for &a in &ap.alpha {
+            alpha_q.push(((a * 64.0).round() as i32).clamp(1, 127) as i8);
+        }
+    }
+    QuantLayer {
+        kind: LayerKind::Conv,
+        planes,
+        alpha_q,
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh,
+        kw: kh,
+        c: c_in,
+        f_alpha: 6,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool,
+        stride: 1,
+    }
+}
+
+fn random_dense(rng: &mut Xoshiro256, n_in: usize, m: usize, relu: bool) -> QuantLayer {
+    let d = 2 + rng.below(24) as usize;
+    let mut planes = Vec::new();
+    let mut alpha_q = Vec::new();
+    for _ in 0..d {
+        let w: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32 * 0.2).collect();
+        let ap = algorithm2(&w, m, 50);
+        for p in &ap.planes {
+            planes.extend_from_slice(p);
+        }
+        for &a in &ap.alpha {
+            alpha_q.push(((a * 64.0).round() as i32).clamp(1, 127) as i8);
+        }
+    }
+    QuantLayer {
+        kind: LayerKind::Dense,
+        planes,
+        alpha_q,
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 6,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    }
+}
+
+/// Generate a random but *compilable* network: conv stack whose dims walk
+/// cleanly (pool divides conv output), then 1–2 dense layers.
+fn random_network(rng: &mut Xoshiro256, m: usize) -> (QuantNetwork, usize) {
+    // choose geometry walking forward from a random input size
+    let mut layers = Vec::new();
+    let c0 = 1 + rng.below(3) as usize;
+    let mut c = c0;
+    // first conv: pick (kh, pool) then input size that works
+    let kh1 = 2 + rng.below(3) as usize; // 2..4
+    let pool1 = 1 + rng.below(2) as usize; // 1..2
+    let conv_out1 = pool1 * (3 + rng.below(5) as usize); // pooled-divisible
+    let hw = conv_out1 + kh1 - 1;
+    let l1 = random_conv(rng, c, m, 8, kh1, pool1);
+    c = l1.d;
+    layers.push(l1);
+    let hw1 = conv_out1 / pool1;
+
+    // optional second conv
+    let mut flat_hw = hw1;
+    if rng.below(2) == 0 && hw1 >= 5 {
+        let kh2 = 2;
+        let conv_out2 = hw1 - kh2 + 1;
+        // pool that divides conv_out2 (1 always works)
+        let pool2 = if conv_out2 % 2 == 0 { 2 } else { 1 };
+        let l2 = random_conv(rng, c, m, 12, kh2, pool2);
+        c = l2.d;
+        flat_hw = conv_out2 / pool2;
+        layers.push(l2);
+    }
+
+    let flat = flat_hw * flat_hw * c;
+    layers.push(random_dense(rng, flat, m, true));
+    let d_last = layers.last().unwrap().d;
+    layers.push(random_dense(rng, d_last, m, false));
+
+    (
+        QuantNetwork {
+            f_input: 7,
+            layers,
+        },
+        hw,
+    )
+}
+
+#[test]
+fn simulator_equals_golden_on_random_networks() {
+    prop::check(25, "sim == golden on random topologies", |rng| {
+        let m = 1 + rng.below(4) as usize;
+        let (net, hw) = random_network(rng, m);
+        // input dims must be inferable for the compiler; skip nets whose
+        // geometry is ambiguous (infer returns a different-but-valid size).
+        let inferred = binarray::isa::compiler::infer_input_dims(&net);
+        if inferred.0 != hw {
+            return; // ambiguous geometry — legitimate skip, not a failure
+        }
+        let shape = Shape::new(hw, hw, net.layers[0].c);
+        let image = prop::i8_vec(rng, shape.len());
+        let want = golden::forward(&net, &image, shape, None);
+
+        let cfgs = [
+            ArrayConfig::new(1, 4, 1),
+            ArrayConfig::new(1, 8, 2),
+            ArrayConfig::new(3, 16, 2),
+        ];
+        for cfg in cfgs {
+            if cfg.m_arch > m {
+                continue;
+            }
+            let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+            let (logits, stats) = sys.run_frame(&image).unwrap();
+            assert_eq!(
+                logits,
+                want,
+                "cfg {} m={m} hw={hw} layers={}",
+                cfg.label(),
+                net.layers.len()
+            );
+            assert!(stats.cycles > 0);
+            // fast mode must equal golden with truncated levels
+            if m > 1 {
+                let mut sys2 = BinArraySystem::new(cfg, net.clone()).unwrap();
+                sys2.set_mode(Some(1));
+                let (fast, _) = sys2.run_frame(&image).unwrap();
+                let want_fast = golden::forward(&net, &image, shape, Some(1));
+                assert_eq!(fast, want_fast, "fast mode cfg {}", cfg.label());
+            }
+        }
+    });
+}
+
+#[test]
+fn cycle_counts_scale_down_with_bigger_arrays() {
+    // "More hardware never means more cycles" holds only while windows
+    // are long enough to hide the per-PA DSP serialization (window cost
+    // is max(N_c, D_arch) — §V-A3's depth-wise caveat).  Restrict the
+    // comparison to configs with D_arch ≤ the network's smallest N_c.
+    prop::check(10, "more hardware never means more cycles", |rng| {
+        let (net, hw) = random_network(rng, 2);
+        let inferred = binarray::isa::compiler::infer_input_dims(&net);
+        if inferred.0 != hw {
+            return;
+        }
+        let min_nc = net.layers.iter().map(|l| l.n_c()).min().unwrap();
+        let shape = Shape::new(hw, hw, net.layers[0].c);
+        let image = prop::i8_vec(rng, shape.len());
+        let mut prev = u64::MAX;
+        for cfg in [
+            ArrayConfig::new(1, 4, 2),
+            ArrayConfig::new(1, 16, 2),
+            ArrayConfig::new(4, 16, 2),
+        ] {
+            if cfg.d_arch > min_nc {
+                continue;
+            }
+            let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+            let (_, stats) = sys.run_frame(&image).unwrap();
+            assert!(
+                stats.cycles <= prev,
+                "{}: {} > previous {prev}",
+                cfg.label(),
+                stats.cycles
+            );
+            prev = stats.cycles;
+        }
+    });
+}
+
+#[test]
+fn pe_utilization_bounded_by_one() {
+    prop::check(10, "PE utilization ∈ (0, 1]", |rng| {
+        let (net, hw) = random_network(rng, 2);
+        let inferred = binarray::isa::compiler::infer_input_dims(&net);
+        if inferred.0 != hw {
+            return;
+        }
+        let shape = Shape::new(hw, hw, net.layers[0].c);
+        let image = prop::i8_vec(rng, shape.len());
+        let cfg = ArrayConfig::new(1, 8, 2);
+        let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+        let (_, stats) = sys.run_frame(&image).unwrap();
+        for s in &stats.sa_stats {
+            if s.cycles == 0 {
+                continue;
+            }
+            let u = s.pe_utilization(cfg.d_arch, cfg.m_arch);
+            assert!(u > 0.0 && u <= 1.0 + 1e-9, "utilization {u}");
+        }
+    });
+}
