@@ -2,21 +2,35 @@
 //!
 //! Measures the L3 request path end to end:
 //!   * frames/second of the cycle-accurate simulator (CNN-A, per config);
-//!   * simulated-cycles/second (the simulator's own "clock rate");
+//!   * the plan/execute refactor's host-side speedup: a legacy-style
+//!     executor (per-frame schedule recomputation + per-layer feature-map
+//!     copies, single-threaded) vs `run_frames` over the precomputed
+//!     `ExecutionPlan` (zero-copy views + scoped host thread pool) on a
+//!     multi-SA config — logits asserted byte-identical to the golden
+//!     model on both paths;
 //!   * coordinator overhead: serve N frames through the full router →
 //!     batcher → worker stack vs calling the simulator directly.
 //!
-//! Targets (DESIGN.md §Perf): ≥50 M simulated PE-cycles/s/core so the
-//! simulated 400 MHz accelerator is the bottleneck in reporting, and <5%
-//! coordinator overhead.
+//! Results are also written to `BENCH_sim_hotpath.json` so the perf
+//! trajectory is machine-readable across PRs.
 //!
 //! Run: `cargo bench --bench sim_hotpath`
+//! (Falls back to the synthetic CNN-A when `make artifacts` hasn't run.)
 
 use std::time::{Duration, Instant};
 
-use binarray::artifacts::{self, CalibBatch, QuantNetwork};
+use std::ops::Range;
+
+use binarray::artifacts::{self, CalibBatch, LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::agu::Agu;
+use binarray::binarray::amu::{Amu, Odg};
+use binarray::binarray::plan::schedule;
 use binarray::binarray::{ArrayConfig, BinArraySystem};
 use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+use binarray::isa::{compile_network, Program};
+use binarray::tensor::{FeatureMap, Shape};
+use binarray::util::{prop, rng::Xoshiro256};
+use binarray::{fixp, golden};
 
 fn bench<F: FnMut() -> u64>(label: &str, iters: usize, mut f: F) -> (f64, u64) {
     // warmup
@@ -37,29 +51,213 @@ fn bench<F: FnMut() -> u64>(label: &str, iters: usize, mut f: F) -> (f64, u64) {
     (per, cycles / iters as u64)
 }
 
-fn main() {
-    let dir = artifacts::default_dir();
-    let qnet = match QuantNetwork::load(&dir.join("cnn_a.weights.bin")) {
-        Ok(n) => n,
-        Err(e) => {
-            eprintln!("artifacts not built ({e})");
-            std::process::exit(1);
-        }
-    };
-    let calib = CalibBatch::load(&dir.join("calib.bin")).expect("calib.bin");
-    let image = calib.image(0).to_vec();
+/// The seed's executor, preserved verbatim as the measurement baseline:
+/// single host thread, each layer's schedule re-derived on every frame
+/// (one `schedule` call per layer per frame, as `schedule_static` did),
+/// every layer's input copied out of the feature buffer into a fresh
+/// `FeatureMap` and the output copied back, fresh im2col/AMU buffers per
+/// tile call and a `Vec` per pooled window — exactly the host work the
+/// plan/execute split removed from the product path.  Built on the same
+/// public blocks (AGU, AMU, ODG, golden arithmetic), so its logits stay
+/// bit-identical.
+struct LegacySim {
+    cfg: ArrayConfig,
+    net: QuantNetwork,
+    prog: Program,
+    fbuf: Vec<i8>,
+}
 
-    println!("=== simulator hot path (CNN-A, full frame) ===");
+/// The seed's `conv_tile` inner loop (pre-scratch, pre-view).
+#[allow(clippy::too_many_arguments)]
+fn conv_tile_seed(
+    layer: &QuantLayer,
+    input: &FeatureMap,
+    pooled_rows: Range<usize>,
+    d_range: Range<usize>,
+    m_run: usize,
+    out: &mut FeatureMap,
+    d_arch: usize,
+) {
+    let np = layer.pool.max(1);
+    let conv_shape = input
+        .shape
+        .conv_out(layer.kh, layer.kw, layer.stride, layer.d);
+    let v_out = conv_shape.w;
+    let m_run = m_run.min(layer.m).max(1);
+    let d_passes = d_range.len().div_ceil(d_arch);
+    let mut patch = Vec::with_capacity(layer.n_c());
+    let conv_row0 = pooled_rows.start * np;
+    let conv_rows = (pooled_rows.end - pooled_rows.start) * np;
+    if conv_rows == 0 {
+        return;
+    }
+    let odg = Odg {
+        out_w: out.shape.w,
+        out_c: out.shape.c,
+        base: 0,
+    };
+    let mut amus: Vec<Amu> = (0..d_passes)
+        .map(|dp| {
+            let d0 = d_range.start + dp * d_arch;
+            let d1 = (d0 + d_arch).min(d_range.end);
+            Amu::new(d1 - d0, np, layer.relu)
+        })
+        .collect();
+    let agu = Agu::new(
+        input.shape.w,
+        input.shape.c,
+        layer.stride,
+        conv_rows,
+        v_out,
+        np,
+        np,
+    );
+    let mut vals = vec![0i8; d_arch];
+    for anchor in agu {
+        input.patch(
+            (conv_row0 + anchor.u) * layer.stride,
+            anchor.v * layer.stride,
+            layer.kh,
+            layer.kw,
+            &mut patch,
+        );
+        for (dp, amu) in amus.iter_mut().enumerate() {
+            let d0 = d_range.start + dp * d_arch;
+            let d1 = (d0 + d_arch).min(d_range.end);
+            let chans = d1 - d0;
+            for (k, d) in (d0..d1).enumerate() {
+                vals[k] = fixp::qs(golden::binary_dot(layer, d, &patch, m_run), layer.shift);
+            }
+            if layer.relu || np > 1 {
+                if let Some(pooled) = amu.push(&vals[..chans]) {
+                    let py = pooled_rows.start + anchor.u / np;
+                    let px = anchor.v / np;
+                    odg.write(&mut out.data, py, px, d0, &pooled);
+                }
+            } else {
+                let py = pooled_rows.start + anchor.u;
+                odg.write(&mut out.data, py, anchor.v, d0, &vals[..chans]);
+            }
+        }
+    }
+}
+
+/// The seed's `dense_tile` inner loop.
+fn dense_tile_seed(
+    layer: &QuantLayer,
+    input: &[i8],
+    d_range: Range<usize>,
+    m_run: usize,
+    out: &mut [i8],
+) {
+    let m_run = m_run.min(layer.m).max(1);
+    for d in d_range {
+        let mut v = fixp::qs(golden::binary_dot(layer, d, input, m_run), layer.shift);
+        if layer.relu {
+            v = v.max(0);
+        }
+        out[d] = v;
+    }
+}
+
+impl LegacySim {
+    fn new(cfg: ArrayConfig, net: QuantNetwork) -> Self {
+        let prog = compile_network(&net);
+        Self {
+            cfg,
+            fbuf: vec![0; prog.fbuf_words],
+            net,
+            prog,
+        }
+    }
+
+    /// High-accuracy frame, scheduling each layer's active mode afresh
+    /// (one `schedule` call per layer per frame — exactly the seed's
+    /// `schedule_static` cost, no more).
+    fn run_frame(&mut self, image: &[i8]) -> Vec<i8> {
+        let first = &self.prog.bindings[0];
+        self.fbuf[first.in_base..first.in_base + image.len()].copy_from_slice(image);
+        for (li, layer) in self.net.layers.iter().enumerate() {
+            let b = &self.prog.bindings[li];
+            match layer.kind {
+                LayerKind::Conv => {
+                    let in_shape = Shape::new(b.in_dims.1, b.in_dims.0, b.in_dims.2);
+                    // per-layer copy churn — the seed's behavior
+                    let input = FeatureMap::from_vec(
+                        in_shape,
+                        self.fbuf[b.in_base..b.in_base + in_shape.len()].to_vec(),
+                    );
+                    let out_shape = Shape::new(b.out_dims.1, b.out_dims.0, b.out_dims.2);
+                    let mut out = FeatureMap::zeros(out_shape);
+                    // per-frame schedule recomputation — the seed's behavior
+                    let (assignments, _) =
+                        schedule(self.cfg, layer.d, out_shape.h, layer.m);
+                    for u in assignments.iter().flatten() {
+                        conv_tile_seed(
+                            layer,
+                            &input,
+                            u.rows.clone(),
+                            u.d.clone(),
+                            layer.m,
+                            &mut out,
+                            self.cfg.d_arch,
+                        );
+                    }
+                    self.fbuf[b.out_base..b.out_base + out_shape.len()]
+                        .copy_from_slice(&out.data);
+                }
+                LayerKind::Dense => {
+                    let n_in = layer.n_c();
+                    let input = self.fbuf[b.in_base..b.in_base + n_in].to_vec();
+                    let mut out = vec![0i8; layer.d];
+                    let (assignments, _) = schedule(self.cfg, layer.d, 1, layer.m);
+                    for u in assignments.iter().flatten() {
+                        dense_tile_seed(layer, &input, u.d.clone(), layer.m, &mut out);
+                    }
+                    self.fbuf[b.out_base..b.out_base + layer.d].copy_from_slice(&out);
+                }
+            }
+        }
+        let last = self.prog.bindings.last().expect("layers");
+        let k = self.net.layers.last().expect("layers").d;
+        self.fbuf[last.out_base..last.out_base + k].to_vec()
+    }
+}
+
+fn main() {
+    // Real artifacts when built, synthetic CNN-A otherwise — the bench
+    // must run in artifact-less environments too.
+    let dir = artifacts::default_dir();
+    let mut rng = Xoshiro256::new(0xBE);
+    let (qnet, source) = match QuantNetwork::load(&dir.join("cnn_a.weights.bin")) {
+        Ok(n) => (n, "artifacts"),
+        Err(_) => (artifacts::synthetic_cnn_a(&mut rng, 4), "synthetic"),
+    };
+    let shape = {
+        let dims = binarray::isa::compiler::infer_input_dims(&qnet);
+        Shape::new(dims.1, dims.0, dims.2)
+    };
+    let calib = CalibBatch::load(&dir.join("calib.bin")).ok();
+    let images: Vec<Vec<i8>> = match &calib {
+        Some(c) => (0..c.n.min(16)).map(|i| c.image(i).to_vec()).collect(),
+        None => (0..16).map(|_| prop::i8_vec(&mut rng, shape.len())).collect(),
+    };
+    let image = images[0].clone();
+    println!("network: CNN-A M={} ({source}), input {shape:?}", qnet.max_m());
+
+    println!("\n=== simulator hot path (CNN-A, full frame) ===");
     let mut direct_per = 0.0;
+    let mut direct_fps: Vec<(String, f64, u64)> = Vec::new();
     for cfg in [
         ArrayConfig::new(1, 8, 2),
         ArrayConfig::new(1, 32, 2),
         ArrayConfig::new(4, 32, 4),
     ] {
         let mut sys = BinArraySystem::new(cfg, qnet.clone()).unwrap();
-        let (per, _) = bench(&format!("direct BinArraySystem {}", cfg.label()), 20, || {
+        let (per, cycles) = bench(&format!("direct BinArraySystem {}", cfg.label()), 20, || {
             sys.run_frame(&image).unwrap().1.cycles
         });
+        direct_fps.push((cfg.label(), 1.0 / per, cycles));
         if cfg.n_sa == 1 && cfg.d_arch == 8 {
             direct_per = per;
         }
@@ -73,6 +271,53 @@ fn main() {
             sys.run_frame(&image).unwrap().1.cycles
         });
     }
+
+    // === plan/execute split vs the legacy executor ======================
+    // Multi-SA config: the precomputed plan's logical-SA groups execute on
+    // parallel host threads and feature maps are never copied per layer.
+    println!("\n=== plan/execute split vs legacy executor [4,32,4] ===");
+    let cfg = ArrayConfig::new(4, 32, 4);
+    let golden_logits = golden::forward(&qnet, &image, shape, None);
+
+    let mut legacy = LegacySim::new(cfg, qnet.clone());
+    assert_eq!(
+        legacy.run_frame(&image),
+        golden_logits,
+        "legacy baseline diverged from golden model"
+    );
+    let (legacy_per, _) = bench("legacy (reschedule + copies, 1 thread)", 12, || {
+        legacy.run_frame(&image);
+        0
+    });
+
+    let mut sys = BinArraySystem::new(cfg, qnet.clone()).unwrap();
+    let batch: Vec<&[i8]> = (0..8).map(|i| images[i % images.len()].as_slice()).collect();
+    let mut sim_cycles = 0u64;
+    let results = sys.run_frames(&batch).unwrap();
+    for (i, (logits, stats)) in results.iter().enumerate() {
+        let want = golden::forward(&qnet, batch[i], shape, None);
+        assert_eq!(*logits, want, "plan path diverged from golden on frame {i}");
+        sim_cycles = stats.cycles;
+    }
+    let host_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let (plan_per, _) = bench(
+        &format!("plan run_frames (batch 8, {host_threads} threads)"),
+        2,
+        || {
+            let n = sys.run_frames(&batch).unwrap().len() as u64;
+            debug_assert_eq!(n, 8);
+            0
+        },
+    );
+    let plan_per_frame = plan_per / batch.len() as f64;
+    let speedup = legacy_per / plan_per_frame;
+    println!(
+        "plan/execute speedup: {speedup:.2}× ({:.1} → {:.1} frames/s host-side)",
+        1.0 / legacy_per,
+        1.0 / plan_per_frame
+    );
 
     println!("\n=== coordinator overhead (1 worker, batch 8) ===");
     let frames = 64usize;
@@ -90,7 +335,7 @@ fn main() {
     .unwrap();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..frames)
-        .map(|i| coord.submit(calib.image(i % calib.n).to_vec(), Mode::HighAccuracy))
+        .map(|i| coord.submit(images[i % images.len()].clone(), Mode::HighAccuracy))
         .collect();
     for rx in rxs {
         rx.recv().unwrap();
@@ -122,7 +367,7 @@ fn main() {
         .unwrap();
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..128)
-            .map(|i| coord.submit(calib.image(i % calib.n).to_vec(), Mode::HighAccuracy))
+            .map(|i| coord.submit(images[i % images.len()].clone(), Mode::HighAccuracy))
             .collect();
         for rx in rxs {
             rx.recv().unwrap();
@@ -130,5 +375,26 @@ fn main() {
         let dt = t0.elapsed().as_secs_f64();
         coord.shutdown();
         println!("  {workers} workers: {:>8.1} frames/s wall", 128.0 / dt);
+    }
+
+    // === machine-readable record =======================================
+    let direct_json: Vec<String> = direct_fps
+        .iter()
+        .map(|(label, fps, cycles)| {
+            format!(
+                "    {{\"config\": \"{label}\", \"frames_per_sec\": {fps:.2}, \"sim_cycles_per_frame\": {cycles}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ]\n}}\n",
+        cfg.label(),
+        1.0 / legacy_per,
+        1.0 / plan_per_frame,
+        direct_json.join(",\n"),
+    );
+    match std::fs::write("BENCH_sim_hotpath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_sim_hotpath.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_sim_hotpath.json: {e}"),
     }
 }

@@ -1,0 +1,480 @@
+//! Readers for the Python-side AOT outputs (see `python/compile/aot.py`).
+//!
+//! The compile path exports three little-endian flat binaries consumed by
+//! the request-path layer:
+//!
+//! * `cnn_a.weights.bin` — **BAW1**: per-layer sign planes, quantized α
+//!   scaling factors and biases of the binary-approximated network;
+//! * `calib.bin` — **BAC1**: the int8 calibration batch (NHWC images at
+//!   the input binary point) plus int32 labels;
+//! * `golden.bin` — **BAG1**: int8 logits of the numpy oracle on the
+//!   calibration batch (the cross-check target for [`crate::golden`]).
+//!
+//! Layouts are defined by `aot.py`'s `write_weights` / `write_calib` /
+//! `write_golden` and mirrored exactly here (magic word, header, payload).
+//!
+//! When the artifacts have not been built (the Python toolchain is not on
+//! the request path), [`synthetic_cnn_a`] provides a CNN-A-shaped network
+//! with random planes so benches and integration tests can still exercise
+//! the full simulator stack.
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::{read_i32, read_i32_vec, read_i8_vec, read_u32};
+
+/// Magic word of the BAW1 weight format (`"BAW1"` little-endian).
+pub const MAGIC_WEIGHTS: u32 = 0x3157_4142;
+/// Magic word of the BAC1 calibration format.
+pub const MAGIC_CALIB: u32 = 0x3143_4142;
+/// Magic word of the BAG1 golden-logits format.
+pub const MAGIC_GOLDEN: u32 = 0x3147_4142;
+
+/// Directory the AOT artifacts are written to (`make artifacts`).
+///
+/// Resolution order: `$BINARRAY_ARTIFACTS`, else `<repo>/artifacts`
+/// next to this package (the Python side's `--out ../artifacts` default).
+pub fn default_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("BINARRAY_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("artifacts"))
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Kind of an accelerated layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Dense,
+}
+
+/// One quantized, binary-approximated layer.
+///
+/// `planes` stores the ±1 sign tensors in `(d, m, n_c)` order — for conv
+/// layers `n_c = kh·kw·c` in the AGU's `(ky, kx, c)` walk order, for dense
+/// layers `n_c` is the flat input length (stored in `kh`, with
+/// `kw = c = 0`, matching the BAW1 dim packing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantLayer {
+    pub kind: LayerKind,
+    /// Sign planes, ±1 each, `d * m * n_c` entries.
+    pub planes: Vec<i8>,
+    /// Quantized α scaling factors, `d * m` entries (fixed point `f_alpha`).
+    pub alpha_q: Vec<i8>,
+    /// Quantized biases, `d` entries (accumulator scale).
+    pub bias_q: Vec<i32>,
+    /// Output channels / neurons.
+    pub d: usize,
+    /// Binary approximation levels.
+    pub m: usize,
+    /// Kernel height (conv) or flat input length (dense).
+    pub kh: usize,
+    /// Kernel width (conv; 0 for dense).
+    pub kw: usize,
+    /// Input channels (conv; 0 for dense).
+    pub c: usize,
+    /// Fractional bits of the α fixed-point format.
+    pub f_alpha: i32,
+    /// Binary point of the input activations.
+    pub f_in: i32,
+    /// Binary point of the output activations.
+    pub f_out: i32,
+    /// QS right-shift aligning accumulator to output binary point.
+    pub shift: u32,
+    pub relu: bool,
+    /// N_p downsampling factor (1 = AMU bypassed).
+    pub pool: usize,
+    pub stride: usize,
+}
+
+impl QuantLayer {
+    /// Dot-product length of one output: `kh·kw·c` (conv) or the flat
+    /// input length (dense).
+    #[inline]
+    pub fn n_c(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv => self.kh * self.kw * self.c,
+            LayerKind::Dense => self.kh,
+        }
+    }
+
+    /// α scaling factor of output channel `d`, binary level `m`.
+    #[inline]
+    pub fn alpha(&self, d: usize, m: usize) -> i8 {
+        self.alpha_q[d * self.m + m]
+    }
+
+    /// Sign-plane element `i` of output channel `d`, binary level `m`.
+    #[inline]
+    pub fn plane(&self, d: usize, m: usize, i: usize) -> i8 {
+        self.planes[(d * self.m + m) * self.n_c() + i]
+    }
+
+    fn validate(&self, idx: usize) -> Result<()> {
+        let n_c = self.n_c();
+        if self.planes.len() != self.d * self.m * n_c {
+            bail!(
+                "layer {idx}: {} plane entries, want d*m*n_c = {}",
+                self.planes.len(),
+                self.d * self.m * n_c
+            );
+        }
+        if self.alpha_q.len() != self.d * self.m {
+            bail!("layer {idx}: {} alpha entries, want {}", self.alpha_q.len(), self.d * self.m);
+        }
+        if self.bias_q.len() != self.d {
+            bail!("layer {idx}: {} bias entries, want {}", self.bias_q.len(), self.d);
+        }
+        Ok(())
+    }
+}
+
+/// A full quantized network (the BAW1 payload).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantNetwork {
+    /// Binary point of the int8 input images.
+    pub f_input: u32,
+    pub layers: Vec<QuantLayer>,
+}
+
+impl QuantNetwork {
+    /// Largest M over all layers — the network's approximation depth.
+    pub fn max_m(&self) -> usize {
+        self.layers.iter().map(|l| l.m).max().unwrap_or(1)
+    }
+
+    /// Read a BAW1 weight file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let magic = read_u32(&mut r)?;
+        if magic != MAGIC_WEIGHTS {
+            bail!("{}: bad magic {magic:#010x} (want BAW1)", path.display());
+        }
+        let n_layers = read_u32(&mut r)? as usize;
+        let f_input = read_u32(&mut r)?;
+        if n_layers == 0 || n_layers > 1024 {
+            bail!("{}: implausible layer count {n_layers}", path.display());
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for idx in 0..n_layers {
+            let layer = Self::read_layer(&mut r)
+                .with_context(|| format!("{}: layer {idx}", path.display()))?;
+            layer.validate(idx)?;
+            layers.push(layer);
+        }
+        Ok(Self { f_input, layers })
+    }
+
+    fn read_layer<R: Read>(r: &mut R) -> Result<QuantLayer> {
+        let kind = match read_u32(r)? {
+            0 => LayerKind::Conv,
+            1 => LayerKind::Dense,
+            k => bail!("unknown layer kind {k}"),
+        };
+        // dims: (d, m, kh, kw, c) for conv; (d, m, nin, 0, 0) for dense.
+        let d = read_u32(r)? as usize;
+        let m = read_u32(r)? as usize;
+        let kh = read_u32(r)? as usize;
+        let kw = read_u32(r)? as usize;
+        let c = read_u32(r)? as usize;
+        let f_alpha = read_i32(r)?;
+        let f_in = read_i32(r)?;
+        let f_out = read_i32(r)?;
+        let shift = read_i32(r)? as u32;
+        let relu = read_u32(r)? != 0;
+        let pool = read_u32(r)? as usize;
+        let stride = read_u32(r)? as usize;
+        let n_c = match kind {
+            LayerKind::Conv => kh * kw * c,
+            LayerKind::Dense => kh,
+        };
+        let planes = read_i8_vec(r, d * m * n_c)?;
+        let alpha_q = read_i8_vec(r, d * m)?;
+        let bias_q = read_i32_vec(r, d)?;
+        Ok(QuantLayer {
+            kind,
+            planes,
+            alpha_q,
+            bias_q,
+            d,
+            m,
+            kh,
+            kw,
+            c,
+            f_alpha,
+            f_in,
+            f_out,
+            shift,
+            relu,
+            pool,
+            stride,
+        })
+    }
+}
+
+/// The int8 calibration batch (BAC1).
+#[derive(Clone, Debug)]
+pub struct CalibBatch {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Binary point of the images.
+    pub f_input: i32,
+    images: Vec<i8>,
+    pub labels: Vec<i32>,
+}
+
+impl CalibBatch {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let magic = read_u32(&mut r)?;
+        if magic != MAGIC_CALIB {
+            bail!("{}: bad magic {magic:#010x} (want BAC1)", path.display());
+        }
+        let n = read_u32(&mut r)? as usize;
+        let h = read_u32(&mut r)? as usize;
+        let w = read_u32(&mut r)? as usize;
+        let c = read_u32(&mut r)? as usize;
+        let f_input = read_u32(&mut r)? as i32;
+        let images = read_i8_vec(&mut r, n * h * w * c)?;
+        let labels = read_i32_vec(&mut r, n)?;
+        Ok(Self {
+            n,
+            h,
+            w,
+            c,
+            f_input,
+            images,
+            labels,
+        })
+    }
+
+    /// Image `i` as a flat row-major HWC slice.
+    pub fn image(&self, i: usize) -> &[i8] {
+        let len = self.h * self.w * self.c;
+        &self.images[i * len..(i + 1) * len]
+    }
+}
+
+/// The numpy oracle's int8 logits on the calibration batch (BAG1).
+#[derive(Clone, Debug)]
+pub struct GoldenLogits {
+    pub n: usize,
+    pub k: usize,
+    data: Vec<i8>,
+}
+
+impl GoldenLogits {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let magic = read_u32(&mut r)?;
+        if magic != MAGIC_GOLDEN {
+            bail!("{}: bad magic {magic:#010x} (want BAG1)", path.display());
+        }
+        let n = read_u32(&mut r)? as usize;
+        let k = read_u32(&mut r)? as usize;
+        let data = read_i8_vec(&mut r, n * k)?;
+        Ok(Self { n, k, data })
+    }
+
+    /// Logits of frame `i`.
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
+}
+
+/// Build a CNN-A-shaped [`QuantNetwork`] with deterministic random planes.
+///
+/// This is the synthetic stand-in used by benches and integration tests
+/// when the real AOT artifacts have not been built — same topology,
+/// quantization geometry and value ranges as the trained network, random
+/// weights.  The crate's test-support factory delegates here so all
+/// layers of the stack exercise the same shape.
+pub fn synthetic_cnn_a(rng: &mut crate::util::rng::Xoshiro256, m: usize) -> QuantNetwork {
+    use crate::util::prop;
+    type Rng = crate::util::rng::Xoshiro256;
+    let conv = |rng: &mut Rng, d: usize, kh: usize, kw: usize, c: usize, pool: usize, shift: u32| {
+        QuantLayer {
+            kind: LayerKind::Conv,
+            planes: prop::sign_vec(rng, d * m * kh * kw * c),
+            alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+            bias_q: (0..d).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+            d,
+            m,
+            kh,
+            kw,
+            c,
+            f_alpha: 5,
+            f_in: 7,
+            f_out: 6,
+            shift,
+            relu: true,
+            pool,
+            stride: 1,
+        }
+    };
+    let dense = |rng: &mut Rng, d: usize, nin: usize, relu: bool, shift: u32| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * nin),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+        d,
+        m,
+        kh: nin,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    QuantNetwork {
+        f_input: 7,
+        layers: vec![
+            conv(rng, 5, 7, 7, 3, 2, 9),
+            conv(rng, 150, 4, 4, 5, 6, 10),
+            dense(rng, 340, 1350, true, 11),
+            dense(rng, 490, 340, true, 10),
+            dense(rng, 43, 490, false, 9),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    /// Serialize a network in the BAW1 layout (test-only writer mirroring
+    /// `aot.py::write_weights`).
+    fn write_baw1(net: &QuantNetwork) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC_WEIGHTS.to_le_bytes());
+        out.extend_from_slice(&(net.layers.len() as u32).to_le_bytes());
+        out.extend_from_slice(&net.f_input.to_le_bytes());
+        for l in &net.layers {
+            let kind = match l.kind {
+                LayerKind::Conv => 0u32,
+                LayerKind::Dense => 1,
+            };
+            out.extend_from_slice(&kind.to_le_bytes());
+            for v in [l.d, l.m, l.kh, l.kw, l.c] {
+                out.extend_from_slice(&(v as u32).to_le_bytes());
+            }
+            for v in [l.f_alpha, l.f_in, l.f_out, l.shift as i32] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for v in [u32::from(l.relu), l.pool as u32, l.stride as u32] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend(l.planes.iter().map(|&b| b as u8));
+            out.extend(l.alpha_q.iter().map(|&b| b as u8));
+            for b in &l.bias_q {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn tmp(name: &str, bytes: &[u8]) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("binarray-test-{}-{name}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn baw1_roundtrip() {
+        let mut rng = Xoshiro256::new(7);
+        let net = synthetic_cnn_a(&mut rng, 3);
+        let path = tmp("w.bin", &write_baw1(&net));
+        let back = QuantNetwork::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, net);
+        assert_eq!(back.max_m(), 3);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("bad.bin", &[0u8; 16]);
+        let err = QuantNetwork::load(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_file_is_an_error_not_a_panic() {
+        let mut rng = Xoshiro256::new(8);
+        let net = synthetic_cnn_a(&mut rng, 2);
+        let mut bytes = write_baw1(&net);
+        bytes.truncate(bytes.len() / 2);
+        let path = tmp("trunc.bin", &bytes);
+        assert!(QuantNetwork::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn calib_roundtrip() {
+        let (n, h, w, c) = (3usize, 4usize, 4usize, 2usize);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC_CALIB.to_le_bytes());
+        for v in [n, h, w, c, 7] {
+            bytes.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        let images: Vec<i8> = (0..n * h * w * c).map(|i| (i % 251) as i8).collect();
+        bytes.extend(images.iter().map(|&b| b as u8));
+        for lbl in [0i32, 5, 42] {
+            bytes.extend_from_slice(&lbl.to_le_bytes());
+        }
+        let path = tmp("c.bin", &bytes);
+        let calib = CalibBatch::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!((calib.n, calib.h, calib.w, calib.c), (n, h, w, c));
+        assert_eq!(calib.f_input, 7);
+        assert_eq!(calib.labels, vec![0, 5, 42]);
+        assert_eq!(calib.image(1), &images[h * w * c..2 * h * w * c]);
+    }
+
+    #[test]
+    fn golden_roundtrip() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC_GOLDEN.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend([1u8, 2, 3, 0xFF, 0xFE, 0x80]);
+        let path = tmp("g.bin", &bytes);
+        let g = GoldenLogits::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!((g.n, g.k), (2, 3));
+        assert_eq!(g.row(0), &[1, 2, 3]);
+        assert_eq!(g.row(1), &[-1, -2, -128]);
+    }
+
+    #[test]
+    fn layer_accessors_index_correctly() {
+        let mut rng = Xoshiro256::new(9);
+        let net = synthetic_cnn_a(&mut rng, 2);
+        let l = &net.layers[0];
+        assert_eq!(l.n_c(), 7 * 7 * 3);
+        assert_eq!(l.alpha(0, 0), l.alpha_q[0]);
+        assert_eq!(l.alpha(2, 1), l.alpha_q[2 * 2 + 1]);
+        assert_eq!(l.plane(1, 0, 5), l.planes[l.m * l.n_c() + 5]);
+        let d = &net.layers[2];
+        assert_eq!(d.n_c(), 1350);
+    }
+}

@@ -52,6 +52,24 @@ impl Amu {
         }
     }
 
+    /// Allocation-free variant of [`Self::push`] for the simulator hot
+    /// path: when the pooling window completes, `emit` is called with the
+    /// pooled vector borrowed from the shift register, which is then
+    /// zero-reset in place (no per-window `Vec` churn).
+    pub fn push_then<F: FnOnce(&[i8])>(&mut self, values: &[i8], emit: F) {
+        debug_assert_eq!(values.len(), self.sreg.len());
+        debug_assert!(!self.relu_only, "use push_raw for non-activated layers");
+        for (m, &v) in self.sreg.iter_mut().zip(values) {
+            *m = (*m).max(v);
+        }
+        self.seen += 1;
+        if self.seen == self.np2 {
+            emit(&self.sreg);
+            self.sreg.fill(0);
+            self.seen = 0;
+        }
+    }
+
     /// Bypass path (dense layers / layers without activation): values pass
     /// through unchanged.
     pub fn push_raw(&mut self, values: &[i8]) -> Vec<i8> {
@@ -114,6 +132,23 @@ mod tests {
         let mut amu = Amu::new(1, 1, true); // np=1: emit every push
         assert_eq!(amu.push(&[100]).unwrap(), vec![100]);
         assert_eq!(amu.push(&[-100]).unwrap(), vec![0]); // no leak from 100
+    }
+
+    #[test]
+    fn push_then_equals_push() {
+        prop::check(50, "push_then == push", |rng| {
+            let d = 1 + rng.below(6) as usize;
+            let np = 1 + rng.below(3) as usize;
+            let mut a = Amu::new(d, np, true);
+            let mut b = Amu::new(d, np, true);
+            for _ in 0..np * np * 3 {
+                let vals = prop::i8_vec(rng, d);
+                let want = a.push(&vals);
+                let mut got: Option<Vec<i8>> = None;
+                b.push_then(&vals, |pooled| got = Some(pooled.to_vec()));
+                assert_eq!(got, want);
+            }
+        });
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! The CU is not pipelined; every instruction costs one clock cycle, and
 //! CONV/DENSE stall until the layer completes (their cycle cost is
 //! reported by the layer-execution callback).
+//!
+//! Under the plan/execute split the CU remains the per-frame trigger (so
+//! instruction-cycle accounting stays hardware-faithful), but the layer
+//! callback no longer derives anything from the register file — it looks
+//! the layer's precomputed [`crate::binarray::plan::LayerPlan`] up by the
+//! CONV/DENSE immediate.  The register snapshot in [`LayerRun`] is still
+//! produced for tests and tooling that inspect the programmed state.
 
 use crate::isa::{flags, Instr, Program, Reg};
 
@@ -75,6 +82,14 @@ impl ControlUnit {
     pub fn reset(&mut self) {
         self.regs = [0; Reg::COUNT];
         self.pc = 0;
+    }
+
+    /// Park the CU at `pc` — the PS writes the entry address after loading
+    /// a program, so every frame (including the first) starts from the
+    /// entry `HLT` in steady state.  Frame executors use this so a frame's
+    /// instruction-cycle cost is identical on every execution lane.
+    pub fn park_at(&mut self, pc: usize) {
+        self.pc = pc;
     }
 
     /// Run from the current PC until the next `HLT` is *reached* (frame

@@ -19,18 +19,23 @@
 //!   channels exceed the array, input tiling when `D < D_arch·N_SA`.
 //!
 //! Module layout mirrors the block diagram (Figs. 3, 4, 6, 7, 10):
-//! [`pe`] → [`agu`] → [`amu`] → [`sa`] → [`cu`] → [`system`].
+//! [`pe`] → [`agu`] → [`amu`] → [`sa`] → [`cu`] → [`system`], with
+//! [`plan`] holding the compile-time schedules the executor walks (the
+//! plan/execute split: schedules, buffer bindings and tile geometry are
+//! derived once per (network, config, mode), never per frame).
 
 pub mod agu;
 pub mod amu;
 pub mod cu;
 pub mod pe;
+pub mod plan;
 pub mod sa;
 pub mod system;
 
 pub use cu::ControlUnit;
-pub use sa::{SaEngine, SimStats};
-pub use system::BinArraySystem;
+pub use plan::{ExecutionPlan, LayerPlan, ModePlan, WorkUnit};
+pub use sa::{SaEngine, SimStats, TileScratch};
+pub use system::{BinArraySystem, FrameExecutor, FrameStats};
 
 /// Pipeline registers between PA output, barrel shifter, QS and AMU —
 /// the depth that makes VHDL simulation slightly slower than Eq. 18.

@@ -1,0 +1,347 @@
+//! Compile-time execution planning — the "plan" half of the plan/execute
+//! split (mirroring FINN's static-dataflow idea: a fixed network compiles
+//! to a fixed schedule that is executed once per frame, never re-derived).
+//!
+//! [`ExecutionPlan::new`] walks the compiled [`Program`] once per accuracy
+//! mode and materializes, for every layer:
+//!
+//! * the work-unit assignment over logical SAs (Eqs. 15–17: level-group
+//!   parallelism, channel-pass distribution, pooled-row input tiling);
+//! * the sequential level-group count `seq_m` each physical SA performs;
+//! * the ping-pong feature-buffer bindings and tile geometry the executor
+//!   needs to claim zero-copy views.
+//!
+//! The per-frame executor ([`super::system`]) is then a thin walk over
+//! this structure: no scheduling arithmetic, no shape inference and no
+//! feature-map copies happen on the frame path.
+
+use std::ops::Range;
+
+use crate::artifacts::{LayerKind, QuantNetwork};
+use crate::isa::Program;
+use crate::tensor::Shape;
+
+use super::ArrayConfig;
+
+/// One unit of schedulable work for a layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkUnit {
+    /// Pooled-output row range (conv) — full range for dense.
+    pub rows: Range<usize>,
+    /// Output-channel range.
+    pub d: Range<usize>,
+}
+
+/// Everything the executor needs to run one layer of one accuracy mode.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// Index into `QuantNetwork::layers`.
+    pub layer: usize,
+    pub kind: LayerKind,
+    /// Feature-buffer base/length of the input region.
+    pub in_base: usize,
+    pub in_len: usize,
+    /// Feature-buffer base/length of the output region.
+    pub out_base: usize,
+    pub out_len: usize,
+    /// Input geometry (HWC; `(1, N_c, 1)` for dense).
+    pub in_shape: Shape,
+    /// Output geometry after pooling (HWC; `(1, 1, D)` for dense).
+    pub out_shape: Shape,
+    /// Effective binary levels this mode evaluates on this layer.
+    pub m_run: usize,
+    /// Sequential level-group passes per physical SA.
+    pub seq_m: u64,
+    /// Whether host-threading this layer pays for its thread spawns
+    /// (decided once here from the layer's PE-op estimate, so the tiny
+    /// tail dense layers don't spawn threads per frame).
+    pub host_par: bool,
+    /// Work units per logical SA (index = logical SA id; empty groups are
+    /// legal and idle).
+    pub assignments: Vec<Vec<WorkUnit>>,
+    /// Tile claims of all units in group-major order, precomputed at plan
+    /// build so the frame path allocates nothing to claim its views.
+    claims: Vec<(Range<usize>, Range<usize>)>,
+}
+
+impl LayerPlan {
+    /// Tile claims of all units in group-major order — the executor feeds
+    /// these straight into [`crate::tensor::FeatureMapTiles::claim_all`].
+    pub fn claims(&self) -> &[(Range<usize>, Range<usize>)] {
+        &self.claims
+    }
+}
+
+/// Group-major `(rows, channels)` claims of a layer's work units.
+fn unit_claims(assignments: &[Vec<WorkUnit>]) -> Vec<(Range<usize>, Range<usize>)> {
+    assignments
+        .iter()
+        .flat_map(|units| units.iter().map(|u| (u.rows.clone(), u.d.clone())))
+        .collect()
+}
+
+/// The full per-frame schedule for one accuracy mode.
+#[derive(Clone, Debug)]
+pub struct ModePlan {
+    /// The `m_run` this plan was built for (`None` = high accuracy).
+    pub m_run: Option<usize>,
+    pub layers: Vec<LayerPlan>,
+}
+
+/// Precomputed schedules for every runtime accuracy mode.
+///
+/// Index 0 is the high-accuracy plan (`set_mode(None)`); index `m` is the
+/// truncated plan for `set_mode(Some(m))`, `1 ≤ m ≤ max_m`.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub cfg: ArrayConfig,
+    pub input_shape: Shape,
+    pub fbuf_words: usize,
+    pub max_m: usize,
+    modes: Vec<ModePlan>,
+}
+
+impl ExecutionPlan {
+    /// Build the plan for every accuracy mode of `net` on `cfg`.
+    pub fn new(cfg: ArrayConfig, net: &QuantNetwork, prog: &Program) -> Self {
+        let dims = crate::isa::compiler::infer_input_dims(net);
+        let max_m = net.max_m();
+        let mut modes = Vec::with_capacity(max_m + 1);
+        modes.push(mode_plan(cfg, net, prog, None));
+        for m in 1..=max_m {
+            modes.push(mode_plan(cfg, net, prog, Some(m)));
+        }
+        Self {
+            cfg,
+            input_shape: Shape::new(dims.1, dims.0, dims.2),
+            fbuf_words: prog.fbuf_words,
+            max_m,
+            modes,
+        }
+    }
+
+    /// The plan for a runtime mode; `Some(m)` clamps to `1..=max_m`
+    /// (matching the executor's historical `m_run.min(layer.m).max(1)`).
+    pub fn mode(&self, m_run: Option<usize>) -> &ModePlan {
+        match m_run {
+            None => &self.modes[0],
+            Some(m) => &self.modes[m.clamp(1, self.max_m)],
+        }
+    }
+}
+
+fn mode_plan(
+    cfg: ArrayConfig,
+    net: &QuantNetwork,
+    prog: &Program,
+    m_run: Option<usize>,
+) -> ModePlan {
+    let layers = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let b = &prog.bindings[i];
+            let eff = m_run.unwrap_or(l.m).min(l.m).max(1);
+            let (in_shape, out_shape, in_len, out_len, pooled_rows) = match l.kind {
+                LayerKind::Conv => {
+                    let ins = Shape::new(b.in_dims.1, b.in_dims.0, b.in_dims.2);
+                    let outs = Shape::new(b.out_dims.1, b.out_dims.0, b.out_dims.2);
+                    (ins, outs, ins.len(), outs.len(), outs.h)
+                }
+                LayerKind::Dense => {
+                    let n_in = l.n_c();
+                    (
+                        Shape::new(1, n_in, 1),
+                        Shape::new(1, 1, l.d),
+                        n_in,
+                        l.d,
+                        1,
+                    )
+                }
+            };
+            let (assignments, seq_m) = schedule(cfg, l.d, pooled_rows, eff);
+            debug_assert_units_disjoint(&assignments);
+            // ~200k i8 MACs is roughly where a layer's compute clears the
+            // cost of spawning scoped worker threads on the latency path.
+            let work_est = out_len as u64 * l.n_c() as u64 * eff as u64;
+            LayerPlan {
+                layer: i,
+                kind: l.kind,
+                in_base: b.in_base,
+                in_len,
+                out_base: b.out_base,
+                out_len,
+                in_shape,
+                out_shape,
+                m_run: eff,
+                seq_m,
+                host_par: work_est >= 200_000,
+                claims: unit_claims(&assignments),
+                assignments,
+            }
+        })
+        .collect();
+    ModePlan { m_run, layers }
+}
+
+/// Scheduling policy (paper §IV-E), factored out of the executor so it
+/// runs exactly once per (config, network, mode) instead of once per
+/// layer per frame:
+///
+/// 1. level-group parallelism — `⌈M/M_arch⌉` groups spread over SAs
+///    (Eq. 15's logical SAs); leftover groups run sequentially (`seq_m`);
+/// 2. channel-pass parallelism — `⌈D/D_arch⌉` passes distributed over
+///    logical SAs (Eq. 17);
+/// 3. input tiling — when channel passes underfill the logical SAs, the
+///    input is tiled along pooled-output rows (Eq. 16, width/height only,
+///    never depth — keeps convolutions atomic).
+pub fn schedule(
+    cfg: ArrayConfig,
+    d_out: usize,
+    pooled_rows: usize,
+    m_run: usize,
+) -> (Vec<Vec<WorkUnit>>, u64) {
+    let m_groups = m_run.div_ceil(cfg.m_arch);
+    let n_lsa = (cfg.n_sa / m_groups).max(1);
+    let seq_m = m_groups.div_ceil(cfg.n_sa.min(m_groups)) as u64;
+
+    let d_passes = d_out.div_ceil(cfg.d_arch);
+    let mut n_t = (n_lsa / d_passes).max(1);
+    n_t = n_t.min(pooled_rows.max(1));
+    while n_t > 1 && pooled_rows / n_t < 2 {
+        n_t -= 1;
+    }
+
+    let mut assignments: Vec<Vec<WorkUnit>> = vec![Vec::new(); n_lsa];
+    let row_tiles = crate::tensor::tile_ranges(pooled_rows.max(1), n_t, 0);
+    let mut lsa = 0usize;
+    for (r0, r1) in row_tiles {
+        for dp in 0..d_passes {
+            let d0 = dp * cfg.d_arch;
+            let d1 = (d0 + cfg.d_arch).min(d_out);
+            assignments[lsa].push(WorkUnit {
+                rows: r0..r1,
+                d: d0..d1,
+            });
+            lsa = (lsa + 1) % n_lsa;
+        }
+    }
+    (assignments, seq_m)
+}
+
+/// Every pair of units of one layer must differ in rows or in channels —
+/// the invariant that makes handing each unit its own mutable output tile
+/// sound (and lets units run on parallel host threads).
+fn debug_assert_units_disjoint(assignments: &[Vec<WorkUnit>]) {
+    if cfg!(debug_assertions) {
+        let units: Vec<&WorkUnit> = assignments.iter().flatten().collect();
+        for (i, a) in units.iter().enumerate() {
+            for b in &units[i + 1..] {
+                let rows_meet = a.rows.start < b.rows.end && b.rows.start < a.rows.end;
+                let d_meet = a.d.start < b.d.end && b.d.start < a.d.end;
+                assert!(
+                    !(rows_meet && d_meet),
+                    "scheduler produced overlapping units {a:?} / {b:?}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::compile_network;
+    use crate::isa::compiler::tests_support::cnn_a_quant;
+    use crate::util::rng::Xoshiro256;
+
+    fn cover(assignments: &[Vec<WorkUnit>], d_out: usize, rows: usize) {
+        // every (row, channel) cell is covered by exactly one unit
+        let mut seen = vec![0u8; d_out * rows];
+        for u in assignments.iter().flatten() {
+            for r in u.rows.clone() {
+                for d in u.d.clone() {
+                    seen[r * d_out + d] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&v| v == 1), "coverage {seen:?}");
+    }
+
+    #[test]
+    fn schedule_covers_all_output_cells() {
+        for (cfg, d, rows, m) in [
+            (ArrayConfig::new(1, 8, 2), 5, 21, 2),
+            (ArrayConfig::new(4, 32, 4), 150, 3, 4),
+            (ArrayConfig::new(16, 8, 2), 5, 21, 2),
+            (ArrayConfig::new(4, 32, 4), 340, 1, 4),
+            (ArrayConfig::new(1, 8, 2), 43, 1, 6),
+        ] {
+            let (assignments, seq_m) = schedule(cfg, d, rows, m);
+            cover(&assignments, d, rows);
+            assert!(seq_m >= 1);
+            debug_assert_units_disjoint(&assignments);
+        }
+    }
+
+    #[test]
+    fn seq_m_matches_eq15() {
+        // M = 2·M_arch on one SA: both level groups run sequentially.
+        let (_, seq) = schedule(ArrayConfig::new(1, 8, 2), 5, 21, 4);
+        assert_eq!(seq, 2);
+        // four SAs absorb both level groups in parallel.
+        let (_, seq) = schedule(ArrayConfig::new(4, 8, 2), 5, 21, 4);
+        assert_eq!(seq, 1);
+    }
+
+    #[test]
+    fn plan_has_one_mode_per_accuracy_level() {
+        let mut rng = Xoshiro256::new(1);
+        let net = cnn_a_quant(&mut rng, 4);
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(ArrayConfig::new(4, 32, 4), &net, &prog);
+        assert_eq!(plan.max_m, 4);
+        assert_eq!(plan.mode(None).m_run, None);
+        assert_eq!(plan.mode(Some(2)).m_run, Some(2));
+        // clamped: Some(9) → Some(max_m), Some(0) → Some(1)
+        assert_eq!(plan.mode(Some(9)).m_run, Some(4));
+        assert_eq!(plan.mode(Some(0)).m_run, Some(1));
+        // high accuracy evaluates every level of every layer
+        for lp in &plan.mode(None).layers {
+            assert_eq!(lp.m_run, net.layers[lp.layer].m);
+        }
+    }
+
+    #[test]
+    fn plan_bindings_ping_pong() {
+        let mut rng = Xoshiro256::new(2);
+        let net = cnn_a_quant(&mut rng, 2);
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(ArrayConfig::new(1, 8, 2), &net, &prog);
+        let half = plan.fbuf_words / 2;
+        for lp in &plan.mode(None).layers {
+            // input and output must live in opposite halves
+            assert_ne!(lp.in_base < half, lp.out_base < half, "layer {}", lp.layer);
+            assert!(lp.in_base + lp.in_len <= plan.fbuf_words);
+            assert!(lp.out_base + lp.out_len <= plan.fbuf_words);
+        }
+        // chained layers hand buffers over
+        for w in plan.mode(None).layers.windows(2) {
+            assert_eq!(w[0].out_base, w[1].in_base);
+        }
+    }
+
+    #[test]
+    fn claims_match_units() {
+        let (assignments, _) = schedule(ArrayConfig::new(4, 32, 4), 150, 3, 4);
+        let n_units: usize = assignments.iter().map(Vec::len).sum();
+        let claims = unit_claims(&assignments);
+        assert_eq!(claims.len(), n_units);
+        // group-major order: claims line up with a flattened unit walk
+        for (claim, unit) in claims.iter().zip(assignments.iter().flatten()) {
+            assert_eq!(claim.0, unit.rows);
+            assert_eq!(claim.1, unit.d);
+        }
+    }
+}

@@ -11,15 +11,22 @@
 //!   model exhibits exactly this, and depth-wise MobileNet layers hit it);
 //! * each (channel-pass × level-group) re-streams the input;
 //! * every pass ends with a `D_arch + PIPE_DEPTH` pipeline drain.
+//!
+//! Since the plan/execute split, the engine is pure compute over borrowed
+//! state: inputs arrive as [`FeatureMapView`]s over the ping half of the
+//! feature buffer, outputs leave through disjoint [`FeatureMapTileMut`]
+//! claims on the pong half (so one layer's work units can run on parallel
+//! host threads), and per-window im2col staging lives in a reusable
+//! [`TileScratch`] arena instead of per-call allocations.
 
 use std::ops::Range;
 
 use crate::artifacts::{LayerKind, QuantLayer};
 use crate::fixp;
-use crate::tensor::{FeatureMap, Shape};
+use crate::tensor::{FeatureMap, FeatureMapTileMut, FeatureMapTiles, FeatureMapView, Shape};
 
 use super::agu::Agu;
-use super::amu::{Amu, Odg};
+use super::amu::Amu;
 use super::PIPE_DEPTH;
 
 /// Cycle/occupancy statistics of one simulated unit of work.
@@ -58,6 +65,15 @@ impl SimStats {
     }
 }
 
+/// Reusable per-executor scratch: the im2col patch and the per-pass value
+/// staging buffer.  One arena per host worker thread; buffers grow to the
+/// layer maximum once and are reused for every window of every frame.
+#[derive(Clone, Debug, Default)]
+pub struct TileScratch {
+    patch: Vec<i8>,
+    vals: Vec<i8>,
+}
+
 /// One systolic array's layer-execution engine.
 #[derive(Clone, Copy, Debug)]
 pub struct SaEngine {
@@ -80,20 +96,22 @@ impl SaEngine {
 
     /// Execute one tile of a convolution layer: pooled-output rows
     /// `pooled_rows` × output channels `d_range`, writing pooled+activated
-    /// results into `out`.  `m_run ≤ layer.m` selects the runtime accuracy
-    /// mode (§IV-D); `seq_m` is the number of *sequential* level-group
-    /// passes this physical SA performs (1 when level groups are spread
-    /// across parallel SAs per Eq. 15, `⌈M/M_arch⌉` on a single SA).
+    /// results through the tile's claimed region.  `m_run ≤ layer.m`
+    /// selects the runtime accuracy mode (§IV-D); `seq_m` is the number of
+    /// *sequential* level-group passes this physical SA performs (1 when
+    /// level groups are spread across parallel SAs per Eq. 15,
+    /// `⌈M/M_arch⌉` on a single SA).
     #[allow(clippy::too_many_arguments)]
     pub fn conv_tile(
         &self,
         layer: &QuantLayer,
-        input: &FeatureMap,
+        input: &FeatureMapView<'_>,
         pooled_rows: Range<usize>,
         d_range: Range<usize>,
         m_run: usize,
         seq_m: u64,
-        out: &mut FeatureMap,
+        out: &mut FeatureMapTileMut<'_>,
+        scratch: &mut TileScratch,
         stats: &mut SimStats,
     ) {
         assert_eq!(layer.kind, LayerKind::Conv);
@@ -103,13 +121,12 @@ impl SaEngine {
             .conv_out(layer.kh, layer.kw, layer.stride, layer.d);
         let (u_out, v_out) = (conv_shape.h, conv_shape.w);
         assert!(u_out % np == 0 && v_out % np == 0, "AMU downsampling only");
-        assert_eq!(out.shape.c, layer.d);
+        assert_eq!(out.shape().c, layer.d);
 
         let n_c = layer.n_c();
         let m_run = m_run.min(layer.m).max(1);
         let m_groups = seq_m;
         let d_passes = d_range.len().div_ceil(self.d_arch);
-        let mut patch = Vec::with_capacity(n_c);
 
         // conv rows covered by this tile of pooled rows
         let conv_row0 = pooled_rows.start * np;
@@ -122,11 +139,6 @@ impl SaEngine {
         // the host walks windows outermost so each im2col patch is
         // extracted once and reused across all D/D_arch passes — same
         // outputs, same cycle accounting, ~20 % less host work).
-        let odg = Odg {
-            out_w: out.shape.w,
-            out_c: out.shape.c,
-            base: 0,
-        };
         let mut amus: Vec<Amu> = (0..d_passes)
             .map(|dp| {
                 let d0 = d_range.start + dp * self.d_arch;
@@ -144,7 +156,7 @@ impl SaEngine {
             np,
             np,
         );
-        let mut vals = vec![0i8; self.d_arch];
+        scratch.vals.resize(self.d_arch, 0);
         for anchor in agu {
             // stream the window: N_c features through all M_arch PAs.
             // (anchor.addr is the AGU's add-only address within the tile;
@@ -154,7 +166,7 @@ impl SaEngine {
                 anchor.v * layer.stride,
                 layer.kh,
                 layer.kw,
-                &mut patch,
+                &mut scratch.patch,
             );
             for (dp, amu) in amus.iter_mut().enumerate() {
                 let d0 = d_range.start + dp * self.d_arch;
@@ -167,19 +179,19 @@ impl SaEngine {
                 stats.dsp_ops += (chans * m_run) as u64;
 
                 for (k, d) in (d0..d1).enumerate() {
-                    let acc = crate::golden::binary_dot(layer, d, &patch, m_run);
-                    vals[k] = fixp::qs(acc, layer.shift);
+                    let acc = crate::golden::binary_dot(layer, d, &scratch.patch, m_run);
+                    scratch.vals[k] = fixp::qs(acc, layer.shift);
                 }
                 if layer.relu || np > 1 {
-                    if let Some(pooled) = amu.push(&vals[..chans]) {
-                        let py = pooled_rows.start + anchor.u / np;
-                        let px = anchor.v / np;
-                        odg.write(&mut out.data, py, px, d0, &pooled);
-                    }
+                    let py = pooled_rows.start + anchor.u / np;
+                    let px = anchor.v / np;
+                    amu.push_then(&scratch.vals[..chans], |pooled| {
+                        out.write(py, px, d0, pooled);
+                    });
                 } else {
                     // no activation, no pooling: direct ODG write
                     let py = pooled_rows.start + anchor.u;
-                    odg.write(&mut out.data, py, anchor.v, d0, &vals[..chans]);
+                    out.write(py, anchor.v, d0, &scratch.vals[..chans]);
                 }
             }
         }
@@ -187,8 +199,10 @@ impl SaEngine {
         stats.cycles += d_passes as u64 * (self.d_arch as u64 + PIPE_DEPTH) * m_groups;
     }
 
-    /// Execute a dense layer for output neurons `d_range`.  `seq_m` as in
+    /// Execute a dense layer for output neurons `d_range`, writing through
+    /// a tile claimed on the `(1, 1, D)` output region.  `seq_m` as in
     /// [`Self::conv_tile`].
+    #[allow(clippy::too_many_arguments)]
     pub fn dense_tile(
         &self,
         layer: &QuantLayer,
@@ -196,7 +210,8 @@ impl SaEngine {
         d_range: Range<usize>,
         m_run: usize,
         seq_m: u64,
-        out: &mut [i8],
+        out: &mut FeatureMapTileMut<'_>,
+        scratch: &mut TileScratch,
         stats: &mut SimStats,
     ) {
         assert_eq!(layer.kind, LayerKind::Dense);
@@ -205,6 +220,7 @@ impl SaEngine {
         let m_run = m_run.min(layer.m).max(1);
         let m_groups = seq_m;
         let d_passes = d_range.len().div_ceil(self.d_arch);
+        scratch.vals.resize(self.d_arch, 0);
 
         for dp in 0..d_passes {
             let d0 = d_range.start + dp * self.d_arch;
@@ -214,7 +230,7 @@ impl SaEngine {
             stats.cycles += self.window_cost(n_c) * m_groups;
             stats.pe_ops += (n_c * (d1 - d0) * m_run) as u64;
             stats.dsp_ops += ((d1 - d0) * m_run) as u64;
-            for d in d0..d1 {
+            for (k, d) in (d0..d1).enumerate() {
                 let mut v = fixp::qs(
                     crate::golden::binary_dot(layer, d, input, m_run),
                     layer.shift,
@@ -222,8 +238,9 @@ impl SaEngine {
                 if layer.relu {
                     v = v.max(0);
                 }
-                out[d] = v;
+                scratch.vals[k] = v;
             }
+            out.write(0, 0, d0, &scratch.vals[..d1 - d0]);
             stats.passes += m_groups;
             stats.cycles += (self.d_arch as u64 + PIPE_DEPTH) * m_groups;
         }
@@ -246,19 +263,26 @@ impl SaEngine {
         let conv = input
             .shape
             .conv_out(layer.kh, layer.kw, layer.stride, layer.d);
-        let mut out = FeatureMap::zeros(Shape::new(conv.h / np, conv.w / np, layer.d));
+        let shape = Shape::new(conv.h / np, conv.w / np, layer.d);
+        let mut out = FeatureMap::zeros(shape);
         let mut stats = SimStats::default();
-        let rows = 0..out.shape.h;
+        let mut scratch = TileScratch::default();
+        let mut tile = FeatureMapTiles::new(shape, &mut out.data)
+            .claim_all(&[(0..shape.h, 0..shape.c)])
+            .pop()
+            .expect("one claim");
         self.conv_tile(
             layer,
-            input,
-            rows,
+            &input.view(),
+            0..shape.h,
             0..layer.d,
             m_run,
             self.seq_m(m_run.min(layer.m)),
-            &mut out,
+            &mut tile,
+            &mut scratch,
             &mut stats,
         );
+        drop(tile);
         (out, stats)
     }
 }
@@ -337,9 +361,17 @@ mod tests {
         let layer = &net.layers[2];
         let input = prop::i8_vec(&mut rng, 1350);
         let sa = SaEngine::new(8, 2);
+        let shape = Shape::new(1, 1, 340);
         let mut out = vec![0i8; 340];
         let mut stats = SimStats::default();
-        sa.dense_tile(layer, &input, 0..340, 2, 1, &mut out, &mut stats);
+        let mut scratch = TileScratch::default();
+        {
+            let mut tile = FeatureMapTiles::new(shape, &mut out)
+                .claim_all(&[(0..1, 0..340)])
+                .pop()
+                .unwrap();
+            sa.dense_tile(layer, &input, 0..340, 2, 1, &mut tile, &mut scratch, &mut stats);
+        }
         let want = golden::dense_layer(layer, &input, 2);
         assert_eq!(out, want);
         // 43 channel passes × 1350 features
@@ -362,8 +394,15 @@ mod tests {
         let mut out = FeatureMap::zeros(want.shape);
         let mut s1 = SimStats::default();
         let mut s2 = SimStats::default();
-        sa.conv_tile(layer, &input, 0..10, 0..5, 2, 1, &mut out, &mut s1);
-        sa.conv_tile(layer, &input, 10..21, 0..5, 2, 1, &mut out, &mut s2);
+        let mut scratch = TileScratch::default();
+        {
+            let shape = want.shape;
+            let mut ts = FeatureMapTiles::new(shape, &mut out.data)
+                .claim_all(&[(0..10, 0..5), (10..21, 0..5)]);
+            let view = input.view();
+            sa.conv_tile(layer, &view, 0..10, 0..5, 2, 1, &mut ts[0], &mut scratch, &mut s1);
+            sa.conv_tile(layer, &view, 10..21, 0..5, 2, 1, &mut ts[1], &mut scratch, &mut s2);
+        }
         assert_eq!(out, want);
         // tiles split the work
         assert!(s1.cycles < s2.cycles);

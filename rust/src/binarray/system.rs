@@ -2,27 +2,41 @@
 //! global feature buffer, the control unit, and the scatter/gather block
 //! that distributes work across arrays.
 //!
-//! Scheduling follows the paper's parallelism model (§IV-E):
+//! # Plan/execute split
 //!
-//! 1. level-group parallelism — `⌈M/M_arch⌉` groups spread over SAs
-//!    (Eq. 15's logical SAs); leftover groups run sequentially;
-//! 2. channel-pass parallelism — `⌈D/D_arch⌉` passes distributed over
-//!    logical SAs (Eq. 17);
-//! 3. input tiling — when channel passes underfill the logical SAs, the
-//!    input is tiled along pooled-output rows (Eq. 16, width/height only,
-//!    never depth — keeps convolutions atomic).
+//! Construction compiles the network once into an [`ExecutionPlan`]
+//! (see [`super::plan`]): per layer and per accuracy mode, the work-unit
+//! assignment over logical SAs, the sequential level-group count, the
+//! ping-pong buffer bindings and the tile geometry.  The per-frame
+//! [`FrameExecutor`] is then a thin walk over that plan:
 //!
-//! Layer wall-clock = the maximum cycle count over physical SAs (they run
-//! in parallel), plus the CU's per-instruction cycles.
+//! * the CU state machine still triggers each layer (instruction-cycle
+//!   accounting is unchanged), but the layer callback only *looks up* its
+//!   [`LayerPlan`] — no scheduling arithmetic on the frame path;
+//! * layer inputs are zero-copy [`crate::tensor::FeatureMapView`]s over
+//!   the ping half of the feature buffer, outputs are disjoint
+//!   [`crate::tensor::FeatureMapTileMut`] claims on the pong half — the
+//!   per-layer `to_vec`/`zeros` churn of the pre-plan executor is gone;
+//! * a layer's logical-SA work units execute on scoped host threads (the
+//!   simulated SAs really do run in parallel now), with one reusable
+//!   im2col scratch arena per host worker;
+//! * [`BinArraySystem::run_frames`] runs a cut batch back-to-back on one
+//!   plan — the coordinator's worker loop entry point.
+//!
+//! Simulated-cycle accounting is untouched by all of this: layer
+//! wall-clock is still the maximum cycle count over physical SAs plus the
+//! CU's per-instruction cycles, and logits are byte-identical to
+//! [`crate::golden::forward`] (asserted by tests and the hot-path bench).
 
 use anyhow::{bail, Result};
 
-use crate::artifacts::{LayerKind, QuantNetwork};
+use crate::artifacts::{LayerKind, QuantLayer, QuantNetwork};
 use crate::isa::{compile_network, Program};
-use crate::tensor::{FeatureMap, Shape};
+use crate::tensor::{FeatureMapTileMut, FeatureMapTiles, FeatureMapView, Shape};
 
-use super::cu::{ControlUnit, CuRun};
-use super::sa::{SaEngine, SimStats};
+use super::cu::ControlUnit;
+use super::plan::{ExecutionPlan, LayerPlan, ModePlan, WorkUnit};
+use super::sa::{SaEngine, SimStats, TileScratch};
 use super::ArrayConfig;
 
 /// Per-frame execution report.
@@ -50,13 +64,240 @@ impl FrameStats {
     }
 }
 
-/// One unit of schedulable work for a layer.
-#[derive(Clone, Debug, PartialEq, Eq)]
-struct WorkUnit {
-    /// Pooled-output row range (conv) — full range for dense.
-    rows: std::ops::Range<usize>,
-    /// Output-channel range.
-    d: std::ops::Range<usize>,
+/// Reusable per-frame execution state: the ping-pong feature buffer, the
+/// parked CU and the host worker scratch arenas.  Owns everything
+/// `run_frame` mutates, so consecutive frames of a batch share all
+/// allocations — and a batch can run one executor per *frame lane* (the
+/// multi-threaded frame pipeline of [`BinArraySystem::run_frames`]).
+pub struct FrameExecutor {
+    engine: SaEngine,
+    cu: ControlUnit,
+    /// Global/local feature buffer (ping-pong halves per the compiler).
+    fbuf: Vec<i8>,
+    /// One im2col/staging arena per intra-layer host worker.
+    scratch: Vec<TileScratch>,
+}
+
+impl FrameExecutor {
+    fn new(cfg: ArrayConfig, prog: &Program, scratch_width: usize) -> Self {
+        let mut cu = ControlUnit::new();
+        // Park at the entry HLT so every frame — first included, on any
+        // lane — has the identical steady-state instruction-cycle cost.
+        cu.park_at(prog.entry);
+        Self {
+            engine: SaEngine::new(cfg.d_arch, cfg.m_arch),
+            cu,
+            fbuf: vec![0; prog.fbuf_words],
+            scratch: vec![TileScratch::default(); scratch_width.max(1)],
+        }
+    }
+
+    /// Execute one frame of `mode`'s plan.  The thin per-frame walk: DMA
+    /// the image in, let the CU trigger each layer against its
+    /// precomputed [`LayerPlan`], read the logits out.  `intra_threads`
+    /// is the scoped-thread width for a layer's logical-SA groups (1 =
+    /// fully sequential).
+    fn run_frame(
+        &mut self,
+        net: &QuantNetwork,
+        prog: &Program,
+        mode: &ModePlan,
+        n_sa: usize,
+        image: &[i8],
+        intra_threads: usize,
+    ) -> Result<(Vec<i8>, FrameStats)> {
+        let first = mode.layers.first().expect("non-empty plan");
+        if image.len() != first.in_len {
+            bail!("image len {} != {}", image.len(), first.in_len);
+        }
+        // DMA: CPU loads the frame into the first layer's input region.
+        self.fbuf[first.in_base..first.in_base + first.in_len].copy_from_slice(image);
+
+        let mut stats = FrameStats {
+            sa_stats: vec![SimStats::default(); n_sa],
+            ..Default::default()
+        };
+
+        let host_threads = intra_threads.max(1);
+        if self.scratch.len() < host_threads {
+            self.scratch.resize(host_threads, TileScratch::default());
+        }
+
+        // Borrow-splitting: the CU callback needs the executor's fields.
+        let engine = self.engine;
+        let fbuf = &mut self.fbuf;
+        let scratch = &mut self.scratch;
+        let layer_cycles = &mut stats.layer_cycles;
+        let sa_stats = &mut stats.sa_stats;
+
+        let cu_run = self.cu.run_frame(prog, |lr| {
+            let li = lr.layer_id as usize;
+            let lp = &mode.layers[li];
+            let layer = &net.layers[li];
+            let wall = exec_layer(
+                engine,
+                lp,
+                layer,
+                fbuf,
+                scratch,
+                host_threads,
+                sa_stats,
+                n_sa,
+            );
+            layer_cycles.push(wall);
+            wall
+        });
+
+        stats.instr_cycles = cu_run.instr_cycles;
+        stats.cycles = cu_run.total_cycles();
+
+        // Logits live at the last layer's output region.
+        let last = mode.layers.last().expect("non-empty plan");
+        let logits = self.fbuf[last.out_base..last.out_base + last.out_len].to_vec();
+        Ok((logits, stats))
+    }
+}
+
+/// Run one layer of the plan: claim the zero-copy views over the two
+/// feature-buffer halves, execute the work units (threaded across logical
+/// SA groups when the plan has host parallelism to exploit), and account
+/// cycles exactly as the sequential executor did — per-group stats land
+/// on the group's first physical SA, layer wall-clock is the max over
+/// groups.
+#[allow(clippy::too_many_arguments)]
+fn exec_layer(
+    engine: SaEngine,
+    lp: &LayerPlan,
+    layer: &QuantLayer,
+    fbuf: &mut [i8],
+    scratch: &mut [TileScratch],
+    host_threads: usize,
+    sa_stats: &mut [SimStats],
+    n_sa: usize,
+) -> u64 {
+    let half = fbuf.len() / 2;
+    // Ping-pong split: input and output regions live in opposite halves,
+    // so one `split_at_mut` yields a shared input view and an exclusive
+    // output region with no copying.
+    let (input, out): (&[i8], &mut [i8]) = if lp.in_base < half {
+        let (ping, pong) = fbuf.split_at_mut(half);
+        (
+            &ping[lp.in_base..lp.in_base + lp.in_len],
+            &mut pong[lp.out_base - half..lp.out_base - half + lp.out_len],
+        )
+    } else {
+        let (ping, pong) = fbuf.split_at_mut(half);
+        (
+            &pong[lp.in_base - half..lp.in_base - half + lp.in_len],
+            &mut ping[lp.out_base..lp.out_base + lp.out_len],
+        )
+    };
+    let in_view = FeatureMapView::new(lp.in_shape, input);
+
+    // Claim one disjoint output tile per work unit, grouped by logical SA
+    // (claims are precomputed in the plan; claim_all's disjointness check
+    // is the release-mode gate backing the tiles' `Send`).
+    let mut flat = FeatureMapTiles::new(lp.out_shape, out)
+        .claim_all(lp.claims())
+        .into_iter();
+    let mut groups: Vec<(usize, Vec<(&WorkUnit, FeatureMapTileMut<'_>)>)> = Vec::new();
+    for (g, units) in lp.assignments.iter().enumerate() {
+        if units.is_empty() {
+            continue;
+        }
+        let items: Vec<_> = units
+            .iter()
+            .map(|u| (u, flat.next().expect("claim per unit")))
+            .collect();
+        groups.push((g, items));
+    }
+
+    let mut wall = 0u64;
+    // (scratch.len() bound keeps the worker/arena zip total — an arena
+    // per spawned worker is a structural invariant, not an optimization;
+    // `host_par` skips spawning entirely for layers too small to pay it)
+    let n_workers = if lp.host_par {
+        host_threads.min(groups.len()).min(scratch.len())
+    } else {
+        1
+    };
+    if n_workers <= 1 {
+        for (g, mut items) in groups {
+            let s = run_units(engine, lp, layer, in_view, &mut items, &mut scratch[0]);
+            sa_stats[g % n_sa].add(s);
+            wall = wall.max(s.cycles);
+        }
+    } else {
+        // Round-robin the logical-SA groups over the host workers; each
+        // worker owns its scratch arena for the scope's duration.
+        let mut chunks: Vec<Vec<(usize, Vec<(&WorkUnit, FeatureMapTileMut<'_>)>)>> =
+            (0..n_workers).map(|_| Vec::new()).collect();
+        for (i, item) in groups.into_iter().enumerate() {
+            chunks[i % n_workers].push(item);
+        }
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .zip(scratch.iter_mut())
+                .map(|(chunk, scr)| {
+                    scope.spawn(move || {
+                        chunk
+                            .into_iter()
+                            .map(|(g, mut items)| {
+                                (g, run_units(engine, lp, layer, in_view, &mut items, scr))
+                            })
+                            .collect::<Vec<(usize, SimStats)>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (g, s) in h.join().expect("SA worker panicked") {
+                    sa_stats[g % n_sa].add(s);
+                    wall = wall.max(s.cycles);
+                }
+            }
+        });
+    }
+    wall
+}
+
+/// Execute one logical SA's work units sequentially (the hardware's view:
+/// a logical SA is one or more physical SAs working one unit at a time).
+fn run_units(
+    engine: SaEngine,
+    lp: &LayerPlan,
+    layer: &QuantLayer,
+    input: FeatureMapView<'_>,
+    items: &mut [(&WorkUnit, FeatureMapTileMut<'_>)],
+    scratch: &mut TileScratch,
+) -> SimStats {
+    let mut s = SimStats::default();
+    for (u, tile) in items.iter_mut() {
+        match lp.kind {
+            LayerKind::Conv => engine.conv_tile(
+                layer,
+                &input,
+                u.rows.clone(),
+                u.d.clone(),
+                lp.m_run,
+                lp.seq_m,
+                tile,
+                scratch,
+                &mut s,
+            ),
+            LayerKind::Dense => engine.dense_tile(
+                layer,
+                input.data,
+                u.d.clone(),
+                lp.m_run,
+                lp.seq_m,
+                tile,
+                scratch,
+                &mut s,
+            ),
+        }
+    }
+    s
 }
 
 /// The complete accelerator instance.
@@ -64,10 +305,13 @@ pub struct BinArraySystem {
     pub cfg: ArrayConfig,
     pub net: QuantNetwork,
     pub prog: Program,
-    cu: ControlUnit,
-    engine: SaEngine,
-    /// Global/local feature buffer (ping-pong halves per the compiler).
-    fbuf: Vec<i8>,
+    /// Precomputed per-mode schedules (the "plan" half).
+    pub plan: ExecutionPlan,
+    /// Per-frame execution lanes (the "execute" half).  Lane 0 serves the
+    /// latency path (single frame, intra-layer threading); batches spread
+    /// frames over up to `host_threads` lanes, each sequential inside.
+    execs: Vec<FrameExecutor>,
+    host_threads: usize,
     /// Input dims inferred by the compiler.
     pub input_shape: Shape,
     /// Runtime accuracy mode: number of binary levels to evaluate
@@ -77,189 +321,129 @@ pub struct BinArraySystem {
 
 impl BinArraySystem {
     pub fn new(cfg: ArrayConfig, net: QuantNetwork) -> Result<Self> {
+        let host_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::with_host_threads(cfg, net, host_threads)
+    }
+
+    /// As [`Self::new`] with an explicit host thread-pool width (`1` =
+    /// fully sequential execution; logits are identical either way).
+    pub fn with_host_threads(
+        cfg: ArrayConfig,
+        net: QuantNetwork,
+        host_threads: usize,
+    ) -> Result<Self> {
         if net.layers.is_empty() {
             bail!("empty network");
         }
+        let host_threads = host_threads.max(1);
         let prog = compile_network(&net);
-        let dims = crate::isa::compiler::infer_input_dims(&net);
+        let plan = ExecutionPlan::new(cfg, &net, &prog);
         Ok(Self {
             cfg,
-            engine: SaEngine::new(cfg.d_arch, cfg.m_arch),
-            fbuf: vec![0; prog.fbuf_words],
-            input_shape: Shape::new(dims.1, dims.0, dims.2),
+            execs: vec![FrameExecutor::new(cfg, &prog, host_threads)],
+            host_threads,
+            input_shape: plan.input_shape,
+            plan,
             prog,
             net,
-            cu: ControlUnit::new(),
             m_run: None,
         })
+    }
+
+    /// Change the host thread-pool width (simulation-speed knob only —
+    /// simulated cycles and logits are unaffected).
+    pub fn set_host_threads(&mut self, n: usize) {
+        self.host_threads = n.max(1);
     }
 
     /// Run one frame: load `image` (int8, row-major HWC), execute the CNN
     /// processing program, return (logits, stats).
     pub fn run_frame(&mut self, image: &[i8]) -> Result<(Vec<i8>, FrameStats)> {
-        let in_len = self.input_shape.len();
-        if image.len() != in_len {
-            bail!("image len {} != {}", image.len(), in_len);
-        }
-        // DMA: CPU loads the frame into the first layer's input region.
-        let in_base = self.prog.bindings[0].in_base;
-        self.fbuf[in_base..in_base + in_len].copy_from_slice(image);
-
-        let mut stats = FrameStats {
-            sa_stats: vec![SimStats::default(); self.cfg.n_sa],
-            ..Default::default()
-        };
-
-        // Borrow-splitting: the CU callback needs &mut self fields.
-        let net = &self.net;
-        let bindings = &self.prog.bindings;
-        let engine = self.engine;
-        let cfg = self.cfg;
-        let fbuf = &mut self.fbuf;
-        let input_shape = self.input_shape;
-        let m_run_mode = self.m_run;
-        let layer_cycles = &mut stats.layer_cycles;
-        let sa_stats = &mut stats.sa_stats;
-
-        let cu_run: CuRun = self.cu.run_frame(&self.prog, |lr| {
-            let li = lr.layer_id as usize;
-            let layer = &net.layers[li];
-            let b = &bindings[li];
-            let m_run = m_run_mode.unwrap_or(layer.m).min(layer.m).max(1);
-
-            let wall = match layer.kind {
-                LayerKind::Conv => {
-                    let in_shape = if li == 0 {
-                        input_shape
-                    } else {
-                        Shape::new(b.in_dims.1, b.in_dims.0, b.in_dims.2)
-                    };
-                    let in_len = in_shape.len();
-                    let input = FeatureMap::from_vec(
-                        in_shape,
-                        fbuf[b.in_base..b.in_base + in_len].to_vec(),
-                    );
-                    let out_shape = Shape::new(b.out_dims.1, b.out_dims.0, b.out_dims.2);
-                    let mut out = FeatureMap::zeros(out_shape);
-                    let (assignments, seq_m) =
-                        Self::schedule_static(cfg, layer.d, out_shape.h, m_run);
-                    let mut wall = 0u64;
-                    for (g, units) in assignments.iter().enumerate() {
-                        let mut s = SimStats::default();
-                        for u in units {
-                            engine.conv_tile(
-                                layer,
-                                &input,
-                                u.rows.clone(),
-                                u.d.clone(),
-                                m_run,
-                                seq_m,
-                                &mut out,
-                                &mut s,
-                            );
-                        }
-                        // group g occupies physical SAs [g*gsz, ...); charge
-                        // the group's work to its first physical SA.
-                        sa_stats[g % cfg.n_sa].add(s);
-                        wall = wall.max(s.cycles);
-                    }
-                    let out_len = out_shape.len();
-                    fbuf[b.out_base..b.out_base + out_len].copy_from_slice(&out.data);
-                    wall
-                }
-                LayerKind::Dense => {
-                    let n_in = layer.n_c();
-                    let input = fbuf[b.in_base..b.in_base + n_in].to_vec();
-                    let mut out = vec![0i8; layer.d];
-                    let (assignments, seq_m) = Self::schedule_static(cfg, layer.d, 1, m_run);
-                    let mut wall = 0u64;
-                    for (g, units) in assignments.iter().enumerate() {
-                        let mut s = SimStats::default();
-                        for u in units {
-                            engine.dense_tile(
-                                layer,
-                                &input,
-                                u.d.clone(),
-                                m_run,
-                                seq_m,
-                                &mut out,
-                                &mut s,
-                            );
-                        }
-                        sa_stats[g % cfg.n_sa].add(s);
-                        wall = wall.max(s.cycles);
-                    }
-                    fbuf[b.out_base..b.out_base + layer.d].copy_from_slice(&out);
-                    wall
-                }
-            };
-            layer_cycles.push(wall);
-            wall
-        });
-
-        stats.instr_cycles = cu_run.instr_cycles;
-        stats.cycles = cu_run.total_cycles();
-
-        // Logits live at the last layer's output region.
-        let last = bindings.last().unwrap();
-        let k = net.layers.last().unwrap().d;
-        let logits = self.fbuf[last.out_base..last.out_base + k].to_vec();
-        Ok((logits, stats))
+        let mut frames = self.run_frames(&[image])?;
+        Ok(frames.pop().expect("one frame in, one frame out"))
     }
 
-    /// `schedule` without `&self` (for use inside the CU closure).
-    fn schedule_static(
-        cfg: ArrayConfig,
-        d_out: usize,
-        pooled_rows: usize,
-        m_run: usize,
-    ) -> (Vec<Vec<WorkUnit>>, u64) {
-        // mirrors `schedule`; kept static for borrow reasons
-        let tmp = BinArraySystemScheduler { cfg };
-        tmp.schedule(d_out, pooled_rows, m_run)
+    /// Run a batch of frames on the precomputed plan — the coordinator's
+    /// per-batch entry point.  One mode lookup and zero per-frame setup.
+    ///
+    /// A single frame runs on lane 0 with intra-layer threading (lowest
+    /// latency).  A batch becomes a *frame pipeline*: frames interleave
+    /// over up to `host_threads` executor lanes, each lane sequential
+    /// inside — frame-grain parallelism has no tile-imbalance loss, so
+    /// batch throughput scales with cores.  Lane assignment is invisible
+    /// in the results: every lane's CU is parked in steady state, and
+    /// simulated cycle accounting is per frame by construction.
+    pub fn run_frames(&mut self, images: &[&[i8]]) -> Result<Vec<(Vec<i8>, FrameStats)>> {
+        let mode = self.plan.mode(self.m_run);
+        let lanes = self.host_threads.min(images.len());
+        if lanes <= 1 {
+            let exec = &mut self.execs[0];
+            let mut out = Vec::with_capacity(images.len());
+            for &image in images {
+                out.push(exec.run_frame(
+                    &self.net,
+                    &self.prog,
+                    mode,
+                    self.cfg.n_sa,
+                    image,
+                    self.host_threads,
+                )?);
+            }
+            return Ok(out);
+        }
+
+        while self.execs.len() < lanes {
+            self.execs.push(FrameExecutor::new(self.cfg, &self.prog, 1));
+        }
+        let net = &self.net;
+        let prog = &self.prog;
+        let n_sa = self.cfg.n_sa;
+        let mut slots: Vec<Option<(Vec<i8>, FrameStats)>> =
+            images.iter().map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self.execs[..lanes]
+                .iter_mut()
+                .enumerate()
+                .map(|(lane, exec)| {
+                    scope.spawn(move || {
+                        let mut res = Vec::new();
+                        for (i, &image) in
+                            images.iter().enumerate().skip(lane).step_by(lanes)
+                        {
+                            res.push((i, exec.run_frame(net, prog, mode, n_sa, image, 1)));
+                        }
+                        res
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("frame lane panicked") {
+                    match r {
+                        Ok(v) => slots[i] = Some(v),
+                        Err(e) => {
+                            first_err.get_or_insert(e);
+                        }
+                    }
+                }
+            }
+        });
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every frame index covered by a lane"))
+            .collect())
     }
 
     /// Switch runtime accuracy mode (§IV-D): `None` = high accuracy (all
-    /// M levels), `Some(m)` = evaluate only the first `m` levels.
+    /// M levels), `Some(m)` = evaluate only the first `m` levels.  O(1):
+    /// every mode's schedule is precomputed in the [`ExecutionPlan`].
     pub fn set_mode(&mut self, m_run: Option<usize>) {
         self.m_run = m_run;
-    }
-}
-
-/// Scheduling policy, factored out so it is callable without borrowing the
-/// whole system (and unit-testable in isolation).
-struct BinArraySystemScheduler {
-    cfg: ArrayConfig,
-}
-
-impl BinArraySystemScheduler {
-    fn schedule(&self, d_out: usize, pooled_rows: usize, m_run: usize) -> (Vec<Vec<WorkUnit>>, u64) {
-        let m_groups = m_run.div_ceil(self.cfg.m_arch);
-        let n_lsa = (self.cfg.n_sa / m_groups).max(1);
-        let seq_m = m_groups.div_ceil(self.cfg.n_sa.min(m_groups)) as u64;
-
-        let d_passes = d_out.div_ceil(self.cfg.d_arch);
-        let mut n_t = (n_lsa / d_passes).max(1);
-        n_t = n_t.min(pooled_rows.max(1));
-        while n_t > 1 && pooled_rows / n_t < 2 {
-            n_t -= 1;
-        }
-
-        let mut assignments: Vec<Vec<WorkUnit>> = vec![Vec::new(); n_lsa];
-        let row_tiles = crate::tensor::tile_ranges(pooled_rows.max(1), n_t, 0);
-        let mut lsa = 0usize;
-        for (r0, r1) in row_tiles {
-            for dp in 0..d_passes {
-                let d0 = dp * self.cfg.d_arch;
-                let d1 = (d0 + self.cfg.d_arch).min(d_out);
-                assignments[lsa].push(WorkUnit {
-                    rows: r0..r1,
-                    d: d0..d1,
-                });
-                lsa = (lsa + 1) % n_lsa;
-            }
-        }
-        (assignments, seq_m)
     }
 }
 
@@ -369,5 +553,42 @@ mod tests {
         assert_eq!(logits, want);
         // tiling must cut layer-0 wall cycles vs a single SA
         assert!(stats.layer_cycles[0] < 42 * 42 * 147 / 2);
+    }
+
+    #[test]
+    fn run_frames_equals_per_frame_runs() {
+        let mut rng = Xoshiro256::new(7);
+        let net = cnn_a_quant(&mut rng, 2);
+        let imgs: Vec<Vec<i8>> = (0..3).map(|_| image(&mut rng)).collect();
+        let refs: Vec<&[i8]> = imgs.iter().map(Vec::as_slice).collect();
+        let mut sys = BinArraySystem::new(ArrayConfig::new(4, 32, 4), net.clone()).unwrap();
+        let batch = sys.run_frames(&refs).unwrap();
+        assert_eq!(batch.len(), 3);
+        let mut one_by_one = BinArraySystem::new(ArrayConfig::new(4, 32, 4), net).unwrap();
+        for (img, (logits, stats)) in imgs.iter().zip(&batch) {
+            let (want_logits, want_stats) = one_by_one.run_frame(img).unwrap();
+            assert_eq!(*logits, want_logits);
+            assert_eq!(stats.cycles, want_stats.cycles);
+        }
+    }
+
+    #[test]
+    fn host_threading_never_changes_outputs_or_cycles() {
+        let mut rng = Xoshiro256::new(8);
+        let net = cnn_a_quant(&mut rng, 4);
+        let img = image(&mut rng);
+        let mut seq = BinArraySystem::with_host_threads(
+            ArrayConfig::new(4, 32, 4),
+            net.clone(),
+            1,
+        )
+        .unwrap();
+        let mut par =
+            BinArraySystem::with_host_threads(ArrayConfig::new(4, 32, 4), net, 8).unwrap();
+        let (l1, s1) = seq.run_frame(&img).unwrap();
+        let (l2, s2) = par.run_frame(&img).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(s1.cycles, s2.cycles);
+        assert_eq!(s1.sa_stats, s2.sa_stats);
     }
 }

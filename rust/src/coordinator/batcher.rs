@@ -39,6 +39,15 @@ pub struct Batch {
     pub requests: Vec<Request>,
 }
 
+impl Batch {
+    /// Borrow the batch's images in request order — the argument shape
+    /// [`crate::binarray::BinArraySystem::run_frames`] consumes, so a cut
+    /// batch flows to the accelerator without copying a single frame.
+    pub fn images(&self) -> Vec<&[i8]> {
+        self.requests.iter().map(|r| r.image.as_slice()).collect()
+    }
+}
+
 /// Two-lane (per-mode) FIFO batcher.
 #[derive(Debug)]
 pub struct Batcher {

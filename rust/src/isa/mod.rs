@@ -254,24 +254,34 @@ impl Instr {
     }
 }
 
-/// ISA-level errors.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+/// ISA-level errors (hand-implemented `Display`/`Error` — the crate keeps
+/// its dependency footprint to `anyhow` alone).
+#[derive(Debug, PartialEq, Eq)]
 pub enum IsaError {
-    #[error("unknown opcode {0:#x}")]
     BadOpcode(u32),
-    #[error("bad register id {0}")]
     BadRegister(u8),
-    #[error("empty line")]
     EmptyLine,
-    #[error("missing operand")]
     MissingOperand,
-    #[error("bad immediate")]
     BadImmediate,
-    #[error("unknown register name")]
     UnknownRegName,
-    #[error("unknown mnemonic")]
     UnknownMnemonic,
 }
+
+impl std::fmt::Display for IsaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IsaError::BadOpcode(op) => write!(f, "unknown opcode {op:#x}"),
+            IsaError::BadRegister(r) => write!(f, "bad register id {r}"),
+            IsaError::EmptyLine => write!(f, "empty line"),
+            IsaError::MissingOperand => write!(f, "missing operand"),
+            IsaError::BadImmediate => write!(f, "bad immediate"),
+            IsaError::UnknownRegName => write!(f, "unknown register name"),
+            IsaError::UnknownMnemonic => write!(f, "unknown mnemonic"),
+        }
+    }
+}
+
+impl std::error::Error for IsaError {}
 
 #[cfg(test)]
 mod tests {

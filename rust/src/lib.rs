@@ -8,20 +8,44 @@
 //! the bit-accurate golden model, a serving coordinator, and a PJRT
 //! runtime that executes the AOT-lowered JAX graphs.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! ## Plan/execute architecture
+//!
+//! The request path follows a FINN-style *plan once, execute many* split:
+//!
+//! * **plan** — [`binarray::plan::ExecutionPlan`] is built at system
+//!   construction from the compiled program: per layer and per runtime
+//!   accuracy mode it freezes the work-unit schedule over logical SAs
+//!   (Eqs. 15–17), the sequential level-group count, the ping-pong
+//!   feature-buffer bindings and the output tile geometry;
+//! * **execute** — [`binarray::system::FrameExecutor`] walks that plan
+//!   per frame with zero-copy [`tensor::FeatureMapView`] inputs, disjoint
+//!   [`tensor::FeatureMapTileMut`] outputs written from a scoped host
+//!   thread pool (one thread per logical SA group), and reusable im2col
+//!   scratch arenas.  `BinArraySystem::run_frames` executes a whole
+//!   coordinator batch back-to-back on one plan.
+//!
+//! Simulated cycle accounting and logits are invariant under all of this:
+//! the executor is bit-identical to [`golden::forward`] (property-tested
+//! across configs, modes, batch sizes and host-thread counts).
+//!
+//! ## Module map (see DESIGN.md for the full inventory)
 //!
 //! * [`approx`] — multi-level binary weight approximation (paper §II)
 //! * [`fixp`] — the fixed-point datapath semantics (§III-C)
-//! * [`tensor`] — row-major feature maps
+//! * [`tensor`] — row-major feature maps + zero-copy views/tiles
 //! * [`nn`] — reference network descriptions (CNN-A, MobileNetV1 B1/B2)
 //! * [`isa`] — instruction set + assembler + network compiler (§IV-C)
 //! * [`golden`] — bit-accurate int8 functional model (§V-A2)
-//! * [`artifacts`] — readers for the Python-side AOT outputs
-//! * [`binarray`] — the cycle-accurate simulator: PE/PA/SA/AMU/AGU/CU (§III–IV)
+//! * [`artifacts`] — readers for the Python-side AOT outputs (BAW1/BAC1/
+//!   BAG1) + the synthetic CNN-A stand-in for artifact-less environments
+//! * [`binarray`] — the cycle-accurate simulator: PE/PA/SA/AMU/AGU/CU,
+//!   the execution plan and the frame executor (§III–IV)
 //! * [`perf`] — analytical performance model, Eqs. 14–18 (§IV-E)
 //! * [`area`] — FPGA resource model (Table IV)
-//! * [`coordinator`] — request router / batcher / worker pool (§IV-D)
-//! * [`runtime`] — PJRT CPU client for `artifacts/*.hlo.txt`
+//! * [`coordinator`] — request router / batcher / worker pool (§IV-D);
+//!   workers drain cut batches through `run_frames`
+//! * [`runtime`] — PJRT CPU client for `artifacts/*.hlo.txt` (stubbed
+//!   without the `xla` cargo feature)
 //! * [`data`] — synthetic GTSRB-like workload generator
 //! * [`util`] — PRNG, property-test harness, binary IO
 

@@ -9,85 +9,145 @@
 //! Used for (a) golden-model cross-checks of the int8 pipeline against the
 //! float binary-approximated network, and (b) the `serve_gtsrb` example's
 //! float scoring path.
+//!
+//! The `xla` bindings are not vendored in the offline build environment,
+//! so the real implementation is gated behind the `xla` cargo feature;
+//! without it this module compiles to an API-compatible stub whose
+//! constructor returns an explanatory error (callers such as
+//! `serve_gtsrb` already degrade gracefully on `Runtime::cpu()` failure).
 
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod imp {
+    use std::path::Path;
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-/// A compiled HLO executable with fixed input geometry.
-pub struct HloModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Input shape (batch, h, w, c) the graph was lowered for.
-    pub input_dims: Vec<usize>,
+    /// A compiled HLO executable with fixed input geometry.
+    pub struct HloModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Input shape (batch, h, w, c) the graph was lowered for.
+        pub input_dims: Vec<usize>,
+    }
+
+    /// Shared PJRT CPU client (one per process).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Ok(Self {
+                client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO text artifact and compile it.
+        ///
+        /// `input_dims`: the example-input geometry the graph was lowered
+        /// with (e.g. `[8, 48, 48, 3]` for `cnn_a_pallas_b8.hlo.txt`).
+        pub fn load_hlo(&self, path: &Path, input_dims: &[usize]) -> Result<HloModel> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            Ok(HloModel {
+                exe,
+                input_dims: input_dims.to_vec(),
+            })
+        }
+    }
+
+    impl HloModel {
+        /// Run the model on a float batch (row-major NHWC), returning
+        /// logits as a flat `Vec<f32>` (batch × classes).
+        ///
+        /// The graphs are lowered with `return_tuple=True`, so the output
+        /// is a 1-tuple literal (see /opt/xla-example/README.md).
+        pub fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
+            let want: usize = self.input_dims.iter().product();
+            anyhow::ensure!(
+                batch.len() == want,
+                "batch len {} != expected {want}",
+                batch.len()
+            );
+            let dims: Vec<i64> = self.input_dims.iter().map(|&d| d as i64).collect();
+            let x = xla::Literal::vec1(batch).reshape(&dims)?;
+            let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        /// Convenience: int8 activations (binary point `f_input`) → float
+        /// batch → logits.
+        pub fn run_quantized(&self, batch_q: &[i8], f_input: i32) -> Result<Vec<f32>> {
+            let scale = 1.0 / (1i64 << f_input) as f32;
+            let floats: Vec<f32> = batch_q.iter().map(|&v| f32::from(v) * scale).collect();
+            self.run(&floats)
+        }
+    }
 }
 
-/// Shared PJRT CPU client (one per process).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use std::path::Path;
 
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        Ok(Self {
-            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
-        })
+    use anyhow::{bail, Result};
+
+    /// Stub of the PJRT executable (built without the `xla` feature).
+    pub struct HloModel {
+        /// Input shape the graph would have been lowered for.
+        pub input_dims: Vec<usize>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Stub of the PJRT CPU client.  [`Runtime::cpu`] fails with an
+    /// explanatory error; the rest of the API exists so callers typecheck
+    /// identically with and without the feature.
+    pub struct Runtime {}
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            bail!(
+                "PJRT runtime unavailable: binarray was built without PJRT \
+                 support (the `xla` bindings are not vendored in the offline \
+                 environment). On a machine that provides them, add the \
+                 `xla` bindings to rust/Cargo.toml [dependencies] and \
+                 rebuild with `--features xla`."
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn load_hlo(&self, _path: &Path, input_dims: &[usize]) -> Result<HloModel> {
+            let _ = input_dims;
+            bail!("PJRT runtime unavailable (built without the `xla` feature)")
+        }
     }
 
-    /// Load an HLO text artifact and compile it.
-    ///
-    /// `input_dims`: the example-input geometry the graph was lowered with
-    /// (e.g. `[8, 48, 48, 3]` for `cnn_a_pallas_b8.hlo.txt`).
-    pub fn load_hlo(&self, path: &Path, input_dims: &[usize]) -> Result<HloModel> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(HloModel {
-            exe,
-            input_dims: input_dims.to_vec(),
-        })
-    }
-}
+    impl HloModel {
+        pub fn run(&self, _batch: &[f32]) -> Result<Vec<f32>> {
+            bail!("PJRT runtime unavailable (built without the `xla` feature)")
+        }
 
-impl HloModel {
-    /// Run the model on a float batch (row-major NHWC), returning logits
-    /// as a flat `Vec<f32>` (batch × classes).
-    ///
-    /// The graphs are lowered with `return_tuple=True`, so the output is a
-    /// 1-tuple literal (see /opt/xla-example/README.md).
-    pub fn run(&self, batch: &[f32]) -> Result<Vec<f32>> {
-        let want: usize = self.input_dims.iter().product();
-        anyhow::ensure!(
-            batch.len() == want,
-            "batch len {} != expected {want}",
-            batch.len()
-        );
-        let dims: Vec<i64> = self.input_dims.iter().map(|&d| d as i64).collect();
-        let x = xla::Literal::vec1(batch).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Convenience: int8 activations (binary point `f_input`) → float
-    /// batch → logits.
-    pub fn run_quantized(&self, batch_q: &[i8], f_input: i32) -> Result<Vec<f32>> {
-        let scale = 1.0 / (1i64 << f_input) as f32;
-        let floats: Vec<f32> = batch_q.iter().map(|&v| f32::from(v) * scale).collect();
-        self.run(&floats)
+        pub fn run_quantized(&self, _batch_q: &[i8], _f_input: i32) -> Result<Vec<f32>> {
+            bail!("PJRT runtime unavailable (built without the `xla` feature)")
+        }
     }
 }
 
-#[cfg(test)]
+pub use imp::{HloModel, Runtime};
+
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
 
@@ -143,5 +203,16 @@ mod tests {
         let logits = pl.run(&x).unwrap();
         assert_eq!(logits.len(), 43);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[cfg(all(test, not(feature = "xla")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Runtime::cpu().err().expect("stub must fail");
+        assert!(format!("{err}").contains("xla"), "{err}");
     }
 }

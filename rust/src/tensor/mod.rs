@@ -102,6 +102,173 @@ impl FeatureMap {
     }
 }
 
+impl FeatureMap {
+    /// Borrow this map as a zero-copy read view.
+    pub fn view(&self) -> FeatureMapView<'_> {
+        FeatureMapView::new(self.shape, &self.data)
+    }
+}
+
+/// A borrowed, read-only feature map — the zero-copy input side of the
+/// plan/execute split.  Layer executors read the ping half of the feature
+/// buffer through this view instead of copying it into a fresh
+/// [`FeatureMap`].
+#[derive(Clone, Copy, Debug)]
+pub struct FeatureMapView<'a> {
+    pub shape: Shape,
+    pub data: &'a [i8],
+}
+
+impl<'a> FeatureMapView<'a> {
+    pub fn new(shape: Shape, data: &'a [i8]) -> Self {
+        assert_eq!(data.len(), shape.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> i8 {
+        self.data[self.shape.addr(y, x, ch)]
+    }
+
+    /// Extract the `kh×kw×C` im2col patch anchored at `(y, x)` in
+    /// `(ky, kx, c)` order — identical to [`FeatureMap::patch`].
+    pub fn patch(&self, y: usize, x: usize, kh: usize, kw: usize, out: &mut Vec<i8>) {
+        out.clear();
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let base = self.shape.addr(y + ky, x + kx, 0);
+                out.extend_from_slice(&self.data[base..base + self.shape.c]);
+            }
+        }
+    }
+}
+
+/// Factory handing out disjoint mutable tiles of one feature map — the
+/// zero-copy *output* side of the plan/execute split.
+///
+/// The executor claims one `(rows × channels)` tile per scheduled work
+/// unit; tiles of the same layer may then be written concurrently from
+/// the host thread pool.  Soundness: the factory holds the unique `&mut`
+/// borrow of the buffer for `'a`, and [`Self::claim_all`] verifies the
+/// claimed regions are pairwise disjoint before any raw-pointer tile is
+/// handed out (row-major interleaving means tiles are not contiguous
+/// slices, so `split_at_mut` alone cannot express this partition).
+#[derive(Debug)]
+pub struct FeatureMapTiles<'a> {
+    shape: Shape,
+    ptr: *mut i8,
+    len: usize,
+    _buf: std::marker::PhantomData<&'a mut [i8]>,
+}
+
+impl<'a> FeatureMapTiles<'a> {
+    pub fn new(shape: Shape, data: &'a mut [i8]) -> Self {
+        assert_eq!(data.len(), shape.len(), "shape/data mismatch");
+        Self {
+            shape,
+            len: data.len(),
+            ptr: data.as_mut_ptr(),
+            _buf: std::marker::PhantomData,
+        }
+    }
+
+    /// Claim one mutable tile per `(rows, channels)` region, consuming
+    /// the factory (one buffer, one set of claims — no way to hand out a
+    /// second, aliasing set).
+    ///
+    /// Panics if any region exceeds the map bounds or overlaps another —
+    /// two regions overlap only when both their row ranges *and* their
+    /// channel ranges intersect.
+    pub fn claim_all(
+        self,
+        claims: &[(std::ops::Range<usize>, std::ops::Range<usize>)],
+    ) -> Vec<FeatureMapTileMut<'a>> {
+        for (rows, chans) in claims {
+            assert!(
+                rows.end <= self.shape.h && chans.end <= self.shape.c,
+                "tile claim ({rows:?}, {chans:?}) exceeds map {:?}",
+                self.shape
+            );
+        }
+        for (i, (r1, c1)) in claims.iter().enumerate() {
+            for (r2, c2) in &claims[i + 1..] {
+                let rows_meet = r1.start < r2.end && r2.start < r1.end;
+                let chans_meet = c1.start < c2.end && c2.start < c1.end;
+                assert!(
+                    !(rows_meet && chans_meet),
+                    "overlapping tile claims ({r1:?},{c1:?}) vs ({r2:?},{c2:?})"
+                );
+            }
+        }
+        claims
+            .iter()
+            .map(|(rows, chans)| FeatureMapTileMut {
+                shape: self.shape,
+                ptr: self.ptr,
+                len: self.len,
+                rows: rows.clone(),
+                chans: chans.clone(),
+                _buf: std::marker::PhantomData,
+            })
+            .collect()
+    }
+}
+
+/// One claimed `(rows × channels)` output tile.
+///
+/// Writes land at the ODG's row-major `(y·W + x)·C + ch` addresses of the
+/// *full* map; each tile may only touch its claimed region (checked with
+/// a debug assertion on the claim and a release-mode bounds check on the
+/// underlying buffer).  `Send` is sound because claims are verified
+/// disjoint at construction.
+#[derive(Debug)]
+pub struct FeatureMapTileMut<'a> {
+    shape: Shape,
+    ptr: *mut i8,
+    len: usize,
+    rows: std::ops::Range<usize>,
+    chans: std::ops::Range<usize>,
+    _buf: std::marker::PhantomData<&'a mut [i8]>,
+}
+
+// SAFETY: tiles of one `FeatureMapTiles` write pairwise-disjoint regions
+// (verified in `claim_all`) of a buffer exclusively borrowed for 'a.
+unsafe impl Send for FeatureMapTileMut<'_> {}
+
+impl FeatureMapTileMut<'_> {
+    pub fn shape(&self) -> Shape {
+        self.shape
+    }
+
+    /// Scatter `vals` to `(y, x, ch0..ch0+vals.len())` — the ODG write of
+    /// one pooled output vector.
+    ///
+    /// The claim-containment checks are real (release-mode) asserts: they
+    /// are what keeps an out-of-claim write from racing another thread's
+    /// tile, and they cost two compares against a `vals.len()` memcpy.
+    #[inline]
+    pub fn write(&mut self, y: usize, x: usize, ch0: usize, vals: &[i8]) {
+        assert!(
+            self.rows.contains(&y) && x < self.shape.w,
+            "write at ({y},{x}) outside claimed rows {:?}",
+            self.rows
+        );
+        assert!(
+            ch0 >= self.chans.start && ch0 + vals.len() <= self.chans.end,
+            "write at channels {ch0}..{} outside claim {:?}",
+            ch0 + vals.len(),
+            self.chans
+        );
+        let base = self.shape.addr(y, x, ch0);
+        assert!(base + vals.len() <= self.len, "tile write out of bounds");
+        // SAFETY: in-bounds and inside the claimed region (checked above);
+        // claims are pairwise disjoint, so no other tile aliases it.
+        unsafe {
+            std::ptr::copy_nonoverlapping(vals.as_ptr(), self.ptr.add(base), vals.len());
+        }
+    }
+}
+
 /// Split `len` into `n` near-equal ranges with `halo` overlap on each seam.
 pub fn tile_ranges(len: usize, n: usize, halo: usize) -> Vec<(usize, usize)> {
     assert!(n >= 1 && n <= len, "cannot split {len} into {n} tiles");
@@ -179,6 +346,51 @@ mod tests {
             fm.patch(y, x, kh, kw, &mut p);
             assert_eq!(p.len(), kh * kw * c);
         });
+    }
+
+    #[test]
+    fn view_patch_matches_owned_patch() {
+        let mut rng = Xoshiro256::new(11);
+        let fm = FeatureMap::from_vec(Shape::new(6, 7, 3), prop::i8_vec(&mut rng, 6 * 7 * 3));
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        fm.patch(2, 3, 3, 2, &mut a);
+        fm.view().patch(2, 3, 3, 2, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(fm.get(4, 1, 2), fm.view().get(4, 1, 2));
+    }
+
+    #[test]
+    fn tile_writes_land_at_odg_addresses() {
+        let shape = Shape::new(4, 3, 5);
+        let mut buf = vec![0i8; shape.len()];
+        let mut ts = FeatureMapTiles::new(shape, &mut buf)
+            .claim_all(&[(0..2, 0..5), (2..4, 0..2), (2..4, 2..5)]);
+        ts[0].write(1, 2, 0, &[1, 2, 3, 4, 5]);
+        ts[1].write(3, 0, 0, &[7, 8]);
+        ts[2].write(3, 0, 2, &[9]);
+        drop(ts);
+        assert_eq!(&buf[shape.addr(1, 2, 0)..shape.addr(1, 2, 0) + 5], &[1, 2, 3, 4, 5]);
+        assert_eq!(buf[shape.addr(3, 0, 0)], 7);
+        assert_eq!(buf[shape.addr(3, 0, 1)], 8);
+        assert_eq!(buf[shape.addr(3, 0, 2)], 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping tile claims")]
+    fn overlapping_claims_rejected() {
+        let shape = Shape::new(4, 4, 4);
+        let mut buf = vec![0i8; shape.len()];
+        let _ = FeatureMapTiles::new(shape, &mut buf).claim_all(&[(0..3, 0..2), (2..4, 1..4)]);
+    }
+
+    #[test]
+    fn disjoint_row_or_channel_claims_allowed() {
+        let shape = Shape::new(4, 4, 4);
+        let mut buf = vec![0i8; shape.len()];
+        // same rows, disjoint channels; same channels, disjoint rows
+        let ts = FeatureMapTiles::new(shape, &mut buf)
+            .claim_all(&[(0..4, 0..2), (0..2, 2..4), (2..4, 2..4)]);
+        assert_eq!(ts.len(), 3);
     }
 
     #[test]

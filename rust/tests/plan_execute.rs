@@ -1,0 +1,140 @@
+//! Property coverage for the plan/execute split: `run_frames` over the
+//! precomputed `ExecutionPlan` must be logit-identical to the bit-accurate
+//! golden model for random images across **all** paper configs, **both**
+//! runtime accuracy modes and batch sizes 1/3/8 — i.e. neither the cached
+//! schedules, nor the zero-copy feature-buffer views, nor the host thread
+//! pool may ever change an output byte.
+
+use binarray::artifacts::{self, LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// A small but structurally complete network: two conv layers (one with
+/// pooling, one ReLU-only), two dense layers (ReLU + plain), M = 4 so
+/// both accuracy modes differ on every paper config.
+fn small_net(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 4;
+    let conv = |rng: &mut Xoshiro256, d: usize, c: usize, pool: usize, shift: u32| QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, d * m * 3 * 3 * c),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+        d,
+        m,
+        kh: 3,
+        kw: 3,
+        c,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift,
+        relu: true,
+        pool,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, nin: usize, relu: bool, shift: u32| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * nin),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+        d,
+        m,
+        kh: nin,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![
+            conv(rng, 6, 3, 2, 8),  // 14×14×3 → 12×12×6 → pool2 → 6×6×6
+            conv(rng, 10, 6, 1, 8), // 6×6×6 → 4×4×10 (ReLU, no pooling)
+            dense(rng, 20, 160, true, 8),
+            dense(rng, 7, 20, false, 7),
+        ],
+    };
+    (net, Shape::new(14, 14, 3))
+}
+
+#[test]
+fn run_frames_equals_golden_all_configs_modes_batches() {
+    prop::check(4, "run_frames == golden ∀ config × mode × batch", |rng| {
+        let (net, shape) = small_net(rng);
+        // sanity: the compiler must reconstruct the intended geometry
+        assert_eq!(
+            binarray::isa::compiler::infer_input_dims(&net),
+            (14, 14, 3)
+        );
+        let images: Vec<Vec<i8>> = (0..8).map(|_| prop::i8_vec(rng, shape.len())).collect();
+        for cfg in PAPER_CONFIGS {
+            let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+            for mode in [None, Some(cfg.m_arch)] {
+                sys.set_mode(mode);
+                for batch_size in [1usize, 3, 8] {
+                    let batch: Vec<&[i8]> =
+                        images[..batch_size].iter().map(Vec::as_slice).collect();
+                    let results = sys.run_frames(&batch).unwrap();
+                    assert_eq!(results.len(), batch_size);
+                    for (img, (logits, stats)) in batch.iter().zip(&results) {
+                        let want = golden::forward(&net, img, shape, mode);
+                        assert_eq!(
+                            *logits,
+                            want,
+                            "cfg {} mode {mode:?} batch {batch_size}",
+                            cfg.label()
+                        );
+                        assert!(stats.cycles > 0);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn host_thread_count_is_invisible_in_outputs_and_cycles() {
+    prop::check(2, "threading never changes logits or cycle accounting", |rng| {
+        let (net, shape) = small_net(rng);
+        let img = prop::i8_vec(rng, shape.len());
+        let cfg = ArrayConfig::new(4, 32, 4);
+        let mut runs = Vec::new();
+        for threads in [1usize, 2, 5] {
+            let mut sys =
+                BinArraySystem::with_host_threads(cfg, net.clone(), threads).unwrap();
+            let (logits, stats) = sys.run_frame(&img).unwrap();
+            runs.push((threads, logits, stats.cycles, stats.sa_stats));
+        }
+        let (_, logits0, cycles0, sa0) = &runs[0];
+        for (threads, logits, cycles, sa) in &runs[1..] {
+            assert_eq!(logits, logits0, "{threads} threads");
+            assert_eq!(cycles, cycles0, "{threads} threads");
+            assert_eq!(sa, sa0, "{threads} threads");
+        }
+    });
+}
+
+#[test]
+fn cnn_a_batch_on_multi_sa_config_matches_golden() {
+    // One full-size confirmation on the speedup config of the hot-path
+    // bench: CNN-A, [4,32,4], a 3-frame batch in both modes.
+    let mut rng = Xoshiro256::new(0xB1A);
+    let net = artifacts::synthetic_cnn_a(&mut rng, 2);
+    let shape = Shape::new(48, 48, 3);
+    let images: Vec<Vec<i8>> = (0..3).map(|_| prop::i8_vec(&mut rng, shape.len())).collect();
+    let batch: Vec<&[i8]> = images.iter().map(Vec::as_slice).collect();
+    let mut sys = BinArraySystem::new(ArrayConfig::new(4, 32, 4), net.clone()).unwrap();
+    for mode in [None, Some(2)] {
+        sys.set_mode(mode);
+        for (img, (logits, _)) in batch.iter().zip(sys.run_frames(&batch).unwrap()) {
+            assert_eq!(logits, golden::forward(&net, img, shape, mode), "mode {mode:?}");
+        }
+    }
+}
