@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 8,
                 max_delay: Duration::from_millis(1),
             },
+            ..Default::default()
         },
         net,
     )?;
@@ -82,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     }
     let (mut cyc_hi, mut n_hi, mut cyc_lo, mut n_lo) = (0u64, 0u64, 0u64, 0u64);
     for (mode, rx) in rxs {
-        let r = rx.recv()?;
+        let r = rx.recv()??;
         match mode {
             Mode::HighAccuracy => {
                 cyc_hi += r.cycles;

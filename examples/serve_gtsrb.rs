@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 8,
                 max_delay: Duration::from_millis(2),
             },
+            ..Default::default()
         },
         net.clone(),
     )?;
@@ -63,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     let mut cycles_per_frame = Vec::with_capacity(frames);
     let mut sample_logits = Vec::new();
     for (i, (rx, label)) in rxs.into_iter().zip(&labels).enumerate() {
-        let reply = rx.recv()?;
+        let reply = rx.recv()??;
         if reply.class as i32 == *label {
             correct += 1;
         }

@@ -29,6 +29,7 @@ fn run_policy(
                 max_batch,
                 max_delay: Duration::from_millis(max_delay_ms),
             },
+            ..Default::default()
         },
         net.clone(),
     )
@@ -44,7 +45,7 @@ fn run_policy(
         std::thread::sleep(Duration::from_micros((gap * 1000.0) as u64));
     }
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let wall = t0.elapsed();
     let m = coord.shutdown();

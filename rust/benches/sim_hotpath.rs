@@ -9,10 +9,14 @@
 //!     multi-SA config — logits asserted byte-identical to the golden
 //!     model on both paths;
 //!   * coordinator overhead: serve N frames through the full router →
-//!     batcher → worker stack vs calling the simulator directly.
+//!     batcher → worker stack vs calling the simulator directly;
+//!   * cross-card sharding: single-frame latency (host wall and simulated
+//!     cycles) with the frame's row tiles scattered over 1/2/4 worker
+//!     cards vs the unsharded whole-frame path.
 //!
 //! Results are also written to `BENCH_sim_hotpath.json` so the perf
-//! trajectory is machine-readable across PRs.
+//! trajectory is machine-readable across PRs (see `bench_gate` and the
+//! tracked `BENCH_trajectory.jsonl`).
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 //! (Falls back to the synthetic CNN-A when `make artifacts` hasn't run.)
@@ -26,7 +30,7 @@ use binarray::binarray::agu::Agu;
 use binarray::binarray::amu::{Amu, Odg};
 use binarray::binarray::plan::schedule;
 use binarray::binarray::{ArrayConfig, BinArraySystem};
-use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy};
 use binarray::isa::{compile_network, Program};
 use binarray::tensor::{FeatureMap, Shape};
 use binarray::util::{prop, rng::Xoshiro256};
@@ -329,6 +333,7 @@ fn main() {
                 max_batch: 8,
                 max_delay: Duration::from_micros(500),
             },
+            ..Default::default()
         },
         qnet.clone(),
     )
@@ -338,7 +343,7 @@ fn main() {
         .map(|i| coord.submit(images[i % images.len()].clone(), Mode::HighAccuracy))
         .collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let served = t0.elapsed().as_secs_f64();
     let m = coord.shutdown();
@@ -361,6 +366,7 @@ fn main() {
                     max_batch: 8,
                     max_delay: Duration::from_micros(500),
                 },
+                ..Default::default()
             },
             qnet.clone(),
         )
@@ -370,11 +376,77 @@ fn main() {
             .map(|i| coord.submit(images[i % images.len()].clone(), Mode::HighAccuracy))
             .collect();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
         coord.shutdown();
         println!("  {workers} workers: {:>8.1} frames/s wall", 128.0 / dt);
+    }
+
+    // === cross-card sharding: single-frame latency ======================
+    // The latency counterpart of the workers sweep above: the same pool,
+    // but every frame's row tiles scatter over all cards and gather
+    // between layers (ShardPolicy::PerFrame).  Requests are submitted
+    // one at a time — this measures frame latency, not queue throughput.
+    println!("\n=== cross-card sharding: single-frame latency [1,8,2] ===");
+    let shard_frames = 12usize;
+    let mut shard_json: Vec<String> = Vec::new();
+    for cards in [0usize, 2, 4] {
+        let sharded = cards > 0;
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(1, 8, 2),
+                workers: cards.max(1),
+                policy: BatchPolicy {
+                    max_batch: 1,
+                    max_delay: Duration::ZERO,
+                },
+                shard: if sharded {
+                    ShardPolicy::PerFrame(cards)
+                } else {
+                    ShardPolicy::Off
+                },
+            },
+            qnet.clone(),
+        )
+        .unwrap();
+        // warmup
+        coord.infer(images[0].clone(), Mode::HighAccuracy).unwrap();
+        let t0 = Instant::now();
+        let mut replies = Vec::with_capacity(shard_frames);
+        for i in 0..shard_frames {
+            let img = images[i % images.len()].clone();
+            replies.push(coord.infer(img, Mode::HighAccuracy).unwrap());
+        }
+        let per = t0.elapsed().as_secs_f64() / shard_frames as f64;
+        coord.shutdown();
+        // correctness check outside the timed region
+        let mut cycles = 0u64;
+        for (i, r) in replies.iter().enumerate() {
+            let img = &images[i % images.len()];
+            assert_eq!(
+                r.logits,
+                golden::forward(&qnet, img, shape, None),
+                "sharded path diverged from golden ({cards} cards)"
+            );
+            cycles = r.cycles;
+        }
+        let label = if sharded {
+            format!("sharded over {cards} cards")
+        } else {
+            "unsharded (1 card)".to_string()
+        };
+        println!(
+            "  {label:<24} {:>9.3} ms/frame  {:>8.1} fps  {cycles:>9} sim cc/frame",
+            per * 1e3,
+            1.0 / per
+        );
+        shard_json.push(format!(
+            "    {{\"cards\": {}, \"sharded\": {sharded}, \"ms_per_frame\": {:.3}, \"frames_per_sec\": {:.2}, \"sim_cycles_per_frame\": {cycles}}}",
+            cards.max(1),
+            per * 1e3,
+            1.0 / per
+        ));
     }
 
     // === machine-readable record =======================================
@@ -387,11 +459,12 @@ fn main() {
         })
         .collect();
     let json = format!(
-        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ]\n}}\n",
         cfg.label(),
         1.0 / legacy_per,
         1.0 / plan_per_frame,
         direct_json.join(",\n"),
+        shard_json.join(",\n"),
     );
     match std::fs::write("BENCH_sim_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_sim_hotpath.json"),

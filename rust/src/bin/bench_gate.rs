@@ -1,0 +1,246 @@
+//! CI perf gate over the `sim_hotpath` bench trajectory (ROADMAP item).
+//!
+//! The bench writes `BENCH_sim_hotpath.json` on every run; the repo
+//! tracks one record per PR in `BENCH_trajectory.jsonl`.  This tool
+//! compares the fresh record's host-side fps (`frames_per_sec_plan` —
+//! the product path the coordinator serves through) against the last
+//! tracked record and fails when it regressed by more than the
+//! threshold, so a PR cannot silently lose the hot-path wins.
+//!
+//! ```text
+//! bench_gate check  <fresh.json> <trajectory.jsonl> [threshold]
+//!     exit 1 when fresh fps < (1 - threshold) × last recorded fps
+//!     (threshold defaults to 0.20; missing baseline or fresh file ⇒ pass
+//!      with a notice, so the gate bootstraps on a new trajectory)
+//!
+//! bench_gate record <fresh.json> <trajectory.jsonl> [label]
+//!     append the fresh record as one trajectory line (run this once per
+//!     PR, after `cargo bench --bench sim_hotpath`, and commit the file)
+//!
+//! bench_gate record-best <fresh.json> <trajectory.jsonl> [label]
+//!     as `record`, but only when the fresh fps beats the last record —
+//!     the CI rolling baseline uses this so a sequence of sub-threshold
+//!     regressions cannot ratchet the floor downward run over run
+//! ```
+//!
+//! No JSON dependency: the bench's writer is in-repo, so a key scan is
+//! exact enough — and it keeps the gate runnable in the offline build.
+
+use std::process::ExitCode;
+
+/// Extract the first numeric value of a top-level `"key": <number>` pair.
+/// Returns `None` for a missing key or a non-numeric value (e.g. `null`).
+fn extract_f64(json: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\"");
+    let at = json.find(&needle)? + needle.len();
+    let rest = json[at..].trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Last non-empty line of a trajectory file's contents.
+fn last_record(trajectory: &str) -> Option<&str> {
+    trajectory.lines().map(str::trim).filter(|l| !l.is_empty()).last()
+}
+
+/// The gate decision: `Ok(notice)` to pass, `Err(reason)` to fail CI.
+fn gate(prev: Option<f64>, fresh: f64, threshold: f64) -> Result<String, String> {
+    let Some(prev) = prev else {
+        return Ok(format!(
+            "no baseline in trajectory — recording {fresh:.2} fps would seed it; pass"
+        ));
+    };
+    if prev <= 0.0 {
+        return Ok(format!("baseline {prev:.2} fps is degenerate; pass"));
+    }
+    let floor = prev * (1.0 - threshold);
+    let delta = (fresh - prev) / prev * 100.0;
+    if fresh < floor {
+        Err(format!(
+            "host-side fps regressed {delta:.1}%: {fresh:.2} < floor {floor:.2} \
+             (baseline {prev:.2}, threshold {:.0}%)",
+            threshold * 100.0
+        ))
+    } else {
+        Ok(format!(
+            "host-side fps {fresh:.2} vs baseline {prev:.2} ({delta:+.1}%, \
+             floor {floor:.2}) — ok"
+        ))
+    }
+}
+
+const KEY: &str = "frames_per_sec_plan";
+
+/// Host fps only compares like-for-like: records carry `host_threads` as
+/// a cheap machine-class fingerprint, and the gate refuses to compare a
+/// baseline from a different class (a dev workstation's fps floor would
+/// spuriously fail every CI runner, and vice versa).  Missing fields
+/// count as comparable so old records keep gating.
+fn same_machine_class(prev: Option<f64>, fresh: Option<f64>) -> bool {
+    match (prev, fresh) {
+        (Some(a), Some(b)) => a == b,
+        _ => true,
+    }
+}
+
+fn run() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("check");
+    let fresh_path = args.get(1).map(String::as_str).unwrap_or("BENCH_sim_hotpath.json");
+    let traj_path = args.get(2).map(String::as_str).unwrap_or("../BENCH_trajectory.jsonl");
+    match cmd {
+        "check" => {
+            let threshold: f64 = args
+                .get(3)
+                .map(|s| s.parse().map_err(|_| format!("bad threshold {s:?}")))
+                .transpose()?
+                .unwrap_or(0.20);
+            let Ok(fresh) = std::fs::read_to_string(fresh_path) else {
+                println!("bench_gate: no fresh record at {fresh_path} — nothing to gate");
+                return Ok(());
+            };
+            let fresh_fps = extract_f64(&fresh, KEY)
+                .ok_or_else(|| format!("{fresh_path} has no numeric {KEY:?}"))?;
+            let traj = std::fs::read_to_string(traj_path).ok();
+            let last = traj.as_deref().and_then(last_record);
+            let prev = last.and_then(|l| extract_f64(l, KEY));
+            let prev_threads = last.and_then(|l| extract_f64(l, "host_threads"));
+            let fresh_threads = extract_f64(&fresh, "host_threads");
+            if !same_machine_class(prev_threads, fresh_threads) {
+                println!(
+                    "bench_gate: baseline is from a different machine class (host_threads \
+                     {prev_threads:?} vs {fresh_threads:?}) — skipping fps comparison"
+                );
+                return Ok(());
+            }
+            println!("bench_gate: {}", gate(prev, fresh_fps, threshold)?);
+            Ok(())
+        }
+        "record" | "record-best" => {
+            // keep the hand-rolled JSONL line well-formed for any label
+            let label: String = args
+                .get(3)
+                .map(String::as_str)
+                .unwrap_or("")
+                .chars()
+                .filter(|c| *c != '"' && *c != '\\' && !c.is_control())
+                .collect();
+            let fresh = std::fs::read_to_string(fresh_path)
+                .map_err(|e| format!("read {fresh_path}: {e}"))?;
+            let fps = extract_f64(&fresh, KEY)
+                .ok_or_else(|| format!("{fresh_path} has no numeric {KEY:?}"))?;
+            if cmd == "record-best" {
+                let prev = std::fs::read_to_string(traj_path)
+                    .ok()
+                    .and_then(|t| last_record(&t).and_then(|l| extract_f64(l, KEY)));
+                if let Some(prev) = prev {
+                    if fps <= prev {
+                        println!(
+                            "bench_gate: {fps:.2} fps does not beat baseline {prev:.2} — \
+                             keeping the existing record"
+                        );
+                        return Ok(());
+                    }
+                }
+            }
+            let legacy = extract_f64(&fresh, "frames_per_sec_legacy").unwrap_or(0.0);
+            let speedup = extract_f64(&fresh, "plan_speedup").unwrap_or(0.0);
+            let threads = extract_f64(&fresh, "host_threads").unwrap_or(0.0);
+            let line = format!(
+                "{{\"bench\": \"sim_hotpath\", \"label\": \"{label}\", \
+                 \"host_threads\": {threads}, \"{KEY}\": {fps:.2}, \
+                 \"frames_per_sec_legacy\": {legacy:.2}, \"plan_speedup\": {speedup:.2}}}\n"
+            );
+            let mut traj = std::fs::read_to_string(traj_path).unwrap_or_default();
+            if !traj.is_empty() && !traj.ends_with('\n') {
+                traj.push('\n');
+            }
+            traj.push_str(&line);
+            std::fs::write(traj_path, traj).map_err(|e| format!("write {traj_path}: {e}"))?;
+            println!("bench_gate: recorded {fps:.2} fps to {traj_path}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?} (use check|record|record-best)")),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("bench_gate: FAIL — {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "bench": "sim_hotpath",
+  "host_threads": 8,
+  "frames_per_sec_legacy": 12.31,
+  "frames_per_sec_plan": 101.52,
+  "plan_speedup": 8.25,
+  "direct": [
+    {"config": "[1,8,2]", "frames_per_sec": 55.10, "sim_cycles_per_frame": 812345}
+  ]
+}"#;
+
+    #[test]
+    fn extracts_numbers_by_key() {
+        assert_eq!(extract_f64(SAMPLE, "frames_per_sec_plan"), Some(101.52));
+        assert_eq!(extract_f64(SAMPLE, "frames_per_sec_legacy"), Some(12.31));
+        assert_eq!(extract_f64(SAMPLE, "host_threads"), Some(8.0));
+        assert_eq!(extract_f64(SAMPLE, "missing"), None);
+        // null / non-numeric values are "no baseline", not a parse of 0
+        let null_json = r#"{"frames_per_sec_plan": null}"#;
+        assert_eq!(extract_f64(null_json, "frames_per_sec_plan"), None);
+        assert_eq!(extract_f64(r#"{"a": -3.5e2}"#, "a"), Some(-350.0));
+    }
+
+    #[test]
+    fn last_record_skips_blanks() {
+        assert_eq!(last_record("a\nb\n\n"), Some("b"));
+        assert_eq!(last_record("\n  \n"), None);
+        assert_eq!(last_record(""), None);
+    }
+
+    #[test]
+    fn gate_passes_without_baseline() {
+        assert!(gate(None, 50.0, 0.2).is_ok());
+        assert!(gate(Some(0.0), 50.0, 0.2).is_ok());
+    }
+
+    #[test]
+    fn gate_fails_only_past_threshold() {
+        // 20% threshold on a 100 fps baseline: floor is 80
+        assert!(gate(Some(100.0), 81.0, 0.2).is_ok());
+        assert!(gate(Some(100.0), 80.0, 0.2).is_ok());
+        assert!(gate(Some(100.0), 79.9, 0.2).is_err());
+        // improvements always pass
+        assert!(gate(Some(100.0), 140.0, 0.2).is_ok());
+    }
+
+    #[test]
+    fn machine_class_compares_only_when_both_known() {
+        assert!(same_machine_class(Some(8.0), Some(8.0)));
+        assert!(!same_machine_class(Some(8.0), Some(2.0)));
+        assert!(same_machine_class(None, Some(2.0)));
+        assert!(same_machine_class(Some(8.0), None));
+        assert!(same_machine_class(None, None));
+    }
+
+    #[test]
+    fn gate_reads_jsonl_record_shape() {
+        let line = r#"{"bench": "sim_hotpath", "label": "pr2", "host_threads": 8, "frames_per_sec_plan": 90.00, "frames_per_sec_legacy": 12.00, "plan_speedup": 7.50}"#;
+        let prev = last_record(line).and_then(|l| extract_f64(l, KEY));
+        assert_eq!(prev, Some(90.0));
+        assert!(gate(prev, 75.0, 0.2).is_ok());
+        assert!(gate(prev, 71.9, 0.2).is_err());
+    }
+}

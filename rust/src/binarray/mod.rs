@@ -33,9 +33,11 @@ pub mod sa;
 pub mod system;
 
 pub use cu::ControlUnit;
-pub use plan::{ExecutionPlan, LayerPlan, ModePlan, WorkUnit};
+pub use plan::{
+    CardShard, ExecutionPlan, LayerPlan, LayerShards, ModePlan, ShardPlan, ShardPolicy, WorkUnit,
+};
 pub use sa::{SaEngine, SimStats, TileScratch};
-pub use system::{BinArraySystem, FrameExecutor, FrameStats};
+pub use system::{BinArraySystem, FrameExecutor, FrameStats, ShardRun, ShardTile};
 
 /// Pipeline registers between PA output, barrel shifter, QS and AMU —
 /// the depth that makes VHDL simulation slightly slower than Eq. 18.

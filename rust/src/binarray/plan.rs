@@ -185,6 +185,155 @@ fn mode_plan(
     ModePlan { m_run, layers }
 }
 
+/// Cross-card sharding policy: how the coordinator maps one frame onto
+/// the worker pool.
+///
+/// `Off` is PR 1's throughput path (whole frames batch onto single
+/// cards); `PerFrame(n)` is the latency path — every frame's row tiles
+/// scatter over `n` worker cards and gather between layers, so one
+/// frame's wall-clock shrinks with the pool instead of only the queue's.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Whole frames go to single cards (dynamic batching only).
+    #[default]
+    Off,
+    /// Scatter each frame's row tiles over `n` worker cards.
+    PerFrame(usize),
+}
+
+impl ShardPolicy {
+    /// Number of cards a frame spreads over (1 when sharding is off).
+    pub fn cards(&self) -> usize {
+        match self {
+            ShardPolicy::Off => 1,
+            ShardPolicy::PerFrame(n) => (*n).max(1),
+        }
+    }
+
+    /// True when frames take the scatter/gather path (even `PerFrame(1)`,
+    /// which is the degenerate single-card shard used to cross-check the
+    /// two paths against each other).
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, ShardPolicy::PerFrame(_))
+    }
+}
+
+/// One card's sub-schedule for one layer: the work units this card
+/// executes, still organized by the layer's logical-SA groups (a card is
+/// a full BinArray instance — its groups run in parallel on its SAs, so
+/// per-card wall cycles stay `max` over groups exactly like a frame's).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CardShard {
+    /// Work units per logical-SA group (same group count as the parent
+    /// [`LayerPlan::assignments`]; groups may be empty on this card).
+    pub assignments: Vec<Vec<WorkUnit>>,
+    /// Group-major tile claims of this card's units — feed straight into
+    /// [`crate::tensor::FeatureMapTiles::claim_all`].
+    claims: Vec<(Range<usize>, Range<usize>)>,
+}
+
+impl CardShard {
+    pub fn claims(&self) -> &[(Range<usize>, Range<usize>)] {
+        &self.claims
+    }
+
+    /// Total work units on this card (0 = the card idles this layer).
+    pub fn n_units(&self) -> usize {
+        self.assignments.iter().map(Vec::len).sum()
+    }
+}
+
+/// Per-card partition of one layer's schedule.
+#[derive(Clone, Debug)]
+pub struct LayerShards {
+    pub cards: Vec<CardShard>,
+}
+
+/// Partition one layer's work units over `n_cards` cards.
+///
+/// Each unit's pooled-row range is cut into `min(n_cards, rows)` row
+/// tiles ([`crate::tensor::tile_ranges`], no halo — pooled-output rows
+/// are independent), and tile `j` of the `k`-th unit lands on card
+/// `(k + j) % n_cards` — the rotation balances layers whose units are
+/// too short to split (dense channel passes, single-row tiles).  Group
+/// structure is preserved: a sub-unit stays in its parent's logical-SA
+/// group, so `n_cards = 1` reproduces the parent schedule exactly and
+/// the unsharded/sharded cycle accounting stays comparable.
+pub fn shard_schedule(assignments: &[Vec<WorkUnit>], n_cards: usize) -> Vec<CardShard> {
+    let n_cards = n_cards.max(1);
+    let n_groups = assignments.len();
+    let mut cards: Vec<CardShard> = (0..n_cards)
+        .map(|_| CardShard {
+            assignments: vec![Vec::new(); n_groups],
+            claims: Vec::new(),
+        })
+        .collect();
+    let mut k = 0usize;
+    for (g, units) in assignments.iter().enumerate() {
+        for u in units {
+            let splits = n_cards.min(u.rows.len().max(1));
+            for (j, (r0, r1)) in crate::tensor::tile_ranges(u.rows.len().max(1), splits, 0)
+                .into_iter()
+                .enumerate()
+            {
+                cards[(k + j) % n_cards].assignments[g].push(WorkUnit {
+                    rows: u.rows.start + r0..u.rows.start + r1,
+                    d: u.d.clone(),
+                });
+            }
+            k += 1;
+        }
+    }
+    for card in &mut cards {
+        card.claims = unit_claims(&card.assignments);
+    }
+    cards
+}
+
+/// Cross-card scatter partition of a whole [`ExecutionPlan`]: per mode,
+/// per layer, the per-card disjoint sub-schedules whose union is exactly
+/// the layer's schedule.  Built once at coordinator start; the frame path
+/// only indexes it.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub n_cards: usize,
+    pub max_m: usize,
+    /// Index 0 = high accuracy, `m` = truncated mode (as [`ExecutionPlan`]).
+    modes: Vec<Vec<LayerShards>>,
+}
+
+impl ShardPlan {
+    pub fn new(plan: &ExecutionPlan, n_cards: usize) -> Self {
+        let n_cards = n_cards.max(1);
+        let modes = (0..=plan.max_m)
+            .map(|i| {
+                let m_run = if i == 0 { None } else { Some(i) };
+                plan.mode(m_run)
+                    .layers
+                    .iter()
+                    .map(|lp| LayerShards {
+                        cards: shard_schedule(&lp.assignments, n_cards),
+                    })
+                    .collect()
+            })
+            .collect();
+        Self {
+            n_cards,
+            max_m: plan.max_m,
+            modes,
+        }
+    }
+
+    /// Per-layer shards of a runtime mode (same clamp as
+    /// [`ExecutionPlan::mode`]).
+    pub fn mode(&self, m_run: Option<usize>) -> &[LayerShards] {
+        match m_run {
+            None => &self.modes[0],
+            Some(m) => &self.modes[m.clamp(1, self.max_m)],
+        }
+    }
+}
+
 /// Scheduling policy (paper §IV-E), factored out of the executor so it
 /// runs exactly once per (config, network, mode) instead of once per
 /// layer per frame:
@@ -330,6 +479,92 @@ mod tests {
         for w in plan.mode(None).layers.windows(2) {
             assert_eq!(w[0].out_base, w[1].in_base);
         }
+    }
+
+    #[test]
+    fn one_card_shard_is_the_parent_schedule() {
+        for (cfg, d, rows, m) in [
+            (ArrayConfig::new(1, 8, 2), 5, 21, 2),
+            (ArrayConfig::new(4, 32, 4), 150, 3, 4),
+            (ArrayConfig::new(1, 8, 2), 43, 1, 6),
+        ] {
+            let (assignments, _) = schedule(cfg, d, rows, m);
+            let cards = shard_schedule(&assignments, 1);
+            assert_eq!(cards.len(), 1);
+            assert_eq!(cards[0].assignments, assignments);
+            assert_eq!(cards[0].claims(), unit_claims(&assignments).as_slice());
+        }
+    }
+
+    #[test]
+    fn shards_cover_all_output_cells() {
+        for n_cards in [1usize, 2, 3, 4, 7] {
+            for (cfg, d, rows, m) in [
+                (ArrayConfig::new(1, 8, 2), 5, 21, 2),
+                (ArrayConfig::new(4, 32, 4), 150, 3, 4),
+                (ArrayConfig::new(16, 8, 2), 5, 21, 2),
+                (ArrayConfig::new(1, 8, 2), 43, 1, 6),
+            ] {
+                let (assignments, _) = schedule(cfg, d, rows, m);
+                let cards = shard_schedule(&assignments, n_cards);
+                assert_eq!(cards.len(), n_cards);
+                let flat: Vec<WorkUnit> = cards
+                    .iter()
+                    .flat_map(|c| c.assignments.iter().flatten().cloned())
+                    .collect();
+                cover(&[flat], d, rows);
+                for c in &cards {
+                    assert_eq!(c.claims().len(), c.n_units());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_splits_single_unit_rows() {
+        // [1,8,2] layer 0 of CNN-A is ONE unit (21 pooled rows × D=5);
+        // the whole point of PerFrame sharding is that this still splits.
+        let (assignments, _) = schedule(ArrayConfig::new(1, 8, 2), 5, 21, 2);
+        assert_eq!(assignments.iter().flatten().count(), 1);
+        let cards = shard_schedule(&assignments, 2);
+        assert_eq!(cards[0].n_units(), 1);
+        assert_eq!(cards[1].n_units(), 1);
+        let a = &cards[0].assignments[0][0];
+        let b = &cards[1].assignments[0][0];
+        assert_eq!(a.rows.len() + b.rows.len(), 21);
+        assert_eq!(a.d, 0..5);
+        assert_eq!(b.d, 0..5);
+    }
+
+    #[test]
+    fn shard_plan_indexes_like_execution_plan() {
+        let mut rng = Xoshiro256::new(3);
+        let net = cnn_a_quant(&mut rng, 4);
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(ArrayConfig::new(4, 32, 4), &net, &prog);
+        let sp = ShardPlan::new(&plan, 3);
+        assert_eq!(sp.n_cards, 3);
+        for mode in [None, Some(1), Some(4), Some(9), Some(0)] {
+            let layers = sp.mode(mode);
+            assert_eq!(layers.len(), plan.mode(mode).layers.len());
+            for (ls, lp) in layers.iter().zip(&plan.mode(mode).layers) {
+                let total: usize = ls.cards.iter().map(CardShard::n_units).sum();
+                // at least as many sub-units as parent units, covering all
+                assert!(total >= lp.assignments.iter().flatten().count());
+                for c in &ls.cards {
+                    assert_eq!(c.assignments.len(), lp.assignments.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_policy_cards() {
+        assert_eq!(ShardPolicy::Off.cards(), 1);
+        assert_eq!(ShardPolicy::PerFrame(4).cards(), 4);
+        assert_eq!(ShardPolicy::PerFrame(0).cards(), 1);
+        assert!(!ShardPolicy::Off.is_sharded());
+        assert!(ShardPolicy::PerFrame(1).is_sharded());
     }
 
     #[test]

@@ -246,6 +246,33 @@ impl SaEngine {
         }
     }
 
+    /// Execute one scheduled work unit — the conv/dense dispatch shared by
+    /// the in-card frame executor and the cross-card shard entry
+    /// ([`crate::binarray::BinArraySystem::run_shard`]).  `rows` is
+    /// ignored for dense layers (their output is a single pooled row).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_unit(
+        &self,
+        layer: &QuantLayer,
+        input: FeatureMapView<'_>,
+        rows: Range<usize>,
+        d: Range<usize>,
+        m_run: usize,
+        seq_m: u64,
+        out: &mut FeatureMapTileMut<'_>,
+        scratch: &mut TileScratch,
+        stats: &mut SimStats,
+    ) {
+        match layer.kind {
+            LayerKind::Conv => {
+                self.conv_tile(layer, &input, rows, d, m_run, seq_m, out, scratch, stats)
+            }
+            LayerKind::Dense => {
+                self.dense_tile(layer, input.data, d, m_run, seq_m, out, scratch, stats)
+            }
+        }
+    }
+
     /// Sequential level-group passes when this SA handles all of `m_run`
     /// alone: `⌈⌈m_run/M_arch⌉⌉`.
     pub fn seq_m(&self, m_run: usize) -> u64 {

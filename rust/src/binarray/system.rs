@@ -30,12 +30,14 @@
 
 use anyhow::{bail, Result};
 
-use crate::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use std::ops::Range;
+
+use crate::artifacts::{QuantLayer, QuantNetwork};
 use crate::isa::{compile_network, Program};
-use crate::tensor::{FeatureMapTileMut, FeatureMapTiles, FeatureMapView, Shape};
+use crate::tensor::{extract_tile, FeatureMapTileMut, FeatureMapTiles, FeatureMapView, Shape};
 
 use super::cu::ControlUnit;
-use super::plan::{ExecutionPlan, LayerPlan, ModePlan, WorkUnit};
+use super::plan::{CardShard, ExecutionPlan, LayerPlan, ModePlan, WorkUnit};
 use super::sa::{SaEngine, SimStats, TileScratch};
 use super::ArrayConfig;
 
@@ -193,15 +195,32 @@ fn exec_layer(
         )
     };
     let in_view = FeatureMapView::new(lp.in_shape, input);
+    let groups = claim_groups(lp.out_shape, out, lp.claims(), &lp.assignments);
 
-    // Claim one disjoint output tile per work unit, grouped by logical SA
-    // (claims are precomputed in the plan; claim_all's disjointness check
-    // is the release-mode gate backing the tiles' `Send`).
-    let mut flat = FeatureMapTiles::new(lp.out_shape, out)
-        .claim_all(lp.claims())
-        .into_iter();
-    let mut groups: Vec<(usize, Vec<(&WorkUnit, FeatureMapTileMut<'_>)>)> = Vec::new();
-    for (g, units) in lp.assignments.iter().enumerate() {
+    // (`host_par` skips spawning entirely for layers too small to pay it)
+    let n_workers = if lp.host_par { host_threads } else { 1 };
+    let mut wall = 0u64;
+    for (g, s) in run_groups(engine, lp, layer, in_view, groups, scratch, n_workers) {
+        sa_stats[g % n_sa].add(s);
+        wall = wall.max(s.cycles);
+    }
+    wall
+}
+
+/// Claim one disjoint output tile per work unit and bind it to its unit,
+/// grouped by logical SA (idle groups skipped) — the shared assembly of
+/// the whole-layer and shard walks.  Claims are precomputed plan-side;
+/// `claim_all`'s disjointness check is the release-mode gate backing the
+/// tiles' `Send`.
+fn claim_groups<'t, 'u>(
+    out_shape: Shape,
+    out: &'t mut [i8],
+    claims: &[(Range<usize>, Range<usize>)],
+    assignments: &'u [Vec<WorkUnit>],
+) -> Vec<(usize, Vec<(&'u WorkUnit, FeatureMapTileMut<'t>)>)> {
+    let mut flat = FeatureMapTiles::new(out_shape, out).claim_all(claims).into_iter();
+    let mut groups = Vec::new();
+    for (g, units) in assignments.iter().enumerate() {
         if units.is_empty() {
             continue;
         }
@@ -211,54 +230,60 @@ fn exec_layer(
             .collect();
         groups.push((g, items));
     }
+    groups
+}
 
-    let mut wall = 0u64;
-    // (scratch.len() bound keeps the worker/arena zip total — an arena
-    // per spawned worker is a structural invariant, not an optimization;
-    // `host_par` skips spawning entirely for layers too small to pay it)
-    let n_workers = if lp.host_par {
-        host_threads.min(groups.len()).min(scratch.len())
-    } else {
-        1
-    };
+/// Execute `(logical-SA id, claimed items)` groups on up to `n_workers`
+/// scoped host threads (1 = fully sequential), returning per-group stats.
+/// Shared by the in-card layer executor and the cross-card shard entry —
+/// both walks parallelize over the same axis, a card's logical SAs.
+/// (The `scratch.len()` bound keeps the worker/arena zip total — an
+/// arena per spawned worker is a structural invariant.)
+fn run_groups(
+    engine: SaEngine,
+    lp: &LayerPlan,
+    layer: &QuantLayer,
+    in_view: FeatureMapView<'_>,
+    groups: Vec<(usize, Vec<(&WorkUnit, FeatureMapTileMut<'_>)>)>,
+    scratch: &mut [TileScratch],
+    n_workers: usize,
+) -> Vec<(usize, SimStats)> {
+    let n_workers = n_workers.max(1).min(groups.len().max(1)).min(scratch.len());
     if n_workers <= 1 {
-        for (g, mut items) in groups {
-            let s = run_units(engine, lp, layer, in_view, &mut items, &mut scratch[0]);
-            sa_stats[g % n_sa].add(s);
-            wall = wall.max(s.cycles);
-        }
-    } else {
-        // Round-robin the logical-SA groups over the host workers; each
-        // worker owns its scratch arena for the scope's duration.
-        let mut chunks: Vec<Vec<(usize, Vec<(&WorkUnit, FeatureMapTileMut<'_>)>)>> =
-            (0..n_workers).map(|_| Vec::new()).collect();
-        for (i, item) in groups.into_iter().enumerate() {
-            chunks[i % n_workers].push(item);
-        }
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = chunks
-                .into_iter()
-                .zip(scratch.iter_mut())
-                .map(|(chunk, scr)| {
-                    scope.spawn(move || {
-                        chunk
-                            .into_iter()
-                            .map(|(g, mut items)| {
-                                (g, run_units(engine, lp, layer, in_view, &mut items, scr))
-                            })
-                            .collect::<Vec<(usize, SimStats)>>()
-                    })
-                })
-                .collect();
-            for h in handles {
-                for (g, s) in h.join().expect("SA worker panicked") {
-                    sa_stats[g % n_sa].add(s);
-                    wall = wall.max(s.cycles);
-                }
-            }
-        });
+        let scr = &mut scratch[0];
+        return groups
+            .into_iter()
+            .map(|(g, mut items)| (g, run_units(engine, lp, layer, in_view, &mut items, scr)))
+            .collect();
     }
-    wall
+    // Round-robin the groups over the host workers; each worker owns its
+    // scratch arena for the scope's duration.
+    let mut chunks: Vec<Vec<(usize, Vec<(&WorkUnit, FeatureMapTileMut<'_>)>)>> =
+        (0..n_workers).map(|_| Vec::new()).collect();
+    for (i, item) in groups.into_iter().enumerate() {
+        chunks[i % n_workers].push(item);
+    }
+    let mut out = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .zip(scratch.iter_mut())
+            .map(|(chunk, scr)| {
+                scope.spawn(move || {
+                    chunk
+                        .into_iter()
+                        .map(|(g, mut items)| {
+                            (g, run_units(engine, lp, layer, in_view, &mut items, scr))
+                        })
+                        .collect::<Vec<(usize, SimStats)>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("SA worker panicked"));
+        }
+    });
+    out
 }
 
 /// Execute one logical SA's work units sequentially (the hardware's view:
@@ -273,31 +298,40 @@ fn run_units(
 ) -> SimStats {
     let mut s = SimStats::default();
     for (u, tile) in items.iter_mut() {
-        match lp.kind {
-            LayerKind::Conv => engine.conv_tile(
-                layer,
-                &input,
-                u.rows.clone(),
-                u.d.clone(),
-                lp.m_run,
-                lp.seq_m,
-                tile,
-                scratch,
-                &mut s,
-            ),
-            LayerKind::Dense => engine.dense_tile(
-                layer,
-                input.data,
-                u.d.clone(),
-                lp.m_run,
-                lp.seq_m,
-                tile,
-                scratch,
-                &mut s,
-            ),
-        }
+        engine.run_unit(
+            layer,
+            input,
+            u.rows.clone(),
+            u.d.clone(),
+            lp.m_run,
+            lp.seq_m,
+            tile,
+            scratch,
+            &mut s,
+        );
     }
     s
+}
+
+/// One gathered output tile of a card's shard: the claim region plus its
+/// dense data block (see [`crate::tensor::extract_tile`] for the layout).
+#[derive(Clone, Debug)]
+pub struct ShardTile {
+    pub rows: Range<usize>,
+    pub chans: Range<usize>,
+    pub data: Vec<i8>,
+}
+
+/// Result of [`BinArraySystem::run_shard`]: this card's output tiles for
+/// the layer (claim order) plus its cycle accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ShardRun {
+    pub tiles: Vec<ShardTile>,
+    /// Card wall cycles for the layer — max over the card's logical-SA
+    /// groups, exactly like a whole layer's wall is max over groups.
+    pub wall: u64,
+    /// Aggregate work statistics of the card on this layer.
+    pub stats: SimStats,
 }
 
 /// The complete accelerator instance.
@@ -439,6 +473,66 @@ impl BinArraySystem {
             .collect())
     }
 
+    /// Execute one layer's cross-card shard — the worker-card half of the
+    /// coordinator's scatter/gather path.
+    ///
+    /// `input` is the layer's *full* input region (every card sees the
+    /// whole ping half — the scatter duplicates inputs, not outputs, so
+    /// convolution halos need no special casing); `shard` is this card's
+    /// sub-schedule from a [`super::plan::ShardPlan`].  The card computes
+    /// its disjoint output tiles in its own feature buffer and returns
+    /// them as owned [`ShardTile`] blocks for the coordinator to stitch
+    /// into the frame's pong half.  Uses the current [`Self::set_mode`]
+    /// accuracy mode, like `run_frames`.
+    pub fn run_shard(
+        &mut self,
+        layer_idx: usize,
+        input: &[i8],
+        shard: &CardShard,
+    ) -> Result<ShardRun> {
+        let mode = self.plan.mode(self.m_run);
+        let Some(lp) = mode.layers.get(layer_idx) else {
+            bail!("layer {layer_idx} out of range ({} layers)", mode.layers.len());
+        };
+        if input.len() != lp.in_len {
+            bail!("shard input len {} != {}", input.len(), lp.in_len);
+        }
+        let layer = &self.net.layers[lp.layer];
+        let host_threads = self.host_threads;
+        let exec = &mut self.execs[0];
+        let engine = exec.engine;
+        let in_view = FeatureMapView::new(lp.in_shape, input);
+
+        let mut run = ShardRun::default();
+        {
+            // Stage the card's tiles in its own feature buffer's out
+            // region (the same ping-pong address the unsharded path
+            // writes), then lift them out as owned blocks.
+            let out = &mut exec.fbuf[lp.out_base..lp.out_base + lp.out_len];
+            let groups = claim_groups(lp.out_shape, out, shard.claims(), &shard.assignments);
+            // Same intra-card threading as the unsharded layer walk: the
+            // card's logical-SA groups spread over the host pool.
+            let n_workers = if lp.host_par { host_threads } else { 1 };
+            let results =
+                run_groups(engine, lp, layer, in_view, groups, &mut exec.scratch, n_workers);
+            for (_, s) in results {
+                run.wall = run.wall.max(s.cycles);
+                run.stats.add(s);
+            }
+        }
+        let out = &exec.fbuf[lp.out_base..lp.out_base + lp.out_len];
+        run.tiles = shard
+            .claims()
+            .iter()
+            .map(|(rows, chans)| ShardTile {
+                rows: rows.clone(),
+                chans: chans.clone(),
+                data: extract_tile(lp.out_shape, out, rows.clone(), chans.clone()),
+            })
+            .collect();
+        Ok(run)
+    }
+
     /// Switch runtime accuracy mode (§IV-D): `None` = high accuracy (all
     /// M levels), `Some(m)` = evaluate only the first `m` levels.  O(1):
     /// every mode's schedule is precomputed in the [`ExecutionPlan`].
@@ -570,6 +664,85 @@ mod tests {
             assert_eq!(*logits, want_logits);
             assert_eq!(stats.cycles, want_stats.cycles);
         }
+    }
+
+    #[test]
+    fn shard_path_layer_by_layer_matches_golden() {
+        // Drive run_shard directly (no coordinator threads): scatter each
+        // layer over N card systems, gather tiles into a host-held
+        // ping-pong buffer, and check logits + latency accounting.
+        use crate::binarray::plan::ShardPlan;
+        use crate::tensor::scatter_tile;
+        let mut rng = Xoshiro256::new(9);
+        let net = cnn_a_quant(&mut rng, 4);
+        let img = image(&mut rng);
+        let cfg = ArrayConfig::new(1, 8, 2);
+        for (n_cards, m_run) in [(2usize, None), (3, Some(2))] {
+            let mut cards: Vec<BinArraySystem> = (0..n_cards)
+                .map(|_| BinArraySystem::with_host_threads(cfg, net.clone(), 1).unwrap())
+                .collect();
+            for c in &mut cards {
+                c.set_mode(m_run);
+            }
+            let plan = cards[0].plan.clone();
+            let shards = ShardPlan::new(&plan, n_cards);
+            let mode = plan.mode(m_run);
+            let mut fbuf = vec![0i8; plan.fbuf_words];
+            let first = &mode.layers[0];
+            fbuf[first.in_base..first.in_base + first.in_len].copy_from_slice(&img);
+            let mut sharded_layer_sum = 0u64;
+            for (li, lp) in mode.layers.iter().enumerate() {
+                let input = fbuf[lp.in_base..lp.in_base + lp.in_len].to_vec();
+                let mut outs = Vec::new();
+                for (ci, shard) in shards.mode(m_run)[li].cards.iter().enumerate() {
+                    if shard.n_units() == 0 {
+                        continue;
+                    }
+                    outs.push(cards[ci].run_shard(li, &input, shard).unwrap());
+                }
+                let out = &mut fbuf[lp.out_base..lp.out_base + lp.out_len];
+                let mut wall = 0u64;
+                for run in outs {
+                    wall = wall.max(run.wall);
+                    for t in run.tiles {
+                        scatter_tile(lp.out_shape, out, t.rows, t.chans, &t.data);
+                    }
+                }
+                sharded_layer_sum += wall;
+            }
+            let last = mode.layers.last().unwrap();
+            let logits = fbuf[last.out_base..last.out_base + last.out_len].to_vec();
+            let want = golden::forward(&net, &img, Shape::new(48, 48, 3), m_run);
+            assert_eq!(logits, want, "cards={n_cards} mode={m_run:?}");
+            // latency: the sharded machine's layer walls must beat one card
+            let mut one = BinArraySystem::with_host_threads(cfg, net.clone(), 1).unwrap();
+            one.set_mode(m_run);
+            let (_, stats) = one.run_frame(&img).unwrap();
+            let unsharded_sum: u64 = stats.layer_cycles.iter().sum();
+            assert!(
+                sharded_layer_sum < unsharded_sum,
+                "cards={n_cards}: sharded {sharded_layer_sum} !< {unsharded_sum}"
+            );
+        }
+    }
+
+    #[test]
+    fn one_card_shard_cycles_match_unsharded() {
+        use crate::binarray::plan::ShardPlan;
+        let mut rng = Xoshiro256::new(10);
+        let net = cnn_a_quant(&mut rng, 2);
+        let img = image(&mut rng);
+        let cfg = ArrayConfig::new(4, 32, 4);
+        let mut card = BinArraySystem::with_host_threads(cfg, net.clone(), 1).unwrap();
+        let shards = ShardPlan::new(&card.plan, 1);
+        let n_claims = card.plan.mode(None).layers[0].claims().len();
+        let mut reference = BinArraySystem::with_host_threads(cfg, net, 1).unwrap();
+        let (_, stats) = reference.run_frame(&img).unwrap();
+        // layer 0's input is the image itself; its shard wall must equal
+        // the unsharded layer-0 wall exactly (same units, same groups)
+        let run = card.run_shard(0, &img, &shards.mode(None)[0].cards[0]).unwrap();
+        assert_eq!(run.wall, stats.layer_cycles[0]);
+        assert_eq!(n_claims, run.tiles.len());
     }
 
     #[test]

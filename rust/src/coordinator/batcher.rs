@@ -12,6 +12,8 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::binarray::plan::ShardPolicy;
+
 use super::{Mode, Request};
 
 /// Admission policy.
@@ -32,20 +34,35 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A cut batch, ready for a worker.
+impl BatchPolicy {
+    /// The policy the router actually runs under `shard`.
+    ///
+    /// Batching and sharding occupy the two ends of the
+    /// latency-vs-throughput trade: `Off` accumulates frames so one card
+    /// runs them back-to-back (amortized DMA, maximal throughput), while
+    /// `PerFrame` spends the whole pool on each frame's latency — so a
+    /// sharded router cuts every frame immediately (batch = frame)
+    /// instead of letting it age toward `max_delay` in the queue.
+    pub fn effective(self, shard: ShardPolicy) -> BatchPolicy {
+        if shard.is_sharded() {
+            BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+            }
+        } else {
+            self
+        }
+    }
+}
+
+/// A cut batch, ready for a worker.  The worker borrows the requests'
+/// images straight into [`crate::binarray::BinArraySystem::run_frames`]
+/// after validating them, so a cut batch flows to the accelerator
+/// without copying a single frame.
 #[derive(Debug)]
 pub struct Batch {
     pub mode: Mode,
     pub requests: Vec<Request>,
-}
-
-impl Batch {
-    /// Borrow the batch's images in request order — the argument shape
-    /// [`crate::binarray::BinArraySystem::run_frames`] consumes, so a cut
-    /// batch flows to the accelerator without copying a single frame.
-    pub fn images(&self) -> Vec<&[i8]> {
-        self.requests.iter().map(|r| r.image.as_slice()).collect()
-    }
 }
 
 /// Two-lane (per-mode) FIFO batcher.
@@ -203,6 +220,24 @@ mod tests {
         b.push(req(2, Mode::HighAccuracy, t0 + Duration::from_millis(1)));
         let first = b.cut(t0 + Duration::from_secs(1)).unwrap();
         assert_eq!(first.requests[0].id, 1, "older head must cut first");
+    }
+
+    #[test]
+    fn sharded_policy_cuts_per_frame() {
+        let policy = BatchPolicy {
+            max_batch: 16,
+            max_delay: Duration::from_secs(1),
+        };
+        assert_eq!(policy.effective(ShardPolicy::Off).max_batch, 16);
+        let eff = policy.effective(ShardPolicy::PerFrame(4));
+        assert_eq!(eff.max_batch, 1);
+        assert_eq!(eff.max_delay, Duration::ZERO);
+        // a single request is ripe immediately under the sharded policy
+        let mut b = Batcher::new(eff);
+        let t0 = Instant::now();
+        b.push(req(7, Mode::HighAccuracy, t0));
+        let batch = b.cut(t0).expect("frame cut without delay");
+        assert_eq!(batch.requests.len(), 1);
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub struct Metrics {
     pub queue_wait: LatencyStats,
     /// Requests completed.
     pub completed: u64,
+    /// Requests that ended in an error reply (bad input, dead card…) —
+    /// failures are answered, never dropped, so `completed + failed`
+    /// equals requests admitted.
+    pub failed: u64,
     /// Batches executed.
     pub batches: u64,
     /// Total simulated accelerator cycles.
@@ -73,6 +77,7 @@ impl Metrics {
             .samples_us
             .extend_from_slice(&other.queue_wait.samples_us);
         self.completed += other.completed;
+        self.failed += other.failed;
         self.batches += other.batches;
         self.sim_cycles += other.sim_cycles;
         self.sim_wall += other.sim_wall;
@@ -112,8 +117,13 @@ impl Metrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "req={} batches={} (avg {:.1}/batch) | sim {:.1} fps @400MHz | wall {:.1} fps | p50 {:?} p99 {:?}{}",
+            "req={}{} batches={} (avg {:.1}/batch) | sim {:.1} fps @400MHz | wall {:.1} fps | p50 {:?} p99 {:?}{}",
             self.completed,
+            if self.failed > 0 {
+                format!(" (+{} failed)", self.failed)
+            } else {
+                String::new()
+            },
             self.batches,
             self.mean_batch(),
             self.simulated_fps(),
@@ -176,6 +186,7 @@ mod tests {
         };
         let b = Metrics {
             completed: 3,
+            failed: 1,
             batches: 2,
             sim_cycles: 200,
             correct: 2,
@@ -184,6 +195,7 @@ mod tests {
         };
         a.merge(&b);
         assert_eq!(a.completed, 5);
+        assert_eq!(a.failed, 1);
         assert_eq!(a.batches, 3);
         assert_eq!(a.sim_cycles, 300);
         assert_eq!(a.accuracy(), Some(2.0 / 3.0));

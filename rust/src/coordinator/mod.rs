@@ -10,21 +10,30 @@
 //!   one queue per accuracy mode;
 //! * [`server`] — a worker pool where each worker owns one simulated
 //!   BinArray instance (one card), pulls batches, and runs frames
-//!   back-to-back exactly like the ping-pong DMA pipeline;
+//!   back-to-back exactly like the ping-pong DMA pipeline — or, under
+//!   [`ShardPolicy::PerFrame`], executes scattered row-tile shards of a
+//!   single frame that the shard orchestrator gathers between layers;
 //! * [`metrics`] — latency/throughput accounting (wall-clock of the
 //!   simulator *and* simulated 400 MHz accelerator time).
 //!
 //! Runtime accuracy/throughput switching (§IV-D): every request carries a
 //! [`Mode`]; the worker flips the simulated accelerator's `m_run` between
 //! batches — the same hardware serves both modes.
+//!
+//! Failures are answered, never dropped: a malformed request yields an
+//! `Err(`[`InferError`]`)` on its reply channel (and an `Err` from
+//! `infer`), instead of killing a worker and stranding callers.
 
 pub mod batcher;
 pub mod metrics;
 pub mod server;
 
+pub use crate::binarray::plan::ShardPolicy;
 pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use metrics::{LatencyStats, Metrics};
-pub use server::{Coordinator, CoordinatorConfig, Reply};
+pub use server::{
+    Coordinator, CoordinatorConfig, InferError, Reply, ReplyResult, SubmitHandle,
+};
 
 /// Runtime accuracy mode of a request (paper §IV-D).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

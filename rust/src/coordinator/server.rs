@@ -1,5 +1,5 @@
 //! The coordinator proper: router thread + worker pool over simulated
-//! BinArray instances.
+//! BinArray instances, with an optional cross-card scatter/gather path.
 //!
 //! Topology (one process, std threads — the request path has no Python
 //! and no async runtime dependency):
@@ -9,11 +9,29 @@
 //!                                                                 ├▶ worker 1 (BinArraySystem)
 //!                                                                 └▶ ...
 //!   replies ◀───────────── per-request mpsc channels ◀────────────┘
+//!
+//!   — with ShardPolicy::PerFrame(n) the router instead hands each frame
+//!     to the shard orchestrator, which scatters row tiles over the same
+//!     worker queue and gathers them layer by layer:
+//!
+//!   submit() ──▶ router ──(per-frame cut)──▶ orchestrator (CU + frame fbuf)
+//!                                         │  per layer: scatter n tile jobs
+//!                                         ▼
+//!                                   worker queue ─┬▶ worker 0: run_shard ─┐
+//!                                                 └▶ worker 1: run_shard ─┤
+//!                                         ▲                              │
+//!                                         └── gather tiles into pong ◀───┘
 //! ```
 //!
 //! Each worker owns a full simulated accelerator (its own weight BRAM and
 //! feature buffers — one "card").  Mode switches (§IV-D) happen per batch
 //! by flipping the card's `m_run`.
+//!
+//! The two dispatch paths trade latency against throughput: the batching
+//! path keeps every card busy on *different* frames (throughput scales
+//! with workers, per-frame latency is one card's), while the shard path
+//! spends the whole pool on *one* frame's row tiles (latency shrinks with
+//! workers, at the cost of per-layer scatter/gather traffic).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -21,11 +39,16 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::artifacts::QuantNetwork;
-use crate::binarray::{ArrayConfig, BinArraySystem};
+use crate::binarray::{
+    ArrayConfig, BinArraySystem, ControlUnit, ExecutionPlan, FrameStats, ShardPlan, ShardPolicy,
+    ShardRun, SimStats,
+};
 use crate::golden;
+use crate::isa::{compile_network, Program};
+use crate::tensor::scatter_tile;
 
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::metrics::Metrics;
@@ -44,13 +67,39 @@ pub struct Reply {
     pub mode: Mode,
 }
 
+/// A failed inference: the request was admitted but could not be served
+/// (malformed image, dead worker pool…).  Failures are *answered* on the
+/// reply channel — a bad batch must never strand its callers on
+/// `RecvError` or take the worker thread down with it.
+#[derive(Clone, Debug)]
+pub struct InferError {
+    pub id: u64,
+    pub reason: String,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {}: {}", self.id, self.reason)
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// What arrives on a reply channel: the inference or a per-request error.
+pub type ReplyResult = std::result::Result<Reply, InferError>;
+
 /// Coordinator construction parameters.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub array: ArrayConfig,
-    /// Number of worker cards (each a full BinArray instance).
+    /// Number of worker cards (each a full BinArray instance).  Grown to
+    /// at least `shard.cards()` so sharded frames never queue on a pool
+    /// narrower than their scatter width.
     pub workers: usize,
     pub policy: BatchPolicy,
+    /// Cross-card sharding: `Off` batches whole frames onto single cards;
+    /// `PerFrame(n)` scatters every frame's row tiles over `n` cards.
+    pub shard: ShardPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -59,66 +108,73 @@ impl Default for CoordinatorConfig {
             array: ArrayConfig::new(1, 8, 2),
             workers: 1,
             policy: BatchPolicy::default(),
+            shard: ShardPolicy::Off,
         }
     }
 }
 
 enum RouterMsg {
-    Submit(Request, Sender<Reply>),
+    Submit(Request, Sender<ReplyResult>),
     Shutdown,
+}
+
+/// One card's slice of one layer of one frame — the scatter payload.
+struct ShardJob {
+    m_run: Option<usize>,
+    layer: usize,
+    /// Card index into the [`ShardPlan`] (not a worker id: any idle
+    /// worker may pick the job up; the index only selects the
+    /// sub-schedule).
+    card: usize,
+    /// The layer's full input region (every card streams the whole ping
+    /// half, so convolution windows never straddle a card boundary).
+    input: Arc<Vec<i8>>,
+    reply: Sender<(usize, Result<ShardRun>)>,
 }
 
 enum WorkerMsg {
-    Run(Batch, Vec<Sender<Reply>>),
+    Run(Batch, Vec<Sender<ReplyResult>>),
+    Shard(ShardJob),
     Shutdown,
 }
 
-/// The serving coordinator.
-pub struct Coordinator {
-    router_tx: Sender<RouterMsg>,
-    router: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<Metrics>>,
-    next_id: AtomicU64,
-    pub metrics: Arc<Mutex<Metrics>>,
+enum OrchMsg {
+    Run(Batch, Vec<Sender<ReplyResult>>),
+    Shutdown,
 }
 
-impl Coordinator {
-    /// Spin up the router and `cfg.workers` accelerator workers.
-    pub fn start(cfg: CoordinatorConfig, net: QuantNetwork) -> Result<Self> {
-        let (router_tx, router_rx) = channel::<RouterMsg>();
-        let (work_tx, work_rx) = channel::<WorkerMsg>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
+/// The shard orchestrator's static state: the compiled program, the
+/// execution plan it indexes per layer, and the shard partition — built
+/// directly at start so the orchestrator doesn't hold a whole card's
+/// executor memory just to read schedules.
+struct ShardOracle {
+    plan: ExecutionPlan,
+    prog: Program,
+    shards: Arc<ShardPlan>,
+    max_m: usize,
+    m_arch: usize,
+}
 
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for w in 0..cfg.workers {
-            let rx = Arc::clone(&work_rx);
-            let sys = BinArraySystem::new(cfg.array, net.clone())?;
-            let global = Arc::clone(&metrics);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("binarray-worker-{w}"))
-                    .spawn(move || worker_loop(sys, rx, global))?,
-            );
-        }
+/// Where the router sends cut batches.
+enum Dispatch {
+    /// Straight to the worker queue (whole-frame batching).
+    Workers(Sender<WorkerMsg>),
+    /// To the shard orchestrator (scatter/gather per frame).
+    Orchestrator(Sender<OrchMsg>),
+}
 
-        let policy = cfg.policy;
-        let n_workers = cfg.workers;
-        let router = std::thread::Builder::new()
-            .name("binarray-router".into())
-            .spawn(move || router_loop(router_rx, work_tx, policy, n_workers))?;
+/// Cloneable submit-side handle: many producer threads can feed one
+/// coordinator (the `Coordinator` itself stays single-owner so that
+/// `shutdown` consumes it).
+#[derive(Clone)]
+pub struct SubmitHandle {
+    router_tx: Sender<RouterMsg>,
+    next_id: Arc<AtomicU64>,
+}
 
-        Ok(Self {
-            router_tx,
-            router: Some(router),
-            workers,
-            next_id: AtomicU64::new(0),
-            metrics,
-        })
-    }
-
+impl SubmitHandle {
     /// Submit a request; returns a receiver for the reply.
-    pub fn submit(&self, image: Vec<i8>, mode: Mode) -> Receiver<Reply> {
+    pub fn submit(&self, image: Vec<i8>, mode: Mode) -> Receiver<ReplyResult> {
         let (tx, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -133,16 +189,139 @@ impl Coordinator {
 
     /// Submit and wait.
     pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
-        Ok(self.submit(image, mode).recv()?)
+        Ok(self.submit(image, mode).recv()??)
+    }
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    handle: SubmitHandle,
+    router: Option<JoinHandle<()>>,
+    orchestrator: Option<JoinHandle<Metrics>>,
+    workers: Vec<JoinHandle<Metrics>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Coordinator {
+    /// Spin up the router, `cfg.workers` accelerator workers, and — when
+    /// `cfg.shard` is `PerFrame` — the shard orchestrator.
+    pub fn start(cfg: CoordinatorConfig, net: QuantNetwork) -> Result<Self> {
+        if net.layers.is_empty() {
+            bail!("empty network");
+        }
+        let (router_tx, router_rx) = channel::<RouterMsg>();
+        let (work_tx, work_rx) = channel::<WorkerMsg>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        // The pool must cover the shard width: fewer workers than cards
+        // would serialize a frame's shard jobs while Reply.cycles still
+        // reported the n-card machine's parallel latency.
+        let n_workers = match cfg.shard {
+            ShardPolicy::Off => cfg.workers.max(1),
+            ShardPolicy::PerFrame(_) => cfg.workers.max(cfg.shard.cards()),
+        };
+
+        // The shard plan is deterministic from (config, net, cards), so
+        // every thread shares one copy, built alongside the
+        // orchestrator's plan/program oracle.
+        let shard_state: Option<ShardOracle> = if cfg.shard.is_sharded() {
+            let prog = compile_network(&net);
+            let plan = ExecutionPlan::new(cfg.array, &net, &prog);
+            Some(ShardOracle {
+                shards: Arc::new(ShardPlan::new(&plan, cfg.shard.cards())),
+                plan,
+                prog,
+                max_m: net.max_m(),
+                m_arch: cfg.array.m_arch,
+            })
+        } else {
+            None
+        };
+
+        // Sharded cards run one frame's shards *concurrently*, so each
+        // card gets its slice of the host cores for intra-card threading
+        // — the full width on every card would oversubscribe the host
+        // with the exact thread thrash the latency path exists to avoid.
+        // The divisor is the shard width (cards in flight per frame),
+        // not the pool size: extra workers beyond the shard width idle.
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let card_threads = cores / cfg.shard.cards();
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let rx = Arc::clone(&work_rx);
+            let sys = if cfg.shard.is_sharded() {
+                BinArraySystem::with_host_threads(cfg.array, net.clone(), card_threads)?
+            } else {
+                BinArraySystem::new(cfg.array, net.clone())?
+            };
+            let global = Arc::clone(&metrics);
+            let sp = shard_state.as_ref().map(|o| Arc::clone(&o.shards));
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("binarray-worker-{w}"))
+                    .spawn(move || worker_loop(sys, rx, global, sp))?,
+            );
+        }
+
+        let (dispatch, orchestrator) = match shard_state {
+            Some(oracle) => {
+                let (orch_tx, orch_rx) = channel::<OrchMsg>();
+                let global = Arc::clone(&metrics);
+                let wtx = work_tx.clone();
+                let orch = std::thread::Builder::new()
+                    .name("binarray-shard-orch".into())
+                    .spawn(move || orchestrator_loop(oracle, orch_rx, wtx, n_workers, global))?;
+                (Dispatch::Orchestrator(orch_tx), Some(orch))
+            }
+            None => (Dispatch::Workers(work_tx), None),
+        };
+
+        let policy = cfg.policy.effective(cfg.shard);
+        let router = std::thread::Builder::new()
+            .name("binarray-router".into())
+            .spawn(move || router_loop(router_rx, dispatch, policy, n_workers))?;
+
+        Ok(Self {
+            handle: SubmitHandle {
+                router_tx,
+                next_id: Arc::new(AtomicU64::new(0)),
+            },
+            router: Some(router),
+            orchestrator,
+            workers,
+            metrics,
+        })
+    }
+
+    /// A cloneable submit handle for producer threads.
+    pub fn handle(&self) -> SubmitHandle {
+        self.handle.clone()
+    }
+
+    /// Submit a request; returns a receiver for the reply.
+    pub fn submit(&self, image: Vec<i8>, mode: Mode) -> Receiver<ReplyResult> {
+        self.handle.submit(image, mode)
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
+        self.handle.infer(image, mode)
     }
 
     /// Drain and stop all threads, returning the final metrics.
     pub fn shutdown(mut self) -> Metrics {
-        let _ = self.router_tx.send(RouterMsg::Shutdown);
+        let _ = self.handle.router_tx.send(RouterMsg::Shutdown);
         if let Some(r) = self.router.take() {
             let _ = r.join();
         }
         let mut total = Metrics::default();
+        // The orchestrator (when present) must drain before the workers
+        // stop — it is the one who tells them to, once its queue is dry.
+        if let Some(o) = self.orchestrator.take() {
+            if let Ok(m) = o.join() {
+                total.merge(&m);
+            }
+        }
         for w in self.workers.drain(..) {
             if let Ok(m) = w.join() {
                 total.merge(&m);
@@ -152,15 +331,41 @@ impl Coordinator {
     }
 }
 
+/// Registered reply channels keyed by request id.
+type ReplyMap = std::collections::HashMap<u64, Sender<ReplyResult>>;
+
+/// Router shutdown: flush the batcher's stragglers, then stop the pool —
+/// directly for the batching path, or via the orchestrator (which still
+/// needs the workers to serve the flushed frames' shard jobs first).
+fn drain_and_stop(
+    batcher: &mut Batcher,
+    reply_txs: &mut ReplyMap,
+    to: &Dispatch,
+    n_workers: usize,
+) {
+    for batch in batcher.flush() {
+        dispatch(to, batch, reply_txs);
+    }
+    match to {
+        Dispatch::Workers(tx) => {
+            for _ in 0..n_workers {
+                let _ = tx.send(WorkerMsg::Shutdown);
+            }
+        }
+        Dispatch::Orchestrator(tx) => {
+            let _ = tx.send(OrchMsg::Shutdown);
+        }
+    }
+}
+
 fn router_loop(
     rx: Receiver<RouterMsg>,
-    work_tx: Sender<WorkerMsg>,
+    dispatch_to: Dispatch,
     policy: BatchPolicy,
     n_workers: usize,
 ) {
     let mut batcher = Batcher::new(policy);
-    let mut reply_txs: std::collections::HashMap<u64, Sender<Reply>> =
-        std::collections::HashMap::new();
+    let mut reply_txs = ReplyMap::new();
     loop {
         // Deadline-driven wait: block indefinitely when idle; otherwise
         // sleep exactly until the oldest request's max_delay expires.
@@ -176,50 +381,75 @@ fn router_loop(
                 reply_txs.insert(req.id, tx);
                 batcher.push(req);
             }
-            Ok(RouterMsg::Shutdown) => {
-                for batch in batcher.flush() {
-                    dispatch(&work_tx, batch, &mut reply_txs);
-                }
-                for _ in 0..n_workers {
-                    let _ = work_tx.send(WorkerMsg::Shutdown);
-                }
+            Ok(RouterMsg::Shutdown) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                drain_and_stop(&mut batcher, &mut reply_txs, &dispatch_to, n_workers);
                 return;
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                for batch in batcher.flush() {
-                    dispatch(&work_tx, batch, &mut reply_txs);
-                }
-                for _ in 0..n_workers {
-                    let _ = work_tx.send(WorkerMsg::Shutdown);
-                }
-                return;
-            }
         }
         let now = Instant::now();
         while let Some(batch) = batcher.cut(now) {
-            dispatch(&work_tx, batch, &mut reply_txs);
+            dispatch(&dispatch_to, batch, &mut reply_txs);
         }
     }
 }
 
-fn dispatch(
-    work_tx: &Sender<WorkerMsg>,
-    batch: Batch,
-    reply_txs: &mut std::collections::HashMap<u64, Sender<Reply>>,
-) {
-    let txs: Vec<Sender<Reply>> = batch
+fn dispatch(to: &Dispatch, batch: Batch, reply_txs: &mut ReplyMap) {
+    let txs: Vec<Sender<ReplyResult>> = batch
         .requests
         .iter()
         .map(|r| reply_txs.remove(&r.id).expect("reply channel registered"))
         .collect();
-    let _ = work_tx.send(WorkerMsg::Run(batch, txs));
+    match to {
+        Dispatch::Workers(tx) => {
+            let _ = tx.send(WorkerMsg::Run(batch, txs));
+        }
+        Dispatch::Orchestrator(tx) => {
+            let _ = tx.send(OrchMsg::Run(batch, txs));
+        }
+    }
+}
+
+/// Record one successful frame into `delta` and answer its caller.
+fn send_reply(
+    delta: &mut Metrics,
+    req: Request,
+    tx: &Sender<ReplyResult>,
+    logits: Vec<i8>,
+    cycles: u64,
+    compute_wall: Duration,
+) {
+    let latency = req.submitted.elapsed();
+    delta.completed += 1;
+    delta.sim_cycles += cycles;
+    delta.latency.record(latency);
+    // Queue wait = time from submit until this request's compute began
+    // (replies land after the compute, so the compute wall is not wait).
+    delta.queue_wait.record(latency.saturating_sub(compute_wall));
+    let reply = Reply {
+        id: req.id,
+        class: golden::argmax(&logits),
+        logits,
+        cycles,
+        latency,
+        mode: req.mode,
+    };
+    let _ = tx.send(Ok(reply));
+}
+
+fn send_error(delta: &mut Metrics, id: u64, tx: &Sender<ReplyResult>, e: &anyhow::Error) {
+    delta.failed += 1;
+    let _ = tx.send(Err(InferError {
+        id,
+        reason: format!("{e:#}"),
+    }));
 }
 
 fn worker_loop(
     mut sys: BinArraySystem,
     rx: Arc<Mutex<Receiver<WorkerMsg>>>,
     global: Arc<Mutex<Metrics>>,
+    shards: Option<Arc<ShardPlan>>,
 ) -> Metrics {
     let mut local = Metrics::default();
     let max_m = sys.net.max_m();
@@ -232,42 +462,71 @@ fn worker_loop(
         let Ok(msg) = msg else { break };
         match msg {
             WorkerMsg::Shutdown => break,
+            WorkerMsg::Shard(job) => {
+                let res = match &shards {
+                    Some(sp) => {
+                        sys.set_mode(job.m_run);
+                        let shard = &sp.mode(job.m_run)[job.layer].cards[job.card];
+                        sys.run_shard(job.layer, &job.input, shard)
+                    }
+                    None => Err(anyhow!("worker has no shard plan")),
+                };
+                // The orchestrator counts one reply per dispatched job;
+                // errors must be answered like results.
+                let _ = job.reply.send((job.card, res));
+            }
             WorkerMsg::Run(batch, txs) => {
                 // §IV-D: one mode switch per batch, not per frame.
                 let m_run = batch.mode.m_run(max_m, m_arch);
                 sys.set_mode(Some(m_run));
                 let mut delta = Metrics::default();
                 delta.batches += 1;
-                // The whole batch runs back-to-back on the precomputed
-                // plan — one `run_frames` call, zero per-frame setup.
-                let images = batch.images();
-                let t0 = Instant::now();
-                let results = sys.run_frames(&images).expect("batch failed");
-                let batch_wall = t0.elapsed();
-                for ((req, tx), (logits, stats)) in
-                    batch.requests.into_iter().zip(txs).zip(results)
-                {
-                    let latency = req.submitted.elapsed();
-                    delta.completed += 1;
-                    delta.sim_cycles += stats.cycles;
-                    delta.latency.record(latency);
-                    // Queue wait = time from submit until this batch's
-                    // compute began (replies all land after `run_frames`,
-                    // so the whole batch wall is compute, not queueing).
-                    delta
-                        .queue_wait
-                        .record(latency.saturating_sub(batch_wall));
-                    let reply = Reply {
-                        id: req.id,
-                        class: golden::argmax(&logits),
-                        logits,
-                        cycles: stats.cycles,
-                        latency,
-                        mode: req.mode,
-                    };
-                    let _ = tx.send(reply);
+                // Answer malformed requests up front (the only way a
+                // request alone can sink `run_frames`), so a poisoned
+                // frame never costs its batchmates any compute — and
+                // never kills this worker, stranding callers on
+                // RecvError.
+                let want_len = sys.input_shape.len();
+                let mut good: Vec<(Request, &Sender<ReplyResult>)> = Vec::new();
+                for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                    if req.image.len() == want_len {
+                        good.push((req, tx));
+                    } else {
+                        let e = anyhow!("image len {} != {want_len}", req.image.len());
+                        send_error(&mut delta, req.id, tx, &e);
+                    }
                 }
-                delta.sim_wall += batch_wall;
+                // The surviving batch runs back-to-back on the
+                // precomputed plan — one `run_frames` call, zero
+                // per-frame setup.
+                let images: Vec<&[i8]> = good.iter().map(|(r, _)| r.image.as_slice()).collect();
+                let t0 = Instant::now();
+                match sys.run_frames(&images) {
+                    Ok(results) => {
+                        let batch_wall = t0.elapsed();
+                        for ((req, tx), (logits, stats)) in good.into_iter().zip(results) {
+                            send_reply(&mut delta, req, tx, logits, stats.cycles, batch_wall);
+                        }
+                        delta.sim_wall += batch_wall;
+                    }
+                    Err(_) => {
+                        // Defense in depth for failures validation can't
+                        // see: retry frames one by one so whatever frame
+                        // is poisoned errors alone.
+                        for (req, tx) in good {
+                            let t1 = Instant::now();
+                            match sys.run_frames(&[&req.image]) {
+                                Ok(mut rs) => {
+                                    let (logits, stats) = rs.pop().expect("one frame in/out");
+                                    let wall = t1.elapsed();
+                                    send_reply(&mut delta, req, tx, logits, stats.cycles, wall);
+                                    delta.sim_wall += wall;
+                                }
+                                Err(e) => send_error(&mut delta, req.id, tx, &e),
+                            }
+                        }
+                    }
+                }
                 local.merge(&delta);
                 if let Ok(mut g) = global.lock() {
                     g.merge(&delta); // live view across all workers
@@ -276,6 +535,166 @@ fn worker_loop(
         }
     }
     local
+}
+
+/// The shard orchestrator: owns each in-flight frame's CU and ping-pong
+/// feature buffer, scatters every layer's row tiles over the worker
+/// queue, and gathers the cards' output tiles back before triggering the
+/// next layer.  The CU is the same state machine the in-card executor
+/// uses, so instruction-cycle accounting is identical on both paths.
+fn orchestrator_loop(
+    oracle: ShardOracle,
+    rx: Receiver<OrchMsg>,
+    work_tx: Sender<WorkerMsg>,
+    n_workers: usize,
+    global: Arc<Mutex<Metrics>>,
+) -> Metrics {
+    let mut local = Metrics::default();
+    let mut cu = ControlUnit::new();
+    cu.park_at(oracle.prog.entry);
+    let mut fbuf = vec![0i8; oracle.prog.fbuf_words];
+    loop {
+        let Ok(msg) = rx.recv() else { break };
+        match msg {
+            OrchMsg::Shutdown => break,
+            OrchMsg::Run(batch, txs) => {
+                let m_run = Some(batch.mode.m_run(oracle.max_m, oracle.m_arch));
+                let mut delta = Metrics::default();
+                delta.batches += 1;
+                for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                    let t0 = Instant::now();
+                    let res = run_sharded_frame(
+                        &oracle, &mut cu, &mut fbuf, &work_tx, &req.image, m_run,
+                    );
+                    let frame_wall = t0.elapsed();
+                    match res {
+                        Ok((logits, stats)) => {
+                            send_reply(&mut delta, req, tx, logits, stats.cycles, frame_wall);
+                            delta.sim_wall += frame_wall;
+                        }
+                        Err(e) => send_error(&mut delta, req.id, tx, &e),
+                    }
+                }
+                local.merge(&delta);
+                if let Ok(mut g) = global.lock() {
+                    g.merge(&delta);
+                }
+            }
+        }
+    }
+    // The pool stops only after the orchestrator has drained: flushed
+    // frames still need workers for their shard jobs.
+    for _ in 0..n_workers {
+        let _ = work_tx.send(WorkerMsg::Shutdown);
+    }
+    local
+}
+
+/// Run one frame scattered over the worker pool.  Per layer: copy the
+/// ping half's input region once (the "DMA broadcast"), enqueue one
+/// [`ShardJob`] per card with work, then stitch every returned tile into
+/// the pong half.  Frame cycles = CU instruction cycles + Σ max-over-cards
+/// layer walls — the latency of an `n_cards`-card machine.
+fn run_sharded_frame(
+    oracle: &ShardOracle,
+    cu: &mut ControlUnit,
+    fbuf: &mut [i8],
+    work_tx: &Sender<WorkerMsg>,
+    image: &[i8],
+    m_run: Option<usize>,
+) -> Result<(Vec<i8>, FrameStats)> {
+    let mode = oracle.plan.mode(m_run);
+    let layer_shards = oracle.shards.mode(m_run);
+    let first = mode.layers.first().expect("non-empty plan");
+    if image.len() != first.in_len {
+        return Err(anyhow!("image len {} != {}", image.len(), first.in_len));
+    }
+    fbuf[first.in_base..first.in_base + first.in_len].copy_from_slice(image);
+
+    let mut stats = FrameStats {
+        // In shard mode the per-unit stats aggregate per *card* (each
+        // card is a whole array; mapping cards onto one card's physical
+        // SAs would be meaningless).
+        sa_stats: vec![SimStats::default(); oracle.shards.n_cards],
+        ..Default::default()
+    };
+    let mut err: Option<anyhow::Error> = None;
+
+    let layer_cycles = &mut stats.layer_cycles;
+    let sa_stats = &mut stats.sa_stats;
+    let err_ref = &mut err;
+    let cu_run = cu.run_frame(&oracle.prog, |lr| {
+        if err_ref.is_some() {
+            // A card already failed: fall through the remaining layers
+            // without dispatching work so the CU still reaches its HLT.
+            layer_cycles.push(0);
+            return 0;
+        }
+        let li = lr.layer_id as usize;
+        let lp = &mode.layers[li];
+        // Scatter: broadcast the input region, one tile job per card.
+        // The reply channel is per layer, and the orchestrator's own tx
+        // is dropped right after the scatter — so a worker that dies
+        // without answering surfaces as a recv disconnect (an error
+        // reply), never as a gather that blocks forever.
+        let (reply_tx, reply_rx) = channel::<(usize, Result<ShardRun>)>();
+        let input = Arc::new(fbuf[lp.in_base..lp.in_base + lp.in_len].to_vec());
+        let mut sent = 0usize;
+        for (card, shard) in layer_shards[li].cards.iter().enumerate() {
+            if shard.n_units() == 0 {
+                continue; // layer too small for this card — it idles
+            }
+            let job = ShardJob {
+                m_run,
+                layer: li,
+                card,
+                input: Arc::clone(&input),
+                reply: reply_tx.clone(),
+            };
+            if work_tx.send(WorkerMsg::Shard(job)).is_err() {
+                *err_ref = Some(anyhow!("worker pool disconnected"));
+                layer_cycles.push(0);
+                return 0;
+            }
+            sent += 1;
+        }
+        drop(reply_tx);
+        // Gather: exactly `sent` replies belong to this layer (each job
+        // answers once, success or error), stitched into the pong half.
+        let out = &mut fbuf[lp.out_base..lp.out_base + lp.out_len];
+        let mut wall = 0u64;
+        for _ in 0..sent {
+            match reply_rx.recv() {
+                Ok((card, Ok(run))) => {
+                    for t in &run.tiles {
+                        scatter_tile(lp.out_shape, out, t.rows.clone(), t.chans.clone(), &t.data);
+                    }
+                    wall = wall.max(run.wall);
+                    sa_stats[card].add(run.stats);
+                }
+                Ok((card, Err(e))) => {
+                    err_ref.get_or_insert(anyhow!("card {card}, layer {li}: {e:#}"));
+                }
+                Err(_) => {
+                    // every sender is gone but replies are missing — a
+                    // worker died mid-job without answering
+                    err_ref.get_or_insert(anyhow!("layer {li}: a card died before replying"));
+                    break;
+                }
+            }
+        }
+        layer_cycles.push(wall);
+        wall
+    });
+    stats.instr_cycles = cu_run.instr_cycles;
+    stats.cycles = cu_run.total_cycles();
+
+    if let Some(e) = err {
+        return Err(e);
+    }
+    let last = mode.layers.last().expect("non-empty plan");
+    let logits = fbuf[last.out_base..last.out_base + last.out_len].to_vec();
+    Ok((logits, stats))
 }
 
 #[cfg(test)]
@@ -293,6 +712,7 @@ mod tests {
                 max_batch: 4,
                 max_delay: Duration::from_millis(1),
             },
+            shard: ShardPolicy::Off,
         }
     }
 
@@ -322,7 +742,7 @@ mod tests {
             .collect();
         let mut ids = Vec::new();
         for rx in rxs {
-            ids.push(rx.recv().unwrap().id);
+            ids.push(rx.recv().unwrap().unwrap().id);
         }
         ids.sort_unstable();
         assert_eq!(ids, (0..12).collect::<Vec<u64>>());
@@ -367,7 +787,111 @@ mod tests {
         let m = coord.shutdown(); // flush must run the stragglers
         assert_eq!(m.completed, 3);
         for rx in rxs {
-            assert!(rx.recv().is_ok());
+            assert!(rx.recv().unwrap().is_ok());
         }
+    }
+
+    #[test]
+    fn failing_request_gets_error_reply_not_hang() {
+        let mut rng = Xoshiro256::new(5);
+        let net = cnn_a_quant(&mut rng, 2);
+        let coord = Coordinator::start(quick_cfg(1), net).unwrap();
+        // Wrong-size image: the worker must answer Err, stay alive, and
+        // keep serving its batchmates.
+        let bad = coord.submit(vec![0i8; 7], Mode::HighAccuracy);
+        let good_img = prop::i8_vec(&mut rng, 48 * 48 * 3);
+        let good = coord.submit(good_img, Mode::HighAccuracy);
+        let bad_reply = bad.recv().expect("reply, not a dead channel");
+        assert!(bad_reply.is_err());
+        let good_reply = good.recv().unwrap().expect("batchmate unharmed");
+        assert!(!good_reply.logits.is_empty());
+        // and infer() surfaces the error as Err, not a hang
+        assert!(coord.infer(vec![1i8; 3], Mode::HighThroughput).is_err());
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 2);
+    }
+
+    #[test]
+    fn sharded_frames_match_golden_and_cut_latency_cycles() {
+        let mut rng = Xoshiro256::new(6);
+        let net = cnn_a_quant(&mut rng, 4);
+        let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
+        let want_hi = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+        let want_lo = golden::forward(&net, &img, Shape::new(48, 48, 3), Some(2));
+        let mut cycles_by_cards = Vec::new();
+        for cards in [1usize, 2] {
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    array: ArrayConfig::new(1, 8, 2),
+                    workers: cards,
+                    policy: BatchPolicy::default(),
+                    shard: ShardPolicy::PerFrame(cards),
+                },
+                net.clone(),
+            )
+            .unwrap();
+            let hi = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
+            let lo = coord.infer(img.clone(), Mode::HighThroughput).unwrap();
+            assert_eq!(hi.logits, want_hi, "{cards} cards");
+            assert_eq!(lo.logits, want_lo, "{cards} cards");
+            assert!(hi.cycles > lo.cycles);
+            cycles_by_cards.push(hi.cycles);
+            let m = coord.shutdown();
+            assert_eq!(m.completed, 2);
+            assert_eq!(m.batches, 2, "sharded batches are single frames");
+        }
+        // 2 cards must beat 1 card in simulated frame latency
+        assert!(cycles_by_cards[1] < cycles_by_cards[0], "{cycles_by_cards:?}");
+    }
+
+    #[test]
+    fn sharded_bad_frame_errors_and_pool_survives() {
+        let mut rng = Xoshiro256::new(7);
+        let net = cnn_a_quant(&mut rng, 2);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(1, 8, 2),
+                workers: 2,
+                policy: BatchPolicy::default(),
+                shard: ShardPolicy::PerFrame(2),
+            },
+            net.clone(),
+        )
+        .unwrap();
+        assert!(coord.infer(vec![0i8; 5], Mode::HighAccuracy).is_err());
+        let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
+        let ok = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
+        let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+        assert_eq!(ok.logits, want);
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 1);
+    }
+
+    #[test]
+    fn submit_handles_are_cloneable_across_threads() {
+        let mut rng = Xoshiro256::new(8);
+        let net = cnn_a_quant(&mut rng, 2);
+        let coord = Coordinator::start(quick_cfg(2), net).unwrap();
+        let imgs: Vec<Vec<i8>> = (0..4).map(|_| prop::i8_vec(&mut rng, 48 * 48 * 3)).collect();
+        let mut rxs = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = imgs
+                .iter()
+                .map(|img| {
+                    let h = coord.handle();
+                    s.spawn(move || h.submit(img.clone(), Mode::HighAccuracy))
+                })
+                .collect();
+            for t in handles {
+                rxs.push(t.join().unwrap());
+            }
+        });
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 4);
     }
 }

@@ -43,7 +43,9 @@
 //! * [`perf`] — analytical performance model, Eqs. 14–18 (§IV-E)
 //! * [`area`] — FPGA resource model (Table IV)
 //! * [`coordinator`] — request router / batcher / worker pool (§IV-D);
-//!   workers drain cut batches through `run_frames`
+//!   workers drain cut batches through `run_frames`, or — under
+//!   `ShardPolicy::PerFrame` — execute scattered row-tile shards of one
+//!   frame (`run_shard`) that the shard orchestrator gathers per layer
 //! * [`runtime`] — PJRT CPU client for `artifacts/*.hlo.txt` (stubbed
 //!   without the `xla` cargo feature)
 //! * [`data`] — synthetic GTSRB-like workload generator

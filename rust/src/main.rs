@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! binarray info                         # artifacts + network summary
-//! binarray serve  [--config 1,8,2] [--workers N] [--frames N] [--mode fast|accurate]
+//! binarray serve  [--config 1,8,2] [--workers N] [--frames N] [--mode fast|accurate] [--shard N]
 //! binarray perf   [--m M]               # Table III analytical model
 //! binarray area                         # Table IV resource model
 //! binarray listing                      # compiled CNN processing program
@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode,
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy,
 };
 use binarray::tensor::Shape;
 use binarray::{area, golden, isa, nn, perf};
@@ -181,12 +181,21 @@ fn info() -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let net = load_net()?;
+    // --shard N scatters every frame's row tiles over N cards (latency
+    // mode); 0 = off (whole-frame batching, throughput mode).  The
+    // coordinator grows the pool to the card count itself.
+    let cards: usize = args.get("shard", 0)?;
     let cfg = CoordinatorConfig {
         array: args.config(ArrayConfig::new(1, 8, 2))?,
         workers: args.get("workers", 2)?,
         policy: BatchPolicy {
             max_batch: args.get("batch", 8)?,
             max_delay: Duration::from_millis(args.get("delay-ms", 2)?),
+        },
+        shard: if cards == 0 {
+            ShardPolicy::Off
+        } else {
+            ShardPolicy::PerFrame(cards)
         },
     };
     let frames: usize = args.get("frames", 64)?;
@@ -198,9 +207,14 @@ fn serve(args: &Args) -> Result<()> {
     let calib = CalibBatch::load(&dir.join("calib.bin"))?;
 
     println!(
-        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}",
+        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}{}",
         cfg.array.label(),
-        cfg.workers
+        cfg.workers,
+        if cards > 0 {
+            format!(", sharded over {cards} cards")
+        } else {
+            String::new()
+        }
     );
     let coord = Coordinator::start(cfg, net)?;
     let mut rxs = Vec::new();
@@ -212,7 +226,7 @@ fn serve(args: &Args) -> Result<()> {
     }
     let mut correct = 0u64;
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let reply = rx.recv()?;
+        let reply = rx.recv()??;
         if reply.class as i32 == label {
             correct += 1;
         }

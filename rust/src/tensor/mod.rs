@@ -269,6 +269,68 @@ impl FeatureMapTileMut<'_> {
     }
 }
 
+/// Copy the `(rows × W × chans)` region of a row-major map into a dense
+/// block — the DMA payload of a cross-card output tile (rows outermost,
+/// then columns, then channels, matching the map's own order).
+pub fn extract_tile(
+    shape: Shape,
+    data: &[i8],
+    rows: std::ops::Range<usize>,
+    chans: std::ops::Range<usize>,
+) -> Vec<i8> {
+    assert_eq!(data.len(), shape.len(), "shape/data mismatch");
+    assert!(
+        rows.end <= shape.h && chans.end <= shape.c,
+        "tile ({rows:?}, {chans:?}) exceeds map {shape:?}"
+    );
+    if chans == (0..shape.c) {
+        // full-channel tiles are contiguous rows: one memcpy
+        let a = (rows.start * shape.w) * shape.c;
+        let b = (rows.end * shape.w) * shape.c;
+        return data[a..b].to_vec();
+    }
+    let cw = chans.len();
+    let mut out = Vec::with_capacity(rows.len() * shape.w * cw);
+    for y in rows {
+        for x in 0..shape.w {
+            let a = shape.addr(y, x, chans.start);
+            out.extend_from_slice(&data[a..a + cw]);
+        }
+    }
+    out
+}
+
+/// Inverse of [`extract_tile`]: stitch a dense tile block back into the
+/// full map — the gather step of cross-card sharding.
+pub fn scatter_tile(
+    shape: Shape,
+    data: &mut [i8],
+    rows: std::ops::Range<usize>,
+    chans: std::ops::Range<usize>,
+    tile: &[i8],
+) {
+    assert_eq!(data.len(), shape.len(), "shape/data mismatch");
+    assert!(
+        rows.end <= shape.h && chans.end <= shape.c,
+        "tile ({rows:?}, {chans:?}) exceeds map {shape:?}"
+    );
+    assert_eq!(tile.len(), rows.len() * shape.w * chans.len(), "tile size");
+    if chans == (0..shape.c) {
+        let a = (rows.start * shape.w) * shape.c;
+        data[a..a + tile.len()].copy_from_slice(tile);
+        return;
+    }
+    let cw = chans.len();
+    let mut src = 0usize;
+    for y in rows {
+        for x in 0..shape.w {
+            let a = shape.addr(y, x, chans.start);
+            data[a..a + cw].copy_from_slice(&tile[src..src + cw]);
+            src += cw;
+        }
+    }
+}
+
 /// Split `len` into `n` near-equal ranges with `halo` overlap on each seam.
 pub fn tile_ranges(len: usize, n: usize, halo: usize) -> Vec<(usize, usize)> {
     assert!(n >= 1 && n <= len, "cannot split {len} into {n} tiles");
@@ -391,6 +453,47 @@ mod tests {
         let ts = FeatureMapTiles::new(shape, &mut buf)
             .claim_all(&[(0..4, 0..2), (0..2, 2..4), (2..4, 2..4)]);
         assert_eq!(ts.len(), 3);
+    }
+
+    #[test]
+    fn extract_scatter_roundtrip() {
+        prop::check(100, "scatter(extract(t)) == identity on the region", |rng| {
+            let h = 1 + rng.below(6) as usize;
+            let w = 1 + rng.below(6) as usize;
+            let c = 1 + rng.below(5) as usize;
+            let shape = Shape::new(h, w, c);
+            let src = prop::i8_vec(rng, shape.len());
+            let r0 = rng.below(h as u64) as usize;
+            let r1 = r0 + 1 + rng.below((h - r0) as u64) as usize;
+            let c0 = rng.below(c as u64) as usize;
+            let c1 = c0 + 1 + rng.below((c - c0) as u64) as usize;
+            let tile = extract_tile(shape, &src, r0..r1, c0..c1);
+            assert_eq!(tile.len(), (r1 - r0) * w * (c1 - c0));
+            // scatter into a fresh buffer: region matches src, rest is 0
+            let mut dst = vec![0i8; shape.len()];
+            scatter_tile(shape, &mut dst, r0..r1, c0..c1, &tile);
+            for y in 0..h {
+                for x in 0..w {
+                    for ch in 0..c {
+                        let a = shape.addr(y, x, ch);
+                        let inside = (r0..r1).contains(&y) && (c0..c1).contains(&ch);
+                        assert_eq!(dst[a], if inside { src[a] } else { 0 });
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn full_channel_tile_is_contiguous_fast_path() {
+        let mut rng = Xoshiro256::new(7);
+        let shape = Shape::new(5, 4, 3);
+        let src = prop::i8_vec(&mut rng, shape.len());
+        let tile = extract_tile(shape, &src, 1..4, 0..3);
+        assert_eq!(tile, src[shape.addr(1, 0, 0)..shape.addr(3, 3, 2) + 1].to_vec());
+        let mut dst = vec![0i8; shape.len()];
+        scatter_tile(shape, &mut dst, 1..4, 0..3, &tile);
+        assert_eq!(&dst[shape.addr(1, 0, 0)..shape.addr(3, 3, 2) + 1], &tile[..]);
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Multi-producer stress coverage for the coordinator: N threads
+//! submitting concurrently across both accuracy modes, small batch
+//! limits, shutdown under load, and the sharded scatter/gather path under
+//! the same concurrency.  The single-producer happy paths live in
+//! `coordinator::server`'s unit tests; everything here is about what the
+//! concurrent machine does when several clients lean on it at once.
+
+use std::time::Duration;
+
+use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::ArrayConfig;
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy,
+};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// A deliberately tiny but structurally complete net (conv+pool, two
+/// dense) so stress tests push *request counts*, not frame compute.
+fn tiny_net(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 2;
+    let conv = QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, 4 * m * 3 * 3 * 3),
+        alpha_q: (0..4 * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..4).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d: 4,
+        m,
+        kh: 3,
+        kw: 3,
+        c: 3,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool: 2,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, n_in: usize, relu: bool| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * n_in),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    // 10×10×3 → conv3 → 8×8×4 → pool2 → 4×4×4 → dense 8 → dense 5
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![conv, dense(rng, 8, 64, true), dense(rng, 5, 8, false)],
+    };
+    assert_eq!(binarray::isa::compiler::infer_input_dims(&net), (10, 10, 3));
+    (net, Shape::new(10, 10, 3))
+}
+
+#[test]
+fn concurrent_producers_all_replied_ids_unique_metrics_consistent() {
+    let mut rng = Xoshiro256::new(0x57E55);
+    let (net, shape) = tiny_net(&mut rng);
+    let producers = 4usize;
+    let per_producer = 24usize;
+    let total = (producers * per_producer) as u64;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(2, 8, 2),
+            workers: 3,
+            policy: BatchPolicy {
+                max_batch: 3,
+                max_delay: Duration::from_micros(200),
+            },
+            shard: ShardPolicy::Off,
+        },
+        net,
+    )
+    .unwrap();
+
+    let mut ids: Vec<u64> = Vec::new();
+    std::thread::scope(|s| {
+        let threads: Vec<_> = (0..producers)
+            .map(|p| {
+                let h = coord.handle();
+                let mut prng = Xoshiro256::new(p as u64 + 1);
+                let image = prop::i8_vec(&mut prng, shape.len());
+                s.spawn(move || {
+                    let mut got = Vec::with_capacity(per_producer);
+                    for i in 0..per_producer {
+                        let mode = if (p + i) % 2 == 0 {
+                            Mode::HighAccuracy
+                        } else {
+                            Mode::HighThroughput
+                        };
+                        let reply = h
+                            .submit(image.clone(), mode)
+                            .recv()
+                            .expect("live channel")
+                            .expect("successful inference");
+                        assert_eq!(reply.mode, mode, "mode echoed back");
+                        got.push(reply.id);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for t in threads {
+            ids.extend(t.join().unwrap());
+        }
+    });
+
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, total, "every id unique, every request answered");
+    assert_eq!(*ids.first().unwrap(), 0);
+    assert_eq!(*ids.last().unwrap(), total - 1);
+
+    let m = coord.shutdown();
+    assert_eq!(m.completed, total);
+    assert_eq!(m.failed, 0);
+    // batches: between "max batching" and "every frame alone"
+    assert!(m.batches >= total / 3, "batches {} for {total} frames", m.batches);
+    assert!(m.batches <= total, "batches {} for {total} frames", m.batches);
+    assert!((m.mean_batch() - m.completed as f64 / m.batches as f64).abs() < 1e-9);
+    assert_eq!(m.latency.count() as u64, total);
+}
+
+#[test]
+fn shutdown_drains_under_multi_producer_load() {
+    let mut rng = Xoshiro256::new(0xD7A1);
+    let (net, shape) = tiny_net(&mut rng);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_delay: Duration::from_secs(60), // never ripe on its own
+            },
+            shard: ShardPolicy::Off,
+        },
+        net,
+    )
+    .unwrap();
+    let producers = 4usize;
+    let per_producer = 10usize;
+    let mut rxs = Vec::new();
+    std::thread::scope(|s| {
+        let threads: Vec<_> = (0..producers)
+            .map(|p| {
+                let h = coord.handle();
+                let mut prng = Xoshiro256::new(100 + p as u64);
+                let image = prop::i8_vec(&mut prng, shape.len());
+                s.spawn(move || {
+                    (0..per_producer)
+                        .map(|i| {
+                            let mode = if i % 2 == 0 {
+                                Mode::HighAccuracy
+                            } else {
+                                Mode::HighThroughput
+                            };
+                            h.submit(image.clone(), mode)
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for t in threads {
+            rxs.extend(t.join().unwrap());
+        }
+    });
+    // everything is still parked in the batcher (max_delay is an hour);
+    // shutdown must flush and answer every caller
+    let m = coord.shutdown();
+    assert_eq!(m.completed, (producers * per_producer) as u64);
+    for rx in rxs {
+        assert!(rx.recv().expect("drained, not dropped").is_ok());
+    }
+}
+
+#[test]
+fn sharded_path_survives_concurrent_producers() {
+    let mut rng = Xoshiro256::new(0x5AAD);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want_hi = golden::forward(&net, &image, shape, None);
+    let want_lo = golden::forward(&net, &image, shape, Some(2));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 2,
+            policy: BatchPolicy::default(),
+            shard: ShardPolicy::PerFrame(2),
+        },
+        net,
+    )
+    .unwrap();
+    let producers = 3usize;
+    let per_producer = 10usize;
+    std::thread::scope(|s| {
+        for p in 0..producers {
+            let h = coord.handle();
+            let (image, want_hi, want_lo) = (&image, &want_hi, &want_lo);
+            s.spawn(move || {
+                for i in 0..per_producer {
+                    let (mode, want) = if (p + i) % 2 == 0 {
+                        (Mode::HighAccuracy, want_hi)
+                    } else {
+                        (Mode::HighThroughput, want_lo)
+                    };
+                    let reply = h.infer(image.clone(), mode).expect("sharded inference");
+                    assert_eq!(&reply.logits, want, "producer {p} frame {i} mode {mode:?}");
+                }
+            });
+        }
+    });
+    let m = coord.shutdown();
+    assert_eq!(m.completed, (producers * per_producer) as u64);
+    assert_eq!(m.failed, 0);
+    // per-frame cutting: every sharded batch is a single frame
+    assert_eq!(m.batches, m.completed);
+}

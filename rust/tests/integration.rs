@@ -124,6 +124,7 @@ fn serving_path_equals_direct_simulation() {
             array: ArrayConfig::new(1, 8, 2),
             workers: 2,
             policy: BatchPolicy::default(),
+            ..Default::default()
         },
         net.clone(),
     )
@@ -133,7 +134,7 @@ fn serving_path_equals_direct_simulation() {
         .map(|i| coord.submit(calib.image(i).to_vec(), Mode::HighAccuracy))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let reply = rx.recv().unwrap();
+        let reply = rx.recv().unwrap().unwrap();
         let want = golden::forward(&net, calib.image(i), shape, None);
         assert_eq!(reply.logits, want, "served frame {i}");
     }

@@ -1,0 +1,132 @@
+//! Bit-exactness matrix for cross-card sharding: for every paper
+//! `ArrayConfig`, both runtime accuracy `Mode`s, and 1/2/4 worker cards,
+//! a frame served through the sharded scatter/gather coordinator must be
+//! logit-identical to the unsharded `run_frames` path and to the
+//! bit-accurate `golden::forward` model.  Neither the row-tile split, the
+//! per-layer gather order, nor the card count may ever change an output
+//! byte — and adding cards must never *increase* the simulated frame
+//! latency.
+
+use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::{BinArraySystem, PAPER_CONFIGS};
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy,
+};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// The structurally complete small net of the plan/execute suite: two
+/// conv layers (pooled + ReLU-only), two dense layers, M = 4 so the two
+/// accuracy modes differ on every paper config.
+fn small_net(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 4;
+    let conv = |rng: &mut Xoshiro256, d: usize, c: usize, pool: usize| QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, d * m * 3 * 3 * c),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+        d,
+        m,
+        kh: 3,
+        kw: 3,
+        c,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 8,
+        relu: true,
+        pool,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, nin: usize, relu: bool| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * nin),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-300, 300) as i32).collect(),
+        d,
+        m,
+        kh: nin,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 7,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![
+            conv(rng, 6, 3, 2),  // 14×14×3 → 12×12×6 → pool2 → 6×6×6
+            conv(rng, 10, 6, 1), // 6×6×6 → 4×4×10 (ReLU, no pooling)
+            dense(rng, 20, 160, true),
+            dense(rng, 7, 20, false),
+        ],
+    };
+    assert_eq!(binarray::isa::compiler::infer_input_dims(&net), (14, 14, 3));
+    (net, Shape::new(14, 14, 3))
+}
+
+#[test]
+fn sharded_equals_unsharded_equals_golden_all_configs_modes_cards() {
+    let mut rng = Xoshiro256::new(0xE8AC7);
+    let (net, shape) = small_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    for cfg in PAPER_CONFIGS {
+        let mut direct = BinArraySystem::new(cfg, net.clone()).unwrap();
+        for mode in [Mode::HighAccuracy, Mode::HighThroughput] {
+            let m_run = match mode {
+                Mode::HighAccuracy => None,
+                Mode::HighThroughput => Some(cfg.m_arch.min(net.max_m())),
+            };
+            let want = golden::forward(&net, &image, shape, m_run);
+            direct.set_mode(m_run);
+            let (unsharded, direct_stats) = direct.run_frame(&image).unwrap();
+            assert_eq!(unsharded, want, "unsharded {} {mode:?} != golden", cfg.label());
+            let mut prev_cycles = u64::MAX;
+            for cards in [1usize, 2, 4] {
+                let coord = Coordinator::start(
+                    CoordinatorConfig {
+                        array: cfg,
+                        workers: cards,
+                        policy: BatchPolicy::default(),
+                        shard: ShardPolicy::PerFrame(cards),
+                    },
+                    net.clone(),
+                )
+                .unwrap();
+                let reply = coord.infer(image.clone(), mode).unwrap();
+                assert_eq!(
+                    reply.logits,
+                    want,
+                    "sharded {} {mode:?} over {cards} cards != golden",
+                    cfg.label()
+                );
+                // the single-card shard runs the exact parent schedule —
+                // same layer walls, same CU cycles
+                if cards == 1 {
+                    assert_eq!(
+                        reply.cycles,
+                        direct_stats.cycles,
+                        "1-card shard cycles drifted from unsharded ({} {mode:?})",
+                        cfg.label()
+                    );
+                }
+                // more cards must never cost simulated latency
+                assert!(
+                    reply.cycles <= prev_cycles,
+                    "{} {mode:?}: {cards} cards took {} cycles > {prev_cycles}",
+                    cfg.label(),
+                    reply.cycles
+                );
+                prev_cycles = reply.cycles;
+                let m = coord.shutdown();
+                assert_eq!(m.completed, 1);
+                assert_eq!(m.failed, 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Property coverage for the cross-card shard geometry: for random
+//! networks, array configs and card counts, every layer's per-card tile
+//! claims must be pairwise disjoint and their union must cover the
+//! layer's output grid exactly — no overlap (two cards writing one cell)
+//! and no gap (a cell no card computes).  This is the invariant that
+//! makes the coordinator's gather step a pure stitch: tiles can land in
+//! the frame buffer in any order and the result is the same.
+
+use std::ops::Range;
+
+use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::plan::{schedule, shard_schedule, ExecutionPlan, ShardPlan};
+use binarray::binarray::ArrayConfig;
+use binarray::isa::compile_network;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// Assert `claims` (from all cards of one layer) tile the `rows × chans`
+/// grid exactly once.
+fn assert_exact_partition(claims: &[(Range<usize>, Range<usize>)], rows: usize, chans: usize) {
+    let mut seen = vec![0u32; rows * chans];
+    for (r, c) in claims {
+        assert!(r.end <= rows && c.end <= chans, "claim ({r:?},{c:?}) out of grid");
+        for y in r.clone() {
+            for x in c.clone() {
+                seen[y * chans + x] += 1;
+            }
+        }
+    }
+    for (i, &v) in seen.iter().enumerate() {
+        assert_eq!(v, 1, "cell (row {}, chan {}) covered {v} times", i / chans, i % chans);
+    }
+}
+
+/// Per-card claims must be pairwise disjoint (a card hands them all to
+/// one `claim_all`, which panics otherwise — this asserts the geometry
+/// directly so a failure names the card).
+fn assert_card_disjoint(claims: &[(Range<usize>, Range<usize>)], card: usize) {
+    for (i, (r1, c1)) in claims.iter().enumerate() {
+        for (r2, c2) in &claims[i + 1..] {
+            let rows_meet = r1.start < r2.end && r2.start < r1.end;
+            let chans_meet = c1.start < c2.end && c2.start < c1.end;
+            assert!(
+                !(rows_meet && chans_meet),
+                "card {card}: overlapping claims ({r1:?},{c1:?}) vs ({r2:?},{c2:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn shard_schedule_partitions_random_geometry() {
+    prop::check(300, "per-card claims partition the output grid", |rng| {
+        let cfg = ArrayConfig::new(
+            1 + rng.below(16) as usize,
+            1 + rng.below(32) as usize,
+            1 + rng.below(4) as usize,
+        );
+        let d = 1 + rng.below(200) as usize;
+        let rows = 1 + rng.below(24) as usize;
+        let m = 1 + rng.below(6) as usize;
+        let n_cards = 1 + rng.below(6) as usize;
+        let (assignments, _) = schedule(cfg, d, rows, m);
+        let cards = shard_schedule(&assignments, n_cards);
+        assert_eq!(cards.len(), n_cards);
+        let mut all: Vec<(Range<usize>, Range<usize>)> = Vec::new();
+        for (ci, card) in cards.iter().enumerate() {
+            assert_card_disjoint(card.claims(), ci);
+            all.extend(card.claims().iter().cloned());
+        }
+        assert_exact_partition(&all, rows, d);
+    });
+}
+
+fn sign_conv(
+    rng: &mut Xoshiro256,
+    d: usize,
+    c: usize,
+    m: usize,
+    kh: usize,
+    pool: usize,
+) -> QuantLayer {
+    QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, d * m * kh * kh * c),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh,
+        kw: kh,
+        c,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool,
+        stride: 1,
+    }
+}
+
+fn sign_dense(rng: &mut Xoshiro256, d: usize, n_in: usize, m: usize, relu: bool) -> QuantLayer {
+    QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * n_in),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    }
+}
+
+/// Random but compilable conv+dense stack (geometry walks forward so the
+/// pool divides the conv output), plus its input edge length.
+fn random_net(rng: &mut Xoshiro256) -> (QuantNetwork, usize) {
+    let m = 1 + rng.below(4) as usize;
+    let c0 = 1 + rng.below(3) as usize;
+    let kh = 2 + rng.below(3) as usize; // 2..=4
+    let pool = 1 + rng.below(2) as usize; // 1..=2
+    let conv_out = pool * (2 + rng.below(6) as usize);
+    let hw = conv_out + kh - 1;
+    let d1 = 1 + rng.below(12) as usize;
+    let l1 = sign_conv(rng, d1, c0, m, kh, pool);
+    let hw1 = conv_out / pool;
+    let flat = hw1 * hw1 * d1;
+    let d2 = 2 + rng.below(24) as usize;
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![
+            l1,
+            sign_dense(rng, d2, flat, m, true),
+            sign_dense(rng, 1 + rng.below(8) as usize, d2, m, false),
+        ],
+    };
+    (net, hw)
+}
+
+#[test]
+fn shard_plan_partitions_every_mode_and_layer() {
+    prop::check(20, "ShardPlan partitions out_shape ∀ mode × layer × cards", |rng| {
+        let (net, hw) = random_net(rng);
+        let inferred = binarray::isa::compiler::infer_input_dims(&net);
+        if inferred.0 != hw {
+            return; // ambiguous geometry — legitimate skip, not a failure
+        }
+        let prog = compile_network(&net);
+        let cfg = ArrayConfig::new(
+            1 + rng.below(8) as usize,
+            1 + rng.below(32) as usize,
+            1 + rng.below(4) as usize,
+        );
+        let plan = ExecutionPlan::new(cfg, &net, &prog);
+        for n_cards in [1usize, 2, 4, 5] {
+            let sp = ShardPlan::new(&plan, n_cards);
+            let mut modes = vec![None];
+            modes.extend((1..=plan.max_m).map(Some));
+            for m_run in modes {
+                let layers = sp.mode(m_run);
+                let planned = plan.mode(m_run);
+                assert_eq!(layers.len(), planned.layers.len());
+                for (ls, lp) in layers.iter().zip(&planned.layers) {
+                    let mut all = Vec::new();
+                    for (ci, card) in ls.cards.iter().enumerate() {
+                        assert_card_disjoint(card.claims(), ci);
+                        all.extend(card.claims().iter().cloned());
+                    }
+                    assert_exact_partition(&all, lp.out_shape.h, lp.out_shape.c);
+                }
+            }
+        }
+    });
+}
