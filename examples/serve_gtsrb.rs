@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 use binarray::artifacts::{self, CalibBatch, QuantNetwork};
 use binarray::binarray::ArrayConfig;
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode,
+    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, Mode,
 };
 use binarray::runtime::Runtime;
 use binarray::{nn, perf};
@@ -88,6 +88,53 @@ fn main() -> anyhow::Result<()> {
         100.0 * correct as f64 / frames as f64,
         correct,
         frames
+    );
+
+    // --- hybrid dispatch: mixed traffic on one pool ----------------------
+    // The same coordinator machinery, but with both dispatch lanes in
+    // play: most frames batch for throughput, every fourth frame takes
+    // the shard (latency) lane by explicit override — the router leases
+    // whatever cards the batch lane isn't using for its scatter width.
+    let mixed_frames = frames.min(64);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array,
+            workers: workers.max(2),
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+            },
+            ..Default::default()
+        },
+        net.clone(),
+    )?;
+    let handle = coord.handle();
+    let rxs: Vec<_> = (0..mixed_frames)
+        .map(|i| {
+            let class = if i % 4 == 0 {
+                DispatchClass::Shard
+            } else {
+                DispatchClass::Batch
+            };
+            handle.submit_routed(
+                calib.image(i % calib.n).to_vec(),
+                Mode::HighAccuracy,
+                Some(class),
+            )
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv()??;
+    }
+    let mixed = coord.shutdown();
+    println!("\n== hybrid dispatch (mixed batch/shard traffic) ==");
+    println!("{}", mixed.summary());
+    println!(
+        "lanes: {} batched, {} sharded | mean lease {:.1} cards, {} stolen by the batch lane",
+        mixed.routed_batch,
+        mixed.routed_shard,
+        mixed.mean_lease(),
+        mixed.shard_cards_stolen
     );
 
     // --- analytical cross-check (the paper's §V-A3 methodology) ---------

@@ -30,7 +30,9 @@ use binarray::binarray::agu::Agu;
 use binarray::binarray::amu::{Amu, Odg};
 use binarray::binarray::plan::schedule;
 use binarray::binarray::{ArrayConfig, BinArraySystem};
-use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy};
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, Mode, RoutePolicy,
+};
 use binarray::isa::{compile_network, Program};
 use binarray::tensor::{FeatureMap, Shape};
 use binarray::util::{prop, rng::Xoshiro256};
@@ -386,8 +388,9 @@ fn main() {
     // === cross-card sharding: single-frame latency ======================
     // The latency counterpart of the workers sweep above: the same pool,
     // but every frame's row tiles scatter over all cards and gather
-    // between layers (ShardPolicy::PerFrame).  Requests are submitted
-    // one at a time — this measures frame latency, not queue throughput.
+    // between layers (RoutePolicy::ShardOnly — the dedicated-shard mode).
+    // Requests are submitted one at a time — this measures frame latency,
+    // not queue throughput.
     println!("\n=== cross-card sharding: single-frame latency [1,8,2] ===");
     let shard_frames = 12usize;
     let mut shard_json: Vec<String> = Vec::new();
@@ -401,11 +404,12 @@ fn main() {
                     max_batch: 1,
                     max_delay: Duration::ZERO,
                 },
-                shard: if sharded {
-                    ShardPolicy::PerFrame(cards)
+                route: if sharded {
+                    RoutePolicy::ShardOnly
                 } else {
-                    ShardPolicy::Off
+                    RoutePolicy::BatchOnly
                 },
+                max_shard_cards: cards,
             },
             qnet.clone(),
         )
@@ -449,6 +453,52 @@ fn main() {
         ));
     }
 
+    // === hybrid dispatch: both lanes over one pool ======================
+    // Mixed traffic through a single coordinator: every fourth frame
+    // takes the shard (latency) lane by explicit override, the rest
+    // batch.  The router arbitrates cards between the lanes — the
+    // per-lane counters show what each lane actually got.
+    println!("\n=== hybrid dispatch: mixed traffic, one pool [1,8,2] ===");
+    let hybrid_frames = 64usize;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 4,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_micros(500),
+            },
+            route: RoutePolicy::BatchOnly,
+            max_shard_cards: 2,
+        },
+        qnet.clone(),
+    )
+    .unwrap();
+    let h = coord.handle();
+    h.infer(images[0].clone(), Mode::HighAccuracy).unwrap(); // warmup
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..hybrid_frames)
+        .map(|i| {
+            let class = if i % 4 == 0 {
+                Some(DispatchClass::Shard)
+            } else {
+                Some(DispatchClass::Batch)
+            };
+            h.submit_routed(images[i % images.len()].clone(), Mode::HighAccuracy, class)
+        })
+        .collect();
+    for rx in rxs {
+        let reply = rx.recv().unwrap().unwrap();
+        assert!(!reply.logits.is_empty());
+    }
+    let hybrid_dt = t0.elapsed().as_secs_f64();
+    let hybrid_fps = hybrid_frames as f64 / hybrid_dt;
+    let hm = coord.shutdown();
+    println!(
+        "  {hybrid_frames} mixed frames in {hybrid_dt:.3}s → {hybrid_fps:.1} fps wall | {}",
+        hm.summary()
+    );
+
     // === machine-readable record =======================================
     let direct_json: Vec<String> = direct_fps
         .iter()
@@ -458,8 +508,12 @@ fn main() {
             )
         })
         .collect();
+    let hybrid_json = format!(
+        "{{\"frames\": {hybrid_frames}, \"frames_per_sec\": {hybrid_fps:.2}, \"routed_batch\": {}, \"routed_shard\": {}, \"mean_lease_cards\": {:.2}, \"cards_stolen\": {}}}",
+        hm.routed_batch, hm.routed_shard, hm.mean_lease(), hm.shard_cards_stolen
+    );
     let json = format!(
-        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json}\n}}\n",
         cfg.label(),
         1.0 / legacy_per,
         1.0 / plan_per_frame,

@@ -4,29 +4,48 @@
 //! tracks one record per PR in `BENCH_trajectory.jsonl`.  This tool
 //! compares the fresh record's host-side fps (`frames_per_sec_plan` —
 //! the product path the coordinator serves through) against the last
-//! tracked record and fails when it regressed by more than the
-//! threshold, so a PR cannot silently lose the hot-path wins.
+//! tracked record *of the same machine class* and fails when it
+//! regressed by more than the threshold, so a PR cannot silently lose
+//! the hot-path wins (and a ledger mixing dev and CI records cannot
+//! mute the gate).
 //!
 //! ```text
 //! bench_gate check  <fresh.json> <trajectory.jsonl> [threshold]
-//!     exit 1 when fresh fps < (1 - threshold) × last recorded fps
-//!     (threshold defaults to 0.20; missing baseline or fresh file ⇒ pass
-//!      with a notice, so the gate bootstraps on a new trajectory)
+//!     exit 0: compared and passed
+//!     exit 1: fresh fps < (1 - threshold) × last recorded fps
+//!     exit 2: nothing to compare — the trajectory has no numeric
+//!             baseline (or no fresh record exists); CI should surface
+//!             this as "gate did not run", not as a pass
+//!     exit 3: comparison skipped — the baseline is from a different
+//!             machine class (host_threads fingerprint mismatch)
+//!     (threshold defaults to 0.20)
 //!
 //! bench_gate record <fresh.json> <trajectory.jsonl> [label]
 //!     append the fresh record as one trajectory line (run this once per
 //!     PR, after `cargo bench --bench sim_hotpath`, and commit the file)
 //!
 //! bench_gate record-best <fresh.json> <trajectory.jsonl> [label]
-//!     as `record`, but only when the fresh fps beats the last record —
-//!     the CI rolling baseline uses this so a sequence of sub-threshold
-//!     regressions cannot ratchet the floor downward run over run
+//!     as `record`, but only when the fresh fps beats the last record of
+//!     the same machine class — the CI rolling baseline uses this so a
+//!     sequence of sub-threshold regressions cannot ratchet the floor
+//!     downward run over run
+//!
+//! bench_gate record-if-missing <fresh.json> <trajectory.jsonl> [label]
+//!     as `record`, but only when the trajectory holds NO numeric record
+//!     for this machine class — CI uses this to seed the numeric
+//!     baseline the first time it runs on a runner class (the tracked
+//!     seed line carries no fps on purpose)
 //! ```
 //!
 //! No JSON dependency: the bench's writer is in-repo, so a key scan is
 //! exact enough — and it keeps the gate runnable in the offline build.
 
 use std::process::ExitCode;
+
+/// Exit code for "nothing to compare" (empty/seed-only ledger).
+const EXIT_NO_BASELINE: u8 = 2;
+/// Exit code for "comparison skipped: machine-class mismatch".
+const EXIT_CLASS_SKIP: u8 = 3;
 
 /// Extract the first numeric value of a top-level `"key": <number>` pair.
 /// Returns `None` for a missing key or a non-numeric value (e.g. `null`).
@@ -40,21 +59,18 @@ fn extract_f64(json: &str, key: &str) -> Option<f64> {
     rest[..end].parse().ok()
 }
 
-/// Last non-empty line of a trajectory file's contents.
-fn last_record(trajectory: &str) -> Option<&str> {
-    trajectory.lines().map(str::trim).filter(|l| !l.is_empty()).last()
+/// How a gate invocation ended (other than outright failure).
+enum Outcome {
+    /// Compared against a baseline and passed.
+    Pass(String),
+    /// Nothing to compare: no numeric baseline (or no fresh record).
+    NoBaseline(String),
+    /// Comparison skipped: baseline is from another machine class.
+    ClassSkip(String),
 }
 
 /// The gate decision: `Ok(notice)` to pass, `Err(reason)` to fail CI.
-fn gate(prev: Option<f64>, fresh: f64, threshold: f64) -> Result<String, String> {
-    let Some(prev) = prev else {
-        return Ok(format!(
-            "no baseline in trajectory — recording {fresh:.2} fps would seed it; pass"
-        ));
-    };
-    if prev <= 0.0 {
-        return Ok(format!("baseline {prev:.2} fps is degenerate; pass"));
-    }
+fn gate(prev: f64, fresh: f64, threshold: f64) -> Result<String, String> {
     let floor = prev * (1.0 - threshold);
     let delta = (fresh - prev) / prev * 100.0;
     if fresh < floor {
@@ -85,7 +101,57 @@ fn same_machine_class(prev: Option<f64>, fresh: Option<f64>) -> bool {
     }
 }
 
-fn run() -> Result<(), String> {
+/// The most recent trajectory line holding a numeric record comparable
+/// to a fresh record with the given machine-class fingerprint.  `check`
+/// and `record-if-missing` share this scan: a mixed-class ledger (dev
+/// records interleaved with CI seeds) must neither mute the gate nor
+/// block reseeding — the gate compares against the last record *of its
+/// own class*, wherever it sits in the file.
+fn last_class_record<'t>(trajectory: &'t str, fresh_threads: Option<f64>) -> Option<&'t str> {
+    trajectory
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .filter(|l| {
+            extract_f64(l, KEY).is_some()
+                && same_machine_class(extract_f64(l, "host_threads"), fresh_threads)
+        })
+        .last()
+}
+
+/// Does the trajectory already hold a numeric record comparable to a
+/// fresh record with the given machine-class fingerprint?
+fn has_class_record(trajectory: &str, fresh_threads: Option<f64>) -> bool {
+    last_class_record(trajectory, fresh_threads).is_some()
+}
+
+/// Append the fresh record as one trajectory line.
+fn append_record(fresh: &str, traj_path: &str, label: &str) -> Result<String, String> {
+    // keep the hand-rolled JSONL line well-formed for any label
+    let label: String = label
+        .chars()
+        .filter(|c| *c != '"' && *c != '\\' && !c.is_control())
+        .collect();
+    let fps = extract_f64(fresh, KEY)
+        .ok_or_else(|| format!("fresh record has no numeric {KEY:?}"))?;
+    let legacy = extract_f64(fresh, "frames_per_sec_legacy").unwrap_or(0.0);
+    let speedup = extract_f64(fresh, "plan_speedup").unwrap_or(0.0);
+    let threads = extract_f64(fresh, "host_threads").unwrap_or(0.0);
+    let line = format!(
+        "{{\"bench\": \"sim_hotpath\", \"label\": \"{label}\", \
+         \"host_threads\": {threads}, \"{KEY}\": {fps:.2}, \
+         \"frames_per_sec_legacy\": {legacy:.2}, \"plan_speedup\": {speedup:.2}}}\n"
+    );
+    let mut traj = std::fs::read_to_string(traj_path).unwrap_or_default();
+    if !traj.is_empty() && !traj.ends_with('\n') {
+        traj.push('\n');
+    }
+    traj.push_str(&line);
+    std::fs::write(traj_path, traj).map_err(|e| format!("write {traj_path}: {e}"))?;
+    Ok(format!("recorded {fps:.2} fps to {traj_path}"))
+}
+
+fn run() -> Result<Outcome, String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("check");
     let fresh_path = args.get(1).map(String::as_str).unwrap_or("BENCH_sim_hotpath.json");
@@ -98,77 +164,103 @@ fn run() -> Result<(), String> {
                 .transpose()?
                 .unwrap_or(0.20);
             let Ok(fresh) = std::fs::read_to_string(fresh_path) else {
-                println!("bench_gate: no fresh record at {fresh_path} — nothing to gate");
-                return Ok(());
+                return Ok(Outcome::NoBaseline(format!(
+                    "no fresh record at {fresh_path} — nothing to gate"
+                )));
             };
             let fresh_fps = extract_f64(&fresh, KEY)
                 .ok_or_else(|| format!("{fresh_path} has no numeric {KEY:?}"))?;
-            let traj = std::fs::read_to_string(traj_path).ok();
-            let last = traj.as_deref().and_then(last_record);
-            let prev = last.and_then(|l| extract_f64(l, KEY));
-            let prev_threads = last.and_then(|l| extract_f64(l, "host_threads"));
             let fresh_threads = extract_f64(&fresh, "host_threads");
-            if !same_machine_class(prev_threads, fresh_threads) {
-                println!(
-                    "bench_gate: baseline is from a different machine class (host_threads \
-                     {prev_threads:?} vs {fresh_threads:?}) — skipping fps comparison"
-                );
-                return Ok(());
+            let traj = std::fs::read_to_string(traj_path).ok();
+            // Compare against the last record of *this* machine class —
+            // a mixed-class ledger must not mute the gate just because
+            // its final line came from a different machine.
+            let matching = traj
+                .as_deref()
+                .and_then(|t| last_class_record(t, fresh_threads));
+            let Some(line) = matching else {
+                let any_numeric = traj
+                    .as_deref()
+                    .is_some_and(|t| t.lines().any(|l| extract_f64(l, KEY).is_some()));
+                if any_numeric {
+                    return Ok(Outcome::ClassSkip(format!(
+                        "every numeric baseline in {traj_path} is from a different \
+                         machine class (fresh host_threads {fresh_threads:?}) — \
+                         fps comparison skipped"
+                    )));
+                }
+                return Ok(Outcome::NoBaseline(format!(
+                    "trajectory {traj_path} has no numeric {KEY} baseline — \
+                     seed it with `bench_gate record` on this machine class \
+                     ({fresh_fps:.2} fps would become the floor)"
+                )));
+            };
+            let prev = extract_f64(line, KEY).expect("matching record is numeric");
+            if prev <= 0.0 {
+                return Ok(Outcome::NoBaseline(format!(
+                    "baseline {prev:.2} fps is degenerate — nothing to compare"
+                )));
             }
-            println!("bench_gate: {}", gate(prev, fresh_fps, threshold)?);
-            Ok(())
+            gate(prev, fresh_fps, threshold).map(Outcome::Pass)
         }
-        "record" | "record-best" => {
-            // keep the hand-rolled JSONL line well-formed for any label
-            let label: String = args
-                .get(3)
-                .map(String::as_str)
-                .unwrap_or("")
-                .chars()
-                .filter(|c| *c != '"' && *c != '\\' && !c.is_control())
-                .collect();
+        "record" | "record-best" | "record-if-missing" => {
+            let label = args.get(3).map(String::as_str).unwrap_or("");
             let fresh = std::fs::read_to_string(fresh_path)
                 .map_err(|e| format!("read {fresh_path}: {e}"))?;
             let fps = extract_f64(&fresh, KEY)
                 .ok_or_else(|| format!("{fresh_path} has no numeric {KEY:?}"))?;
+            let traj = std::fs::read_to_string(traj_path).ok();
+            let fresh_threads = extract_f64(&fresh, "host_threads");
             if cmd == "record-best" {
-                let prev = std::fs::read_to_string(traj_path)
-                    .ok()
-                    .and_then(|t| last_record(&t).and_then(|l| extract_f64(l, KEY)));
+                // like `check`, compare within the machine class — a
+                // foreign-class record must neither block nor admit a
+                // rolling-baseline update
+                let prev = traj
+                    .as_deref()
+                    .and_then(|t| last_class_record(t, fresh_threads))
+                    .and_then(|l| extract_f64(l, KEY));
                 if let Some(prev) = prev {
                     if fps <= prev {
-                        println!(
-                            "bench_gate: {fps:.2} fps does not beat baseline {prev:.2} — \
+                        return Ok(Outcome::Pass(format!(
+                            "{fps:.2} fps does not beat baseline {prev:.2} — \
                              keeping the existing record"
-                        );
-                        return Ok(());
+                        )));
                     }
                 }
             }
-            let legacy = extract_f64(&fresh, "frames_per_sec_legacy").unwrap_or(0.0);
-            let speedup = extract_f64(&fresh, "plan_speedup").unwrap_or(0.0);
-            let threads = extract_f64(&fresh, "host_threads").unwrap_or(0.0);
-            let line = format!(
-                "{{\"bench\": \"sim_hotpath\", \"label\": \"{label}\", \
-                 \"host_threads\": {threads}, \"{KEY}\": {fps:.2}, \
-                 \"frames_per_sec_legacy\": {legacy:.2}, \"plan_speedup\": {speedup:.2}}}\n"
-            );
-            let mut traj = std::fs::read_to_string(traj_path).unwrap_or_default();
-            if !traj.is_empty() && !traj.ends_with('\n') {
-                traj.push('\n');
+            if cmd == "record-if-missing" {
+                if traj
+                    .as_deref()
+                    .is_some_and(|t| has_class_record(t, fresh_threads))
+                {
+                    return Ok(Outcome::Pass(format!(
+                        "{traj_path} already holds a numeric baseline for this \
+                         machine class — not recording"
+                    )));
+                }
             }
-            traj.push_str(&line);
-            std::fs::write(traj_path, traj).map_err(|e| format!("write {traj_path}: {e}"))?;
-            println!("bench_gate: recorded {fps:.2} fps to {traj_path}");
-            Ok(())
+            append_record(&fresh, traj_path, label).map(Outcome::Pass)
         }
-        other => Err(format!("unknown command {other:?} (use check|record|record-best)")),
+        other => Err(format!(
+            "unknown command {other:?} (use check|record|record-best|record-if-missing)"
+        )),
     }
 }
 
 fn main() -> ExitCode {
     match run() {
-        Ok(()) => ExitCode::SUCCESS,
+        Ok(Outcome::Pass(msg)) => {
+            println!("bench_gate: {msg}");
+            ExitCode::SUCCESS
+        }
+        Ok(Outcome::NoBaseline(msg)) => {
+            println!("bench_gate: SKIP (no baseline, exit {EXIT_NO_BASELINE}) — {msg}");
+            ExitCode::from(EXIT_NO_BASELINE)
+        }
+        Ok(Outcome::ClassSkip(msg)) => {
+            println!("bench_gate: SKIP (machine class, exit {EXIT_CLASS_SKIP}) — {msg}");
+            ExitCode::from(EXIT_CLASS_SKIP)
+        }
         Err(e) => {
             eprintln!("bench_gate: FAIL — {e}");
             ExitCode::FAILURE
@@ -204,26 +296,23 @@ mod tests {
     }
 
     #[test]
-    fn last_record_skips_blanks() {
-        assert_eq!(last_record("a\nb\n\n"), Some("b"));
-        assert_eq!(last_record("\n  \n"), None);
-        assert_eq!(last_record(""), None);
-    }
-
-    #[test]
-    fn gate_passes_without_baseline() {
-        assert!(gate(None, 50.0, 0.2).is_ok());
-        assert!(gate(Some(0.0), 50.0, 0.2).is_ok());
+    fn class_scan_skips_blanks_and_non_records() {
+        let t = "\n  \n{\"frames_per_sec_plan\": 10.0}\n\n";
+        let l = last_class_record(t, Some(8.0)).expect("numeric line found");
+        assert_eq!(extract_f64(l, KEY), Some(10.0));
+        assert!(last_class_record("\n  \n", Some(8.0)).is_none());
+        assert!(last_class_record("", None).is_none());
+        assert!(last_class_record("plain text\n", None).is_none());
     }
 
     #[test]
     fn gate_fails_only_past_threshold() {
         // 20% threshold on a 100 fps baseline: floor is 80
-        assert!(gate(Some(100.0), 81.0, 0.2).is_ok());
-        assert!(gate(Some(100.0), 80.0, 0.2).is_ok());
-        assert!(gate(Some(100.0), 79.9, 0.2).is_err());
+        assert!(gate(100.0, 81.0, 0.2).is_ok());
+        assert!(gate(100.0, 80.0, 0.2).is_ok());
+        assert!(gate(100.0, 79.9, 0.2).is_err());
         // improvements always pass
-        assert!(gate(Some(100.0), 140.0, 0.2).is_ok());
+        assert!(gate(100.0, 140.0, 0.2).is_ok());
     }
 
     #[test]
@@ -238,9 +327,46 @@ mod tests {
     #[test]
     fn gate_reads_jsonl_record_shape() {
         let line = r#"{"bench": "sim_hotpath", "label": "pr2", "host_threads": 8, "frames_per_sec_plan": 90.00, "frames_per_sec_legacy": 12.00, "plan_speedup": 7.50}"#;
-        let prev = last_record(line).and_then(|l| extract_f64(l, KEY));
-        assert_eq!(prev, Some(90.0));
+        let prev = last_class_record(line, Some(8.0))
+            .and_then(|l| extract_f64(l, KEY))
+            .unwrap();
+        assert_eq!(prev, 90.0);
         assert!(gate(prev, 75.0, 0.2).is_ok());
         assert!(gate(prev, 71.9, 0.2).is_err());
+    }
+
+    #[test]
+    fn check_scans_past_other_class_records() {
+        // mixed-class ledger: seed line, a CI record (2 threads), then a
+        // dev record (8 threads).  A 2-thread runner must gate against
+        // ITS class's record, not class-skip on the trailing dev line.
+        let ledger = concat!(
+            "{\"bench\": \"sim_hotpath\", \"label\": \"seed\", \"note\": \"no fps\"}\n",
+            "{\"bench\": \"sim_hotpath\", \"label\": \"ci\", \"host_threads\": 2, \"frames_per_sec_plan\": 40.00}\n",
+            "{\"bench\": \"sim_hotpath\", \"label\": \"dev\", \"host_threads\": 8, \"frames_per_sec_plan\": 400.00}\n",
+        );
+        let ci = last_class_record(ledger, Some(2.0)).expect("ci record found");
+        assert_eq!(extract_f64(ci, KEY), Some(40.0));
+        let dev = last_class_record(ledger, Some(8.0)).expect("dev record found");
+        assert_eq!(extract_f64(dev, KEY), Some(400.0));
+        // a class nothing matches gets no record at all
+        assert!(last_class_record(ledger, Some(16.0)).is_none());
+    }
+
+    #[test]
+    fn class_record_scan_sees_through_seed_lines() {
+        // the tracked seed line has no fps — it must NOT count as a
+        // numeric baseline
+        let seed_only = r#"{"bench": "sim_hotpath", "label": "seed", "note": "no numeric baseline"}"#;
+        assert!(!has_class_record(seed_only, Some(2.0)));
+        // a numeric record of the same class counts…
+        let with_ci = format!(
+            "{seed_only}\n{{\"bench\": \"sim_hotpath\", \"label\": \"ci\", \"host_threads\": 2, \"frames_per_sec_plan\": 40.00}}\n"
+        );
+        assert!(has_class_record(&with_ci, Some(2.0)));
+        // …but a different class does not
+        assert!(!has_class_record(&with_ci, Some(8.0)));
+        // unknown fresh class compares with anything numeric
+        assert!(has_class_record(&with_ci, None));
     }
 }

@@ -34,7 +34,8 @@ pub mod system;
 
 pub use cu::ControlUnit;
 pub use plan::{
-    CardShard, ExecutionPlan, LayerPlan, LayerShards, ModePlan, ShardPlan, ShardPolicy, WorkUnit,
+    CardShard, ExecutionPlan, LayerPlan, LayerShards, ModePlan, ShardPlan, ShardPlanCache,
+    WorkUnit,
 };
 pub use sa::{SaEngine, SimStats, TileScratch};
 pub use system::{BinArraySystem, FrameExecutor, FrameStats, ShardRun, ShardTile};

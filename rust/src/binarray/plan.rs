@@ -16,6 +16,7 @@
 //! feature-map copies happen on the frame path.
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use crate::artifacts::{LayerKind, QuantNetwork};
 use crate::isa::Program;
@@ -185,39 +186,6 @@ fn mode_plan(
     ModePlan { m_run, layers }
 }
 
-/// Cross-card sharding policy: how the coordinator maps one frame onto
-/// the worker pool.
-///
-/// `Off` is PR 1's throughput path (whole frames batch onto single
-/// cards); `PerFrame(n)` is the latency path — every frame's row tiles
-/// scatter over `n` worker cards and gather between layers, so one
-/// frame's wall-clock shrinks with the pool instead of only the queue's.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum ShardPolicy {
-    /// Whole frames go to single cards (dynamic batching only).
-    #[default]
-    Off,
-    /// Scatter each frame's row tiles over `n` worker cards.
-    PerFrame(usize),
-}
-
-impl ShardPolicy {
-    /// Number of cards a frame spreads over (1 when sharding is off).
-    pub fn cards(&self) -> usize {
-        match self {
-            ShardPolicy::Off => 1,
-            ShardPolicy::PerFrame(n) => (*n).max(1),
-        }
-    }
-
-    /// True when frames take the scatter/gather path (even `PerFrame(1)`,
-    /// which is the degenerate single-card shard used to cross-check the
-    /// two paths against each other).
-    pub fn is_sharded(&self) -> bool {
-        matches!(self, ShardPolicy::PerFrame(_))
-    }
-}
-
 /// One card's sub-schedule for one layer: the work units this card
 /// executes, still organized by the layer's logical-SA groups (a card is
 /// a full BinArray instance — its groups run in parallel on its SAs, so
@@ -331,6 +299,40 @@ impl ShardPlan {
             None => &self.modes[0],
             Some(m) => &self.modes[m.clamp(1, self.max_m)],
         }
+    }
+}
+
+/// [`ShardPlan`]s for every card count `1..=max_cards`, built once at
+/// coordinator start.  Hybrid dispatch shards each frame over *however
+/// many cards are currently free* — the width is only known at lease
+/// time, so the router must be able to pick the matching partition in
+/// O(1) instead of re-deriving it on the frame path.
+#[derive(Clone, Debug)]
+pub struct ShardPlanCache {
+    /// Index `c - 1` holds the partition over `c` cards.
+    plans: Vec<Arc<ShardPlan>>,
+}
+
+impl ShardPlanCache {
+    /// Build the partition for every width up to `max_cards` (the worker
+    /// pool size — a lease can never be wider than the pool).
+    pub fn new(plan: &ExecutionPlan, max_cards: usize) -> Self {
+        Self {
+            plans: (1..=max_cards.max(1))
+                .map(|c| Arc::new(ShardPlan::new(plan, c)))
+                .collect(),
+        }
+    }
+
+    /// Widest partition available (= the pool size the cache was built
+    /// for).
+    pub fn max_cards(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// The shared partition for `n` cards, clamped to `1..=max_cards`.
+    pub fn cards(&self, n: usize) -> &Arc<ShardPlan> {
+        &self.plans[n.clamp(1, self.plans.len()) - 1]
     }
 }
 
@@ -559,12 +561,24 @@ mod tests {
     }
 
     #[test]
-    fn shard_policy_cards() {
-        assert_eq!(ShardPolicy::Off.cards(), 1);
-        assert_eq!(ShardPolicy::PerFrame(4).cards(), 4);
-        assert_eq!(ShardPolicy::PerFrame(0).cards(), 1);
-        assert!(!ShardPolicy::Off.is_sharded());
-        assert!(ShardPolicy::PerFrame(1).is_sharded());
+    fn shard_plan_cache_covers_every_width() {
+        let mut rng = Xoshiro256::new(4);
+        let net = cnn_a_quant(&mut rng, 2);
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(ArrayConfig::new(1, 8, 2), &net, &prog);
+        let cache = ShardPlanCache::new(&plan, 4);
+        assert_eq!(cache.max_cards(), 4);
+        for n in 1..=4usize {
+            assert_eq!(cache.cards(n).n_cards, n);
+        }
+        // out-of-range widths clamp instead of panicking (a lease is
+        // never wider than the pool, but the lookup must stay total)
+        assert_eq!(cache.cards(0).n_cards, 1);
+        assert_eq!(cache.cards(9).n_cards, 4);
+        // degenerate cache still answers
+        let one = ShardPlanCache::new(&plan, 0);
+        assert_eq!(one.max_cards(), 1);
+        assert_eq!(one.cards(3).n_cards, 1);
     }
 
     #[test]

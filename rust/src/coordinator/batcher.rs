@@ -1,5 +1,5 @@
 //! Dynamic batcher: max-batch-size / max-delay admission, one lane per
-//! accuracy mode.
+//! (accuracy mode × dispatch class).
 //!
 //! Mirrors the vLLM-style continuous-batching idea scaled to this system:
 //! the accelerator processes one frame at a time, so a "batch" is a run
@@ -7,13 +7,14 @@
 //! ping-pong feature buffer (§IV-D) makes consecutive frames free of DMA
 //! stalls, which is exactly what batching buys here.  Requests of the
 //! same [`Mode`] are grouped so the accelerator doesn't thrash its
-//! `m_run` configuration between frames.
+//! `m_run` configuration between frames, and requests of different
+//! [`DispatchClass`]es never share a batch — the two lanes have opposite
+//! admission policies (see [`BatchPolicy::effective`]).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::binarray::plan::ShardPolicy;
-
+use super::route::DispatchClass;
 use super::{Mode, Request};
 
 /// Admission policy.
@@ -35,47 +36,72 @@ impl Default for BatchPolicy {
 }
 
 impl BatchPolicy {
-    /// The policy the router actually runs under `shard`.
+    /// The policy a dispatch class actually runs under.
     ///
-    /// Batching and sharding occupy the two ends of the
-    /// latency-vs-throughput trade: `Off` accumulates frames so one card
-    /// runs them back-to-back (amortized DMA, maximal throughput), while
-    /// `PerFrame` spends the whole pool on each frame's latency — so a
-    /// sharded router cuts every frame immediately (batch = frame)
-    /// instead of letting it age toward `max_delay` in the queue.
-    pub fn effective(self, shard: ShardPolicy) -> BatchPolicy {
-        if shard.is_sharded() {
-            BatchPolicy {
+    /// The two lanes occupy the two ends of the latency-vs-throughput
+    /// trade: the batching lane accumulates frames so one card runs them
+    /// back-to-back (amortized DMA, maximal throughput), while the shard
+    /// lane spends leased cards on each frame's latency — so shard-class
+    /// requests cut immediately (batch = frame) instead of aging toward
+    /// `max_delay` in the queue.
+    pub fn effective(self, class: DispatchClass) -> BatchPolicy {
+        match class {
+            DispatchClass::Batch => self,
+            DispatchClass::Shard => BatchPolicy {
                 max_batch: 1,
                 max_delay: Duration::ZERO,
-            }
-        } else {
-            self
+            },
         }
     }
 }
 
-/// A cut batch, ready for a worker.  The worker borrows the requests'
+/// A cut batch, ready for a worker (class `Batch`) or for the shard
+/// orchestrator (class `Shard`).  The worker borrows the requests'
 /// images straight into [`crate::binarray::BinArraySystem::run_frames`]
 /// after validating them, so a cut batch flows to the accelerator
 /// without copying a single frame.
 #[derive(Debug)]
 pub struct Batch {
     pub mode: Mode,
+    pub class: DispatchClass,
     pub requests: Vec<Request>,
 }
 
-/// Two-lane (per-mode) FIFO batcher.
+/// Number of admission lanes: 2 accuracy modes × 2 dispatch classes.
+const LANES: usize = 4;
+
+/// Four-lane (mode × class) FIFO batcher.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    lanes: [VecDeque<Request>; 2],
+    lanes: [VecDeque<Request>; LANES],
 }
 
-fn lane(mode: Mode) -> usize {
-    match mode {
+fn lane(mode: Mode, class: DispatchClass) -> usize {
+    let m = match mode {
         Mode::HighAccuracy => 0,
         Mode::HighThroughput => 1,
+    };
+    let c = match class {
+        DispatchClass::Batch => 0,
+        DispatchClass::Shard => 2,
+    };
+    m + c
+}
+
+fn lane_mode(i: usize) -> Mode {
+    if i % 2 == 0 {
+        Mode::HighAccuracy
+    } else {
+        Mode::HighThroughput
+    }
+}
+
+fn lane_class(i: usize) -> DispatchClass {
+    if i < 2 {
+        DispatchClass::Batch
+    } else {
+        DispatchClass::Shard
     }
 }
 
@@ -83,33 +109,41 @@ impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
         Self {
             policy,
-            lanes: [VecDeque::new(), VecDeque::new()],
+            lanes: std::array::from_fn(|_| VecDeque::new()),
         }
     }
 
+    /// Queue a request on its (mode, class) lane.  The router stamps
+    /// `class` at admission; an unstamped request defaults to the
+    /// batching lane.
     pub fn push(&mut self, req: Request) {
-        self.lanes[lane(req.mode)].push_back(req);
+        let class = req.class.unwrap_or(DispatchClass::Batch);
+        self.lanes[lane(req.mode, class)].push_back(req);
     }
 
     pub fn pending(&self) -> usize {
         self.lanes.iter().map(VecDeque::len).sum()
     }
 
-    /// Cut the next batch if the policy allows: a lane is ripe when it has
-    /// `max_batch` requests or its oldest request has waited `max_delay`.
-    /// The lane with the older head wins (FIFO fairness across modes).
+    /// Cut the next batch if some lane's policy allows: a lane is ripe
+    /// when it holds its class's `max_batch` requests or its oldest
+    /// request has waited its class's `max_delay` (shard lanes are ripe
+    /// the moment they are non-empty).  The lane with the older head
+    /// wins (FIFO fairness across modes and classes).
     pub fn cut(&mut self, now: Instant) -> Option<Batch> {
-        let ripe = |q: &VecDeque<Request>| -> bool {
-            q.len() >= self.policy.max_batch
+        let ripe = |i: usize| -> bool {
+            let eff = self.policy.effective(lane_class(i));
+            let q = &self.lanes[i];
+            q.len() >= eff.max_batch
                 || q.front()
-                    .map(|r| now.duration_since(r.submitted) >= self.policy.max_delay)
+                    .map(|r| now.duration_since(r.submitted) >= eff.max_delay)
                     .unwrap_or(false)
         };
         let head_age = |q: &VecDeque<Request>| q.front().map(|r| r.submitted);
 
         let mut pick: Option<usize> = None;
-        for i in 0..2 {
-            if ripe(&self.lanes[i]) {
+        for i in 0..LANES {
+            if ripe(i) {
                 pick = match pick {
                     None => Some(i),
                     Some(j) => {
@@ -124,21 +158,31 @@ impl Batcher {
             }
         }
         let i = pick?;
-        let n = self.lanes[i].len().min(self.policy.max_batch);
+        let class = lane_class(i);
+        let n = self.lanes[i]
+            .len()
+            .min(self.policy.effective(class).max_batch);
         let requests: Vec<Request> = self.lanes[i].drain(..n).collect();
-        let mode = requests[0].mode;
-        Some(Batch { mode, requests })
+        Some(Batch {
+            mode: lane_mode(i),
+            class,
+            requests,
+        })
     }
 
-    /// Cut whatever is left (drain at shutdown).
+    /// Cut whatever is left (drain at shutdown), respecting each lane's
+    /// effective batch size.
     pub fn flush(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        for i in 0..2 {
+        for i in 0..LANES {
+            let class = lane_class(i);
+            let max = self.policy.effective(class).max_batch;
             while !self.lanes[i].is_empty() {
-                let n = self.lanes[i].len().min(self.policy.max_batch);
+                let n = self.lanes[i].len().min(max);
                 let requests: Vec<Request> = self.lanes[i].drain(..n).collect();
                 out.push(Batch {
-                    mode: requests[0].mode,
+                    mode: lane_mode(i),
+                    class,
                     requests,
                 });
             }
@@ -156,7 +200,15 @@ mod tests {
             id,
             image: vec![],
             mode,
+            class: Some(DispatchClass::Batch),
             submitted: at,
+        }
+    }
+
+    fn shard_req(id: u64, mode: Mode, at: Instant) -> Request {
+        Request {
+            class: Some(DispatchClass::Shard),
+            ..req(id, mode, at)
         }
     }
 
@@ -173,6 +225,7 @@ mod tests {
         let batch = b.cut(t0).expect("3 requests is a full batch");
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(batch.requests[0].id, 0);
+        assert_eq!(batch.class, DispatchClass::Batch);
         assert!(b.cut(t0).is_none(), "2 leftovers, not ripe yet");
         assert_eq!(b.pending(), 2);
     }
@@ -210,6 +263,58 @@ mod tests {
     }
 
     #[test]
+    fn classes_never_mix() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_secs(100),
+        });
+        let t0 = Instant::now();
+        b.push(req(1, Mode::HighAccuracy, t0));
+        b.push(shard_req(2, Mode::HighAccuracy, t0));
+        b.push(req(3, Mode::HighAccuracy, t0));
+        // the shard lane is ripe immediately; the batch lane is not
+        let first = b.cut(t0).expect("shard frame cuts instantly");
+        assert_eq!(first.class, DispatchClass::Shard);
+        assert_eq!(first.requests.len(), 1);
+        assert_eq!(first.requests[0].id, 2);
+        assert!(b.cut(t0).is_none(), "batch lane still accumulating");
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn shard_lane_cuts_per_frame() {
+        // even a torrent of shard requests cuts one frame per batch
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 16,
+            max_delay: Duration::from_secs(1),
+        });
+        let eff = b.policy.effective(DispatchClass::Shard);
+        assert_eq!(eff.max_batch, 1);
+        assert_eq!(eff.max_delay, Duration::ZERO);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(shard_req(i, Mode::HighAccuracy, t0));
+        }
+        for want in [0u64, 1, 2] {
+            let batch = b.cut(t0).expect("frame cut without delay");
+            assert_eq!(batch.requests.len(), 1);
+            assert_eq!(batch.requests[0].id, want);
+        }
+        assert!(b.cut(t0).is_none());
+    }
+
+    #[test]
+    fn batch_class_policy_is_unchanged() {
+        let policy = BatchPolicy {
+            max_batch: 16,
+            max_delay: Duration::from_secs(1),
+        };
+        let eff = policy.effective(DispatchClass::Batch);
+        assert_eq!(eff.max_batch, 16);
+        assert_eq!(eff.max_delay, Duration::from_secs(1));
+    }
+
+    #[test]
     fn fifo_across_lanes_oldest_head_first() {
         let mut b = Batcher::new(BatchPolicy {
             max_batch: 8,
@@ -223,21 +328,15 @@ mod tests {
     }
 
     #[test]
-    fn sharded_policy_cuts_per_frame() {
-        let policy = BatchPolicy {
-            max_batch: 16,
-            max_delay: Duration::from_secs(1),
-        };
-        assert_eq!(policy.effective(ShardPolicy::Off).max_batch, 16);
-        let eff = policy.effective(ShardPolicy::PerFrame(4));
-        assert_eq!(eff.max_batch, 1);
-        assert_eq!(eff.max_delay, Duration::ZERO);
-        // a single request is ripe immediately under the sharded policy
-        let mut b = Batcher::new(eff);
+    fn unstamped_requests_default_to_the_batch_lane() {
+        let mut b = Batcher::new(BatchPolicy::default());
         let t0 = Instant::now();
-        b.push(req(7, Mode::HighAccuracy, t0));
-        let batch = b.cut(t0).expect("frame cut without delay");
-        assert_eq!(batch.requests.len(), 1);
+        b.push(Request {
+            class: None,
+            ..req(9, Mode::HighAccuracy, t0)
+        });
+        let batch = b.cut(t0 + Duration::from_secs(1)).expect("aged out");
+        assert_eq!(batch.class, DispatchClass::Batch);
     }
 
     #[test]
@@ -250,8 +349,15 @@ mod tests {
         for i in 0..5 {
             b.push(req(i, Mode::HighAccuracy, t0));
         }
+        b.push(shard_req(5, Mode::HighAccuracy, t0));
+        b.push(shard_req(6, Mode::HighThroughput, t0));
         let batches = b.flush();
-        assert_eq!(batches.len(), 3); // 2 + 2 + 1
+        // 2 + 2 + 1 batch-class, 1 + 1 shard-class singles
+        assert_eq!(batches.len(), 5);
+        assert!(batches
+            .iter()
+            .filter(|x| x.class == DispatchClass::Shard)
+            .all(|x| x.requests.len() == 1));
         assert_eq!(b.pending(), 0);
     }
 }

@@ -66,6 +66,24 @@ pub struct Metrics {
     pub correct: u64,
     /// Requests with labels.
     pub labelled: u64,
+    /// Requests admitted into the whole-frame batching lane.
+    pub routed_batch: u64,
+    /// Requests admitted into the scatter/gather shard lane.
+    pub routed_shard: u64,
+    /// Card leases granted to the shard orchestrator.
+    pub shard_leases: u64,
+    /// Cards granted across all leases (`/ shard_leases` = mean scatter
+    /// width actually achieved under the prevailing batch-lane load).
+    pub shard_cards_granted: u64,
+    /// Cards the shard lane asked for but the batch lane was holding at
+    /// grant time — how much scatter width mixed traffic "stole".
+    pub shard_cards_stolen: u64,
+    /// Wall time the batching lane spent inside the simulator (its share
+    /// of `sim_wall` — lane occupancy).
+    pub batch_wall: Duration,
+    /// Wall time the shard lane spent in scatter/gather frames (its
+    /// share of `sim_wall` — lane occupancy).
+    pub shard_wall: Duration,
 }
 
 impl Metrics {
@@ -83,6 +101,13 @@ impl Metrics {
         self.sim_wall += other.sim_wall;
         self.correct += other.correct;
         self.labelled += other.labelled;
+        self.routed_batch += other.routed_batch;
+        self.routed_shard += other.routed_shard;
+        self.shard_leases += other.shard_leases;
+        self.shard_cards_granted += other.shard_cards_granted;
+        self.shard_cards_stolen += other.shard_cards_stolen;
+        self.batch_wall += other.batch_wall;
+        self.shard_wall += other.shard_wall;
     }
 
     /// Simulated-accelerator throughput (frames / simulated second at
@@ -114,10 +139,18 @@ impl Metrics {
         self.completed as f64 / self.batches as f64
     }
 
+    /// Mean cards per shard-lane lease (0 when the lane never leased).
+    pub fn mean_lease(&self) -> f64 {
+        if self.shard_leases == 0 {
+            return 0.0;
+        }
+        self.shard_cards_granted as f64 / self.shard_leases as f64
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "req={}{} batches={} (avg {:.1}/batch) | sim {:.1} fps @400MHz | wall {:.1} fps | p50 {:?} p99 {:?}{}",
+            "req={}{} batches={} (avg {:.1}/batch) | sim {:.1} fps @400MHz | wall {:.1} fps | p50 {:?} p99 {:?}{}{}",
             self.completed,
             if self.failed > 0 {
                 format!(" (+{} failed)", self.failed)
@@ -133,8 +166,29 @@ impl Metrics {
             match self.accuracy() {
                 Some(a) => format!(" | acc {:.2}%", 100.0 * a),
                 None => String::new(),
-            }
+            },
+            self.lane_summary(),
         )
+    }
+
+    /// Per-lane fragment of [`Self::summary`] (empty before any request
+    /// is routed, so single-path reports stay unchanged).
+    fn lane_summary(&self) -> String {
+        if self.routed_batch + self.routed_shard == 0 {
+            return String::new();
+        }
+        let mut s = format!(
+            " | lanes batch={} shard={}",
+            self.routed_batch, self.routed_shard
+        );
+        if self.shard_leases > 0 {
+            s.push_str(&format!(
+                " (lease {:.1} cards, {} stolen)",
+                self.mean_lease(),
+                self.shard_cards_stolen
+            ));
+        }
+        s
     }
 }
 
@@ -191,6 +245,13 @@ mod tests {
             sim_cycles: 200,
             correct: 2,
             labelled: 3,
+            routed_batch: 2,
+            routed_shard: 1,
+            shard_leases: 1,
+            shard_cards_granted: 3,
+            shard_cards_stolen: 1,
+            batch_wall: Duration::from_millis(4),
+            shard_wall: Duration::from_millis(6),
             ..Default::default()
         };
         a.merge(&b);
@@ -199,5 +260,24 @@ mod tests {
         assert_eq!(a.batches, 3);
         assert_eq!(a.sim_cycles, 300);
         assert_eq!(a.accuracy(), Some(2.0 / 3.0));
+        assert_eq!(a.routed_batch, 2);
+        assert_eq!(a.routed_shard, 1);
+        assert_eq!(a.shard_leases, 1);
+        assert_eq!(a.mean_lease(), 3.0);
+        assert_eq!(a.batch_wall, Duration::from_millis(4));
+        assert_eq!(a.shard_wall, Duration::from_millis(6));
+    }
+
+    #[test]
+    fn lane_summary_only_after_routing() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("lanes"));
+        m.routed_batch = 3;
+        m.routed_shard = 2;
+        assert!(m.summary().contains("lanes batch=3 shard=2"));
+        m.shard_leases = 2;
+        m.shard_cards_granted = 3;
+        m.shard_cards_stolen = 1;
+        assert!(m.summary().contains("lease 1.5 cards, 1 stolen"));
     }
 }

@@ -6,15 +6,21 @@
 //! collect results (ping-pong buffering overlaps acquisition with
 //! inference).  This module is that CPU role as a serving stack:
 //!
+//! * [`route`] — per-request dispatch routing: every request is admitted
+//!   under a [`DispatchClass`] (explicit override or [`RoutePolicy`]
+//!   decision from frame size and queue depth), and both dispatch lanes
+//!   run concurrently over one worker pool;
 //! * [`batcher`] — dynamic batching with a max-batch / max-delay policy,
-//!   one queue per accuracy mode;
-//! * [`server`] — a worker pool where each worker owns one simulated
-//!   BinArray instance (one card), pulls batches, and runs frames
-//!   back-to-back exactly like the ping-pong DMA pipeline — or, under
-//!   [`ShardPolicy::PerFrame`], executes scattered row-tile shards of a
-//!   single frame that the shard orchestrator gathers between layers;
+//!   one queue per (accuracy mode × dispatch class);
+//! * [`server`] — the router/arbiter plus a worker pool where each worker
+//!   owns one simulated BinArray instance (one card).  Batch-class
+//!   requests run whole frames back-to-back exactly like the ping-pong
+//!   DMA pipeline; shard-class requests scatter row tiles over cards the
+//!   orchestrator *leases* from the same pool and gathers between
+//!   layers;
 //! * [`metrics`] — latency/throughput accounting (wall-clock of the
-//!   simulator *and* simulated 400 MHz accelerator time).
+//!   simulator *and* simulated 400 MHz accelerator time), including
+//!   per-lane routing/leasing counters.
 //!
 //! Runtime accuracy/throughput switching (§IV-D): every request carries a
 //! [`Mode`]; the worker flips the simulated accelerator's `m_run` between
@@ -26,11 +32,12 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod route;
 pub mod server;
 
-pub use crate::binarray::plan::ShardPolicy;
 pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use metrics::{LatencyStats, Metrics};
+pub use route::{DispatchClass, RoutePolicy};
 pub use server::{
     Coordinator, CoordinatorConfig, InferError, Reply, ReplyResult, SubmitHandle,
 };
@@ -62,6 +69,10 @@ pub struct Request {
     /// int8 image, row-major HWC, at the network's input binary point.
     pub image: Vec<i8>,
     pub mode: Mode,
+    /// Dispatch lane: the caller's explicit override, or — stamped by
+    /// the router at admission — the [`RoutePolicy`] decision.  Stamped
+    /// exactly once; never reassigned afterwards.
+    pub class: Option<DispatchClass>,
     pub submitted: std::time::Instant,
 }
 

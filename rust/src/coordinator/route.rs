@@ -1,0 +1,157 @@
+//! Per-request dispatch routing — the policy half of hybrid dispatch.
+//!
+//! BinArray's headline property is that throughput vs. latency is a
+//! *runtime* choice (the paper's three design parameters plus §IV-D's
+//! dynamic accuracy switching).  The coordinator mirrors that at the
+//! request level: every [`crate::coordinator::Request`] is assigned a
+//! [`DispatchClass`] when it is admitted — either an explicit override
+//! from the caller, or a [`RoutePolicy`] decision from what the router
+//! can observe (frame size, current queue depth) — and the two dispatch
+//! lanes run concurrently over one worker pool:
+//!
+//! * [`DispatchClass::Batch`] — the throughput lane: whole frames are
+//!   batched back-to-back onto single cards (amortized DMA, pool
+//!   throughput scales with workers);
+//! * [`DispatchClass::Shard`] — the latency lane: the frame's row tiles
+//!   scatter over the cards the shard orchestrator can lease right now
+//!   and gather between layers (frame latency shrinks with cards).
+//!
+//! Routing is **total and stable**: `classify` is a pure function of its
+//! inputs (every `(frame_len, queue_depth)` lands in exactly one lane),
+//! the router stamps the class once at admission and never re-examines
+//! it, and an explicit override is never reassigned (see
+//! [`RoutePolicy::route`]).  Whatever the lane, replies stay
+//! bit-identical to [`crate::golden::forward`] — routing moves *where* a
+//! frame computes, never *what* it computes.
+
+/// Which dispatch lane serves a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DispatchClass {
+    /// Whole-frame dynamic batching onto a single card (throughput lane).
+    Batch,
+    /// Cross-card row-tile scatter/gather per frame (latency lane).
+    Shard,
+}
+
+/// How the router assigns a [`DispatchClass`] to requests that don't
+/// carry an explicit override.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Every request takes the batching lane (the pre-hybrid
+    /// "`ShardPolicy::Off`" behavior).
+    #[default]
+    BatchOnly,
+    /// Every request takes the shard lane (the pre-hybrid dedicated
+    /// "`ShardPolicy::PerFrame`" behavior).
+    ShardOnly,
+    /// Route by observed load: a frame big enough for sharding to pay
+    /// off (`frame_len ≥ shard_min_len`) goes to the shard lane while
+    /// the queue is shallow (`queue_depth < deep_queue`); everything
+    /// else batches.  A deep
+    /// queue means the server is in a throughput regime — spending the
+    /// whole pool on one frame's latency while others wait would hurt
+    /// aggregate latency, so large frames fall back to batching there.
+    Adaptive {
+        /// Smallest frame (in input words) worth scattering: below this
+        /// the per-layer scatter/gather traffic outweighs the row-tile
+        /// parallelism.
+        shard_min_len: usize,
+        /// Queue depth at which the router stops sharding (`0` = never
+        /// shard — the queue is always considered deep).
+        deep_queue: usize,
+    },
+}
+
+impl RoutePolicy {
+    /// Pick the lane for a request without an explicit class.  Pure and
+    /// total: the same `(frame_len, queue_depth)` always yields the same
+    /// single lane.
+    pub fn classify(&self, frame_len: usize, queue_depth: usize) -> DispatchClass {
+        match *self {
+            RoutePolicy::BatchOnly => DispatchClass::Batch,
+            RoutePolicy::ShardOnly => DispatchClass::Shard,
+            RoutePolicy::Adaptive {
+                shard_min_len,
+                deep_queue,
+            } => {
+                if frame_len >= shard_min_len && queue_depth < deep_queue {
+                    DispatchClass::Shard
+                } else {
+                    DispatchClass::Batch
+                }
+            }
+        }
+    }
+
+    /// The class a request is admitted under: the explicit override when
+    /// the caller set one (never reassigned, whatever the policy says),
+    /// otherwise [`Self::classify`].
+    pub fn route(
+        &self,
+        explicit: Option<DispatchClass>,
+        frame_len: usize,
+        queue_depth: usize,
+    ) -> DispatchClass {
+        explicit.unwrap_or_else(|| self.classify(frame_len, queue_depth))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_policies_ignore_signals() {
+        for len in [0usize, 1, 6912, usize::MAX] {
+            for depth in [0usize, 7, usize::MAX] {
+                assert_eq!(RoutePolicy::BatchOnly.classify(len, depth), DispatchClass::Batch);
+                assert_eq!(RoutePolicy::ShardOnly.classify(len, depth), DispatchClass::Shard);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_routes_large_frames_until_queue_deepens() {
+        let p = RoutePolicy::Adaptive {
+            shard_min_len: 1000,
+            deep_queue: 4,
+        };
+        assert_eq!(p.classify(999, 0), DispatchClass::Batch, "small frame");
+        assert_eq!(p.classify(1000, 0), DispatchClass::Shard, "large, idle");
+        assert_eq!(p.classify(1000, 3), DispatchClass::Shard, "large, shallow");
+        assert_eq!(p.classify(1000, 4), DispatchClass::Batch, "large, deep");
+        // deep_queue = 0: the queue is always deep — sharding never fires
+        let never = RoutePolicy::Adaptive {
+            shard_min_len: 0,
+            deep_queue: 0,
+        };
+        assert_eq!(never.classify(usize::MAX, 0), DispatchClass::Batch);
+    }
+
+    #[test]
+    fn explicit_override_is_never_reassigned() {
+        let policies = [
+            RoutePolicy::BatchOnly,
+            RoutePolicy::ShardOnly,
+            RoutePolicy::Adaptive {
+                shard_min_len: 64,
+                deep_queue: 2,
+            },
+        ];
+        for p in policies {
+            for len in [0usize, 64, 100_000] {
+                for depth in [0usize, 2, 50] {
+                    assert_eq!(
+                        p.route(Some(DispatchClass::Batch), len, depth),
+                        DispatchClass::Batch
+                    );
+                    assert_eq!(
+                        p.route(Some(DispatchClass::Shard), len, depth),
+                        DispatchClass::Shard
+                    );
+                    assert_eq!(p.route(None, len, depth), p.classify(len, depth));
+                }
+            }
+        }
+    }
+}

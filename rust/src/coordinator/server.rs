@@ -1,40 +1,42 @@
-//! The coordinator proper: router thread + worker pool over simulated
-//! BinArray instances, with an optional cross-card scatter/gather path.
+//! The coordinator proper: a routing/arbitration thread plus a worker
+//! pool of simulated BinArray instances, serving two dispatch lanes
+//! concurrently over the same cards.
 //!
 //! Topology (one process, std threads — the request path has no Python
 //! and no async runtime dependency):
 //!
 //! ```text
-//!   submit() ──mpsc──▶ router thread ──(Batcher)──▶ worker queue ─┬▶ worker 0 (BinArraySystem)
-//!                                                                 ├▶ worker 1 (BinArraySystem)
-//!                                                                 └▶ ...
-//!   replies ◀───────────── per-request mpsc channels ◀────────────┘
-//!
-//!   — with ShardPolicy::PerFrame(n) the router instead hands each frame
-//!     to the shard orchestrator, which scatters row tiles over the same
-//!     worker queue and gathers them layer by layer:
-//!
-//!   submit() ──▶ router ──(per-frame cut)──▶ orchestrator (CU + frame fbuf)
-//!                                         │  per layer: scatter n tile jobs
-//!                                         ▼
-//!                                   worker queue ─┬▶ worker 0: run_shard ─┐
-//!                                                 └▶ worker 1: run_shard ─┤
-//!                                         ▲                              │
-//!                                         └── gather tiles into pong ◀───┘
+//!   submit() ──mpsc──▶ router thread (stamps DispatchClass, batches,
+//!            ▲         arbitrates cards between the lanes)
+//!            │              │
+//!   WorkerDone/Lease/       ├─ Batch lane: whole batches to free cards
+//!   Unlease notifications   │      ─▶ worker 0 (BinArraySystem) ─▶ replies
+//!            │              │      ─▶ worker 1 ...
+//!            │              └─ Shard lane: frames to the orchestrator
+//!            │                     │ lease k free cards from the router
+//!            └─────────────────────┤ per layer: scatter k tile jobs to
+//!                                  │   the *leased* cards' queues,
+//!                                  │   gather tiles into the pong half
+//!                                  └ return the lease, answer the caller
 //! ```
 //!
 //! Each worker owns a full simulated accelerator (its own weight BRAM and
 //! feature buffers — one "card").  Mode switches (§IV-D) happen per batch
 //! by flipping the card's `m_run`.
 //!
-//! The two dispatch paths trade latency against throughput: the batching
-//! path keeps every card busy on *different* frames (throughput scales
-//! with workers, per-frame latency is one card's), while the shard path
-//! spends the whole pool on *one* frame's row tiles (latency shrinks with
-//! workers, at the cost of per-layer scatter/gather traffic).
+//! The two lanes trade latency against throughput per *request*, not per
+//! coordinator: the batching lane keeps cards busy on *different* frames
+//! (throughput scales with workers, per-frame latency is one card's),
+//! while the shard lane spends *leased* cards on one frame's row tiles
+//! (latency shrinks with the lease width).  The router is the arbiter:
+//! cards are leased to the shard orchestrator only while they are not
+//! running a batch, and a pending lease has priority over queued batches
+//! when a card frees up (the shard lane is the latency lane).  Whatever
+//! the lane, replies are bit-identical to [`golden::forward`].
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -43,8 +45,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::artifacts::QuantNetwork;
 use crate::binarray::{
-    ArrayConfig, BinArraySystem, ControlUnit, ExecutionPlan, FrameStats, ShardPlan, ShardPolicy,
-    ShardRun, SimStats,
+    ArrayConfig, BinArraySystem, ControlUnit, ExecutionPlan, FrameStats, ShardPlan,
+    ShardPlanCache, ShardRun, SimStats,
 };
 use crate::golden;
 use crate::isa::{compile_network, Program};
@@ -52,6 +54,7 @@ use crate::tensor::scatter_tile;
 
 use super::batcher::{Batch, BatchPolicy, Batcher};
 use super::metrics::Metrics;
+use super::route::{DispatchClass, RoutePolicy};
 use super::{Mode, Request};
 
 /// A completed inference.
@@ -92,14 +95,17 @@ pub type ReplyResult = std::result::Result<Reply, InferError>;
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub array: ArrayConfig,
-    /// Number of worker cards (each a full BinArray instance).  Grown to
-    /// at least `shard.cards()` so sharded frames never queue on a pool
-    /// narrower than their scatter width.
+    /// Worker cards in the pool (each a full BinArray instance), shared
+    /// by both dispatch lanes.
     pub workers: usize,
     pub policy: BatchPolicy,
-    /// Cross-card sharding: `Off` batches whole frames onto single cards;
-    /// `PerFrame(n)` scatters every frame's row tiles over `n` cards.
-    pub shard: ShardPolicy,
+    /// How requests *without* an explicit [`DispatchClass`] override are
+    /// routed (explicit overrides are always honored).
+    pub route: RoutePolicy,
+    /// Cap on the cards one shard-lane frame may lease (`0` = the whole
+    /// pool).  A frame's actual scatter width is `min(max_shard_cards,
+    /// cards not busy in the batch lane, pool size)`, decided per lease.
+    pub max_shard_cards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -108,13 +114,31 @@ impl Default for CoordinatorConfig {
             array: ArrayConfig::new(1, 8, 2),
             workers: 1,
             policy: BatchPolicy::default(),
-            shard: ShardPolicy::Off,
+            route: RoutePolicy::BatchOnly,
+            max_shard_cards: 0,
         }
     }
 }
 
+/// Reply channels of one cut batch, in request order.
+type ReplyTxs = Vec<Sender<ReplyResult>>;
+
 enum RouterMsg {
     Submit(Request, Sender<ReplyResult>),
+    /// A worker finished a batch and is free again.
+    WorkerDone(usize),
+    /// The shard orchestrator wants up to `want` cards.
+    Lease {
+        want: usize,
+        reply: Sender<Vec<usize>>,
+    },
+    /// The orchestrator returns leased cards.
+    Unlease(Vec<usize>),
+    /// The orchestrator discovered a leased card is dead (its channel is
+    /// gone): drop it from the pool instead of returning it to `free`.
+    Retire(usize),
+    /// The orchestrator has drained its queue (shutdown handshake).
+    OrchDrained,
     Shutdown,
 }
 
@@ -122,10 +146,18 @@ enum RouterMsg {
 struct ShardJob {
     m_run: Option<usize>,
     layer: usize,
-    /// Card index into the [`ShardPlan`] (not a worker id: any idle
-    /// worker may pick the job up; the index only selects the
-    /// sub-schedule).
+    /// Card index into the lease/[`ShardPlan`] (not a worker id — the
+    /// orchestrator maps card `c` onto the `c`-th *leased* worker).
     card: usize,
+    /// Host threads this card may spend on the job: the lease width
+    /// bounds how many cards compute concurrently, so each card gets its
+    /// share of the host cores (the full width on every card would
+    /// oversubscribe the host with exactly the thread thrash the latency
+    /// path exists to avoid).
+    intra_threads: usize,
+    /// The partition matching this frame's lease width, from the
+    /// [`ShardPlanCache`].
+    shards: Arc<ShardPlan>,
     /// The layer's full input region (every card streams the whole ping
     /// half, so convolution windows never straddle a card boundary).
     input: Arc<Vec<i8>>,
@@ -133,34 +165,29 @@ struct ShardJob {
 }
 
 enum WorkerMsg {
-    Run(Batch, Vec<Sender<ReplyResult>>),
+    Run(Batch, ReplyTxs),
     Shard(ShardJob),
     Shutdown,
 }
 
 enum OrchMsg {
-    Run(Batch, Vec<Sender<ReplyResult>>),
+    Run(Batch, ReplyTxs),
     Shutdown,
 }
 
 /// The shard orchestrator's static state: the compiled program, the
-/// execution plan it indexes per layer, and the shard partition — built
-/// directly at start so the orchestrator doesn't hold a whole card's
-/// executor memory just to read schedules.
+/// execution plan it indexes per layer, and the shard partitions for
+/// every possible lease width — built directly at start so the
+/// orchestrator doesn't hold a whole card's executor memory just to read
+/// schedules.
 struct ShardOracle {
     plan: ExecutionPlan,
     prog: Program,
-    shards: Arc<ShardPlan>,
+    cache: ShardPlanCache,
     max_m: usize,
     m_arch: usize,
-}
-
-/// Where the router sends cut batches.
-enum Dispatch {
-    /// Straight to the worker queue (whole-frame batching).
-    Workers(Sender<WorkerMsg>),
-    /// To the shard orchestrator (scatter/gather per frame).
-    Orchestrator(Sender<OrchMsg>),
+    /// Most cards one frame asks to lease (`min(max_shard_cards, pool)`).
+    max_lease: usize,
 }
 
 /// Cloneable submit-side handle: many producer threads can feed one
@@ -173,13 +200,27 @@ pub struct SubmitHandle {
 }
 
 impl SubmitHandle {
-    /// Submit a request; returns a receiver for the reply.
+    /// Submit a request; returns a receiver for the reply.  The lane is
+    /// picked by the coordinator's [`RoutePolicy`].
     pub fn submit(&self, image: Vec<i8>, mode: Mode) -> Receiver<ReplyResult> {
+        self.submit_routed(image, mode, None)
+    }
+
+    /// Submit with an explicit dispatch-class override (`None` lets the
+    /// [`RoutePolicy`] decide).  An override is final — the router never
+    /// reassigns it.
+    pub fn submit_routed(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+    ) -> Receiver<ReplyResult> {
         let (tx, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             mode,
+            class,
             submitted: Instant::now(),
         };
         // If the router is gone the receiver will simply yield RecvError.
@@ -191,95 +232,111 @@ impl SubmitHandle {
     pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
         Ok(self.submit(image, mode).recv()??)
     }
+
+    /// Submit with an explicit dispatch class and wait.
+    pub fn infer_routed(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+    ) -> Result<Reply> {
+        Ok(self.submit_routed(image, mode, class).recv()??)
+    }
 }
 
 /// The serving coordinator.
 pub struct Coordinator {
     handle: SubmitHandle,
-    router: Option<JoinHandle<()>>,
+    router: Option<JoinHandle<Metrics>>,
     orchestrator: Option<JoinHandle<Metrics>>,
     workers: Vec<JoinHandle<Metrics>>,
     pub metrics: Arc<Mutex<Metrics>>,
 }
 
 impl Coordinator {
-    /// Spin up the router, `cfg.workers` accelerator workers, and — when
-    /// `cfg.shard` is `PerFrame` — the shard orchestrator.
+    /// Spin up the router, `cfg.workers` accelerator workers, and the
+    /// shard orchestrator.  Both dispatch lanes are always live — any
+    /// request may carry an explicit [`DispatchClass`] override, whatever
+    /// the [`RoutePolicy`] says.
     pub fn start(cfg: CoordinatorConfig, net: QuantNetwork) -> Result<Self> {
         if net.layers.is_empty() {
             bail!("empty network");
         }
+        let n_workers = cfg.workers.max(1);
         let (router_tx, router_rx) = channel::<RouterMsg>();
-        let (work_tx, work_rx) = channel::<WorkerMsg>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
         let metrics = Arc::new(Mutex::new(Metrics::default()));
-        // The pool must cover the shard width: fewer workers than cards
-        // would serialize a frame's shard jobs while Reply.cycles still
-        // reported the n-card machine's parallel latency.
-        let n_workers = match cfg.shard {
-            ShardPolicy::Off => cfg.workers.max(1),
-            ShardPolicy::PerFrame(_) => cfg.workers.max(cfg.shard.cards()),
-        };
 
-        // The shard plan is deterministic from (config, net, cards), so
-        // every thread shares one copy, built alongside the
-        // orchestrator's plan/program oracle.
-        let shard_state: Option<ShardOracle> = if cfg.shard.is_sharded() {
-            let prog = compile_network(&net);
-            let plan = ExecutionPlan::new(cfg.array, &net, &prog);
-            Some(ShardOracle {
-                shards: Arc::new(ShardPlan::new(&plan, cfg.shard.cards())),
-                plan,
-                prog,
-                max_m: net.max_m(),
-                m_arch: cfg.array.m_arch,
-            })
-        } else {
-            None
-        };
-
-        // Sharded cards run one frame's shards *concurrently*, so each
-        // card gets its slice of the host cores for intra-card threading
-        // — the full width on every card would oversubscribe the host
-        // with the exact thread thrash the latency path exists to avoid.
-        // The divisor is the shard width (cards in flight per frame),
-        // not the pool size: extra workers beyond the shard width idle.
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let card_threads = cores / cfg.shard.cards();
+        // One channel per card: the router sends batches only to *free*
+        // cards and the orchestrator sends shard jobs only to cards it
+        // holds a lease on, so a leased card's queue never mixes lanes.
+        let mut worker_txs: Vec<Sender<WorkerMsg>> = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
-            let rx = Arc::clone(&work_rx);
-            let sys = if cfg.shard.is_sharded() {
-                BinArraySystem::with_host_threads(cfg.array, net.clone(), card_threads)?
-            } else {
-                BinArraySystem::new(cfg.array, net.clone())?
-            };
+            let (tx, rx) = channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            let sys = BinArraySystem::new(cfg.array, net.clone())?;
             let global = Arc::clone(&metrics);
-            let sp = shard_state.as_ref().map(|o| Arc::clone(&o.shards));
+            let rtx = router_tx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("binarray-worker-{w}"))
-                    .spawn(move || worker_loop(sys, rx, global, sp))?,
+                    .spawn(move || worker_loop(sys, rx, w, rtx, global))?,
             );
         }
 
-        let (dispatch, orchestrator) = match shard_state {
-            Some(oracle) => {
-                let (orch_tx, orch_rx) = channel::<OrchMsg>();
-                let global = Arc::clone(&metrics);
-                let wtx = work_tx.clone();
-                let orch = std::thread::Builder::new()
-                    .name("binarray-shard-orch".into())
-                    .spawn(move || orchestrator_loop(oracle, orch_rx, wtx, n_workers, global))?;
-                (Dispatch::Orchestrator(orch_tx), Some(orch))
-            }
-            None => (Dispatch::Workers(work_tx), None),
+        // The shard plans are deterministic from (config, net, cards), so
+        // one cache serves every lease width the pool can grant.
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(cfg.array, &net, &prog);
+        let cache = ShardPlanCache::new(&plan, n_workers);
+        let max_lease = if cfg.max_shard_cards == 0 {
+            n_workers
+        } else {
+            cfg.max_shard_cards.min(n_workers)
+        };
+        let oracle = ShardOracle {
+            cache,
+            plan,
+            prog,
+            max_m: net.max_m(),
+            m_arch: cfg.array.m_arch,
+            max_lease,
+        };
+        let (orch_tx, orch_rx) = channel::<OrchMsg>();
+        let orchestrator = {
+            let global = Arc::clone(&metrics);
+            let rtx = router_tx.clone();
+            let wtxs = worker_txs.clone();
+            std::thread::Builder::new()
+                .name("binarray-shard-orch".into())
+                .spawn(move || orchestrator_loop(oracle, orch_rx, rtx, wtxs, global))?
         };
 
-        let policy = cfg.policy.effective(cfg.shard);
-        let router = std::thread::Builder::new()
-            .name("binarray-router".into())
-            .spawn(move || router_loop(router_rx, dispatch, policy, n_workers))?;
+        let router = {
+            let state = Router {
+                rx: router_rx,
+                orch_tx,
+                worker_txs,
+                policy: cfg.policy,
+                route: cfg.route,
+                batcher: Batcher::new(cfg.policy),
+                reply_txs: ReplyMap::new(),
+                free: (0..n_workers).collect(),
+                live: n_workers,
+                leased: 0,
+                pending_batches: VecDeque::new(),
+                pending_lease: None,
+                shard_inflight: 0,
+                shutting: false,
+                orch_done: false,
+                stalled: 0,
+                local: Metrics::default(),
+                global: Arc::clone(&metrics),
+            };
+            std::thread::Builder::new()
+                .name("binarray-router".into())
+                .spawn(move || state.run())?
+        };
 
         Ok(Self {
             handle: SubmitHandle {
@@ -287,7 +344,7 @@ impl Coordinator {
                 next_id: Arc::new(AtomicU64::new(0)),
             },
             router: Some(router),
-            orchestrator,
+            orchestrator: Some(orchestrator),
             workers,
             metrics,
         })
@@ -303,20 +360,43 @@ impl Coordinator {
         self.handle.submit(image, mode)
     }
 
+    /// Submit with an explicit dispatch-class override.
+    pub fn submit_routed(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+    ) -> Receiver<ReplyResult> {
+        self.handle.submit_routed(image, mode, class)
+    }
+
     /// Submit and wait.
     pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
         self.handle.infer(image, mode)
     }
 
+    /// Submit with an explicit dispatch class and wait.
+    pub fn infer_routed(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+    ) -> Result<Reply> {
+        self.handle.infer_routed(image, mode, class)
+    }
+
     /// Drain and stop all threads, returning the final metrics.
     pub fn shutdown(mut self) -> Metrics {
         let _ = self.handle.router_tx.send(RouterMsg::Shutdown);
-        if let Some(r) = self.router.take() {
-            let _ = r.join();
-        }
         let mut total = Metrics::default();
-        // The orchestrator (when present) must drain before the workers
-        // stop — it is the one who tells them to, once its queue is dry.
+        // The router exits only after the orchestrator has drained and
+        // every queued batch has been handed to a card, then tells the
+        // workers to stop — so joining it first is safe and total.
+        if let Some(r) = self.router.take() {
+            if let Ok(m) = r.join() {
+                total.merge(&m);
+            }
+        }
         if let Some(o) = self.orchestrator.take() {
             if let Ok(m) = o.join() {
                 total.merge(&m);
@@ -334,78 +414,301 @@ impl Coordinator {
 /// Registered reply channels keyed by request id.
 type ReplyMap = std::collections::HashMap<u64, Sender<ReplyResult>>;
 
-/// Router shutdown: flush the batcher's stragglers, then stop the pool —
-/// directly for the batching path, or via the orchestrator (which still
-/// needs the workers to serve the flushed frames' shard jobs first).
-fn drain_and_stop(
-    batcher: &mut Batcher,
-    reply_txs: &mut ReplyMap,
-    to: &Dispatch,
-    n_workers: usize,
-) {
-    for batch in batcher.flush() {
-        dispatch(to, batch, reply_txs);
-    }
-    match to {
-        Dispatch::Workers(tx) => {
-            for _ in 0..n_workers {
-                let _ = tx.send(WorkerMsg::Shutdown);
-            }
-        }
-        Dispatch::Orchestrator(tx) => {
-            let _ = tx.send(OrchMsg::Shutdown);
-        }
-    }
+/// The orchestrator's parked request for cards.
+struct PendingLease {
+    want: usize,
+    reply: Sender<Vec<usize>>,
 }
 
-fn router_loop(
+/// The router thread's state: admission (classify + batch), the card
+/// ledger (which workers are free, busy batching, or leased out), and
+/// the shutdown drain.
+struct Router {
     rx: Receiver<RouterMsg>,
-    dispatch_to: Dispatch,
+    orch_tx: Sender<OrchMsg>,
+    worker_txs: Vec<Sender<WorkerMsg>>,
     policy: BatchPolicy,
-    n_workers: usize,
-) {
-    let mut batcher = Batcher::new(policy);
-    let mut reply_txs = ReplyMap::new();
-    loop {
-        // Deadline-driven wait: block indefinitely when idle; otherwise
-        // sleep exactly until the oldest request's max_delay expires.
-        // (A fixed polling tick burns the core the workers need — it cost
-        // ~20 % end-to-end on a single-core host; EXPERIMENTS.md §Perf.)
-        let msg = if batcher.pending() == 0 {
-            rx.recv().map_err(|_| std::sync::mpsc::RecvTimeoutError::Disconnected)
-        } else {
-            rx.recv_timeout(policy.max_delay.min(Duration::from_millis(50)))
-        };
-        match msg {
-            Ok(RouterMsg::Submit(req, tx)) => {
-                reply_txs.insert(req.id, tx);
-                batcher.push(req);
-            }
-            Ok(RouterMsg::Shutdown) | Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                drain_and_stop(&mut batcher, &mut reply_txs, &dispatch_to, n_workers);
-                return;
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-        }
-        let now = Instant::now();
-        while let Some(batch) = batcher.cut(now) {
-            dispatch(&dispatch_to, batch, &mut reply_txs);
-        }
-    }
+    route: RoutePolicy,
+    batcher: Batcher,
+    reply_txs: ReplyMap,
+    /// Card ledger: worker ids neither batching nor leased.
+    free: Vec<usize>,
+    /// Workers not yet discovered dead (a send to a panicked worker's
+    /// channel fails; the card is then dropped from the pool).
+    live: usize,
+    /// Cards currently out on lease to the shard orchestrator.
+    leased: usize,
+    /// Batch-lane work waiting for a free card.
+    pending_batches: VecDeque<(Batch, ReplyTxs)>,
+    /// Shard-lane lease waiting for a free card (at most one: the
+    /// orchestrator leases one frame at a time).
+    pending_lease: Option<PendingLease>,
+    /// Shard frames handed to the orchestrator and not yet finished
+    /// (its queue is invisible to the router, so this is the shard
+    /// lane's contribution to the queue-depth signal).
+    shard_inflight: usize,
+    shutting: bool,
+    orch_done: bool,
+    /// Consecutive silent ticks while shutting (see the stall valve in
+    /// [`Self::run`]).
+    stalled: u32,
+    local: Metrics,
+    global: Arc<Mutex<Metrics>>,
 }
 
-fn dispatch(to: &Dispatch, batch: Batch, reply_txs: &mut ReplyMap) {
-    let txs: Vec<Sender<ReplyResult>> = batch
-        .requests
-        .iter()
-        .map(|r| reply_txs.remove(&r.id).expect("reply channel registered"))
-        .collect();
-    match to {
-        Dispatch::Workers(tx) => {
-            let _ = tx.send(WorkerMsg::Run(batch, txs));
+/// Shutdown stall valve: after this many consecutive silent 1-second
+/// ticks with the drain still blocked, the remaining cards are presumed
+/// dead (panicked mid-work, so their WorkerDone will never come) and the
+/// parked work is answered with errors instead of wedging `shutdown()`
+/// forever.  Generous on purpose: a healthy drain produces router
+/// traffic far more often than once a minute.
+const SHUTDOWN_STALL_TICKS: u32 = 60;
+
+impl Router {
+    fn run(mut self) -> Metrics {
+        loop {
+            // Deadline-driven wait: block indefinitely when idle;
+            // otherwise sleep exactly until the oldest request's
+            // max_delay expires.  (A fixed polling tick burns the core
+            // the workers need — it cost ~20 % end-to-end on a
+            // single-core host; EXPERIMENTS.md §Perf.)  While shutting,
+            // tick once a second so a dead pool cannot wedge the drain.
+            let msg = if self.shutting {
+                self.rx.recv_timeout(Duration::from_secs(1))
+            } else if self.batcher.pending() == 0 {
+                self.rx.recv().map_err(|_| RecvTimeoutError::Disconnected)
+            } else {
+                self.rx
+                    .recv_timeout(self.policy.max_delay.min(Duration::from_millis(50)))
+            };
+            if msg.is_ok() {
+                self.stalled = 0;
+            }
+            match msg {
+                Ok(RouterMsg::Submit(req, tx)) => self.admit(req, tx),
+                Ok(RouterMsg::WorkerDone(w)) => {
+                    self.free.push(w);
+                    self.service();
+                }
+                Ok(RouterMsg::Lease { want, reply }) => {
+                    debug_assert!(self.pending_lease.is_none(), "one orchestrator, one lease");
+                    self.pending_lease = Some(PendingLease { want, reply });
+                    self.service();
+                }
+                Ok(RouterMsg::Unlease(ids)) => {
+                    // one Unlease per shard frame, lease width aside
+                    self.shard_inflight = self.shard_inflight.saturating_sub(1);
+                    self.leased = self.leased.saturating_sub(ids.len());
+                    self.free.extend(ids);
+                    self.service();
+                }
+                Ok(RouterMsg::Retire(_)) => {
+                    // the orchestrator found a leased card dead: it
+                    // leaves the pool instead of rejoining `free`
+                    self.leased = self.leased.saturating_sub(1);
+                    self.live = self.live.saturating_sub(1);
+                    if self.live == 0 {
+                        self.fail_pending("worker pool is gone");
+                    }
+                    self.service();
+                }
+                Ok(RouterMsg::OrchDrained) => self.orch_done = true,
+                Ok(RouterMsg::Shutdown) => self.begin_shutdown(),
+                Err(RecvTimeoutError::Disconnected) => {
+                    if self.shutting {
+                        // every sender is gone mid-drain: nothing more
+                        // can arrive, stop instead of spinning
+                        break;
+                    }
+                    self.begin_shutdown();
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.shutting {
+                        self.stalled += 1;
+                        if self.stalled >= SHUTDOWN_STALL_TICKS {
+                            // Whatever is still outstanding will never
+                            // finish (dead cards / dead orchestrator):
+                            // answer what can be answered and let the
+                            // drain conditions fall through.
+                            self.fail_pending("worker pool stalled during shutdown");
+                            self.leased = 0;
+                            self.orch_done = true;
+                        }
+                    }
+                }
+            }
+            let now = Instant::now();
+            while let Some(batch) = self.batcher.cut(now) {
+                self.dispatch_cut(batch);
+            }
+            // Drained: orchestrator dry, every batch handed to a card,
+            // every lease returned — the pool can stop.
+            if self.shutting
+                && self.orch_done
+                && self.pending_lease.is_none()
+                && self.pending_batches.is_empty()
+                && self.leased == 0
+            {
+                break;
+            }
         }
-        Dispatch::Orchestrator(tx) => {
-            let _ = tx.send(OrchMsg::Run(batch, txs));
+        for tx in &self.worker_txs {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        self.local
+    }
+
+    /// Classify and queue one request (or refuse it mid-shutdown).  The
+    /// class is stamped exactly once here; the batcher and dispatch never
+    /// reassign it.
+    fn admit(&mut self, mut req: Request, tx: Sender<ReplyResult>) {
+        if self.shutting {
+            let mut delta = Metrics::default();
+            send_error(&mut delta, req.id, &tx, &anyhow!("coordinator is shutting down"));
+            self.note(delta);
+            return;
+        }
+        // The queue depth feeding Adaptive routing counts everything
+        // admitted but not finished that the batcher alone can't see:
+        // cut batches parked for a free card AND shard frames queued on
+        // the (serial) orchestrator.  Under overload the real backlog
+        // lives there, and ignoring it would keep the router sharding
+        // in exactly the throughput regime `deep_queue` exists to
+        // detect.
+        let backlog: usize = self.pending_batches.iter().map(|(b, _)| b.requests.len()).sum();
+        let depth = self.batcher.pending() + backlog + self.shard_inflight;
+        let class = self.route.route(req.class, req.image.len(), depth);
+        req.class = Some(class);
+        let mut delta = Metrics::default();
+        match class {
+            DispatchClass::Batch => delta.routed_batch = 1,
+            DispatchClass::Shard => delta.routed_shard = 1,
+        }
+        self.note(delta);
+        self.reply_txs.insert(req.id, tx);
+        self.batcher.push(req);
+    }
+
+    /// Hand a cut batch to its lane.
+    fn dispatch_cut(&mut self, batch: Batch) {
+        let txs: ReplyTxs = batch
+            .requests
+            .iter()
+            .map(|r| self.reply_txs.remove(&r.id).expect("reply channel registered"))
+            .collect();
+        match batch.class {
+            DispatchClass::Batch => self.dispatch_batch(batch, txs),
+            DispatchClass::Shard => {
+                let n = batch.requests.len();
+                if let Err(e) = self.orch_tx.send(OrchMsg::Run(batch, txs)) {
+                    let OrchMsg::Run(b, t) = e.0 else { unreachable!() };
+                    self.fail_batch(b, t, "shard orchestrator is gone");
+                } else {
+                    self.shard_inflight += n;
+                }
+            }
+        }
+    }
+
+    /// Send a batch to a free card, or park it until one frees up.
+    fn dispatch_batch(&mut self, mut batch: Batch, mut txs: ReplyTxs) {
+        while let Some(w) = self.free.pop() {
+            match self.worker_txs[w].send(WorkerMsg::Run(batch, txs)) {
+                Ok(()) => return,
+                Err(e) => {
+                    // card `w` is dead (panicked thread): drop it from
+                    // the pool and try the next free card
+                    self.live = self.live.saturating_sub(1);
+                    let WorkerMsg::Run(b, t) = e.0 else { unreachable!() };
+                    batch = b;
+                    txs = t;
+                }
+            }
+        }
+        if self.live == 0 {
+            self.fail_batch(batch, txs, "worker pool is gone");
+            // nothing parked can ever run either — a pending lease left
+            // waiting here would hang the orchestrator and its clients
+            self.fail_pending("worker pool is gone");
+        } else {
+            self.pending_batches.push_back((batch, txs));
+        }
+    }
+
+    /// A card freed up (or a lease/batch is newly pending): grant the
+    /// pending lease first — the shard lane is the latency lane — then
+    /// drain parked batches onto the remaining free cards.
+    fn service(&mut self) {
+        if let Some(pl) = self.pending_lease.take() {
+            if self.free.is_empty() {
+                self.pending_lease = Some(pl);
+            } else {
+                self.grant_lease(pl);
+            }
+        }
+        while !self.free.is_empty() {
+            let Some((batch, txs)) = self.pending_batches.pop_front() else {
+                break;
+            };
+            self.dispatch_batch(batch, txs);
+        }
+    }
+
+    /// Grant as many free cards as the lease wants, without waiting for
+    /// busy ones: the shard lane adapts its scatter width to what the
+    /// batch lane left over (a 1-card grant is the degenerate single-card
+    /// shard — still bit-exact, just no latency win).
+    fn grant_lease(&mut self, pl: PendingLease) {
+        debug_assert!(!self.free.is_empty());
+        let k = pl.want.clamp(1, self.free.len());
+        let ids: Vec<usize> = self.free.split_off(self.free.len() - k);
+        match pl.reply.send(ids) {
+            Ok(()) => self.leased += k,
+            // orchestrator died mid-request: keep the cards
+            Err(e) => self.free.extend(e.0),
+        }
+    }
+
+    /// Answer everything parked on cards that will never free up: every
+    /// pending batch errors out, and a pending lease gets an empty grant
+    /// (the orchestrator answers its frame with an error and drains on).
+    fn fail_pending(&mut self, reason: &str) {
+        while let Some((batch, txs)) = self.pending_batches.pop_front() {
+            self.fail_batch(batch, txs, reason);
+        }
+        if let Some(pl) = self.pending_lease.take() {
+            let _ = pl.reply.send(Vec::new());
+        }
+    }
+
+    /// Answer every request of an undeliverable batch with an error.
+    fn fail_batch(&mut self, batch: Batch, txs: ReplyTxs, reason: &str) {
+        let mut delta = Metrics::default();
+        let e = anyhow!("{reason}");
+        for (req, tx) in batch.requests.into_iter().zip(&txs) {
+            send_error(&mut delta, req.id, tx, &e);
+        }
+        self.note(delta);
+    }
+
+    /// Flush the batcher and start the drain; the exit condition in
+    /// [`Self::run`] stops the pool once both lanes are dry.
+    fn begin_shutdown(&mut self) {
+        if self.shutting {
+            return;
+        }
+        self.shutting = true;
+        for batch in self.batcher.flush() {
+            self.dispatch_cut(batch);
+        }
+        let _ = self.orch_tx.send(OrchMsg::Shutdown);
+    }
+
+    /// Record a metrics delta locally and in the live global view.
+    fn note(&mut self, delta: Metrics) {
+        self.local.merge(&delta);
+        if let Ok(mut g) = self.global.lock() {
+            g.merge(&delta);
         }
     }
 }
@@ -447,35 +750,36 @@ fn send_error(delta: &mut Metrics, id: u64, tx: &Sender<ReplyResult>, e: &anyhow
 
 fn worker_loop(
     mut sys: BinArraySystem,
-    rx: Arc<Mutex<Receiver<WorkerMsg>>>,
+    rx: Receiver<WorkerMsg>,
+    id: usize,
+    router_tx: Sender<RouterMsg>,
     global: Arc<Mutex<Metrics>>,
-    shards: Option<Arc<ShardPlan>>,
 ) -> Metrics {
     let mut local = Metrics::default();
     let max_m = sys.net.max_m();
     let m_arch = sys.cfg.m_arch;
+    let full_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     loop {
-        let msg = {
-            let guard = rx.lock().expect("worker rx poisoned");
-            guard.recv()
-        };
-        let Ok(msg) = msg else { break };
+        let Ok(msg) = rx.recv() else { break };
         match msg {
             WorkerMsg::Shutdown => break,
             WorkerMsg::Shard(job) => {
-                let res = match &shards {
-                    Some(sp) => {
-                        sys.set_mode(job.m_run);
-                        let shard = &sp.mode(job.m_run)[job.layer].cards[job.card];
-                        sys.run_shard(job.layer, &job.input, shard)
-                    }
-                    None => Err(anyhow!("worker has no shard plan")),
-                };
+                // Leased to the shard orchestrator: this card's share of
+                // the host cores is bounded by the lease width (stamped
+                // on the job), so concurrent cards don't thrash the host.
+                sys.set_host_threads(job.intra_threads);
+                sys.set_mode(job.m_run);
+                let shard = &job.shards.mode(job.m_run)[job.layer].cards[job.card];
+                let res = sys.run_shard(job.layer, &job.input, shard);
                 // The orchestrator counts one reply per dispatched job;
-                // errors must be answered like results.
+                // errors must be answered like results.  No WorkerDone
+                // here — the orchestrator returns the whole lease itself.
                 let _ = job.reply.send((job.card, res));
             }
             WorkerMsg::Run(batch, txs) => {
+                sys.set_host_threads(full_threads);
                 // §IV-D: one mode switch per batch, not per frame.
                 let m_run = batch.mode.m_run(max_m, m_arch);
                 sys.set_mode(Some(m_run));
@@ -508,6 +812,7 @@ fn worker_loop(
                             send_reply(&mut delta, req, tx, logits, stats.cycles, batch_wall);
                         }
                         delta.sim_wall += batch_wall;
+                        delta.batch_wall += batch_wall;
                     }
                     Err(_) => {
                         // Defense in depth for failures validation can't
@@ -521,6 +826,7 @@ fn worker_loop(
                                     let wall = t1.elapsed();
                                     send_reply(&mut delta, req, tx, logits, stats.cycles, wall);
                                     delta.sim_wall += wall;
+                                    delta.batch_wall += wall;
                                 }
                                 Err(e) => send_error(&mut delta, req.id, tx, &e),
                             }
@@ -531,6 +837,8 @@ fn worker_loop(
                 if let Ok(mut g) = global.lock() {
                     g.merge(&delta); // live view across all workers
                 }
+                // Tell the arbiter this card is free again.
+                let _ = router_tx.send(RouterMsg::WorkerDone(id));
             }
         }
     }
@@ -538,21 +846,27 @@ fn worker_loop(
 }
 
 /// The shard orchestrator: owns each in-flight frame's CU and ping-pong
-/// feature buffer, scatters every layer's row tiles over the worker
-/// queue, and gathers the cards' output tiles back before triggering the
-/// next layer.  The CU is the same state machine the in-card executor
-/// uses, so instruction-cycle accounting is identical on both paths.
+/// feature buffer, leases cards from the router per frame, scatters every
+/// layer's row tiles to the leased cards' queues, and gathers the output
+/// tiles back before triggering the next layer.  The CU is the same state
+/// machine the in-card executor uses, so instruction-cycle accounting is
+/// identical on both paths.
 fn orchestrator_loop(
     oracle: ShardOracle,
     rx: Receiver<OrchMsg>,
-    work_tx: Sender<WorkerMsg>,
-    n_workers: usize,
+    router_tx: Sender<RouterMsg>,
+    worker_txs: Vec<Sender<WorkerMsg>>,
     global: Arc<Mutex<Metrics>>,
 ) -> Metrics {
     let mut local = Metrics::default();
     let mut cu = ControlUnit::new();
     cu.park_at(oracle.prog.entry);
     let mut fbuf = vec![0i8; oracle.prog.fbuf_words];
+    // Recycled DMA-broadcast buffers (see `run_sharded_frame`).
+    let mut spare: Vec<Vec<i8>> = Vec::new();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     loop {
         let Ok(msg) = rx.recv() else { break };
         match msg {
@@ -562,15 +876,57 @@ fn orchestrator_loop(
                 let mut delta = Metrics::default();
                 delta.batches += 1;
                 for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                    // Lease cards: however many of the pool the batch
+                    // lane isn't holding right now (≥ 1, ≤ max_lease).
+                    let want = oracle.max_lease;
+                    let (lease_tx, lease_rx) = channel::<Vec<usize>>();
+                    let lease_req = RouterMsg::Lease {
+                        want,
+                        reply: lease_tx,
+                    };
+                    let granted: Vec<usize> = if router_tx.send(lease_req).is_ok() {
+                        lease_rx.recv().unwrap_or_default()
+                    } else {
+                        Vec::new()
+                    };
+                    if granted.is_empty() {
+                        let e = anyhow!("no cards to lease (router gone or pool dead)");
+                        send_error(&mut delta, req.id, tx, &e);
+                        continue;
+                    }
+                    delta.shard_leases += 1;
+                    delta.shard_cards_granted += granted.len() as u64;
+                    delta.shard_cards_stolen += (want - granted.len().min(want)) as u64;
                     let t0 = Instant::now();
+                    let mut dead = Vec::new();
                     let res = run_sharded_frame(
-                        &oracle, &mut cu, &mut fbuf, &work_tx, &req.image, m_run,
+                        &oracle,
+                        &mut cu,
+                        &mut fbuf,
+                        &mut spare,
+                        &worker_txs,
+                        &granted,
+                        &mut dead,
+                        &req.image,
+                        m_run,
+                        cores,
                     );
                     let frame_wall = t0.elapsed();
+                    // Cards whose channel is gone are retired from the
+                    // pool; only live cards rejoin the free list (a dead
+                    // card handed back would be re-leased and fail every
+                    // later frame it lands in).
+                    let live: Vec<usize> =
+                        granted.into_iter().filter(|w| !dead.contains(w)).collect();
+                    for w in dead {
+                        let _ = router_tx.send(RouterMsg::Retire(w));
+                    }
+                    let _ = router_tx.send(RouterMsg::Unlease(live));
                     match res {
                         Ok((logits, stats)) => {
                             send_reply(&mut delta, req, tx, logits, stats.cycles, frame_wall);
                             delta.sim_wall += frame_wall;
+                            delta.shard_wall += frame_wall;
                         }
                         Err(e) => send_error(&mut delta, req.id, tx, &e),
                     }
@@ -582,29 +938,42 @@ fn orchestrator_loop(
             }
         }
     }
-    // The pool stops only after the orchestrator has drained: flushed
-    // frames still need workers for their shard jobs.
-    for _ in 0..n_workers {
-        let _ = work_tx.send(WorkerMsg::Shutdown);
-    }
+    // Tell the router the shard lane is dry — it stops the workers once
+    // the batch lane has drained too.
+    let _ = router_tx.send(RouterMsg::OrchDrained);
     local
 }
 
-/// Run one frame scattered over the worker pool.  Per layer: copy the
-/// ping half's input region once (the "DMA broadcast"), enqueue one
+/// Run one frame scattered over the leased cards.  Per layer: enqueue one
 /// [`ShardJob`] per card with work, then stitch every returned tile into
 /// the pong half.  Frame cycles = CU instruction cycles + Σ max-over-cards
-/// layer walls — the latency of an `n_cards`-card machine.
+/// layer walls — the latency of a machine as wide as the lease.
+///
+/// The per-card input broadcast is double-buffered: while layer N's
+/// gather is collecting tiles, each arriving tile is also scattered into
+/// the buffer that becomes layer N+1's broadcast (chained layers share
+/// the region — N's `out_base/out_len` are N+1's `in_base/in_len`).  The
+/// serial copy-the-ping-half pass PR 2 ran between layers is gone: the
+/// scatter copy overlaps the cards' compute and the gather.
+#[allow(clippy::too_many_arguments)]
 fn run_sharded_frame(
     oracle: &ShardOracle,
     cu: &mut ControlUnit,
     fbuf: &mut [i8],
-    work_tx: &Sender<WorkerMsg>,
+    spare: &mut Vec<Vec<i8>>,
+    worker_txs: &[Sender<WorkerMsg>],
+    leased: &[usize],
+    dead: &mut Vec<usize>,
     image: &[i8],
     m_run: Option<usize>,
+    cores: usize,
 ) -> Result<(Vec<i8>, FrameStats)> {
+    let n_cards = leased.len();
+    let shards = oracle.cache.cards(n_cards);
+    let intra_threads = (cores / n_cards.max(1)).max(1);
     let mode = oracle.plan.mode(m_run);
-    let layer_shards = oracle.shards.mode(m_run);
+    let layer_shards = shards.mode(m_run);
+    let n_layers = mode.layers.len();
     let first = mode.layers.first().expect("non-empty plan");
     if image.len() != first.in_len {
         return Err(anyhow!("image len {} != {}", image.len(), first.in_len));
@@ -615,14 +984,17 @@ fn run_sharded_frame(
         // In shard mode the per-unit stats aggregate per *card* (each
         // card is a whole array; mapping cards onto one card's physical
         // SAs would be meaningless).
-        sa_stats: vec![SimStats::default(); oracle.shards.n_cards],
+        sa_stats: vec![SimStats::default(); n_cards],
         ..Default::default()
     };
     let mut err: Option<anyhow::Error> = None;
+    // The next layer's input copy, built during this layer's gather.
+    let mut next_bcast: Option<Vec<i8>> = None;
 
     let layer_cycles = &mut stats.layer_cycles;
     let sa_stats = &mut stats.sa_stats;
     let err_ref = &mut err;
+    let next_ref = &mut next_bcast;
     let cu_run = cu.run_frame(&oracle.prog, |lr| {
         if err_ref.is_some() {
             // A card already failed: fall through the remaining layers
@@ -632,13 +1004,19 @@ fn run_sharded_frame(
         }
         let li = lr.layer_id as usize;
         let lp = &mode.layers[li];
-        // Scatter: broadcast the input region, one tile job per card.
-        // The reply channel is per layer, and the orchestrator's own tx
-        // is dropped right after the scatter — so a worker that dies
-        // without answering surfaces as a recv disconnect (an error
-        // reply), never as a gather that blocks forever.
+        // Broadcast: the input copy built during the previous layer's
+        // gather, or — first layer — lifted from the feature buffer.
+        let input = Arc::new(match next_ref.take() {
+            Some(buf) => buf,
+            None => fbuf[lp.in_base..lp.in_base + lp.in_len].to_vec(),
+        });
+        debug_assert_eq!(input.len(), lp.in_len);
+        // Scatter: one tile job per leased card.  The reply channel is
+        // per layer, and the orchestrator's own tx is dropped right
+        // after the scatter — so a worker that dies without answering
+        // surfaces as a recv disconnect (an error reply), never as a
+        // gather that blocks forever.
         let (reply_tx, reply_rx) = channel::<(usize, Result<ShardRun>)>();
-        let input = Arc::new(fbuf[lp.in_base..lp.in_base + lp.in_len].to_vec());
         let mut sent = 0usize;
         for (card, shard) in layer_shards[li].cards.iter().enumerate() {
             if shard.n_units() == 0 {
@@ -648,11 +1026,14 @@ fn run_sharded_frame(
                 m_run,
                 layer: li,
                 card,
+                intra_threads,
+                shards: Arc::clone(shards),
                 input: Arc::clone(&input),
                 reply: reply_tx.clone(),
             };
-            if work_tx.send(WorkerMsg::Shard(job)).is_err() {
-                *err_ref = Some(anyhow!("worker pool disconnected"));
+            if worker_txs[leased[card]].send(WorkerMsg::Shard(job)).is_err() {
+                dead.push(leased[card]);
+                *err_ref = Some(anyhow!("leased card {card} is gone"));
                 layer_cycles.push(0);
                 return 0;
             }
@@ -660,14 +1041,26 @@ fn run_sharded_frame(
         }
         drop(reply_tx);
         // Gather: exactly `sent` replies belong to this layer (each job
-        // answers once, success or error), stitched into the pong half.
+        // answers once, success or error), stitched into the pong half —
+        // and, overlapped, into the next layer's broadcast buffer.
         let out = &mut fbuf[lp.out_base..lp.out_base + lp.out_len];
+        let mut nb: Option<Vec<i8>> = if li + 1 < n_layers {
+            let mut b = spare.pop().unwrap_or_default();
+            b.clear();
+            b.resize(lp.out_len, 0);
+            Some(b)
+        } else {
+            None
+        };
         let mut wall = 0u64;
         for _ in 0..sent {
             match reply_rx.recv() {
                 Ok((card, Ok(run))) => {
                     for t in &run.tiles {
                         scatter_tile(lp.out_shape, out, t.rows.clone(), t.chans.clone(), &t.data);
+                        if let Some(b) = nb.as_mut() {
+                            scatter_tile(lp.out_shape, b, t.rows.clone(), t.chans.clone(), &t.data);
+                        }
                     }
                     wall = wall.max(run.wall);
                     sa_stats[card].add(run.stats);
@@ -683,6 +1076,12 @@ fn run_sharded_frame(
                 }
             }
         }
+        // Recycle this layer's broadcast once every card has dropped its
+        // clone (a card may still hold one for a beat; skip quietly).
+        if let Ok(buf) = Arc::try_unwrap(input) {
+            spare.push(buf);
+        }
+        *next_ref = nb;
         layer_cycles.push(wall);
         wall
     });
@@ -712,7 +1111,18 @@ mod tests {
                 max_batch: 4,
                 max_delay: Duration::from_millis(1),
             },
-            shard: ShardPolicy::Off,
+            route: RoutePolicy::BatchOnly,
+            max_shard_cards: 0,
+        }
+    }
+
+    fn shard_cfg(cards: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: cards,
+            policy: BatchPolicy::default(),
+            route: RoutePolicy::ShardOnly,
+            max_shard_cards: 0,
         }
     }
 
@@ -728,6 +1138,8 @@ mod tests {
         assert_eq!(reply.class, golden::argmax(&want));
         let m = coord.shutdown();
         assert_eq!(m.completed, 1);
+        assert_eq!(m.routed_batch, 1);
+        assert_eq!(m.routed_shard, 0);
     }
 
     #[test]
@@ -821,16 +1233,7 @@ mod tests {
         let want_lo = golden::forward(&net, &img, Shape::new(48, 48, 3), Some(2));
         let mut cycles_by_cards = Vec::new();
         for cards in [1usize, 2] {
-            let coord = Coordinator::start(
-                CoordinatorConfig {
-                    array: ArrayConfig::new(1, 8, 2),
-                    workers: cards,
-                    policy: BatchPolicy::default(),
-                    shard: ShardPolicy::PerFrame(cards),
-                },
-                net.clone(),
-            )
-            .unwrap();
+            let coord = Coordinator::start(shard_cfg(cards), net.clone()).unwrap();
             let hi = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
             let lo = coord.infer(img.clone(), Mode::HighThroughput).unwrap();
             assert_eq!(hi.logits, want_hi, "{cards} cards");
@@ -840,6 +1243,11 @@ mod tests {
             let m = coord.shutdown();
             assert_eq!(m.completed, 2);
             assert_eq!(m.batches, 2, "sharded batches are single frames");
+            assert_eq!(m.routed_shard, 2);
+            assert_eq!(m.shard_leases, 2);
+            // an idle pool leases its full width
+            assert_eq!(m.shard_cards_granted, 2 * cards as u64);
+            assert_eq!(m.shard_cards_stolen, 0);
         }
         // 2 cards must beat 1 card in simulated frame latency
         assert!(cycles_by_cards[1] < cycles_by_cards[0], "{cycles_by_cards:?}");
@@ -849,16 +1257,7 @@ mod tests {
     fn sharded_bad_frame_errors_and_pool_survives() {
         let mut rng = Xoshiro256::new(7);
         let net = cnn_a_quant(&mut rng, 2);
-        let coord = Coordinator::start(
-            CoordinatorConfig {
-                array: ArrayConfig::new(1, 8, 2),
-                workers: 2,
-                policy: BatchPolicy::default(),
-                shard: ShardPolicy::PerFrame(2),
-            },
-            net.clone(),
-        )
-        .unwrap();
+        let coord = Coordinator::start(shard_cfg(2), net.clone()).unwrap();
         assert!(coord.infer(vec![0i8; 5], Mode::HighAccuracy).is_err());
         let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
         let ok = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
@@ -870,8 +1269,54 @@ mod tests {
     }
 
     #[test]
-    fn submit_handles_are_cloneable_across_threads() {
+    fn explicit_override_beats_the_policy() {
+        // a BatchOnly coordinator must still serve an explicit Shard
+        // request through the shard lane — and vice versa
         let mut rng = Xoshiro256::new(8);
+        let net = cnn_a_quant(&mut rng, 2);
+        let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
+        let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
+        let coord = Coordinator::start(quick_cfg(2), net.clone()).unwrap();
+        let shard = coord
+            .infer_routed(img.clone(), Mode::HighAccuracy, Some(DispatchClass::Shard))
+            .unwrap();
+        assert_eq!(shard.logits, want);
+        let batch = coord
+            .infer_routed(img.clone(), Mode::HighAccuracy, Some(DispatchClass::Batch))
+            .unwrap();
+        assert_eq!(batch.logits, want);
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.routed_shard, 1);
+        assert_eq!(m.routed_batch, 1);
+        assert_eq!(m.shard_leases, 1);
+        assert!(m.shard_cards_granted >= 1);
+    }
+
+    #[test]
+    fn max_shard_cards_caps_the_lease() {
+        let mut rng = Xoshiro256::new(9);
+        let net = cnn_a_quant(&mut rng, 2);
+        let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 3,
+                route: RoutePolicy::ShardOnly,
+                max_shard_cards: 2,
+                ..quick_cfg(3)
+            },
+            net,
+        )
+        .unwrap();
+        coord.infer(img, Mode::HighAccuracy).unwrap();
+        let m = coord.shutdown();
+        assert_eq!(m.shard_leases, 1);
+        assert_eq!(m.shard_cards_granted, 2, "lease capped below pool width");
+    }
+
+    #[test]
+    fn submit_handles_are_cloneable_across_threads() {
+        let mut rng = Xoshiro256::new(10);
         let net = cnn_a_quant(&mut rng, 2);
         let coord = Coordinator::start(quick_cfg(2), net).unwrap();
         let imgs: Vec<Vec<i8>> = (0..4).map(|_| prop::i8_vec(&mut rng, 48 * 48 * 3)).collect();

@@ -42,10 +42,13 @@
 //!   the execution plan and the frame executor (§III–IV)
 //! * [`perf`] — analytical performance model, Eqs. 14–18 (§IV-E)
 //! * [`area`] — FPGA resource model (Table IV)
-//! * [`coordinator`] — request router / batcher / worker pool (§IV-D);
-//!   workers drain cut batches through `run_frames`, or — under
-//!   `ShardPolicy::PerFrame` — execute scattered row-tile shards of one
-//!   frame (`run_shard`) that the shard orchestrator gathers per layer
+//! * [`coordinator`] — request router / batcher / worker pool (§IV-D)
+//!   with per-request hybrid dispatch: every request is admitted under a
+//!   `DispatchClass` (explicit or `RoutePolicy`-decided) and both lanes
+//!   share one card pool — batch-class requests drain through
+//!   `run_frames` on single cards, shard-class frames scatter row tiles
+//!   (`run_shard`) over cards the orchestrator leases and gathers per
+//!   layer
 //! * [`runtime`] — PJRT CPU client for `artifacts/*.hlo.txt` (stubbed
 //!   without the `xla` cargo feature)
 //! * [`data`] — synthetic GTSRB-like workload generator

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! binarray info                         # artifacts + network summary
-//! binarray serve  [--config 1,8,2] [--workers N] [--frames N] [--mode fast|accurate] [--shard N]
+//! binarray serve  [--config 1,8,2] [--workers N] [--frames N] [--mode fast|accurate]
+//!                 [--route batch|shard|auto] [--shard N] [--shard-min-len L] [--deep-queue Q]
 //! binarray perf   [--m M]               # Table III analytical model
 //! binarray area                         # Table IV resource model
 //! binarray listing                      # compiled CNN processing program
@@ -18,7 +19,7 @@ use anyhow::{bail, Context, Result};
 use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy,
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode, RoutePolicy,
 };
 use binarray::tensor::Shape;
 use binarray::{area, golden, isa, nn, perf};
@@ -181,22 +182,33 @@ fn info() -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let net = load_net()?;
-    // --shard N scatters every frame's row tiles over N cards (latency
-    // mode); 0 = off (whole-frame batching, throughput mode).  The
-    // coordinator grows the pool to the card count itself.
+    // --route picks the dispatch policy: `batch` (whole-frame batching,
+    // throughput), `shard` (scatter every frame's row tiles over leased
+    // cards, latency) or `auto` (route per request from frame size and
+    // queue depth).  --shard N caps a frame's lease at N cards and, when
+    // --route is not given, implies `shard`.
     let cards: usize = args.get("shard", 0)?;
+    let route_default = if cards > 0 { "shard" } else { "batch" };
+    let route_name: String = args.get("route", route_default.to_string())?;
+    let route = match route_name.as_str() {
+        "batch" => RoutePolicy::BatchOnly,
+        "shard" => RoutePolicy::ShardOnly,
+        "auto" => RoutePolicy::Adaptive {
+            shard_min_len: args.get("shard-min-len", 4096)?,
+            deep_queue: args.get("deep-queue", 8)?,
+        },
+        other => bail!("--route {other}: expected batch|shard|auto"),
+    };
     let cfg = CoordinatorConfig {
         array: args.config(ArrayConfig::new(1, 8, 2))?,
-        workers: args.get("workers", 2)?,
+        // the pool must cover the requested lease width
+        workers: args.get("workers", 2)?.max(cards),
         policy: BatchPolicy {
             max_batch: args.get("batch", 8)?,
             max_delay: Duration::from_millis(args.get("delay-ms", 2)?),
         },
-        shard: if cards == 0 {
-            ShardPolicy::Off
-        } else {
-            ShardPolicy::PerFrame(cards)
-        },
+        route,
+        max_shard_cards: cards,
     };
     let frames: usize = args.get("frames", 64)?;
     let mode = match args.get::<String>("mode", "accurate".into())?.as_str() {
@@ -207,11 +219,11 @@ fn serve(args: &Args) -> Result<()> {
     let calib = CalibBatch::load(&dir.join("calib.bin"))?;
 
     println!(
-        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}{}",
+        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}, route {route_name}{}",
         cfg.array.label(),
         cfg.workers,
         if cards > 0 {
-            format!(", sharded over {cards} cards")
+            format!(" (≤{cards}-card leases)")
         } else {
             String::new()
         }

@@ -7,6 +7,36 @@ pub mod rng;
 
 use std::io::{self, Read};
 
+/// Worker-card counts the cross-card test suites exercise, so CI can
+/// matrix over pool widths (`BINARRAY_TEST_CARDS=1,2,4` style) while
+/// local `cargo test` keeps the full default coverage.
+///
+/// Malformed values panic: a CI matrix entry that silently fell back to
+/// the default would claim coverage it doesn't have.
+pub fn test_cards() -> Vec<usize> {
+    match std::env::var("BINARRAY_TEST_CARDS") {
+        Err(_) => vec![1, 2, 4],
+        Ok(s) => parse_cards(&s),
+    }
+}
+
+fn parse_cards(s: &str) -> Vec<usize> {
+    let cards: Vec<usize> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let n: usize = t
+                .parse()
+                .unwrap_or_else(|_| panic!("BINARRAY_TEST_CARDS: bad card count {t:?}"));
+            assert!(n > 0, "BINARRAY_TEST_CARDS: card count must be ≥ 1");
+            n
+        })
+        .collect();
+    assert!(!cards.is_empty(), "BINARRAY_TEST_CARDS is set but empty");
+    cards
+}
+
 /// Read a little-endian `u32` from a reader.
 pub fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
     let mut b = [0u8; 4];
@@ -57,6 +87,19 @@ mod tests {
         let raw = vec![0xFFu8, 0x01, 0x80, 0x7F];
         let mut cur = io::Cursor::new(raw);
         assert_eq!(read_i8_vec(&mut cur, 4).unwrap(), vec![-1, 1, -128, 127]);
+    }
+
+    #[test]
+    fn parse_cards_accepts_lists_and_singletons() {
+        assert_eq!(parse_cards("1,2,4"), vec![1, 2, 4]);
+        assert_eq!(parse_cards(" 3 "), vec![3]);
+        assert_eq!(parse_cards("2,"), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad card count")]
+    fn parse_cards_rejects_garbage() {
+        parse_cards("1,two");
     }
 
     #[test]

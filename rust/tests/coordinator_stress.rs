@@ -4,17 +4,20 @@
 //! the same concurrency.  The single-producer happy paths live in
 //! `coordinator::server`'s unit tests; everything here is about what the
 //! concurrent machine does when several clients lean on it at once.
+//!
+//! Pool widths come from `BINARRAY_TEST_CARDS` (default `1,2,4`) so the
+//! CI matrix exercises lane arbitration at every width it claims.
 
 use std::time::Duration;
 
 use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
 use binarray::binarray::ArrayConfig;
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy,
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode, RoutePolicy,
 };
 use binarray::golden;
 use binarray::tensor::Shape;
-use binarray::util::{prop, rng::Xoshiro256};
+use binarray::util::{prop, rng::Xoshiro256, test_cards};
 
 /// A deliberately tiny but structurally complete net (conv+pool, two
 /// dense) so stress tests push *request counts*, not frame compute.
@@ -72,81 +75,87 @@ fn concurrent_producers_all_replied_ids_unique_metrics_consistent() {
     let producers = 4usize;
     let per_producer = 24usize;
     let total = (producers * per_producer) as u64;
-    let coord = Coordinator::start(
-        CoordinatorConfig {
-            array: ArrayConfig::new(2, 8, 2),
-            workers: 3,
-            policy: BatchPolicy {
-                max_batch: 3,
-                max_delay: Duration::from_micros(200),
+    for workers in test_cards() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(2, 8, 2),
+                workers,
+                policy: BatchPolicy {
+                    max_batch: 3,
+                    max_delay: Duration::from_micros(200),
+                },
+                route: RoutePolicy::BatchOnly,
+                max_shard_cards: 0,
             },
-            shard: ShardPolicy::Off,
-        },
-        net,
-    )
-    .unwrap();
+            net.clone(),
+        )
+        .unwrap();
 
-    let mut ids: Vec<u64> = Vec::new();
-    std::thread::scope(|s| {
-        let threads: Vec<_> = (0..producers)
-            .map(|p| {
-                let h = coord.handle();
-                let mut prng = Xoshiro256::new(p as u64 + 1);
-                let image = prop::i8_vec(&mut prng, shape.len());
-                s.spawn(move || {
-                    let mut got = Vec::with_capacity(per_producer);
-                    for i in 0..per_producer {
-                        let mode = if (p + i) % 2 == 0 {
-                            Mode::HighAccuracy
-                        } else {
-                            Mode::HighThroughput
-                        };
-                        let reply = h
-                            .submit(image.clone(), mode)
-                            .recv()
-                            .expect("live channel")
-                            .expect("successful inference");
-                        assert_eq!(reply.mode, mode, "mode echoed back");
-                        got.push(reply.id);
-                    }
-                    got
+        let mut ids: Vec<u64> = Vec::new();
+        std::thread::scope(|s| {
+            let threads: Vec<_> = (0..producers)
+                .map(|p| {
+                    let h = coord.handle();
+                    let mut prng = Xoshiro256::new(p as u64 + 1);
+                    let image = prop::i8_vec(&mut prng, shape.len());
+                    s.spawn(move || {
+                        let mut got = Vec::with_capacity(per_producer);
+                        for i in 0..per_producer {
+                            let mode = if (p + i) % 2 == 0 {
+                                Mode::HighAccuracy
+                            } else {
+                                Mode::HighThroughput
+                            };
+                            let reply = h
+                                .submit(image.clone(), mode)
+                                .recv()
+                                .expect("live channel")
+                                .expect("successful inference");
+                            assert_eq!(reply.mode, mode, "mode echoed back");
+                            got.push(reply.id);
+                        }
+                        got
+                    })
                 })
-            })
-            .collect();
-        for t in threads {
-            ids.extend(t.join().unwrap());
-        }
-    });
+                .collect();
+            for t in threads {
+                ids.extend(t.join().unwrap());
+            }
+        });
 
-    ids.sort_unstable();
-    ids.dedup();
-    assert_eq!(ids.len() as u64, total, "every id unique, every request answered");
-    assert_eq!(*ids.first().unwrap(), 0);
-    assert_eq!(*ids.last().unwrap(), total - 1);
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, total, "every id unique, every request answered");
+        assert_eq!(*ids.first().unwrap(), 0);
+        assert_eq!(*ids.last().unwrap(), total - 1);
 
-    let m = coord.shutdown();
-    assert_eq!(m.completed, total);
-    assert_eq!(m.failed, 0);
-    // batches: between "max batching" and "every frame alone"
-    assert!(m.batches >= total / 3, "batches {} for {total} frames", m.batches);
-    assert!(m.batches <= total, "batches {} for {total} frames", m.batches);
-    assert!((m.mean_batch() - m.completed as f64 / m.batches as f64).abs() < 1e-9);
-    assert_eq!(m.latency.count() as u64, total);
+        let m = coord.shutdown();
+        assert_eq!(m.completed, total);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.routed_batch, total, "{workers} workers");
+        // batches: between "max batching" and "every frame alone"
+        assert!(m.batches >= total / 3, "batches {} for {total} frames", m.batches);
+        assert!(m.batches <= total, "batches {} for {total} frames", m.batches);
+        assert!((m.mean_batch() - m.completed as f64 / m.batches as f64).abs() < 1e-9);
+        assert_eq!(m.latency.count() as u64, total);
+    }
 }
 
 #[test]
 fn shutdown_drains_under_multi_producer_load() {
     let mut rng = Xoshiro256::new(0xD7A1);
     let (net, shape) = tiny_net(&mut rng);
+    let workers = test_cards().into_iter().max().unwrap_or(2);
     let coord = Coordinator::start(
         CoordinatorConfig {
             array: ArrayConfig::new(1, 8, 2),
-            workers: 2,
+            workers,
             policy: BatchPolicy {
                 max_batch: 64,
                 max_delay: Duration::from_secs(60), // never ripe on its own
             },
-            shard: ShardPolicy::Off,
+            route: RoutePolicy::BatchOnly,
+            max_shard_cards: 0,
         },
         net,
     )
@@ -194,38 +203,46 @@ fn sharded_path_survives_concurrent_producers() {
     let image = prop::i8_vec(&mut rng, shape.len());
     let want_hi = golden::forward(&net, &image, shape, None);
     let want_lo = golden::forward(&net, &image, shape, Some(2));
-    let coord = Coordinator::start(
-        CoordinatorConfig {
-            array: ArrayConfig::new(1, 8, 2),
-            workers: 2,
-            policy: BatchPolicy::default(),
-            shard: ShardPolicy::PerFrame(2),
-        },
-        net,
-    )
-    .unwrap();
-    let producers = 3usize;
-    let per_producer = 10usize;
-    std::thread::scope(|s| {
-        for p in 0..producers {
-            let h = coord.handle();
-            let (image, want_hi, want_lo) = (&image, &want_hi, &want_lo);
-            s.spawn(move || {
-                for i in 0..per_producer {
-                    let (mode, want) = if (p + i) % 2 == 0 {
-                        (Mode::HighAccuracy, want_hi)
-                    } else {
-                        (Mode::HighThroughput, want_lo)
-                    };
-                    let reply = h.infer(image.clone(), mode).expect("sharded inference");
-                    assert_eq!(&reply.logits, want, "producer {p} frame {i} mode {mode:?}");
-                }
-            });
-        }
-    });
-    let m = coord.shutdown();
-    assert_eq!(m.completed, (producers * per_producer) as u64);
-    assert_eq!(m.failed, 0);
-    // per-frame cutting: every sharded batch is a single frame
-    assert_eq!(m.batches, m.completed);
+    for cards in test_cards() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(1, 8, 2),
+                workers: cards,
+                policy: BatchPolicy::default(),
+                route: RoutePolicy::ShardOnly,
+                max_shard_cards: cards,
+            },
+            net.clone(),
+        )
+        .unwrap();
+        let producers = 3usize;
+        let per_producer = 10usize;
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let h = coord.handle();
+                let (image, want_hi, want_lo) = (&image, &want_hi, &want_lo);
+                s.spawn(move || {
+                    for i in 0..per_producer {
+                        let (mode, want) = if (p + i) % 2 == 0 {
+                            (Mode::HighAccuracy, want_hi)
+                        } else {
+                            (Mode::HighThroughput, want_lo)
+                        };
+                        let reply = h.infer(image.clone(), mode).expect("sharded inference");
+                        assert_eq!(
+                            &reply.logits, want,
+                            "producer {p} frame {i} mode {mode:?} ({cards} cards)"
+                        );
+                    }
+                });
+            }
+        });
+        let m = coord.shutdown();
+        assert_eq!(m.completed, (producers * per_producer) as u64);
+        assert_eq!(m.failed, 0);
+        // per-frame cutting: every sharded batch is a single frame
+        assert_eq!(m.batches, m.completed);
+        assert_eq!(m.routed_shard, m.completed);
+        assert_eq!(m.shard_leases, m.completed);
+    }
 }

@@ -1,0 +1,257 @@
+//! Hybrid dispatch under load: both lanes active concurrently over one
+//! worker pool, from one `SubmitHandle`, with every reply bit-identical
+//! to `golden::forward` — plus the routing-policy properties the router
+//! relies on (total, stable, override-respecting).
+//!
+//! Pool widths ride the `BINARRAY_TEST_CARDS` matrix (default `1,2,4`)
+//! so lane arbitration is raced at every width CI claims to cover.
+
+use std::time::Duration;
+
+use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::ArrayConfig;
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, Mode, RoutePolicy,
+};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256, test_cards};
+
+/// A deliberately tiny but structurally complete net (conv+pool, two
+/// dense) so the stress pushes *request counts*, not frame compute.
+fn tiny_net(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 2;
+    let conv = QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, 4 * m * 3 * 3 * 3),
+        alpha_q: (0..4 * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..4).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d: 4,
+        m,
+        kh: 3,
+        kw: 3,
+        c: 3,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool: 2,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, n_in: usize, relu: bool| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * n_in),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    // 10×10×3 → conv3 → 8×8×4 → pool2 → 4×4×4 → dense 8 → dense 5
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![conv, dense(rng, 8, 64, true), dense(rng, 5, 8, false)],
+    };
+    assert_eq!(binarray::isa::compiler::infer_input_dims(&net), (10, 10, 3));
+    (net, Shape::new(10, 10, 3))
+}
+
+/// The acceptance scenario: mixed traffic (explicit batch- and
+/// shard-class requests interleaved by concurrent producers) on one
+/// submit handle.  Both lanes must be active, cards must flow between
+/// them, and every reply must equal the golden model whatever lane
+/// served it.
+#[test]
+fn mixed_traffic_both_lanes_active_and_bit_exact() {
+    let mut rng = Xoshiro256::new(0x417B);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want_hi = golden::forward(&net, &image, shape, None);
+    let want_lo = golden::forward(&net, &image, shape, Some(2));
+    for cards in test_cards() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(1, 8, 2),
+                workers: cards,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_delay: Duration::from_micros(200),
+                },
+                // the policy says batch; shard traffic arrives as
+                // explicit overrides — both lanes live on one pool
+                route: RoutePolicy::BatchOnly,
+                max_shard_cards: 0,
+            },
+            net.clone(),
+        )
+        .unwrap();
+        let producers = 4usize;
+        let per_producer = 16usize;
+        let total = (producers * per_producer) as u64;
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                let h = coord.handle();
+                let (image, want_hi, want_lo) = (&image, &want_hi, &want_lo);
+                s.spawn(move || {
+                    for i in 0..per_producer {
+                        let class = if (p + i) % 3 == 0 {
+                            DispatchClass::Shard
+                        } else {
+                            DispatchClass::Batch
+                        };
+                        let (mode, want) = if i % 2 == 0 {
+                            (Mode::HighAccuracy, want_hi)
+                        } else {
+                            (Mode::HighThroughput, want_lo)
+                        };
+                        let reply = h
+                            .infer_routed(image.clone(), mode, Some(class))
+                            .expect("mixed-traffic inference");
+                        assert_eq!(
+                            &reply.logits, want,
+                            "producer {p} frame {i} {class:?} {mode:?} ({cards} cards)"
+                        );
+                    }
+                });
+            }
+        });
+        let m = coord.shutdown();
+        assert_eq!(m.completed, total, "{cards} cards");
+        assert_eq!(m.failed, 0);
+        // both lanes saw traffic and did real work
+        assert!(m.routed_batch > 0 && m.routed_shard > 0, "{cards} cards");
+        assert_eq!(m.routed_batch + m.routed_shard, total);
+        assert!(m.batch_wall > Duration::ZERO, "batch lane idle ({cards} cards)");
+        assert!(m.shard_wall > Duration::ZERO, "shard lane idle ({cards} cards)");
+        // every shard frame leased at least one card, never more than
+        // the pool, and the ledger balanced
+        assert_eq!(m.shard_leases, m.routed_shard);
+        assert!(m.shard_cards_granted >= m.shard_leases);
+        assert!(m.shard_cards_granted <= m.shard_leases * cards as u64);
+        assert_eq!(m.latency.count() as u64, total);
+    }
+}
+
+/// The adaptive policy end-to-end: frames large enough to shard take the
+/// shard lane while the queue is shallow, and every admitted request
+/// lands in exactly one lane (the counters partition the total).
+#[test]
+fn adaptive_policy_serves_and_partitions_traffic() {
+    let mut rng = Xoshiro256::new(0xADA);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let workers = test_cards().into_iter().max().unwrap_or(2);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_micros(200),
+            },
+            route: RoutePolicy::Adaptive {
+                shard_min_len: shape.len(), // every frame is "large"
+                deep_queue: 3,
+            },
+            max_shard_cards: 0,
+        },
+        net,
+    )
+    .unwrap();
+    let total = 32u64;
+    let rxs: Vec<_> = (0..total)
+        .map(|_| coord.submit(image.clone(), Mode::HighAccuracy))
+        .collect();
+    for rx in rxs {
+        let reply = rx.recv().unwrap().expect("adaptive inference");
+        assert_eq!(reply.logits, want);
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, total);
+    assert_eq!(m.failed, 0);
+    // totality: every request landed in exactly one lane
+    assert_eq!(m.routed_batch + m.routed_shard, total);
+    // the first frame hits an empty queue and a large frame ⇒ shard
+    assert!(m.routed_shard > 0, "shallow-queue large frames must shard");
+}
+
+/// Property: `classify` is total and stable over arbitrary signals, and
+/// an explicit override is never reassigned — for every policy shape.
+#[test]
+fn route_policy_total_stable_and_override_proof() {
+    let mut rng = Xoshiro256::new(0x70407);
+    for _ in 0..2000 {
+        let policy = match rng.range_i64(0, 3) {
+            0 => RoutePolicy::BatchOnly,
+            1 => RoutePolicy::ShardOnly,
+            _ => RoutePolicy::Adaptive {
+                shard_min_len: rng.range_i64(0, 100_000) as usize,
+                deep_queue: rng.range_i64(0, 64) as usize,
+            },
+        };
+        let frame_len = rng.range_i64(0, 1_000_000) as usize;
+        let queue_depth = rng.range_i64(0, 10_000) as usize;
+        // total: exactly one of the two lanes
+        let lane = policy.classify(frame_len, queue_depth);
+        assert!(
+            lane == DispatchClass::Batch || lane == DispatchClass::Shard,
+            "{policy:?} produced no lane"
+        );
+        // stable: same inputs, same lane, every time
+        for _ in 0..3 {
+            assert_eq!(policy.classify(frame_len, queue_depth), lane, "{policy:?}");
+        }
+        assert_eq!(policy.route(None, frame_len, queue_depth), lane);
+        // an explicit class is final whatever the policy would say
+        for explicit in [DispatchClass::Batch, DispatchClass::Shard] {
+            assert_eq!(
+                policy.route(Some(explicit), frame_len, queue_depth),
+                explicit,
+                "{policy:?} reassigned an explicit override"
+            );
+        }
+    }
+}
+
+/// End-to-end proof of the override guarantee: a `ShardOnly` coordinator
+/// still batches an explicit batch-class request, and the lane counters
+/// show it.
+#[test]
+fn explicit_override_survives_opposing_policy() {
+    let mut rng = Xoshiro256::new(0x0BE);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 2,
+            policy: BatchPolicy::default(),
+            route: RoutePolicy::ShardOnly,
+            max_shard_cards: 0,
+        },
+        net,
+    )
+    .unwrap();
+    let forced = coord
+        .infer_routed(image.clone(), Mode::HighAccuracy, Some(DispatchClass::Batch))
+        .unwrap();
+    assert_eq!(forced.logits, want);
+    let routed = coord.infer(image, Mode::HighAccuracy).unwrap();
+    assert_eq!(routed.logits, want);
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 2);
+    assert_eq!(m.routed_batch, 1, "override must reach the batch lane");
+    assert_eq!(m.routed_shard, 1, "policy routes the rest to the shard lane");
+}

@@ -1,20 +1,23 @@
 //! Bit-exactness matrix for cross-card sharding: for every paper
-//! `ArrayConfig`, both runtime accuracy `Mode`s, and 1/2/4 worker cards,
-//! a frame served through the sharded scatter/gather coordinator must be
-//! logit-identical to the unsharded `run_frames` path and to the
-//! bit-accurate `golden::forward` model.  Neither the row-tile split, the
-//! per-layer gather order, nor the card count may ever change an output
-//! byte — and adding cards must never *increase* the simulated frame
-//! latency.
+//! `ArrayConfig`, both runtime accuracy `Mode`s, and every worker-card
+//! count under test, a frame served through the sharded scatter/gather
+//! coordinator must be logit-identical to the unsharded `run_frames`
+//! path and to the bit-accurate `golden::forward` model.  Neither the
+//! row-tile split, the per-layer gather order, nor the card count may
+//! ever change an output byte — and adding cards must never *increase*
+//! the simulated frame latency.
+//!
+//! Card counts come from `BINARRAY_TEST_CARDS` (default `1,2,4`) so the
+//! CI matrix genuinely exercises the widths it claims to cover.
 
 use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
 use binarray::binarray::{BinArraySystem, PAPER_CONFIGS};
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode, ShardPolicy,
+    BatchPolicy, Coordinator, CoordinatorConfig, Mode, RoutePolicy,
 };
 use binarray::golden;
 use binarray::tensor::Shape;
-use binarray::util::{prop, rng::Xoshiro256};
+use binarray::util::{prop, rng::Xoshiro256, test_cards};
 
 /// The structurally complete small net of the plan/execute suite: two
 /// conv layers (pooled + ReLU-only), two dense layers, M = 4 so the two
@@ -75,6 +78,10 @@ fn sharded_equals_unsharded_equals_golden_all_configs_modes_cards() {
     let mut rng = Xoshiro256::new(0xE8AC7);
     let (net, shape) = small_net(&mut rng);
     let image = prop::i8_vec(&mut rng, shape.len());
+    // sorted so the "more cards is never slower" assertion stays
+    // meaningful whatever order the matrix lists the counts in
+    let mut card_counts = test_cards();
+    card_counts.sort_unstable();
     for cfg in PAPER_CONFIGS {
         let mut direct = BinArraySystem::new(cfg, net.clone()).unwrap();
         for mode in [Mode::HighAccuracy, Mode::HighThroughput] {
@@ -87,13 +94,14 @@ fn sharded_equals_unsharded_equals_golden_all_configs_modes_cards() {
             let (unsharded, direct_stats) = direct.run_frame(&image).unwrap();
             assert_eq!(unsharded, want, "unsharded {} {mode:?} != golden", cfg.label());
             let mut prev_cycles = u64::MAX;
-            for cards in [1usize, 2, 4] {
+            for &cards in &card_counts {
                 let coord = Coordinator::start(
                     CoordinatorConfig {
                         array: cfg,
                         workers: cards,
                         policy: BatchPolicy::default(),
-                        shard: ShardPolicy::PerFrame(cards),
+                        route: RoutePolicy::ShardOnly,
+                        max_shard_cards: cards,
                     },
                     net.clone(),
                 )
