@@ -12,7 +12,11 @@
 //!     batcher → worker stack vs calling the simulator directly;
 //!   * cross-card sharding: single-frame latency (host wall and simulated
 //!     cycles) with the frame's row tiles scattered over 1/2/4 worker
-//!     cards vs the unsharded whole-frame path.
+//!     cards vs the unsharded whole-frame path;
+//!   * deadline dispatch: a mixed-QoS overload served by the
+//!     deadline-aware router (shed + EDF + slack routing) vs the same
+//!     load on a deadline-blind FIFO router — met/missed/shed counts in
+//!     the `deadline` JSON section.
 //!
 //! Results are also written to `BENCH_sim_hotpath.json` so the perf
 //! trajectory is machine-readable across PRs (see `bench_gate` and the
@@ -410,6 +414,7 @@ fn main() {
                     RoutePolicy::BatchOnly
                 },
                 max_shard_cards: cards,
+                ..Default::default()
             },
             qnet.clone(),
         )
@@ -470,6 +475,7 @@ fn main() {
             },
             route: RoutePolicy::BatchOnly,
             max_shard_cards: 2,
+            ..Default::default()
         },
         qnet.clone(),
     )
@@ -499,6 +505,99 @@ fn main() {
         hm.summary()
     );
 
+    // === deadline-aware dispatch vs the deadline-blind router ===========
+    // The same mixed-QoS workload twice: once with deadlines stamped on
+    // the requests (the router sheds expired work, EDF-orders the lanes,
+    // and routes tight slack to the latency lane) and once with the
+    // router blind to them (PR-3 behavior: strict FIFO, everything
+    // computed).  Met/missed are judged client-side against the *same*
+    // per-request budgets in both runs.  Workload: ⅓ already-expired
+    // frames (a deadline-blind server burns cards on them), ⅓ moderate
+    // budgets (feasible only if the expired work is shed), ⅓ generous.
+    println!("\n=== deadline dispatch: aware vs FIFO under overload [1,8,2] ===");
+    let dl_frames = 48usize;
+    let dl_workers = 2usize;
+    // budget scale from the measured per-frame wall of this machine
+    let serial_est = direct_per * dl_frames as f64 / dl_workers as f64;
+    let moderate = Duration::from_secs_f64(serial_est * 0.55);
+    let generous = Duration::from_secs_f64(serial_est * 3.0);
+    let budget_of = |i: usize| -> Option<Duration> {
+        match i % 3 {
+            0 => Some(Duration::ZERO), // expired on arrival
+            1 => Some(moderate),
+            _ => Some(generous),
+        }
+    };
+    let run_deadline = |aware: bool| -> (u64, u64, u64) {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(1, 8, 2),
+                workers: dl_workers,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_delay: Duration::from_micros(500),
+                },
+                route: RoutePolicy::BatchOnly,
+                max_shard_cards: 0,
+                lease_slack: Duration::ZERO,
+            },
+            qnet.clone(),
+        )
+        .unwrap();
+        coord.infer(images[0].clone(), Mode::HighAccuracy).unwrap(); // warmup
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..dl_frames)
+            .map(|i| {
+                let deadline = budget_of(i).map(|b| t0 + b);
+                coord.submit_qos(
+                    images[i % images.len()].clone(),
+                    Mode::HighAccuracy,
+                    None,
+                    // the blind run carries the same budgets, unstamped
+                    if aware { deadline } else { None },
+                )
+            })
+            .collect();
+        let (mut met, mut missed, mut shed) = (0u64, 0u64, 0u64);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let deadline = budget_of(i).map(|b| t0 + b);
+            match rx.recv().unwrap() {
+                Ok(_) => {
+                    let on_time = match deadline {
+                        Some(d) => Instant::now() <= d,
+                        None => true,
+                    };
+                    if on_time {
+                        met += 1;
+                    } else {
+                        missed += 1;
+                    }
+                }
+                Err(e) => {
+                    assert!(e.is_deadline(), "only deadline sheds expected: {e}");
+                    shed += 1;
+                }
+            }
+        }
+        coord.shutdown();
+        (met, missed, shed)
+    };
+    let (met_fifo, missed_fifo, _) = run_deadline(false);
+    let (met_aware, missed_aware, shed_aware) = run_deadline(true);
+    println!(
+        "  FIFO (deadline-blind):  {met_fifo:>3} met  {missed_fifo:>3} missed    0 shed"
+    );
+    println!(
+        "  deadline-aware router:  {met_aware:>3} met  {missed_aware:>3} missed  {shed_aware:>3} shed"
+    );
+    println!(
+        "  aware router met {} more deadlines on the same load",
+        met_aware as i64 - met_fifo as i64
+    );
+    let deadline_json = format!(
+        "{{\"frames\": {dl_frames}, \"met_aware\": {met_aware}, \"missed_aware\": {missed_aware}, \"shed_aware\": {shed_aware}, \"met_fifo\": {met_fifo}, \"missed_fifo\": {missed_fifo}}}"
+    );
+
     // === machine-readable record =======================================
     let direct_json: Vec<String> = direct_fps
         .iter()
@@ -513,7 +612,7 @@ fn main() {
         hm.routed_batch, hm.routed_shard, hm.mean_lease(), hm.shard_cards_stolen
     );
     let json = format!(
-        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json}\n}}\n",
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json}\n}}\n",
         cfg.label(),
         1.0 / legacy_per,
         1.0 / plan_per_frame,

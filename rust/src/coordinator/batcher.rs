@@ -10,6 +10,14 @@
 //! `m_run` configuration between frames, and requests of different
 //! [`DispatchClass`]es never share a batch — the two lanes have opposite
 //! admission policies (see [`BatchPolicy::effective`]).
+//!
+//! Within a lane, batches are cut **earliest-deadline-first**: a cut
+//! takes the most urgent `max_batch` requests (requests without a
+//! deadline sort last and keep FIFO order among themselves), so a
+//! tight-deadline frame never queues behind best-effort work that
+//! happened to arrive first.  Ripeness (when a lane *may* cut) stays
+//! age-based — the oldest *submission* in the lane triggers `max_delay`
+//! — so EDF reorders within the admission window without starving it.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -20,7 +28,11 @@ use super::{Mode, Request};
 /// Admission policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Maximum frames per batch.
+    /// Maximum frames per batch.  Clamped to ≥ 1 everywhere it is used:
+    /// a zero here once made every lane — including empty ones —
+    /// permanently ripe, so `cut` returned empty batches forever and the
+    /// router's drain loop never exited (see
+    /// `max_batch_zero_is_clamped_not_a_wedge`).
     pub max_batch: usize,
     /// Maximum time the oldest request may wait before the batch is cut.
     pub max_delay: Duration,
@@ -46,7 +58,12 @@ impl BatchPolicy {
     /// `max_delay` in the queue.
     pub fn effective(self, class: DispatchClass) -> BatchPolicy {
         match class {
-            DispatchClass::Batch => self,
+            // `max_batch == 0` is nonsensical (no batch could ever fill)
+            // and used to wedge the cut loop; treat it as 1.
+            DispatchClass::Batch => BatchPolicy {
+                max_batch: self.max_batch.max(1),
+                max_delay: self.max_delay,
+            },
             DispatchClass::Shard => BatchPolicy {
                 max_batch: 1,
                 max_delay: Duration::ZERO,
@@ -71,10 +88,26 @@ pub struct Batch {
 const LANES: usize = 4;
 
 /// Four-lane (mode × class) FIFO batcher.
+///
+/// Invariant: a lane with `deadlined == 0` is in submission (FIFO)
+/// order — pushes append, the FIFO cut path drains from the front, and
+/// the EDF sort leaves any deadline-less residue sorted by submission —
+/// so every deadline-free path (ripeness peek, cut, shed) stays O(1)
+/// per request, exactly the pre-deadline cost.  Only lanes actually
+/// holding deadlined requests pay the EDF scan/sort.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
     lanes: [VecDeque<Request>; LANES],
+    /// Per-lane count of queued requests carrying a deadline.
+    deadlined: [usize; LANES],
+    /// Per-lane earliest queued deadline — the gate that keeps
+    /// [`Self::shed_expired`] (which runs after every router message)
+    /// O(1) until something can actually be expired.  Conservative:
+    /// a cut may remove the earliest request and leave this stale-low,
+    /// which costs one refreshing scan at the stale instant, never a
+    /// missed shed.
+    earliest: [Option<Instant>; LANES],
 }
 
 fn lane(mode: Mode, class: DispatchClass) -> usize {
@@ -110,6 +143,8 @@ impl Batcher {
         Self {
             policy,
             lanes: std::array::from_fn(|_| VecDeque::new()),
+            deadlined: [0; LANES],
+            earliest: [None; LANES],
         }
     }
 
@@ -118,7 +153,12 @@ impl Batcher {
     /// batching lane.
     pub fn push(&mut self, req: Request) {
         let class = req.class.unwrap_or(DispatchClass::Batch);
-        self.lanes[lane(req.mode, class)].push_back(req);
+        let i = lane(req.mode, class);
+        if let Some(d) = req.deadline {
+            self.deadlined[i] += 1;
+            self.earliest[i] = Some(self.earliest[i].map_or(d, |e| e.min(d)));
+        }
+        self.lanes[i].push_back(req);
     }
 
     pub fn pending(&self) -> usize {
@@ -127,19 +167,35 @@ impl Batcher {
 
     /// Cut the next batch if some lane's policy allows: a lane is ripe
     /// when it holds its class's `max_batch` requests or its oldest
-    /// request has waited its class's `max_delay` (shard lanes are ripe
-    /// the moment they are non-empty).  The lane with the older head
-    /// wins (FIFO fairness across modes and classes).
+    /// *submission* has waited its class's `max_delay` (shard lanes are
+    /// ripe the moment they are non-empty).  The lane with the older
+    /// oldest-submission wins (age fairness across modes and classes);
+    /// within the winning lane the cut takes the most urgent requests
+    /// (earliest deadline first, deadline-less requests FIFO behind
+    /// them).  An empty lane is never ripe and a cut batch is never
+    /// empty — `while let Some(batch) = cut(..)` always terminates.
+    /// Oldest submission in lane `i`: an O(1) front-peek while the lane
+    /// holds no deadlined requests (FIFO invariant), an O(lane) scan
+    /// only where EDF may have reordered it.
+    fn oldest(&self, i: usize) -> Option<Instant> {
+        if self.deadlined[i] == 0 {
+            self.lanes[i].front().map(|r| r.submitted)
+        } else {
+            self.lanes[i].iter().map(|r| r.submitted).min()
+        }
+    }
+
     pub fn cut(&mut self, now: Instant) -> Option<Batch> {
         let ripe = |i: usize| -> bool {
             let eff = self.policy.effective(lane_class(i));
             let q = &self.lanes[i];
-            q.len() >= eff.max_batch
-                || q.front()
-                    .map(|r| now.duration_since(r.submitted) >= eff.max_delay)
-                    .unwrap_or(false)
+            !q.is_empty()
+                && (q.len() >= eff.max_batch
+                    || self
+                        .oldest(i)
+                        .map(|t| now.duration_since(t) >= eff.max_delay)
+                        .unwrap_or(false))
         };
-        let head_age = |q: &VecDeque<Request>| q.front().map(|r| r.submitted);
 
         let mut pick: Option<usize> = None;
         for i in 0..LANES {
@@ -147,8 +203,8 @@ impl Batcher {
                 pick = match pick {
                     None => Some(i),
                     Some(j) => {
-                        // older head first
-                        if head_age(&self.lanes[i]) < head_age(&self.lanes[j]) {
+                        // older lane first
+                        if self.oldest(i) < self.oldest(j) {
                             Some(i)
                         } else {
                             Some(j)
@@ -162,12 +218,81 @@ impl Batcher {
         let n = self.lanes[i]
             .len()
             .min(self.policy.effective(class).max_batch);
-        let requests: Vec<Request> = self.lanes[i].drain(..n).collect();
+        debug_assert!(n >= 1, "a ripe lane is non-empty and max_batch ≥ 1");
+        let requests: Vec<Request> = if self.deadlined[i] == 0 {
+            // deadline-free lane: plain FIFO, no sort
+            self.lanes[i].drain(..n).collect()
+        } else {
+            // Earliest deadline first; `None` deadlines sort last and
+            // the stable sort keeps their FIFO order.  `is_none()`
+            // leads the key so best-effort work trails every deadlined
+            // request — and the residue put back is deadlined-first,
+            // then FIFO, preserving the lane invariant once the last
+            // deadlined request leaves.
+            // The full sort is O(lane·log lane) per cut, paid only
+            // while this lane actually holds deadlined work — EDF needs
+            // a total order and the residue put back must stay
+            // deterministic (deadlined-first, then FIFO) so the
+            // deadline-free fast paths re-arm once the last deadline
+            // leaves.
+            let mut all: Vec<Request> = self.lanes[i].drain(..).collect();
+            all.sort_by_key(|r| (r.deadline.is_none(), r.deadline, r.submitted, r.id));
+            let rest = all.split_off(n);
+            self.lanes[i] = rest.into();
+            let cut_deadlined = all.iter().filter(|r| r.deadline.is_some()).count();
+            self.deadlined[i] -= cut_deadlined;
+            if self.deadlined[i] == 0 {
+                self.earliest[i] = None;
+            }
+            // else: `earliest` may now be stale-low (the cut may have
+            // taken the earliest deadline) — shed_expired refreshes it
+            // on its next scan, and stale-low can only cost a scan,
+            // never miss a shed.
+            all
+        };
         Some(Batch {
             mode: lane_mode(i),
             class,
             requests,
         })
+    }
+
+    /// Remove and return every queued request whose deadline has already
+    /// passed at `now` — the router answers them with a typed
+    /// deadline-exceeded error instead of spending a card (or a lease)
+    /// on work nobody can use.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut shed = Vec::new();
+        for i in 0..LANES {
+            // This runs after every router message: skip lanes that
+            // hold no deadline at all, and lanes whose earliest queued
+            // deadline is still in the future — the common cases cost
+            // O(1), a scan happens only when something can expire (or
+            // once per stale cached minimum).
+            if self.deadlined[i] == 0 {
+                continue;
+            }
+            match self.earliest[i] {
+                Some(e) if now < e => continue,
+                _ => {}
+            }
+            let mut keep = VecDeque::with_capacity(self.lanes[i].len());
+            let mut min_left: Option<Instant> = None;
+            for r in self.lanes[i].drain(..) {
+                if r.expired(now) {
+                    self.deadlined[i] -= 1;
+                    shed.push(r);
+                } else {
+                    if let Some(d) = r.deadline {
+                        min_left = Some(min_left.map_or(d, |m| m.min(d)));
+                    }
+                    keep.push_back(r);
+                }
+            }
+            self.lanes[i] = keep;
+            self.earliest[i] = min_left;
+        }
+        shed
     }
 
     /// Cut whatever is left (drain at shutdown), respecting each lane's
@@ -186,6 +311,8 @@ impl Batcher {
                     requests,
                 });
             }
+            self.deadlined[i] = 0;
+            self.earliest[i] = None;
         }
         out
     }
@@ -201,7 +328,15 @@ mod tests {
             image: vec![],
             mode,
             class: Some(DispatchClass::Batch),
+            deadline: None,
             submitted: at,
+        }
+    }
+
+    fn deadline_req(id: u64, at: Instant, deadline: Instant) -> Request {
+        Request {
+            deadline: Some(deadline),
+            ..req(id, Mode::HighAccuracy, at)
         }
     }
 
@@ -337,6 +472,151 @@ mod tests {
         });
         let batch = b.cut(t0 + Duration::from_secs(1)).expect("aged out");
         assert_eq!(batch.class, DispatchClass::Batch);
+    }
+
+    /// Regression for the `max_batch: 0` wedge: the old ripeness test
+    /// `q.len() >= eff.max_batch` made every lane — including empty
+    /// ones — permanently ripe at `max_batch == 0`, so `cut` returned
+    /// empty batches forever and the router's `while let Some(batch)`
+    /// drain never exited.  With the clamp, a zero policy behaves as
+    /// `max_batch == 1`: every cut is non-empty and the loop terminates.
+    #[test]
+    fn max_batch_zero_is_clamped_not_a_wedge() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 0,
+            max_delay: Duration::from_secs(100),
+        });
+        let t0 = Instant::now();
+        assert!(b.cut(t0).is_none(), "empty lanes must never be ripe");
+        for i in 0..3 {
+            b.push(req(i, Mode::HighAccuracy, t0));
+        }
+        let mut served = 0usize;
+        for _ in 0..8 {
+            // bounded loop: the pre-fix batcher spins here forever
+            match b.cut(t0) {
+                Some(batch) => {
+                    assert!(!batch.requests.is_empty(), "cut batches are never empty");
+                    served += batch.requests.len();
+                }
+                None => break,
+            }
+        }
+        assert_eq!(served, 3, "every request served exactly once");
+        assert_eq!(b.pending(), 0);
+        assert!(b.cut(t0).is_none(), "drained batcher stops cutting");
+        // flush with a zero policy terminates too
+        b.push(req(9, Mode::HighThroughput, t0));
+        let flushed = b.flush();
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 1);
+    }
+
+    #[test]
+    fn cuts_earliest_deadline_first_within_a_lane() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        // arrival order 0,1,2,3 — deadline order 2 (10ms), 0 (30ms),
+        // then the deadline-less 1 and 3 in FIFO order
+        b.push(deadline_req(0, t0, t0 + 30 * ms));
+        b.push(req(1, Mode::HighAccuracy, t0 + ms));
+        b.push(deadline_req(2, t0 + 2 * ms, t0 + 10 * ms));
+        b.push(req(3, Mode::HighAccuracy, t0 + 3 * ms));
+        let first = b.cut(t0 + 4 * ms).expect("ripe by delay");
+        let ids: Vec<u64> = first.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 0], "most urgent two cut first");
+        let second = b.cut(t0 + 4 * ms).expect("rest still ripe");
+        let ids: Vec<u64> = second.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3], "deadline-less requests keep FIFO order");
+    }
+
+    #[test]
+    fn edf_reorder_does_not_break_delay_ripeness() {
+        // after an EDF cut the lane's front may be a *younger* request;
+        // ripeness must still fire off the oldest submission in the lane
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_millis(10),
+        });
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        b.push(req(0, Mode::HighAccuracy, t0)); // oldest, no deadline
+        b.push(deadline_req(1, t0 + ms, t0 + 5 * ms));
+        b.push(deadline_req(2, t0 + ms, t0 + 6 * ms));
+        let first = b.cut(t0 + 10 * ms).expect("oldest submission aged out");
+        let ids: Vec<u64> = first.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2], "urgent pair cut first");
+        // request 0 is now alone at the front; it aged out long ago
+        let second = b.cut(t0 + 10 * ms).expect("leftover oldest still ripe");
+        assert_eq!(second.requests[0].id, 0);
+    }
+
+    #[test]
+    fn shed_expired_removes_only_expired_across_lanes() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_secs(100),
+        });
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        b.push(deadline_req(0, t0, t0 + 5 * ms)); // expires
+        b.push(deadline_req(1, t0, t0 + 50 * ms)); // survives
+        b.push(req(2, Mode::HighAccuracy, t0)); // no deadline, survives
+        b.push(Request {
+            class: Some(DispatchClass::Shard),
+            ..deadline_req(3, t0, t0 + 2 * ms) // expires, shard lane
+        });
+        let shed = b.shed_expired(t0 + 10 * ms);
+        let mut ids: Vec<u64> = shed.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 3]);
+        assert_eq!(b.pending(), 2);
+        assert!(b.shed_expired(t0 + 10 * ms).is_empty(), "idempotent");
+        // survivors still drain normally
+        let batches = b.flush();
+        assert_eq!(batches.len(), 1, "both survivors share the batch lane");
+        let mut left: Vec<u64> = batches[0].requests.iter().map(|r| r.id).collect();
+        left.sort_unstable();
+        assert_eq!(left, vec![1, 2]);
+    }
+
+    /// The per-lane deadlined counters (which gate the O(1) fast paths)
+    /// stay exact through push / EDF cut / shed / flush.
+    #[test]
+    fn deadlined_counters_track_every_path() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        let lane_ha = lane(Mode::HighAccuracy, DispatchClass::Batch);
+        assert_eq!(b.deadlined, [0; LANES]);
+        b.push(req(0, Mode::HighAccuracy, t0));
+        b.push(deadline_req(1, t0, t0 + 5 * ms));
+        b.push(deadline_req(2, t0, t0 + 50 * ms));
+        b.push(deadline_req(3, t0, t0 + 60 * ms));
+        assert_eq!(b.deadlined[lane_ha], 3);
+        // shed the one expired request
+        assert_eq!(b.shed_expired(t0 + 10 * ms).len(), 1);
+        assert_eq!(b.deadlined[lane_ha], 2);
+        // EDF cut takes both remaining deadlined requests
+        let batch = b.cut(t0 + 10 * ms).expect("ripe");
+        assert!(batch.requests.iter().all(|r| r.deadline.is_some()));
+        assert_eq!(b.deadlined[lane_ha], 0);
+        // the deadline-free residue cuts on the FIFO path
+        let batch = b.cut(t0 + 10 * ms).expect("residue ripe");
+        assert_eq!(batch.requests[0].id, 0);
+        assert_eq!(b.pending(), 0);
+        // flush resets the counters
+        b.push(deadline_req(9, t0, t0 + 50 * ms));
+        assert_eq!(b.deadlined[lane_ha], 1);
+        b.flush();
+        assert_eq!(b.deadlined, [0; LANES]);
     }
 
     #[test]

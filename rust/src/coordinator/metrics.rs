@@ -84,6 +84,20 @@ pub struct Metrics {
     /// Wall time the shard lane spent in scatter/gather frames (its
     /// share of `sim_wall` — lane occupancy).
     pub shard_wall: Duration,
+    /// Deadlined requests answered on time.
+    pub deadline_met: u64,
+    /// Deadlined requests that completed, but late (the frame was
+    /// already computing when the deadline passed — still answered Ok).
+    pub deadline_missed: u64,
+    /// Deadlined requests shed unserved (`InferError::DeadlineExceeded`)
+    /// because their deadline expired before any card started them.
+    /// Sheds also count into `failed` — every admitted request is
+    /// answered exactly once.
+    pub deadline_shed: u64,
+    /// Wait from a shard-lane lease request to its grant, hysteresis
+    /// included (how much latency the orchestrator spent shopping for a
+    /// wider lease).
+    pub lease_wait: LatencyStats,
 }
 
 impl Metrics {
@@ -108,6 +122,12 @@ impl Metrics {
         self.shard_cards_stolen += other.shard_cards_stolen;
         self.batch_wall += other.batch_wall;
         self.shard_wall += other.shard_wall;
+        self.deadline_met += other.deadline_met;
+        self.deadline_missed += other.deadline_missed;
+        self.deadline_shed += other.deadline_shed;
+        self.lease_wait
+            .samples_us
+            .extend_from_slice(&other.lease_wait.samples_us);
     }
 
     /// Simulated-accelerator throughput (frames / simulated second at
@@ -168,6 +188,23 @@ impl Metrics {
                 None => String::new(),
             },
             self.lane_summary(),
+        ) + &self.deadline_summary()
+    }
+
+    /// Deadlines seen across all requests (0 ⇒ the fragment is elided).
+    fn deadlined(&self) -> u64 {
+        self.deadline_met + self.deadline_missed + self.deadline_shed
+    }
+
+    /// Deadline fragment of [`Self::summary`] (empty until a deadlined
+    /// request is answered, so best-effort reports stay unchanged).
+    fn deadline_summary(&self) -> String {
+        if self.deadlined() == 0 {
+            return String::new();
+        }
+        format!(
+            " | deadlines met={} missed={} shed={}",
+            self.deadline_met, self.deadline_missed, self.deadline_shed
         )
     }
 
@@ -183,10 +220,14 @@ impl Metrics {
         );
         if self.shard_leases > 0 {
             s.push_str(&format!(
-                " (lease {:.1} cards, {} stolen)",
+                " (lease {:.1} cards, {} stolen",
                 self.mean_lease(),
                 self.shard_cards_stolen
             ));
+            if self.lease_wait.count() > 0 {
+                s.push_str(&format!(", wait p50 {:?}", self.lease_wait.percentile(50.0)));
+            }
+            s.push(')');
         }
         s
     }
@@ -252,6 +293,9 @@ mod tests {
             shard_cards_stolen: 1,
             batch_wall: Duration::from_millis(4),
             shard_wall: Duration::from_millis(6),
+            deadline_met: 2,
+            deadline_missed: 1,
+            deadline_shed: 4,
             ..Default::default()
         };
         a.merge(&b);
@@ -266,6 +310,32 @@ mod tests {
         assert_eq!(a.mean_lease(), 3.0);
         assert_eq!(a.batch_wall, Duration::from_millis(4));
         assert_eq!(a.shard_wall, Duration::from_millis(6));
+        assert_eq!(a.deadline_met, 2);
+        assert_eq!(a.deadline_missed, 1);
+        assert_eq!(a.deadline_shed, 4);
+    }
+
+    #[test]
+    fn deadline_summary_only_after_deadlined_traffic() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("deadlines"));
+        m.deadline_met = 3;
+        m.deadline_shed = 2;
+        assert!(m.summary().contains("deadlines met=3 missed=0 shed=2"));
+    }
+
+    #[test]
+    fn lease_wait_rides_the_lane_summary() {
+        let mut m = Metrics {
+            routed_shard: 1,
+            shard_leases: 1,
+            shard_cards_granted: 2,
+            ..Default::default()
+        };
+        assert!(m.summary().contains("lease 2.0 cards, 0 stolen)"));
+        assert!(!m.summary().contains("wait p50"));
+        m.lease_wait.record(Duration::from_micros(120));
+        assert!(m.summary().contains("wait p50"));
     }
 
     #[test]

@@ -8,10 +8,11 @@
 //!
 //! * [`route`] — per-request dispatch routing: every request is admitted
 //!   under a [`DispatchClass`] (explicit override or [`RoutePolicy`]
-//!   decision from frame size and queue depth), and both dispatch lanes
-//!   run concurrently over one worker pool;
+//!   decision from frame size, queue depth and deadline slack), and both
+//!   dispatch lanes run concurrently over one worker pool;
 //! * [`batcher`] — dynamic batching with a max-batch / max-delay policy,
-//!   one queue per (accuracy mode × dispatch class);
+//!   one queue per (accuracy mode × dispatch class), cut
+//!   earliest-deadline-first within each lane;
 //! * [`server`] — the router/arbiter plus a worker pool where each worker
 //!   owns one simulated BinArray instance (one card).  Batch-class
 //!   requests run whole frames back-to-back exactly like the ping-pong
@@ -29,6 +30,14 @@
 //! Failures are answered, never dropped: a malformed request yields an
 //! `Err(`[`InferError`]`)` on its reply channel (and an `Err` from
 //! `infer`), instead of killing a worker and stranding callers.
+//!
+//! Deadlines are first-class QoS: a request may carry an absolute
+//! [`Request::deadline`].  Slack feeds [`RoutePolicy::Adaptive`] (tight
+//! slack ⇒ the shard/latency lane), lanes cut earliest-deadline-first,
+//! the shard orchestrator spends part of the slack waiting for a *wider*
+//! card lease, and work whose deadline has already passed is shed with
+//! [`InferError::DeadlineExceeded`] instead of burning a card on a reply
+//! nobody can use.
 
 pub mod batcher;
 pub mod metrics;
@@ -73,7 +82,27 @@ pub struct Request {
     /// the router at admission — the [`RoutePolicy`] decision.  Stamped
     /// exactly once; never reassigned afterwards.
     pub class: Option<DispatchClass>,
+    /// Absolute completion deadline.  `None` = best effort.  A deadline
+    /// is a QoS *signal*, not a hard abort: routing, batch ordering and
+    /// lease hysteresis spend slack where it helps, expired work is shed
+    /// before compute starts ([`InferError::DeadlineExceeded`]), and a
+    /// frame that expires mid-compute still completes (counted
+    /// `deadline_missed`).
+    pub deadline: Option<std::time::Instant>,
     pub submitted: std::time::Instant,
+}
+
+impl Request {
+    /// Remaining slack at `now`: `None` without a deadline, otherwise
+    /// the time left (zero once expired).
+    pub fn slack(&self, now: std::time::Instant) -> Option<std::time::Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(now))
+    }
+
+    /// Has this request's deadline already passed at `now`?
+    pub fn expired(&self, now: std::time::Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 #[cfg(test)]
@@ -86,5 +115,30 @@ mod tests {
         assert_eq!(Mode::HighThroughput.m_run(4, 2), 2);
         assert_eq!(Mode::HighThroughput.m_run(2, 4), 2);
         assert_eq!(Mode::HighAccuracy.m_run(2, 2), 2);
+    }
+
+    #[test]
+    fn request_slack_and_expiry() {
+        use std::time::{Duration, Instant};
+        let now = Instant::now();
+        let mut req = Request {
+            id: 0,
+            image: vec![],
+            mode: Mode::HighAccuracy,
+            class: None,
+            deadline: None,
+            submitted: now,
+        };
+        assert_eq!(req.slack(now), None, "no deadline, no slack");
+        assert!(!req.expired(now));
+        req.deadline = Some(now + Duration::from_millis(10));
+        assert_eq!(req.slack(now), Some(Duration::from_millis(10)));
+        assert!(!req.expired(now));
+        assert!(req.expired(now + Duration::from_millis(10)), "at the deadline");
+        assert_eq!(
+            req.slack(now + Duration::from_millis(25)),
+            Some(Duration::ZERO),
+            "slack saturates at zero past the deadline"
+        );
     }
 }

@@ -6,8 +6,9 @@
 //! request level: every [`crate::coordinator::Request`] is assigned a
 //! [`DispatchClass`] when it is admitted — either an explicit override
 //! from the caller, or a [`RoutePolicy`] decision from what the router
-//! can observe (frame size, current queue depth) — and the two dispatch
-//! lanes run concurrently over one worker pool:
+//! can observe (frame size, current queue depth, and the request's
+//! remaining deadline slack) — and the two dispatch lanes run
+//! concurrently over one worker pool:
 //!
 //! * [`DispatchClass::Batch`] — the throughput lane: whole frames are
 //!   batched back-to-back onto single cards (amortized DMA, pool
@@ -17,12 +18,14 @@
 //!   and gather between layers (frame latency shrinks with cards).
 //!
 //! Routing is **total and stable**: `classify` is a pure function of its
-//! inputs (every `(frame_len, queue_depth)` lands in exactly one lane),
-//! the router stamps the class once at admission and never re-examines
-//! it, and an explicit override is never reassigned (see
+//! inputs (every `(frame_len, queue_depth, slack)` lands in exactly one
+//! lane), the router stamps the class once at admission and never
+//! re-examines it, and an explicit override is never reassigned (see
 //! [`RoutePolicy::route`]).  Whatever the lane, replies stay
 //! bit-identical to [`crate::golden::forward`] — routing moves *where* a
 //! frame computes, never *what* it computes.
+
+use std::time::Duration;
 
 /// Which dispatch lane serves a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -44,13 +47,15 @@ pub enum RoutePolicy {
     /// Every request takes the shard lane (the pre-hybrid dedicated
     /// "`ShardPolicy::PerFrame`" behavior).
     ShardOnly,
-    /// Route by observed load: a frame big enough for sharding to pay
-    /// off (`frame_len ≥ shard_min_len`) goes to the shard lane while
-    /// the queue is shallow (`queue_depth < deep_queue`); everything
-    /// else batches.  A deep
-    /// queue means the server is in a throughput regime — spending the
-    /// whole pool on one frame's latency while others wait would hurt
-    /// aggregate latency, so large frames fall back to batching there.
+    /// Route by observed load and urgency: while the queue is shallow
+    /// (`queue_depth < deep_queue`), a frame goes to the shard lane when
+    /// it is big enough for sharding to pay off
+    /// (`frame_len ≥ shard_min_len`) **or** its deadline slack is tight
+    /// (`slack ≤ tight_slack` — the latency lane is what deadlines buy).
+    /// Everything else batches.  A deep queue means the server is in a
+    /// throughput regime — spending the whole pool on one frame's
+    /// latency while others wait would hurt aggregate latency, so even
+    /// urgent frames fall back to batching there.
     Adaptive {
         /// Smallest frame (in input words) worth scattering: below this
         /// the per-layer scatter/gather traffic outweighs the row-tile
@@ -59,22 +64,36 @@ pub enum RoutePolicy {
         /// Queue depth at which the router stops sharding (`0` = never
         /// shard — the queue is always considered deep).
         deep_queue: usize,
+        /// Largest remaining deadline slack that still counts as
+        /// "tight" — at or below it a frame takes the shard lane
+        /// whatever its size.  `Duration::ZERO` disables the signal for
+        /// unexpired requests (and requests without a deadline are
+        /// never tight).
+        tight_slack: Duration,
     },
 }
 
 impl RoutePolicy {
     /// Pick the lane for a request without an explicit class.  Pure and
-    /// total: the same `(frame_len, queue_depth)` always yields the same
-    /// single lane.
-    pub fn classify(&self, frame_len: usize, queue_depth: usize) -> DispatchClass {
+    /// total: the same `(frame_len, queue_depth, slack)` always yields
+    /// the same single lane.  `slack` is the request's remaining
+    /// deadline budget at admission (`None` = no deadline).
+    pub fn classify(
+        &self,
+        frame_len: usize,
+        queue_depth: usize,
+        slack: Option<Duration>,
+    ) -> DispatchClass {
         match *self {
             RoutePolicy::BatchOnly => DispatchClass::Batch,
             RoutePolicy::ShardOnly => DispatchClass::Shard,
             RoutePolicy::Adaptive {
                 shard_min_len,
                 deep_queue,
+                tight_slack,
             } => {
-                if frame_len >= shard_min_len && queue_depth < deep_queue {
+                let tight = slack.is_some_and(|s| s <= tight_slack);
+                if queue_depth < deep_queue && (frame_len >= shard_min_len || tight) {
                     DispatchClass::Shard
                 } else {
                     DispatchClass::Batch
@@ -91,8 +110,9 @@ impl RoutePolicy {
         explicit: Option<DispatchClass>,
         frame_len: usize,
         queue_depth: usize,
+        slack: Option<Duration>,
     ) -> DispatchClass {
-        explicit.unwrap_or_else(|| self.classify(frame_len, queue_depth))
+        explicit.unwrap_or_else(|| self.classify(frame_len, queue_depth, slack))
     }
 }
 
@@ -100,12 +120,26 @@ impl RoutePolicy {
 mod tests {
     use super::*;
 
+    const SLACKS: [Option<Duration>; 3] = [
+        None,
+        Some(Duration::ZERO),
+        Some(Duration::from_secs(3600)),
+    ];
+
     #[test]
     fn fixed_policies_ignore_signals() {
         for len in [0usize, 1, 6912, usize::MAX] {
             for depth in [0usize, 7, usize::MAX] {
-                assert_eq!(RoutePolicy::BatchOnly.classify(len, depth), DispatchClass::Batch);
-                assert_eq!(RoutePolicy::ShardOnly.classify(len, depth), DispatchClass::Shard);
+                for slack in SLACKS {
+                    assert_eq!(
+                        RoutePolicy::BatchOnly.classify(len, depth, slack),
+                        DispatchClass::Batch
+                    );
+                    assert_eq!(
+                        RoutePolicy::ShardOnly.classify(len, depth, slack),
+                        DispatchClass::Shard
+                    );
+                }
             }
         }
     }
@@ -115,17 +149,63 @@ mod tests {
         let p = RoutePolicy::Adaptive {
             shard_min_len: 1000,
             deep_queue: 4,
+            tight_slack: Duration::ZERO,
         };
-        assert_eq!(p.classify(999, 0), DispatchClass::Batch, "small frame");
-        assert_eq!(p.classify(1000, 0), DispatchClass::Shard, "large, idle");
-        assert_eq!(p.classify(1000, 3), DispatchClass::Shard, "large, shallow");
-        assert_eq!(p.classify(1000, 4), DispatchClass::Batch, "large, deep");
+        assert_eq!(p.classify(999, 0, None), DispatchClass::Batch, "small frame");
+        assert_eq!(p.classify(1000, 0, None), DispatchClass::Shard, "large, idle");
+        assert_eq!(p.classify(1000, 3, None), DispatchClass::Shard, "large, shallow");
+        assert_eq!(p.classify(1000, 4, None), DispatchClass::Batch, "large, deep");
         // deep_queue = 0: the queue is always deep — sharding never fires
         let never = RoutePolicy::Adaptive {
             shard_min_len: 0,
             deep_queue: 0,
+            tight_slack: Duration::from_secs(3600),
         };
-        assert_eq!(never.classify(usize::MAX, 0), DispatchClass::Batch);
+        assert_eq!(never.classify(usize::MAX, 0, None), DispatchClass::Batch);
+        assert_eq!(
+            never.classify(usize::MAX, 0, Some(Duration::ZERO)),
+            DispatchClass::Batch,
+            "deep queue overrides even a tight deadline"
+        );
+    }
+
+    #[test]
+    fn adaptive_tight_slack_takes_the_latency_lane() {
+        let p = RoutePolicy::Adaptive {
+            shard_min_len: 1000,
+            deep_queue: 4,
+            tight_slack: Duration::from_millis(5),
+        };
+        // small frame, but the deadline is tight ⇒ shard
+        assert_eq!(
+            p.classify(10, 0, Some(Duration::from_millis(5))),
+            DispatchClass::Shard,
+            "tight slack"
+        );
+        assert_eq!(
+            p.classify(10, 0, Some(Duration::from_millis(6))),
+            DispatchClass::Batch,
+            "slack just above the threshold"
+        );
+        // no deadline is never tight
+        assert_eq!(p.classify(10, 0, None), DispatchClass::Batch);
+        // a deep queue still wins over urgency
+        assert_eq!(
+            p.classify(10, 4, Some(Duration::ZERO)),
+            DispatchClass::Batch,
+            "deep queue"
+        );
+        // tight_slack = ZERO only fires for already-expired slack — the
+        // router sheds those before classify, so the signal is inert
+        let inert = RoutePolicy::Adaptive {
+            shard_min_len: 1000,
+            deep_queue: 4,
+            tight_slack: Duration::ZERO,
+        };
+        assert_eq!(
+            inert.classify(10, 0, Some(Duration::from_nanos(1))),
+            DispatchClass::Batch
+        );
     }
 
     #[test]
@@ -136,20 +216,23 @@ mod tests {
             RoutePolicy::Adaptive {
                 shard_min_len: 64,
                 deep_queue: 2,
+                tight_slack: Duration::from_millis(1),
             },
         ];
         for p in policies {
             for len in [0usize, 64, 100_000] {
                 for depth in [0usize, 2, 50] {
-                    assert_eq!(
-                        p.route(Some(DispatchClass::Batch), len, depth),
-                        DispatchClass::Batch
-                    );
-                    assert_eq!(
-                        p.route(Some(DispatchClass::Shard), len, depth),
-                        DispatchClass::Shard
-                    );
-                    assert_eq!(p.route(None, len, depth), p.classify(len, depth));
+                    for slack in SLACKS {
+                        assert_eq!(
+                            p.route(Some(DispatchClass::Batch), len, depth, slack),
+                            DispatchClass::Batch
+                        );
+                        assert_eq!(
+                            p.route(Some(DispatchClass::Shard), len, depth, slack),
+                            DispatchClass::Shard
+                        );
+                        assert_eq!(p.route(None, len, depth, slack), p.classify(len, depth, slack));
+                    }
                 }
             }
         }

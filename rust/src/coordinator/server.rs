@@ -33,6 +33,15 @@
 //! running a batch, and a pending lease has priority over queued batches
 //! when a card frees up (the shard lane is the latency lane).  Whatever
 //! the lane, replies are bit-identical to [`golden::forward`].
+//!
+//! Deadlines thread through the whole path: expired work is shed with
+//! [`InferError::DeadlineExceeded`] at every point where it would next
+//! cost something (admission, the batcher queue, a worker about to
+//! compute it, the orchestrator about to lease for it), and a pending
+//! lease may wait a bounded, slack-derived budget
+//! ([`CoordinatorConfig::lease_slack`]) for busy cards to free before
+//! accepting a narrow grant — under bursty batch traffic a slightly
+//! later, wider lease is the lower-latency choice.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -70,19 +79,43 @@ pub struct Reply {
     pub mode: Mode,
 }
 
-/// A failed inference: the request was admitted but could not be served
-/// (malformed image, dead worker pool…).  Failures are *answered* on the
-/// reply channel — a bad batch must never strand its callers on
-/// `RecvError` or take the worker thread down with it.
-#[derive(Clone, Debug)]
-pub struct InferError {
-    pub id: u64,
-    pub reason: String,
+/// A request that was admitted but not served.  Failures are *answered*
+/// on the reply channel — a bad batch must never strand its callers on
+/// `RecvError` or take the worker thread down with it — and they are
+/// typed, so a caller can tell QoS shedding apart from real faults.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InferError {
+    /// The request could not be served (malformed image, dead worker
+    /// pool…).
+    Failed { id: u64, reason: String },
+    /// The request was shed unserved: its deadline expired before any
+    /// card started computing it, so the coordinator answered instead of
+    /// burning compute on a reply nobody can use.
+    DeadlineExceeded { id: u64 },
+}
+
+impl InferError {
+    /// The id of the request this error answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            InferError::Failed { id, .. } | InferError::DeadlineExceeded { id } => *id,
+        }
+    }
+
+    /// Was this a deadline shed (as opposed to a serving fault)?
+    pub fn is_deadline(&self) -> bool {
+        matches!(self, InferError::DeadlineExceeded { .. })
+    }
 }
 
 impl std::fmt::Display for InferError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "request {}: {}", self.id, self.reason)
+        match self {
+            InferError::Failed { id, reason } => write!(f, "request {id}: {reason}"),
+            InferError::DeadlineExceeded { id } => {
+                write!(f, "request {id}: deadline exceeded before compute started")
+            }
+        }
     }
 }
 
@@ -106,6 +139,13 @@ pub struct CoordinatorConfig {
     /// pool).  A frame's actual scatter width is `min(max_shard_cards,
     /// cards not busy in the batch lane, pool size)`, decided per lease.
     pub max_shard_cards: usize,
+    /// Lease-width hysteresis: how long a pending shard lease may wait
+    /// for busy cards to free before accepting a grant narrower than it
+    /// asked for.  Per frame the actual budget is further capped at half
+    /// the frame's remaining deadline slack (a lease must never spend
+    /// the slack it exists to protect).  `Duration::ZERO` = take
+    /// whatever is free immediately.
+    pub lease_slack: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -116,6 +156,7 @@ impl Default for CoordinatorConfig {
             policy: BatchPolicy::default(),
             route: RoutePolicy::BatchOnly,
             max_shard_cards: 0,
+            lease_slack: Duration::ZERO,
         }
     }
 }
@@ -127,13 +168,20 @@ enum RouterMsg {
     Submit(Request, Sender<ReplyResult>),
     /// A worker finished a batch and is free again.
     WorkerDone(usize),
-    /// The shard orchestrator wants up to `want` cards.
+    /// The shard orchestrator wants up to `want` cards, and will accept
+    /// a narrower grant after `wait` (the frame's hysteresis budget).
     Lease {
         want: usize,
+        wait: Duration,
         reply: Sender<Vec<usize>>,
     },
-    /// The orchestrator returns leased cards.
-    Unlease(Vec<usize>),
+    /// The orchestrator returns leased cards and retires `frames` frames
+    /// from the shard-inflight ledger.  `frames` is explicit — the
+    /// inflight count is incremented per *request* at dispatch, so the
+    /// decrement must not assume shard batches are singletons (today's
+    /// `BatchPolicy::effective` invariant, not a law of nature).  A
+    /// frame that never got a lease unleases `ids: []`.
+    Unlease { ids: Vec<usize>, frames: usize },
     /// The orchestrator discovered a leased card is dead (its channel is
     /// gone): drop it from the pool instead of returning it to `free`.
     Retire(usize),
@@ -188,6 +236,9 @@ struct ShardOracle {
     m_arch: usize,
     /// Most cards one frame asks to lease (`min(max_shard_cards, pool)`).
     max_lease: usize,
+    /// Per-frame cap on the lease-width hysteresis wait
+    /// ([`CoordinatorConfig::lease_slack`]).
+    lease_slack: Duration,
 }
 
 /// Cloneable submit-side handle: many producer threads can feed one
@@ -215,12 +266,28 @@ impl SubmitHandle {
         mode: Mode,
         class: Option<DispatchClass>,
     ) -> Receiver<ReplyResult> {
+        self.submit_qos(image, mode, class, None)
+    }
+
+    /// Submit with full QoS control: an optional dispatch-class override
+    /// and an optional absolute deadline.  Slack feeds adaptive routing
+    /// and lease hysteresis; a request whose deadline passes before any
+    /// card starts it is answered with
+    /// [`InferError::DeadlineExceeded`] instead of being computed.
+    pub fn submit_qos(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+    ) -> Receiver<ReplyResult> {
         let (tx, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             image,
             mode,
             class,
+            deadline,
             submitted: Instant::now(),
         };
         // If the router is gone the receiver will simply yield RecvError.
@@ -241,6 +308,17 @@ impl SubmitHandle {
         class: Option<DispatchClass>,
     ) -> Result<Reply> {
         Ok(self.submit_routed(image, mode, class).recv()??)
+    }
+
+    /// Submit with full QoS control and wait.
+    pub fn infer_qos(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+    ) -> Result<Reply> {
+        Ok(self.submit_qos(image, mode, class, deadline).recv()??)
     }
 }
 
@@ -301,6 +379,7 @@ impl Coordinator {
             max_m: net.max_m(),
             m_arch: cfg.array.m_arch,
             max_lease,
+            lease_slack: cfg.lease_slack,
         };
         let (orch_tx, orch_rx) = channel::<OrchMsg>();
         let orchestrator = {
@@ -324,6 +403,8 @@ impl Coordinator {
                 free: (0..n_workers).collect(),
                 live: n_workers,
                 leased: 0,
+                running: vec![0; n_workers],
+                batch_inflight: 0,
                 pending_batches: VecDeque::new(),
                 pending_lease: None,
                 shard_inflight: 0,
@@ -370,6 +451,17 @@ impl Coordinator {
         self.handle.submit_routed(image, mode, class)
     }
 
+    /// Submit with full QoS control (class override + deadline).
+    pub fn submit_qos(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+    ) -> Receiver<ReplyResult> {
+        self.handle.submit_qos(image, mode, class, deadline)
+    }
+
     /// Submit and wait.
     pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
         self.handle.infer(image, mode)
@@ -383,6 +475,17 @@ impl Coordinator {
         class: Option<DispatchClass>,
     ) -> Result<Reply> {
         self.handle.infer_routed(image, mode, class)
+    }
+
+    /// Submit with full QoS control (class override + deadline) and wait.
+    pub fn infer_qos(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+    ) -> Result<Reply> {
+        self.handle.infer_qos(image, mode, class, deadline)
     }
 
     /// Drain and stop all threads, returning the final metrics.
@@ -414,10 +517,27 @@ impl Coordinator {
 /// Registered reply channels keyed by request id.
 type ReplyMap = std::collections::HashMap<u64, Sender<ReplyResult>>;
 
-/// The orchestrator's parked request for cards.
+/// The orchestrator's parked request for cards.  While `expires` is in
+/// the future the router may hold the lease open waiting for busy cards
+/// to free (lease-width hysteresis); at expiry it grants whatever ≥ 1
+/// cards are free.
 struct PendingLease {
     want: usize,
     reply: Sender<Vec<usize>>,
+    /// When the lease was requested (feeds the `lease_wait` metric).
+    asked: Instant,
+    /// End of the hysteresis window: grant narrow rather than wait past
+    /// this point.
+    expires: Instant,
+}
+
+/// What [`Router::lease_decision`] says to do with a pending lease.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LeaseDecision {
+    /// Grant this many cards now.
+    Grant(usize),
+    /// Keep waiting (hysteresis window still open, or nothing free).
+    Wait,
 }
 
 /// The router thread's state: admission (classify + batch), the card
@@ -438,6 +558,15 @@ struct Router {
     live: usize,
     /// Cards currently out on lease to the shard orchestrator.
     leased: usize,
+    /// Requests currently computing on each card in the batch lane
+    /// (zero for free/leased cards) — live batches are queue depth the
+    /// batcher can't see.
+    running: Vec<usize>,
+    /// Σ `running`: batch-lane requests handed to cards and not yet
+    /// done.  Without this term `Adaptive` keeps sharding while the
+    /// pool is saturated — exactly the throughput regime `deep_queue`
+    /// exists to detect.
+    batch_inflight: usize,
     /// Batch-lane work waiting for a free card.
     pending_batches: VecDeque<(Batch, ReplyTxs)>,
     /// Shard-lane lease waiting for a free card (at most one: the
@@ -467,53 +596,16 @@ const SHUTDOWN_STALL_TICKS: u32 = 60;
 impl Router {
     fn run(mut self) -> Metrics {
         loop {
-            // Deadline-driven wait: block indefinitely when idle;
-            // otherwise sleep exactly until the oldest request's
-            // max_delay expires.  (A fixed polling tick burns the core
-            // the workers need — it cost ~20 % end-to-end on a
-            // single-core host; EXPERIMENTS.md §Perf.)  While shutting,
-            // tick once a second so a dead pool cannot wedge the drain.
-            let msg = if self.shutting {
-                self.rx.recv_timeout(Duration::from_secs(1))
-            } else if self.batcher.pending() == 0 {
-                self.rx.recv().map_err(|_| RecvTimeoutError::Disconnected)
-            } else {
-                self.rx
-                    .recv_timeout(self.policy.max_delay.min(Duration::from_millis(50)))
+            let msg = match self.wake_after() {
+                // idle: block until something happens
+                None => self.rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+                Some(d) => self.rx.recv_timeout(d),
             };
-            if msg.is_ok() {
-                self.stalled = 0;
-            }
             match msg {
-                Ok(RouterMsg::Submit(req, tx)) => self.admit(req, tx),
-                Ok(RouterMsg::WorkerDone(w)) => {
-                    self.free.push(w);
-                    self.service();
+                Ok(m) => {
+                    self.stalled = 0;
+                    self.handle(m);
                 }
-                Ok(RouterMsg::Lease { want, reply }) => {
-                    debug_assert!(self.pending_lease.is_none(), "one orchestrator, one lease");
-                    self.pending_lease = Some(PendingLease { want, reply });
-                    self.service();
-                }
-                Ok(RouterMsg::Unlease(ids)) => {
-                    // one Unlease per shard frame, lease width aside
-                    self.shard_inflight = self.shard_inflight.saturating_sub(1);
-                    self.leased = self.leased.saturating_sub(ids.len());
-                    self.free.extend(ids);
-                    self.service();
-                }
-                Ok(RouterMsg::Retire(_)) => {
-                    // the orchestrator found a leased card dead: it
-                    // leaves the pool instead of rejoining `free`
-                    self.leased = self.leased.saturating_sub(1);
-                    self.live = self.live.saturating_sub(1);
-                    if self.live == 0 {
-                        self.fail_pending("worker pool is gone");
-                    }
-                    self.service();
-                }
-                Ok(RouterMsg::OrchDrained) => self.orch_done = true,
-                Ok(RouterMsg::Shutdown) => self.begin_shutdown(),
                 Err(RecvTimeoutError::Disconnected) => {
                     if self.shutting {
                         // every sender is gone mid-drain: nothing more
@@ -522,25 +614,9 @@ impl Router {
                     }
                     self.begin_shutdown();
                 }
-                Err(RecvTimeoutError::Timeout) => {
-                    if self.shutting {
-                        self.stalled += 1;
-                        if self.stalled >= SHUTDOWN_STALL_TICKS {
-                            // Whatever is still outstanding will never
-                            // finish (dead cards / dead orchestrator):
-                            // answer what can be answered and let the
-                            // drain conditions fall through.
-                            self.fail_pending("worker pool stalled during shutdown");
-                            self.leased = 0;
-                            self.orch_done = true;
-                        }
-                    }
-                }
+                Err(RecvTimeoutError::Timeout) => self.on_tick(),
             }
-            let now = Instant::now();
-            while let Some(batch) = self.batcher.cut(now) {
-                self.dispatch_cut(batch);
-            }
+            self.pump(Instant::now());
             // Drained: orchestrator dry, every batch handed to a card,
             // every lease returned — the pool can stop.
             if self.shutting
@@ -558,9 +634,131 @@ impl Router {
         self.local
     }
 
+    /// How long the loop may sleep before something it owns needs
+    /// attention.  `None` = block indefinitely (fully idle).  A fixed
+    /// polling tick burns the core the workers need — it cost ~20 %
+    /// end-to-end on a single-core host (EXPERIMENTS.md §Perf) — so
+    /// every timeout here is tied to a real event: the oldest queued
+    /// request's `max_delay`, a pending lease's hysteresis expiry (only
+    /// meaningful while a card is free to grant — with none free the
+    /// next `WorkerDone`/`Unlease` message wakes the loop anyway), or
+    /// the once-a-second shutdown drain tick that keeps a dead pool
+    /// from wedging `shutdown()`.
+    fn wake_after(&self) -> Option<Duration> {
+        let mut wake: Option<Duration> = None;
+        if self.shutting {
+            wake = Some(Duration::from_secs(1));
+        } else if self.batcher.pending() > 0 {
+            wake = Some(self.policy.max_delay.min(Duration::from_millis(50)));
+        }
+        if let Some(pl) = &self.pending_lease {
+            if !self.free.is_empty() {
+                let remaining = pl.expires.saturating_duration_since(Instant::now());
+                let until = remaining.max(Duration::from_micros(100));
+                wake = Some(wake.map_or(until, |w| w.min(until)));
+            }
+        }
+        wake
+    }
+
+    /// Apply one router message to the ledger.  Factored out of the
+    /// loop so the failure paths (card retirement, orchestrator death,
+    /// the shutdown stall valve) are deterministically testable message
+    /// by message.
+    fn handle(&mut self, msg: RouterMsg) {
+        match msg {
+            RouterMsg::Submit(req, tx) => self.admit(req, tx),
+            RouterMsg::WorkerDone(w) => {
+                self.batch_inflight = self.batch_inflight.saturating_sub(self.running[w]);
+                self.running[w] = 0;
+                self.free.push(w);
+                self.service();
+            }
+            RouterMsg::Lease { want, wait, reply } => {
+                debug_assert!(self.pending_lease.is_none(), "one orchestrator, one lease");
+                let now = Instant::now();
+                // a runaway wait must not overflow Instant arithmetic
+                let wait = wait.min(Duration::from_secs(3600));
+                self.pending_lease = Some(PendingLease {
+                    want,
+                    reply,
+                    asked: now,
+                    expires: now + wait,
+                });
+                self.service();
+            }
+            RouterMsg::Unlease { ids, frames } => {
+                self.shard_inflight = self.shard_inflight.saturating_sub(frames);
+                self.leased = self.leased.saturating_sub(ids.len());
+                self.free.extend(ids);
+                self.service();
+            }
+            RouterMsg::Retire(_) => {
+                // the orchestrator found a leased card dead: it
+                // leaves the pool instead of rejoining `free`
+                self.leased = self.leased.saturating_sub(1);
+                self.live = self.live.saturating_sub(1);
+                if self.live == 0 {
+                    self.fail_pending("worker pool is gone");
+                }
+                self.service();
+            }
+            RouterMsg::OrchDrained => self.orch_done = true,
+            RouterMsg::Shutdown => self.begin_shutdown(),
+        }
+    }
+
+    /// A `recv` timeout fired: while shutting, count toward the stall
+    /// valve.  (Expired lease-hysteresis windows are handled by the
+    /// `service` in the caller's `pump`.)
+    fn on_tick(&mut self) {
+        if self.shutting {
+            self.stalled += 1;
+            if self.stalled >= SHUTDOWN_STALL_TICKS {
+                // Whatever is still outstanding will never finish (dead
+                // cards / dead orchestrator): answer what can be
+                // answered and let the drain conditions fall through.
+                self.fail_pending("worker pool stalled during shutdown");
+                self.leased = 0;
+                self.orch_done = true;
+            }
+        }
+    }
+
+    /// Post-message housekeeping: shed queued work whose deadline
+    /// already passed (before it costs a cut, a card or a lease), cut
+    /// and dispatch ripe batches, and re-examine the pending lease
+    /// (its hysteresis window may just have expired).
+    fn pump(&mut self, now: Instant) {
+        for req in self.batcher.shed_expired(now) {
+            let Some(tx) = self.reply_txs.remove(&req.id) else {
+                continue;
+            };
+            let mut delta = Metrics::default();
+            send_shed(&mut delta, &req, &tx);
+            self.note(delta);
+        }
+        while let Some(batch) = self.batcher.cut(now) {
+            self.dispatch_cut(batch);
+        }
+        self.service();
+    }
+
+    /// Everything admitted but not finished: queued in the batcher, cut
+    /// but parked for a free card, queued/running on the (serial) shard
+    /// orchestrator, AND running on busy batch cards.  Under overload
+    /// the real backlog lives in the parked/running terms, and ignoring
+    /// them would keep `Adaptive` sharding in exactly the throughput
+    /// regime `deep_queue` exists to detect.
+    fn queue_depth(&self) -> usize {
+        let parked: usize = self.pending_batches.iter().map(|(b, _)| b.requests.len()).sum();
+        self.batcher.pending() + parked + self.shard_inflight + self.batch_inflight
+    }
+
     /// Classify and queue one request (or refuse it mid-shutdown).  The
     /// class is stamped exactly once here; the batcher and dispatch never
-    /// reassign it.
+    /// reassign it.  A request that arrives already expired is shed on
+    /// the spot — it never costs queue space, let alone a card.
     fn admit(&mut self, mut req: Request, tx: Sender<ReplyResult>) {
         if self.shutting {
             let mut delta = Metrics::default();
@@ -568,16 +766,16 @@ impl Router {
             self.note(delta);
             return;
         }
-        // The queue depth feeding Adaptive routing counts everything
-        // admitted but not finished that the batcher alone can't see:
-        // cut batches parked for a free card AND shard frames queued on
-        // the (serial) orchestrator.  Under overload the real backlog
-        // lives there, and ignoring it would keep the router sharding
-        // in exactly the throughput regime `deep_queue` exists to
-        // detect.
-        let backlog: usize = self.pending_batches.iter().map(|(b, _)| b.requests.len()).sum();
-        let depth = self.batcher.pending() + backlog + self.shard_inflight;
-        let class = self.route.route(req.class, req.image.len(), depth);
+        let now = Instant::now();
+        if req.expired(now) {
+            let mut delta = Metrics::default();
+            send_shed(&mut delta, &req, &tx);
+            self.note(delta);
+            return;
+        }
+        let depth = self.queue_depth();
+        let slack = req.slack(now);
+        let class = self.route.route(req.class, req.image.len(), depth, slack);
         req.class = Some(class);
         let mut delta = Metrics::default();
         match class {
@@ -610,11 +808,24 @@ impl Router {
         }
     }
 
-    /// Send a batch to a free card, or park it until one frees up.
+    /// Send a batch to a free card, or park it until one frees up.  A
+    /// pending lease owns the free cards for its (bounded) hysteresis
+    /// window — the shard lane is the latency lane, and a batch
+    /// snatching the card the lease was waiting on would defeat the
+    /// wait — so fresh cuts park while a lease is pending.
     fn dispatch_batch(&mut self, mut batch: Batch, mut txs: ReplyTxs) {
+        if self.pending_lease.is_some() {
+            self.pending_batches.push_back((batch, txs));
+            return;
+        }
+        let n = batch.requests.len();
         while let Some(w) = self.free.pop() {
             match self.worker_txs[w].send(WorkerMsg::Run(batch, txs)) {
-                Ok(()) => return,
+                Ok(()) => {
+                    self.running[w] = n;
+                    self.batch_inflight += n;
+                    return;
+                }
                 Err(e) => {
                     // card `w` is dead (panicked thread): drop it from
                     // the pool and try the next free card
@@ -635,16 +846,20 @@ impl Router {
         }
     }
 
-    /// A card freed up (or a lease/batch is newly pending): grant the
-    /// pending lease first — the shard lane is the latency lane — then
-    /// drain parked batches onto the remaining free cards.
+    /// A card freed up (or a lease/batch is newly pending, or a
+    /// hysteresis window may have expired): decide the pending lease
+    /// first — the shard lane is the latency lane — then, only once no
+    /// lease is waiting, drain parked batches onto the free cards.
     fn service(&mut self) {
         if let Some(pl) = self.pending_lease.take() {
-            if self.free.is_empty() {
-                self.pending_lease = Some(pl);
-            } else {
-                self.grant_lease(pl);
+            match self.lease_decision(&pl, Instant::now()) {
+                LeaseDecision::Grant(k) => self.grant_lease(pl, k),
+                LeaseDecision::Wait => self.pending_lease = Some(pl),
             }
+        }
+        if self.pending_lease.is_some() {
+            // the free cards are spoken for until the lease resolves
+            return;
         }
         while !self.free.is_empty() {
             let Some((batch, txs)) = self.pending_batches.pop_front() else {
@@ -654,16 +869,40 @@ impl Router {
         }
     }
 
-    /// Grant as many free cards as the lease wants, without waiting for
-    /// busy ones: the shard lane adapts its scatter width to what the
-    /// batch lane left over (a 1-card grant is the degenerate single-card
-    /// shard — still bit-exact, just no latency win).
-    fn grant_lease(&mut self, pl: PendingLease) {
-        debug_assert!(!self.free.is_empty());
-        let k = pl.want.clamp(1, self.free.len());
+    /// Lease-width hysteresis: grant immediately once the full ask (or
+    /// as much of it as live cards can ever cover) is free; otherwise
+    /// hold the lease open until its window expires, then grant
+    /// whatever ≥ 1 cards are free.  While shutting there is no point
+    /// waiting — grant what's there and keep the drain moving.
+    fn lease_decision(&self, pl: &PendingLease, now: Instant) -> LeaseDecision {
+        if self.free.is_empty() {
+            // nothing to grant; the next WorkerDone/Unlease re-decides
+            return LeaseDecision::Wait;
+        }
+        let target = pl.want.min(self.live).max(1);
+        if self.free.len() >= target {
+            return LeaseDecision::Grant(target);
+        }
+        if self.shutting || now >= pl.expires {
+            return LeaseDecision::Grant(self.free.len());
+        }
+        LeaseDecision::Wait
+    }
+
+    /// Grant `k` free cards to the pending lease (a 1-card grant is the
+    /// degenerate single-card shard — still bit-exact, just no latency
+    /// win).
+    fn grant_lease(&mut self, pl: PendingLease, k: usize) {
+        debug_assert!(k >= 1 && k <= self.free.len());
         let ids: Vec<usize> = self.free.split_off(self.free.len() - k);
         match pl.reply.send(ids) {
-            Ok(()) => self.leased += k,
+            Ok(()) => {
+                self.leased += k;
+                let waited = Instant::now().saturating_duration_since(pl.asked);
+                let mut delta = Metrics::default();
+                delta.lease_wait.record(waited);
+                self.note(delta);
+            }
             // orchestrator died mid-request: keep the cards
             Err(e) => self.free.extend(e.0),
         }
@@ -714,6 +953,9 @@ impl Router {
 }
 
 /// Record one successful frame into `delta` and answer its caller.
+/// Deadlined frames count `deadline_met`/`deadline_missed` off the
+/// moment the reply is sent — a late frame still completes (the shed
+/// paths already refused it everywhere refusing was cheaper).
 fn send_reply(
     delta: &mut Metrics,
     req: Request,
@@ -729,6 +971,13 @@ fn send_reply(
     // Queue wait = time from submit until this request's compute began
     // (replies land after the compute, so the compute wall is not wait).
     delta.queue_wait.record(latency.saturating_sub(compute_wall));
+    if let Some(d) = req.deadline {
+        if Instant::now() <= d {
+            delta.deadline_met += 1;
+        } else {
+            delta.deadline_missed += 1;
+        }
+    }
     let reply = Reply {
         id: req.id,
         class: golden::argmax(&logits),
@@ -742,10 +991,19 @@ fn send_reply(
 
 fn send_error(delta: &mut Metrics, id: u64, tx: &Sender<ReplyResult>, e: &anyhow::Error) {
     delta.failed += 1;
-    let _ = tx.send(Err(InferError {
+    let _ = tx.send(Err(InferError::Failed {
         id,
         reason: format!("{e:#}"),
     }));
+}
+
+/// Shed one expired request: answered (never dropped) with the typed
+/// deadline error, counted into both `failed` and `deadline_shed`.
+fn send_shed(delta: &mut Metrics, req: &Request, tx: &Sender<ReplyResult>) {
+    debug_assert!(req.deadline.is_some(), "only deadlined requests shed");
+    delta.failed += 1;
+    delta.deadline_shed += 1;
+    let _ = tx.send(Err(InferError::DeadlineExceeded { id: req.id }));
 }
 
 fn worker_loop(
@@ -789,11 +1047,15 @@ fn worker_loop(
                 // request alone can sink `run_frames`), so a poisoned
                 // frame never costs its batchmates any compute — and
                 // never kills this worker, stranding callers on
-                // RecvError.
+                // RecvError.  Expired requests are shed here too: this
+                // is the last gate before the card burns cycles on them.
                 let want_len = sys.input_shape.len();
+                let now = Instant::now();
                 let mut good: Vec<(Request, &Sender<ReplyResult>)> = Vec::new();
                 for (req, tx) in batch.requests.into_iter().zip(&txs) {
-                    if req.image.len() == want_len {
+                    if req.expired(now) {
+                        send_shed(&mut delta, &req, tx);
+                    } else if req.image.len() == want_len {
                         good.push((req, tx));
                     } else {
                         let e = anyhow!("image len {} != {want_len}", req.image.len());
@@ -876,12 +1138,34 @@ fn orchestrator_loop(
                 let mut delta = Metrics::default();
                 delta.batches += 1;
                 for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                    // Last gate before a lease is spent: a frame whose
+                    // deadline already passed is shed, not scattered.
+                    // Its slot in the router's shard-inflight ledger is
+                    // still retired — one Unlease per frame, lease or
+                    // not, keeps the Adaptive depth signal exact.
+                    let now = Instant::now();
+                    if req.expired(now) {
+                        send_shed(&mut delta, &req, tx);
+                        let _ = router_tx.send(RouterMsg::Unlease {
+                            ids: Vec::new(),
+                            frames: 1,
+                        });
+                        continue;
+                    }
                     // Lease cards: however many of the pool the batch
                     // lane isn't holding right now (≥ 1, ≤ max_lease).
+                    // The router may hold the grant open up to `wait`
+                    // hoping for a wider lease — never more than half
+                    // the frame's remaining slack.
                     let want = oracle.max_lease;
+                    let wait = match req.slack(now) {
+                        Some(s) => oracle.lease_slack.min(s / 2),
+                        None => oracle.lease_slack,
+                    };
                     let (lease_tx, lease_rx) = channel::<Vec<usize>>();
                     let lease_req = RouterMsg::Lease {
                         want,
+                        wait,
                         reply: lease_tx,
                     };
                     let granted: Vec<usize> = if router_tx.send(lease_req).is_ok() {
@@ -892,11 +1176,26 @@ fn orchestrator_loop(
                     if granted.is_empty() {
                         let e = anyhow!("no cards to lease (router gone or pool dead)");
                         send_error(&mut delta, req.id, tx, &e);
+                        let _ = router_tx.send(RouterMsg::Unlease {
+                            ids: Vec::new(),
+                            frames: 1,
+                        });
                         continue;
                     }
                     delta.shard_leases += 1;
                     delta.shard_cards_granted += granted.len() as u64;
                     delta.shard_cards_stolen += (want - granted.len().min(want)) as u64;
+                    // The lease wait may have eaten the rest of the
+                    // slack (bounded, but the pool may have been busy):
+                    // re-check before burning the cards.
+                    if req.expired(Instant::now()) {
+                        send_shed(&mut delta, &req, tx);
+                        let _ = router_tx.send(RouterMsg::Unlease {
+                            ids: granted,
+                            frames: 1,
+                        });
+                        continue;
+                    }
                     let t0 = Instant::now();
                     let mut dead = Vec::new();
                     let res = run_sharded_frame(
@@ -921,7 +1220,10 @@ fn orchestrator_loop(
                     for w in dead {
                         let _ = router_tx.send(RouterMsg::Retire(w));
                     }
-                    let _ = router_tx.send(RouterMsg::Unlease(live));
+                    let _ = router_tx.send(RouterMsg::Unlease {
+                        ids: live,
+                        frames: 1,
+                    });
                     match res {
                         Ok((logits, stats)) => {
                             send_reply(&mut delta, req, tx, logits, stats.cycles, frame_wall);
@@ -1113,6 +1415,7 @@ mod tests {
             },
             route: RoutePolicy::BatchOnly,
             max_shard_cards: 0,
+            lease_slack: Duration::ZERO,
         }
     }
 
@@ -1123,7 +1426,346 @@ mod tests {
             policy: BatchPolicy::default(),
             route: RoutePolicy::ShardOnly,
             max_shard_cards: 0,
+            lease_slack: Duration::ZERO,
         }
+    }
+
+    /// A Router with real channels but no threads behind them: messages
+    /// are applied via `handle`/`pump` directly, so the ledger paths the
+    /// stress suites only hit by luck (retirement, orchestrator death,
+    /// the stall valve, lease hysteresis) are deterministic here.
+    struct RouterRig {
+        router: Router,
+        /// Keep-alive for the router's `orch_tx` — set to `None` to
+        /// simulate orchestrator death (sends start failing).
+        #[allow(dead_code)]
+        orch_rx: Option<Receiver<OrchMsg>>,
+        worker_rxs: Vec<Receiver<WorkerMsg>>,
+    }
+
+    fn router_rig(workers: usize, route: RoutePolicy) -> RouterRig {
+        let (_tx, rx) = channel::<RouterMsg>();
+        let (orch_tx, orch_rx) = channel::<OrchMsg>();
+        let mut worker_txs = Vec::new();
+        let mut worker_rxs = Vec::new();
+        for _ in 0..workers {
+            let (t, r) = channel::<WorkerMsg>();
+            worker_txs.push(t);
+            worker_rxs.push(r);
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::ZERO,
+        };
+        RouterRig {
+            router: Router {
+                rx,
+                orch_tx,
+                worker_txs,
+                policy,
+                route,
+                batcher: Batcher::new(policy),
+                reply_txs: ReplyMap::new(),
+                free: (0..workers).collect(),
+                live: workers,
+                leased: 0,
+                running: vec![0; workers],
+                batch_inflight: 0,
+                pending_batches: VecDeque::new(),
+                pending_lease: None,
+                shard_inflight: 0,
+                shutting: false,
+                orch_done: false,
+                stalled: 0,
+                local: Metrics::default(),
+                global: Arc::new(Mutex::new(Metrics::default())),
+            },
+            orch_rx: Some(orch_rx),
+            worker_rxs,
+        }
+    }
+
+    fn rig_request(id: u64, class: Option<DispatchClass>) -> Request {
+        Request {
+            id,
+            image: vec![0i8; 16],
+            mode: Mode::HighAccuracy,
+            class,
+            deadline: None,
+            submitted: Instant::now(),
+        }
+    }
+
+    /// `Retire` of a leased card: the card leaves the pool (never back
+    /// on the free list), the lease ledger stays balanced, and when the
+    /// last card retires the parked work is answered instead of wedged.
+    #[test]
+    fn retire_of_leased_card_balances_the_ledger() {
+        let mut rig = router_rig(2, RoutePolicy::BatchOnly);
+        // the orchestrator asks for the whole pool and gets it
+        let (lease_tx, lease_rx) = channel::<Vec<usize>>();
+        rig.router.shard_inflight = 1; // one frame handed to the orchestrator
+        rig.router.handle(RouterMsg::Lease {
+            want: 2,
+            wait: Duration::ZERO,
+            reply: lease_tx,
+        });
+        let granted = lease_rx.try_recv().expect("idle pool grants instantly");
+        assert_eq!(granted.len(), 2);
+        assert_eq!(rig.router.leased, 2);
+        assert!(rig.router.free.is_empty());
+        // one leased card turns out dead; the other returns with the frame
+        let (dead, alive) = (granted[0], granted[1]);
+        rig.router.handle(RouterMsg::Retire(dead));
+        assert_eq!(rig.router.live, 1);
+        assert_eq!(rig.router.leased, 1);
+        rig.router.handle(RouterMsg::Unlease {
+            ids: vec![alive],
+            frames: 1,
+        });
+        assert_eq!(rig.router.leased, 0);
+        assert_eq!(rig.router.shard_inflight, 0);
+        assert_eq!(rig.router.free, vec![alive], "dead card never rejoins free");
+        // park a batch while the remaining card is busy, then retire it:
+        // the parked work must be failed, not stranded
+        rig.router.free.clear();
+        let (reply_tx, reply_rx) = channel::<ReplyResult>();
+        rig.router.pending_batches.push_back((
+            Batch {
+                mode: Mode::HighAccuracy,
+                class: DispatchClass::Batch,
+                requests: vec![rig_request(7, Some(DispatchClass::Batch))],
+            },
+            vec![reply_tx],
+        ));
+        rig.router.handle(RouterMsg::Retire(alive));
+        assert_eq!(rig.router.live, 0);
+        let err = reply_rx
+            .try_recv()
+            .expect("parked batch answered when the pool died")
+            .expect_err("an error answer");
+        assert!(!err.is_deadline());
+        assert_eq!(rig.router.local.failed, 1);
+    }
+
+    /// Orchestrator death during `OrchMsg::Run`: `dispatch_cut` must
+    /// fall back to answering the batch with errors, and the
+    /// shard-inflight ledger must not count the frames that never went.
+    #[test]
+    fn orchestrator_death_fails_the_batch_not_the_router() {
+        let mut rig = router_rig(1, RoutePolicy::ShardOnly);
+        rig.orch_rx = None; // the orchestrator is gone
+        let (tx, reply_rx) = channel::<ReplyResult>();
+        let req = rig_request(0, Some(DispatchClass::Shard));
+        rig.router.handle(RouterMsg::Submit(req, tx));
+        rig.router.pump(Instant::now());
+        let err = reply_rx
+            .try_recv()
+            .expect("answered despite the dead orchestrator")
+            .expect_err("an error answer");
+        match err {
+            InferError::Failed { reason, .. } => {
+                assert!(reason.contains("orchestrator"), "{reason}")
+            }
+            other => panic!("unexpected error {other:?}"),
+        }
+        assert_eq!(rig.router.shard_inflight, 0, "undelivered frames not counted");
+        assert_eq!(rig.router.local.failed, 1);
+    }
+
+    /// The shutdown stall valve: a drain blocked on cards that will
+    /// never answer (their WorkerDone is never coming) must answer the
+    /// parked work and release the exit conditions after
+    /// `SHUTDOWN_STALL_TICKS` silent ticks — `shutdown()` never wedges.
+    #[test]
+    fn shutdown_stall_valve_answers_parked_work() {
+        let mut rig = router_rig(1, RoutePolicy::BatchOnly);
+        // the only card is "busy" and will never report done
+        rig.router.free.clear();
+        rig.router.leased = 1;
+        let (reply_tx, reply_rx) = channel::<ReplyResult>();
+        rig.router.pending_batches.push_back((
+            Batch {
+                mode: Mode::HighAccuracy,
+                class: DispatchClass::Batch,
+                requests: vec![rig_request(3, Some(DispatchClass::Batch))],
+            },
+            vec![reply_tx],
+        ));
+        rig.router.handle(RouterMsg::Shutdown);
+        assert!(rig.router.shutting);
+        // silent ticks accumulate; one before the valve nothing happens
+        for _ in 0..SHUTDOWN_STALL_TICKS - 1 {
+            rig.router.on_tick();
+        }
+        assert!(reply_rx.try_recv().is_err(), "valve must not fire early");
+        assert!(!rig.router.orch_done);
+        rig.router.on_tick();
+        let err = reply_rx
+            .try_recv()
+            .expect("stalled drain answers parked work")
+            .expect_err("an error answer");
+        assert!(matches!(err, InferError::Failed { .. }));
+        assert_eq!(rig.router.leased, 0);
+        assert!(rig.router.orch_done);
+        assert!(rig.router.pending_batches.is_empty());
+    }
+
+    /// The Adaptive depth signal counts batches *running* on busy cards
+    /// — a saturated pool must read as a deep queue even when the
+    /// batcher itself is empty.
+    #[test]
+    fn queue_depth_counts_live_batches() {
+        let route = RoutePolicy::Adaptive {
+            shard_min_len: 0,
+            deep_queue: 3,
+            tight_slack: Duration::ZERO,
+        };
+        let mut rig = router_rig(1, route);
+        // the pool is saturated: 5 requests computing on the one card
+        rig.router.free.clear();
+        rig.router.running[0] = 5;
+        rig.router.batch_inflight = 5;
+        assert_eq!(rig.router.queue_depth(), 5);
+        let (tx, _reply1) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(rig_request(0, None), tx));
+        assert_eq!(rig.router.local.routed_batch, 1, "deep (live) queue ⇒ batch");
+        assert_eq!(rig.router.local.routed_shard, 0);
+        // the card drains: depth falls back under deep_queue ⇒ shard
+        rig.router.handle(RouterMsg::WorkerDone(0));
+        assert_eq!(rig.router.batch_inflight, 0);
+        let (tx2, _reply2) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(rig_request(1, None), tx2));
+        assert_eq!(rig.router.local.routed_shard, 1, "shallow queue ⇒ shard");
+    }
+
+    /// Lease-width hysteresis at the ledger level: a lease that wants
+    /// more cards than are free waits inside its window, widens when a
+    /// card frees, and settles for what's there once the window expires.
+    #[test]
+    fn lease_hysteresis_waits_widens_and_expires() {
+        // case 1: window open — wait, then widen on WorkerDone
+        let mut rig = router_rig(2, RoutePolicy::BatchOnly);
+        rig.router.free = vec![0];
+        rig.router.running[1] = 1;
+        rig.router.batch_inflight = 1;
+        let (lease_tx, lease_rx) = channel::<Vec<usize>>();
+        rig.router.handle(RouterMsg::Lease {
+            want: 2,
+            wait: Duration::from_secs(60),
+            reply: lease_tx,
+        });
+        assert!(lease_rx.try_recv().is_err(), "holds out for the full width");
+        assert!(rig.router.pending_lease.is_some());
+        rig.router.handle(RouterMsg::WorkerDone(1));
+        let granted = lease_rx.try_recv().expect("full width granted");
+        assert_eq!(granted.len(), 2);
+        assert_eq!(rig.router.leased, 2);
+        assert_eq!(rig.router.local.lease_wait.count(), 1);
+
+        // case 2: expired window — take the narrow grant immediately
+        let mut rig = router_rig(2, RoutePolicy::BatchOnly);
+        rig.router.free = vec![0];
+        rig.router.running[1] = 1;
+        rig.router.batch_inflight = 1;
+        let (lease_tx, lease_rx) = channel::<Vec<usize>>();
+        rig.router.handle(RouterMsg::Lease {
+            want: 2,
+            wait: Duration::ZERO,
+            reply: lease_tx,
+        });
+        let granted = lease_rx.try_recv().expect("expired window grants narrow");
+        assert_eq!(granted, vec![0]);
+        assert_eq!(rig.router.leased, 1);
+
+        // case 3: want capped by live cards — a dead pool can't make
+        // the lease wait for width that can never come
+        let mut rig = router_rig(2, RoutePolicy::BatchOnly);
+        rig.router.live = 1;
+        rig.router.free = vec![0];
+        let (lease_tx, lease_rx) = channel::<Vec<usize>>();
+        rig.router.handle(RouterMsg::Lease {
+            want: 2,
+            wait: Duration::from_secs(60),
+            reply: lease_tx,
+        });
+        let granted = lease_rx.try_recv().expect("live-capped target grants now");
+        assert_eq!(granted, vec![0]);
+    }
+
+    /// While a lease waits out its hysteresis window, fresh batch cuts
+    /// park instead of stealing the free cards the lease is holding —
+    /// and drain the moment the lease resolves.
+    #[test]
+    fn pending_lease_parks_fresh_batches() {
+        let mut rig = router_rig(2, RoutePolicy::BatchOnly);
+        rig.router.free = vec![0];
+        rig.router.running[1] = 1;
+        rig.router.batch_inflight = 1;
+        let (lease_tx, lease_rx) = channel::<Vec<usize>>();
+        rig.router.handle(RouterMsg::Lease {
+            want: 2,
+            wait: Duration::from_secs(60),
+            reply: lease_tx,
+        });
+        assert!(rig.router.pending_lease.is_some());
+        // a batch-lane request arrives and its batch is cut
+        let (tx, _reply) = channel::<ReplyResult>();
+        let req = rig_request(0, Some(DispatchClass::Batch));
+        rig.router.handle(RouterMsg::Submit(req, tx));
+        rig.router.pump(Instant::now());
+        assert_eq!(
+            rig.router.pending_batches.len(),
+            1,
+            "cut batch parks while the lease holds the pool"
+        );
+        assert_eq!(rig.router.free, vec![0], "free card not stolen");
+        // the busy card frees: the lease wins it, then the parked batch
+        // gets dispatched onto... nothing yet (the lease took both) —
+        // it stays parked until the lease returns.
+        rig.router.handle(RouterMsg::WorkerDone(1));
+        assert_eq!(lease_rx.try_recv().expect("lease resolved").len(), 2);
+        assert_eq!(rig.router.pending_batches.len(), 1);
+        // lease returns: parked batch finally reaches a card
+        rig.router.handle(RouterMsg::Unlease {
+            ids: vec![0, 1],
+            frames: 0,
+        });
+        assert!(rig.router.pending_batches.is_empty(), "parked batch dispatched");
+        let sent = rig.worker_rxs.iter().any(|rx| rx.try_recv().is_ok());
+        assert!(sent, "the batch landed on a worker queue");
+        assert_eq!(rig.router.batch_inflight, 1);
+    }
+
+    /// `send_reply` splits deadlined completions into met vs missed.
+    #[test]
+    fn send_reply_records_deadline_met_and_missed() {
+        let now = Instant::now();
+        let mk = |deadline: Option<Instant>| Request {
+            id: 0,
+            image: vec![],
+            mode: Mode::HighAccuracy,
+            class: None,
+            deadline,
+            submitted: now,
+        };
+        let (tx, rx) = channel::<ReplyResult>();
+        let mut delta = Metrics::default();
+        send_reply(&mut delta, mk(None), &tx, vec![1, 2], 10, Duration::ZERO);
+        assert_eq!((delta.deadline_met, delta.deadline_missed), (0, 0));
+        send_reply(
+            &mut delta,
+            mk(Some(now + Duration::from_secs(3600))),
+            &tx,
+            vec![1, 2],
+            10,
+            Duration::ZERO,
+        );
+        assert_eq!((delta.deadline_met, delta.deadline_missed), (1, 0));
+        send_reply(&mut delta, mk(Some(now)), &tx, vec![1, 2], 10, Duration::ZERO);
+        assert_eq!((delta.deadline_met, delta.deadline_missed), (1, 1));
+        assert_eq!(delta.completed, 3);
+        drop(rx);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! binarray info                         # artifacts + network summary
 //! binarray serve  [--config 1,8,2] [--workers N] [--frames N] [--mode fast|accurate]
 //!                 [--route batch|shard|auto] [--shard N] [--shard-min-len L] [--deep-queue Q]
+//!                 [--deadline-ms D] [--tight-slack-us T] [--lease-slack-us H]
 //! binarray perf   [--m M]               # Table III analytical model
 //! binarray area                         # Table IV resource model
 //! binarray listing                      # compiled CNN processing program
@@ -12,7 +13,7 @@
 //!
 //! Argument parsing is hand-rolled (the build is fully offline; no clap).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -184,9 +185,12 @@ fn serve(args: &Args) -> Result<()> {
     let net = load_net()?;
     // --route picks the dispatch policy: `batch` (whole-frame batching,
     // throughput), `shard` (scatter every frame's row tiles over leased
-    // cards, latency) or `auto` (route per request from frame size and
-    // queue depth).  --shard N caps a frame's lease at N cards and, when
-    // --route is not given, implies `shard`.
+    // cards, latency) or `auto` (route per request from frame size,
+    // queue depth and deadline slack).  --shard N caps a frame's lease
+    // at N cards and, when --route is not given, implies `shard`.
+    // --deadline-ms D stamps every submitted frame with a deadline D ms
+    // out (0 = best effort); --tight-slack-us is `auto`'s urgency
+    // threshold; --lease-slack-us bounds the lease-width hysteresis.
     let cards: usize = args.get("shard", 0)?;
     let route_default = if cards > 0 { "shard" } else { "batch" };
     let route_name: String = args.get("route", route_default.to_string())?;
@@ -196,9 +200,11 @@ fn serve(args: &Args) -> Result<()> {
         "auto" => RoutePolicy::Adaptive {
             shard_min_len: args.get("shard-min-len", 4096)?,
             deep_queue: args.get("deep-queue", 8)?,
+            tight_slack: Duration::from_micros(args.get("tight-slack-us", 1000u64)?),
         },
         other => bail!("--route {other}: expected batch|shard|auto"),
     };
+    let deadline_ms: u64 = args.get("deadline-ms", 0)?;
     let cfg = CoordinatorConfig {
         array: args.config(ArrayConfig::new(1, 8, 2))?,
         // the pool must cover the requested lease width
@@ -209,6 +215,7 @@ fn serve(args: &Args) -> Result<()> {
         },
         route,
         max_shard_cards: cards,
+        lease_slack: Duration::from_micros(args.get("lease-slack-us", 0u64)?),
     };
     let frames: usize = args.get("frames", 64)?;
     let mode = match args.get::<String>("mode", "accurate".into())?.as_str() {
@@ -219,11 +226,16 @@ fn serve(args: &Args) -> Result<()> {
     let calib = CalibBatch::load(&dir.join("calib.bin"))?;
 
     println!(
-        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}, route {route_name}{}",
+        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}, route {route_name}{}{}",
         cfg.array.label(),
         cfg.workers,
         if cards > 0 {
             format!(" (≤{cards}-card leases)")
+        } else {
+            String::new()
+        },
+        if deadline_ms > 0 {
+            format!(", {deadline_ms} ms deadlines")
         } else {
             String::new()
         }
@@ -233,23 +245,42 @@ fn serve(args: &Args) -> Result<()> {
     let mut labels = Vec::new();
     for i in 0..frames {
         let idx = i % calib.n;
-        rxs.push(coord.submit(calib.image(idx).to_vec(), mode));
+        let deadline =
+            (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
+        rxs.push(coord.submit_qos(calib.image(idx).to_vec(), mode, None, deadline));
         labels.push(calib.labels[idx]);
     }
     let mut correct = 0u64;
+    let mut answered = 0u64;
+    let mut shed = 0u64;
     for (rx, label) in rxs.into_iter().zip(labels) {
-        let reply = rx.recv()??;
-        if reply.class as i32 == label {
-            correct += 1;
+        match rx.recv()? {
+            Ok(reply) => {
+                answered += 1;
+                if reply.class as i32 == label {
+                    correct += 1;
+                }
+            }
+            // expired frames are shed by design under --deadline-ms;
+            // anything else is a real serving fault
+            Err(e) if e.is_deadline() => shed += 1,
+            Err(e) => return Err(e.into()),
         }
     }
     let m = coord.shutdown();
     println!("{}", m.summary());
+    if shed > 0 {
+        println!("shed {shed} frames past their {deadline_ms} ms deadline (answered {answered})");
+    }
     println!(
-        "top-1 vs labels: {:.2}% ({}/{} frames)",
-        100.0 * correct as f64 / frames as f64,
+        "top-1 vs labels: {:.2}% ({}/{} answered frames)",
+        if answered > 0 {
+            100.0 * correct as f64 / answered as f64
+        } else {
+            0.0
+        },
         correct,
-        frames
+        answered
     );
     Ok(())
 }

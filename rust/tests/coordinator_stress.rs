@@ -86,6 +86,7 @@ fn concurrent_producers_all_replied_ids_unique_metrics_consistent() {
                 },
                 route: RoutePolicy::BatchOnly,
                 max_shard_cards: 0,
+                ..Default::default()
             },
             net.clone(),
         )
@@ -156,6 +157,7 @@ fn shutdown_drains_under_multi_producer_load() {
             },
             route: RoutePolicy::BatchOnly,
             max_shard_cards: 0,
+            ..Default::default()
         },
         net,
     )
@@ -211,6 +213,7 @@ fn sharded_path_survives_concurrent_producers() {
                 policy: BatchPolicy::default(),
                 route: RoutePolicy::ShardOnly,
                 max_shard_cards: cards,
+                ..Default::default()
             },
             net.clone(),
         )

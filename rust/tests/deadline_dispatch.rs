@@ -1,0 +1,350 @@
+//! Deadline-aware dispatch end to end: expired work is shed with the
+//! typed `InferError::DeadlineExceeded` before any card computes it,
+//! slack routes small-but-urgent frames to the shard (latency) lane,
+//! met/missed/shed are counted per lane, and — the acceptance scenario —
+//! the deadline-aware router meets strictly more deadlines than a
+//! deadline-blind FIFO router under the same overload, while every
+//! non-shed reply stays bit-identical to `golden::forward`.
+//!
+//! Pool widths ride the `BINARRAY_TEST_CARDS` matrix (default `1,2,4`)
+//! where arbitration is involved, like the other cross-card suites.
+
+use std::time::{Duration, Instant};
+
+use binarray::artifacts::{self, LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem};
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, InferError, Mode, RoutePolicy,
+};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256, test_cards};
+
+/// A deliberately tiny but structurally complete net (conv+pool, two
+/// dense) so the QoS paths are pushed with request counts, not compute.
+fn tiny_net(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 2;
+    let conv = QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, 4 * m * 3 * 3 * 3),
+        alpha_q: (0..4 * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..4).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d: 4,
+        m,
+        kh: 3,
+        kw: 3,
+        c: 3,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool: 2,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, n_in: usize, relu: bool| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * n_in),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    // 10×10×3 → conv3 → 8×8×4 → pool2 → 4×4×4 → dense 8 → dense 5
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![conv, dense(rng, 8, 64, true), dense(rng, 5, 8, false)],
+    };
+    assert_eq!(binarray::isa::compiler::infer_input_dims(&net), (10, 10, 3));
+    (net, Shape::new(10, 10, 3))
+}
+
+fn cfg(workers: usize, route: RoutePolicy) -> CoordinatorConfig {
+    CoordinatorConfig {
+        array: ArrayConfig::new(1, 8, 2),
+        workers,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_micros(200),
+        },
+        route,
+        max_shard_cards: 0,
+        lease_slack: Duration::ZERO,
+    }
+}
+
+/// A request that arrives already expired is answered with the typed
+/// deadline error and never touches a card: zero simulated cycles, zero
+/// batches, and the pool still serves the next (live) request.
+#[test]
+fn expired_on_arrival_is_shed_before_any_compute() {
+    let mut rng = Xoshiro256::new(0xDEAD);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    for cards in test_cards() {
+        let coord = Coordinator::start(cfg(cards, RoutePolicy::BatchOnly), net.clone()).unwrap();
+        let expired = Instant::now();
+        let err = coord
+            .infer_qos(image.clone(), Mode::HighAccuracy, None, Some(expired))
+            .expect_err("expired work must be refused");
+        let err: InferError = err.downcast().expect("typed InferError");
+        assert!(err.is_deadline(), "typed shed, got {err:?}");
+        assert!(matches!(err, InferError::DeadlineExceeded { .. }));
+        // the pool is unharmed and still bit-exact
+        let ok = coord
+            .infer_qos(
+                image.clone(),
+                Mode::HighAccuracy,
+                None,
+                Some(Instant::now() + Duration::from_secs(60)),
+            )
+            .expect("live request served");
+        assert_eq!(ok.logits, want, "{cards} cards");
+        let m = coord.shutdown();
+        assert_eq!(m.deadline_shed, 1, "{cards} cards");
+        assert_eq!(m.failed, 1, "sheds are answered failures");
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.deadline_met, 1);
+        assert_eq!(m.deadline_missed, 0);
+        // the shed frame burned nothing: all cycles belong to the one
+        // completed frame
+        assert_eq!(m.latency.count(), 1, "only served frames record latency");
+    }
+}
+
+/// Slack is the third routing signal: a frame far too small to shard by
+/// size still takes the shard (latency) lane when its deadline is
+/// tight, and best-effort twins batch.
+#[test]
+fn tight_slack_routes_small_frames_to_the_shard_lane() {
+    let mut rng = Xoshiro256::new(0x51AC);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let route = RoutePolicy::Adaptive {
+        shard_min_len: usize::MAX, // size alone never shards
+        deep_queue: 64,
+        tight_slack: Duration::from_secs(5),
+    };
+    let coord = Coordinator::start(cfg(2, route), net).unwrap();
+    // tight slack (3s ≤ 5s) ⇒ latency lane
+    let urgent = coord
+        .infer_qos(
+            image.clone(),
+            Mode::HighAccuracy,
+            None,
+            Some(Instant::now() + Duration::from_secs(3)),
+        )
+        .unwrap();
+    assert_eq!(urgent.logits, want);
+    // no deadline ⇒ never tight ⇒ batch lane
+    let relaxed = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+    assert_eq!(relaxed.logits, want);
+    // plenty of slack (60s > 5s) ⇒ batch lane
+    let lazy = coord
+        .infer_qos(
+            image,
+            Mode::HighAccuracy,
+            None,
+            Some(Instant::now() + Duration::from_secs(60)),
+        )
+        .unwrap();
+    assert_eq!(lazy.logits, want);
+    let m = coord.shutdown();
+    assert_eq!(m.routed_shard, 1, "exactly the urgent frame sharded");
+    assert_eq!(m.routed_batch, 2);
+    assert_eq!(m.deadline_met, 2);
+    assert_eq!(m.shard_leases, 1);
+}
+
+/// Deadlined traffic across both lanes and every pool width stays
+/// bit-identical to the golden model — deadlines move scheduling, never
+/// arithmetic.
+#[test]
+fn deadlined_replies_stay_bit_exact_on_both_lanes() {
+    let mut rng = Xoshiro256::new(0xB17);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want_hi = golden::forward(&net, &image, shape, None);
+    let want_lo = golden::forward(&net, &image, shape, Some(2));
+    for cards in test_cards() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                lease_slack: Duration::from_micros(200),
+                ..cfg(cards, RoutePolicy::BatchOnly)
+            },
+            net.clone(),
+        )
+        .unwrap();
+        let total = 24usize;
+        let rxs: Vec<_> = (0..total)
+            .map(|i| {
+                let class = if i % 3 == 0 {
+                    DispatchClass::Shard
+                } else {
+                    DispatchClass::Batch
+                };
+                let mode = if i % 2 == 0 {
+                    Mode::HighAccuracy
+                } else {
+                    Mode::HighThroughput
+                };
+                coord.submit_qos(
+                    image.clone(),
+                    mode,
+                    Some(class),
+                    Some(Instant::now() + Duration::from_secs(120)),
+                )
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.recv().unwrap().expect("generous deadlines all served");
+            let want = if i % 2 == 0 { &want_hi } else { &want_lo };
+            assert_eq!(&reply.logits, want, "frame {i} ({cards} cards)");
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, total as u64);
+        assert_eq!(m.deadline_met, total as u64, "{cards} cards");
+        assert_eq!(m.deadline_missed + m.deadline_shed, 0, "{cards} cards");
+        // hysteresis observability: every lease's wait was recorded
+        assert_eq!(m.lease_wait.count() as u64, m.shard_leases);
+    }
+}
+
+/// The `max_batch: 0` wedge, end to end: a zero policy used to make the
+/// router's cut loop spin on empty batches forever (no request was ever
+/// served and `shutdown` never returned).  Clamped, it serves like
+/// `max_batch: 1`.
+#[test]
+fn max_batch_zero_coordinator_serves_and_shuts_down() {
+    let mut rng = Xoshiro256::new(0x0B0);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            policy: BatchPolicy {
+                max_batch: 0,
+                max_delay: Duration::from_micros(200),
+            },
+            ..cfg(1, RoutePolicy::BatchOnly)
+        },
+        net,
+    )
+    .unwrap();
+    for _ in 0..3 {
+        let reply = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+        assert_eq!(reply.logits, want);
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.failed, 0);
+}
+
+/// The acceptance scenario: a mixed-QoS overload on one card.  A
+/// deadline-blind FIFO router burns the card on a pile of
+/// already-expired frames, so the feasible deadlines behind them miss;
+/// the deadline-aware router sheds the expired pile unserved (typed
+/// errors, zero compute) and meets the feasible deadlines — strictly
+/// more met deadlines on the same load, with every served reply still
+/// bit-identical to the golden model.
+#[test]
+fn aware_router_meets_strictly_more_deadlines_than_fifo() {
+    let mut rng = Xoshiro256::new(0xACCE);
+    // Full-size synthetic CNN-A: per-frame compute in the milliseconds,
+    // so the deadline margins dwarf scheduler jitter.
+    let net = artifacts::synthetic_cnn_a(&mut rng, 2);
+    let dims = binarray::isa::compiler::infer_input_dims(&net);
+    let shape = Shape::new(dims.1, dims.0, dims.2);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+
+    // Calibrate the per-frame wall on this machine.
+    let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), net.clone()).unwrap();
+    sys.run_frame(&image).unwrap(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        sys.run_frame(&image).unwrap();
+    }
+    let per = t0.elapsed() / 3;
+    drop(sys);
+
+    let junk = 24usize; // expired on arrival
+    let feasible = 6usize; // deadline 12×per: ~2× what aware needs, ~½ what FIFO needs
+    let budget = per * 12;
+    let serve = |aware: bool| -> (u64, u64, u64) {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                policy: BatchPolicy {
+                    max_batch: 1,
+                    max_delay: Duration::ZERO,
+                },
+                ..cfg(1, RoutePolicy::BatchOnly)
+            },
+            net.clone(),
+        )
+        .unwrap();
+        coord.infer(image.clone(), Mode::HighAccuracy).unwrap(); // warmup
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        // the expired pile first, the feasible tail behind it — FIFO
+        // order is the worst case the deadline signal exists to fix
+        for i in 0..junk + feasible {
+            let deadline = if i < junk { t0 } else { t0 + budget };
+            rxs.push(coord.submit_qos(
+                image.clone(),
+                Mode::HighAccuracy,
+                None,
+                aware.then_some(deadline),
+            ));
+        }
+        let (mut met, mut missed, mut shed) = (0u64, 0u64, 0u64);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let deadline = if i < junk { t0 } else { t0 + budget };
+            match rx.recv().unwrap() {
+                Ok(reply) => {
+                    assert_eq!(reply.logits, want, "served reply diverged (aware={aware})");
+                    if Instant::now() <= deadline {
+                        met += 1;
+                    } else {
+                        missed += 1;
+                    }
+                }
+                Err(e) => {
+                    assert!(e.is_deadline(), "only deadline sheds expected: {e}");
+                    shed += 1;
+                }
+            }
+        }
+        coord.shutdown();
+        (met, missed, shed)
+    };
+
+    let (met_fifo, _missed_fifo, shed_fifo) = serve(false);
+    let (met_aware, _missed_aware, shed_aware) = serve(true);
+    assert_eq!(shed_fifo, 0, "a blind router computes everything");
+    assert!(
+        shed_aware >= junk as u64,
+        "the expired pile must be shed, got {shed_aware}"
+    );
+    assert!(
+        met_aware > met_fifo,
+        "deadline-aware router must meet strictly more deadlines \
+         (aware {met_aware} vs fifo {met_fifo})"
+    );
+    assert!(
+        met_aware >= 1,
+        "at least one feasible deadline met by the aware router"
+    );
+}

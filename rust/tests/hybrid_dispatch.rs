@@ -91,6 +91,7 @@ fn mixed_traffic_both_lanes_active_and_bit_exact() {
                 // explicit overrides — both lanes live on one pool
                 route: RoutePolicy::BatchOnly,
                 max_shard_cards: 0,
+                ..Default::default()
             },
             net.clone(),
         )
@@ -163,8 +164,10 @@ fn adaptive_policy_serves_and_partitions_traffic() {
             route: RoutePolicy::Adaptive {
                 shard_min_len: shape.len(), // every frame is "large"
                 deep_queue: 3,
+                tight_slack: Duration::ZERO,
             },
             max_shard_cards: 0,
+            ..Default::default()
         },
         net,
     )
@@ -186,40 +189,74 @@ fn adaptive_policy_serves_and_partitions_traffic() {
     assert!(m.routed_shard > 0, "shallow-queue large frames must shard");
 }
 
-/// Property: `classify` is total and stable over arbitrary signals, and
-/// an explicit override is never reassigned — for every policy shape.
+/// Property: `classify` is total and stable over arbitrary signals
+/// (frame size, queue depth, deadline slack), an explicit override is
+/// never reassigned, and the slack signal behaves monotonically — for
+/// every policy shape.
 #[test]
 fn route_policy_total_stable_and_override_proof() {
     let mut rng = Xoshiro256::new(0x70407);
     for _ in 0..2000 {
+        let tight_slack = Duration::from_micros(rng.range_i64(0, 5_000) as u64);
         let policy = match rng.range_i64(0, 3) {
             0 => RoutePolicy::BatchOnly,
             1 => RoutePolicy::ShardOnly,
             _ => RoutePolicy::Adaptive {
                 shard_min_len: rng.range_i64(0, 100_000) as usize,
                 deep_queue: rng.range_i64(0, 64) as usize,
+                tight_slack,
             },
         };
         let frame_len = rng.range_i64(0, 1_000_000) as usize;
         let queue_depth = rng.range_i64(0, 10_000) as usize;
+        let slack = match rng.range_i64(0, 3) {
+            0 => None,
+            _ => Some(Duration::from_micros(rng.range_i64(0, 10_000) as u64)),
+        };
         // total: exactly one of the two lanes
-        let lane = policy.classify(frame_len, queue_depth);
+        let lane = policy.classify(frame_len, queue_depth, slack);
         assert!(
             lane == DispatchClass::Batch || lane == DispatchClass::Shard,
             "{policy:?} produced no lane"
         );
         // stable: same inputs, same lane, every time
         for _ in 0..3 {
-            assert_eq!(policy.classify(frame_len, queue_depth), lane, "{policy:?}");
+            assert_eq!(policy.classify(frame_len, queue_depth, slack), lane, "{policy:?}");
         }
-        assert_eq!(policy.route(None, frame_len, queue_depth), lane);
+        assert_eq!(policy.route(None, frame_len, queue_depth, slack), lane);
         // an explicit class is final whatever the policy would say
         for explicit in [DispatchClass::Batch, DispatchClass::Shard] {
             assert_eq!(
-                policy.route(Some(explicit), frame_len, queue_depth),
+                policy.route(Some(explicit), frame_len, queue_depth, slack),
                 explicit,
                 "{policy:?} reassigned an explicit override"
             );
+        }
+        // slack semantics on the adaptive policy: under a shallow queue
+        // a tight slack must shard; relaxing every other signal while
+        // keeping slack tight must not flip it back to batching
+        if let RoutePolicy::Adaptive {
+            deep_queue,
+            tight_slack,
+            ..
+        } = policy
+        {
+            if queue_depth < deep_queue {
+                assert_eq!(
+                    policy.classify(frame_len, queue_depth, Some(tight_slack)),
+                    DispatchClass::Shard,
+                    "tight slack under a shallow queue must take the latency lane"
+                );
+            }
+            // no deadline can never be *tighter* than some deadline:
+            // if None shards (by size), Some(anything) still shards
+            if policy.classify(frame_len, queue_depth, None) == DispatchClass::Shard {
+                assert_eq!(
+                    policy.classify(frame_len, queue_depth, slack.or(Some(Duration::ZERO))),
+                    DispatchClass::Shard,
+                    "adding a deadline must never lose the shard lane"
+                );
+            }
         }
     }
 }
@@ -240,6 +277,7 @@ fn explicit_override_survives_opposing_policy() {
             policy: BatchPolicy::default(),
             route: RoutePolicy::ShardOnly,
             max_shard_cards: 0,
+            ..Default::default()
         },
         net,
     )

@@ -102,6 +102,7 @@ fn sharded_equals_unsharded_equals_golden_all_configs_modes_cards() {
                         policy: BatchPolicy::default(),
                         route: RoutePolicy::ShardOnly,
                         max_shard_cards: cards,
+                        ..Default::default()
                     },
                     net.clone(),
                 )
