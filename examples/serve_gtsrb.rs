@@ -8,6 +8,9 @@
 //! * each worker running frames on the cycle-accurate BinArray simulator;
 //! * mixed-QoS traffic: per-request deadlines driving adaptive routing,
 //!   earliest-deadline-first batching, lease hysteresis and shedding;
+//! * service classes: per-class latency SLOs with capacity-model
+//!   admission control (provably-unmeetable work refused up front) and
+//!   SLO-aware cross-lane arbitration, reported per class;
 //! * the PJRT runtime cross-scoring a sample of frames on the AOT-lowered
 //!   float model (Python never runs here);
 //! * the analytical model (Eq. 18) cross-checked against simulated cycles.
@@ -20,7 +23,8 @@ use std::time::{Duration, Instant};
 use binarray::artifacts::{self, CalibBatch, QuantNetwork};
 use binarray::binarray::ArrayConfig;
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, Mode, RoutePolicy,
+    BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, DispatchClass, Mode,
+    RoutePolicy, ServiceClass,
 };
 use binarray::runtime::Runtime;
 use binarray::{nn, perf};
@@ -202,6 +206,101 @@ fn main() -> anyhow::Result<()> {
         qos.deadline_shed,
         qos.routed_shard,
         qos.lease_wait.percentile(50.0)
+    );
+
+    // --- service classes: per-class SLOs with admission control ----------
+    // Three client populations again, but now as *named classes* with
+    // per-class contracts instead of hand-stamped deadlines: Interactive
+    // carries a latency SLO the coordinator either promises (admitting)
+    // or refuses up front (`InferError::AdmissionRefused` — the capacity
+    // model prices the backlog from the cached plan's cycle estimates),
+    // Standard is best effort, Bulk is batch-biased with a capped
+    // admission budget.  Freed cards arbitrate between lanes SLO-aware:
+    // the lane whose head has the least slack relative to its class SLO
+    // wins.
+    let class_frames = frames.min(96);
+    let classes = ClassTable::default()
+        .with(
+            ServiceClass::Interactive,
+            ClassSpec {
+                slo: Some(Duration::from_millis(250)),
+                dispatch_bias: None,
+                admission_limit: 0,
+            },
+        )
+        .with(
+            ServiceClass::Bulk,
+            ClassSpec {
+                slo: None,
+                dispatch_bias: Some(DispatchClass::Batch),
+                admission_limit: 32,
+            },
+        );
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array,
+            workers: workers.max(2),
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+            },
+            classes,
+            ..Default::default()
+        },
+        net.clone(),
+    )?;
+    let handle = coord.handle();
+    let rxs: Vec<_> = (0..class_frames)
+        .map(|i| {
+            let service = match i % 3 {
+                0 => ServiceClass::Interactive,
+                1 => ServiceClass::Standard,
+                _ => ServiceClass::Bulk,
+            };
+            handle.submit_sla(
+                calib.image(i % calib.n).to_vec(),
+                Mode::HighAccuracy,
+                None,
+                None,
+                service,
+            )
+        })
+        .collect();
+    let (mut class_refused, mut class_shed) = (0usize, 0usize);
+    for rx in rxs {
+        match rx.recv()? {
+            Ok(_) => {}
+            Err(e) if e.is_refused() => class_refused += 1,
+            Err(e) if e.is_deadline() => class_shed += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let cm = coord.shutdown();
+    println!("\n== service classes (SLO admission + SLO-aware arbitration) ==");
+    println!("{}", cm.summary());
+    println!(
+        "{:<12} {:>9} {:>9} {:>8} {:>8} {:>8} {:>8} {:>12} {:>12}",
+        "class", "submitted", "completed", "met", "missed", "shed", "refused", "p50", "p99"
+    );
+    for class in ServiceClass::ALL {
+        let c = &cm.classes[class.index()];
+        println!(
+            "{:<12} {:>9} {:>9} {:>8} {:>8} {:>8} {:>8} {:>12?} {:>12?}",
+            class.label(),
+            c.submitted,
+            c.completed,
+            c.slo_met,
+            c.slo_missed,
+            c.shed,
+            c.admission_refused,
+            c.latency.percentile(50.0),
+            c.latency.percentile(99.0),
+        );
+    }
+    println!(
+        "client-side: {class_refused} refused at admission, {class_shed} shed at a deadline gate \
+         (identity: {} submitted = {} completed + {} failed + {} refused)",
+        cm.submitted, cm.completed, cm.failed, cm.admission_refused
     );
 
     // --- analytical cross-check (the paper's §V-A3 methodology) ---------

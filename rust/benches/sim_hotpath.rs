@@ -16,7 +16,12 @@
 //!   * deadline dispatch: a mixed-QoS overload served by the
 //!     deadline-aware router (shed + EDF + slack routing) vs the same
 //!     load on a deadline-blind FIFO router — met/missed/shed counts in
-//!     the `deadline` JSON section.
+//!     the `deadline` JSON section;
+//!   * service classes: the same overload arbitrated SLO-aware (a freed
+//!     card goes to the lane with the least slack relative to its class
+//!     SLO) vs oldest-first — per-class met/missed/shed/refused counts
+//!     in the `slo` JSON section, admitted replies asserted bit-identical
+//!     to the golden model in both runs.
 //!
 //! Results are also written to `BENCH_sim_hotpath.json` so the perf
 //! trajectory is machine-readable across PRs (see `bench_gate` and the
@@ -35,7 +40,8 @@ use binarray::binarray::amu::{Amu, Odg};
 use binarray::binarray::plan::schedule;
 use binarray::binarray::{ArrayConfig, BinArraySystem};
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, Mode, RoutePolicy,
+    Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig,
+    DispatchClass, Mode, RoutePolicy, ServiceClass,
 };
 use binarray::isa::{compile_network, Program};
 use binarray::tensor::{FeatureMap, Shape};
@@ -538,8 +544,7 @@ fn main() {
                     max_delay: Duration::from_micros(500),
                 },
                 route: RoutePolicy::BatchOnly,
-                max_shard_cards: 0,
-                lease_slack: Duration::ZERO,
+                ..Default::default()
             },
             qnet.clone(),
         )
@@ -598,6 +603,118 @@ fn main() {
         "{{\"frames\": {dl_frames}, \"met_aware\": {met_aware}, \"missed_aware\": {missed_aware}, \"shed_aware\": {shed_aware}, \"met_fifo\": {met_fifo}, \"missed_fifo\": {missed_fifo}}}"
     );
 
+    // === service classes: SLO-aware vs oldest-first arbitration =========
+    // The same overload trace twice: a bulk flood submitted first (older
+    // lane, no SLO), then a trickle of Interactive frames whose class
+    // SLO is generous if the interactive lane cuts ahead (SLO-aware
+    // arbitration) and hopeless behind the whole bulk backlog
+    // (oldest-first).  Every admitted reply is asserted bit-identical to
+    // golden::forward in both runs — arbitration moves *when* a frame
+    // computes, never *what* it computes.
+    println!("\n=== SLO arbitration: slo-aware vs oldest-first under overload [1,8,2] ===");
+    let slo_bulk = 32usize;
+    let slo_interactive = 8usize;
+    // ≈ half the bulk backlog's serial time: met with ~2× margin when
+    // the interactive lane cuts first, missed with ~2× margin behind
+    // the flood
+    let interactive_slo = Duration::from_secs_f64(direct_per * 16.0);
+    let golden_hi = golden::forward(&qnet, &image, shape, None);
+    let golden_lo = golden::forward(&qnet, &image, shape, Some(2));
+    let run_slo = |aware: bool| -> (u64, u64, u64, u64) {
+        let classes = ClassTable::default()
+            .with(
+                ServiceClass::Interactive,
+                ClassSpec {
+                    slo: Some(interactive_slo),
+                    dispatch_bias: None,
+                    admission_limit: 0,
+                },
+            )
+            .with(
+                ServiceClass::Bulk,
+                ClassSpec {
+                    slo: None,
+                    dispatch_bias: Some(DispatchClass::Batch),
+                    admission_limit: 0,
+                },
+            );
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                array: ArrayConfig::new(1, 8, 2),
+                workers: 1,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_delay: Duration::from_micros(200),
+                },
+                route: RoutePolicy::BatchOnly,
+                classes,
+                arbitration: if aware {
+                    Arbitration::SloAware
+                } else {
+                    Arbitration::OldestFirst
+                },
+                ..Default::default()
+            },
+            qnet.clone(),
+        )
+        .unwrap();
+        coord.infer(image.clone(), Mode::HighAccuracy).unwrap(); // warmup
+        let h = coord.handle();
+        let mut rxs = Vec::new();
+        for _ in 0..slo_bulk {
+            rxs.push(h.submit_sla(
+                image.clone(),
+                Mode::HighAccuracy,
+                None,
+                None,
+                ServiceClass::Bulk,
+            ));
+        }
+        for _ in 0..slo_interactive {
+            rxs.push(h.submit_sla(
+                image.clone(),
+                Mode::HighThroughput,
+                None,
+                None,
+                ServiceClass::Interactive,
+            ));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv().unwrap() {
+                Ok(r) => {
+                    let want = if i < slo_bulk { &golden_hi } else { &golden_lo };
+                    assert_eq!(
+                        &r.logits, want,
+                        "admitted reply diverged from golden (aware={aware}, frame {i})"
+                    );
+                }
+                Err(e) => assert!(
+                    e.is_deadline() || e.is_refused(),
+                    "only QoS answers expected: {e}"
+                ),
+            }
+        }
+        let m = coord.shutdown();
+        let c = &m.classes[ServiceClass::Interactive.index()];
+        (c.slo_met, c.slo_missed, c.shed, c.admission_refused)
+    };
+    let (met_old, missed_old, shed_old, refused_old) = run_slo(false);
+    let (met_slo, missed_slo, shed_slo, refused_slo) = run_slo(true);
+    println!(
+        "  oldest-first: {met_old:>3} met  {missed_old:>3} missed  {shed_old:>3} shed  {refused_old:>3} refused  (of {slo_interactive} interactive)"
+    );
+    println!(
+        "  slo-aware:    {met_slo:>3} met  {missed_slo:>3} missed  {shed_slo:>3} shed  {refused_slo:>3} refused"
+    );
+    println!(
+        "  slo-aware arbitration met {} more interactive SLOs on the same overload",
+        met_slo as i64 - met_old as i64
+    );
+    let slo_json = format!(
+        "{{\"bulk\": {slo_bulk}, \"interactive\": {slo_interactive}, \"slo_ms\": {:.3}, \"met_aware\": {met_slo}, \"missed_aware\": {missed_slo}, \"shed_aware\": {shed_slo}, \"refused_aware\": {refused_slo}, \"met_oldest\": {met_old}, \"missed_oldest\": {missed_old}, \"shed_oldest\": {shed_old}, \"refused_oldest\": {refused_old}}}",
+        interactive_slo.as_secs_f64() * 1e3
+    );
+
     // === machine-readable record =======================================
     let direct_json: Vec<String> = direct_fps
         .iter()
@@ -612,7 +729,7 @@ fn main() {
         hm.routed_batch, hm.routed_shard, hm.mean_lease(), hm.shard_cards_stolen
     );
     let json = format!(
-        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json}\n}}\n",
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json},\n  \"slo\": {slo_json}\n}}\n",
         cfg.label(),
         1.0 / legacy_per,
         1.0 / plan_per_frame,

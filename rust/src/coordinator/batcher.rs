@@ -18,12 +18,37 @@
 //! happened to arrive first.  Ripeness (when a lane *may* cut) stays
 //! age-based — the oldest *submission* in the lane triggers `max_delay`
 //! — so EDF reorders within the admission window without starving it.
+//!
+//! **Across** lanes, a freed card goes to whichever ripe lane's most
+//! urgent request has the least remaining slack *relative to its class
+//! SLO* ([`Arbitration::SloAware`], the default): 5 ms left of a 50 ms
+//! Interactive budget outranks 50 ms left of a 1 s bulk deadline, so a
+//! tight class never starves because another lane's queue happens to be
+//! older.  Lanes holding no deadlined work fall back to oldest-first
+//! among themselves (and always lose to a deadlined lane).
+//! [`Arbitration::OldestFirst`] keeps the pre-SLO pick for comparison
+//! (the `sim_hotpath` bench races the two on the same overload).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::route::DispatchClass;
+use super::route::{relative_slack, ClassTable, DispatchClass};
 use super::{Mode, Request};
+
+/// How the batcher picks *which* ripe lane cuts when several are ready —
+/// the cross-lane half of card arbitration (within a lane EDF already
+/// orders the cut).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Arbitration {
+    /// The lane whose oldest submission has waited longest wins
+    /// (pre-SLO behavior; deadline-blind across lanes).
+    OldestFirst,
+    /// The lane whose most urgent request has the least remaining slack
+    /// relative to its class SLO wins; deadline-free lanes fall back to
+    /// oldest-first behind every deadlined lane.
+    #[default]
+    SloAware,
+}
 
 /// Admission policy.
 #[derive(Clone, Copy, Debug)]
@@ -98,6 +123,10 @@ const LANES: usize = 4;
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
+    /// Cross-lane pick rule (see [`Arbitration`]).
+    arbitration: Arbitration,
+    /// Class SLOs for the relative-slack urgency signal.
+    classes: ClassTable,
     lanes: [VecDeque<Request>; LANES],
     /// Per-lane count of queued requests carrying a deadline.
     deadlined: [usize; LANES],
@@ -140,8 +169,16 @@ fn lane_class(i: usize) -> DispatchClass {
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
+        Self::with_qos(policy, ClassTable::default(), Arbitration::default())
+    }
+
+    /// Full QoS construction: the class table feeds the relative-slack
+    /// urgency signal, `arbitration` picks the cross-lane rule.
+    pub fn with_qos(policy: BatchPolicy, classes: ClassTable, arbitration: Arbitration) -> Self {
         Self {
             policy,
+            arbitration,
+            classes,
             lanes: std::array::from_fn(|_| VecDeque::new()),
             deadlined: [0; LANES],
             earliest: [None; LANES],
@@ -165,11 +202,21 @@ impl Batcher {
         self.lanes.iter().map(VecDeque::len).sum()
     }
 
+    /// Earliest deadline queued anywhere, from the per-lane caches —
+    /// O(lanes), and conservative the same way the caches are: possibly
+    /// stale-*low* after a cut (waking the router early costs one
+    /// refreshing scan), never stale-high (a due shed is never slept
+    /// through).  `None` = nothing queued carries a deadline.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.earliest.iter().flatten().min().copied()
+    }
+
     /// Cut the next batch if some lane's policy allows: a lane is ripe
     /// when it holds its class's `max_batch` requests or its oldest
     /// *submission* has waited its class's `max_delay` (shard lanes are
-    /// ripe the moment they are non-empty).  The lane with the older
-    /// oldest-submission wins (age fairness across modes and classes);
+    /// ripe the moment they are non-empty).  Among ripe lanes the
+    /// configured [`Arbitration`] picks the winner (least relative SLO
+    /// slack by default, oldest-first as fallback and escape hatch);
     /// within the winning lane the cut takes the most urgent requests
     /// (earliest deadline first, deadline-less requests FIFO behind
     /// them).  An empty lane is never ripe and a cut batch is never
@@ -185,11 +232,74 @@ impl Batcher {
         }
     }
 
+    /// Most urgent relative slack queued in lane `i` at `now` (see
+    /// [`crate::coordinator::route::relative_slack`]): `None` while the
+    /// lane holds no deadlined request — O(1) via the `deadlined`
+    /// counter — otherwise the minimum over the lane (O(lane), paid only
+    /// by lanes actually carrying deadlines).
+    fn min_rel_slack(&self, i: usize, now: Instant) -> Option<f64> {
+        if self.deadlined[i] == 0 {
+            return None;
+        }
+        self.lanes[i]
+            .iter()
+            .filter_map(|r| {
+                relative_slack(
+                    r.submitted,
+                    r.deadline,
+                    self.classes.spec(r.service).slo,
+                    now,
+                )
+            })
+            .min_by(f64::total_cmp)
+    }
+
+    /// Does ripe lane `i` outrank ripe lane `j` under the configured
+    /// [`Arbitration`]?  `memo` caches each lane's urgency for the
+    /// duration of one cut, so the O(lane) slack scan runs at most once
+    /// per lane per cut however many pairwise comparisons the pick
+    /// makes.
+    fn outranks(
+        &self,
+        i: usize,
+        j: usize,
+        now: Instant,
+        memo: &mut [Option<Option<f64>>; LANES],
+    ) -> bool {
+        match self.arbitration {
+            Arbitration::OldestFirst => self.oldest(i) < self.oldest(j),
+            Arbitration::SloAware => {
+                let a = *memo[i].get_or_insert_with(|| self.min_rel_slack(i, now));
+                let b = *memo[j].get_or_insert_with(|| self.min_rel_slack(j, now));
+                match (a, b) {
+                    (Some(a), Some(b)) if a != b => a < b,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    // tied urgency (or none anywhere): age fairness
+                    _ => self.oldest(i) < self.oldest(j),
+                }
+            }
+        }
+    }
+
     pub fn cut(&mut self, now: Instant) -> Option<Batch> {
+        self.cut_gated(now, true)
+    }
+
+    /// [`Self::cut`] with the batch lanes gated: when `allow_batch` is
+    /// false only shard-class lanes may cut (the shard orchestrator has
+    /// its own queue).  The router gates batch-lane cuts on an actually
+    /// free card — cutting eagerly and parking the batch would freeze
+    /// the arbitration decision long before a card frees, exactly what
+    /// SLO-aware cross-lane arbitration exists to avoid: work stays in
+    /// the batcher, re-ranked at every card-free event, until it can
+    /// start *now*.
+    pub fn cut_gated(&mut self, now: Instant, allow_batch: bool) -> Option<Batch> {
         let ripe = |i: usize| -> bool {
             let eff = self.policy.effective(lane_class(i));
             let q = &self.lanes[i];
-            !q.is_empty()
+            (allow_batch || lane_class(i) == DispatchClass::Shard)
+                && !q.is_empty()
                 && (q.len() >= eff.max_batch
                     || self
                         .oldest(i)
@@ -197,14 +307,14 @@ impl Batcher {
                         .unwrap_or(false))
         };
 
+        let mut urgency: [Option<Option<f64>>; LANES] = [None; LANES];
         let mut pick: Option<usize> = None;
         for i in 0..LANES {
             if ripe(i) {
                 pick = match pick {
                     None => Some(i),
                     Some(j) => {
-                        // older lane first
-                        if self.oldest(i) < self.oldest(j) {
+                        if self.outranks(i, j, now, &mut urgency) {
                             Some(i)
                         } else {
                             Some(j)
@@ -322,6 +432,8 @@ impl Batcher {
 mod tests {
     use super::*;
 
+    use super::super::route::{ClassSpec, ServiceClass};
+
     fn req(id: u64, mode: Mode, at: Instant) -> Request {
         Request {
             id,
@@ -329,6 +441,7 @@ mod tests {
             mode,
             class: Some(DispatchClass::Batch),
             deadline: None,
+            service: ServiceClass::Standard,
             submitted: at,
         }
     }
@@ -617,6 +730,116 @@ mod tests {
         assert_eq!(b.deadlined[lane_ha], 1);
         b.flush();
         assert_eq!(b.deadlined, [0; LANES]);
+    }
+
+    /// Cross-lane SLO-aware arbitration: with both lanes ripe, the lane
+    /// whose head has the least *relative* slack cuts first — even when
+    /// the other lane is older, and even when the other lane's head has
+    /// less *absolute* slack.
+    #[test]
+    fn slo_aware_pick_beats_oldest_first_across_lanes() {
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::ZERO, // everything ripe immediately
+        };
+        let classes = ClassTable::default()
+            .with(
+                ServiceClass::Interactive,
+                ClassSpec {
+                    slo: Some(Duration::from_millis(50)),
+                    ..ClassSpec::default()
+                },
+            )
+            .with(
+                ServiceClass::Bulk,
+                ClassSpec {
+                    slo: Some(Duration::from_secs(2)),
+                    ..ClassSpec::default()
+                },
+            );
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        let mk = |id, mode, service, deadline| Request {
+            mode,
+            service,
+            deadline: Some(deadline),
+            ..req(id, Mode::HighAccuracy, t0)
+        };
+        // case 1: interactive with 2 ms left of its 50 ms SLO (4%
+        // remaining) vs bulk with 200 ms left of its 2 s SLO (10%) —
+        // the interactive lane cuts first despite the bulk lane being
+        // older.
+        let mut b = Batcher::with_qos(policy, classes, Arbitration::SloAware);
+        b.push(mk(0, Mode::HighAccuracy, ServiceClass::Bulk, t0 + 200 * ms));
+        b.push(mk(1, Mode::HighThroughput, ServiceClass::Interactive, t0 + 2 * ms));
+        let first = b.cut(t0).expect("ripe");
+        assert_eq!(first.requests[0].id, 1, "least relative slack wins");
+        let second = b.cut(t0).expect("ripe");
+        assert_eq!(second.requests[0].id, 0);
+        // case 2: same queue under OldestFirst — the older bulk lane
+        // wins regardless of urgency (the pre-SLO behavior, kept as the
+        // bench's comparison baseline).
+        let mut b = Batcher::with_qos(policy, classes, Arbitration::OldestFirst);
+        b.push(mk(0, Mode::HighAccuracy, ServiceClass::Bulk, t0 + 200 * ms));
+        b.push(mk(1, Mode::HighThroughput, ServiceClass::Interactive, t0 + 2 * ms));
+        let first = b.cut(t0).expect("ripe");
+        assert_eq!(first.requests[0].id, 0, "oldest lane wins when blind");
+        // case 3: a deadline-free lane never outranks a deadlined one
+        // under SloAware, whatever its age.
+        let mut b = Batcher::with_qos(policy, classes, Arbitration::SloAware);
+        b.push(req(0, Mode::HighAccuracy, t0)); // older, no deadline
+        b.push(mk(1, Mode::HighThroughput, ServiceClass::Bulk, t0 + 1000 * ms));
+        let first = b.cut(t0 + ms).expect("ripe");
+        assert_eq!(first.requests[0].id, 1, "deadlined lane first");
+        // case 4: no deadlines anywhere — SloAware degrades to
+        // oldest-first age fairness.
+        let mut b = Batcher::with_qos(policy, classes, Arbitration::SloAware);
+        b.push(req(0, Mode::HighThroughput, t0));
+        b.push(req(1, Mode::HighAccuracy, t0 + ms));
+        assert_eq!(b.cut(t0 + 2 * ms).unwrap().requests[0].id, 0);
+    }
+
+    /// Regression pin for the stale-low `earliest` gate (`cut` may
+    /// remove the lane's earliest deadline and leave the cached minimum
+    /// pointing at a request that is gone): at the stale instant
+    /// `shed_expired` pays exactly one refreshing scan — shedding
+    /// nothing, rebuilding the cache from the survivors — and the
+    /// later-deadlined survivor is still shed the moment it actually
+    /// expires.  One scan, never a missed shed.
+    #[test]
+    fn shed_after_cut_refreshes_the_stale_earliest_gate() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1, // the cut takes only the most urgent request
+            max_delay: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        let i = lane(Mode::HighAccuracy, DispatchClass::Batch);
+        b.push(deadline_req(0, t0, t0 + 10 * ms)); // the earliest
+        b.push(deadline_req(1, t0, t0 + 50 * ms)); // the survivor
+        let batch = b.cut(t0).expect("ripe by zero delay");
+        assert_eq!(batch.requests[0].id, 0, "EDF takes the earliest");
+        // the cache is now stale-low: it still holds request 0's deadline
+        assert_eq!(b.earliest[i], Some(t0 + 10 * ms), "documented stale-low state");
+        assert_eq!(b.deadlined[i], 1);
+        // at the stale instant (past the cached minimum, before the
+        // survivor's deadline): nothing expires, one scan refreshes the
+        // cache to the true minimum
+        let shed = b.shed_expired(t0 + 20 * ms);
+        assert!(shed.is_empty(), "survivor not expired — nothing shed");
+        assert_eq!(b.earliest[i], Some(t0 + 50 * ms), "cache refreshed in one scan");
+        assert_eq!(b.pending(), 1);
+        // with the cache refreshed, a pre-deadline call is back on the
+        // O(1) skip path (observable: the cache value is untouched) …
+        let shed = b.shed_expired(t0 + 30 * ms);
+        assert!(shed.is_empty());
+        assert_eq!(b.earliest[i], Some(t0 + 50 * ms));
+        // … and the shed is never missed once the survivor expires
+        let shed = b.shed_expired(t0 + 50 * ms);
+        assert_eq!(shed.len(), 1, "stale cache must never hide an expiry");
+        assert_eq!(shed[0].id, 1);
+        assert_eq!(b.deadlined[i], 0);
+        assert_eq!(b.earliest[i], None);
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Admission-control capacity model — "can the pool still promise this
+//! SLO?" answered *at submit*, not discovered at the shed gate.
+//!
+//! FINN sizes its dataflow pipeline to a user-stated FPS target before
+//! anything runs (arXiv 1612.07119); this is the runtime equivalent for
+//! a shared pool.  The model has two halves:
+//!
+//! * **static cost** — per accuracy mode, an estimated cycle count per
+//!   frame derived from the cached [`ExecutionPlan`] schedules (the same
+//!   structure the executor walks, so the estimate prices exactly the
+//!   work units that will run: per layer, the widest logical-SA group's
+//!   serial unit stream, times the sequential level-group passes);
+//! * **calibration** — the host's observed *pace* (wall time per
+//!   estimated cycle), updated by the workers after every batch as a
+//!   running **minimum**.
+//!
+//! The conservatism guarantee follows from the minimum: the model's
+//! predicted service time for a mode never exceeds `est_cycles(mode) ×
+//! fastest-pace-ever-observed` — i.e. the prediction is the cheapest
+//! this host has ever been seen to do that work.  Admission refuses a
+//! request only when even that floor, stacked on the work already
+//! committed ahead of it, lands past the deadline — so refused work is
+//! provably unmeetable under the best observed behavior, and an
+//! uncalibrated model (no completions yet) refuses nothing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::artifacts::{LayerKind, QuantNetwork};
+use crate::binarray::ExecutionPlan;
+
+use super::Mode;
+
+/// Sentinel for "no completion observed yet" — the model predicts
+/// nothing (and admission refuses nothing) until a real frame sets the
+/// pace.
+const UNCALIBRATED: u64 = u64::MAX;
+
+/// Per-mode frame cost + observed host pace (see module docs).
+///
+/// Shared `Arc`-style between the router (admission decisions, backlog
+/// ledger) and the workers/orchestrator (pace observations) — all
+/// methods take `&self`; the pace is an atomic minimum.
+#[derive(Debug)]
+pub struct CapacityModel {
+    /// Estimated cycles per frame; index 0 = high accuracy, `m` = the
+    /// truncated `m_run = m` plan (same layout as [`ExecutionPlan`]).
+    est: Vec<u64>,
+    max_m: usize,
+    m_arch: usize,
+    /// Minimum observed pace in picoseconds per *estimated* cycle
+    /// ([`UNCALIBRATED`] until the first completion).
+    pace_ps: AtomicU64,
+}
+
+impl CapacityModel {
+    /// Price every accuracy mode of `plan` (built for `net`).
+    pub fn new(plan: &ExecutionPlan, net: &QuantNetwork) -> Self {
+        let est = (0..=plan.max_m)
+            .map(|i| {
+                let m_run = if i == 0 { None } else { Some(i) };
+                plan.mode(m_run)
+                    .layers
+                    .iter()
+                    .map(|lp| {
+                        let l = &net.layers[lp.layer];
+                        let np = l.pool.max(1);
+                        // Per-window stream cost: the SA streams the
+                        // whole input window (n_c words) per output.
+                        let n_c = l.n_c().max(1) as u64;
+                        // Widest logical-SA group bounds the layer's
+                        // wall (groups run in parallel on the SAs, units
+                        // within a group run serially).
+                        let widest = lp
+                            .assignments
+                            .iter()
+                            .map(|units| {
+                                units
+                                    .iter()
+                                    .map(|u| match lp.kind {
+                                        LayerKind::Conv => {
+                                            let windows = (u.rows.len() * np) as u64
+                                                * (lp.out_shape.w * np) as u64;
+                                            windows * n_c
+                                        }
+                                        // dense units are ≤ D_arch
+                                        // channel chunks: one stream
+                                        LayerKind::Dense => n_c,
+                                    })
+                                    .sum::<u64>()
+                            })
+                            .max()
+                            .unwrap_or(0);
+                        widest * lp.seq_m
+                    })
+                    .sum::<u64>()
+                    .max(1)
+            })
+            .collect();
+        Self {
+            est,
+            max_m: plan.max_m,
+            m_arch: plan.cfg.m_arch,
+            pace_ps: AtomicU64::new(UNCALIBRATED),
+        }
+    }
+
+    /// A degenerate single-cost model (router unit rigs, simulations):
+    /// every mode prices at `est_cycles`.
+    pub fn fixed(est_cycles: u64) -> Self {
+        Self {
+            est: vec![est_cycles.max(1); 2],
+            max_m: 1,
+            m_arch: 1,
+            pace_ps: AtomicU64::new(UNCALIBRATED),
+        }
+    }
+
+    /// Estimated cycles for one frame of `mode`.
+    pub fn est_cycles(&self, mode: Mode) -> u64 {
+        let idx = match mode {
+            Mode::HighAccuracy => 0,
+            Mode::HighThroughput => self.m_arch.clamp(1, self.max_m),
+        };
+        self.est[idx]
+    }
+
+    /// Record a completion: `frames` frames of `mode` took `wall` using
+    /// `cards` cards at once (1 for a batch-lane run, the lease width
+    /// for a sharded frame).  The pace is charged in *card-time* —
+    /// `wall × cards` — so a frame scattered over k cards doesn't
+    /// masquerade as a k×-faster single card and deflate the floor
+    /// (`earliest_feasible` divides by the pool width again; charging
+    /// wall alone would discount parallelism twice and quietly disarm
+    /// the gate).  Keeps the *minimum* pace (see module docs for why
+    /// min is the conservative choice).
+    pub fn observe(&self, mode: Mode, frames: usize, wall: Duration, cards: usize) {
+        if frames == 0 {
+            return;
+        }
+        let total = self.est_cycles(mode).saturating_mul(frames as u64);
+        let card_ps = wall
+            .as_nanos()
+            .saturating_mul(1000)
+            .saturating_mul(cards.max(1) as u128);
+        let ps = (card_ps / total as u128).min(UNCALIBRATED as u128);
+        self.pace_ps.fetch_min((ps as u64).max(1), Ordering::Relaxed);
+    }
+
+    /// The observed pace floor (ps per estimated cycle), once any frame
+    /// has completed.
+    pub fn pace_ps(&self) -> Option<u64> {
+        match self.pace_ps.load(Ordering::Relaxed) {
+            UNCALIBRATED => None,
+            ps => Some(ps),
+        }
+    }
+
+    /// Force the pace (tests and rigs — production calibration goes
+    /// through [`Self::observe`]).
+    pub fn set_pace_ps(&self, ps: u64) {
+        self.pace_ps.store(ps.max(1), Ordering::Relaxed);
+    }
+
+    /// Cheapest time this host has ever been observed to serve one
+    /// frame of `mode` (`None` while uncalibrated).
+    pub fn service_floor(&self, mode: Mode) -> Option<Duration> {
+        let ps = self.pace_ps()?;
+        Some(ps_to_duration(self.est_cycles(mode) as u128 * ps as u128))
+    }
+
+    /// Earliest-completion *floor* for a new frame of `mode` admitted
+    /// now: the committed work ahead of it (`backlog_cycles`) plus its
+    /// own cost, spread perfectly over `cards` — no queueing overhead,
+    /// no stragglers, the fastest pace ever observed.  Actual completion
+    /// can only be later, so `deadline < now + floor` is a sound refusal.
+    /// `None` while uncalibrated (nothing is provable yet — admit).
+    pub fn earliest_feasible(
+        &self,
+        mode: Mode,
+        backlog_cycles: u64,
+        cards: usize,
+    ) -> Option<Duration> {
+        let ps = self.pace_ps()?;
+        let total = backlog_cycles as u128 + self.est_cycles(mode) as u128;
+        Some(ps_to_duration(total * ps as u128 / cards.max(1) as u128))
+    }
+}
+
+fn ps_to_duration(ps: u128) -> Duration {
+    Duration::from_nanos((ps / 1000).min(u64::MAX as u128) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binarray::ArrayConfig;
+    use crate::isa::compile_network;
+    use crate::isa::compiler::tests_support::cnn_a_quant;
+    use crate::util::rng::Xoshiro256;
+
+    fn model() -> CapacityModel {
+        let mut rng = Xoshiro256::new(0xCAFE);
+        let net = cnn_a_quant(&mut rng, 4);
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(ArrayConfig::new(1, 8, 2), &net, &prog);
+        CapacityModel::new(&plan, &net)
+    }
+
+    #[test]
+    fn high_throughput_mode_is_priced_cheaper() {
+        let m = model();
+        let hi = m.est_cycles(Mode::HighAccuracy);
+        let lo = m.est_cycles(Mode::HighThroughput);
+        assert!(hi > lo, "M=4 on M_arch=2: full accuracy is ~2× the work ({hi} vs {lo})");
+        assert!(lo > 0);
+    }
+
+    #[test]
+    fn uncalibrated_model_proves_nothing() {
+        let m = model();
+        assert_eq!(m.pace_ps(), None);
+        assert_eq!(m.service_floor(Mode::HighAccuracy), None);
+        assert_eq!(
+            m.earliest_feasible(Mode::HighAccuracy, u64::MAX / 2, 1),
+            None,
+            "no observation, no refusal — whatever the backlog"
+        );
+    }
+
+    #[test]
+    fn pace_is_a_running_minimum() {
+        let m = model();
+        m.observe(Mode::HighAccuracy, 1, Duration::from_millis(10), 1);
+        let first = m.pace_ps().expect("calibrated");
+        // a slower observation must not raise the floor
+        m.observe(Mode::HighAccuracy, 1, Duration::from_millis(40), 1);
+        assert_eq!(m.pace_ps(), Some(first));
+        // a faster one lowers it
+        m.observe(Mode::HighAccuracy, 2, Duration::from_millis(10), 1);
+        let lower = m.pace_ps().expect("calibrated");
+        assert!(lower < first, "{lower} < {first}");
+        // the service floor for the observed mode never exceeds the
+        // cheapest per-frame wall ever seen (the conservatism guarantee)
+        assert!(m.service_floor(Mode::HighAccuracy).unwrap() <= Duration::from_millis(5));
+    }
+
+    /// A frame sharded over k cards is charged k card-seconds: the same
+    /// work finishing k× faster on k× the cards must not move the
+    /// per-card pace floor (parallelism is already credited by
+    /// `earliest_feasible`'s division — crediting it here too would
+    /// disarm the gate after one wide-sharded frame).
+    #[test]
+    fn sharded_observation_does_not_deflate_the_pace() {
+        let m = CapacityModel::fixed(1_000);
+        m.observe(Mode::HighAccuracy, 1, Duration::from_millis(10), 1);
+        let floor = m.pace_ps().expect("calibrated");
+        // perfect 4-way sharding: wall/4 on 4 cards = the same card-time
+        m.observe(Mode::HighAccuracy, 1, Duration::from_micros(2_500), 4);
+        assert_eq!(m.pace_ps(), Some(floor), "same card-time, same floor");
+        // real sharding has scatter/gather overhead: more card-time,
+        // floor untouched
+        m.observe(Mode::HighAccuracy, 1, Duration::from_millis(4), 4);
+        assert_eq!(m.pace_ps(), Some(floor));
+    }
+
+    #[test]
+    fn earliest_feasible_scales_with_backlog_and_cards() {
+        let m = CapacityModel::fixed(1_000);
+        m.set_pace_ps(1_000_000); // 1 µs per est-cycle ⇒ 1 ms per frame
+        let own = m.earliest_feasible(Mode::HighAccuracy, 0, 1).unwrap();
+        assert_eq!(own, Duration::from_millis(1));
+        let queued = m.earliest_feasible(Mode::HighAccuracy, 9_000, 1).unwrap();
+        assert_eq!(queued, Duration::from_millis(10), "9 frames ahead + own");
+        let wide = m.earliest_feasible(Mode::HighAccuracy, 9_000, 4).unwrap();
+        assert_eq!(wide, Duration::from_micros(2500), "perfectly parallel floor");
+    }
+}

@@ -8,20 +8,82 @@
 
 use std::time::Duration;
 
-/// Streaming latency statistics (exact percentiles from a sorted buffer —
-/// request counts here are small enough that a full buffer is fine).
-#[derive(Clone, Debug, Default)]
+use crate::util::rng::Xoshiro256;
+
+use super::route::{ServiceClass, N_CLASSES};
+
+/// Most samples a [`LatencyStats`] ever holds.  Below the cap the buffer
+/// is exact (every tier-1 test count fits with a wide margin); above it,
+/// reservoir sampling (Algorithm R) keeps a uniform sample of the whole
+/// stream — bounded memory and bounded percentile cost under sustained
+/// serving, where the old unbounded `Vec` was a slow leak and an
+/// O(n log n) sort per metrics read.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Streaming latency statistics: exact below the 4 096-sample reservoir
+/// cap, a uniform reservoir above it.  `count()` and `mean()` always
+/// reflect the *full* stream; percentiles are exact until the cap, then
+/// read from the reservoir.
+#[derive(Clone, Debug)]
 pub struct LatencyStats {
     samples_us: Vec<u64>,
+    /// Samples ever recorded (≥ `samples_us.len()`).
+    seen: u64,
+    /// Sum over the full stream (for an exact mean past the cap).
+    total_us: u128,
+    /// Reservoir slot selection — the in-crate PRNG, fixed seed
+    /// (metrics must not depend on ambient entropy).
+    rng: Xoshiro256,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self {
+            samples_us: Vec::new(),
+            seen: 0,
+            total_us: 0,
+            rng: Xoshiro256::new(0x5EED_1A7E),
+        }
+    }
+}
+
+/// Keep a uniform without-replacement subsample of `k` of `v`'s
+/// elements (partial Fisher–Yates; order is not preserved).
+fn subsample(rng: &mut Xoshiro256, v: &mut Vec<u64>, k: usize) {
+    let n = v.len();
+    if k >= n {
+        return;
+    }
+    for i in 0..k {
+        let j = i + rng.below((n - i) as u64) as usize;
+        v.swap(i, j);
+    }
+    v.truncate(k);
 }
 
 impl LatencyStats {
-    pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+    fn record_us(&mut self, us: u64) {
+        self.seen += 1;
+        self.total_us += us as u128;
+        if self.samples_us.len() < RESERVOIR_CAP {
+            self.samples_us.push(us);
+        } else {
+            // Algorithm R: keep each of the `seen` samples with equal
+            // probability CAP/seen.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < RESERVOIR_CAP {
+                self.samples_us[j as usize] = us;
+            }
+        }
     }
 
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    /// Samples recorded over the whole stream (not the reservoir size).
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.seen.min(usize::MAX as u64) as usize
     }
 
     pub fn percentile(&self, p: f64) -> Duration {
@@ -34,13 +96,76 @@ impl LatencyStats {
         Duration::from_micros(v[idx.min(v.len() - 1)])
     }
 
+    /// Exact mean of the full stream (reservoir or not).
     pub fn mean(&self) -> Duration {
-        if self.samples_us.is_empty() {
+        if self.seen == 0 {
             return Duration::ZERO;
         }
-        Duration::from_micros(
-            self.samples_us.iter().sum::<u64>() / self.samples_us.len() as u64,
-        )
+        Duration::from_micros((self.total_us / self.seen as u128).min(u64::MAX as u128) as u64)
+    }
+
+    /// Fold `other`'s stream into this one.  While the combined sample
+    /// buffers fit under the cap this is an exact concatenation; past
+    /// it, each stream is allotted reservoir slots in proportion to its
+    /// *full* stream length (not its buffer size) and fills them with a
+    /// uniform without-replacement subsample of its buffer — a
+    /// short-latency stream can't crowd a long one out of the merged
+    /// percentiles just because it merged first.  `count()` and
+    /// `mean()` stay exact over both full streams.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        if other.seen == 0 {
+            return;
+        }
+        let seen = self.seen + other.seen;
+        let total_us = self.total_us + other.total_us;
+        let mut theirs = other.samples_us.clone();
+        if self.samples_us.len() + theirs.len() > RESERVOIR_CAP {
+            let quota = ((RESERVOIR_CAP as u128 * self.seen as u128) / seen as u128) as usize;
+            let mine = quota.clamp(
+                RESERVOIR_CAP.saturating_sub(theirs.len()),
+                self.samples_us.len().min(RESERVOIR_CAP),
+            );
+            let theirs_n = (RESERVOIR_CAP - mine).min(theirs.len());
+            let mut rng = self.rng.clone();
+            subsample(&mut rng, &mut self.samples_us, mine);
+            subsample(&mut rng, &mut theirs, theirs_n);
+            self.rng = rng;
+        }
+        self.samples_us.extend_from_slice(&theirs);
+        self.seen = seen;
+        self.total_us = total_us;
+    }
+}
+
+/// Per-[`ServiceClass`] serving outcomes: the SLO scoreboard.
+#[derive(Clone, Debug, Default)]
+pub struct ClassMetrics {
+    /// Requests of this class that reached `submit` (admitted or not).
+    pub submitted: u64,
+    /// Requests answered with a result.
+    pub completed: u64,
+    /// Completions inside the request's SLO/deadline.
+    pub slo_met: u64,
+    /// Completions after it (still answered `Ok`).
+    pub slo_missed: u64,
+    /// Requests shed unserved at a deadline gate.
+    pub shed: u64,
+    /// Requests refused at admission (`InferError::AdmissionRefused`) —
+    /// never queued, never computed.
+    pub admission_refused: u64,
+    /// End-to-end latency of this class's completions.
+    pub latency: LatencyStats,
+}
+
+impl ClassMetrics {
+    pub fn merge(&mut self, other: &ClassMetrics) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.slo_met += other.slo_met;
+        self.slo_missed += other.slo_missed;
+        self.shed += other.shed;
+        self.admission_refused += other.admission_refused;
+        self.latency.merge(&other.latency);
     }
 }
 
@@ -50,6 +175,16 @@ pub struct Metrics {
     pub latency: LatencyStats,
     /// Queue wait portion of latency.
     pub queue_wait: LatencyStats,
+    /// Requests that reached `submit` — the left side of the accounting
+    /// identity `submitted == completed + failed + admission_refused`
+    /// (every request is answered exactly once, somewhere).
+    pub submitted: u64,
+    /// Requests refused at admission (capacity or class budget) with
+    /// `InferError::AdmissionRefused`.  Refusals are *not* failures:
+    /// the work was never admitted, never queued, never computed.
+    pub admission_refused: u64,
+    /// Per-service-class outcomes, indexed by `ServiceClass::index()`.
+    pub classes: [ClassMetrics; N_CLASSES],
     /// Requests completed.
     pub completed: u64,
     /// Requests that ended in an error reply (bad input, dead card…) —
@@ -102,12 +237,13 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn merge(&mut self, other: &Metrics) {
-        self.latency
-            .samples_us
-            .extend_from_slice(&other.latency.samples_us);
-        self.queue_wait
-            .samples_us
-            .extend_from_slice(&other.queue_wait.samples_us);
+        self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.submitted += other.submitted;
+        self.admission_refused += other.admission_refused;
+        for (c, o) in self.classes.iter_mut().zip(&other.classes) {
+            c.merge(o);
+        }
         self.completed += other.completed;
         self.failed += other.failed;
         self.batches += other.batches;
@@ -125,9 +261,7 @@ impl Metrics {
         self.deadline_met += other.deadline_met;
         self.deadline_missed += other.deadline_missed;
         self.deadline_shed += other.deadline_shed;
-        self.lease_wait
-            .samples_us
-            .extend_from_slice(&other.lease_wait.samples_us);
+        self.lease_wait.merge(&other.lease_wait);
     }
 
     /// Simulated-accelerator throughput (frames / simulated second at
@@ -189,6 +323,31 @@ impl Metrics {
             },
             self.lane_summary(),
         ) + &self.deadline_summary()
+            + &self.class_summary()
+    }
+
+    /// Per-class fragment of [`Self::summary`]: elided entirely while no
+    /// class has an SLO outcome or a refusal (pure-Standard best-effort
+    /// traffic keeps the pre-class summary), and per class once it has
+    /// something to say.
+    fn class_summary(&self) -> String {
+        let mut s = String::new();
+        for class in ServiceClass::ALL {
+            let c = &self.classes[class.index()];
+            if c.slo_met + c.slo_missed + c.shed + c.admission_refused == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                " | {}: met {}/{} (shed {}, refused {}) p99 {:?}",
+                class.label(),
+                c.slo_met,
+                c.slo_met + c.slo_missed + c.shed,
+                c.shed,
+                c.admission_refused,
+                c.latency.percentile(99.0),
+            ));
+        }
+        s
     }
 
     /// Deadlines seen across all requests (0 ⇒ the fragment is elided).
@@ -336,6 +495,133 @@ mod tests {
         assert!(!m.summary().contains("wait p50"));
         m.lease_wait.record(Duration::from_micros(120));
         assert!(m.summary().contains("wait p50"));
+    }
+
+    /// The reservoir cap: memory stays bounded under sustained serving,
+    /// `count()`/`mean()` stay exact over the full stream, and
+    /// percentiles keep reading from inside the observed range.
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_exact_counts() {
+        let mut l = LatencyStats::default();
+        let n = (RESERVOIR_CAP * 4) as u64;
+        for i in 1..=n {
+            l.record(Duration::from_micros(i));
+        }
+        assert_eq!(l.count() as u64, n, "count reflects the full stream");
+        assert!(l.samples_us.len() <= RESERVOIR_CAP, "memory capped");
+        assert_eq!(l.mean(), Duration::from_micros((n + 1) / 2), "mean stays exact");
+        let p50 = l.percentile(50.0);
+        assert!(p50 >= Duration::from_micros(1) && p50 <= Duration::from_micros(n));
+        // a uniform sample of 1..=4·CAP should not have its median in
+        // either outer quartile — deterministic, the RNG is seeded
+        assert!(p50 > Duration::from_micros(n / 4), "{p50:?}");
+        assert!(p50 < Duration::from_micros(3 * n / 4), "{p50:?}");
+    }
+
+    /// Below the cap the buffer is exact — the tier-1 sample counts all
+    /// live here, so existing percentile expectations hold unchanged.
+    #[test]
+    fn below_the_cap_percentiles_are_exact_and_merge_concatenates() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        for i in 1..=50u64 {
+            a.record(Duration::from_micros(i));
+            b.record(Duration::from_micros(50 + i));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.percentile(0.0), Duration::from_micros(1));
+        assert_eq!(a.percentile(100.0), Duration::from_micros(100));
+        assert_eq!(a.mean(), Duration::from_micros(50));
+    }
+
+    /// Merging two capped streams is *weighted*: each stream's share of
+    /// the merged reservoir follows its full stream length, so the
+    /// merged percentiles reflect both distributions (merge order must
+    /// not matter).
+    #[test]
+    fn merge_of_capped_streams_is_weighted_fairly() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        let n = (RESERVOIR_CAP * 8) as u64;
+        for _ in 0..n {
+            a.record(Duration::from_micros(1_000)); // fast worker
+            b.record(Duration::from_micros(10_000)); // slow worker
+        }
+        a.merge(&b);
+        assert!(a.samples_us.len() <= RESERVOIR_CAP);
+        assert_eq!(a.count() as u64, 2 * n);
+        // equal stream lengths ⇒ each holds half the reservoir: the
+        // lower quartile is all fast samples, the upper all slow ones
+        assert_eq!(a.percentile(25.0), Duration::from_micros(1_000));
+        assert_eq!(a.percentile(75.0), Duration::from_micros(10_000));
+    }
+
+    /// Merging capped stats keeps the stream totals exact even though
+    /// the sample buffers are lossy.
+    #[test]
+    fn merge_of_capped_stats_keeps_totals() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        let n = (RESERVOIR_CAP * 2) as u64;
+        for i in 1..=n {
+            a.record(Duration::from_micros(10));
+            b.record(Duration::from_micros(i));
+        }
+        a.merge(&b);
+        assert_eq!(a.count() as u64, 2 * n);
+        assert!(a.samples_us.len() <= RESERVOIR_CAP);
+        let want = (10 * n as u128 + (1..=n as u128).sum::<u128>()) / (2 * n as u128);
+        assert_eq!(a.mean(), Duration::from_micros(want as u64));
+    }
+
+    #[test]
+    fn class_metrics_merge_and_summary_fragment() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("interactive"), "elided without traffic");
+        let mut other = Metrics::default();
+        let i = ServiceClass::Interactive.index();
+        other.classes[i].submitted = 5;
+        other.classes[i].completed = 3;
+        other.classes[i].slo_met = 2;
+        other.classes[i].slo_missed = 1;
+        other.classes[i].shed = 1;
+        other.classes[i].admission_refused = 1;
+        other.classes[i].latency.record(Duration::from_micros(700));
+        m.merge(&other);
+        m.merge(&other);
+        assert_eq!(m.classes[i].slo_met, 4);
+        assert_eq!(m.classes[i].submitted, 10);
+        assert_eq!(m.classes[i].latency.count(), 2);
+        let s = m.summary();
+        assert!(s.contains("interactive: met 4/8 (shed 2, refused 2)"), "{s}");
+        assert!(!s.contains("bulk:"), "quiet classes stay elided: {s}");
+    }
+
+    #[test]
+    fn submitted_and_refused_ride_merge() {
+        let mut a = Metrics {
+            submitted: 4,
+            completed: 2,
+            failed: 1,
+            admission_refused: 1,
+            ..Default::default()
+        };
+        let b = Metrics {
+            submitted: 6,
+            completed: 5,
+            failed: 0,
+            admission_refused: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.submitted, 10);
+        assert_eq!(a.admission_refused, 2);
+        assert_eq!(
+            a.submitted,
+            a.completed + a.failed + a.admission_refused,
+            "the accounting identity survives merge"
+        );
     }
 
     #[test]

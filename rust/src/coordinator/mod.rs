@@ -19,9 +19,16 @@
 //!   DMA pipeline; shard-class requests scatter row tiles over cards the
 //!   orchestrator *leases* from the same pool and gathers between
 //!   layers;
+//! * [`capacity`] — the admission-control capacity model: per-mode frame
+//!   cost derived from the cached [`crate::binarray::ExecutionPlan`]
+//!   schedules, calibrated against observed host pace, so `submit` can
+//!   *refuse* work the pool provably can't finish inside its SLO
+//!   ([`InferError::AdmissionRefused`]) instead of queueing it to die at
+//!   the shed gate;
 //! * [`metrics`] — latency/throughput accounting (wall-clock of the
 //!   simulator *and* simulated 400 MHz accelerator time), including
-//!   per-lane routing/leasing counters.
+//!   per-lane routing/leasing counters and per-[`ServiceClass`] SLO
+//!   outcomes.
 //!
 //! Runtime accuracy/throughput switching (§IV-D): every request carries a
 //! [`Mode`]; the worker flips the simulated accelerator's `m_run` between
@@ -40,13 +47,15 @@
 //! nobody can use.
 
 pub mod batcher;
+pub mod capacity;
 pub mod metrics;
 pub mod route;
 pub mod server;
 
-pub use batcher::{Batch, BatchPolicy, Batcher};
-pub use metrics::{LatencyStats, Metrics};
-pub use route::{DispatchClass, RoutePolicy};
+pub use batcher::{Arbitration, Batch, BatchPolicy, Batcher};
+pub use capacity::CapacityModel;
+pub use metrics::{ClassMetrics, LatencyStats, Metrics};
+pub use route::{ClassSpec, ClassTable, DispatchClass, RoutePolicy, ServiceClass, N_CLASSES};
 pub use server::{
     Coordinator, CoordinatorConfig, InferError, Reply, ReplyResult, SubmitHandle,
 };
@@ -82,13 +91,19 @@ pub struct Request {
     /// the router at admission — the [`RoutePolicy`] decision.  Stamped
     /// exactly once; never reassigned afterwards.
     pub class: Option<DispatchClass>,
-    /// Absolute completion deadline.  `None` = best effort.  A deadline
-    /// is a QoS *signal*, not a hard abort: routing, batch ordering and
-    /// lease hysteresis spend slack where it helps, expired work is shed
-    /// before compute starts ([`InferError::DeadlineExceeded`]), and a
-    /// frame that expires mid-compute still completes (counted
-    /// `deadline_missed`).
+    /// Absolute completion deadline.  `None` = best effort (unless the
+    /// request's [`ServiceClass`] carries an SLO — admission then stamps
+    /// `submitted + slo` here).  A deadline is a QoS *signal*, not a
+    /// hard abort: routing, batch ordering and lease hysteresis spend
+    /// slack where it helps, expired work is shed before compute starts
+    /// ([`InferError::DeadlineExceeded`]), and a frame that expires
+    /// mid-compute still completes (counted `deadline_missed`).
     pub deadline: Option<std::time::Instant>,
+    /// Named QoS class (SLO + lane bias + admission budget, resolved
+    /// through the coordinator's [`ClassTable`]).  Defaults to
+    /// [`ServiceClass::Standard`], which the default table keeps
+    /// contract-free — exactly the pre-class behavior.
+    pub service: ServiceClass,
     pub submitted: std::time::Instant,
 }
 
@@ -127,6 +142,7 @@ mod tests {
             mode: Mode::HighAccuracy,
             class: None,
             deadline: None,
+            service: ServiceClass::Standard,
             submitted: now,
         };
         assert_eq!(req.slack(now), None, "no deadline, no slack");

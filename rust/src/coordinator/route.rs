@@ -25,7 +25,7 @@
 //! bit-identical to [`crate::golden::forward`] — routing moves *where* a
 //! frame computes, never *what* it computes.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Which dispatch lane serves a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -114,6 +114,148 @@ impl RoutePolicy {
     ) -> DispatchClass {
         explicit.unwrap_or_else(|| self.classify(frame_len, queue_depth, slack))
     }
+}
+
+/// Named QoS class of a request — the knob a *caller* turns, as opposed
+/// to [`DispatchClass`], which is the knob the *router* turns.  A class
+/// bundles a latency SLO, a default dispatch-lane bias, and an admission
+/// budget (see [`ClassSpec`]); the concrete values live in the
+/// coordinator's [`ClassTable`] so deployments can retune them without
+/// touching the request path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ServiceClass {
+    /// Tight-SLO traffic (UIs, control loops): admission promises the
+    /// SLO or refuses, and SLO-aware arbitration spends cards on it
+    /// first when its slack runs low.
+    Interactive,
+    /// The default class: today's behavior, no SLO unless the table
+    /// sets one.
+    #[default]
+    Standard,
+    /// Throughput traffic (backfills, batch scoring): no SLO by
+    /// default, biased to the batching lane.
+    Bulk,
+}
+
+/// Number of service classes (array sizes in the metrics/ledgers).
+pub const N_CLASSES: usize = 3;
+
+impl ServiceClass {
+    /// All classes, index order (= [`Self::index`]).
+    pub const ALL: [ServiceClass; N_CLASSES] =
+        [ServiceClass::Interactive, ServiceClass::Standard, ServiceClass::Bulk];
+
+    /// Stable index for per-class arrays, most urgent first.
+    pub fn index(self) -> usize {
+        match self {
+            ServiceClass::Interactive => 0,
+            ServiceClass::Standard => 1,
+            ServiceClass::Bulk => 2,
+        }
+    }
+
+    /// Short human label (metrics summaries, CLI output).
+    pub fn label(self) -> &'static str {
+        match self {
+            ServiceClass::Interactive => "interactive",
+            ServiceClass::Standard => "standard",
+            ServiceClass::Bulk => "bulk",
+        }
+    }
+}
+
+impl std::str::FromStr for ServiceClass {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "interactive" => Ok(ServiceClass::Interactive),
+            "standard" => Ok(ServiceClass::Standard),
+            "bulk" => Ok(ServiceClass::Bulk),
+            other => Err(format!(
+                "unknown service class '{other}' (expected interactive|standard|bulk)"
+            )),
+        }
+    }
+}
+
+/// Per-class QoS contract: what one [`ServiceClass`] promises and what
+/// the coordinator may spend on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassSpec {
+    /// Latency SLO: a request of this class without an explicit deadline
+    /// is stamped `submitted + slo` at admission, so the whole deadline
+    /// machinery (EDF ordering, shedding, met/missed accounting) applies
+    /// per class.  `None` = best effort.
+    pub slo: Option<Duration>,
+    /// Default dispatch-lane bias: used instead of the [`RoutePolicy`]
+    /// decision when the caller didn't pin a [`DispatchClass`] itself
+    /// (a per-request override still wins).  `None` = let the policy
+    /// decide.
+    pub dispatch_bias: Option<DispatchClass>,
+    /// Admission budget: most requests of this class admitted but not
+    /// yet answered.  At the cap, new work is refused with
+    /// `InferError::AdmissionRefused` instead of queued.  `0` =
+    /// unlimited.
+    pub admission_limit: usize,
+}
+
+/// The coordinator's QoS table: one [`ClassSpec`] per [`ServiceClass`].
+///
+/// The default table keeps `Standard` and `Bulk` SLO-free (exactly the
+/// pre-class behavior for every existing caller) and gives `Interactive`
+/// a 50 ms SLO; `Bulk` is biased to the batching lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClassTable {
+    specs: [ClassSpec; N_CLASSES],
+}
+
+impl Default for ClassTable {
+    fn default() -> Self {
+        let mut specs = [ClassSpec::default(); N_CLASSES];
+        specs[ServiceClass::Interactive.index()].slo = Some(Duration::from_millis(50));
+        specs[ServiceClass::Bulk.index()].dispatch_bias = Some(DispatchClass::Batch);
+        Self { specs }
+    }
+}
+
+impl ClassTable {
+    /// A table with the same spec for every class (tests, single-tenant
+    /// deployments).
+    pub fn uniform(spec: ClassSpec) -> Self {
+        Self { specs: [spec; N_CLASSES] }
+    }
+
+    pub fn spec(&self, class: ServiceClass) -> &ClassSpec {
+        &self.specs[class.index()]
+    }
+
+    /// Replace one class's spec (builder style).
+    pub fn with(mut self, class: ServiceClass, spec: ClassSpec) -> Self {
+        self.specs[class.index()] = spec;
+        self
+    }
+}
+
+/// Remaining slack of a request *relative to its class SLO* at `now` —
+/// the urgency signal SLO-aware cross-lane arbitration compares between
+/// lanes.  `0.0` = the budget is spent, `1.0` = the whole budget
+/// remains.  A request with an explicit deadline but an SLO-free class
+/// is normalized against its own end-to-end budget
+/// (`deadline − submitted`); a request with no deadline at all has no
+/// SLO urgency (`None` — it never outranks deadlined work).
+pub fn relative_slack(
+    submitted: Instant,
+    deadline: Option<Instant>,
+    slo: Option<Duration>,
+    now: Instant,
+) -> Option<f64> {
+    let d = deadline?;
+    let budget = slo.unwrap_or_else(|| d.saturating_duration_since(submitted));
+    if budget.is_zero() {
+        return Some(0.0);
+    }
+    let left = d.saturating_duration_since(now);
+    Some(left.as_secs_f64() / budget.as_secs_f64())
 }
 
 #[cfg(test)]
@@ -206,6 +348,57 @@ mod tests {
             inert.classify(10, 0, Some(Duration::from_nanos(1))),
             DispatchClass::Batch
         );
+    }
+
+    #[test]
+    fn default_class_table_keeps_standard_best_effort() {
+        let t = ClassTable::default();
+        assert_eq!(t.spec(ServiceClass::Standard).slo, None, "pre-class behavior");
+        assert_eq!(t.spec(ServiceClass::Standard).dispatch_bias, None);
+        assert_eq!(t.spec(ServiceClass::Standard).admission_limit, 0);
+        assert!(t.spec(ServiceClass::Interactive).slo.is_some());
+        assert_eq!(
+            t.spec(ServiceClass::Bulk).dispatch_bias,
+            Some(DispatchClass::Batch)
+        );
+        // builder replaces exactly one class
+        let tuned = t.with(
+            ServiceClass::Bulk,
+            ClassSpec {
+                slo: Some(Duration::from_secs(5)),
+                dispatch_bias: None,
+                admission_limit: 7,
+            },
+        );
+        assert_eq!(tuned.spec(ServiceClass::Bulk).admission_limit, 7);
+        assert_eq!(tuned.spec(ServiceClass::Standard), t.spec(ServiceClass::Standard));
+        // index/ALL agree
+        for (i, c) in ServiceClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(c.label().parse::<ServiceClass>().unwrap(), *c);
+        }
+        assert!("turbo".parse::<ServiceClass>().is_err());
+    }
+
+    #[test]
+    fn relative_slack_normalizes_against_the_budget() {
+        let t0 = Instant::now();
+        let ms = Duration::from_millis(1);
+        // half the 50 ms SLO budget left at now = submitted + 25 ms
+        let r = relative_slack(t0, Some(t0 + 50 * ms), Some(50 * ms), t0 + 25 * ms);
+        assert!((r.unwrap() - 0.5).abs() < 1e-9);
+        // SLO-free class: normalized against its own deadline budget
+        let r = relative_slack(t0, Some(t0 + 100 * ms), None, t0 + 75 * ms);
+        assert!((r.unwrap() - 0.25).abs() < 1e-9);
+        // expired ⇒ zero, not negative
+        assert_eq!(
+            relative_slack(t0, Some(t0 + ms), Some(ms), t0 + 5 * ms),
+            Some(0.0)
+        );
+        // degenerate zero budget ⇒ zero (most urgent), not a division
+        assert_eq!(relative_slack(t0, Some(t0), None, t0), Some(0.0));
+        // no deadline ⇒ no SLO urgency
+        assert_eq!(relative_slack(t0, None, Some(ms), t0), None);
     }
 
     #[test]

@@ -61,9 +61,10 @@ use crate::golden;
 use crate::isa::{compile_network, Program};
 use crate::tensor::scatter_tile;
 
-use super::batcher::{Batch, BatchPolicy, Batcher};
+use super::batcher::{Arbitration, Batch, BatchPolicy, Batcher};
+use super::capacity::CapacityModel;
 use super::metrics::Metrics;
-use super::route::{DispatchClass, RoutePolicy};
+use super::route::{ClassTable, DispatchClass, RoutePolicy, ServiceClass, N_CLASSES};
 use super::{Mode, Request};
 
 /// A completed inference.
@@ -92,19 +93,33 @@ pub enum InferError {
     /// card started computing it, so the coordinator answered instead of
     /// burning compute on a reply nobody can use.
     DeadlineExceeded { id: u64 },
+    /// The request was *refused at admission*: the capacity model proved
+    /// its deadline/SLO unmeetable under the best pace this pool has
+    /// ever shown (or its class's admission budget is full).  Refused
+    /// work is never queued and never computed — `earliest_feasible` is
+    /// the model's floor on how much end-to-end budget a resubmission
+    /// would need right now.
+    AdmissionRefused { id: u64, earliest_feasible: Duration },
 }
 
 impl InferError {
     /// The id of the request this error answers.
     pub fn id(&self) -> u64 {
         match self {
-            InferError::Failed { id, .. } | InferError::DeadlineExceeded { id } => *id,
+            InferError::Failed { id, .. }
+            | InferError::DeadlineExceeded { id }
+            | InferError::AdmissionRefused { id, .. } => *id,
         }
     }
 
     /// Was this a deadline shed (as opposed to a serving fault)?
     pub fn is_deadline(&self) -> bool {
         matches!(self, InferError::DeadlineExceeded { .. })
+    }
+
+    /// Was this an admission refusal (never admitted, zero cost)?
+    pub fn is_refused(&self) -> bool {
+        matches!(self, InferError::AdmissionRefused { .. })
     }
 }
 
@@ -115,6 +130,11 @@ impl std::fmt::Display for InferError {
             InferError::DeadlineExceeded { id } => {
                 write!(f, "request {id}: deadline exceeded before compute started")
             }
+            InferError::AdmissionRefused { id, earliest_feasible } => write!(
+                f,
+                "request {id}: admission refused — SLO provably unmeetable \
+                 (earliest feasible budget ≥ {earliest_feasible:?})"
+            ),
         }
     }
 }
@@ -146,6 +166,14 @@ pub struct CoordinatorConfig {
     /// the slack it exists to protect).  `Duration::ZERO` = take
     /// whatever is free immediately.
     pub lease_slack: Duration,
+    /// Per-[`ServiceClass`] QoS contracts: latency SLO (stamped as the
+    /// deadline of requests that don't carry one), default dispatch-lane
+    /// bias, and admission budget.  The default table keeps `Standard`
+    /// contract-free.
+    pub classes: ClassTable,
+    /// Cross-lane arbitration rule for the batcher: SLO-aware by
+    /// default, oldest-first as the deadline-blind escape hatch.
+    pub arbitration: Arbitration,
 }
 
 impl Default for CoordinatorConfig {
@@ -157,6 +185,8 @@ impl Default for CoordinatorConfig {
             route: RoutePolicy::BatchOnly,
             max_shard_cards: 0,
             lease_slack: Duration::ZERO,
+            classes: ClassTable::default(),
+            arbitration: Arbitration::default(),
         }
     }
 }
@@ -239,6 +269,9 @@ struct ShardOracle {
     /// Per-frame cap on the lease-width hysteresis wait
     /// ([`CoordinatorConfig::lease_slack`]).
     lease_slack: Duration,
+    /// Shared capacity model — the orchestrator feeds its pace with
+    /// sharded-frame completions like the workers do with batches.
+    capacity: Arc<CapacityModel>,
 }
 
 /// Cloneable submit-side handle: many producer threads can feed one
@@ -281,6 +314,23 @@ impl SubmitHandle {
         class: Option<DispatchClass>,
         deadline: Option<Instant>,
     ) -> Receiver<ReplyResult> {
+        self.submit_sla(image, mode, class, deadline, ServiceClass::Standard)
+    }
+
+    /// Submit under a named [`ServiceClass`]: the class's SLO becomes
+    /// the deadline when `deadline` is `None`, its dispatch bias applies
+    /// when `class` is `None`, and its admission budget plus the
+    /// capacity model may *refuse* the work up front with
+    /// [`InferError::AdmissionRefused`] — refused requests are never
+    /// queued and never computed.
+    pub fn submit_sla(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+        service: ServiceClass,
+    ) -> Receiver<ReplyResult> {
         let (tx, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -288,6 +338,7 @@ impl SubmitHandle {
             mode,
             class,
             deadline,
+            service,
             submitted: Instant::now(),
         };
         // If the router is gone the receiver will simply yield RecvError.
@@ -320,6 +371,18 @@ impl SubmitHandle {
     ) -> Result<Reply> {
         Ok(self.submit_qos(image, mode, class, deadline).recv()??)
     }
+
+    /// Submit under a service class and wait.
+    pub fn infer_sla(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+        service: ServiceClass,
+    ) -> Result<Reply> {
+        Ok(self.submit_sla(image, mode, class, deadline, service).recv()??)
+    }
 }
 
 /// The serving coordinator.
@@ -344,6 +407,15 @@ impl Coordinator {
         let (router_tx, router_rx) = channel::<RouterMsg>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
 
+        // The shard plans are deterministic from (config, net, cards), so
+        // one cache serves every lease width the pool can grant.  The
+        // capacity model prices every mode off the same cached plan; the
+        // workers calibrate its pace, the router consults it at admission.
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(cfg.array, &net, &prog);
+        let cache = ShardPlanCache::new(&plan, n_workers);
+        let capacity = Arc::new(CapacityModel::new(&plan, &net));
+
         // One channel per card: the router sends batches only to *free*
         // cards and the orchestrator sends shard jobs only to cards it
         // holds a lease on, so a leased card's queue never mixes lanes.
@@ -355,18 +427,13 @@ impl Coordinator {
             let sys = BinArraySystem::new(cfg.array, net.clone())?;
             let global = Arc::clone(&metrics);
             let rtx = router_tx.clone();
+            let cap = Arc::clone(&capacity);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("binarray-worker-{w}"))
-                    .spawn(move || worker_loop(sys, rx, w, rtx, global))?,
+                    .spawn(move || worker_loop(sys, rx, w, rtx, global, cap))?,
             );
         }
-
-        // The shard plans are deterministic from (config, net, cards), so
-        // one cache serves every lease width the pool can grant.
-        let prog = compile_network(&net);
-        let plan = ExecutionPlan::new(cfg.array, &net, &prog);
-        let cache = ShardPlanCache::new(&plan, n_workers);
         let max_lease = if cfg.max_shard_cards == 0 {
             n_workers
         } else {
@@ -380,6 +447,7 @@ impl Coordinator {
             m_arch: cfg.array.m_arch,
             max_lease,
             lease_slack: cfg.lease_slack,
+            capacity: Arc::clone(&capacity),
         };
         let (orch_tx, orch_rx) = channel::<OrchMsg>();
         let orchestrator = {
@@ -398,13 +466,20 @@ impl Coordinator {
                 worker_txs,
                 policy: cfg.policy,
                 route: cfg.route,
-                batcher: Batcher::new(cfg.policy),
+                classes: cfg.classes,
+                capacity: Arc::clone(&capacity),
+                batcher: Batcher::with_qos(cfg.policy, cfg.classes, cfg.arbitration),
                 reply_txs: ReplyMap::new(),
                 free: (0..n_workers).collect(),
                 live: n_workers,
                 leased: 0,
                 running: vec![0; n_workers],
                 batch_inflight: 0,
+                class_inflight: [0; N_CLASSES],
+                queued_cycles: [0; N_CLASSES],
+                card_load: vec![CardLoad::default(); n_workers],
+                orch_ledger: VecDeque::new(),
+                orch_cycles: 0,
                 pending_batches: VecDeque::new(),
                 pending_lease: None,
                 shard_inflight: 0,
@@ -488,6 +563,30 @@ impl Coordinator {
         self.handle.infer_qos(image, mode, class, deadline)
     }
 
+    /// Submit under a named service class.
+    pub fn submit_sla(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+        service: ServiceClass,
+    ) -> Receiver<ReplyResult> {
+        self.handle.submit_sla(image, mode, class, deadline, service)
+    }
+
+    /// Submit under a named service class and wait.
+    pub fn infer_sla(
+        &self,
+        image: Vec<i8>,
+        mode: Mode,
+        class: Option<DispatchClass>,
+        deadline: Option<Instant>,
+        service: ServiceClass,
+    ) -> Result<Reply> {
+        self.handle.infer_sla(image, mode, class, deadline, service)
+    }
+
     /// Drain and stop all threads, returning the final metrics.
     pub fn shutdown(mut self) -> Metrics {
         let _ = self.handle.router_tx.send(RouterMsg::Shutdown);
@@ -540,15 +639,31 @@ enum LeaseDecision {
     Wait,
 }
 
-/// The router thread's state: admission (classify + batch), the card
-/// ledger (which workers are free, busy batching, or leased out), and
-/// the shutdown drain.
+/// One card's committed batch-lane work: the estimated cycles it is
+/// running and the per-class request counts — cleared wholesale on
+/// `WorkerDone` (the card answers everything it was handed, shed or
+/// served, before reporting done).
+#[derive(Clone, Copy, Debug, Default)]
+struct CardLoad {
+    cycles: u64,
+    count: [u64; N_CLASSES],
+}
+
+/// The router thread's state: admission (SLO stamping, budget/capacity
+/// gates, classify + batch), the card ledger (which workers are free,
+/// busy batching, or leased out, and how much estimated work each
+/// holds), and the shutdown drain.
 struct Router {
     rx: Receiver<RouterMsg>,
     orch_tx: Sender<OrchMsg>,
     worker_txs: Vec<Sender<WorkerMsg>>,
     policy: BatchPolicy,
     route: RoutePolicy,
+    /// Per-class QoS contracts (SLO, lane bias, admission budget).
+    classes: ClassTable,
+    /// Admission capacity model (shared with the workers, which
+    /// calibrate its pace).
+    capacity: Arc<CapacityModel>,
     batcher: Batcher,
     reply_txs: ReplyMap,
     /// Card ledger: worker ids neither batching nor leased.
@@ -567,6 +682,25 @@ struct Router {
     /// pool is saturated — exactly the throughput regime `deep_queue`
     /// exists to detect.
     batch_inflight: usize,
+    /// Admitted-but-unanswered requests per service class — the
+    /// admission-budget gate.  Incremented at admission; decremented
+    /// wherever the answer leaves the router's sight (batcher shed,
+    /// failed batch, `WorkerDone`'s card load, `Unlease`'s ledger pops).
+    class_inflight: [u64; N_CLASSES],
+    /// Estimated cycles still queued in the batcher, per class — the
+    /// class-aware slice of the capacity backlog (SLO-aware arbitration
+    /// lets an urgent class cut ahead of laxer queued work, so only
+    /// equal-or-more-urgent queued cycles count against it).
+    queued_cycles: [u64; N_CLASSES],
+    /// Per-card committed batch-lane work (see [`CardLoad`]).
+    card_load: Vec<CardLoad>,
+    /// Shard frames handed to the (FIFO, serial) orchestrator:
+    /// `(class index, estimated cycles)` in hand-off order — popped
+    /// front-first on every `Unlease`-retired frame.
+    orch_ledger: VecDeque<(usize, u64)>,
+    /// Σ cycles in `orch_ledger`, maintained at push/pop so the admit
+    /// path's backlog read is O(1) instead of an O(ledger) walk.
+    orch_cycles: u64,
     /// Batch-lane work waiting for a free card.
     pending_batches: VecDeque<(Batch, ReplyTxs)>,
     /// Shard-lane lease waiting for a free card (at most one: the
@@ -648,8 +782,28 @@ impl Router {
         let mut wake: Option<Duration> = None;
         if self.shutting {
             wake = Some(Duration::from_secs(1));
-        } else if self.batcher.pending() > 0 {
+        } else if self.batcher.pending() > 0
+            && !self.free.is_empty()
+            && self.pending_lease.is_none()
+            && self.pending_batches.is_empty()
+        {
+            // Queued work that a free card could cut once it ripens.
+            // With no card free (or the pool spoken for by a lease) the
+            // timer stays unarmed: cuts are gated on a free card anyway,
+            // and the WorkerDone/Unlease that frees one wakes the loop —
+            // re-arming here would busy-spin at max_delay == 0.
             wake = Some(self.policy.max_delay.min(Duration::from_millis(50)));
+        }
+        if let Some(d) = self.batcher.next_deadline() {
+            // Deadlined work queued: wake at its deadline so the shed
+            // gate answers it promptly even while every card is busy
+            // (the 100 µs floor keeps a just-passed — possibly
+            // stale-low — cache from spinning the loop; the next pump's
+            // shed scan refreshes it).
+            let until = d
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_micros(100));
+            wake = Some(wake.map_or(until, |w| w.min(until)));
         }
         if let Some(pl) = &self.pending_lease {
             if !self.free.is_empty() {
@@ -671,6 +825,13 @@ impl Router {
             RouterMsg::WorkerDone(w) => {
                 self.batch_inflight = self.batch_inflight.saturating_sub(self.running[w]);
                 self.running[w] = 0;
+                // The card answered everything it was handed (served,
+                // shed or errored): retire its committed load and the
+                // per-class inflight slots in one go.
+                let load = std::mem::take(&mut self.card_load[w]);
+                for (ci, n) in load.count.iter().enumerate() {
+                    self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(*n);
+                }
                 self.free.push(w);
                 self.service();
             }
@@ -689,6 +850,15 @@ impl Router {
             }
             RouterMsg::Unlease { ids, frames } => {
                 self.shard_inflight = self.shard_inflight.saturating_sub(frames);
+                // The orchestrator answers frames in hand-off order (it
+                // is serial and FIFO), so each retired frame pops the
+                // front of the shard ledger.
+                for _ in 0..frames {
+                    if let Some((ci, cycles)) = self.orch_ledger.pop_front() {
+                        self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(1);
+                        self.orch_cycles = self.orch_cycles.saturating_sub(cycles);
+                    }
+                }
                 self.leased = self.leased.saturating_sub(ids.len());
                 self.free.extend(ids);
                 self.service();
@@ -717,10 +887,16 @@ impl Router {
             if self.stalled >= SHUTDOWN_STALL_TICKS {
                 // Whatever is still outstanding will never finish (dead
                 // cards / dead orchestrator): answer what can be
-                // answered and let the drain conditions fall through.
+                // answered, zero the work ledgers the dead threads will
+                // never retire, and let the drain conditions fall
+                // through.
                 self.fail_pending("worker pool stalled during shutdown");
                 self.leased = 0;
                 self.orch_done = true;
+                self.orch_ledger.clear();
+                self.orch_cycles = 0;
+                self.card_load.fill(CardLoad::default());
+                self.class_inflight = [0; N_CLASSES];
             }
         }
     }
@@ -731,6 +907,11 @@ impl Router {
     /// (its hysteresis window may just have expired).
     fn pump(&mut self, now: Instant) {
         for req in self.batcher.shed_expired(now) {
+            // the request leaves the queue: retire its admission ledgers
+            let ci = req.service.index();
+            self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(1);
+            self.queued_cycles[ci] =
+                self.queued_cycles[ci].saturating_sub(self.capacity.est_cycles(req.mode));
             let Some(tx) = self.reply_txs.remove(&req.id) else {
                 continue;
             };
@@ -738,7 +919,21 @@ impl Router {
             send_shed(&mut delta, &req, &tx);
             self.note(delta);
         }
-        while let Some(batch) = self.batcher.cut(now) {
+        // Batch-lane cuts are gated on a card that can take the work
+        // *now* (free, not spoken for by a lease, no batch already
+        // parked ahead): the cut is the arbitration decision, so it
+        // must happen at card-free time over the whole queue — cutting
+        // eagerly and parking FIFO would freeze the lane pick long
+        // before a card frees and quietly defeat SLO-aware arbitration
+        // under overload.  Shard-class cuts stay eager: the
+        // orchestrator owns its own (depth-tracked) queue.
+        loop {
+            let allow_batch = !self.free.is_empty()
+                && self.pending_lease.is_none()
+                && self.pending_batches.is_empty();
+            let Some(batch) = self.batcher.cut_gated(now, allow_batch) else {
+                break;
+            };
             self.dispatch_cut(batch);
         }
         self.service();
@@ -755,16 +950,64 @@ impl Router {
         self.batcher.pending() + parked + self.shard_inflight + self.batch_inflight
     }
 
-    /// Classify and queue one request (or refuse it mid-shutdown).  The
-    /// class is stamped exactly once here; the batcher and dispatch never
-    /// reassign it.  A request that arrives already expired is shed on
-    /// the spot — it never costs queue space, let alone a card.
+    /// Estimated cycles committed ahead of a new request of `service`:
+    /// everything running on cards or already cut (parked batches, the
+    /// orchestrator's FIFO queue) counts in full — it cannot be
+    /// reordered — while batcher-queued work counts only for classes at
+    /// least as urgent (SLO-aware arbitration lets the new request cut
+    /// ahead of laxer queues).  Under-counting is safe here: the
+    /// capacity gate refuses only when even this floor overshoots the
+    /// deadline.
+    fn backlog_cycles(&self, service: ServiceClass) -> u64 {
+        let queued: u64 = self.queued_cycles[..=service.index()].iter().sum();
+        let parked: u64 = self
+            .pending_batches
+            .iter()
+            .flat_map(|(b, _)| b.requests.iter())
+            .map(|r| self.capacity.est_cycles(r.mode))
+            .sum();
+        let running: u64 = self.card_load.iter().map(|l| l.cycles).sum();
+        queued
+            .saturating_add(parked)
+            .saturating_add(running)
+            .saturating_add(self.orch_cycles)
+    }
+
+    /// The capacity model's floor on how much end-to-end budget a new
+    /// request of `(service, mode)` needs right now (`None` while the
+    /// model is uncalibrated — nothing is provable, admit).
+    fn earliest_feasible(&self, service: ServiceClass, mode: Mode) -> Option<Duration> {
+        self.capacity
+            .earliest_feasible(mode, self.backlog_cycles(service), self.live.max(1))
+    }
+
+    /// Admit one request: stamp its class SLO as the deadline, apply the
+    /// admission gates (budget, capacity), classify, and queue — or
+    /// answer it on the spot (refused mid-shutdown, shed when already
+    /// expired, `AdmissionRefused` when the gates prove the SLO
+    /// unmeetable).  Refused work is never queued and never computed.
+    /// The dispatch class is stamped exactly once here; the batcher and
+    /// dispatch never reassign it.
     fn admit(&mut self, mut req: Request, tx: Sender<ReplyResult>) {
+        let ci = req.service.index();
+        {
+            let mut delta = Metrics::default();
+            delta.submitted = 1;
+            delta.classes[ci].submitted = 1;
+            self.note(delta);
+        }
         if self.shutting {
             let mut delta = Metrics::default();
             send_error(&mut delta, req.id, &tx, &anyhow!("coordinator is shutting down"));
             self.note(delta);
             return;
+        }
+        let spec = *self.classes.spec(req.service);
+        // A class SLO becomes the request's deadline (explicit deadlines
+        // win): from here on the whole deadline machinery — EDF cuts,
+        // shed gates, met/missed accounting — enforces the SLO.
+        if req.deadline.is_none() {
+            req.deadline = spec.slo.map(|slo| req.submitted + slo);
         }
         let now = Instant::now();
         if req.expired(now) {
@@ -773,9 +1016,41 @@ impl Router {
             self.note(delta);
             return;
         }
+        // Gate 1: the class admission budget — at the cap, refuse
+        // instead of queueing work the class has no room for.
+        if spec.admission_limit > 0 && self.class_inflight[ci] >= spec.admission_limit as u64 {
+            let earliest = self
+                .earliest_feasible(req.service, req.mode)
+                .unwrap_or(Duration::ZERO);
+            let mut delta = Metrics::default();
+            send_refused(&mut delta, &req, &tx, earliest);
+            self.note(delta);
+            return;
+        }
+        // Gate 2: the capacity model — refuse a deadline that even the
+        // pool's best observed pace can't meet over the committed
+        // backlog.  Provably-unmeetable work is answered in O(1) here
+        // instead of riding the queue to the shed gate.  The gate is a
+        // *class* contract: only classes that declare an SLO opt into
+        // refusal — a bare deadline on an SLO-free class keeps the
+        // scalar-deadline semantics (queue, maybe shed) unchanged.
+        if let (Some(_), Some(d)) = (spec.slo, req.deadline) {
+            if let Some(need) = self.earliest_feasible(req.service, req.mode) {
+                if now + need > d {
+                    let mut delta = Metrics::default();
+                    send_refused(&mut delta, &req, &tx, need);
+                    self.note(delta);
+                    return;
+                }
+            }
+        }
         let depth = self.queue_depth();
         let slack = req.slack(now);
-        let class = self.route.route(req.class, req.image.len(), depth, slack);
+        // A caller's explicit lane override wins; otherwise the class's
+        // dispatch bias; otherwise the route policy decides.
+        let class = self
+            .route
+            .route(req.class.or(spec.dispatch_bias), req.image.len(), depth, slack);
         req.class = Some(class);
         let mut delta = Metrics::default();
         match class {
@@ -783,26 +1058,61 @@ impl Router {
             DispatchClass::Shard => delta.routed_shard = 1,
         }
         self.note(delta);
+        self.class_inflight[ci] += 1;
+        self.queued_cycles[ci] =
+            self.queued_cycles[ci].saturating_add(self.capacity.est_cycles(req.mode));
         self.reply_txs.insert(req.id, tx);
         self.batcher.push(req);
     }
 
-    /// Hand a cut batch to its lane.
+    /// Hand a cut batch to its lane.  A request whose reply channel is
+    /// already gone was answered at another gate (shed at the queue,
+    /// refused, failed) — it is dropped from the batch here, tolerantly:
+    /// the old `.expect("reply channel registered")` panicked the whole
+    /// router thread on that overlap, exactly on the failure paths where
+    /// the answer mattered most.
     fn dispatch_cut(&mut self, batch: Batch) {
-        let txs: ReplyTxs = batch
-            .requests
-            .iter()
-            .map(|r| self.reply_txs.remove(&r.id).expect("reply channel registered"))
-            .collect();
+        let mut requests = Vec::with_capacity(batch.requests.len());
+        let mut txs: ReplyTxs = Vec::with_capacity(batch.requests.len());
+        for r in batch.requests {
+            let Some(tx) = self.reply_txs.remove(&r.id) else {
+                continue; // answered elsewhere; nothing left to do
+            };
+            // the request leaves the batcher queue: move its estimated
+            // cycles out of the queued ledger (it rides the dispatched
+            // ledgers from here)
+            let ci = r.service.index();
+            self.queued_cycles[ci] =
+                self.queued_cycles[ci].saturating_sub(self.capacity.est_cycles(r.mode));
+            requests.push(r);
+            txs.push(tx);
+        }
+        if requests.is_empty() {
+            return;
+        }
+        let batch = Batch {
+            mode: batch.mode,
+            class: batch.class,
+            requests,
+        };
         match batch.class {
             DispatchClass::Batch => self.dispatch_batch(batch, txs),
             DispatchClass::Shard => {
+                let ledger: Vec<(usize, u64)> = batch
+                    .requests
+                    .iter()
+                    .map(|r| (r.service.index(), self.capacity.est_cycles(r.mode)))
+                    .collect();
                 let n = batch.requests.len();
                 if let Err(e) = self.orch_tx.send(OrchMsg::Run(batch, txs)) {
                     let OrchMsg::Run(b, t) = e.0 else { unreachable!() };
                     self.fail_batch(b, t, "shard orchestrator is gone");
                 } else {
                     self.shard_inflight += n;
+                    for &(_, cycles) in &ledger {
+                        self.orch_cycles = self.orch_cycles.saturating_add(cycles);
+                    }
+                    self.orch_ledger.extend(ledger);
                 }
             }
         }
@@ -819,11 +1129,17 @@ impl Router {
             return;
         }
         let n = batch.requests.len();
+        let mut load = CardLoad::default();
+        for r in &batch.requests {
+            load.cycles = load.cycles.saturating_add(self.capacity.est_cycles(r.mode));
+            load.count[r.service.index()] += 1;
+        }
         while let Some(w) = self.free.pop() {
             match self.worker_txs[w].send(WorkerMsg::Run(batch, txs)) {
                 Ok(()) => {
                     self.running[w] = n;
                     self.batch_inflight += n;
+                    self.card_load[w] = load;
                     return;
                 }
                 Err(e) => {
@@ -920,11 +1236,14 @@ impl Router {
         }
     }
 
-    /// Answer every request of an undeliverable batch with an error.
+    /// Answer every request of an undeliverable batch with an error
+    /// (and retire its admission slots — the answers just went out).
     fn fail_batch(&mut self, batch: Batch, txs: ReplyTxs, reason: &str) {
         let mut delta = Metrics::default();
         let e = anyhow!("{reason}");
         for (req, tx) in batch.requests.into_iter().zip(&txs) {
+            let ci = req.service.index();
+            self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(1);
             send_error(&mut delta, req.id, tx, &e);
         }
         self.note(delta);
@@ -971,11 +1290,16 @@ fn send_reply(
     // Queue wait = time from submit until this request's compute began
     // (replies land after the compute, so the compute wall is not wait).
     delta.queue_wait.record(latency.saturating_sub(compute_wall));
+    let cm = &mut delta.classes[req.service.index()];
+    cm.completed += 1;
+    cm.latency.record(latency);
     if let Some(d) = req.deadline {
         if Instant::now() <= d {
             delta.deadline_met += 1;
+            delta.classes[req.service.index()].slo_met += 1;
         } else {
             delta.deadline_missed += 1;
+            delta.classes[req.service.index()].slo_missed += 1;
         }
     }
     let reply = Reply {
@@ -1003,7 +1327,46 @@ fn send_shed(delta: &mut Metrics, req: &Request, tx: &Sender<ReplyResult>) {
     debug_assert!(req.deadline.is_some(), "only deadlined requests shed");
     delta.failed += 1;
     delta.deadline_shed += 1;
+    delta.classes[req.service.index()].shed += 1;
     let _ = tx.send(Err(InferError::DeadlineExceeded { id: req.id }));
+}
+
+/// Refuse one request at admission: answered with the typed refusal —
+/// counted as `admission_refused`, *not* `failed` (the work was never
+/// admitted; `submitted == completed + failed + admission_refused`).
+fn send_refused(
+    delta: &mut Metrics,
+    req: &Request,
+    tx: &Sender<ReplyResult>,
+    earliest_feasible: Duration,
+) {
+    delta.admission_refused += 1;
+    delta.classes[req.service.index()].admission_refused += 1;
+    let _ = tx.send(Err(InferError::AdmissionRefused {
+        id: req.id,
+        earliest_feasible,
+    }));
+}
+
+/// Drop guard armed around a worker's batch: if the thread panics
+/// mid-batch, the unwind still posts this card's `WorkerDone`, so the
+/// router retires its committed load and per-class admission slots
+/// instead of leaking them into permanently inflated backlog (and
+/// spurious refusals).  The freed card's next dispatch fails its send
+/// and retires it through the normal dead-card path; the batch's reply
+/// channels drop with the stack, answering callers with `RecvError`.
+struct WorkerDoneGuard {
+    id: usize,
+    router_tx: Sender<RouterMsg>,
+    armed: bool,
+}
+
+impl Drop for WorkerDoneGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.router_tx.send(RouterMsg::WorkerDone(self.id));
+        }
+    }
 }
 
 fn worker_loop(
@@ -1012,6 +1375,7 @@ fn worker_loop(
     id: usize,
     router_tx: Sender<RouterMsg>,
     global: Arc<Mutex<Metrics>>,
+    capacity: Arc<CapacityModel>,
 ) -> Metrics {
     let mut local = Metrics::default();
     let max_m = sys.net.max_m();
@@ -1037,6 +1401,11 @@ fn worker_loop(
                 let _ = job.reply.send((job.card, res));
             }
             WorkerMsg::Run(batch, txs) => {
+                let mut done_guard = WorkerDoneGuard {
+                    id,
+                    router_tx: router_tx.clone(),
+                    armed: true,
+                };
                 sys.set_host_threads(full_threads);
                 // §IV-D: one mode switch per batch, not per frame.
                 let m_run = batch.mode.m_run(max_m, m_arch);
@@ -1070,6 +1439,10 @@ fn worker_loop(
                 match sys.run_frames(&images) {
                     Ok(results) => {
                         let batch_wall = t0.elapsed();
+                        // calibrate the admission capacity model: this
+                        // card just did `results.len()` frames of this
+                        // mode in `batch_wall`
+                        capacity.observe(batch.mode, results.len(), batch_wall, 1);
                         for ((req, tx), (logits, stats)) in good.into_iter().zip(results) {
                             send_reply(&mut delta, req, tx, logits, stats.cycles, batch_wall);
                         }
@@ -1086,6 +1459,7 @@ fn worker_loop(
                                 Ok(mut rs) => {
                                     let (logits, stats) = rs.pop().expect("one frame in/out");
                                     let wall = t1.elapsed();
+                                    capacity.observe(batch.mode, 1, wall, 1);
                                     send_reply(&mut delta, req, tx, logits, stats.cycles, wall);
                                     delta.sim_wall += wall;
                                     delta.batch_wall += wall;
@@ -1100,6 +1474,7 @@ fn worker_loop(
                     g.merge(&delta); // live view across all workers
                 }
                 // Tell the arbiter this card is free again.
+                done_guard.armed = false;
                 let _ = router_tx.send(RouterMsg::WorkerDone(id));
             }
         }
@@ -1196,6 +1571,7 @@ fn orchestrator_loop(
                         });
                         continue;
                     }
+                    let width = granted.len();
                     let t0 = Instant::now();
                     let mut dead = Vec::new();
                     let res = run_sharded_frame(
@@ -1226,6 +1602,9 @@ fn orchestrator_loop(
                     });
                     match res {
                         Ok((logits, stats)) => {
+                            // charged in card-time: `width` cards spent
+                            // `frame_wall` each on this frame
+                            oracle.capacity.observe(batch.mode, 1, frame_wall, width);
                             send_reply(&mut delta, req, tx, logits, stats.cycles, frame_wall);
                             delta.sim_wall += frame_wall;
                             delta.shard_wall += frame_wall;
@@ -1414,8 +1793,7 @@ mod tests {
                 max_delay: Duration::from_millis(1),
             },
             route: RoutePolicy::BatchOnly,
-            max_shard_cards: 0,
-            lease_slack: Duration::ZERO,
+            ..Default::default()
         }
     }
 
@@ -1425,8 +1803,7 @@ mod tests {
             workers: cards,
             policy: BatchPolicy::default(),
             route: RoutePolicy::ShardOnly,
-            max_shard_cards: 0,
-            lease_slack: Duration::ZERO,
+            ..Default::default()
         }
     }
 
@@ -1464,6 +1841,8 @@ mod tests {
                 worker_txs,
                 policy,
                 route,
+                classes: ClassTable::default(),
+                capacity: Arc::new(CapacityModel::fixed(1_000)),
                 batcher: Batcher::new(policy),
                 reply_txs: ReplyMap::new(),
                 free: (0..workers).collect(),
@@ -1471,6 +1850,11 @@ mod tests {
                 leased: 0,
                 running: vec![0; workers],
                 batch_inflight: 0,
+                class_inflight: [0; N_CLASSES],
+                queued_cycles: [0; N_CLASSES],
+                card_load: vec![CardLoad::default(); workers],
+                orch_ledger: VecDeque::new(),
+                orch_cycles: 0,
                 pending_batches: VecDeque::new(),
                 pending_lease: None,
                 shard_inflight: 0,
@@ -1492,6 +1876,7 @@ mod tests {
             mode: Mode::HighAccuracy,
             class,
             deadline: None,
+            service: ServiceClass::Standard,
             submitted: Instant::now(),
         }
     }
@@ -1693,9 +2078,11 @@ mod tests {
         assert_eq!(granted, vec![0]);
     }
 
-    /// While a lease waits out its hysteresis window, fresh batch cuts
-    /// park instead of stealing the free cards the lease is holding —
-    /// and drain the moment the lease resolves.
+    /// While a lease waits out its hysteresis window, fresh batch-lane
+    /// work stays *queued* instead of stealing the free cards the lease
+    /// is holding — the cut itself is gated on a card that can take the
+    /// work now — and it dispatches the moment the lease returns the
+    /// pool.
     #[test]
     fn pending_lease_parks_fresh_batches() {
         let mut rig = router_rig(2, RoutePolicy::BatchOnly);
@@ -1709,32 +2096,292 @@ mod tests {
             reply: lease_tx,
         });
         assert!(rig.router.pending_lease.is_some());
-        // a batch-lane request arrives and its batch is cut
+        // a batch-lane request arrives; its cut is deferred while the
+        // lease holds the pool (the free card is spoken for)
         let (tx, _reply) = channel::<ReplyResult>();
         let req = rig_request(0, Some(DispatchClass::Batch));
         rig.router.handle(RouterMsg::Submit(req, tx));
         rig.router.pump(Instant::now());
         assert_eq!(
-            rig.router.pending_batches.len(),
+            rig.router.batcher.pending(),
             1,
-            "cut batch parks while the lease holds the pool"
+            "work stays queued while the lease holds the pool"
         );
+        assert!(rig.router.pending_batches.is_empty(), "nothing parked");
         assert_eq!(rig.router.free, vec![0], "free card not stolen");
-        // the busy card frees: the lease wins it, then the parked batch
-        // gets dispatched onto... nothing yet (the lease took both) —
-        // it stays parked until the lease returns.
+        // the busy card frees: the lease wins it; the queued work still
+        // can't cut (the lease took both cards)
         rig.router.handle(RouterMsg::WorkerDone(1));
         assert_eq!(lease_rx.try_recv().expect("lease resolved").len(), 2);
-        assert_eq!(rig.router.pending_batches.len(), 1);
-        // lease returns: parked batch finally reaches a card
+        rig.router.pump(Instant::now());
+        assert_eq!(rig.router.batcher.pending(), 1);
+        // lease returns: the queued batch finally cuts onto a card
         rig.router.handle(RouterMsg::Unlease {
             ids: vec![0, 1],
             frames: 0,
         });
-        assert!(rig.router.pending_batches.is_empty(), "parked batch dispatched");
+        rig.router.pump(Instant::now());
+        assert_eq!(rig.router.batcher.pending(), 0, "queued batch dispatched");
+        assert!(rig.router.pending_batches.is_empty());
         let sent = rig.worker_rxs.iter().any(|rx| rx.try_recv().is_ok());
         assert!(sent, "the batch landed on a worker queue");
         assert_eq!(rig.router.batch_inflight, 1);
+    }
+
+    /// Regression for the `dispatch_cut` panic: a request answered at
+    /// another gate (shed at the queue racing a batch failure) has no
+    /// reply channel left when its batch is cut — the router must drop
+    /// it tolerantly and keep answering the survivors, on both lanes'
+    /// failure paths, instead of panicking the whole router thread.
+    #[test]
+    fn dispatch_cut_tolerates_already_answered_requests() {
+        // shard lane, orchestrator dead: the cut must fail the batch
+        // gracefully even though one of its requests was already
+        // answered (its tx is gone from the reply map)
+        let mut rig = router_rig(1, RoutePolicy::ShardOnly);
+        rig.orch_rx = None;
+        let answered = rig_request(0, Some(DispatchClass::Shard));
+        let (tx1, survivor_rx) = channel::<ReplyResult>();
+        let survivor = rig_request(1, Some(DispatchClass::Shard));
+        // only the survivor is registered — request 0 was answered at
+        // another gate
+        rig.router.reply_txs.insert(1, tx1);
+        rig.router.dispatch_cut(Batch {
+            mode: Mode::HighAccuracy,
+            class: DispatchClass::Shard,
+            requests: vec![answered, survivor],
+        });
+        let err = survivor_rx
+            .try_recv()
+            .expect("survivor answered despite the dead orchestrator")
+            .expect_err("an error answer");
+        assert!(matches!(err, InferError::Failed { .. }));
+        assert_eq!(err.id(), 1);
+        assert_eq!(rig.router.local.failed, 1, "only the survivor failed");
+        assert_eq!(rig.router.shard_inflight, 0);
+        assert!(rig.router.orch_ledger.is_empty());
+
+        // batch lane, pool dead: same overlap through fail_batch
+        let mut rig = router_rig(1, RoutePolicy::BatchOnly);
+        rig.router.live = 0;
+        rig.router.free.clear();
+        let (tx1, survivor_rx) = channel::<ReplyResult>();
+        rig.router.reply_txs.insert(1, tx1);
+        rig.router.dispatch_cut(Batch {
+            mode: Mode::HighAccuracy,
+            class: DispatchClass::Batch,
+            requests: vec![
+                rig_request(0, Some(DispatchClass::Batch)),
+                rig_request(1, Some(DispatchClass::Batch)),
+            ],
+        });
+        let err = survivor_rx
+            .try_recv()
+            .expect("survivor answered despite the dead pool")
+            .expect_err("an error answer");
+        assert_eq!(err.id(), 1);
+
+        // a batch whose every request was already answered dissolves
+        // without touching any lane
+        let mut rig = router_rig(1, RoutePolicy::BatchOnly);
+        rig.router.dispatch_cut(Batch {
+            mode: Mode::HighAccuracy,
+            class: DispatchClass::Batch,
+            requests: vec![rig_request(7, Some(DispatchClass::Batch))],
+        });
+        assert!(rig.router.pending_batches.is_empty());
+        assert!(rig.worker_rxs[0].try_recv().is_err(), "nothing dispatched");
+    }
+
+    /// The class admission budget refuses at the cap — typed, counted,
+    /// never queued — and frees as admitted work is answered.
+    #[test]
+    fn admission_budget_refuses_at_the_cap() {
+        let mut rig = router_rig(1, RoutePolicy::BatchOnly);
+        rig.router.classes = ClassTable::default().with(
+            ServiceClass::Interactive,
+            ClassSpec {
+                slo: None, // isolate the budget gate from the SLO stamp
+                dispatch_bias: None,
+                admission_limit: 1,
+            },
+        );
+        let interactive = |id| Request {
+            service: ServiceClass::Interactive,
+            ..rig_request(id, Some(DispatchClass::Batch))
+        };
+        // hold the card so the first request stays inflight
+        rig.router.free.clear();
+        let (tx0, _keep0) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(interactive(0), tx0));
+        assert_eq!(rig.router.class_inflight[ServiceClass::Interactive.index()], 1);
+        let (tx1, refused_rx) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(interactive(1), tx1));
+        let err = refused_rx
+            .try_recv()
+            .expect("refused instantly, not queued")
+            .expect_err("an error answer");
+        assert!(err.is_refused(), "typed refusal, got {err:?}");
+        assert!(!err.is_deadline());
+        assert_eq!(err.id(), 1);
+        // refused work never entered any ledger or queue
+        assert_eq!(rig.router.batcher.pending(), 1, "only the admitted request");
+        assert!(!rig.router.reply_txs.contains_key(&1));
+        assert_eq!(rig.router.local.admission_refused, 1);
+        assert_eq!(rig.router.local.submitted, 2);
+        let ci = ServiceClass::Interactive.index();
+        assert_eq!(rig.router.local.classes[ci].admission_refused, 1);
+        assert_eq!(rig.router.local.classes[ci].submitted, 2);
+        // other classes are not throttled by Interactive's budget
+        let (tx2, _keep2) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(rig_request(2, None), tx2));
+        assert_eq!(rig.router.batcher.pending(), 2);
+        // Standard defaults to no deadline: nothing to shed, no refusal
+        assert_eq!(rig.router.local.admission_refused, 1);
+    }
+
+    /// The capacity gate: once the model is calibrated, an SLO that
+    /// even the observed pace floor cannot meet over the committed
+    /// backlog is refused at admission — uncalibrated, the same request
+    /// is admitted (nothing is provable yet), and SLO-free classes are
+    /// never refused however bad their explicit deadlines look.
+    #[test]
+    fn capacity_gate_refuses_provably_unmeetable_slos() {
+        let mut rig = router_rig(1, RoutePolicy::BatchOnly);
+        rig.router.classes = ClassTable::default().with(
+            ServiceClass::Interactive,
+            ClassSpec {
+                slo: Some(Duration::from_millis(5)),
+                dispatch_bias: None,
+                admission_limit: 0,
+            },
+        );
+        // 10 frames of committed work on the one busy card
+        rig.router.free.clear();
+        rig.router.running[0] = 10;
+        rig.router.batch_inflight = 10;
+        rig.router.card_load[0] = CardLoad {
+            cycles: 10_000, // 10 × the rig's fixed 1 000-cycle frames
+            count: [0, 10, 0],
+        };
+        let interactive = |id| Request {
+            service: ServiceClass::Interactive,
+            ..rig_request(id, Some(DispatchClass::Batch))
+        };
+        // uncalibrated: admitted (the model refuses nothing it can't prove)
+        let (tx0, _keep0) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(interactive(0), tx0));
+        assert_eq!(rig.router.batcher.pending(), 1);
+        assert_eq!(rig.router.local.admission_refused, 0);
+        // calibrate: 1 ms per 1 000-cycle frame ⇒ the 10-frame running
+        // backlog alone needs 10 ms ≫ the 5 ms SLO
+        rig.router.capacity.set_pace_ps(1_000_000);
+        let (tx1, refused_rx) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(interactive(1), tx1));
+        let err = refused_rx
+            .try_recv()
+            .expect("refused instantly")
+            .expect_err("an error answer");
+        let InferError::AdmissionRefused { id, earliest_feasible } = err else {
+            panic!("expected AdmissionRefused, got {err:?}");
+        };
+        assert_eq!(id, 1);
+        assert!(
+            earliest_feasible >= Duration::from_millis(10),
+            "the refusal names the budget floor ({earliest_feasible:?})"
+        );
+        assert_eq!(rig.router.batcher.pending(), 1, "refused work never queued");
+        assert!(!rig.router.reply_txs.contains_key(&1));
+        assert_eq!(rig.router.local.admission_refused, 1);
+        // an explicit generous deadline opts the same class back in
+        let feasible = Request {
+            deadline: Some(Instant::now() + Duration::from_secs(60)),
+            ..interactive(2)
+        };
+        let (tx2, _keep2) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(feasible, tx2));
+        assert_eq!(rig.router.batcher.pending(), 2);
+        // scalar-deadline compat: an SLO-free class with a hopeless
+        // explicit deadline is still admitted (queued, eventually shed)
+        // — PR-4 semantics unchanged
+        let bare = Request {
+            deadline: Some(Instant::now() + Duration::from_millis(1)),
+            ..rig_request(3, Some(DispatchClass::Batch))
+        };
+        let (tx3, _keep3) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(bare, tx3));
+        assert_eq!(rig.router.batcher.pending(), 3, "no refusal without an SLO");
+        assert_eq!(rig.router.local.admission_refused, 1);
+    }
+
+    /// An Interactive request's capacity check ignores *laxer* queued
+    /// work (SLO-aware arbitration will cut it ahead), but counts
+    /// running work in full — the class-aware backlog slice.
+    #[test]
+    fn backlog_slice_is_class_aware() {
+        let mut rig = router_rig(1, RoutePolicy::BatchOnly);
+        rig.router.queued_cycles = [1_000, 2_000, 4_000];
+        rig.router.card_load[0] = CardLoad {
+            cycles: 8_000,
+            count: [0, 1, 0],
+        };
+        assert_eq!(
+            rig.router.backlog_cycles(ServiceClass::Interactive),
+            1_000 + 8_000,
+            "interactive sees only interactive queues + running work"
+        );
+        assert_eq!(
+            rig.router.backlog_cycles(ServiceClass::Standard),
+            1_000 + 2_000 + 8_000
+        );
+        assert_eq!(
+            rig.router.backlog_cycles(ServiceClass::Bulk),
+            1_000 + 2_000 + 4_000 + 8_000,
+            "bulk queues behind everything"
+        );
+        // the shard ledger counts in full for every class (the
+        // orchestrator is FIFO)
+        rig.router.orch_ledger.push_back((ServiceClass::Bulk.index(), 500));
+        rig.router.orch_cycles = 500;
+        assert_eq!(rig.router.backlog_cycles(ServiceClass::Interactive), 9_500);
+    }
+
+    /// The admission ledgers stay balanced through dispatch, completion
+    /// and the shard lane's Unlease pops.
+    #[test]
+    fn admission_ledgers_balance_through_the_lanes() {
+        let mut rig = router_rig(2, RoutePolicy::BatchOnly);
+        let si = ServiceClass::Standard.index();
+        let est = rig.router.capacity.est_cycles(Mode::HighAccuracy);
+        // admit two batch-lane requests and let the cut dispatch them
+        let (tx0, _r0) = channel::<ReplyResult>();
+        let (tx1, _r1) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(rig_request(0, None), tx0));
+        rig.router.handle(RouterMsg::Submit(rig_request(1, None), tx1));
+        assert_eq!(rig.router.class_inflight[si], 2);
+        assert_eq!(rig.router.queued_cycles[si], 2 * est);
+        rig.router.pump(Instant::now());
+        assert_eq!(rig.router.queued_cycles[si], 0, "cut moved cycles to the card");
+        let w = (0..2)
+            .find(|&w| rig.router.card_load[w].cycles > 0)
+            .expect("a card holds the batch");
+        assert_eq!(rig.router.card_load[w].cycles, 2 * est);
+        assert_eq!(rig.router.class_inflight[si], 2, "inflight until answered");
+        rig.router.handle(RouterMsg::WorkerDone(w));
+        assert_eq!(rig.router.class_inflight[si], 0);
+        assert_eq!(rig.router.card_load[w].cycles, 0);
+        // shard lane: the ledger pops per Unlease-retired frame
+        let mut rig = router_rig(1, RoutePolicy::ShardOnly);
+        let (tx, _r) = channel::<ReplyResult>();
+        rig.router.handle(RouterMsg::Submit(rig_request(0, None), tx));
+        rig.router.pump(Instant::now());
+        assert_eq!(rig.router.orch_ledger.len(), 1);
+        assert_eq!(rig.router.orch_cycles, est);
+        assert_eq!(rig.router.class_inflight[si], 1);
+        rig.router.handle(RouterMsg::Unlease { ids: vec![], frames: 1 });
+        assert!(rig.router.orch_ledger.is_empty());
+        assert_eq!(rig.router.orch_cycles, 0);
+        assert_eq!(rig.router.class_inflight[si], 0);
     }
 
     /// `send_reply` splits deadlined completions into met vs missed.
@@ -1747,6 +2394,7 @@ mod tests {
             mode: Mode::HighAccuracy,
             class: None,
             deadline,
+            service: ServiceClass::Standard,
             submitted: now,
         };
         let (tx, rx) = channel::<ReplyResult>();

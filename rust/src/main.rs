@@ -5,6 +5,7 @@
 //! binarray serve  [--config 1,8,2] [--workers N] [--frames N] [--mode fast|accurate]
 //!                 [--route batch|shard|auto] [--shard N] [--shard-min-len L] [--deep-queue Q]
 //!                 [--deadline-ms D] [--tight-slack-us T] [--lease-slack-us H]
+//!                 [--class interactive|standard|bulk] [--slo-ms S] [--arbitration slo|oldest]
 //! binarray perf   [--m M]               # Table III analytical model
 //! binarray area                         # Table IV resource model
 //! binarray listing                      # compiled CNN processing program
@@ -20,7 +21,8 @@ use anyhow::{bail, Context, Result};
 use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode, RoutePolicy,
+    Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, Mode,
+    RoutePolicy, ServiceClass,
 };
 use binarray::tensor::Shape;
 use binarray::{area, golden, isa, nn, perf};
@@ -205,6 +207,27 @@ fn serve(args: &Args) -> Result<()> {
         other => bail!("--route {other}: expected batch|shard|auto"),
     };
     let deadline_ms: u64 = args.get("deadline-ms", 0)?;
+    // --class names the service class every frame is submitted under:
+    // its SLO (overridable via --slo-ms) becomes the deadline, its
+    // admission budget and the capacity model may *refuse* infeasible
+    // work up front, and --arbitration picks how freed cards arbitrate
+    // between lanes (SLO-aware by default; `oldest` is the blind
+    // pre-SLO rule, kept for comparison).
+    let service: ServiceClass = args.get("class", ServiceClass::Standard)?;
+    let slo_ms: u64 = args.get("slo-ms", 0)?;
+    let mut classes = ClassTable::default();
+    if slo_ms > 0 {
+        let spec = ClassSpec {
+            slo: Some(Duration::from_millis(slo_ms)),
+            ..*classes.spec(service)
+        };
+        classes = classes.with(service, spec);
+    }
+    let arbitration = match args.get::<String>("arbitration", "slo".into())?.as_str() {
+        "slo" => Arbitration::SloAware,
+        "oldest" => Arbitration::OldestFirst,
+        other => bail!("--arbitration {other}: expected slo|oldest"),
+    };
     let cfg = CoordinatorConfig {
         array: args.config(ArrayConfig::new(1, 8, 2))?,
         // the pool must cover the requested lease width
@@ -216,6 +239,8 @@ fn serve(args: &Args) -> Result<()> {
         route,
         max_shard_cards: cards,
         lease_slack: Duration::from_micros(args.get("lease-slack-us", 0u64)?),
+        classes,
+        arbitration,
     };
     let frames: usize = args.get("frames", 64)?;
     let mode = match args.get::<String>("mode", "accurate".into())?.as_str() {
@@ -226,7 +251,7 @@ fn serve(args: &Args) -> Result<()> {
     let calib = CalibBatch::load(&dir.join("calib.bin"))?;
 
     println!(
-        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}, route {route_name}{}{}",
+        "serving {frames} frames on BinArray{} × {} workers, mode {mode:?}, route {route_name}{}{}, class {}{}",
         cfg.array.label(),
         cfg.workers,
         if cards > 0 {
@@ -238,6 +263,11 @@ fn serve(args: &Args) -> Result<()> {
             format!(", {deadline_ms} ms deadlines")
         } else {
             String::new()
+        },
+        service.label(),
+        match cfg.classes.spec(service).slo {
+            Some(s) => format!(" (SLO {s:?})"),
+            None => String::new(),
         }
     );
     let coord = Coordinator::start(cfg, net)?;
@@ -247,12 +277,13 @@ fn serve(args: &Args) -> Result<()> {
         let idx = i % calib.n;
         let deadline =
             (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
-        rxs.push(coord.submit_qos(calib.image(idx).to_vec(), mode, None, deadline));
+        rxs.push(coord.submit_sla(calib.image(idx).to_vec(), mode, None, deadline, service));
         labels.push(calib.labels[idx]);
     }
     let mut correct = 0u64;
     let mut answered = 0u64;
     let mut shed = 0u64;
+    let mut refused = 0u64;
     for (rx, label) in rxs.into_iter().zip(labels) {
         match rx.recv()? {
             Ok(reply) => {
@@ -261,16 +292,23 @@ fn serve(args: &Args) -> Result<()> {
                     correct += 1;
                 }
             }
-            // expired frames are shed by design under --deadline-ms;
-            // anything else is a real serving fault
+            // expired frames are shed by design under --deadline-ms /
+            // --slo-ms, and admission may refuse provably-infeasible
+            // work up front; anything else is a real serving fault
             Err(e) if e.is_deadline() => shed += 1,
+            Err(e) if e.is_refused() => refused += 1,
             Err(e) => return Err(e.into()),
         }
     }
     let m = coord.shutdown();
     println!("{}", m.summary());
     if shed > 0 {
-        println!("shed {shed} frames past their {deadline_ms} ms deadline (answered {answered})");
+        println!("shed {shed} frames past their deadline/SLO (answered {answered})");
+    }
+    if refused > 0 {
+        println!(
+            "refused {refused} frames at admission (SLO provably unmeetable or class budget full)"
+        );
     }
     println!(
         "top-1 vs labels: {:.2}% ({}/{} answered frames)",

@@ -78,8 +78,7 @@ fn cfg(workers: usize, route: RoutePolicy) -> CoordinatorConfig {
             max_delay: Duration::from_micros(200),
         },
         route,
-        max_shard_cards: 0,
-        lease_slack: Duration::ZERO,
+        ..Default::default()
     }
 }
 

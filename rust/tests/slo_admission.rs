@@ -1,0 +1,471 @@
+//! Per-class SLO admission control, end to end: named service classes
+//! carry latency SLOs, the capacity model refuses provably-unmeetable
+//! work at `submit` with the typed `InferError::AdmissionRefused` —
+//! never queued, never computed — the class admission budget caps
+//! inflight work per class, and SLO-aware cross-lane arbitration meets
+//! strictly more Interactive SLOs than the oldest-first pick on the
+//! same overload.  Every admitted reply stays bit-identical to
+//! `golden::forward`.
+//!
+//! Pool widths ride the `BINARRAY_TEST_CARDS` matrix (default `1,2,4`)
+//! where the pool is involved, like the other cross-card suites.
+
+use std::time::{Duration, Instant};
+
+use binarray::artifacts::{self, LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::{ArrayConfig, BinArraySystem};
+use binarray::coordinator::{
+    Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, InferError,
+    Metrics, Mode, RoutePolicy, ServiceClass,
+};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256, test_cards};
+
+/// A deliberately tiny but structurally complete net (conv+pool, two
+/// dense) so the admission paths are pushed with request counts, not
+/// compute.
+fn tiny_net(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 2;
+    let conv = QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, 4 * m * 3 * 3 * 3),
+        alpha_q: (0..4 * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..4).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d: 4,
+        m,
+        kh: 3,
+        kw: 3,
+        c: 3,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool: 2,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, n_in: usize, relu: bool| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * n_in),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    // 10×10×3 → conv3 → 8×8×4 → pool2 → 4×4×4 → dense 8 → dense 5
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![conv, dense(rng, 8, 64, true), dense(rng, 5, 8, false)],
+    };
+    assert_eq!(binarray::isa::compiler::infer_input_dims(&net), (10, 10, 3));
+    (net, Shape::new(10, 10, 3))
+}
+
+fn cfg(workers: usize, classes: ClassTable) -> CoordinatorConfig {
+    CoordinatorConfig {
+        array: ArrayConfig::new(1, 8, 2),
+        workers,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_micros(200),
+        },
+        route: RoutePolicy::BatchOnly,
+        classes,
+        ..Default::default()
+    }
+}
+
+/// The accounting identity every run of this suite re-checks: all
+/// submitted work is answered exactly once — completed, failed (sheds
+/// included), or refused at admission.
+fn assert_identity(m: &Metrics) {
+    assert_eq!(
+        m.submitted,
+        m.completed + m.failed + m.admission_refused,
+        "submitted = completed + failed + refused must hold \
+         (submitted {}, completed {}, failed {}, refused {})",
+        m.submitted,
+        m.completed,
+        m.failed,
+        m.admission_refused
+    );
+    let per_class: u64 = m.classes.iter().map(|c| c.submitted).sum();
+    assert_eq!(per_class, m.submitted, "per-class submitted sums to the total");
+}
+
+/// The class admission budget refuses at the cap, before any queue or
+/// compute cost: refusals are typed, answered instantly (the admitted
+/// work is still parked in the batcher), and the refused requests never
+/// touch the simulator.
+#[test]
+fn admission_budget_refuses_before_any_cost() {
+    let mut rng = Xoshiro256::new(0xB0D6);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    for workers in test_cards() {
+        let classes = ClassTable::default().with(
+            ServiceClass::Interactive,
+            ClassSpec {
+                slo: None, // isolate the budget gate from the capacity gate
+                dispatch_bias: None,
+                admission_limit: 2,
+            },
+        );
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                policy: BatchPolicy {
+                    max_batch: 64,
+                    max_delay: Duration::from_secs(60), // nothing cuts on its own
+                },
+                ..cfg(workers, classes)
+            },
+            net.clone(),
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..5)
+            .map(|_| {
+                coord.submit_sla(
+                    image.clone(),
+                    Mode::HighAccuracy,
+                    None,
+                    None,
+                    ServiceClass::Interactive,
+                )
+            })
+            .collect();
+        // the three over-budget requests are answered *now*, while the
+        // two admitted ones are still parked in the batcher
+        for rx in &rxs[2..] {
+            let err = rx
+                .recv()
+                .expect("refused work is answered, not dropped")
+                .expect_err("over-budget work must be refused");
+            assert!(err.is_refused(), "typed refusal, got {err:?}");
+            assert!(!err.is_deadline());
+        }
+        let m = coord.shutdown(); // flush serves the two admitted requests
+        for rx in &rxs[..2] {
+            let reply = rx.recv().unwrap().expect("admitted work served");
+            assert_eq!(reply.logits, want, "{workers} workers");
+        }
+        assert_eq!(m.submitted, 5, "{workers} workers");
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.admission_refused, 3);
+        assert_identity(&m);
+        let ci = ServiceClass::Interactive.index();
+        assert_eq!(m.classes[ci].submitted, 5);
+        assert_eq!(m.classes[ci].completed, 2);
+        assert_eq!(m.classes[ci].admission_refused, 3);
+        // refused work burned nothing: the only cycles belong to the
+        // two admitted frames, served as one flush batch
+        assert_eq!(m.latency.count(), 2, "only served frames record latency");
+        assert!(m.sim_cycles > 0);
+        assert_eq!(m.batches, 1, "both admitted frames share the flush batch");
+    }
+}
+
+/// The capacity gate, end to end on a full-size frame: once a served
+/// frame calibrates the pace model, an SLO far below the observed
+/// per-frame wall is refused at admission — typed, instant, zero
+/// compute — while an uncalibrated coordinator admits the same request
+/// (nothing is provable yet) and SLO-free traffic is never refused.
+#[test]
+fn capacity_gate_refuses_unmeetable_slo_after_calibration() {
+    let mut rng = Xoshiro256::new(0xCA9A);
+    // Full-size synthetic CNN-A: per-frame compute in the milliseconds,
+    // so a 100 µs SLO is provably hopeless once the pace is known.
+    let net = artifacts::synthetic_cnn_a(&mut rng, 2);
+    let dims = binarray::isa::compiler::infer_input_dims(&net);
+    let shape = Shape::new(dims.1, dims.0, dims.2);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let hopeless = Duration::from_micros(100);
+    let classes = ClassTable::default().with(
+        ServiceClass::Interactive,
+        ClassSpec {
+            slo: Some(hopeless),
+            dispatch_bias: None,
+            admission_limit: 0,
+        },
+    );
+
+    // Uncalibrated (fresh pool, no completion observed): the hopeless
+    // SLO is *admitted* — it will shed or complete late downstream, but
+    // the model refuses nothing it can't prove.
+    {
+        let coord = Coordinator::start(cfg(1, classes), net.clone()).unwrap();
+        match coord.infer_sla(
+            image.clone(),
+            Mode::HighAccuracy,
+            None,
+            None,
+            ServiceClass::Interactive,
+        ) {
+            Ok(reply) => assert_eq!(reply.logits, want),
+            Err(e) => {
+                let ie: InferError = e.downcast().expect("typed InferError");
+                assert!(
+                    ie.is_deadline(),
+                    "uncalibrated model must admit (shed downstream, never refused): {ie:?}"
+                );
+            }
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.admission_refused, 0, "nothing provable, nothing refused");
+        assert_identity(&m);
+    }
+
+    // Calibrated: serve two standard frames (each one serial batch),
+    // then the same hopeless SLO is refused at the gate — and a final
+    // standard frame shows SLO-free traffic is never refused.  All
+    // counts are asserted on the post-shutdown totals, which are exact.
+    let coord = Coordinator::start(cfg(1, classes), net).unwrap();
+    for _ in 0..2 {
+        let reply = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+        assert_eq!(reply.logits, want);
+    }
+    let err = coord
+        .infer_sla(image.clone(), Mode::HighAccuracy, None, None, ServiceClass::Interactive)
+        .expect_err("a 100 µs SLO on a ms-scale frame must be refused");
+    let ie: InferError = err.downcast().expect("typed InferError");
+    let InferError::AdmissionRefused { earliest_feasible, .. } = ie else {
+        panic!("expected AdmissionRefused, got {ie:?}");
+    };
+    assert!(
+        earliest_feasible > hopeless,
+        "the refusal names a floor above the SLO ({earliest_feasible:?})"
+    );
+    // SLO-free traffic on the same calibrated coordinator is never
+    // refused — admission control is a class contract.
+    let reply = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+    assert_eq!(reply.logits, want);
+    let m = coord.shutdown();
+    assert_identity(&m);
+    assert_eq!(m.submitted, 4);
+    assert_eq!(m.completed, 3, "the refused request never computed");
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.admission_refused, 1);
+    assert_eq!(m.batches, 3, "a refusal costs no batch");
+    assert_eq!(m.latency.count(), 3, "no latency sample for refused work");
+    assert_eq!(m.classes[ServiceClass::Interactive.index()].admission_refused, 1);
+}
+
+/// `coordinator_stress`-style concurrency over mixed classes, budgets
+/// and deadlines: every receiver is answered exactly once, and
+/// `completed + failed + refused == submitted` holds on the final
+/// metrics whatever the interleaving.
+#[test]
+fn identity_holds_under_concurrent_mixed_class_load() {
+    let mut rng = Xoshiro256::new(0x1DE7);
+    let (net, shape) = tiny_net(&mut rng);
+    for workers in test_cards() {
+        let classes = ClassTable::default()
+            .with(
+                ServiceClass::Interactive,
+                ClassSpec {
+                    slo: Some(Duration::from_secs(30)), // generous: admission stays open
+                    dispatch_bias: None,
+                    admission_limit: 0,
+                },
+            )
+            .with(
+                ServiceClass::Bulk,
+                ClassSpec {
+                    slo: None,
+                    dispatch_bias: None,
+                    admission_limit: 3, // tight: refusals under load
+                },
+            );
+        let coord = Coordinator::start(cfg(workers, classes), net.clone()).unwrap();
+        let producers = 4usize;
+        let per_producer = 24usize;
+        let total = (producers * per_producer) as u64;
+        let (mut ok, mut refused, mut shed) = (0u64, 0u64, 0u64);
+        std::thread::scope(|s| {
+            let threads: Vec<_> = (0..producers)
+                .map(|p| {
+                    let h = coord.handle();
+                    let mut prng = Xoshiro256::new(900 + p as u64);
+                    let image = prop::i8_vec(&mut prng, shape.len());
+                    s.spawn(move || {
+                        let (mut ok, mut refused, mut shed) = (0u64, 0u64, 0u64);
+                        for i in 0..per_producer {
+                            let service = match i % 3 {
+                                0 => ServiceClass::Interactive,
+                                1 => ServiceClass::Standard,
+                                _ => ServiceClass::Bulk,
+                            };
+                            // every fifth request arrives already expired
+                            // (exercises the shed gates alongside refusal)
+                            let deadline = (i % 5 == 0).then(Instant::now);
+                            let reply = h
+                                .submit_sla(
+                                    image.clone(),
+                                    Mode::HighAccuracy,
+                                    None,
+                                    deadline,
+                                    service,
+                                )
+                                .recv()
+                                .expect("every request answered exactly once");
+                            match reply {
+                                Ok(_) => ok += 1,
+                                Err(e) if e.is_refused() => refused += 1,
+                                Err(e) if e.is_deadline() => shed += 1,
+                                Err(e) => panic!("unexpected serving fault: {e}"),
+                            }
+                        }
+                        (ok, refused, shed)
+                    })
+                })
+                .collect();
+            for t in threads {
+                let (o, r, sh) = t.join().unwrap();
+                ok += o;
+                refused += r;
+                shed += sh;
+            }
+        });
+        assert_eq!(ok + refused + shed, total);
+        let m = coord.shutdown();
+        assert_eq!(m.submitted, total, "{workers} workers");
+        assert_eq!(m.completed, ok);
+        assert_eq!(m.admission_refused, refused);
+        assert_eq!(m.failed, shed, "every failure here is a typed shed");
+        assert_eq!(m.deadline_shed, shed);
+        assert_identity(&m);
+    }
+}
+
+/// The acceptance scenario: a bulk flood ahead of an Interactive
+/// trickle on one card.  Oldest-first arbitration serves the older bulk
+/// lane until the Interactive SLOs are long dead; SLO-aware arbitration
+/// hands each freed card to the lane with the least relative slack and
+/// meets them — strictly more Interactive SLOs met on the same load,
+/// with every admitted reply still bit-identical to the golden model.
+#[test]
+fn slo_aware_arbitration_meets_strictly_more_interactive_slos() {
+    let mut rng = Xoshiro256::new(0x510A);
+    // Full-size synthetic CNN-A: per-frame compute in the milliseconds,
+    // so the SLO margins dwarf scheduler jitter.
+    let net = artifacts::synthetic_cnn_a(&mut rng, 2);
+    let dims = binarray::isa::compiler::infer_input_dims(&net);
+    let shape = Shape::new(dims.1, dims.0, dims.2);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want_hi = golden::forward(&net, &image, shape, None);
+    let want_lo = golden::forward(&net, &image, shape, Some(2));
+
+    // Calibrate the per-frame wall on this machine.
+    let mut sys = BinArraySystem::new(ArrayConfig::new(1, 8, 2), net.clone()).unwrap();
+    sys.run_frame(&image).unwrap(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        sys.run_frame(&image).unwrap();
+    }
+    let per = t0.elapsed() / 3;
+    drop(sys);
+
+    let bulk = 20usize;
+    let interactive = 4usize;
+    // SLO 10× one frame: ~2× what the SLO-aware schedule needs (≤ ~5
+    // frames ahead of the last Interactive), ~½ the bulk flood's serial
+    // time (~20 frames ahead of the first under oldest-first).
+    let slo = per * 10;
+    let serve = |arbitration: Arbitration| -> (u64, u64) {
+        let classes = ClassTable::default()
+            .with(
+                ServiceClass::Interactive,
+                ClassSpec {
+                    slo: Some(slo),
+                    dispatch_bias: None,
+                    admission_limit: 0,
+                },
+            )
+            .with(
+                ServiceClass::Bulk,
+                ClassSpec {
+                    slo: None,
+                    dispatch_bias: None,
+                    admission_limit: 0,
+                },
+            );
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                policy: BatchPolicy {
+                    max_batch: 1, // arbitrate on every frame boundary
+                    max_delay: Duration::ZERO,
+                },
+                arbitration,
+                ..cfg(1, classes)
+            },
+            net.clone(),
+        )
+        .unwrap();
+        coord.infer(image.clone(), Mode::HighAccuracy).unwrap(); // warmup
+        let h = coord.handle();
+        let mut rxs = Vec::new();
+        // the flood first (the older lane), the urgent trickle behind it
+        for _ in 0..bulk {
+            rxs.push(h.submit_sla(
+                image.clone(),
+                Mode::HighAccuracy,
+                None,
+                None,
+                ServiceClass::Bulk,
+            ));
+        }
+        for _ in 0..interactive {
+            rxs.push(h.submit_sla(
+                image.clone(),
+                Mode::HighThroughput,
+                None,
+                None,
+                ServiceClass::Interactive,
+            ));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv().expect("answered") {
+                Ok(reply) => {
+                    let want = if i < bulk { &want_hi } else { &want_lo };
+                    assert_eq!(&reply.logits, want, "frame {i} ({arbitration:?})");
+                }
+                Err(e) => assert!(
+                    e.is_deadline() || e.is_refused(),
+                    "only QoS answers expected: {e}"
+                ),
+            }
+        }
+        let m = coord.shutdown();
+        assert_identity(&m);
+        let c = &m.classes[ServiceClass::Interactive.index()];
+        assert_eq!(
+            c.slo_met + c.slo_missed + c.shed + c.admission_refused,
+            interactive as u64
+        );
+        (c.slo_met, m.classes[ServiceClass::Bulk.index()].completed)
+    };
+
+    let (met_oldest, bulk_oldest) = serve(Arbitration::OldestFirst);
+    let (met_aware, bulk_aware) = serve(Arbitration::SloAware);
+    assert_eq!(bulk_oldest, bulk as u64, "bulk is never starved (oldest)");
+    assert_eq!(bulk_aware, bulk as u64, "bulk is never starved (slo-aware)");
+    assert!(
+        met_aware > met_oldest,
+        "SLO-aware arbitration must meet strictly more Interactive SLOs \
+         (aware {met_aware} vs oldest {met_oldest})"
+    );
+    assert!(met_aware >= 1, "at least one Interactive SLO met");
+}
