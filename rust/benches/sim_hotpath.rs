@@ -8,6 +8,10 @@
 //!     `ExecutionPlan` (zero-copy views + scoped host thread pool) on a
 //!     multi-SA config — logits asserted byte-identical to the golden
 //!     model on both paths;
+//!   * kernel A/B: the same plan executor with the scalar widening walk
+//!     vs the bit-packed popcount kernel (`BINARRAY_KERNEL`), logits
+//!     asserted byte-identical to golden on both — the recorded
+//!     `kernel_speedup` feeds the tracked bench gate;
 //!   * coordinator overhead: serve N frames through the full router →
 //!     batcher → worker stack vs calling the simulator directly;
 //!   * cross-card sharding: single-frame latency (host wall and simulated
@@ -44,6 +48,7 @@ use binarray::coordinator::{
     DispatchClass, Mode, RoutePolicy, ServiceClass,
 };
 use binarray::isa::{compile_network, Program};
+use binarray::kernel::{self, KernelKind};
 use binarray::tensor::{FeatureMap, Shape};
 use binarray::util::{prop, rng::Xoshiro256};
 use binarray::{fixp, golden};
@@ -333,6 +338,36 @@ fn main() {
         "plan/execute speedup: {speedup:.2}× ({:.1} → {:.1} frames/s host-side)",
         1.0 / legacy_per,
         1.0 / plan_per_frame
+    );
+
+    // === kernel A/B: scalar walk vs bit-packed popcount =================
+    // Same plan executor, same batch — only the inner dot-product kernel
+    // differs (the runtime `BINARRAY_KERNEL` choice, forced per run
+    // here).  Logits are asserted byte-identical to the golden model on
+    // both paths: the kernel is a host-speed knob, never a semantics one.
+    println!("\n=== kernel A/B: scalar vs packed popcount [4,32,4] ===");
+    let kernel_ab = |kind: KernelKind, label: &str| -> f64 {
+        let mut sys = BinArraySystem::new(cfg, qnet.clone()).unwrap();
+        sys.set_kernel(kind);
+        for (i, (logits, _)) in sys.run_frames(&batch).unwrap().iter().enumerate() {
+            let want = golden::forward(&qnet, batch[i], shape, None);
+            assert_eq!(*logits, want, "{label} diverged from golden on frame {i}");
+        }
+        let (per, _) = bench(label, 2, || {
+            sys.run_frames(&batch).unwrap();
+            0
+        });
+        per / batch.len() as f64
+    };
+    let scalar_per_frame = kernel_ab(KernelKind::Scalar, "kernel=scalar (widening walk)");
+    let packed_per_frame = kernel_ab(KernelKind::Packed, "kernel=packed (bit-serial popcount)");
+    let kernel_speedup = scalar_per_frame / packed_per_frame;
+    let kernel_backend = kernel::backend_name();
+    let fps_plan_scalar = 1.0 / scalar_per_frame;
+    println!(
+        "kernel speedup: {kernel_speedup:.2}× on `{kernel_backend}` ({:.1} → {:.1} frames/s)",
+        fps_plan_scalar,
+        1.0 / packed_per_frame
     );
 
     println!("\n=== coordinator overhead (1 worker, batch 8) ===");
@@ -729,7 +764,7 @@ fn main() {
         hm.routed_batch, hm.routed_shard, hm.mean_lease(), hm.shard_cards_stolen
     );
     let json = format!(
-        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json},\n  \"slo\": {slo_json}\n}}\n",
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"kernel_backend\": \"{kernel_backend}\",\n  \"frames_per_sec_plan_scalar\": {fps_plan_scalar:.2},\n  \"kernel_speedup\": {kernel_speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json},\n  \"slo\": {slo_json}\n}}\n",
         cfg.label(),
         1.0 / legacy_per,
         1.0 / plan_per_frame,

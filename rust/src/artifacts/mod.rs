@@ -135,6 +135,85 @@ impl QuantLayer {
     }
 }
 
+/// A layer's sign planes packed one bit per ±1 weight — the weight side
+/// of the bit-packed popcount kernel ([`crate::kernel`]).
+///
+/// Layout is bitplane-major: plane `(d, m)` occupies `stride` consecutive
+/// `u64` words (`stride = plane_stride(n_c)`, padded up to the kernel's
+/// SIMD lane multiple), with bit `i` set iff sign element `i` is `+1`.
+/// All padding bits — the tail past `n_c` in the last logical word and
+/// the alignment words after it — are guaranteed zero (`tail_mask` is
+/// applied at pack time), which is what lets the kernel's popcount
+/// identity run with no edge handling on the dot path.  The scalar
+/// `planes: Vec<i8>` on [`QuantLayer`] stays untouched as the golden
+/// reference; this view is built once per layer at plan construction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedPlanes {
+    d: usize,
+    m: usize,
+    n_c: usize,
+    stride: usize,
+    tail_mask: u64,
+    bits: Vec<u64>,
+}
+
+impl PackedPlanes {
+    /// Pack `layer.planes` (±1 signs in `(d, m, n_c)` order) into the
+    /// bitplane-major `u64` layout.
+    pub fn pack(layer: &QuantLayer) -> Self {
+        let n_c = layer.n_c();
+        let stride = crate::kernel::plane_stride(n_c);
+        let words = n_c.div_ceil(64);
+        let tail_mask = match n_c % 64 {
+            0 => u64::MAX,
+            r => (1u64 << r) - 1,
+        };
+        let mut bits = vec![0u64; layer.d * layer.m * stride];
+        for p in 0..layer.d * layer.m {
+            let plane = &layer.planes[p * n_c..(p + 1) * n_c];
+            let dst = &mut bits[p * stride..p * stride + words];
+            for (i, &s) in plane.iter().enumerate() {
+                if s > 0 {
+                    dst[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+            // `s > 0` can never set a bit past n_c, but the mask makes
+            // the zero-padding contract explicit and machine-checked.
+            if let Some(last) = dst.last_mut() {
+                *last &= tail_mask;
+            }
+        }
+        Self { d: layer.d, m: layer.m, n_c, stride, tail_mask, bits }
+    }
+
+    /// Packed words of plane `(d, m)` — exactly [`Self::stride`] words.
+    #[inline]
+    pub fn plane(&self, d: usize, m: usize) -> &[u64] {
+        let at = (d * self.m + m) * self.stride;
+        &self.bits[at..at + self.stride]
+    }
+
+    /// Dot length the planes were packed for.
+    pub fn n_c(&self) -> usize {
+        self.n_c
+    }
+
+    /// Words per plane (`plane_stride(n_c)`).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Valid-bit mask of the last logical word of each plane.
+    pub fn tail_mask(&self) -> u64 {
+        self.tail_mask
+    }
+
+    /// Do these packed planes describe `layer`'s geometry?
+    pub fn matches(&self, layer: &QuantLayer) -> bool {
+        self.d == layer.d && self.m == layer.m && self.n_c == layer.n_c()
+    }
+}
+
 /// A full quantized network (the BAW1 payload).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct QuantNetwork {
@@ -463,6 +542,61 @@ mod tests {
         assert_eq!((g.n, g.k), (2, 3));
         assert_eq!(g.row(0), &[1, 2, 3]);
         assert_eq!(g.row(1), &[-1, -2, -128]);
+    }
+
+    #[test]
+    fn packed_planes_mirror_scalar_planes_bit_for_bit() {
+        let mut rng = Xoshiro256::new(10);
+        let net = synthetic_cnn_a(&mut rng, 3);
+        for l in &net.layers {
+            let pk = PackedPlanes::pack(l);
+            assert!(pk.matches(l));
+            assert_eq!(pk.n_c(), l.n_c());
+            assert_eq!(pk.stride(), crate::kernel::plane_stride(l.n_c()));
+            for d in 0..l.d {
+                for m in 0..l.m {
+                    let plane = pk.plane(d, m);
+                    assert_eq!(plane.len(), pk.stride());
+                    for i in 0..l.n_c() {
+                        let bit = (plane[i / 64] >> (i % 64)) & 1;
+                        assert_eq!(bit == 1, l.plane(d, m, i) > 0, "d={d} m={m} i={i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_planes_padding_is_zero() {
+        let mut rng = Xoshiro256::new(11);
+        let net = synthetic_cnn_a(&mut rng, 2);
+        for l in &net.layers {
+            let pk = PackedPlanes::pack(l);
+            let n_c = l.n_c();
+            let words = n_c.div_ceil(64);
+            if n_c % 64 != 0 {
+                assert_eq!(pk.tail_mask(), (1u64 << (n_c % 64)) - 1);
+            } else {
+                assert_eq!(pk.tail_mask(), u64::MAX);
+            }
+            for d in 0..l.d {
+                for m in 0..l.m {
+                    let plane = pk.plane(d, m);
+                    assert_eq!(plane[words - 1] & !pk.tail_mask(), 0);
+                    for &w in &plane[words..] {
+                        assert_eq!(w, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_planes_reject_foreign_layers() {
+        let mut rng = Xoshiro256::new(12);
+        let net = synthetic_cnn_a(&mut rng, 2);
+        let pk = PackedPlanes::pack(&net.layers[0]);
+        assert!(!pk.matches(&net.layers[1]));
     }
 
     #[test]

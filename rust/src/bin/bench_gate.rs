@@ -35,6 +35,14 @@
 //!     for this machine class — CI uses this to seed the numeric
 //!     baseline the first time it runs on a runner class (the tracked
 //!     seed line carries no fps on purpose)
+//!
+//! bench_gate record-prekernel <fresh.json> <trajectory.jsonl> [label]
+//!     as `record-if-missing`, but the recorded fps is the scalar-kernel
+//!     A/B leg (`frames_per_sec_plan_scalar`) written under the gate
+//!     key with `"kernel": "scalar"` — CI runs this before
+//!     `record-best`, so the first armed run on a runner class lands
+//!     the pre-kernel floor and the packed kernel's record must then
+//!     beat it to replace it
 //! ```
 //!
 //! No JSON dependency: the bench's writer is in-repo, so a key scan is
@@ -88,6 +96,9 @@ fn gate(prev: f64, fresh: f64, threshold: f64) -> Result<String, String> {
 }
 
 const KEY: &str = "frames_per_sec_plan";
+/// The scalar-kernel leg of the bench's kernel A/B — the pre-kernel
+/// floor `record-prekernel` writes under [`KEY`].
+const SCALAR_KEY: &str = "frames_per_sec_plan_scalar";
 
 /// Host fps only compares like-for-like: records carry `host_threads` as
 /// a cheap machine-class fingerprint, and the gate refuses to compare a
@@ -125,30 +136,48 @@ fn has_class_record(trajectory: &str, fresh_threads: Option<f64>) -> bool {
     last_class_record(trajectory, fresh_threads).is_some()
 }
 
-/// Append the fresh record as one trajectory line.
-fn append_record(fresh: &str, traj_path: &str, label: &str) -> Result<String, String> {
+/// Build the one-line JSONL record for the trajectory ledger.  The fps
+/// value is read from `fps_key` in the fresh bench record but always
+/// written under the gate key ([`KEY`]), so a scalar pre-kernel floor
+/// gates later packed records like any other baseline; `kernel` names
+/// which dot-product kernel produced the recorded fps.
+fn record_line(fresh: &str, label: &str, fps_key: &str, kernel: &str) -> Result<String, String> {
     // keep the hand-rolled JSONL line well-formed for any label
     let label: String = label
         .chars()
         .filter(|c| *c != '"' && *c != '\\' && !c.is_control())
         .collect();
-    let fps = extract_f64(fresh, KEY)
-        .ok_or_else(|| format!("fresh record has no numeric {KEY:?}"))?;
+    let fps = extract_f64(fresh, fps_key)
+        .ok_or_else(|| format!("fresh record has no numeric {fps_key:?}"))?;
     let legacy = extract_f64(fresh, "frames_per_sec_legacy").unwrap_or(0.0);
     let speedup = extract_f64(fresh, "plan_speedup").unwrap_or(0.0);
     let threads = extract_f64(fresh, "host_threads").unwrap_or(0.0);
-    let line = format!(
+    let kernel_speedup = extract_f64(fresh, "kernel_speedup").unwrap_or(0.0);
+    Ok(format!(
         "{{\"bench\": \"sim_hotpath\", \"label\": \"{label}\", \
-         \"host_threads\": {threads}, \"{KEY}\": {fps:.2}, \
-         \"frames_per_sec_legacy\": {legacy:.2}, \"plan_speedup\": {speedup:.2}}}\n"
-    );
+         \"kernel\": \"{kernel}\", \"host_threads\": {threads}, \
+         \"{KEY}\": {fps:.2}, \"frames_per_sec_legacy\": {legacy:.2}, \
+         \"plan_speedup\": {speedup:.2}, \"kernel_speedup\": {kernel_speedup:.2}}}\n"
+    ))
+}
+
+/// Append the fresh record as one trajectory line.
+fn append_record(
+    fresh: &str,
+    traj_path: &str,
+    label: &str,
+    fps_key: &str,
+    kernel: &str,
+) -> Result<String, String> {
+    let line = record_line(fresh, label, fps_key, kernel)?;
+    let fps = extract_f64(&line, KEY).expect("record_line always writes the gate key");
     let mut traj = std::fs::read_to_string(traj_path).unwrap_or_default();
     if !traj.is_empty() && !traj.ends_with('\n') {
         traj.push('\n');
     }
     traj.push_str(&line);
     std::fs::write(traj_path, traj).map_err(|e| format!("write {traj_path}: {e}"))?;
-    Ok(format!("recorded {fps:.2} fps to {traj_path}"))
+    Ok(format!("recorded {fps:.2} fps ({kernel} kernel) to {traj_path}"))
 }
 
 fn run() -> Result<Outcome, String> {
@@ -203,12 +232,19 @@ fn run() -> Result<Outcome, String> {
             }
             gate(prev, fresh_fps, threshold).map(Outcome::Pass)
         }
-        "record" | "record-best" | "record-if-missing" => {
+        "record" | "record-best" | "record-if-missing" | "record-prekernel" => {
             let label = args.get(3).map(String::as_str).unwrap_or("");
             let fresh = std::fs::read_to_string(fresh_path)
                 .map_err(|e| format!("read {fresh_path}: {e}"))?;
-            let fps = extract_f64(&fresh, KEY)
-                .ok_or_else(|| format!("{fresh_path} has no numeric {KEY:?}"))?;
+            // the pre-kernel floor records the scalar A/B leg under the
+            // gate key; everything else records the product (packed) path
+            let (fps_key, kernel) = if cmd == "record-prekernel" {
+                (SCALAR_KEY, "scalar")
+            } else {
+                (KEY, "packed")
+            };
+            let fps = extract_f64(&fresh, fps_key)
+                .ok_or_else(|| format!("{fresh_path} has no numeric {fps_key:?}"))?;
             let traj = std::fs::read_to_string(traj_path).ok();
             let fresh_threads = extract_f64(&fresh, "host_threads");
             if cmd == "record-best" {
@@ -228,7 +264,7 @@ fn run() -> Result<Outcome, String> {
                     }
                 }
             }
-            if cmd == "record-if-missing" {
+            if cmd == "record-if-missing" || cmd == "record-prekernel" {
                 if traj
                     .as_deref()
                     .is_some_and(|t| has_class_record(t, fresh_threads))
@@ -239,10 +275,11 @@ fn run() -> Result<Outcome, String> {
                     )));
                 }
             }
-            append_record(&fresh, traj_path, label).map(Outcome::Pass)
+            append_record(&fresh, traj_path, label, fps_key, kernel).map(Outcome::Pass)
         }
         other => Err(format!(
-            "unknown command {other:?} (use check|record|record-best|record-if-missing)"
+            "unknown command {other:?} \
+             (use check|record|record-best|record-if-missing|record-prekernel)"
         )),
     }
 }
@@ -333,6 +370,34 @@ mod tests {
         assert_eq!(prev, 90.0);
         assert!(gate(prev, 75.0, 0.2).is_ok());
         assert!(gate(prev, 71.9, 0.2).is_err());
+    }
+
+    #[test]
+    fn record_line_reads_its_key_and_stamps_the_kernel() {
+        let fresh = r#"{"host_threads": 8, "frames_per_sec_legacy": 12.00, "frames_per_sec_plan": 100.00, "plan_speedup": 8.00, "frames_per_sec_plan_scalar": 40.00, "kernel_speedup": 2.50}"#;
+        let packed = record_line(fresh, "pr6", KEY, "packed").unwrap();
+        assert_eq!(extract_f64(&packed, KEY), Some(100.0));
+        assert_eq!(extract_f64(&packed, "kernel_speedup"), Some(2.5));
+        assert!(packed.contains("\"kernel\": \"packed\""));
+        // the scalar floor is written under the gate key…
+        let scalar = record_line(fresh, "pre", SCALAR_KEY, "scalar").unwrap();
+        assert_eq!(extract_f64(&scalar, KEY), Some(40.0));
+        assert!(scalar.contains("\"kernel\": \"scalar\""));
+        // …so later packed records gate against it like any baseline
+        let prev = last_class_record(&scalar, Some(8.0))
+            .and_then(|l| extract_f64(l, KEY))
+            .unwrap();
+        assert!(gate(prev, 100.0, 0.2).is_ok());
+        assert!(gate(prev, 31.9, 0.2).is_err());
+    }
+
+    #[test]
+    fn record_line_requires_its_fps_key() {
+        // a pre-A/B bench record has no scalar leg: record-prekernel
+        // must refuse rather than fabricate a floor
+        let old = r#"{"host_threads": 2, "frames_per_sec_plan": 50.00}"#;
+        assert!(record_line(old, "x", SCALAR_KEY, "scalar").is_err());
+        assert!(record_line(old, "x", KEY, "packed").is_ok());
     }
 
     #[test]

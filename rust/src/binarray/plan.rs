@@ -18,7 +18,7 @@
 use std::ops::Range;
 use std::sync::Arc;
 
-use crate::artifacts::{LayerKind, QuantNetwork};
+use crate::artifacts::{LayerKind, PackedPlanes, QuantNetwork};
 use crate::isa::Program;
 use crate::tensor::Shape;
 
@@ -99,6 +99,12 @@ pub struct ExecutionPlan {
     pub input_shape: Shape,
     pub fbuf_words: usize,
     pub max_m: usize,
+    /// Bit-packed sign planes, one entry per network layer in layer
+    /// order — the weight view the popcount kernel ([`crate::kernel`])
+    /// reads on the execute path.  Packed once here and shared by every
+    /// clone of the plan; the scalar planes stay on the layer as the
+    /// golden reference.
+    pub packed: Arc<Vec<PackedPlanes>>,
     modes: Vec<ModePlan>,
 }
 
@@ -112,11 +118,13 @@ impl ExecutionPlan {
         for m in 1..=max_m {
             modes.push(mode_plan(cfg, net, prog, Some(m)));
         }
+        let packed: Vec<PackedPlanes> = net.layers.iter().map(PackedPlanes::pack).collect();
         Self {
             cfg,
             input_shape: Shape::new(dims.1, dims.0, dims.2),
             fbuf_words: prog.fbuf_words,
             max_m,
+            packed: Arc::new(packed),
             modes,
         }
     }
@@ -462,6 +470,21 @@ mod tests {
         for lp in &plan.mode(None).layers {
             assert_eq!(lp.m_run, net.layers[lp.layer].m);
         }
+    }
+
+    #[test]
+    fn plan_packs_every_layer() {
+        let mut rng = Xoshiro256::new(2);
+        let net = cnn_a_quant(&mut rng, 2);
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(ArrayConfig::new(1, 8, 2), &net, &prog);
+        assert_eq!(plan.packed.len(), net.layers.len());
+        for (pk, layer) in plan.packed.iter().zip(&net.layers) {
+            assert!(pk.matches(layer));
+        }
+        // clones share the packed planes instead of re-packing
+        let clone = plan.clone();
+        assert!(Arc::ptr_eq(&plan.packed, &clone.packed));
     }
 
     #[test]

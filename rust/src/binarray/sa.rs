@@ -18,11 +18,19 @@
 //! claims on the pong half (so one layer's work units can run on parallel
 //! host threads), and per-window im2col staging lives in a reusable
 //! [`TileScratch`] arena instead of per-call allocations.
+//!
+//! The inner dot products run on one of two host kernels selected by
+//! [`SaEngine::kernel`]: the [`crate::golden`] scalar walk (the oracle)
+//! or the bit-packed popcount kernel ([`crate::kernel`]) over the
+//! [`PackedPlanes`] view the execution plan builds per layer.  The choice
+//! never changes logits or simulated cycles — both kernels are
+//! bit-identical by construction and by property test.
 
 use std::ops::Range;
 
-use crate::artifacts::{LayerKind, QuantLayer};
+use crate::artifacts::{LayerKind, PackedPlanes, QuantLayer};
 use crate::fixp;
+use crate::kernel::{self, BitPatch, KernelKind};
 use crate::tensor::{FeatureMap, FeatureMapTileMut, FeatureMapTiles, FeatureMapView, Shape};
 
 use super::agu::Agu;
@@ -65,12 +73,14 @@ impl SimStats {
     }
 }
 
-/// Reusable per-executor scratch: the im2col patch and the per-pass value
-/// staging buffer.  One arena per host worker thread; buffers grow to the
-/// layer maximum once and are reused for every window of every frame.
+/// Reusable per-executor scratch: the im2col patch, its bit-sliced twin
+/// for the packed kernel, and the per-pass value staging buffer.  One
+/// arena per host worker thread; buffers grow to the layer maximum once
+/// and are reused for every window of every frame.
 #[derive(Clone, Debug, Default)]
 pub struct TileScratch {
     patch: Vec<i8>,
+    bits: BitPatch,
     vals: Vec<i8>,
 }
 
@@ -79,11 +89,42 @@ pub struct TileScratch {
 pub struct SaEngine {
     pub d_arch: usize,
     pub m_arch: usize,
+    /// Host dot-product kernel — a simulation-speed knob only; logits and
+    /// cycle accounting are invariant under the choice.
+    pub kernel: KernelKind,
 }
 
 impl SaEngine {
+    /// Engine with the process-default kernel (`BINARRAY_KERNEL`, else
+    /// packed).
     pub fn new(d_arch: usize, m_arch: usize) -> Self {
-        Self { d_arch, m_arch }
+        Self::with_kernel(d_arch, m_arch, KernelKind::from_env())
+    }
+
+    /// Engine with an explicit kernel choice, so one process can race
+    /// both kernels (benches, exactness tests,
+    /// [`crate::binarray::BinArraySystem::set_kernel`]).
+    pub fn with_kernel(d_arch: usize, m_arch: usize, kernel: KernelKind) -> Self {
+        Self { d_arch, m_arch, kernel }
+    }
+
+    /// The packed-plane view the dot products will actually use: the
+    /// caller's view when this engine runs the packed kernel, `None`
+    /// (→ golden scalar walk) otherwise.
+    fn active_packed<'a>(
+        &self,
+        layer: &QuantLayer,
+        packed: Option<&'a PackedPlanes>,
+    ) -> Option<&'a PackedPlanes> {
+        match self.kernel {
+            KernelKind::Packed => {
+                if let Some(pk) = packed {
+                    debug_assert!(pk.matches(layer), "packed planes do not match layer");
+                }
+                packed
+            }
+            KernelKind::Scalar => None,
+        }
     }
 
     /// Clock cost of streaming one window: `max(N_c, D_arch)` — the DSP
@@ -105,6 +146,7 @@ impl SaEngine {
     pub fn conv_tile(
         &self,
         layer: &QuantLayer,
+        packed: Option<&PackedPlanes>,
         input: &FeatureMapView<'_>,
         pooled_rows: Range<usize>,
         d_range: Range<usize>,
@@ -127,6 +169,7 @@ impl SaEngine {
         let m_run = m_run.min(layer.m).max(1);
         let m_groups = seq_m;
         let d_passes = d_range.len().div_ceil(self.d_arch);
+        let packed = self.active_packed(layer, packed);
 
         // conv rows covered by this tile of pooled rows
         let conv_row0 = pooled_rows.start * np;
@@ -168,6 +211,11 @@ impl SaEngine {
                 layer.kw,
                 &mut scratch.patch,
             );
+            // Bit-slice the window once; the cost amortizes over every
+            // channel pass and level group that re-reads it below.
+            if packed.is_some() {
+                scratch.bits.pack(&scratch.patch);
+            }
             for (dp, amu) in amus.iter_mut().enumerate() {
                 let d0 = d_range.start + dp * self.d_arch;
                 let d1 = (d0 + self.d_arch).min(d_range.end);
@@ -179,7 +227,10 @@ impl SaEngine {
                 stats.dsp_ops += (chans * m_run) as u64;
 
                 for (k, d) in (d0..d1).enumerate() {
-                    let acc = crate::golden::binary_dot(layer, d, &scratch.patch, m_run);
+                    let acc = match packed {
+                        Some(pk) => kernel::binary_dot_packed(layer, pk, d, &scratch.bits, m_run),
+                        None => crate::golden::binary_dot(layer, d, &scratch.patch, m_run),
+                    };
                     scratch.vals[k] = fixp::qs(acc, layer.shift);
                 }
                 if layer.relu || np > 1 {
@@ -206,6 +257,7 @@ impl SaEngine {
     pub fn dense_tile(
         &self,
         layer: &QuantLayer,
+        packed: Option<&PackedPlanes>,
         input: &[i8],
         d_range: Range<usize>,
         m_run: usize,
@@ -220,6 +272,11 @@ impl SaEngine {
         let m_run = m_run.min(layer.m).max(1);
         let m_groups = seq_m;
         let d_passes = d_range.len().div_ceil(self.d_arch);
+        let packed = self.active_packed(layer, packed);
+        // One bit-slice pass covers every channel pass of the layer.
+        if packed.is_some() {
+            scratch.bits.pack(input);
+        }
         scratch.vals.resize(self.d_arch, 0);
 
         for dp in 0..d_passes {
@@ -231,10 +288,11 @@ impl SaEngine {
             stats.pe_ops += (n_c * (d1 - d0) * m_run) as u64;
             stats.dsp_ops += ((d1 - d0) * m_run) as u64;
             for (k, d) in (d0..d1).enumerate() {
-                let mut v = fixp::qs(
-                    crate::golden::binary_dot(layer, d, input, m_run),
-                    layer.shift,
-                );
+                let acc = match packed {
+                    Some(pk) => kernel::binary_dot_packed(layer, pk, d, &scratch.bits, m_run),
+                    None => crate::golden::binary_dot(layer, d, input, m_run),
+                };
+                let mut v = fixp::qs(acc, layer.shift);
                 if layer.relu {
                     v = v.max(0);
                 }
@@ -254,6 +312,7 @@ impl SaEngine {
     pub fn run_unit(
         &self,
         layer: &QuantLayer,
+        packed: Option<&PackedPlanes>,
         input: FeatureMapView<'_>,
         rows: Range<usize>,
         d: Range<usize>,
@@ -265,10 +324,10 @@ impl SaEngine {
     ) {
         match layer.kind {
             LayerKind::Conv => {
-                self.conv_tile(layer, &input, rows, d, m_run, seq_m, out, scratch, stats)
+                self.conv_tile(layer, packed, &input, rows, d, m_run, seq_m, out, scratch, stats)
             }
             LayerKind::Dense => {
-                self.dense_tile(layer, input.data, d, m_run, seq_m, out, scratch, stats)
+                self.dense_tile(layer, packed, input.data, d, m_run, seq_m, out, scratch, stats)
             }
         }
     }
@@ -298,8 +357,15 @@ impl SaEngine {
             .claim_all(&[(0..shape.h, 0..shape.c)])
             .pop()
             .expect("one claim");
+        // Standalone entry: pack on the fly when the packed kernel is
+        // selected (the planned path reuses `ExecutionPlan::packed`).
+        let packed = match self.kernel {
+            KernelKind::Packed => Some(PackedPlanes::pack(layer)),
+            KernelKind::Scalar => None,
+        };
         self.conv_tile(
             layer,
+            packed.as_ref(),
             &input.view(),
             0..shape.h,
             0..layer.d,
@@ -397,7 +463,7 @@ mod tests {
                 .claim_all(&[(0..1, 0..340)])
                 .pop()
                 .unwrap();
-            sa.dense_tile(layer, &input, 0..340, 2, 1, &mut tile, &mut scratch, &mut stats);
+            sa.dense_tile(layer, None, &input, 0..340, 2, 1, &mut tile, &mut scratch, &mut stats);
         }
         let want = golden::dense_layer(layer, &input, 2);
         assert_eq!(out, want);
@@ -427,12 +493,65 @@ mod tests {
             let mut ts = FeatureMapTiles::new(shape, &mut out.data)
                 .claim_all(&[(0..10, 0..5), (10..21, 0..5)]);
             let view = input.view();
-            sa.conv_tile(layer, &view, 0..10, 0..5, 2, 1, &mut ts[0], &mut scratch, &mut s1);
-            sa.conv_tile(layer, &view, 10..21, 0..5, 2, 1, &mut ts[1], &mut scratch, &mut s2);
+            sa.conv_tile(layer, None, &view, 0..10, 0..5, 2, 1, &mut ts[0], &mut scratch, &mut s1);
+            sa.conv_tile(layer, None, &view, 10..21, 0..5, 2, 1, &mut ts[1], &mut scratch, &mut s2);
         }
         assert_eq!(out, want);
         // tiles split the work
         assert!(s1.cycles < s2.cycles);
+    }
+
+    #[test]
+    fn kernel_choice_is_invisible_in_outputs_and_cycles() {
+        let mut rng = Xoshiro256::new(7);
+        let net = cnn_a_quant(&mut rng, 4);
+        let input = FeatureMap::from_vec(
+            Shape::new(48, 48, 3),
+            prop::i8_vec(&mut rng, 48 * 48 * 3),
+        );
+        let layer = &net.layers[0];
+        let scalar = SaEngine::with_kernel(8, 2, KernelKind::Scalar);
+        let packed = SaEngine::with_kernel(8, 2, KernelKind::Packed);
+        for m_run in [1, 2, 4] {
+            let (a, stats_a) = scalar.conv_layer(layer, &input, m_run);
+            let (b, stats_b) = packed.conv_layer(layer, &input, m_run);
+            assert_eq!(a, b, "m_run {m_run}");
+            assert_eq!(stats_a, stats_b, "m_run {m_run}");
+        }
+    }
+
+    #[test]
+    fn packed_dense_tile_matches_scalar_walk() {
+        let mut rng = Xoshiro256::new(8);
+        let net = cnn_a_quant(&mut rng, 2);
+        let layer = &net.layers[2];
+        let input = prop::i8_vec(&mut rng, 1350);
+        let pk = PackedPlanes::pack(layer);
+        let sa = SaEngine::with_kernel(8, 2, KernelKind::Packed);
+        let shape = Shape::new(1, 1, 340);
+        let mut scalar_out = vec![0i8; 340];
+        let mut packed_out = vec![0i8; 340];
+        for (out, packed) in [(&mut scalar_out, None), (&mut packed_out, Some(&pk))] {
+            let mut stats = SimStats::default();
+            let mut scratch = TileScratch::default();
+            let mut tile = FeatureMapTiles::new(shape, out)
+                .claim_all(&[(0..1, 0..340)])
+                .pop()
+                .unwrap();
+            sa.dense_tile(
+                layer,
+                packed,
+                &input,
+                0..340,
+                2,
+                1,
+                &mut tile,
+                &mut scratch,
+                &mut stats,
+            );
+        }
+        assert_eq!(scalar_out, golden::dense_layer(layer, &input, 2));
+        assert_eq!(scalar_out, packed_out);
     }
 
     #[test]

@@ -32,8 +32,9 @@ use anyhow::{bail, Result};
 
 use std::ops::Range;
 
-use crate::artifacts::{QuantLayer, QuantNetwork};
+use crate::artifacts::{PackedPlanes, QuantLayer, QuantNetwork};
 use crate::isa::{compile_network, Program};
+use crate::kernel::KernelKind;
 use crate::tensor::{extract_tile, FeatureMapTileMut, FeatureMapTiles, FeatureMapView, Shape};
 
 use super::cu::ControlUnit;
@@ -81,13 +82,13 @@ pub struct FrameExecutor {
 }
 
 impl FrameExecutor {
-    fn new(cfg: ArrayConfig, prog: &Program, scratch_width: usize) -> Self {
+    fn new(cfg: ArrayConfig, prog: &Program, scratch_width: usize, kernel: KernelKind) -> Self {
         let mut cu = ControlUnit::new();
         // Park at the entry HLT so every frame — first included, on any
         // lane — has the identical steady-state instruction-cycle cost.
         cu.park_at(prog.entry);
         Self {
-            engine: SaEngine::new(cfg.d_arch, cfg.m_arch),
+            engine: SaEngine::with_kernel(cfg.d_arch, cfg.m_arch, kernel),
             cu,
             fbuf: vec![0; prog.fbuf_words],
             scratch: vec![TileScratch::default(); scratch_width.max(1)],
@@ -99,11 +100,13 @@ impl FrameExecutor {
     /// precomputed [`LayerPlan`], read the logits out.  `intra_threads`
     /// is the scoped-thread width for a layer's logical-SA groups (1 =
     /// fully sequential).
+    #[allow(clippy::too_many_arguments)]
     fn run_frame(
         &mut self,
         net: &QuantNetwork,
         prog: &Program,
         mode: &ModePlan,
+        packed: &[PackedPlanes],
         n_sa: usize,
         image: &[i8],
         intra_threads: usize,
@@ -140,6 +143,7 @@ impl FrameExecutor {
                 engine,
                 lp,
                 layer,
+                &packed[li],
                 fbuf,
                 scratch,
                 host_threads,
@@ -171,6 +175,7 @@ fn exec_layer(
     engine: SaEngine,
     lp: &LayerPlan,
     layer: &QuantLayer,
+    packed: &PackedPlanes,
     fbuf: &mut [i8],
     scratch: &mut [TileScratch],
     host_threads: usize,
@@ -200,7 +205,7 @@ fn exec_layer(
     // (`host_par` skips spawning entirely for layers too small to pay it)
     let n_workers = if lp.host_par { host_threads } else { 1 };
     let mut wall = 0u64;
-    for (g, s) in run_groups(engine, lp, layer, in_view, groups, scratch, n_workers) {
+    for (g, s) in run_groups(engine, lp, layer, packed, in_view, groups, scratch, n_workers) {
         sa_stats[g % n_sa].add(s);
         wall = wall.max(s.cycles);
     }
@@ -239,10 +244,12 @@ fn claim_groups<'t, 'u>(
 /// both walks parallelize over the same axis, a card's logical SAs.
 /// (The `scratch.len()` bound keeps the worker/arena zip total — an
 /// arena per spawned worker is a structural invariant.)
+#[allow(clippy::too_many_arguments)]
 fn run_groups(
     engine: SaEngine,
     lp: &LayerPlan,
     layer: &QuantLayer,
+    packed: &PackedPlanes,
     in_view: FeatureMapView<'_>,
     groups: Vec<(usize, Vec<(&WorkUnit, FeatureMapTileMut<'_>)>)>,
     scratch: &mut [TileScratch],
@@ -253,7 +260,9 @@ fn run_groups(
         let scr = &mut scratch[0];
         return groups
             .into_iter()
-            .map(|(g, mut items)| (g, run_units(engine, lp, layer, in_view, &mut items, scr)))
+            .map(|(g, mut items)| {
+                (g, run_units(engine, lp, layer, packed, in_view, &mut items, scr))
+            })
             .collect();
     }
     // Round-robin the groups over the host workers; each worker owns its
@@ -273,7 +282,7 @@ fn run_groups(
                     chunk
                         .into_iter()
                         .map(|(g, mut items)| {
-                            (g, run_units(engine, lp, layer, in_view, &mut items, scr))
+                            (g, run_units(engine, lp, layer, packed, in_view, &mut items, scr))
                         })
                         .collect::<Vec<(usize, SimStats)>>()
                 })
@@ -292,6 +301,7 @@ fn run_units(
     engine: SaEngine,
     lp: &LayerPlan,
     layer: &QuantLayer,
+    packed: &PackedPlanes,
     input: FeatureMapView<'_>,
     items: &mut [(&WorkUnit, FeatureMapTileMut<'_>)],
     scratch: &mut TileScratch,
@@ -300,6 +310,7 @@ fn run_units(
     for (u, tile) in items.iter_mut() {
         engine.run_unit(
             layer,
+            Some(packed),
             input,
             u.rows.clone(),
             u.d.clone(),
@@ -346,6 +357,9 @@ pub struct BinArraySystem {
     /// frames over up to `host_threads` lanes, each sequential inside.
     execs: Vec<FrameExecutor>,
     host_threads: usize,
+    /// Host dot-product kernel used by every lane's engine (see
+    /// [`crate::kernel`]).
+    kernel: KernelKind,
     /// Input dims inferred by the compiler.
     pub input_shape: Shape,
     /// Runtime accuracy mode: number of binary levels to evaluate
@@ -374,10 +388,12 @@ impl BinArraySystem {
         let host_threads = host_threads.max(1);
         let prog = compile_network(&net);
         let plan = ExecutionPlan::new(cfg, &net, &prog);
+        let kernel = KernelKind::from_env();
         Ok(Self {
             cfg,
-            execs: vec![FrameExecutor::new(cfg, &prog, host_threads)],
+            execs: vec![FrameExecutor::new(cfg, &prog, host_threads, kernel)],
             host_threads,
+            kernel,
             input_shape: plan.input_shape,
             plan,
             prog,
@@ -390,6 +406,17 @@ impl BinArraySystem {
     /// simulated cycles and logits are unaffected).
     pub fn set_host_threads(&mut self, n: usize) {
         self.host_threads = n.max(1);
+    }
+
+    /// Select the host dot-product kernel for every execution lane
+    /// (simulation-speed knob only — simulated cycles and logits are
+    /// unaffected; see [`crate::kernel`]).  Defaults to the
+    /// `BINARRAY_KERNEL` process override, else the packed kernel.
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
+        for exec in &mut self.execs {
+            exec.engine.kernel = kernel;
+        }
     }
 
     /// Run one frame: load `image` (int8, row-major HWC), execute the CNN
@@ -411,6 +438,7 @@ impl BinArraySystem {
     /// simulated cycle accounting is per frame by construction.
     pub fn run_frames(&mut self, images: &[&[i8]]) -> Result<Vec<(Vec<i8>, FrameStats)>> {
         let mode = self.plan.mode(self.m_run);
+        let packed = self.plan.packed.as_slice();
         let lanes = self.host_threads.min(images.len());
         if lanes <= 1 {
             let exec = &mut self.execs[0];
@@ -420,6 +448,7 @@ impl BinArraySystem {
                     &self.net,
                     &self.prog,
                     mode,
+                    packed,
                     self.cfg.n_sa,
                     image,
                     self.host_threads,
@@ -429,7 +458,7 @@ impl BinArraySystem {
         }
 
         while self.execs.len() < lanes {
-            self.execs.push(FrameExecutor::new(self.cfg, &self.prog, 1));
+            self.execs.push(FrameExecutor::new(self.cfg, &self.prog, 1, self.kernel));
         }
         let net = &self.net;
         let prog = &self.prog;
@@ -447,7 +476,7 @@ impl BinArraySystem {
                         for (i, &image) in
                             images.iter().enumerate().skip(lane).step_by(lanes)
                         {
-                            res.push((i, exec.run_frame(net, prog, mode, n_sa, image, 1)));
+                            res.push((i, exec.run_frame(net, prog, mode, packed, n_sa, image, 1)));
                         }
                         res
                     })
@@ -498,6 +527,7 @@ impl BinArraySystem {
             bail!("shard input len {} != {}", input.len(), lp.in_len);
         }
         let layer = &self.net.layers[lp.layer];
+        let packed = &self.plan.packed[lp.layer];
         let host_threads = self.host_threads;
         let exec = &mut self.execs[0];
         let engine = exec.engine;
@@ -513,8 +543,16 @@ impl BinArraySystem {
             // Same intra-card threading as the unsharded layer walk: the
             // card's logical-SA groups spread over the host pool.
             let n_workers = if lp.host_par { host_threads } else { 1 };
-            let results =
-                run_groups(engine, lp, layer, in_view, groups, &mut exec.scratch, n_workers);
+            let results = run_groups(
+                engine,
+                lp,
+                layer,
+                packed,
+                in_view,
+                groups,
+                &mut exec.scratch,
+                n_workers,
+            );
             for (_, s) in results {
                 run.wall = run.wall.max(s.cycles);
                 run.stats.add(s);

@@ -37,7 +37,10 @@ pub fn binary_dot(layer: &QuantLayer, d: usize, x: &[i8], m_run: usize) -> i32 {
 /// autovectorize: 64-element chunks accumulate in i16 lanes (|chunk sum| ≤
 /// 64·128 = 8192 < 2^15, so i16 never overflows), folded into i32.
 /// ~2.4× faster than the scalar widening loop on the simulator hot path
-/// (EXPERIMENTS.md §Perf).
+/// (EXPERIMENTS.md §Perf).  This stays the semantic reference: the
+/// product path's bit-packed popcount twin lives in [`crate::kernel`]
+/// and is raced against this function bit-for-bit in
+/// `tests/kernel_exactness.rs`.
 #[inline]
 pub fn signed_dot(plane: &[i8], x: &[i8]) -> i32 {
     debug_assert_eq!(plane.len(), x.len());

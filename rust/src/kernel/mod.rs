@@ -1,0 +1,546 @@
+//! Bit-packed popcount kernels — the host datapath that makes the binary
+//! promise pay.
+//!
+//! The paper's premise is that binary-approximated weights turn
+//! convolutions into multiply-free sign-accumulates, and XNORBIN/FINN
+//! build exactly that datapath in silicon: packed sign bits, AND/XNOR and
+//! popcount reduction.  This module is the host-simulator version of that
+//! datapath.  Weights are ±1 signs packed one bit per weight
+//! ([`crate::artifacts::PackedPlanes`], built once per layer at plan
+//! construction); activations are `i8`, so the kernel uses the bit-serial
+//! identity over the activation's 8 two's-complement bit-slices.
+//!
+//! ## Formulation
+//!
+//! Pack the activation patch `x` into 8 bit-slices `slice_k` (bit `i` of
+//! `slice_k` = bit `k` of `x_i`; slice 7 is the sign bit and carries
+//! weight −2⁷).  With `plane` the mask of +1 weights, `S = Σ x_i`, and
+//!
+//! ```text
+//! P = Σ_{k=0}^{6} 2^k · popcount(plane & slice_k)
+//!     − 128 · popcount(plane & slice_7)     // = Σ_{w_i = +1} x_i
+//! ```
+//!
+//! the signed dot product is exactly `Σ w_i·x_i = 2P − S`.  Each of the
+//! layer's d×m plane dots then costs 8 AND+popcount ops per 64 weights,
+//! while the patch pack and `S` are paid once per window and amortize
+//! over every channel pass and level group that re-reads it.  Zero-padded
+//! tail bits (both sides are padded with zeros past the logical length)
+//! contribute nothing to any popcount, so the identity is exact in `i32`
+//! with no edge handling on the dot path.
+//!
+//! ## Dispatch
+//!
+//! [`plane_dot`] picks a backend once per process via runtime feature
+//! detection: AVX2 (nibble-LUT popcount + `movemask` packing), bare
+//! `popcnt`, NEON (`vcntq_u8`), or the portable fallback.  The
+//! `BINARRAY_KERNEL` env var overrides the default: `scalar` routes the
+//! engines back to the [`crate::golden`] oracle walk, `portable` keeps
+//! the packed kernel but disables SIMD dispatch, `packed`/`auto` (and
+//! unset) select the packed kernel with full dispatch.  Logits and
+//! simulated cycles are invariant under every choice — the kernel is a
+//! host-speed knob only, property-tested bit-identical to
+//! `golden::{signed_dot, binary_dot}` (`tests/kernel_exactness.rs`).
+
+use std::sync::OnceLock;
+
+use crate::artifacts::{PackedPlanes, QuantLayer};
+use crate::fixp;
+
+/// Planes and bit-slices are padded to a multiple of this many `u64`
+/// words (256 bits) so SIMD dot paths need no tail loop.
+pub const LANE_WORDS: usize = 4;
+
+/// Contribution of bit-slice `k` to `P`: two's complement gives bit 7
+/// weight −2⁷.
+const SLICE_WEIGHT: [i32; 8] = [1, 2, 4, 8, 16, 32, 64, -128];
+
+/// Packed words per plane for a dot length of `n_c` elements:
+/// `ceil(n_c / 64)` rounded up to [`LANE_WORDS`].  Shared by the weight
+/// packer and the activation slicer so their strides always agree.
+pub fn plane_stride(n_c: usize) -> usize {
+    n_c.div_ceil(64).div_ceil(LANE_WORDS) * LANE_WORDS
+}
+
+/// Which host dot-product kernel the engines use.  Selection never
+/// changes logits or simulated cycles — both paths are bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Per-element `i8` walk through [`crate::golden::binary_dot`] (the
+    /// oracle path, kept as the reference and the `BINARRAY_KERNEL=scalar`
+    /// CI leg).
+    Scalar,
+    /// Bit-packed popcount kernel over [`PackedPlanes`] (this module).
+    Packed,
+}
+
+impl KernelKind {
+    /// Parse a `BINARRAY_KERNEL` value.  `scalar` forces the oracle walk;
+    /// `packed`/`auto`/`portable` select the packed kernel (`portable`
+    /// additionally pins the [`plane_dot`] backend to the non-SIMD path).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Self::Scalar),
+            "packed" | "auto" | "portable" => Some(Self::Packed),
+            _ => None,
+        }
+    }
+
+    /// Process-wide default from the `BINARRAY_KERNEL` env var, read once
+    /// and cached.  Unset or unrecognized values default to `Packed` (an
+    /// unrecognized value also warns on stderr).
+    pub fn from_env() -> Self {
+        static KIND: OnceLock<KernelKind> = OnceLock::new();
+        *KIND.get_or_init(|| {
+            let Ok(v) = std::env::var("BINARRAY_KERNEL") else {
+                return KernelKind::Packed;
+            };
+            KernelKind::parse(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "BINARRAY_KERNEL={v:?} unrecognized (scalar|packed|portable); using packed"
+                );
+                KernelKind::Packed
+            })
+        })
+    }
+}
+
+/// The SIMD backend behind [`plane_dot`], detected once per process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    Portable,
+    #[cfg(target_arch = "x86_64")]
+    Popcnt,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+#[allow(unreachable_code)] // per-arch early returns leave dead tails on some targets
+fn detect() -> Backend {
+    if let Ok(v) = std::env::var("BINARRAY_KERNEL") {
+        if v.trim().eq_ignore_ascii_case("portable") {
+            return Backend::Portable;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+        if is_x86_feature_detected!("popcnt") {
+            return Backend::Popcnt;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Backend::Neon;
+    }
+    Backend::Portable
+}
+
+fn backend() -> Backend {
+    static BACKEND: OnceLock<Backend> = OnceLock::new();
+    *BACKEND.get_or_init(detect)
+}
+
+/// Name of the detected [`plane_dot`] backend (for bench/diagnostic
+/// output): `"portable"`, `"popcnt"`, `"avx2"` or `"neon"`.
+pub fn backend_name() -> &'static str {
+    match backend() {
+        Backend::Portable => "portable",
+        #[cfg(target_arch = "x86_64")]
+        Backend::Popcnt => "popcnt",
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => "avx2",
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => "neon",
+    }
+}
+
+/// An activation patch packed into 8 two's-complement bit-slices, plus
+/// its element sum `S` — everything [`plane_dot`] needs besides the
+/// weight plane.  Reused across windows via [`BitPatch::pack`] (it lives
+/// in the engine's `TileScratch`), so packing allocates only on growth.
+#[derive(Clone, Debug, Default)]
+pub struct BitPatch {
+    /// Slice-major: slice `k` occupies `slices[k * stride..(k+1) * stride]`.
+    slices: Vec<u64>,
+    stride: usize,
+    len: usize,
+    sum: i32,
+}
+
+impl BitPatch {
+    /// Repack from `x`, zero-padding every slice to [`plane_stride`].
+    pub fn pack(&mut self, x: &[i8]) {
+        self.len = x.len();
+        self.sum = x.iter().map(|&v| i32::from(v)).sum();
+        self.stride = plane_stride(x.len());
+        self.slices.clear();
+        self.slices.resize(8 * self.stride, 0);
+        if self.stride == 0 {
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if backend() == Backend::Avx2 {
+            unsafe { x86::pack_slices_avx2(x, self.stride, &mut self.slices) };
+            pack_tail_portable(x, self.stride, &mut self.slices);
+            return;
+        }
+        pack_full_portable(x, self.stride, &mut self.slices);
+        pack_tail_portable(x, self.stride, &mut self.slices);
+    }
+
+    /// Number of packed activation elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Words per slice (matches [`plane_stride`] of [`Self::len`]).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// `S = Σ x_i` of the packed elements.
+    pub fn sum(&self) -> i32 {
+        self.sum
+    }
+}
+
+/// Pack all full 64-element groups of `x` via the in-register 8×8 bit
+/// transpose.
+fn pack_full_portable(x: &[i8], stride: usize, slices: &mut [u64]) {
+    for (w, chunk) in x.chunks_exact(64).enumerate() {
+        let group = pack_group64(chunk.try_into().expect("64-byte chunk"));
+        for (k, &g) in group.iter().enumerate() {
+            slices[k * stride + w] = g;
+        }
+    }
+}
+
+/// Pack the trailing partial group (if any) through a zeroed staging
+/// buffer, so padding bits are guaranteed zero.
+fn pack_tail_portable(x: &[i8], stride: usize, slices: &mut [u64]) {
+    let full = x.len() / 64;
+    let rem = x.len() % 64;
+    if rem == 0 {
+        return;
+    }
+    let mut buf = [0i8; 64];
+    buf[..rem].copy_from_slice(&x[full * 64..]);
+    let group = pack_group64(&buf);
+    for (k, &g) in group.iter().enumerate() {
+        slices[k * stride + full] = g;
+    }
+}
+
+/// Bit-slice one 64-element group: returns `out[k]` = bit `k` of each of
+/// the 64 bytes, gathered into one `u64` (element `i` → bit `i`).
+fn pack_group64(chunk: &[i8; 64]) -> [u64; 8] {
+    let mut out = [0u64; 8];
+    for g in 0..8 {
+        let mut bytes = [0u8; 8];
+        for (i, b) in bytes.iter_mut().enumerate() {
+            *b = chunk[g * 8 + i] as u8;
+        }
+        let t = transpose8(u64::from_le_bytes(bytes));
+        // After the transpose, byte k of `t` holds slice-k bits for these
+        // 8 elements.
+        for (k, o) in out.iter_mut().enumerate() {
+            *o |= ((t >> (8 * k)) & 0xFF) << (8 * g);
+        }
+    }
+    out
+}
+
+/// 8×8 bit-matrix transpose within a `u64` (Hacker's Delight 7-3): bit
+/// `(8r + c)` of the input lands at bit `(8c + r)` of the output.
+fn transpose8(mut x: u64) -> u64 {
+    let mut t = (x ^ (x >> 7)) & 0x00AA_00AA_00AA_00AA;
+    x ^= t ^ (t << 7);
+    t = (x ^ (x >> 14)) & 0x0000_CCCC_0000_CCCC;
+    x ^= t ^ (t << 14);
+    t = (x ^ (x >> 28)) & 0x0000_0000_F0F0_F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
+/// `Σ w_i·x_i` with `w ∈ {±1}` given the packed +1 mask and the sliced
+/// patch — dispatches to the detected SIMD backend.  `plane` must be
+/// exactly `patch.stride()` words ([`PackedPlanes::plane`] guarantees
+/// this when both sides were packed for the same length).
+#[inline]
+pub fn plane_dot(plane: &[u64], patch: &BitPatch) -> i32 {
+    match backend() {
+        Backend::Portable => plane_dot_generic(plane, patch),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Popcnt => unsafe { x86::plane_dot_popcnt(plane, patch) },
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { x86::plane_dot_avx2(plane, patch) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { arm::plane_dot_neon(plane, patch) },
+    }
+}
+
+/// [`plane_dot`] pinned to the portable path regardless of the detected
+/// backend — lets tests race the fallback against the SIMD dispatch.
+pub fn plane_dot_portable(plane: &[u64], patch: &BitPatch) -> i32 {
+    plane_dot_generic(plane, patch)
+}
+
+/// The 2P − S identity over `count_ones` — the portable kernel body,
+/// also the body the `popcnt`-featured wrapper recompiles with hardware
+/// popcount enabled.
+#[inline(always)]
+fn plane_dot_generic(plane: &[u64], patch: &BitPatch) -> i32 {
+    let stride = patch.stride;
+    debug_assert_eq!(plane.len(), stride);
+    let mut pos = 0i32;
+    for (k, &w) in SLICE_WEIGHT.iter().enumerate() {
+        let slice = &patch.slices[k * stride..(k + 1) * stride];
+        let mut c = 0u32;
+        for (&a, &b) in plane.iter().zip(slice) {
+            c += (a & b).count_ones();
+        }
+        pos += w * c as i32;
+    }
+    2 * pos - patch.sum
+}
+
+/// Packed-kernel twin of [`crate::golden::binary_dot`]: bias + the α
+/// cascade over the first `m_run` levels, each level's PE dot computed
+/// by [`plane_dot`].  Bit-identical to the golden walk by construction
+/// (property-tested in `tests/kernel_exactness.rs`).
+#[inline]
+pub fn binary_dot_packed(
+    layer: &QuantLayer,
+    packed: &PackedPlanes,
+    d: usize,
+    patch: &BitPatch,
+    m_run: usize,
+) -> i32 {
+    debug_assert!(packed.matches(layer), "packed planes do not match layer geometry");
+    debug_assert_eq!(patch.len(), packed.n_c());
+    debug_assert_eq!(patch.stride(), packed.stride());
+    let mut acc_total: i32 = layer.bias_q[d];
+    for m in 0..m_run.min(layer.m) {
+        let p = plane_dot(packed.plane(d, m), patch);
+        debug_assert!(fixp::fits_mulw(p), "PE accumulator overflow: {p}");
+        acc_total += p * i32::from(layer.alpha(d, m));
+    }
+    acc_total
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::{plane_dot_generic, BitPatch, SLICE_WEIGHT};
+
+    /// Same generic body, recompiled with hardware `popcnt` enabled —
+    /// the default x86-64 baseline lowers `count_ones` to a SWAR
+    /// sequence, so this wrapper matters on AVX2-less hosts.
+    #[target_feature(enable = "popcnt")]
+    pub(super) unsafe fn plane_dot_popcnt(plane: &[u64], patch: &BitPatch) -> i32 {
+        plane_dot_generic(plane, patch)
+    }
+
+    /// Nibble-LUT popcount (Muła): per 256-bit lane, table-look-up both
+    /// nibbles of every byte and horizontally sum via `sad_epu8`.  The
+    /// [`super::plane_stride`] contract (stride % 4 == 0, zero padding)
+    /// means no tail loop.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn plane_dot_avx2(plane: &[u64], patch: &BitPatch) -> i32 {
+        const NIBBLE_POP: [u8; 32] = {
+            let mut t = [0u8; 32];
+            let mut i = 0;
+            while i < 32 {
+                t[i] = (i as u32 & 0xF).count_ones() as u8;
+                i += 1;
+            }
+            t
+        };
+        let stride = patch.stride;
+        debug_assert_eq!(plane.len(), stride);
+        debug_assert_eq!(stride % 4, 0);
+        let lut = _mm256_loadu_si256(NIBBLE_POP.as_ptr().cast::<__m256i>());
+        let low = _mm256_set1_epi8(0x0F);
+        let zero = _mm256_setzero_si256();
+        let mut pos = 0i64;
+        for (k, &w) in SLICE_WEIGHT.iter().enumerate() {
+            let slice = &patch.slices[k * stride..(k + 1) * stride];
+            let mut acc = zero;
+            for j in (0..stride).step_by(4) {
+                let a = _mm256_loadu_si256(plane.as_ptr().add(j).cast::<__m256i>());
+                let b = _mm256_loadu_si256(slice.as_ptr().add(j).cast::<__m256i>());
+                let v = _mm256_and_si256(a, b);
+                let lo = _mm256_and_si256(v, low);
+                let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low);
+                let cnt = _mm256_add_epi8(
+                    _mm256_shuffle_epi8(lut, lo),
+                    _mm256_shuffle_epi8(lut, hi),
+                );
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+            }
+            let c = _mm256_extract_epi64(acc, 0)
+                + _mm256_extract_epi64(acc, 1)
+                + _mm256_extract_epi64(acc, 2)
+                + _mm256_extract_epi64(acc, 3);
+            pos += i64::from(w) * c;
+        }
+        (2 * pos - i64::from(patch.sum)) as i32
+    }
+
+    /// Bit-slice all full 64-element groups of `x` with `movemask`:
+    /// each pass extracts every byte's MSB (slice 7 first), then a
+    /// byte-wise self-add shifts the next bit into MSB position.  The
+    /// tail group (if any) is left to the portable stager.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pack_slices_avx2(x: &[i8], stride: usize, slices: &mut [u64]) {
+        for w in 0..x.len() / 64 {
+            let p = x.as_ptr().add(w * 64).cast::<__m256i>();
+            let mut lo = _mm256_loadu_si256(p);
+            let mut hi = _mm256_loadu_si256(p.add(1));
+            for k in (0..8).rev() {
+                let mlo = _mm256_movemask_epi8(lo) as u32 as u64;
+                let mhi = _mm256_movemask_epi8(hi) as u32 as u64;
+                slices[k * stride + w] = (mhi << 32) | mlo;
+                if k > 0 {
+                    lo = _mm256_add_epi8(lo, lo);
+                    hi = _mm256_add_epi8(hi, hi);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    use super::{BitPatch, SLICE_WEIGHT};
+
+    /// NEON popcount path: `vcntq_u8` counts per byte, `vaddlvq_u8`
+    /// horizontally sums a 128-bit lane.  Stride is a multiple of
+    /// [`super::LANE_WORDS`] = 4, so the 2-word chunks cover everything.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn plane_dot_neon(plane: &[u64], patch: &BitPatch) -> i32 {
+        let stride = patch.stride;
+        debug_assert_eq!(plane.len(), stride);
+        debug_assert_eq!(stride % 2, 0);
+        let mut pos = 0i32;
+        for (k, &w) in SLICE_WEIGHT.iter().enumerate() {
+            let slice = &patch.slices[k * stride..(k + 1) * stride];
+            let mut c = 0u32;
+            for j in (0..stride).step_by(2) {
+                let a = vld1q_u8(plane.as_ptr().add(j).cast::<u8>());
+                let b = vld1q_u8(slice.as_ptr().add(j).cast::<u8>());
+                c += u32::from(vaddlvq_u8(vcntq_u8(vandq_u8(a, b))));
+            }
+            pos += w * c as i32;
+        }
+        2 * pos - patch.sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn transpose8_is_a_bit_transpose() {
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..64 {
+            let x = rng.next_u64();
+            let t = transpose8(x);
+            for r in 0..8 {
+                for c in 0..8 {
+                    assert_eq!((t >> (8 * c + r)) & 1, (x >> (8 * r + c)) & 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_slices_match_twos_complement_bits() {
+        let mut rng = Xoshiro256::new(2);
+        let mut patch = BitPatch::default();
+        for n in [0usize, 1, 7, 63, 64, 65, 130, 147, 256, 340] {
+            let x = prop::i8_vec(&mut rng, n);
+            patch.pack(&x);
+            assert_eq!(patch.len(), n);
+            assert_eq!(patch.stride(), plane_stride(n));
+            assert_eq!(patch.sum(), x.iter().map(|&v| i32::from(v)).sum::<i32>());
+            for (i, &v) in x.iter().enumerate() {
+                let byte = v as u8;
+                for k in 0..8 {
+                    let word = patch.slices[k * patch.stride + i / 64];
+                    let want = u64::from((byte >> k) & 1);
+                    assert_eq!((word >> (i % 64)) & 1, want, "n={n} i={i} k={k}");
+                }
+            }
+            // Padding — tail bits and alignment words — must stay zero.
+            for k in 0..8 {
+                let slice = &patch.slices[k * patch.stride..(k + 1) * patch.stride];
+                let mut mask = vec![0u64; patch.stride];
+                for i in 0..n {
+                    mask[i / 64] |= 1u64 << (i % 64);
+                }
+                for (j, &word) in slice.iter().enumerate() {
+                    assert_eq!(word & !mask[j], 0, "n={n} k={k} word {j} has padding bits");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plane_dot_matches_signed_dot() {
+        let mut rng = Xoshiro256::new(3);
+        let mut patch = BitPatch::default();
+        for trial in 0..300 {
+            let n = rng.below(400) as usize;
+            let signs = prop::sign_vec(&mut rng, n);
+            let x = prop::i8_vec(&mut rng, n);
+            let stride = plane_stride(n);
+            let mut plane = vec![0u64; stride];
+            for (i, &s) in signs.iter().enumerate() {
+                if s > 0 {
+                    plane[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+            patch.pack(&x);
+            let want = crate::golden::signed_dot(&signs, &x);
+            assert_eq!(plane_dot(&plane, &patch), want, "trial {trial} n={n}");
+            assert_eq!(plane_dot_portable(&plane, &patch), want, "trial {trial} n={n}");
+        }
+    }
+
+    #[test]
+    fn kernel_kind_parses_env_values() {
+        assert_eq!(KernelKind::parse("scalar"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("packed"), Some(KernelKind::Packed));
+        assert_eq!(KernelKind::parse("auto"), Some(KernelKind::Packed));
+        assert_eq!(KernelKind::parse("portable"), Some(KernelKind::Packed));
+        assert_eq!(KernelKind::parse(" Scalar "), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("simd"), None);
+        assert_eq!(KernelKind::parse(""), None);
+    }
+
+    #[test]
+    fn plane_stride_is_lane_aligned() {
+        assert_eq!(plane_stride(0), 0);
+        assert_eq!(plane_stride(1), LANE_WORDS);
+        assert_eq!(plane_stride(64), LANE_WORDS);
+        assert_eq!(plane_stride(64 * LANE_WORDS), LANE_WORDS);
+        assert_eq!(plane_stride(64 * LANE_WORDS + 1), 2 * LANE_WORDS);
+        assert_eq!(plane_stride(1350), 24);
+    }
+}

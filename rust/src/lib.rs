@@ -36,8 +36,12 @@
 //! * [`nn`] — reference network descriptions (CNN-A, MobileNetV1 B1/B2)
 //! * [`isa`] — instruction set + assembler + network compiler (§IV-C)
 //! * [`golden`] — bit-accurate int8 functional model (§V-A2)
+//! * [`kernel`] — bit-packed popcount dot-product kernels (portable /
+//!   AVX2 / NEON behind runtime detection, `BINARRAY_KERNEL` override);
+//!   bit-identical to `golden` — a host-speed knob, never a semantics one
 //! * [`artifacts`] — readers for the Python-side AOT outputs (BAW1/BAC1/
-//!   BAG1) + the synthetic CNN-A stand-in for artifact-less environments
+//!   BAG1) + the synthetic CNN-A stand-in for artifact-less environments,
+//!   plus the packed sign-plane view the kernel consumes
 //! * [`binarray`] — the cycle-accurate simulator: PE/PA/SA/AMU/AGU/CU,
 //!   the execution plan and the frame executor (§III–IV)
 //! * [`perf`] — analytical performance model, Eqs. 14–18 (§IV-E)
@@ -63,6 +67,7 @@ pub mod data;
 pub mod fixp;
 pub mod golden;
 pub mod isa;
+pub mod kernel;
 pub mod nn;
 pub mod perf;
 pub mod runtime;

@@ -1,0 +1,154 @@
+//! Kernel exactness: the bit-packed popcount kernel raced bit-for-bit
+//! against the scalar golden arithmetic at every level — single plane
+//! dots (auto backend and pinned-portable), the α cascade, and whole
+//! networks through the simulator in both accuracy modes and under both
+//! kernel choices.  The exactness bar is absolute: the kernel is a
+//! host-speed knob, any divergence here is a bug, never a tolerance.
+
+use binarray::artifacts::{self, LayerKind, PackedPlanes, QuantLayer};
+use binarray::binarray::{ArrayConfig, BinArraySystem};
+use binarray::golden;
+use binarray::kernel::{self, BitPatch, KernelKind};
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// A 1×1 dense layer carrying one sign plane — the smallest carrier that
+/// lets [`PackedPlanes::pack`] build kernel-ready words from raw signs.
+fn plane_layer(signs: Vec<i8>) -> QuantLayer {
+    QuantLayer {
+        kind: LayerKind::Dense,
+        kh: signs.len(),
+        planes: signs,
+        alpha_q: vec![1],
+        bias_q: vec![0],
+        d: 1,
+        m: 1,
+        kw: 0,
+        c: 0,
+        f_alpha: 6,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu: false,
+        pool: 1,
+        stride: 1,
+    }
+}
+
+/// Race the packed dot — the auto-detected backend and the pinned
+/// portable path — against the scalar reference on one plane.
+fn race(signs: &[i8], x: &[i8]) {
+    let want = golden::signed_dot(signs, x);
+    let layer = plane_layer(signs.to_vec());
+    let pk = PackedPlanes::pack(&layer);
+    let mut patch = BitPatch::default();
+    patch.pack(x);
+    assert_eq!(kernel::plane_dot(pk.plane(0, 0), &patch), want, "n={}", x.len());
+    assert_eq!(
+        kernel::plane_dot_portable(pk.plane(0, 0), &patch),
+        want,
+        "portable n={}",
+        x.len()
+    );
+}
+
+#[test]
+fn packed_plane_dot_matches_signed_dot_on_random_lengths() {
+    prop::check(200, "plane_dot == signed_dot", |rng| {
+        let n = rng.below(400) as usize;
+        let signs = prop::sign_vec(rng, n);
+        let x = prop::i8_vec(rng, n);
+        race(&signs, &x);
+    });
+}
+
+#[test]
+fn every_word_boundary_tail_is_exact() {
+    // zero-length plus every tail remainder 0..=63 at several word bases
+    let mut rng = Xoshiro256::new(0x7A11);
+    for base in [0usize, 64, 128, 192, 256] {
+        for tail in 0..=63usize {
+            let n = base + tail;
+            let signs = prop::sign_vec(&mut rng, n);
+            let x = prop::i8_vec(&mut rng, n);
+            race(&signs, &x);
+        }
+    }
+}
+
+#[test]
+fn overflow_adjacent_extremes_are_exact() {
+    // all-(+1)/(−1) planes against all-MIN/MAX activations: the largest
+    // |P| and |S| any plane of length n can produce
+    for n in [1usize, 63, 64, 65, 127, 129, 1350] {
+        for s in [-1i8, 1] {
+            for v in [i8::MIN, i8::MAX] {
+                race(&vec![s; n], &vec![v; n]);
+            }
+        }
+    }
+}
+
+#[test]
+fn alpha_cascade_matches_golden_binary_dot() {
+    prop::check(60, "binary_dot_packed == binary_dot", |rng| {
+        let d = 1 + rng.below(6) as usize;
+        let m = 1 + rng.below(4) as usize;
+        let n_c = 1 + rng.below(300) as usize;
+        let layer = QuantLayer {
+            kind: LayerKind::Dense,
+            planes: prop::sign_vec(rng, d * m * n_c),
+            alpha_q: (0..d * m).map(|_| rng.range_i64(1, 128) as i8).collect(),
+            bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+            d,
+            m,
+            kh: n_c,
+            kw: 0,
+            c: 0,
+            f_alpha: 6,
+            f_in: 6,
+            f_out: 6,
+            shift: 6,
+            relu: false,
+            pool: 1,
+            stride: 1,
+        };
+        let pk = PackedPlanes::pack(&layer);
+        let x = prop::i8_vec(rng, n_c);
+        let mut patch = BitPatch::default();
+        patch.pack(&x);
+        for dd in 0..d {
+            for m_run in 1..=m {
+                assert_eq!(
+                    kernel::binary_dot_packed(&layer, &pk, dd, &patch, m_run),
+                    golden::binary_dot(&layer, dd, &x, m_run),
+                    "d={dd} m_run={m_run}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn full_network_race_scalar_vs_packed_vs_golden() {
+    let mut rng = Xoshiro256::new(0xBEEF);
+    for m in [1usize, 4] {
+        let net = artifacts::synthetic_cnn_a(&mut rng, m);
+        let dims = binarray::isa::compiler::infer_input_dims(&net);
+        let shape = Shape::new(dims.1, dims.0, dims.2);
+        let image = prop::i8_vec(&mut rng, shape.len());
+        for cfg in [ArrayConfig::new(1, 8, 2), ArrayConfig::new(4, 32, 4)] {
+            for mode in [None, Some(1)] {
+                let want = golden::forward(&net, &image, shape, mode);
+                for kind in [KernelKind::Scalar, KernelKind::Packed] {
+                    let mut sys = BinArraySystem::new(cfg, net.clone()).unwrap();
+                    sys.set_mode(mode);
+                    sys.set_kernel(kind);
+                    let (logits, _) = sys.run_frame(&image).unwrap();
+                    let tag = format!("m={m} cfg={} mode={mode:?} {kind:?}", cfg.label());
+                    assert_eq!(logits, want, "{tag}");
+                }
+            }
+        }
+    }
+}
