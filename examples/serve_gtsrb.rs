@@ -24,7 +24,7 @@ use binarray::artifacts::{self, CalibBatch, QuantNetwork};
 use binarray::binarray::ArrayConfig;
 use binarray::coordinator::{
     BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, DispatchClass, Mode,
-    RoutePolicy, ServiceClass,
+    RoutePolicy, ServiceClass, WireClient, WireServer, WireStatus,
 };
 use binarray::runtime::Runtime;
 use binarray::{nn, perf};
@@ -301,6 +301,73 @@ fn main() -> anyhow::Result<()> {
         "client-side: {class_refused} refused at admission, {class_shed} shed at a deadline gate \
          (identity: {} submitted = {} completed + {} failed + {} refused)",
         cm.submitted, cm.completed, cm.failed, cm.admission_refused
+    );
+
+    // --- wire front-end: the same stack over a real socket ---------------
+    // The TCP server is the production entry (`binarray serve --listen`);
+    // here it binds an ephemeral port, one probe frame is asserted
+    // bit-identical to the in-process path, then a small mixed-class
+    // burst is served entirely over the socket (Interactive rides its
+    // default 50 ms SLO, so refusals/sheds are legitimate outcomes).
+    let wire_frames = frames.min(32);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array,
+            workers: workers.max(2),
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+            },
+            ..Default::default()
+        },
+        net.clone(),
+    )?;
+    let wire = WireServer::start(
+        "127.0.0.1:0",
+        coord.handle(),
+        std::sync::Arc::clone(&coord.metrics),
+    )?;
+    let dims = (48u16, 48u16, 3u16);
+    let in_process = coord.infer(calib.image(0).to_vec(), Mode::HighAccuracy)?;
+    let mut client = WireClient::connect(wire.local_addr())?;
+    let probe =
+        client.request(0, Mode::HighAccuracy, ServiceClass::Standard, 0, dims, calib.image(0))?;
+    anyhow::ensure!(probe.status == WireStatus::Ok, "wire probe status {:?}", probe.status);
+    anyhow::ensure!(
+        probe.logits == in_process.logits,
+        "wire logits diverged from the in-process path"
+    );
+    let (mut wire_ok, mut wire_refused, mut wire_shed) = (0usize, 0usize, 0usize);
+    for i in 0..wire_frames {
+        let service = match i % 3 {
+            0 => ServiceClass::Interactive,
+            1 => ServiceClass::Standard,
+            _ => ServiceClass::Bulk,
+        };
+        let r = client.request(
+            i as u64 + 1,
+            Mode::HighAccuracy,
+            service,
+            0,
+            dims,
+            calib.image(i % calib.n),
+        )?;
+        match r.status {
+            WireStatus::Ok => wire_ok += 1,
+            WireStatus::Refused => wire_refused += 1,
+            WireStatus::Deadline => wire_shed += 1,
+            other => anyhow::bail!("unexpected wire status {other:?}"),
+        }
+    }
+    drop(client);
+    wire.shutdown();
+    let wm = coord.shutdown();
+    println!("\n== wire front-end (TCP, length-prefixed binary frames) ==");
+    println!("{}", wm.summary());
+    println!(
+        "over the socket: probe bit-identical to in-process, then {wire_ok} served, \
+         {wire_refused} refused at admission, {wire_shed} shed at the SLO gate \
+         of {wire_frames} mixed-class frames"
     );
 
     // --- analytical cross-check (the paper's §V-A3 methodology) ---------

@@ -45,7 +45,8 @@ use binarray::binarray::plan::schedule;
 use binarray::binarray::{ArrayConfig, BinArraySystem};
 use binarray::coordinator::{
     Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig,
-    DispatchClass, Mode, RoutePolicy, ServiceClass,
+    DispatchClass, LatencyStats, Mode, RoutePolicy, ServiceClass, WireClient, WireServer,
+    WireStatus,
 };
 use binarray::isa::{compile_network, Program};
 use binarray::kernel::{self, KernelKind};
@@ -750,6 +751,103 @@ fn main() {
         interactive_slo.as_secs_f64() * 1e3
     );
 
+    // === wire front-end: end-to-end TCP serving =========================
+    // The real socket path: a WireServer on an ephemeral port, one probe
+    // frame asserted byte-identical to the golden model across the wire,
+    // then an open-loop Poisson burst (scheduled send times, latencies
+    // measured from the *schedule* — the coordinated-omission-safe way)
+    // at ~1.5× one card's measured direct rate on a 2-worker pool.
+    println!("\n=== wire front-end: open-loop TCP burst [1,8,2], 2 workers ===");
+    let wire_frames = 96usize;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_micros(500),
+            },
+            ..Default::default()
+        },
+        qnet.clone(),
+    )
+    .unwrap();
+    let wire = WireServer::start(
+        "127.0.0.1:0",
+        coord.handle(),
+        std::sync::Arc::clone(&coord.metrics),
+    )
+    .unwrap();
+    let addr = wire.local_addr();
+    let dims = (shape.h as u16, shape.w as u16, shape.c as u16);
+    // identity probe: the logits that come back over TCP must be the
+    // golden model's, byte for byte
+    let mut probe = WireClient::connect(addr).unwrap();
+    let r = probe
+        .request(u64::MAX, Mode::HighAccuracy, ServiceClass::Standard, 0, dims, &image)
+        .unwrap();
+    assert_eq!(r.status, WireStatus::Ok, "wire probe not served");
+    assert_eq!(r.logits, golden_logits, "wire path diverged from golden");
+    drop(probe);
+    // open-loop Poisson schedule, fixed before the run
+    let wire_rate = 1.5 / direct_per.max(1e-6);
+    let wire_sched: Vec<Duration> = {
+        let mut rng_w = Xoshiro256::new(0x11CE);
+        let mut t = 0.0f64;
+        (0..wire_frames)
+            .map(|_| {
+                t += -(1.0 - rng_w.f64()).ln() / wire_rate;
+                Duration::from_secs_f64(t)
+            })
+            .collect()
+    };
+    let mut writer = WireClient::connect(addr).unwrap();
+    let mut reader = writer.try_clone().unwrap();
+    let mut wire_lat = LatencyStats::default();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let sched = &wire_sched;
+        let img = &image;
+        s.spawn(move || {
+            for (i, at) in sched.iter().enumerate() {
+                let now = t0.elapsed();
+                if *at > now {
+                    std::thread::sleep(*at - now);
+                }
+                writer
+                    .send(i as u64, Mode::HighAccuracy, ServiceClass::Standard, 0, dims, img)
+                    .expect("wire burst send");
+            }
+        });
+        for _ in 0..wire_frames {
+            let r = reader.recv().expect("wire burst recv");
+            assert_eq!(r.status, WireStatus::Ok, "wire burst reply not served");
+            assert_eq!(r.logits, golden_logits, "wire burst diverged from golden");
+            wire_lat.record(t0.elapsed().saturating_sub(wire_sched[r.id as usize]));
+        }
+    });
+    let wire_wall = t0.elapsed().as_secs_f64();
+    let wire_fps = wire_frames as f64 / wire_wall;
+    wire.shutdown();
+    let wm = coord.shutdown();
+    assert_eq!(
+        wm.wire_requests,
+        wire_frames as u64 + 1,
+        "every wire frame (and the probe) must be accounted"
+    );
+    assert_eq!(wm.wire_protocol_errors, 0, "clean traffic, no protocol errors");
+    let (wire_p50, wire_p99) =
+        (wire_lat.percentile(50.0), wire_lat.percentile(99.0));
+    println!(
+        "  {wire_frames} frames over TCP in {wire_wall:.3}s → {wire_fps:.1} fps | \
+         p50 {wire_p50:?} p99 {wire_p99:?} (from scheduled send)"
+    );
+    let wire_json = format!(
+        "{{\"frames\": {wire_frames}, \"frames_per_sec\": {wire_fps:.2}, \"p50_us\": {}, \"p99_us\": {}, \"conns\": 1, \"workers\": 2}}",
+        wire_p50.as_micros(),
+        wire_p99.as_micros()
+    );
+
     // === machine-readable record =======================================
     let direct_json: Vec<String> = direct_fps
         .iter()
@@ -764,7 +862,7 @@ fn main() {
         hm.routed_batch, hm.routed_shard, hm.mean_lease(), hm.shard_cards_stolen
     );
     let json = format!(
-        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"kernel_backend\": \"{kernel_backend}\",\n  \"frames_per_sec_plan_scalar\": {fps_plan_scalar:.2},\n  \"kernel_speedup\": {kernel_speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json},\n  \"slo\": {slo_json}\n}}\n",
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"kernel_backend\": \"{kernel_backend}\",\n  \"frames_per_sec_plan_scalar\": {fps_plan_scalar:.2},\n  \"kernel_speedup\": {kernel_speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json},\n  \"slo\": {slo_json},\n  \"wire_frames_per_sec\": {wire_fps:.2},\n  \"wire\": {wire_json}\n}}\n",
         cfg.label(),
         1.0 / legacy_per,
         1.0 / plan_per_frame,

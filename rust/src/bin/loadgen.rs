@@ -1,0 +1,397 @@
+//! Open-loop load generator for the TCP wire front-end.
+//!
+//! ```text
+//! loadgen --addr 127.0.0.1:7733 --dims 10x10x3 [--rps 200] [--secs 5]
+//!         [--conns 4] [--mix 0.2,0.6,0.2] [--mode accurate|fast|mix]
+//!         [--deadline-ms 0] [--seed 7] [--out BENCH_loadgen.json]
+//! ```
+//!
+//! **Open-loop** means arrivals follow a Poisson process whose schedule
+//! is fixed *before* the run: every request has a scheduled send time
+//! drawn from exponential inter-arrivals at `--rps`, and the sender
+//! never waits for a response before sending the next frame.  A closed
+//! loop (send → wait → send) would let a slow server throttle its own
+//! load and hide every queueing delay; sustained-pressure numbers are
+//! only honest open-loop.
+//!
+//! **Coordinated omission** is the twin trap: measuring latency from the
+//! *actual* send instant forgives the generator for sending late when
+//! the socket back-pressured — exactly the moments the server was
+//! slowest.  Every latency here is measured from the request's
+//! *scheduled* send time, so a stalled sender surfaces as tail latency
+//! instead of silently vanishing from the histogram
+//! (`LatencyStats`-backed p50/p99, per service class and global).
+//!
+//! One writer + one reader thread per connection; requests carry a
+//! globally unique id the server echoes, which indexes the prebuilt
+//! schedule — the reader never guesses what it is measuring.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use binarray::coordinator::{LatencyStats, Mode, ServiceClass, WireClient, WireStatus};
+use binarray::util::rng::Xoshiro256;
+
+/// One scheduled request: everything is decided before the run starts.
+struct Arrival {
+    /// Scheduled send offset from the run start.
+    at: Duration,
+    /// Global sequence number — the wire id, echoed by the server.
+    id: u64,
+    mode: Mode,
+    service: ServiceClass,
+}
+
+/// Per-class + global outcome ledger (one per reader thread, merged).
+#[derive(Default)]
+struct Ledger {
+    completed: u64,
+    refused: u64,
+    deadline_shed: u64,
+    failed: u64,
+    draining: u64,
+    bad_request: u64,
+    /// Replies the run never saw (connection died early).
+    lost: u64,
+    latency: LatencyStats,
+    class_latency: HashMap<usize, LatencyStats>,
+    class_completed: [u64; 3],
+}
+
+impl Ledger {
+    fn merge(&mut self, o: &Ledger) {
+        self.completed += o.completed;
+        self.refused += o.refused;
+        self.deadline_shed += o.deadline_shed;
+        self.failed += o.failed;
+        self.draining += o.draining;
+        self.bad_request += o.bad_request;
+        self.lost += o.lost;
+        self.latency.merge(&o.latency);
+        for (k, v) in &o.class_latency {
+            self.class_latency.entry(*k).or_default().merge(v);
+        }
+        for (a, b) in self.class_completed.iter_mut().zip(&o.class_completed) {
+            *a += b;
+        }
+    }
+}
+
+struct Flags {
+    addr: String,
+    dims: (u16, u16, u16),
+    rps: f64,
+    secs: f64,
+    conns: usize,
+    mix: [f64; 3],
+    mode: String,
+    deadline_ms: u64,
+    seed: u64,
+    out: String,
+}
+
+fn parse_flags() -> Result<Flags> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut map = HashMap::new();
+    let mut it = argv.iter();
+    while let Some(k) = it.next() {
+        let Some(key) = k.strip_prefix("--") else {
+            bail!("unexpected argument '{k}' (expected --flag value)");
+        };
+        let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+        map.insert(key.to_string(), v.clone());
+    }
+    let get = |key: &str, default: &str| map.get(key).cloned().unwrap_or_else(|| default.into());
+    let addr = get("addr", "");
+    if addr.is_empty() {
+        bail!("loadgen needs --addr HOST:PORT (and --dims HxWxC)");
+    }
+    let dims_s = get("dims", "");
+    let parts: Vec<u16> = dims_s
+        .split('x')
+        .map(|p| p.parse())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("--dims '{dims_s}' must be HxWxC, e.g. 10x10x3"))?;
+    if parts.len() != 3 || parts.iter().any(|&d| d == 0) {
+        bail!("--dims '{dims_s}' must be three nonzero fields HxWxC");
+    }
+    let mix_s = get("mix", "0.2,0.6,0.2");
+    let weights: Vec<f64> = mix_s
+        .split(',')
+        .map(|p| p.trim().parse())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("--mix '{mix_s}' must be interactive,standard,bulk weights"))?;
+    if weights.len() != 3 || weights.iter().any(|w| *w < 0.0) || weights.iter().sum::<f64>() <= 0.0
+    {
+        bail!("--mix '{mix_s}' needs three non-negative weights with a positive sum");
+    }
+    Ok(Flags {
+        addr,
+        dims: (parts[0], parts[1], parts[2]),
+        rps: get("rps", "100").parse().context("--rps")?,
+        secs: get("secs", "5").parse().context("--secs")?,
+        conns: get("conns", "4").parse().context("--conns")?,
+        mix: [weights[0], weights[1], weights[2]],
+        mode: get("mode", "accurate"),
+        deadline_ms: get("deadline-ms", "0").parse().context("--deadline-ms")?,
+        seed: get("seed", "7").parse().context("--seed")?,
+        out: get("out", "BENCH_loadgen.json"),
+    })
+}
+
+/// Draw the full Poisson arrival schedule up front: exponential
+/// inter-arrivals at `rps`, class by weighted draw, mode per `--mode`.
+fn build_schedule(f: &Flags) -> Vec<Arrival> {
+    let mut rng = Xoshiro256::new(f.seed);
+    let total: f64 = f.mix.iter().sum();
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    loop {
+        // inverse-CDF exponential; 1 - f64() keeps the log argument > 0
+        t += -(1.0 - rng.f64()).ln() / f.rps.max(1e-9);
+        if t >= f.secs {
+            break;
+        }
+        let mut pick = rng.f64() * total;
+        let mut service = ServiceClass::Bulk;
+        for (i, w) in f.mix.iter().enumerate() {
+            if pick < *w {
+                service = [ServiceClass::Interactive, ServiceClass::Standard, ServiceClass::Bulk]
+                    [i];
+                break;
+            }
+            pick -= w;
+        }
+        let mode = match f.mode.as_str() {
+            "fast" => Mode::HighThroughput,
+            "mix" => {
+                if rng.below(2) == 0 {
+                    Mode::HighAccuracy
+                } else {
+                    Mode::HighThroughput
+                }
+            }
+            _ => Mode::HighAccuracy,
+        };
+        out.push(Arrival { at: Duration::from_secs_f64(t), id: out.len() as u64, mode, service });
+    }
+    out
+}
+
+fn percentile_us(l: &LatencyStats, p: f64) -> u64 {
+    l.percentile(p).as_micros().min(u64::MAX as u128) as u64
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("loadgen error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let f = parse_flags()?;
+    let schedule = Arc::new(build_schedule(&f));
+    let submitted = schedule.len() as u64;
+    if submitted == 0 {
+        bail!("empty schedule — raise --rps or --secs");
+    }
+    // The reader indexes scheduled offsets + classes by the echoed id.
+    let by_id: Arc<Vec<(Duration, usize)>> =
+        Arc::new(schedule.iter().map(|a| (a.at, a.service.index())).collect());
+    let image: Vec<i8> = {
+        // deterministic pseudo-image; the server only checks geometry
+        let mut rng = Xoshiro256::new(f.seed ^ 0x1A6E);
+        let len = f.dims.0 as usize * f.dims.1 as usize * f.dims.2 as usize;
+        (0..len).map(|_| (rng.below(256) as i64 - 128) as i8).collect()
+    };
+    println!(
+        "loadgen: {} requests over {:.1}s ({:.0} rps Poisson) on {} conns → {} \
+         (mix i/s/b {:?}, mode {}, deadline {} ms)",
+        submitted, f.secs, f.rps, f.conns, f.addr, f.mix, f.mode, f.deadline_ms
+    );
+
+    let conns = f.conns.max(1);
+    let deadline_us = f.deadline_ms * 1_000;
+    let start = Instant::now();
+    let mut total = Ledger::default();
+    let mut send_lag = LatencyStats::default();
+    std::thread::scope(|s| -> Result<()> {
+        let mut readers = Vec::new();
+        let mut writers = Vec::new();
+        for conn in 0..conns {
+            let mut writer = WireClient::connect(&f.addr)
+                .with_context(|| format!("connecting to {}", f.addr))?;
+            let mut reader = writer.try_clone()?;
+            // round-robin slice of the global schedule, order preserved
+            let mine: Vec<usize> =
+                (0..schedule.len()).filter(|i| i % conns == conn).collect();
+            let expect = mine.len();
+            let sched = Arc::clone(&schedule);
+            let ids = Arc::clone(&by_id);
+            let img = image.clone();
+            let dims = f.dims;
+            writers.push(s.spawn(move || -> Result<LatencyStats> {
+                let mut lag = LatencyStats::default();
+                for i in mine {
+                    let a = &sched[i];
+                    // sleep to the *scheduled* instant; once behind, send
+                    // immediately and let the lag show up in the stats —
+                    // re-anchoring the schedule would be coordinated
+                    // omission at the sender
+                    let now = start.elapsed();
+                    if a.at > now {
+                        std::thread::sleep(a.at - now);
+                    }
+                    lag.record(start.elapsed().saturating_sub(a.at));
+                    writer.send(a.id, a.mode, a.service, deadline_us, dims, &img)?;
+                }
+                Ok(lag)
+            }));
+            readers.push(s.spawn(move || -> Ledger {
+                let mut led = Ledger::default();
+                for got in 0..expect {
+                    let reply = match reader.recv() {
+                        Ok(r) => r,
+                        Err(_) => {
+                            // connection died: everything unanswered is
+                            // lost, and that is a run failure
+                            led.lost += (expect - got) as u64;
+                            break;
+                        }
+                    };
+                    let Some(&(at, ci)) = ids.get(reply.id as usize) else {
+                        // a reply id we never sent — protocol breakage
+                        led.bad_request += 1;
+                        continue;
+                    };
+                    match reply.status {
+                        WireStatus::Ok => {
+                            led.completed += 1;
+                            led.class_completed[ci] += 1;
+                            // send-time-based latency: now vs *scheduled*
+                            let lat = start.elapsed().saturating_sub(at);
+                            led.latency.record(lat);
+                            led.class_latency.entry(ci).or_default().record(lat);
+                        }
+                        WireStatus::Refused => led.refused += 1,
+                        WireStatus::Deadline => led.deadline_shed += 1,
+                        WireStatus::Failed => led.failed += 1,
+                        WireStatus::Draining => led.draining += 1,
+                        WireStatus::BadRequest => led.bad_request += 1,
+                    }
+                }
+                led
+            }));
+        }
+        for w in writers {
+            match w.join() {
+                Ok(Ok(lag)) => send_lag.merge(&lag),
+                Ok(Err(e)) => eprintln!("loadgen writer: {e:#}"),
+                Err(_) => eprintln!("loadgen writer panicked"),
+            }
+        }
+        for r in readers {
+            if let Ok(led) = r.join() {
+                total.merge(&led);
+            }
+        }
+        Ok(())
+    })?;
+    let wall = start.elapsed();
+
+    let answered =
+        total.completed + total.refused + total.deadline_shed + total.failed + total.draining;
+    println!(
+        "loadgen: submitted {} | completed {} refused {} shed {} failed {} draining {} lost {} \
+         | wall {:.2}s ({:.1} completed/s)",
+        submitted,
+        total.completed,
+        total.refused,
+        total.deadline_shed,
+        total.failed,
+        total.draining,
+        total.lost,
+        wall.as_secs_f64(),
+        total.completed as f64 / wall.as_secs_f64().max(1e-9),
+    );
+    println!(
+        "latency (from scheduled send): p50 {:?} p99 {:?} mean {:?} | sender lag p99 {:?}",
+        total.latency.percentile(50.0),
+        total.latency.percentile(99.0),
+        total.latency.mean(),
+        send_lag.percentile(99.0),
+    );
+    for (i, name) in ["interactive", "standard", "bulk"].iter().enumerate() {
+        if let Some(l) = total.class_latency.get(&i) {
+            println!(
+                "  {name}: {} completed, p50 {:?} p99 {:?}",
+                total.class_completed[i],
+                l.percentile(50.0),
+                l.percentile(99.0)
+            );
+        }
+    }
+
+    if !f.out.is_empty() {
+        let classes_json: Vec<String> = ["interactive", "standard", "bulk"]
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let l = total.class_latency.get(&i);
+                format!(
+                    "\"{name}\": {{\"completed\": {}, \"p50_us\": {}, \"p99_us\": {}}}",
+                    total.class_completed[i],
+                    l.map_or(0, |l| percentile_us(l, 50.0)),
+                    l.map_or(0, |l| percentile_us(l, 99.0)),
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"loadgen\",\n  \"addr\": \"{}\",\n  \"rps\": {},\n  \
+             \"secs\": {},\n  \"conns\": {},\n  \"submitted\": {},\n  \"completed\": {},\n  \
+             \"refused\": {},\n  \"deadline_shed\": {},\n  \"failed\": {},\n  \
+             \"draining\": {},\n  \"lost\": {},\n  \"protocol_errors\": {},\n  \
+             \"completed_per_sec\": {:.3},\n  \"p50_us\": {},\n  \"p99_us\": {},\n  \
+             \"mean_us\": {},\n  \"send_lag_p99_us\": {},\n  \"classes\": {{{}}}\n}}\n",
+            f.addr,
+            f.rps,
+            f.secs,
+            conns,
+            submitted,
+            total.completed,
+            total.refused,
+            total.deadline_shed,
+            total.failed,
+            total.draining,
+            total.lost,
+            total.bad_request,
+            total.completed as f64 / wall.as_secs_f64().max(1e-9),
+            percentile_us(&total.latency, 50.0),
+            percentile_us(&total.latency, 99.0),
+            total.latency.mean().as_micros().min(u64::MAX as u128) as u64,
+            percentile_us(&send_lag, 99.0),
+            classes_json.join(", "),
+        );
+        std::fs::write(&f.out, json).with_context(|| format!("writing {}", f.out))?;
+        println!("wrote {}", f.out);
+    }
+
+    // The accounting identity must hold across the wire boundary:
+    // every submitted request is answered exactly once, and nothing is
+    // answered with a protocol error or lost to a dead connection.
+    if answered != submitted || total.lost > 0 || total.bad_request > 0 || total.failed > 0 {
+        bail!(
+            "accounting violated: submitted {} != answered {} (lost {}, bad_request {}, failed {})",
+            submitted,
+            answered,
+            total.lost,
+            total.bad_request,
+            total.failed
+        );
+    }
+    Ok(())
+}

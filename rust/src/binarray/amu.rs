@@ -23,13 +23,21 @@ pub struct Amu {
 }
 
 impl Amu {
-    /// `np`: pooling factor N_p (1 = bypass, pure ReLU).  `relu`: whether
-    /// the activation applies (dense layers bypass the AMU entirely).
+    /// `np`: pooling factor N_p (≤ 1 = bypass, pure ReLU).  `relu`:
+    /// whether the activation applies (dense layers bypass the AMU
+    /// entirely).
+    ///
+    /// `np = 0` is clamped to the bypass geometry: a zero pooling
+    /// factor would make `np2 = 0`, a window that *never* completes —
+    /// `push`/`push_then` would swallow every value without emitting
+    /// and the layer would silently produce nothing (upstream pooled
+    /// row/column math divides by `np.max(1)`, so the degenerate case
+    /// must behave identically here).
     pub fn new(d_arch: usize, np: usize, relu: bool) -> Self {
         Self {
             sreg: vec![0; d_arch],
             seen: 0,
-            np2: np * np,
+            np2: np.max(1) * np.max(1),
             relu_only: !relu,
         }
     }
@@ -132,6 +140,27 @@ mod tests {
         let mut amu = Amu::new(1, 1, true); // np=1: emit every push
         assert_eq!(amu.push(&[100]).unwrap(), vec![100]);
         assert_eq!(amu.push(&[-100]).unwrap(), vec![0]); // no leak from 100
+    }
+
+    /// The degenerate pool-geometry boundary: `np = 0` must behave as
+    /// the `np = 1` bypass, not as a window that never completes.  An
+    /// unclamped `np2 = 0` makes `seen == np2` unreachable — every
+    /// `push` returns `None`, `push_then` never calls `emit`, and a
+    /// worker mid-layer loses the whole output stream with no panic to
+    /// point at the cause.
+    #[test]
+    fn degenerate_pool_geometry_bypasses_instead_of_swallowing() {
+        let mut zero = Amu::new(2, 0, true);
+        let mut one = Amu::new(2, 1, true);
+        for vals in [[7i8, -3], [-1, 5], [0, 0]] {
+            let want = one.push(&vals);
+            assert!(want.is_some(), "np=1 emits on every push");
+            assert_eq!(zero.push(&vals), want, "np=0 behaves as the np=1 bypass");
+            let mut got: Option<Vec<i8>> = None;
+            let mut z2 = Amu::new(2, 0, true);
+            z2.push_then(&vals, |pooled| got = Some(pooled.to_vec()));
+            assert_eq!(got.as_deref(), Some(&[vals[0].max(0), vals[1].max(0)][..]));
+        }
     }
 
     #[test]

@@ -20,8 +20,20 @@
 //! this host has ever been seen to do that work.  Admission refuses a
 //! request only when even that floor, stacked on the work already
 //! committed ahead of it, lands past the deadline — so refused work is
-//! provably unmeetable under the best observed behavior, and an
-//! uncalibrated model (no completions yet) refuses nothing.
+//! provably unmeetable under the best observed behavior.
+//!
+//! **Cold start.** The running minimum is *seeded at construction* with
+//! the pace the plan itself promises: one estimated cycle per simulated
+//! 400 MHz tick ([`crate::binarray::CLOCK_HZ`]).  Before any completion
+//! the model therefore refuses exactly the work the modeled accelerator
+//! itself could not serve — nothing the host could conceivably meet —
+//! and, because observations only ever *lower* the minimum, an
+//! unrepresentative first batch (cold caches, page faults) can never
+//! raise the floor above the seed and mass-refuse the first burst.  The
+//! pre-seed behavior (pace undefined until the first completion) priced
+//! the very first burst off whatever that first batch happened to
+//! measure: slow outlier ⇒ mass-refusal, no completion yet ⇒ the gate
+//! proved nothing at all.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -31,10 +43,13 @@ use crate::binarray::ExecutionPlan;
 
 use super::Mode;
 
-/// Sentinel for "no completion observed yet" — the model predicts
-/// nothing (and admission refuses nothing) until a real frame sets the
-/// pace.
-const UNCALIBRATED: u64 = u64::MAX;
+/// The construction-time pace seed: picoseconds per estimated cycle at
+/// the simulated accelerator's own clock.  The cheapest any frame could
+/// conceivably be — the host *simulates* those cycles — so refusals
+/// priced off the seed are sound before the first completion.
+fn plan_seed_ps() -> u64 {
+    (1.0e12 / crate::binarray::CLOCK_HZ).max(1.0) as u64
+}
 
 /// Per-mode frame cost + observed host pace (see module docs).
 ///
@@ -48,8 +63,8 @@ pub struct CapacityModel {
     est: Vec<u64>,
     max_m: usize,
     m_arch: usize,
-    /// Minimum observed pace in picoseconds per *estimated* cycle
-    /// ([`UNCALIBRATED`] until the first completion).
+    /// Minimum pace in picoseconds per *estimated* cycle, seeded at
+    /// construction with [`plan_seed_ps`] and lowered by observations.
     pace_ps: AtomicU64,
 }
 
@@ -101,18 +116,18 @@ impl CapacityModel {
             est,
             max_m: plan.max_m,
             m_arch: plan.cfg.m_arch,
-            pace_ps: AtomicU64::new(UNCALIBRATED),
+            pace_ps: AtomicU64::new(plan_seed_ps()),
         }
     }
 
     /// A degenerate single-cost model (router unit rigs, simulations):
-    /// every mode prices at `est_cycles`.
+    /// every mode prices at `est_cycles`.  Seeded like [`Self::new`].
     pub fn fixed(est_cycles: u64) -> Self {
         Self {
             est: vec![est_cycles.max(1); 2],
             max_m: 1,
             m_arch: 1,
-            pace_ps: AtomicU64::new(UNCALIBRATED),
+            pace_ps: AtomicU64::new(plan_seed_ps()),
         }
     }
 
@@ -143,17 +158,14 @@ impl CapacityModel {
             .as_nanos()
             .saturating_mul(1000)
             .saturating_mul(cards.max(1) as u128);
-        let ps = (card_ps / total as u128).min(UNCALIBRATED as u128);
+        let ps = (card_ps / total as u128).min(u64::MAX as u128);
         self.pace_ps.fetch_min((ps as u64).max(1), Ordering::Relaxed);
     }
 
-    /// The observed pace floor (ps per estimated cycle), once any frame
-    /// has completed.
-    pub fn pace_ps(&self) -> Option<u64> {
-        match self.pace_ps.load(Ordering::Relaxed) {
-            UNCALIBRATED => None,
-            ps => Some(ps),
-        }
+    /// The pace floor (ps per estimated cycle): the plan-derived seed
+    /// until an observation beats it, the fastest observation after.
+    pub fn pace_ps(&self) -> u64 {
+        self.pace_ps.load(Ordering::Relaxed)
     }
 
     /// Force the pace (tests and rigs — production calibration goes
@@ -162,28 +174,21 @@ impl CapacityModel {
         self.pace_ps.store(ps.max(1), Ordering::Relaxed);
     }
 
-    /// Cheapest time this host has ever been observed to serve one
-    /// frame of `mode` (`None` while uncalibrated).
-    pub fn service_floor(&self, mode: Mode) -> Option<Duration> {
-        let ps = self.pace_ps()?;
-        Some(ps_to_duration(self.est_cycles(mode) as u128 * ps as u128))
+    /// Cheapest time one frame of `mode` could take under the pace
+    /// floor (the plan seed at worst, the fastest observation at best).
+    pub fn service_floor(&self, mode: Mode) -> Duration {
+        ps_to_duration(self.est_cycles(mode) as u128 * self.pace_ps() as u128)
     }
 
     /// Earliest-completion *floor* for a new frame of `mode` admitted
     /// now: the committed work ahead of it (`backlog_cycles`) plus its
     /// own cost, spread perfectly over `cards` — no queueing overhead,
-    /// no stragglers, the fastest pace ever observed.  Actual completion
-    /// can only be later, so `deadline < now + floor` is a sound refusal.
-    /// `None` while uncalibrated (nothing is provable yet — admit).
-    pub fn earliest_feasible(
-        &self,
-        mode: Mode,
-        backlog_cycles: u64,
-        cards: usize,
-    ) -> Option<Duration> {
-        let ps = self.pace_ps()?;
+    /// no stragglers, the fastest pace ever observed (seeded from the
+    /// plan before the first completion).  Actual completion can only be
+    /// later, so `deadline < now + floor` is a sound refusal.
+    pub fn earliest_feasible(&self, mode: Mode, backlog_cycles: u64, cards: usize) -> Duration {
         let total = backlog_cycles as u128 + self.est_cycles(mode) as u128;
-        Some(ps_to_duration(total * ps as u128 / cards.max(1) as u128))
+        ps_to_duration(total * self.pace_ps() as u128 / cards.max(1) as u128)
     }
 }
 
@@ -217,32 +222,52 @@ mod tests {
     }
 
     #[test]
-    fn uncalibrated_model_proves_nothing() {
+    fn fresh_model_is_seeded_with_the_plan_pace() {
         let m = model();
-        assert_eq!(m.pace_ps(), None);
-        assert_eq!(m.service_floor(Mode::HighAccuracy), None);
+        let seed = plan_seed_ps();
+        assert_eq!(seed, 2_500, "400 MHz ⇒ 2.5 ns per simulated cycle");
+        assert_eq!(m.pace_ps(), seed);
+        // the seed makes every floor finite from the very first submit:
+        // a fresh coordinator prices work instead of proving nothing
+        assert!(m.service_floor(Mode::HighAccuracy) > Duration::ZERO);
+        let est = m.est_cycles(Mode::HighAccuracy);
         assert_eq!(
-            m.earliest_feasible(Mode::HighAccuracy, u64::MAX / 2, 1),
-            None,
-            "no observation, no refusal — whatever the backlog"
+            m.earliest_feasible(Mode::HighAccuracy, 0, 1),
+            ps_to_duration(est as u128 * seed as u128),
         );
+    }
+
+    /// The regression the seed exists to prevent: an unrepresentative
+    /// first observation (cold caches, page faults) arriving before any
+    /// other calibration must not raise the floor and mass-refuse the
+    /// first burst — the pace is a minimum and the seed is already in it.
+    #[test]
+    fn a_slow_first_observation_cannot_raise_the_seeded_floor() {
+        let m = CapacityModel::fixed(1_000);
+        let seed = m.pace_ps();
+        m.observe(Mode::HighAccuracy, 1, Duration::from_secs(10), 1);
+        assert_eq!(m.pace_ps(), seed, "slow outlier leaves the seed in place");
     }
 
     #[test]
     fn pace_is_a_running_minimum() {
         let m = model();
+        // start well above any observation this test makes, so the
+        // min dynamics (not the construction seed) are what's exercised
+        m.set_pace_ps(50_000_000);
         m.observe(Mode::HighAccuracy, 1, Duration::from_millis(10), 1);
-        let first = m.pace_ps().expect("calibrated");
+        let first = m.pace_ps();
+        assert!(first < 50_000_000, "observation lowered the floor");
         // a slower observation must not raise the floor
         m.observe(Mode::HighAccuracy, 1, Duration::from_millis(40), 1);
-        assert_eq!(m.pace_ps(), Some(first));
+        assert_eq!(m.pace_ps(), first);
         // a faster one lowers it
         m.observe(Mode::HighAccuracy, 2, Duration::from_millis(10), 1);
-        let lower = m.pace_ps().expect("calibrated");
+        let lower = m.pace_ps();
         assert!(lower < first, "{lower} < {first}");
         // the service floor for the observed mode never exceeds the
         // cheapest per-frame wall ever seen (the conservatism guarantee)
-        assert!(m.service_floor(Mode::HighAccuracy).unwrap() <= Duration::from_millis(5));
+        assert!(m.service_floor(Mode::HighAccuracy) <= Duration::from_millis(5));
     }
 
     /// A frame sharded over k cards is charged k card-seconds: the same
@@ -253,26 +278,27 @@ mod tests {
     #[test]
     fn sharded_observation_does_not_deflate_the_pace() {
         let m = CapacityModel::fixed(1_000);
+        m.set_pace_ps(20_000_000); // park the floor above the observations
         m.observe(Mode::HighAccuracy, 1, Duration::from_millis(10), 1);
-        let floor = m.pace_ps().expect("calibrated");
+        let floor = m.pace_ps();
         // perfect 4-way sharding: wall/4 on 4 cards = the same card-time
         m.observe(Mode::HighAccuracy, 1, Duration::from_micros(2_500), 4);
-        assert_eq!(m.pace_ps(), Some(floor), "same card-time, same floor");
+        assert_eq!(m.pace_ps(), floor, "same card-time, same floor");
         // real sharding has scatter/gather overhead: more card-time,
         // floor untouched
         m.observe(Mode::HighAccuracy, 1, Duration::from_millis(4), 4);
-        assert_eq!(m.pace_ps(), Some(floor));
+        assert_eq!(m.pace_ps(), floor);
     }
 
     #[test]
     fn earliest_feasible_scales_with_backlog_and_cards() {
         let m = CapacityModel::fixed(1_000);
         m.set_pace_ps(1_000_000); // 1 µs per est-cycle ⇒ 1 ms per frame
-        let own = m.earliest_feasible(Mode::HighAccuracy, 0, 1).unwrap();
+        let own = m.earliest_feasible(Mode::HighAccuracy, 0, 1);
         assert_eq!(own, Duration::from_millis(1));
-        let queued = m.earliest_feasible(Mode::HighAccuracy, 9_000, 1).unwrap();
+        let queued = m.earliest_feasible(Mode::HighAccuracy, 9_000, 1);
         assert_eq!(queued, Duration::from_millis(10), "9 frames ahead + own");
-        let wide = m.earliest_feasible(Mode::HighAccuracy, 9_000, 4).unwrap();
+        let wide = m.earliest_feasible(Mode::HighAccuracy, 9_000, 4);
         assert_eq!(wide, Duration::from_micros(2500), "perfectly parallel floor");
     }
 }

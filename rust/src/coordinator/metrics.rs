@@ -233,6 +233,16 @@ pub struct Metrics {
     /// included (how much latency the orchestrator spent shopping for a
     /// wider lease).
     pub lease_wait: LatencyStats,
+    /// TCP connections the wire front-end accepted.
+    pub wire_connections: u64,
+    /// Well-formed wire requests decoded and submitted to the
+    /// coordinator (each also counts into `submitted` downstream).
+    pub wire_requests: u64,
+    /// Wire frames rejected at the protocol layer (bad magic/version,
+    /// oversized payload, malformed header) — answered with a typed
+    /// wire status or a close, never submitted, never counted into the
+    /// coordinator accounting identity.
+    pub wire_protocol_errors: u64,
 }
 
 impl Metrics {
@@ -262,6 +272,9 @@ impl Metrics {
         self.deadline_missed += other.deadline_missed;
         self.deadline_shed += other.deadline_shed;
         self.lease_wait.merge(&other.lease_wait);
+        self.wire_connections += other.wire_connections;
+        self.wire_requests += other.wire_requests;
+        self.wire_protocol_errors += other.wire_protocol_errors;
     }
 
     /// Simulated-accelerator throughput (frames / simulated second at
@@ -324,6 +337,20 @@ impl Metrics {
             self.lane_summary(),
         ) + &self.deadline_summary()
             + &self.class_summary()
+            + &self.wire_summary()
+    }
+
+    /// Wire fragment of [`Self::summary`] (elided until the TCP
+    /// front-end accepted a connection, so in-process reports stay
+    /// unchanged).
+    fn wire_summary(&self) -> String {
+        if self.wire_connections == 0 {
+            return String::new();
+        }
+        format!(
+            " | wire conns={} reqs={} proto_errs={}",
+            self.wire_connections, self.wire_requests, self.wire_protocol_errors
+        )
     }
 
     /// Per-class fragment of [`Self::summary`]: elided entirely while no
@@ -622,6 +649,24 @@ mod tests {
             a.completed + a.failed + a.admission_refused,
             "the accounting identity survives merge"
         );
+    }
+
+    #[test]
+    fn wire_counters_merge_and_summary_fragment() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("wire"), "elided without wire traffic");
+        let other = Metrics {
+            wire_connections: 2,
+            wire_requests: 7,
+            wire_protocol_errors: 1,
+            ..Default::default()
+        };
+        m.merge(&other);
+        m.merge(&other);
+        assert_eq!(m.wire_connections, 4);
+        assert_eq!(m.wire_requests, 14);
+        assert_eq!(m.wire_protocol_errors, 2);
+        assert!(m.summary().contains("wire conns=4 reqs=14 proto_errs=2"));
     }
 
     #[test]

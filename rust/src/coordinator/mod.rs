@@ -28,7 +28,12 @@
 //! * [`metrics`] — latency/throughput accounting (wall-clock of the
 //!   simulator *and* simulated 400 MHz accelerator time), including
 //!   per-lane routing/leasing counters and per-[`ServiceClass`] SLO
-//!   outcomes.
+//!   outcomes;
+//! * [`wire`] — the TCP front-end: a length-prefixed binary protocol
+//!   decoded straight into the zero-copy feature buffers, typed
+//!   [`wire::WireStatus`] codes mirroring [`InferError`], and graceful
+//!   drain — real traffic enters here instead of through an in-process
+//!   [`SubmitHandle`].
 //!
 //! Runtime accuracy/throughput switching (§IV-D): every request carries a
 //! [`Mode`]; the worker flips the simulated accelerator's `m_run` between
@@ -51,6 +56,7 @@ pub mod capacity;
 pub mod metrics;
 pub mod route;
 pub mod server;
+pub mod wire;
 
 pub use batcher::{Arbitration, Batch, BatchPolicy, Batcher};
 pub use capacity::CapacityModel;
@@ -59,6 +65,7 @@ pub use route::{ClassSpec, ClassTable, DispatchClass, RoutePolicy, ServiceClass,
 pub use server::{
     Coordinator, CoordinatorConfig, InferError, Reply, ReplyResult, SubmitHandle,
 };
+pub use wire::{WireClient, WireReply, WireServer, WireStatus};
 
 /// Runtime accuracy mode of a request (paper §IV-D).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -974,9 +974,9 @@ impl Router {
     }
 
     /// The capacity model's floor on how much end-to-end budget a new
-    /// request of `(service, mode)` needs right now (`None` while the
-    /// model is uncalibrated — nothing is provable, admit).
-    fn earliest_feasible(&self, service: ServiceClass, mode: Mode) -> Option<Duration> {
+    /// request of `(service, mode)` needs right now (always finite —
+    /// the model is seeded with the plan-derived pace at construction).
+    fn earliest_feasible(&self, service: ServiceClass, mode: Mode) -> Duration {
         self.capacity
             .earliest_feasible(mode, self.backlog_cycles(service), self.live.max(1))
     }
@@ -1019,9 +1019,7 @@ impl Router {
         // Gate 1: the class admission budget — at the cap, refuse
         // instead of queueing work the class has no room for.
         if spec.admission_limit > 0 && self.class_inflight[ci] >= spec.admission_limit as u64 {
-            let earliest = self
-                .earliest_feasible(req.service, req.mode)
-                .unwrap_or(Duration::ZERO);
+            let earliest = self.earliest_feasible(req.service, req.mode);
             let mut delta = Metrics::default();
             send_refused(&mut delta, &req, &tx, earliest);
             self.note(delta);
@@ -1035,13 +1033,12 @@ impl Router {
         // refusal — a bare deadline on an SLO-free class keeps the
         // scalar-deadline semantics (queue, maybe shed) unchanged.
         if let (Some(_), Some(d)) = (spec.slo, req.deadline) {
-            if let Some(need) = self.earliest_feasible(req.service, req.mode) {
-                if now + need > d {
-                    let mut delta = Metrics::default();
-                    send_refused(&mut delta, &req, &tx, need);
-                    self.note(delta);
-                    return;
-                }
+            let need = self.earliest_feasible(req.service, req.mode);
+            if now + need > d {
+                let mut delta = Metrics::default();
+                send_refused(&mut delta, &req, &tx, need);
+                self.note(delta);
+                return;
             }
         }
         let depth = self.queue_depth();
@@ -2240,11 +2237,11 @@ mod tests {
         assert_eq!(rig.router.local.admission_refused, 1);
     }
 
-    /// The capacity gate: once the model is calibrated, an SLO that
-    /// even the observed pace floor cannot meet over the committed
-    /// backlog is refused at admission — uncalibrated, the same request
-    /// is admitted (nothing is provable yet), and SLO-free classes are
-    /// never refused however bad their explicit deadlines look.
+    /// The capacity gate: an SLO that even the pace floor cannot meet
+    /// over the committed backlog is refused at admission — under the
+    /// construction seed the same request is admitted (the seeded floor
+    /// is microseconds here), and SLO-free classes are never refused
+    /// however bad their explicit deadlines look.
     #[test]
     fn capacity_gate_refuses_provably_unmeetable_slos() {
         let mut rig = router_rig(1, RoutePolicy::BatchOnly);
@@ -2268,7 +2265,8 @@ mod tests {
             service: ServiceClass::Interactive,
             ..rig_request(id, Some(DispatchClass::Batch))
         };
-        // uncalibrated: admitted (the model refuses nothing it can't prove)
+        // at the construction seed (2.5 ns/cycle) the 11k-cycle floor is
+        // ~27 µs ≪ the 5 ms SLO: admitted
         let (tx0, _keep0) = channel::<ReplyResult>();
         rig.router.handle(RouterMsg::Submit(interactive(0), tx0));
         assert_eq!(rig.router.batcher.pending(), 1);

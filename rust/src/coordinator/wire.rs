@@ -1,0 +1,668 @@
+//! TCP wire front-end — the paper's §IV-D Zynq integration as a network
+//! server: remote clients stream frames into the coordinator the way the
+//! Zynq PS streams them into the feature buffer over DMA.
+//!
+//! Everything before this module enters the coordinator through an
+//! in-process [`SubmitHandle`]; this is the first path real traffic can
+//! take.  Design constraints, in order:
+//!
+//! * **No async runtime.**  The coordinator is already message-passing
+//!   over channels; a blocking `accept` loop plus one reader thread per
+//!   connection feeds it naturally.  Concurrency across requests comes
+//!   from concurrent connections (and from the coordinator's own lanes),
+//!   not from multiplexing one socket.
+//! * **Length-prefixed binary frames, no parsing ambiguity.**  A fixed
+//!   34-byte request header (magic, version, mode, service class,
+//!   request id, relative deadline, dims + payload length) followed by
+//!   the raw `i8` pixel payload, decoded straight into the `Vec<i8>`
+//!   the zero-copy feature views borrow from — one copy off the socket,
+//!   none after.
+//! * **Typed status codes, never a stranded caller.**  Every decoded
+//!   request is answered exactly once with a [`WireStatus`] mirroring
+//!   [`InferError`]; every malformed frame is answered with
+//!   [`WireStatus::BadRequest`] (when a reply is still possible) and a
+//!   close — the framing can't be trusted past the first bad byte.
+//! * **Graceful drain.**  [`WireServer::shutdown`] stops accepting,
+//!   lets every in-flight request finish and be written back, answers
+//!   frames that arrive mid-drain with [`WireStatus::Draining`], then
+//!   joins every connection thread.  Shut the wire server down *before*
+//!   the coordinator so in-flight replies still have workers to come
+//!   from.
+//!
+//! # Request frame
+//!
+//! All integers little-endian.
+//!
+//! | offset | size | field |
+//! |--------|------|-------|
+//! | 0      | 4    | magic `b"BNRY"` |
+//! | 4      | 1    | version (`1`) |
+//! | 5      | 1    | mode: 0 = high accuracy, 1 = high throughput |
+//! | 6      | 1    | service class: 0 interactive, 1 standard, 2 bulk |
+//! | 7      | 1    | reserved (must be 0) |
+//! | 8      | 8    | request id (client-chosen, echoed verbatim) |
+//! | 16     | 8    | deadline in µs from server receipt (0 = none) |
+//! | 24     | 4    | payload length (must equal `h·w·c`, ≤ 16 MiB) |
+//! | 28     | 2    | frame height |
+//! | 30     | 2    | frame width |
+//! | 32     | 2    | frame channels |
+//! | 34     | …    | payload: `h·w·c` bytes, row-major HWC `i8` |
+//!
+//! # Response frame
+//!
+//! | offset | size | field |
+//! |--------|------|-------|
+//! | 0      | 4    | magic `b"BNRY"` |
+//! | 4      | 1    | version (`1`) |
+//! | 5      | 1    | [`WireStatus`] |
+//! | 6      | 2    | reserved (0) |
+//! | 8      | 8    | request id (echoed) |
+//! | 16     | 8    | µs: end-to-end latency (`Ok`), the capacity model's earliest-feasible budget (`Refused`), else 0 |
+//! | 24     | 4    | payload length (logits count; 0 unless `Ok`) |
+//! | 28     | …    | payload: logits, `i8` |
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::Metrics;
+use super::server::{InferError, Reply, SubmitHandle};
+use super::{Mode, ServiceClass};
+
+/// Frame magic: every request and response starts with these 4 bytes.
+pub const MAGIC: [u8; 4] = *b"BNRY";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Fixed request-header length (the payload follows).
+pub const REQ_HEADER_LEN: usize = 34;
+/// Fixed response-header length (the logits follow).
+pub const RESP_HEADER_LEN: usize = 28;
+/// Hard cap on a request payload: a declared length above this is
+/// answered `BadRequest` *before* any allocation or read, so an
+/// adversarial length prefix cannot balloon server memory.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
+
+/// How often blocked reads wake to poll the drain flag.
+const POLL: Duration = Duration::from_millis(25);
+/// Once draining, how long a mid-frame read may sit with no progress
+/// before the connection is abandoned (a client that sent half a header
+/// and hung must not block shutdown forever).
+const DRAIN_GRACE: Duration = Duration::from_secs(1);
+
+/// Typed wire status — the on-wire image of [`InferError`] plus the
+/// protocol-level outcomes that never reach the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WireStatus {
+    /// Served: the payload carries the logits.
+    Ok = 0,
+    /// [`InferError::AdmissionRefused`] — the µs field carries the
+    /// earliest-feasible budget the refusal names.
+    Refused = 1,
+    /// [`InferError::DeadlineExceeded`] — shed unserved.
+    Deadline = 2,
+    /// [`InferError::Failed`] (or the coordinator is gone).
+    Failed = 3,
+    /// The frame never reached the coordinator: bad magic/version,
+    /// reserved bits set, dims/length mismatch, oversized payload.  The
+    /// connection closes after this reply — framing is untrusted.
+    BadRequest = 4,
+    /// The server is draining: the frame was decoded but not submitted.
+    Draining = 5,
+}
+
+impl WireStatus {
+    fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => WireStatus::Ok,
+            1 => WireStatus::Refused,
+            2 => WireStatus::Deadline,
+            3 => WireStatus::Failed,
+            4 => WireStatus::BadRequest,
+            5 => WireStatus::Draining,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded response, as the client sees it.
+#[derive(Clone, Debug)]
+pub struct WireReply {
+    /// The client-chosen request id, echoed.
+    pub id: u64,
+    pub status: WireStatus,
+    /// `Ok`: end-to-end server latency.  `Refused`: the earliest-feasible
+    /// budget.  Otherwise zero.
+    pub micros: u64,
+    /// Logits (empty unless `status == Ok`).
+    pub logits: Vec<i8>,
+}
+
+/// One decoded request header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct ReqHeader {
+    mode: Mode,
+    service: ServiceClass,
+    id: u64,
+    deadline_us: u64,
+    payload_len: u32,
+    h: u16,
+    w: u16,
+    c: u16,
+}
+
+/// Why a request header was rejected at the protocol layer.  The id is
+/// carried when the header was intact enough to echo one.
+#[derive(Debug)]
+struct ProtoError {
+    id: u64,
+    what: &'static str,
+}
+
+fn encode_req_header(buf: &mut [u8; REQ_HEADER_LEN], h: &ReqHeader) {
+    buf[0..4].copy_from_slice(&MAGIC);
+    buf[4] = VERSION;
+    buf[5] = match h.mode {
+        Mode::HighAccuracy => 0,
+        Mode::HighThroughput => 1,
+    };
+    buf[6] = h.service.index() as u8;
+    buf[7] = 0;
+    buf[8..16].copy_from_slice(&h.id.to_le_bytes());
+    buf[16..24].copy_from_slice(&h.deadline_us.to_le_bytes());
+    buf[24..28].copy_from_slice(&h.payload_len.to_le_bytes());
+    buf[28..30].copy_from_slice(&h.h.to_le_bytes());
+    buf[30..32].copy_from_slice(&h.w.to_le_bytes());
+    buf[32..34].copy_from_slice(&h.c.to_le_bytes());
+}
+
+fn decode_req_header(buf: &[u8; REQ_HEADER_LEN]) -> std::result::Result<ReqHeader, ProtoError> {
+    // The id field sits past the magic/version checks but is decoded
+    // first: even a rejected frame echoes the id when those 8 bytes were
+    // at least received, so the client can correlate the refusal.
+    let id = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let err = |what| ProtoError { id, what };
+    if buf[0..4] != MAGIC {
+        return Err(ProtoError { id: 0, what: "bad magic" });
+    }
+    if buf[4] != VERSION {
+        return Err(err("unsupported version"));
+    }
+    let mode = match buf[5] {
+        0 => Mode::HighAccuracy,
+        1 => Mode::HighThroughput,
+        _ => return Err(err("unknown mode")),
+    };
+    let service = match buf[6] {
+        0 => ServiceClass::Interactive,
+        1 => ServiceClass::Standard,
+        2 => ServiceClass::Bulk,
+        _ => return Err(err("unknown service class")),
+    };
+    if buf[7] != 0 {
+        return Err(err("reserved byte set"));
+    }
+    let deadline_us = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(buf[24..28].try_into().unwrap());
+    let h = u16::from_le_bytes(buf[28..30].try_into().unwrap());
+    let w = u16::from_le_bytes(buf[30..32].try_into().unwrap());
+    let c = u16::from_le_bytes(buf[32..34].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD {
+        return Err(err("payload exceeds MAX_PAYLOAD"));
+    }
+    if payload_len as u64 != h as u64 * w as u64 * c as u64 || payload_len == 0 {
+        return Err(err("payload length does not match dims"));
+    }
+    Ok(ReqHeader { mode, service, id, deadline_us, payload_len, h, w, c })
+}
+
+/// Reinterpret raw socket bytes as the `i8` pixel vector the request
+/// moves into the coordinator (and the zero-copy feature views borrow
+/// from).  `u8` and `i8` are layout-identical, so this is a pointer
+/// recast of the same allocation — the one copy off the socket is the
+/// only copy the payload ever makes.
+fn bytes_into_i8(v: Vec<u8>) -> Vec<i8> {
+    let mut v = std::mem::ManuallyDrop::new(v);
+    // SAFETY: i8 and u8 have identical size/alignment and every bit
+    // pattern is valid for both; ManuallyDrop forfeits the original
+    // ownership so the allocation is freed exactly once, by the new Vec.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut i8, v.len(), v.capacity()) }
+}
+
+/// The reverse recast for writing logits back onto the socket.
+fn i8_as_bytes(v: &[i8]) -> &[u8] {
+    // SAFETY: same layout argument as `bytes_into_i8`, borrow-only.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}
+
+/// What a polled blocking read ended as.
+enum ReadOutcome {
+    /// The buffer is full.
+    Full,
+    /// Clean EOF before the first byte of this frame.
+    Closed,
+    /// The drain flag was raised before the first byte of this frame.
+    Draining,
+}
+
+/// `read_exact` against a socket with a poll timeout: timeouts between
+/// frames check the drain flag; timeouts *mid-frame* keep waiting (an
+/// in-flight frame is answered, not abandoned) until the drain grace
+/// expires.  EOF mid-frame is an error; EOF at a frame boundary is a
+/// clean close.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    drain: &AtomicBool,
+) -> io::Result<ReadOutcome> {
+    let mut got = 0;
+    let mut drain_seen: Option<Instant> = None;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(ReadOutcome::Closed);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame",
+                ));
+            }
+            Ok(n) => {
+                got += n;
+                drain_seen = None;
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if drain.load(Ordering::Relaxed) {
+                    if got == 0 {
+                        return Ok(ReadOutcome::Draining);
+                    }
+                    let since = *drain_seen.get_or_insert_with(Instant::now);
+                    if since.elapsed() > DRAIN_GRACE {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "drain grace expired mid-frame",
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    id: u64,
+    status: WireStatus,
+    micros: u64,
+    logits: &[i8],
+) -> io::Result<()> {
+    let mut head = [0u8; RESP_HEADER_LEN];
+    head[0..4].copy_from_slice(&MAGIC);
+    head[4] = VERSION;
+    head[5] = status as u8;
+    head[8..16].copy_from_slice(&id.to_le_bytes());
+    head[16..24].copy_from_slice(&micros.to_le_bytes());
+    head[24..28].copy_from_slice(&(logits.len() as u32).to_le_bytes());
+    stream.write_all(&head)?;
+    if !logits.is_empty() {
+        stream.write_all(i8_as_bytes(logits))?;
+    }
+    stream.flush()
+}
+
+/// The TCP front-end: an accept loop plus one blocking reader thread per
+/// connection, all submitting into one [`SubmitHandle`].
+///
+/// Lifecycle: [`WireServer::start`] binds and begins accepting;
+/// [`WireServer::shutdown`] drains (stop accepting → answer in-flight →
+/// join every thread).  Always drain the wire server *before* calling
+/// [`super::Coordinator::shutdown`].
+pub struct WireServer {
+    addr: SocketAddr,
+    drain: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WireServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting.  `metrics` should be the coordinator's shared
+    /// ledger ([`super::Coordinator::metrics`]) so wire counters land in
+    /// the same final report.
+    pub fn start<A: ToSocketAddrs>(
+        listen: A,
+        handle: SubmitHandle,
+        metrics: Arc<Mutex<Metrics>>,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(listen).context("wire: bind")?;
+        let addr = listener.local_addr().context("wire: local_addr")?;
+        let drain = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let drain = Arc::clone(&drain);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("binarray-wire-accept".into())
+                .spawn(move || {
+                    for sock in listener.incoming() {
+                        if drain.load(Ordering::Relaxed) {
+                            // the shutdown wake connection (or any late
+                            // dial) is dropped unserved
+                            break;
+                        }
+                        let Ok(sock) = sock else { continue };
+                        let h = handle.clone();
+                        let d = Arc::clone(&drain);
+                        let m = Arc::clone(&metrics);
+                        if let Ok(t) = std::thread::Builder::new()
+                            .name("binarray-wire-conn".into())
+                            .spawn(move || connection_loop(sock, h, d, m))
+                        {
+                            let mut held = conns.lock().unwrap();
+                            // reap finished connections so a long-lived
+                            // server doesn't accumulate dead handles
+                            let mut live = Vec::with_capacity(held.len() + 1);
+                            for j in held.drain(..) {
+                                if j.is_finished() {
+                                    let _ = j.join();
+                                } else {
+                                    live.push(j);
+                                }
+                            }
+                            live.push(t);
+                            *held = live;
+                        }
+                    }
+                })
+                .context("wire: spawn accept thread")?
+        };
+        Ok(Self { addr, drain, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, answer every in-flight request,
+    /// close every connection, join every thread.  Idempotent against
+    /// clients that never disconnect — a hung mid-frame read is
+    /// abandoned after the drain grace.
+    pub fn shutdown(mut self) {
+        self.drain.store(true, Ordering::Relaxed);
+        // Wake the blocking accept: one throwaway dial to ourselves.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for j in handles {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One connection: read frame → submit → await → write response, until
+/// clean close, drain, or protocol fault.  Synchronous per connection by
+/// design — pipelining across requests comes from concurrent
+/// connections, exactly like one DMA channel per PS core.
+fn connection_loop(
+    mut stream: TcpStream,
+    handle: SubmitHandle,
+    drain: Arc<AtomicBool>,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let _ = stream.set_read_timeout(Some(POLL));
+    let _ = stream.set_nodelay(true);
+    metrics.lock().unwrap().wire_connections += 1;
+    let mut head = [0u8; REQ_HEADER_LEN];
+    loop {
+        match read_full(&mut stream, &mut head, &drain) {
+            Ok(ReadOutcome::Full) => {}
+            Ok(ReadOutcome::Closed) | Ok(ReadOutcome::Draining) => return,
+            Err(_) => return, // mid-frame disconnect: nothing to answer
+        }
+        let hdr = match decode_req_header(&head) {
+            Ok(h) => h,
+            Err(e) => {
+                metrics.lock().unwrap().wire_protocol_errors += 1;
+                // best-effort reply, then close: framing is untrusted
+                let _ = write_response(&mut stream, e.id, WireStatus::BadRequest, 0, &[]);
+                return;
+            }
+        };
+        let mut payload = vec![0u8; hdr.payload_len as usize];
+        match read_full(&mut stream, &mut payload, &drain) {
+            Ok(ReadOutcome::Full) => {}
+            // Closed/Draining are unreachable mid-frame (got > 0 only
+            // after the header), but treat them as a close regardless.
+            _ => return,
+        }
+        // The receipt instant anchors the relative deadline *after* the
+        // payload arrived: a slow client spends its own budget, not the
+        // coordinator's.
+        let deadline = (hdr.deadline_us > 0)
+            .then(|| Instant::now() + Duration::from_micros(hdr.deadline_us));
+        if drain.load(Ordering::Relaxed) {
+            let _ = write_response(&mut stream, hdr.id, WireStatus::Draining, 0, &[]);
+            return;
+        }
+        metrics.lock().unwrap().wire_requests += 1;
+        let rx = handle.submit_sla(
+            bytes_into_i8(payload),
+            hdr.mode,
+            None,
+            deadline,
+            hdr.service,
+        );
+        let (status, micros, logits) = match rx.recv() {
+            Ok(Ok(Reply { logits, latency, .. })) => {
+                (WireStatus::Ok, latency.as_micros().min(u64::MAX as u128) as u64, logits)
+            }
+            Ok(Err(InferError::AdmissionRefused { earliest_feasible, .. })) => (
+                WireStatus::Refused,
+                earliest_feasible.as_micros().min(u64::MAX as u128) as u64,
+                Vec::new(),
+            ),
+            Ok(Err(InferError::DeadlineExceeded { .. })) => {
+                (WireStatus::Deadline, 0, Vec::new())
+            }
+            Ok(Err(InferError::Failed { .. })) | Err(_) => (WireStatus::Failed, 0, Vec::new()),
+        };
+        if write_response(&mut stream, hdr.id, status, micros, &logits).is_err() {
+            // the peer vanished after submit: the reply was consumed
+            // above, so nothing is stranded — just close
+            return;
+        }
+    }
+}
+
+/// Blocking client for the wire protocol — the test suites and
+/// `loadgen`'s building block, not a production SDK.
+///
+/// [`WireClient::try_clone`] splits the underlying socket so one thread
+/// can pace [`WireClient::send`] calls open-loop while another drains
+/// [`WireClient::recv`] — request ids (client-chosen, echoed verbatim)
+/// correlate the two sides.
+pub struct WireClient {
+    stream: TcpStream,
+}
+
+impl WireClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("wire client: connect")?;
+        let _ = stream.set_nodelay(true);
+        Ok(Self { stream })
+    }
+
+    /// A second handle on the same socket (send/recv split).
+    pub fn try_clone(&self) -> Result<Self> {
+        Ok(Self { stream: self.stream.try_clone().context("wire client: clone")? })
+    }
+
+    /// Send one request frame.  `deadline_us == 0` means no deadline;
+    /// `dims` is `(h, w, c)` and must multiply to `image.len()`.
+    pub fn send(
+        &mut self,
+        id: u64,
+        mode: Mode,
+        service: ServiceClass,
+        deadline_us: u64,
+        dims: (u16, u16, u16),
+        image: &[i8],
+    ) -> Result<()> {
+        let len = dims.0 as u64 * dims.1 as u64 * dims.2 as u64;
+        if len != image.len() as u64 {
+            bail!("dims {dims:?} do not match payload length {}", image.len());
+        }
+        let hdr = ReqHeader {
+            mode,
+            service,
+            id,
+            deadline_us,
+            payload_len: image.len() as u32,
+            h: dims.0,
+            w: dims.1,
+            c: dims.2,
+        };
+        let mut head = [0u8; REQ_HEADER_LEN];
+        encode_req_header(&mut head, &hdr);
+        self.stream.write_all(&head).context("wire client: send header")?;
+        self.stream.write_all(i8_as_bytes(image)).context("wire client: send payload")?;
+        self.stream.flush().context("wire client: flush")?;
+        Ok(())
+    }
+
+    /// Receive one response frame (blocks).
+    pub fn recv(&mut self) -> Result<WireReply> {
+        let mut head = [0u8; RESP_HEADER_LEN];
+        self.stream.read_exact(&mut head).context("wire client: recv header")?;
+        if head[0..4] != MAGIC {
+            bail!("wire client: bad response magic");
+        }
+        if head[4] != VERSION {
+            bail!("wire client: unsupported response version {}", head[4]);
+        }
+        let status = WireStatus::from_u8(head[5])
+            .with_context(|| format!("wire client: unknown status {}", head[5]))?;
+        let id = u64::from_le_bytes(head[8..16].try_into().unwrap());
+        let micros = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        let len = u32::from_le_bytes(head[24..28].try_into().unwrap());
+        if len > MAX_PAYLOAD {
+            bail!("wire client: oversized response payload {len}");
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.stream.read_exact(&mut payload).context("wire client: recv payload")?;
+        Ok(WireReply { id, status, micros, logits: bytes_into_i8(payload) })
+    }
+
+    /// Send one request and block for its reply.
+    pub fn request(
+        &mut self,
+        id: u64,
+        mode: Mode,
+        service: ServiceClass,
+        deadline_us: u64,
+        dims: (u16, u16, u16),
+        image: &[i8],
+    ) -> Result<WireReply> {
+        self.send(id, mode, service, deadline_us, dims, image)?;
+        self.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> ReqHeader {
+        ReqHeader {
+            mode: Mode::HighThroughput,
+            service: ServiceClass::Interactive,
+            id: 0xDEAD_BEEF_CAFE_F00D,
+            deadline_us: 2_000,
+            payload_len: 300,
+            h: 10,
+            w: 10,
+            c: 3,
+        }
+    }
+
+    #[test]
+    fn request_header_round_trips() {
+        let hdr = header();
+        let mut buf = [0u8; REQ_HEADER_LEN];
+        encode_req_header(&mut buf, &hdr);
+        assert_eq!(decode_req_header(&buf).unwrap(), hdr);
+    }
+
+    #[test]
+    fn header_rejects_every_malformed_field() {
+        let hdr = header();
+        let mut good = [0u8; REQ_HEADER_LEN];
+        encode_req_header(&mut good, &hdr);
+        let reject = |mutate: &dyn Fn(&mut [u8; REQ_HEADER_LEN]), what: &str| {
+            let mut buf = good;
+            mutate(&mut buf);
+            let e = decode_req_header(&buf).expect_err(what);
+            assert_eq!(e.what, what);
+        };
+        reject(&|b| b[0] = b'X', "bad magic");
+        reject(&|b| b[4] = 99, "unsupported version");
+        reject(&|b| b[5] = 7, "unknown mode");
+        reject(&|b| b[6] = 3, "unknown service class");
+        reject(&|b| b[7] = 1, "reserved byte set");
+        reject(
+            &|b| b[24..28].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes()),
+            "payload exceeds MAX_PAYLOAD",
+        );
+        reject(
+            &|b| b[24..28].copy_from_slice(&299u32.to_le_bytes()),
+            "payload length does not match dims",
+        );
+        reject(
+            &|b| b[24..28].copy_from_slice(&0u32.to_le_bytes()),
+            "payload length does not match dims",
+        );
+        // a bad-magic frame can't trust any field, so it echoes id 0;
+        // every later rejection echoes the client's id
+        let mut buf = good;
+        buf[0] = b'X';
+        assert_eq!(decode_req_header(&buf).unwrap_err().id, 0);
+        buf = good;
+        buf[4] = 99;
+        assert_eq!(decode_req_header(&buf).unwrap_err().id, hdr.id);
+    }
+
+    #[test]
+    fn byte_recasts_round_trip() {
+        let v: Vec<i8> = vec![-128, -1, 0, 1, 127];
+        let bytes = i8_as_bytes(&v).to_vec();
+        assert_eq!(bytes, vec![128, 255, 0, 1, 127]);
+        assert_eq!(bytes_into_i8(bytes), v);
+    }
+
+    #[test]
+    fn wire_status_round_trips() {
+        for s in [
+            WireStatus::Ok,
+            WireStatus::Refused,
+            WireStatus::Deadline,
+            WireStatus::Failed,
+            WireStatus::BadRequest,
+            WireStatus::Draining,
+        ] {
+            assert_eq!(WireStatus::from_u8(s as u8), Some(s));
+        }
+        assert_eq!(WireStatus::from_u8(200), None);
+    }
+}

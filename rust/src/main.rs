@@ -6,6 +6,7 @@
 //!                 [--route batch|shard|auto] [--shard N] [--shard-min-len L] [--deep-queue Q]
 //!                 [--deadline-ms D] [--tight-slack-us T] [--lease-slack-us H]
 //!                 [--class interactive|standard|bulk] [--slo-ms S] [--arbitration slo|oldest]
+//!                 [--listen ADDR] [--listen-secs N]   # TCP wire front-end instead of calib replay
 //! binarray perf   [--m M]               # Table III analytical model
 //! binarray area                         # Table IV resource model
 //! binarray listing                      # compiled CNN processing program
@@ -22,7 +23,7 @@ use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
 use binarray::coordinator::{
     Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, Mode,
-    RoutePolicy, ServiceClass,
+    RoutePolicy, ServiceClass, WireServer,
 };
 use binarray::tensor::Shape;
 use binarray::{area, golden, isa, nn, perf};
@@ -184,7 +185,6 @@ fn info() -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let net = load_net()?;
     // --route picks the dispatch policy: `batch` (whole-frame batching,
     // throughput), `shard` (scatter every frame's row tiles over leased
     // cards, latency) or `auto` (route per request from frame size,
@@ -242,6 +242,15 @@ fn serve(args: &Args) -> Result<()> {
         classes,
         arbitration,
     };
+    // --listen flips serve into the TCP wire front-end: instead of
+    // replaying the calibration batch in-process, the coordinator sits
+    // behind `coordinator::wire` and real clients (`loadgen`, the wire
+    // test suites) stream frames over the socket.
+    let listen: String = args.get("listen", String::new())?;
+    if !listen.is_empty() {
+        return serve_wire(args, cfg, &listen);
+    }
+    let net = load_net()?;
     let frames: usize = args.get("frames", 64)?;
     let mode = match args.get::<String>("mode", "accurate".into())?.as_str() {
         "fast" => Mode::HighThroughput,
@@ -320,6 +329,39 @@ fn serve(args: &Args) -> Result<()> {
         correct,
         answered
     );
+    Ok(())
+}
+
+/// `serve --listen ADDR`: run the coordinator behind the TCP wire
+/// front-end for `--listen-secs` seconds (default 30), then drain the
+/// wire server, shut the coordinator down and print the merged summary
+/// (wire counters included).
+fn serve_wire(args: &Args, cfg: CoordinatorConfig, listen: &str) -> Result<()> {
+    // Built artifacts when present, the synthetic CNN-A stand-in
+    // otherwise — the loopback smoke path must run on a bare checkout.
+    let net = load_net().unwrap_or_else(|_| {
+        let mut rng = binarray::util::rng::Xoshiro256::new(0xB14A);
+        binarray::artifacts::synthetic_cnn_a(&mut rng, 2)
+    });
+    let dims = binarray::isa::compiler::infer_input_dims(&net);
+    let shape = Shape::new(dims.1, dims.0, dims.2);
+    let secs: u64 = args.get("listen-secs", 30)?;
+    let coord = Coordinator::start(cfg, net)?;
+    let wire = WireServer::start(listen, coord.handle(), std::sync::Arc::clone(&coord.metrics))?;
+    println!(
+        "wire: listening on {} — frames are {}x{}x{} ({} bytes), draining after {secs}s",
+        wire.local_addr(),
+        shape.h,
+        shape.w,
+        shape.c,
+        shape.len(),
+    );
+    std::thread::sleep(Duration::from_secs(secs));
+    // Drain order matters: the wire server first (answer in-flight
+    // requests while workers are still alive), the coordinator second.
+    wire.shutdown();
+    let m = coord.shutdown();
+    println!("{}", m.summary());
     Ok(())
 }
 

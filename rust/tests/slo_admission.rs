@@ -177,11 +177,12 @@ fn admission_budget_refuses_before_any_cost() {
     }
 }
 
-/// The capacity gate, end to end on a full-size frame: once a served
-/// frame calibrates the pace model, an SLO far below the observed
-/// per-frame wall is refused at admission — typed, instant, zero
-/// compute — while an uncalibrated coordinator admits the same request
-/// (nothing is provable yet) and SLO-free traffic is never refused.
+/// The capacity gate, end to end on a full-size frame: an SLO far below
+/// the per-frame cost floor is refused at admission — typed, instant,
+/// zero compute — on a *fresh* coordinator (the model is seeded with
+/// the plan-derived pace at construction, so hopeless work is provable
+/// before any completion) as well as after calibration, while SLO-free
+/// traffic is never refused.
 #[test]
 fn capacity_gate_refuses_unmeetable_slo_after_calibration() {
     let mut rng = Xoshiro256::new(0xCA9A);
@@ -202,29 +203,20 @@ fn capacity_gate_refuses_unmeetable_slo_after_calibration() {
         },
     );
 
-    // Uncalibrated (fresh pool, no completion observed): the hopeless
-    // SLO is *admitted* — it will shed or complete late downstream, but
-    // the model refuses nothing it can't prove.
+    // Fresh pool, no completion observed: the seeded pace (one
+    // estimated cycle per simulated 400 MHz tick — cheaper than any
+    // host could serve) already prices a ms-scale frame above 100 µs,
+    // so the hopeless SLO is refused before the first byte of compute.
     {
         let coord = Coordinator::start(cfg(1, classes), net.clone()).unwrap();
-        match coord.infer_sla(
-            image.clone(),
-            Mode::HighAccuracy,
-            None,
-            None,
-            ServiceClass::Interactive,
-        ) {
-            Ok(reply) => assert_eq!(reply.logits, want),
-            Err(e) => {
-                let ie: InferError = e.downcast().expect("typed InferError");
-                assert!(
-                    ie.is_deadline(),
-                    "uncalibrated model must admit (shed downstream, never refused): {ie:?}"
-                );
-            }
-        }
+        let err = coord
+            .infer_sla(image.clone(), Mode::HighAccuracy, None, None, ServiceClass::Interactive)
+            .expect_err("the seeded model proves a 100 µs SLO hopeless at startup");
+        let ie: InferError = err.downcast().expect("typed InferError");
+        assert!(ie.is_refused(), "typed refusal on a fresh coordinator, got {ie:?}");
         let m = coord.shutdown();
-        assert_eq!(m.admission_refused, 0, "nothing provable, nothing refused");
+        assert_eq!(m.admission_refused, 1, "seeded floor refuses before calibration");
+        assert_eq!(m.completed, 0, "refused work never computed");
         assert_identity(&m);
     }
 
@@ -261,6 +253,59 @@ fn capacity_gate_refuses_unmeetable_slo_after_calibration() {
     assert_eq!(m.batches, 3, "a refusal costs no batch");
     assert_eq!(m.latency.count(), 3, "no latency sample for refused work");
     assert_eq!(m.classes[ServiceClass::Interactive.index()].admission_refused, 1);
+}
+
+/// Cold-start regression: a full burst on a *fresh* coordinator, every
+/// frame carrying a generous-but-real SLO, must be admitted and served
+/// in full.  Before the model was seeded, the first burst was priced
+/// off whatever the first completion happened to measure — a slow
+/// outlier (cold caches, page faults) could mass-refuse work the pool
+/// served comfortably; with the pace seeded at construction and
+/// observations only ever lowering it, the whole burst rides through.
+#[test]
+fn fresh_coordinator_admits_a_full_burst_under_a_generous_slo() {
+    let mut rng = Xoshiro256::new(0xC01D);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    for workers in test_cards() {
+        let classes = ClassTable::default().with(
+            ServiceClass::Interactive,
+            ClassSpec {
+                slo: Some(Duration::from_secs(30)),
+                dispatch_bias: None,
+                admission_limit: 0,
+            },
+        );
+        // No warmup, no calibration: the burst is the first traffic the
+        // coordinator ever sees.
+        let coord = Coordinator::start(cfg(workers, classes), net.clone()).unwrap();
+        let burst = 64usize;
+        let rxs: Vec<_> = (0..burst)
+            .map(|_| {
+                coord.submit_sla(
+                    image.clone(),
+                    Mode::HighAccuracy,
+                    None,
+                    None,
+                    ServiceClass::Interactive,
+                )
+            })
+            .collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            let reply = rx
+                .recv()
+                .expect("answered")
+                .unwrap_or_else(|e| panic!("burst frame {i} must be admitted and served: {e}"));
+            assert_eq!(reply.logits, want, "frame {i}, {workers} workers");
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.submitted, burst as u64, "{workers} workers");
+        assert_eq!(m.completed, burst as u64);
+        assert_eq!(m.admission_refused, 0, "cold-start burst is never mass-refused");
+        assert_eq!(m.failed, 0);
+        assert_identity(&m);
+    }
 }
 
 /// `coordinator_stress`-style concurrency over mixed classes, budgets

@@ -1,0 +1,445 @@
+//! The TCP wire front-end, end to end: logits served over a real socket
+//! are bit-identical to `golden::forward` for every paper array config ×
+//! accuracy mode; malformed frames (bad magic/version, dims/length
+//! mismatch, oversized length prefixes) are answered `BadRequest` and
+//! never reach the coordinator; truncated headers and mid-frame
+//! disconnects close cleanly without orphaning work; random garbage
+//! never kills the server; and concurrent connections survive a drain
+//! with every in-flight request answered.  The accounting identity
+//! (`submitted == completed + failed + refused`) is re-checked across
+//! the wire boundary on every run.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::ArrayConfig;
+use binarray::coordinator::wire::{MAGIC, MAX_PAYLOAD, REQ_HEADER_LEN, RESP_HEADER_LEN, VERSION};
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Metrics, Mode, RoutePolicy, ServiceClass,
+    WireClient, WireServer, WireStatus,
+};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// Tiny conv+dense net with M=4 binary levels, so the two accuracy modes
+/// genuinely differ on M_arch=2 hardware (high-throughput truncates to 2
+/// levels; a net with M == M_arch would make the mode sweep vacuous).
+fn tiny_net_m4(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 4;
+    let conv = QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, 4 * m * 3 * 3 * 3),
+        alpha_q: (0..4 * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..4).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d: 4,
+        m,
+        kh: 3,
+        kw: 3,
+        c: 3,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool: 2,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, n_in: usize, relu: bool| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * n_in),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    // 10×10×3 → conv3 → 8×8×4 → pool2 → 4×4×4 → dense 8 → dense 5
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![conv, dense(rng, 8, 64, true), dense(rng, 5, 8, false)],
+    };
+    assert_eq!(binarray::isa::compiler::infer_input_dims(&net), (10, 10, 3));
+    (net, Shape::new(10, 10, 3))
+}
+
+const DIMS: (u16, u16, u16) = (10, 10, 3);
+
+fn cfg(array: ArrayConfig, workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        array,
+        workers,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_micros(200),
+        },
+        route: RoutePolicy::BatchOnly,
+        ..Default::default()
+    }
+}
+
+/// Start a coordinator + wire server pair on an ephemeral port.
+fn serve(array: ArrayConfig, workers: usize, net: QuantNetwork) -> (Coordinator, WireServer) {
+    let coord = Coordinator::start(cfg(array, workers), net).unwrap();
+    let wire = WireServer::start(
+        "127.0.0.1:0",
+        coord.handle(),
+        std::sync::Arc::clone(&coord.metrics),
+    )
+    .unwrap();
+    (coord, wire)
+}
+
+/// Drain wire-then-coordinator (the required order) and hand back the
+/// final metrics ledger.
+fn drain(coord: Coordinator, wire: WireServer) -> Metrics {
+    wire.shutdown();
+    coord.shutdown()
+}
+
+fn assert_identity(m: &Metrics) {
+    assert_eq!(
+        m.submitted,
+        m.completed + m.failed + m.admission_refused,
+        "submitted = completed + failed + refused must hold across the wire \
+         (submitted {}, completed {}, failed {}, refused {})",
+        m.submitted,
+        m.completed,
+        m.failed,
+        m.admission_refused
+    );
+}
+
+/// A raw request header the tests can deliberately corrupt — built by
+/// hand so nothing in the client library "helpfully" fixes it first.
+#[allow(clippy::too_many_arguments)]
+fn raw_header(
+    magic: [u8; 4],
+    version: u8,
+    mode: u8,
+    service: u8,
+    reserved: u8,
+    id: u64,
+    deadline_us: u64,
+    payload_len: u32,
+    dims: (u16, u16, u16),
+) -> [u8; REQ_HEADER_LEN] {
+    let mut b = [0u8; REQ_HEADER_LEN];
+    b[0..4].copy_from_slice(&magic);
+    b[4] = version;
+    b[5] = mode;
+    b[6] = service;
+    b[7] = reserved;
+    b[8..16].copy_from_slice(&id.to_le_bytes());
+    b[16..24].copy_from_slice(&deadline_us.to_le_bytes());
+    b[24..28].copy_from_slice(&payload_len.to_le_bytes());
+    b[28..30].copy_from_slice(&dims.0.to_le_bytes());
+    b[30..32].copy_from_slice(&dims.1.to_le_bytes());
+    b[32..34].copy_from_slice(&dims.2.to_le_bytes());
+    b
+}
+
+/// Read one raw response: (status byte, echoed id, payload length).
+fn read_raw_response(stream: &mut TcpStream) -> (u8, u64, u32) {
+    let mut head = [0u8; RESP_HEADER_LEN];
+    stream.read_exact(&mut head).expect("response header");
+    assert_eq!(head[0..4], MAGIC, "response magic");
+    assert_eq!(head[4], VERSION, "response version");
+    let id = u64::from_le_bytes(head[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes(head[24..28].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    stream.read_exact(&mut payload).expect("response payload");
+    (head[5], id, len)
+}
+
+/// Logits over the socket are byte-identical to the golden model for
+/// every paper array config in both accuracy modes — the wire front-end
+/// moves bytes, never semantics.
+#[test]
+fn wire_serves_golden_logits_for_every_config_and_mode() {
+    let mut rng = Xoshiro256::new(0x3172E);
+    let (net, shape) = tiny_net_m4(&mut rng);
+    let images: Vec<Vec<i8>> = (0..3).map(|_| prop::i8_vec(&mut rng, shape.len())).collect();
+    for array in [
+        ArrayConfig::new(1, 8, 2),
+        ArrayConfig::new(1, 32, 2),
+        ArrayConfig::new(4, 32, 4),
+    ] {
+        for mode in [Mode::HighAccuracy, Mode::HighThroughput] {
+            let m_run = match mode {
+                Mode::HighAccuracy => None,
+                Mode::HighThroughput => Some(mode.m_run(net.max_m(), array.m_arch)),
+            };
+            let (coord, wire) = serve(array, 2, net.clone());
+            let mut client = WireClient::connect(wire.local_addr()).unwrap();
+            for (i, image) in images.iter().enumerate() {
+                let reply = client
+                    .request(i as u64, mode, ServiceClass::Standard, 0, DIMS, image)
+                    .unwrap();
+                assert_eq!(reply.id, i as u64, "id echoed");
+                assert_eq!(reply.status, WireStatus::Ok, "served ({array:?}, {mode:?})");
+                assert_eq!(
+                    reply.logits,
+                    golden::forward(&net, image, shape, m_run),
+                    "wire logits diverged from golden ({array:?}, {mode:?}, frame {i})"
+                );
+            }
+            drop(client);
+            let m = drain(coord, wire);
+            assert_eq!(m.wire_requests, images.len() as u64);
+            assert_eq!(m.wire_protocol_errors, 0);
+            assert_eq!(m.completed, images.len() as u64);
+            assert_identity(&m);
+        }
+    }
+}
+
+/// Every malformed-header shape is answered `BadRequest` (with the id
+/// echoed whenever the id bytes could be trusted) and the connection is
+/// closed; none of them ever reaches the coordinator.
+#[test]
+fn malformed_frames_get_bad_request_and_never_reach_the_coordinator() {
+    let mut rng = Xoshiro256::new(0xBAD);
+    let (net, shape) = tiny_net_m4(&mut rng);
+    let (coord, wire) = serve(ArrayConfig::new(1, 8, 2), 1, net);
+    let addr = wire.local_addr();
+    let good_len = shape.len() as u32;
+
+    let cases: Vec<(&str, [u8; REQ_HEADER_LEN], u64)> = vec![
+        (
+            "bad magic",
+            raw_header(*b"XNRY", VERSION, 0, 1, 0, 7, 0, good_len, DIMS),
+            0, // nothing after a bad magic is trusted, id echoes as 0
+        ),
+        (
+            "bad version",
+            raw_header(MAGIC, 9, 0, 1, 0, 8, 0, good_len, DIMS),
+            8,
+        ),
+        (
+            "unknown mode",
+            raw_header(MAGIC, VERSION, 5, 1, 0, 9, 0, good_len, DIMS),
+            9,
+        ),
+        (
+            "reserved byte set",
+            raw_header(MAGIC, VERSION, 0, 1, 1, 10, 0, good_len, DIMS),
+            10,
+        ),
+        (
+            "oversized length prefix",
+            raw_header(MAGIC, VERSION, 0, 1, 0, 11, 0, MAX_PAYLOAD + 1, DIMS),
+            11,
+        ),
+        (
+            "dims/length mismatch",
+            raw_header(MAGIC, VERSION, 0, 1, 0, 12, 0, good_len - 1, DIMS),
+            12,
+        ),
+    ];
+    let n_cases = cases.len() as u64;
+    for (what, header, want_id) in cases {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(&header).unwrap();
+        stream.flush().unwrap();
+        let (status, id, len) = read_raw_response(&mut stream);
+        assert_eq!(status, WireStatus::BadRequest as u8, "{what}: BadRequest");
+        assert_eq!(id, want_id, "{what}: echoed id");
+        assert_eq!(len, 0, "{what}: no payload on a reject");
+        // the connection is closed after the reject — framing is untrusted
+        let mut probe = [0u8; 1];
+        assert_eq!(stream.read(&mut probe).unwrap(), 0, "{what}: closed after reject");
+    }
+
+    let m = drain(coord, wire);
+    assert_eq!(m.wire_protocol_errors, n_cases, "every case counted");
+    assert_eq!(m.wire_requests, 0, "nothing reached the coordinator");
+    assert_eq!(m.submitted, 0);
+    assert_identity(&m);
+}
+
+/// Truncated headers and mid-frame disconnects (header sent, payload cut
+/// short) close cleanly: no reply owed, nothing submitted, no protocol
+/// error counted (the peer vanished; there was no frame to judge), and
+/// the server keeps serving other connections.
+#[test]
+fn truncated_and_midframe_disconnects_orphan_nothing() {
+    let mut rng = Xoshiro256::new(0x7C);
+    let (net, shape) = tiny_net_m4(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let (coord, wire) = serve(ArrayConfig::new(1, 8, 2), 1, net);
+    let addr = wire.local_addr();
+
+    // half a header, then gone
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let header = raw_header(MAGIC, VERSION, 0, 1, 0, 1, 0, shape.len() as u32, DIMS);
+        stream.write_all(&header[..10]).unwrap();
+        stream.flush().unwrap();
+    }
+    // a full, valid header — then only half the payload, then gone
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let header = raw_header(MAGIC, VERSION, 0, 1, 0, 2, 0, shape.len() as u32, DIMS);
+        stream.write_all(&header).unwrap();
+        stream.write_all(&vec![0u8; shape.len() / 2]).unwrap();
+        stream.flush().unwrap();
+    }
+    // the server is still fully alive for a well-behaved client
+    let mut client = WireClient::connect(addr).unwrap();
+    let reply = client
+        .request(3, Mode::HighAccuracy, ServiceClass::Standard, 0, DIMS, &image)
+        .unwrap();
+    assert_eq!(reply.status, WireStatus::Ok);
+    assert_eq!(reply.logits, want);
+    drop(client);
+
+    let m = drain(coord, wire);
+    assert_eq!(m.wire_requests, 1, "only the whole frame was submitted");
+    assert_eq!(
+        m.wire_protocol_errors, 0,
+        "a vanished peer is not a protocol error — there was no frame to judge"
+    );
+    assert_eq!(m.completed, 1);
+    assert_identity(&m);
+}
+
+/// Random garbage — wrong lengths, wrong bytes, abrupt closes — must
+/// never panic a connection thread or wedge the server.
+#[test]
+fn fuzzed_garbage_never_kills_the_server() {
+    let mut rng = Xoshiro256::new(0xF022);
+    let (net, shape) = tiny_net_m4(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let (coord, wire) = serve(ArrayConfig::new(1, 8, 2), 1, net);
+    let addr = wire.local_addr();
+
+    for _ in 0..24 {
+        let n = rng.below(3 * REQ_HEADER_LEN as u64) as usize;
+        let junk: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let _ = stream.write_all(&junk);
+        let _ = stream.flush();
+        // drain whatever the server says (BadRequest or nothing); short
+        // timeout — junk below a full header gets silence, not a reply
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+        let mut sink = Vec::new();
+        let _ = stream.read_to_end(&mut sink);
+    }
+
+    // still serving, still golden
+    let mut client = WireClient::connect(addr).unwrap();
+    let reply = client
+        .request(1, Mode::HighAccuracy, ServiceClass::Standard, 0, DIMS, &image)
+        .unwrap();
+    assert_eq!(reply.status, WireStatus::Ok);
+    assert_eq!(reply.logits, want);
+    drop(client);
+
+    let m = drain(coord, wire);
+    assert_eq!(m.completed, 1, "exactly the one real frame computed");
+    assert_identity(&m);
+}
+
+/// Drain under concurrent connections: every request sent before or
+/// during the drain is answered exactly once — `Ok` (it made it in) or
+/// `Draining` (it arrived too late) — and the listener refuses new work
+/// afterwards.  No reply is ever silently dropped.
+#[test]
+fn concurrent_connections_survive_drain_with_every_request_answered() {
+    let mut rng = Xoshiro256::new(0xD8A1);
+    let (net, shape) = tiny_net_m4(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let (coord, wire) = serve(ArrayConfig::new(1, 8, 2), 2, net);
+    let addr = wire.local_addr();
+    let n_conns = 4usize;
+
+    let mut clients: Vec<WireClient> = (0..n_conns)
+        .map(|_| WireClient::connect(addr).unwrap())
+        .collect();
+    // one settled round-trip per connection before the drain starts
+    for (i, c) in clients.iter_mut().enumerate() {
+        let reply = c
+            .request(i as u64, Mode::HighAccuracy, ServiceClass::Standard, 0, DIMS, &image)
+            .unwrap();
+        assert_eq!(reply.status, WireStatus::Ok);
+        assert_eq!(reply.logits, want);
+    }
+
+    // now race a second request on every connection against shutdown
+    let outcomes = std::thread::scope(|s| {
+        let handles: Vec<_> = clients
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut c)| {
+                let img = image.clone();
+                s.spawn(move || {
+                    c.request(
+                        (100 + i) as u64,
+                        Mode::HighAccuracy,
+                        ServiceClass::Standard,
+                        0,
+                        DIMS,
+                        &img,
+                    )
+                })
+            })
+            .collect();
+        wire.shutdown();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect::<Vec<_>>()
+    });
+
+    let mut served = 0u64;
+    for out in outcomes {
+        match out {
+            Ok(reply) => match reply.status {
+                WireStatus::Ok => {
+                    assert_eq!(reply.logits, want, "drained reply still golden");
+                    served += 1;
+                }
+                WireStatus::Draining => assert!(reply.logits.is_empty()),
+                other => panic!("unexpected drain-race status {other:?}"),
+            },
+            // the drain closed the connection before the frame's first
+            // byte was read: the client sees a clean EOF and nothing was
+            // submitted — allowed, the frame never began processing
+            Err(_) => {}
+        }
+    }
+
+    // post-drain the port is dead: either the dial or the round-trip fails
+    let refused = match WireClient::connect(addr) {
+        Err(_) => true,
+        Ok(mut c) => c
+            .request(999, Mode::HighAccuracy, ServiceClass::Standard, 0, DIMS, &image)
+            .is_err(),
+    };
+    assert!(refused, "the drained listener must not serve new work");
+
+    let m = coord.shutdown();
+    assert_eq!(
+        m.wire_requests,
+        n_conns as u64 + served,
+        "wire_requests counts exactly the submitted frames"
+    );
+    assert_eq!(m.completed, n_conns as u64 + served);
+    assert_eq!(m.wire_protocol_errors, 0);
+    assert_identity(&m);
+}
