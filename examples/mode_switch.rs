@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use binarray::artifacts::{self, CalibBatch, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem, CLOCK_HZ};
-use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, InferRequest, Mode};
 
 fn main() -> anyhow::Result<()> {
     let dir = artifacts::default_dir();
@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
         } else {
             Mode::HighThroughput
         };
-        rxs.push((mode, coord.submit(calib.image(i % calib.n).to_vec(), mode)));
+        rxs.push((mode, coord.submit(InferRequest::new(calib.image(i % calib.n).to_vec()).mode(mode))));
     }
     let (mut cyc_hi, mut n_hi, mut cyc_lo, mut n_lo) = (0u64, 0u64, 0u64, 0u64);
     for (mode, rx) in rxs {

@@ -23,8 +23,8 @@ use std::time::{Duration, Instant};
 use binarray::artifacts::{self, CalibBatch, QuantNetwork};
 use binarray::binarray::ArrayConfig;
 use binarray::coordinator::{
-    BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, DispatchClass, Mode,
-    RoutePolicy, ServiceClass, WireClient, WireServer, WireStatus,
+    BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, DispatchClass,
+    InferRequest, Mode, RoutePolicy, ServiceClass, WireClient, WireServer, WireStatus,
 };
 use binarray::runtime::Runtime;
 use binarray::{nn, perf};
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let mut labels = Vec::with_capacity(frames);
     for i in 0..frames {
         let idx = i % calib.n;
-        rxs.push(coord.submit(calib.image(idx).to_vec(), Mode::HighAccuracy));
+        rxs.push(coord.submit(InferRequest::new(calib.image(idx).to_vec())));
         labels.push(calib.labels[idx]);
     }
     let mut correct = 0usize;
@@ -122,11 +122,7 @@ fn main() -> anyhow::Result<()> {
             } else {
                 DispatchClass::Batch
             };
-            handle.submit_routed(
-                calib.image(i % calib.n).to_vec(),
-                Mode::HighAccuracy,
-                Some(class),
-            )
+            handle.submit(InferRequest::new(calib.image(i % calib.n).to_vec()).route(class))
         })
         .collect();
     for rx in rxs {
@@ -179,12 +175,7 @@ fn main() -> anyhow::Result<()> {
                 1 => Some(t0 + Duration::from_secs(2)),    // moderate
                 _ => None,                                 // best effort
             };
-            handle.submit_qos(
-                calib.image(i % calib.n).to_vec(),
-                Mode::HighAccuracy,
-                None,
-                deadline,
-            )
+            handle.submit(InferRequest::new(calib.image(i % calib.n).to_vec()).deadline(deadline))
         })
         .collect();
     let mut qos_shed = 0usize;
@@ -257,13 +248,7 @@ fn main() -> anyhow::Result<()> {
                 1 => ServiceClass::Standard,
                 _ => ServiceClass::Bulk,
             };
-            handle.submit_sla(
-                calib.image(i % calib.n).to_vec(),
-                Mode::HighAccuracy,
-                None,
-                None,
-                service,
-            )
+            handle.submit(InferRequest::new(calib.image(i % calib.n).to_vec()).service(service))
         })
         .collect();
     let (mut class_refused, mut class_shed) = (0usize, 0usize);
@@ -328,7 +313,7 @@ fn main() -> anyhow::Result<()> {
         std::sync::Arc::clone(&coord.metrics),
     )?;
     let dims = (48u16, 48u16, 3u16);
-    let in_process = coord.infer(calib.image(0).to_vec(), Mode::HighAccuracy)?;
+    let in_process = coord.infer(InferRequest::new(calib.image(0).to_vec()))?;
     let mut client = WireClient::connect(wire.local_addr())?;
     let probe =
         client.request(0, Mode::HighAccuracy, ServiceClass::Standard, 0, dims, calib.image(0))?;

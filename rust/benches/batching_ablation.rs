@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use binarray::artifacts::{self, CalibBatch, QuantNetwork};
 use binarray::binarray::ArrayConfig;
-use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, InferRequest, Mode};
 use binarray::util::rng::Xoshiro256;
 
 fn run_policy(
@@ -40,7 +40,9 @@ fn run_policy(
     let t0 = Instant::now();
     let mut rxs = Vec::with_capacity(frames);
     for i in 0..frames {
-        rxs.push(coord.submit(calib.image(i % calib.n).to_vec(), Mode::HighThroughput));
+        rxs.push(coord.submit(
+            InferRequest::new(calib.image(i % calib.n).to_vec()).mode(Mode::HighThroughput),
+        ));
         let gap = (-rng.f64().max(1e-9).ln() * 2.0).min(8.0);
         std::thread::sleep(Duration::from_micros((gap * 1000.0) as u64));
     }

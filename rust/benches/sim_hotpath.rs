@@ -25,7 +25,11 @@
 //!     card goes to the lane with the least slack relative to its class
 //!     SLO) vs oldest-first — per-class met/missed/shed/refused counts
 //!     in the `slo` JSON section, admitted replies asserted bit-identical
-//!     to the golden model in both runs.
+//!     to the golden model in both runs;
+//!   * multi-model serving: two registry models (CNN-A beside a synthetic
+//!     net on a different array config) under one interleaved overload,
+//!     every reply asserted against *its own* model's golden — per-model
+//!     fps/p99 in the `multi_model` JSON section.
 //!
 //! Results are also written to `BENCH_sim_hotpath.json` so the perf
 //! trajectory is machine-readable across PRs (see `bench_gate` and the
@@ -45,8 +49,8 @@ use binarray::binarray::plan::schedule;
 use binarray::binarray::{ArrayConfig, BinArraySystem};
 use binarray::coordinator::{
     Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig,
-    DispatchClass, LatencyStats, Mode, RoutePolicy, ServiceClass, WireClient, WireServer,
-    WireStatus,
+    DispatchClass, InferRequest, LatencyStats, Mode, ModelRegistry, RoutePolicy, ServiceClass,
+    WireClient, WireServer, WireStatus,
 };
 use binarray::isa::{compile_network, Program};
 use binarray::kernel::{self, KernelKind};
@@ -388,7 +392,7 @@ fn main() {
     .unwrap();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..frames)
-        .map(|i| coord.submit(images[i % images.len()].clone(), Mode::HighAccuracy))
+        .map(|i| coord.submit(InferRequest::new(images[i % images.len()].clone())))
         .collect();
     for rx in rxs {
         rx.recv().unwrap().unwrap();
@@ -421,7 +425,7 @@ fn main() {
         .unwrap();
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..128)
-            .map(|i| coord.submit(images[i % images.len()].clone(), Mode::HighAccuracy))
+            .map(|i| coord.submit(InferRequest::new(images[i % images.len()].clone())))
             .collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();
@@ -462,12 +466,12 @@ fn main() {
         )
         .unwrap();
         // warmup
-        coord.infer(images[0].clone(), Mode::HighAccuracy).unwrap();
+        coord.infer(InferRequest::new(images[0].clone())).unwrap();
         let t0 = Instant::now();
         let mut replies = Vec::with_capacity(shard_frames);
         for i in 0..shard_frames {
             let img = images[i % images.len()].clone();
-            replies.push(coord.infer(img, Mode::HighAccuracy).unwrap());
+            replies.push(coord.infer(InferRequest::new(img)).unwrap());
         }
         let per = t0.elapsed().as_secs_f64() / shard_frames as f64;
         coord.shutdown();
@@ -523,16 +527,16 @@ fn main() {
     )
     .unwrap();
     let h = coord.handle();
-    h.infer(images[0].clone(), Mode::HighAccuracy).unwrap(); // warmup
+    h.infer(InferRequest::new(images[0].clone())).unwrap(); // warmup
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..hybrid_frames)
         .map(|i| {
             let class = if i % 4 == 0 {
-                Some(DispatchClass::Shard)
+                DispatchClass::Shard
             } else {
-                Some(DispatchClass::Batch)
+                DispatchClass::Batch
             };
-            h.submit_routed(images[i % images.len()].clone(), Mode::HighAccuracy, class)
+            h.submit(InferRequest::new(images[i % images.len()].clone()).route(class))
         })
         .collect();
     for rx in rxs {
@@ -585,17 +589,15 @@ fn main() {
             qnet.clone(),
         )
         .unwrap();
-        coord.infer(images[0].clone(), Mode::HighAccuracy).unwrap(); // warmup
+        coord.infer(InferRequest::new(images[0].clone())).unwrap(); // warmup
         let t0 = Instant::now();
         let rxs: Vec<_> = (0..dl_frames)
             .map(|i| {
                 let deadline = budget_of(i).map(|b| t0 + b);
-                coord.submit_qos(
-                    images[i % images.len()].clone(),
-                    Mode::HighAccuracy,
-                    None,
-                    // the blind run carries the same budgets, unstamped
-                    if aware { deadline } else { None },
+                coord.submit(
+                    InferRequest::new(images[i % images.len()].clone())
+                        // the blind run carries the same budgets, unstamped
+                        .deadline(if aware { deadline } else { None }),
                 )
             })
             .collect();
@@ -694,25 +696,17 @@ fn main() {
             qnet.clone(),
         )
         .unwrap();
-        coord.infer(image.clone(), Mode::HighAccuracy).unwrap(); // warmup
+        coord.infer(InferRequest::new(image.clone())).unwrap(); // warmup
         let h = coord.handle();
         let mut rxs = Vec::new();
         for _ in 0..slo_bulk {
-            rxs.push(h.submit_sla(
-                image.clone(),
-                Mode::HighAccuracy,
-                None,
-                None,
-                ServiceClass::Bulk,
-            ));
+            rxs.push(h.submit(InferRequest::new(image.clone()).service(ServiceClass::Bulk)));
         }
         for _ in 0..slo_interactive {
-            rxs.push(h.submit_sla(
-                image.clone(),
-                Mode::HighThroughput,
-                None,
-                None,
-                ServiceClass::Interactive,
+            rxs.push(h.submit(
+                InferRequest::new(image.clone())
+                    .mode(Mode::HighThroughput)
+                    .service(ServiceClass::Interactive),
             ));
         }
         for (i, rx) in rxs.into_iter().enumerate() {
@@ -848,6 +842,83 @@ fn main() {
         wire_p99.as_micros()
     );
 
+    // === multi-model serving: two registry models, one overload =========
+    // Two models behind one coordinator: CNN-A on the [1,8,2] array and
+    // a second (synthetic) network on [1,32,2], hit by an interleaved
+    // burst that oversubscribes the pool.  Every reply is asserted
+    // bit-identical to *its own* model's golden forward — interleaving
+    // moves scheduling, never arithmetic — and the per-model counters
+    // (fps, p99) land in the `multi_model` JSON section.
+    println!("\n=== multi-model: interleaved overload on two registry models ===");
+    let mm_frames = 48usize;
+    let mm_net = artifacts::synthetic_cnn_a(&mut Xoshiro256::new(0xB14B), 4);
+    let mm_shape = {
+        let d = binarray::isa::compiler::infer_input_dims(&mm_net);
+        Shape::new(d.1, d.0, d.2)
+    };
+    let mm_image = prop::i8_vec(&mut rng, mm_shape.len());
+    let want_a = golden::forward(&qnet, &image, shape, None);
+    let want_b = golden::forward(&mm_net, &mm_image, mm_shape, None);
+    let registry = std::sync::Arc::new(ModelRegistry::new(2));
+    registry.register("cnn-a", ArrayConfig::new(1, 8, 2), qnet.clone(), 0).unwrap();
+    let mm_id = registry.register("synth-b", ArrayConfig::new(1, 32, 2), mm_net, 0).unwrap();
+    let coord = Coordinator::with_registry(
+        CoordinatorConfig {
+            array: ArrayConfig::new(1, 8, 2),
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_micros(500),
+            },
+            ..Default::default()
+        },
+        std::sync::Arc::clone(&registry),
+    )
+    .unwrap();
+    // warm both models' worker-side system caches
+    coord.infer(InferRequest::new(image.clone())).unwrap();
+    coord.infer(InferRequest::new(mm_image.clone()).model(mm_id)).unwrap();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..mm_frames)
+        .map(|i| {
+            if i % 2 == 0 {
+                (false, coord.submit(InferRequest::new(image.clone())))
+            } else {
+                (true, coord.submit(InferRequest::new(mm_image.clone()).model(mm_id)))
+            }
+        })
+        .collect();
+    for (is_b, rx) in rxs {
+        let r = rx.recv().unwrap().expect("multi-model burst served");
+        let want = if is_b { &want_b } else { &want_a };
+        assert_eq!(&r.logits, want, "reply diverged from its model's golden (b={is_b})");
+    }
+    let mm_wall = t0.elapsed().as_secs_f64();
+    let mm = coord.shutdown();
+    let mut multi_model_json: Vec<String> = Vec::new();
+    let mut mm_ids: Vec<&u32> = mm.models.keys().collect();
+    mm_ids.sort_unstable();
+    for id in mm_ids {
+        let s = &mm.models[id];
+        // the warmup frame is in the counters; fps over the timed burst
+        let fps = (s.completed.saturating_sub(1)) as f64 / mm_wall.max(1e-9);
+        println!(
+            "  model {id} ({}): {} completed, {:.1} fps, p50 {:?} p99 {:?}",
+            s.name,
+            s.completed,
+            fps,
+            s.latency.percentile(50.0),
+            s.latency.percentile(99.0),
+        );
+        multi_model_json.push(format!(
+            "    {{\"model\": {id}, \"name\": \"{}\", \"completed\": {}, \"frames_per_sec\": {fps:.2}, \"p50_us\": {}, \"p99_us\": {}}}",
+            s.name,
+            s.completed,
+            s.latency.percentile(50.0).as_micros(),
+            s.latency.percentile(99.0).as_micros(),
+        ));
+    }
+
     // === machine-readable record =======================================
     let direct_json: Vec<String> = direct_fps
         .iter()
@@ -862,12 +933,13 @@ fn main() {
         hm.routed_batch, hm.routed_shard, hm.mean_lease(), hm.shard_cards_stolen
     );
     let json = format!(
-        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"kernel_backend\": \"{kernel_backend}\",\n  \"frames_per_sec_plan_scalar\": {fps_plan_scalar:.2},\n  \"kernel_speedup\": {kernel_speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json},\n  \"slo\": {slo_json},\n  \"wire_frames_per_sec\": {wire_fps:.2},\n  \"wire\": {wire_json}\n}}\n",
+        "{{\n  \"bench\": \"sim_hotpath\",\n  \"network\": \"cnn_a\",\n  \"weights\": \"{source}\",\n  \"host_threads\": {host_threads},\n  \"speedup_config\": \"{}\",\n  \"frames_per_sec_legacy\": {:.2},\n  \"frames_per_sec_plan\": {:.2},\n  \"plan_speedup\": {speedup:.2},\n  \"kernel_backend\": \"{kernel_backend}\",\n  \"frames_per_sec_plan_scalar\": {fps_plan_scalar:.2},\n  \"kernel_speedup\": {kernel_speedup:.2},\n  \"sim_cycles_per_frame\": {sim_cycles},\n  \"direct\": [\n{}\n  ],\n  \"sharded_latency\": [\n{}\n  ],\n  \"hybrid\": {hybrid_json},\n  \"deadline\": {deadline_json},\n  \"slo\": {slo_json},\n  \"wire_frames_per_sec\": {wire_fps:.2},\n  \"wire\": {wire_json},\n  \"multi_model\": [\n{}\n  ]\n}}\n",
         cfg.label(),
         1.0 / legacy_per,
         1.0 / plan_per_frame,
         direct_json.join(",\n"),
         shard_json.join(",\n"),
+        multi_model_json.join(",\n"),
     );
     match std::fs::write("BENCH_sim_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_sim_hotpath.json"),

@@ -435,6 +435,18 @@ pub fn synthetic_cnn_a(rng: &mut crate::util::rng::Xoshiro256, m: usize) -> Quan
     }
 }
 
+/// The single CNN-A loading path for servers, benches and examples: the
+/// trained AOT artifact from [`default_dir`] when `make artifacts` has
+/// been run, else the deterministic [`synthetic_cnn_a`] stand-in with
+/// approximation depth `m` (seeded so every caller gets the same
+/// network).  Previously `main.rs` and the serving example each carried
+/// their own copy of this fallback.
+pub fn cnn_a_or_synthetic(m: usize) -> QuantNetwork {
+    QuantNetwork::load(&default_dir().join("cnn_a.weights.bin")).unwrap_or_else(|_| {
+        synthetic_cnn_a(&mut crate::util::rng::Xoshiro256::new(0xB14A), m)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -3,8 +3,16 @@
 //! ```text
 //! loadgen --addr 127.0.0.1:7733 --dims 10x10x3 [--rps 200] [--secs 5]
 //!         [--conns 4] [--mix 0.2,0.6,0.2] [--mode accurate|fast|mix]
-//!         [--deadline-ms 0] [--seed 7] [--out BENCH_loadgen.json]
+//!         [--models 0:0.5,1:0.5] [--deadline-ms 0] [--seed 7]
+//!         [--out BENCH_loadgen.json]
 //! ```
+//!
+//! `--models id:weight,…` splits traffic across registry models by
+//! weighted draw: model 0 is sent as plain v1 frames (the legacy wire
+//! path stays exercised), every other id rides a v2 header.  Outcomes
+//! are tallied per model and the accounting identity — submitted ==
+//! completed + refused + shed + failed + draining + unknown-model —
+//! is asserted per model at exit.
 //!
 //! **Open-loop** means arrivals follow a Poisson process whose schedule
 //! is fixed *before* the run: every request has a scheduled send time
@@ -32,7 +40,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use binarray::coordinator::{LatencyStats, Mode, ServiceClass, WireClient, WireStatus};
+use binarray::coordinator::{LatencyStats, Mode, ModelId, ServiceClass, WireClient, WireStatus};
 use binarray::util::rng::Xoshiro256;
 
 /// One scheduled request: everything is decided before the run starts.
@@ -43,6 +51,26 @@ struct Arrival {
     id: u64,
     mode: Mode,
     service: ServiceClass,
+    /// Registry model this request names (0 = v1 frame, default model).
+    model: u8,
+}
+
+/// Per-model outcome tally (wire v2 traffic splitting).
+#[derive(Default, Clone, Copy)]
+struct ModelTally {
+    completed: u64,
+    refused: u64,
+    deadline_shed: u64,
+    failed: u64,
+    draining: u64,
+    unknown: u64,
+}
+
+impl ModelTally {
+    fn answered(&self) -> u64 {
+        self.completed + self.refused + self.deadline_shed + self.failed + self.draining
+            + self.unknown
+    }
 }
 
 /// Per-class + global outcome ledger (one per reader thread, merged).
@@ -56,9 +84,13 @@ struct Ledger {
     bad_request: u64,
     /// Replies the run never saw (connection died early).
     lost: u64,
+    /// v2 frames naming a model the registry does not serve.
+    unknown_model: u64,
     latency: LatencyStats,
     class_latency: HashMap<usize, LatencyStats>,
     class_completed: [u64; 3],
+    models: HashMap<u8, ModelTally>,
+    model_latency: HashMap<u8, LatencyStats>,
 }
 
 impl Ledger {
@@ -70,12 +102,25 @@ impl Ledger {
         self.draining += o.draining;
         self.bad_request += o.bad_request;
         self.lost += o.lost;
+        self.unknown_model += o.unknown_model;
         self.latency.merge(&o.latency);
         for (k, v) in &o.class_latency {
             self.class_latency.entry(*k).or_default().merge(v);
         }
         for (a, b) in self.class_completed.iter_mut().zip(&o.class_completed) {
             *a += b;
+        }
+        for (m, t) in &o.models {
+            let mine = self.models.entry(*m).or_default();
+            mine.completed += t.completed;
+            mine.refused += t.refused;
+            mine.deadline_shed += t.deadline_shed;
+            mine.failed += t.failed;
+            mine.draining += t.draining;
+            mine.unknown += t.unknown;
+        }
+        for (m, l) in &o.model_latency {
+            self.model_latency.entry(*m).or_default().merge(l);
         }
     }
 }
@@ -87,6 +132,7 @@ struct Flags {
     secs: f64,
     conns: usize,
     mix: [f64; 3],
+    models: Vec<(u8, f64)>,
     mode: String,
     deadline_ms: u64,
     seed: u64,
@@ -128,6 +174,22 @@ fn parse_flags() -> Result<Flags> {
     {
         bail!("--mix '{mix_s}' needs three non-negative weights with a positive sum");
     }
+    let models_s = get("models", "0:1");
+    let mut models: Vec<(u8, f64)> = Vec::new();
+    for part in models_s.split(',') {
+        let (id_s, w_s) = part
+            .split_once(':')
+            .with_context(|| format!("--models '{models_s}' must be id:weight,…"))?;
+        let id: u8 = id_s.trim().parse().with_context(|| format!("--models id '{id_s}'"))?;
+        let w: f64 = w_s.trim().parse().with_context(|| format!("--models weight '{w_s}'"))?;
+        if w < 0.0 {
+            bail!("--models '{models_s}' weights must be non-negative");
+        }
+        models.push((id, w));
+    }
+    if models.is_empty() || models.iter().map(|(_, w)| w).sum::<f64>() <= 0.0 {
+        bail!("--models '{models_s}' needs at least one id with positive total weight");
+    }
     Ok(Flags {
         addr,
         dims: (parts[0], parts[1], parts[2]),
@@ -135,6 +197,7 @@ fn parse_flags() -> Result<Flags> {
         secs: get("secs", "5").parse().context("--secs")?,
         conns: get("conns", "4").parse().context("--conns")?,
         mix: [weights[0], weights[1], weights[2]],
+        models,
         mode: get("mode", "accurate"),
         deadline_ms: get("deadline-ms", "0").parse().context("--deadline-ms")?,
         seed: get("seed", "7").parse().context("--seed")?,
@@ -176,7 +239,23 @@ fn build_schedule(f: &Flags) -> Vec<Arrival> {
             }
             _ => Mode::HighAccuracy,
         };
-        out.push(Arrival { at: Duration::from_secs_f64(t), id: out.len() as u64, mode, service });
+        let mtotal: f64 = f.models.iter().map(|(_, w)| w).sum();
+        let mut mpick = rng.f64() * mtotal;
+        let mut model = f.models[f.models.len() - 1].0;
+        for (id, w) in &f.models {
+            if mpick < *w {
+                model = *id;
+                break;
+            }
+            mpick -= w;
+        }
+        out.push(Arrival {
+            at: Duration::from_secs_f64(t),
+            id: out.len() as u64,
+            mode,
+            service,
+            model,
+        });
     }
     out
 }
@@ -199,9 +278,16 @@ fn run() -> Result<()> {
     if submitted == 0 {
         bail!("empty schedule — raise --rps or --secs");
     }
-    // The reader indexes scheduled offsets + classes by the echoed id.
-    let by_id: Arc<Vec<(Duration, usize)>> =
-        Arc::new(schedule.iter().map(|a| (a.at, a.service.index())).collect());
+    // The reader indexes scheduled offsets, classes and models by the
+    // echoed id.
+    let by_id: Arc<Vec<(Duration, usize, u8)>> =
+        Arc::new(schedule.iter().map(|a| (a.at, a.service.index(), a.model)).collect());
+    // Per-model submitted counts, fixed by the schedule — the basis for
+    // the per-model accounting identity at exit.
+    let mut model_submitted: std::collections::BTreeMap<u8, u64> = Default::default();
+    for a in schedule.iter() {
+        *model_submitted.entry(a.model).or_default() += 1;
+    }
     let image: Vec<i8> = {
         // deterministic pseudo-image; the server only checks geometry
         let mut rng = Xoshiro256::new(f.seed ^ 0x1A6E);
@@ -210,8 +296,8 @@ fn run() -> Result<()> {
     };
     println!(
         "loadgen: {} requests over {:.1}s ({:.0} rps Poisson) on {} conns → {} \
-         (mix i/s/b {:?}, mode {}, deadline {} ms)",
-        submitted, f.secs, f.rps, f.conns, f.addr, f.mix, f.mode, f.deadline_ms
+         (mix i/s/b {:?}, models {:?}, mode {}, deadline {} ms)",
+        submitted, f.secs, f.rps, f.conns, f.addr, f.mix, f.models, f.mode, f.deadline_ms
     );
 
     let conns = f.conns.max(1);
@@ -247,7 +333,21 @@ fn run() -> Result<()> {
                         std::thread::sleep(a.at - now);
                     }
                     lag.record(start.elapsed().saturating_sub(a.at));
-                    writer.send(a.id, a.mode, a.service, deadline_us, dims, &img)?;
+                    // model 0 goes as a plain v1 frame so the legacy
+                    // wire path stays under load; the rest ride v2
+                    if a.model == 0 {
+                        writer.send(a.id, a.mode, a.service, deadline_us, dims, &img)?;
+                    } else {
+                        writer.send_to(
+                            ModelId(a.model as u32),
+                            a.id,
+                            a.mode,
+                            a.service,
+                            deadline_us,
+                            dims,
+                            &img,
+                        )?;
+                    }
                 }
                 Ok(lag)
             }));
@@ -263,7 +363,7 @@ fn run() -> Result<()> {
                             break;
                         }
                     };
-                    let Some(&(at, ci)) = ids.get(reply.id as usize) else {
+                    let Some(&(at, ci, model)) = ids.get(reply.id as usize) else {
                         // a reply id we never sent — protocol breakage
                         led.bad_request += 1;
                         continue;
@@ -272,16 +372,34 @@ fn run() -> Result<()> {
                         WireStatus::Ok => {
                             led.completed += 1;
                             led.class_completed[ci] += 1;
+                            led.models.entry(model).or_default().completed += 1;
                             // send-time-based latency: now vs *scheduled*
                             let lat = start.elapsed().saturating_sub(at);
                             led.latency.record(lat);
                             led.class_latency.entry(ci).or_default().record(lat);
+                            led.model_latency.entry(model).or_default().record(lat);
                         }
-                        WireStatus::Refused => led.refused += 1,
-                        WireStatus::Deadline => led.deadline_shed += 1,
-                        WireStatus::Failed => led.failed += 1,
-                        WireStatus::Draining => led.draining += 1,
+                        WireStatus::Refused => {
+                            led.refused += 1;
+                            led.models.entry(model).or_default().refused += 1;
+                        }
+                        WireStatus::Deadline => {
+                            led.deadline_shed += 1;
+                            led.models.entry(model).or_default().deadline_shed += 1;
+                        }
+                        WireStatus::Failed => {
+                            led.failed += 1;
+                            led.models.entry(model).or_default().failed += 1;
+                        }
+                        WireStatus::Draining => {
+                            led.draining += 1;
+                            led.models.entry(model).or_default().draining += 1;
+                        }
                         WireStatus::BadRequest => led.bad_request += 1,
+                        WireStatus::UnknownModel => {
+                            led.unknown_model += 1;
+                            led.models.entry(model).or_default().unknown += 1;
+                        }
                     }
                 }
                 led
@@ -303,17 +421,22 @@ fn run() -> Result<()> {
     })?;
     let wall = start.elapsed();
 
-    let answered =
-        total.completed + total.refused + total.deadline_shed + total.failed + total.draining;
+    let answered = total.completed
+        + total.refused
+        + total.deadline_shed
+        + total.failed
+        + total.draining
+        + total.unknown_model;
     println!(
-        "loadgen: submitted {} | completed {} refused {} shed {} failed {} draining {} lost {} \
-         | wall {:.2}s ({:.1} completed/s)",
+        "loadgen: submitted {} | completed {} refused {} shed {} failed {} draining {} \
+         unknown-model {} lost {} | wall {:.2}s ({:.1} completed/s)",
         submitted,
         total.completed,
         total.refused,
         total.deadline_shed,
         total.failed,
         total.draining,
+        total.unknown_model,
         total.lost,
         wall.as_secs_f64(),
         total.completed as f64 / wall.as_secs_f64().max(1e-9),
@@ -335,6 +458,20 @@ fn run() -> Result<()> {
             );
         }
     }
+    for (id, sub) in &model_submitted {
+        let t = total.models.get(id).copied().unwrap_or_default();
+        let (p50, p99) = total
+            .model_latency
+            .get(id)
+            .map_or((Duration::ZERO, Duration::ZERO), |l| {
+                (l.percentile(50.0), l.percentile(99.0))
+            });
+        println!(
+            "  model {id}: {sub} submitted, {} completed, {} refused, {} shed, {} unknown, \
+             p50 {p50:?} p99 {p99:?}",
+            t.completed, t.refused, t.deadline_shed, t.unknown
+        );
+    }
 
     if !f.out.is_empty() {
         let classes_json: Vec<String> = ["interactive", "standard", "bulk"]
@@ -350,13 +487,35 @@ fn run() -> Result<()> {
                 )
             })
             .collect();
+        let models_json: Vec<String> = model_submitted
+            .iter()
+            .map(|(id, sub)| {
+                let t = total.models.get(id).copied().unwrap_or_default();
+                let l = total.model_latency.get(id);
+                format!(
+                    "\"{id}\": {{\"submitted\": {sub}, \"completed\": {}, \"refused\": {}, \
+                     \"deadline_shed\": {}, \"failed\": {}, \"draining\": {}, \
+                     \"unknown_model\": {}, \"p50_us\": {}, \"p99_us\": {}}}",
+                    t.completed,
+                    t.refused,
+                    t.deadline_shed,
+                    t.failed,
+                    t.draining,
+                    t.unknown,
+                    l.map_or(0, |l| percentile_us(l, 50.0)),
+                    l.map_or(0, |l| percentile_us(l, 99.0)),
+                )
+            })
+            .collect();
         let json = format!(
             "{{\n  \"bench\": \"loadgen\",\n  \"addr\": \"{}\",\n  \"rps\": {},\n  \
              \"secs\": {},\n  \"conns\": {},\n  \"submitted\": {},\n  \"completed\": {},\n  \
              \"refused\": {},\n  \"deadline_shed\": {},\n  \"failed\": {},\n  \
              \"draining\": {},\n  \"lost\": {},\n  \"protocol_errors\": {},\n  \
+             \"unknown_model\": {},\n  \
              \"completed_per_sec\": {:.3},\n  \"p50_us\": {},\n  \"p99_us\": {},\n  \
-             \"mean_us\": {},\n  \"send_lag_p99_us\": {},\n  \"classes\": {{{}}}\n}}\n",
+             \"mean_us\": {},\n  \"send_lag_p99_us\": {},\n  \"classes\": {{{}}},\n  \
+             \"models\": {{{}}}\n}}\n",
             f.addr,
             f.rps,
             f.secs,
@@ -369,12 +528,14 @@ fn run() -> Result<()> {
             total.draining,
             total.lost,
             total.bad_request,
+            total.unknown_model,
             total.completed as f64 / wall.as_secs_f64().max(1e-9),
             percentile_us(&total.latency, 50.0),
             percentile_us(&total.latency, 99.0),
             total.latency.mean().as_micros().min(u64::MAX as u128) as u64,
             percentile_us(&send_lag, 99.0),
             classes_json.join(", "),
+            models_json.join(", "),
         );
         std::fs::write(&f.out, json).with_context(|| format!("writing {}", f.out))?;
         println!("wrote {}", f.out);
@@ -392,6 +553,18 @@ fn run() -> Result<()> {
             total.bad_request,
             total.failed
         );
+    }
+    // And the same identity must hold within every model's traffic
+    // slice — a reply charged to the wrong model would balance globally
+    // but not here.
+    for (id, sub) in &model_submitted {
+        let t = total.models.get(id).copied().unwrap_or_default();
+        if t.answered() != *sub {
+            bail!(
+                "per-model accounting violated: model {id} submitted {sub} != answered {}",
+                t.answered()
+            );
+        }
     }
     Ok(())
 }

@@ -402,6 +402,36 @@ impl BinArraySystem {
         })
     }
 
+    /// Build from already-compiled parts — the model-registry path,
+    /// where the program and plan are compiled once at registration and
+    /// shared by every card that serves the model.  Identical to
+    /// [`Self::new`] modulo skipping the compile.
+    pub fn from_parts(
+        cfg: ArrayConfig,
+        net: QuantNetwork,
+        prog: Program,
+        plan: ExecutionPlan,
+    ) -> Result<Self> {
+        if net.layers.is_empty() {
+            bail!("empty network");
+        }
+        let host_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let kernel = KernelKind::from_env();
+        Ok(Self {
+            cfg,
+            execs: vec![FrameExecutor::new(cfg, &prog, host_threads, kernel)],
+            host_threads,
+            kernel,
+            input_shape: plan.input_shape,
+            plan,
+            prog,
+            net,
+            m_run: None,
+        })
+    }
+
     /// Change the host thread-pool width (simulation-speed knob only —
     /// simulated cycles and logits are unaffected).
     pub fn set_host_threads(&mut self, n: usize) {

@@ -1,5 +1,5 @@
 //! Dynamic batcher: max-batch-size / max-delay admission, one lane per
-//! (accuracy mode × dispatch class).
+//! (model × epoch × accuracy mode × dispatch class).
 //!
 //! Mirrors the vLLM-style continuous-batching idea scaled to this system:
 //! the accelerator processes one frame at a time, so a "batch" is a run
@@ -7,9 +7,12 @@
 //! ping-pong feature buffer (§IV-D) makes consecutive frames free of DMA
 //! stalls, which is exactly what batching buys here.  Requests of the
 //! same [`Mode`] are grouped so the accelerator doesn't thrash its
-//! `m_run` configuration between frames, and requests of different
+//! `m_run` configuration between frames, requests of different
 //! [`DispatchClass`]es never share a batch — the two lanes have opposite
-//! admission policies (see [`BatchPolicy::effective`]).
+//! admission policies (see [`BatchPolicy::effective`]) — and requests of
+//! different *models* (or different epochs of the same model, across a
+//! hot swap) never share a batch either: a batch runs on exactly one
+//! compiled plan, so a worker configures its card once per batch.
 //!
 //! Within a lane, batches are cut **earliest-deadline-first**: a cut
 //! takes the most urgent `max_batch` requests (requests without a
@@ -24,14 +27,19 @@
 //! SLO* ([`Arbitration::SloAware`], the default): 5 ms left of a 50 ms
 //! Interactive budget outranks 50 ms left of a 1 s bulk deadline, so a
 //! tight class never starves because another lane's queue happens to be
-//! older.  Lanes holding no deadlined work fall back to oldest-first
-//! among themselves (and always lose to a deadlined lane).
-//! [`Arbitration::OldestFirst`] keeps the pre-SLO pick for comparison
-//! (the `sim_hotpath` bench races the two on the same overload).
+//! older.  The same rule arbitrates across models — a model is just
+//! another lane dimension, so cross-model card contention is resolved by
+//! SLO urgency, not registration order.  Lanes holding no deadlined work
+//! fall back to oldest-first among themselves (and always lose to a
+//! deadlined lane).  [`Arbitration::OldestFirst`] keeps the pre-SLO pick
+//! for comparison (the `sim_hotpath` bench races the two on the same
+//! overload).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::registry::{ModelEntry, ModelId};
 use super::route::{relative_slack, ClassTable, DispatchClass};
 use super::{Mode, Request};
 
@@ -101,25 +109,117 @@ impl BatchPolicy {
 /// orchestrator (class `Shard`).  The worker borrows the requests'
 /// images straight into [`crate::binarray::BinArraySystem::run_frames`]
 /// after validating them, so a cut batch flows to the accelerator
-/// without copying a single frame.
+/// without copying a single frame.  Every request in a batch shares one
+/// `(model, epoch)` — the batch runs on exactly one published plan.
 #[derive(Debug)]
 pub struct Batch {
     pub mode: Mode,
     pub class: DispatchClass,
+    /// The one model this batch runs on.
+    pub model: ModelId,
+    /// The pinned registry entry its requests were admitted under
+    /// (`None` only in unit rigs that bypass the registry).
+    pub entry: Option<Arc<ModelEntry>>,
     pub requests: Vec<Request>,
 }
 
-/// Number of admission lanes: 2 accuracy modes × 2 dispatch classes.
-const LANES: usize = 4;
+/// Lane address: one admission queue per (model, epoch, mode, class).
+/// The epoch keeps pre- and post-swap requests of the same model id in
+/// separate lanes, so a batch cut mid-swap never mixes plans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct LaneKey {
+    model: u32,
+    epoch: u64,
+    mode: u8,
+    class: u8,
+}
 
-/// Four-lane (mode × class) FIFO batcher.
+impl LaneKey {
+    fn of(req: &Request) -> Self {
+        Self {
+            model: req.model.0,
+            epoch: req.entry.as_ref().map_or(0, |e| e.epoch),
+            mode: match req.mode {
+                Mode::HighAccuracy => 0,
+                Mode::HighThroughput => 1,
+            },
+            class: match req.class.unwrap_or(DispatchClass::Batch) {
+                DispatchClass::Batch => 0,
+                DispatchClass::Shard => 1,
+            },
+        }
+    }
+}
+
+fn lane_mode(key: LaneKey) -> Mode {
+    if key.mode == 0 {
+        Mode::HighAccuracy
+    } else {
+        Mode::HighThroughput
+    }
+}
+
+fn lane_class(key: LaneKey) -> DispatchClass {
+    if key.class == 0 {
+        DispatchClass::Batch
+    } else {
+        DispatchClass::Shard
+    }
+}
+
+/// One admission queue.
 ///
 /// Invariant: a lane with `deadlined == 0` is in submission (FIFO)
 /// order — pushes append, the FIFO cut path drains from the front, and
 /// the EDF sort leaves any deadline-less residue sorted by submission —
 /// so every deadline-free path (ripeness peek, cut, shed) stays O(1)
-/// per request, exactly the pre-deadline cost.  Only lanes actually
-/// holding deadlined requests pay the EDF scan/sort.
+/// per request.  Only lanes actually holding deadlined requests pay the
+/// EDF scan/sort.
+#[derive(Debug, Default)]
+struct Lane {
+    q: VecDeque<Request>,
+    /// Count of queued requests carrying a deadline.
+    deadlined: usize,
+    /// Earliest queued deadline — the gate that keeps
+    /// [`Batcher::shed_expired`] (which runs after every router message)
+    /// O(1) until something can actually be expired.  Conservative:
+    /// a cut may remove the earliest request and leave this stale-low,
+    /// which costs one refreshing scan at the stale instant, never a
+    /// missed shed.
+    earliest: Option<Instant>,
+}
+
+/// Oldest submission in a lane: an O(1) front-peek while the lane holds
+/// no deadlined requests (FIFO invariant), an O(lane) scan only where
+/// EDF may have reordered it.
+fn oldest(lane: &Lane) -> Option<Instant> {
+    if lane.deadlined == 0 {
+        lane.q.front().map(|r| r.submitted)
+    } else {
+        lane.q.iter().map(|r| r.submitted).min()
+    }
+}
+
+/// Most urgent relative slack queued in a lane at `now` (see
+/// [`crate::coordinator::route::relative_slack`]): `None` while the
+/// lane holds no deadlined request — O(1) via the `deadlined` counter —
+/// otherwise the minimum over the lane (O(lane), paid only by lanes
+/// actually carrying deadlines).
+fn min_rel_slack(lane: &Lane, classes: &ClassTable, now: Instant) -> Option<f64> {
+    if lane.deadlined == 0 {
+        return None;
+    }
+    lane.q
+        .iter()
+        .filter_map(|r| {
+            relative_slack(r.submitted, r.deadline, classes.spec(r.service).slo, now)
+        })
+        .min_by(f64::total_cmp)
+}
+
+/// Model/epoch/mode/class-laned FIFO batcher.  Lanes materialize on
+/// first push and dissolve when drained, so a long-running coordinator
+/// serving many swapped epochs never accumulates dead queues.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
@@ -127,44 +227,7 @@ pub struct Batcher {
     arbitration: Arbitration,
     /// Class SLOs for the relative-slack urgency signal.
     classes: ClassTable,
-    lanes: [VecDeque<Request>; LANES],
-    /// Per-lane count of queued requests carrying a deadline.
-    deadlined: [usize; LANES],
-    /// Per-lane earliest queued deadline — the gate that keeps
-    /// [`Self::shed_expired`] (which runs after every router message)
-    /// O(1) until something can actually be expired.  Conservative:
-    /// a cut may remove the earliest request and leave this stale-low,
-    /// which costs one refreshing scan at the stale instant, never a
-    /// missed shed.
-    earliest: [Option<Instant>; LANES],
-}
-
-fn lane(mode: Mode, class: DispatchClass) -> usize {
-    let m = match mode {
-        Mode::HighAccuracy => 0,
-        Mode::HighThroughput => 1,
-    };
-    let c = match class {
-        DispatchClass::Batch => 0,
-        DispatchClass::Shard => 2,
-    };
-    m + c
-}
-
-fn lane_mode(i: usize) -> Mode {
-    if i % 2 == 0 {
-        Mode::HighAccuracy
-    } else {
-        Mode::HighThroughput
-    }
-}
-
-fn lane_class(i: usize) -> DispatchClass {
-    if i < 2 {
-        DispatchClass::Batch
-    } else {
-        DispatchClass::Shard
-    }
+    lanes: BTreeMap<LaneKey, Lane>,
 }
 
 impl Batcher {
@@ -179,27 +242,26 @@ impl Batcher {
             policy,
             arbitration,
             classes,
-            lanes: std::array::from_fn(|_| VecDeque::new()),
-            deadlined: [0; LANES],
-            earliest: [None; LANES],
+            lanes: BTreeMap::new(),
         }
     }
 
-    /// Queue a request on its (mode, class) lane.  The router stamps
-    /// `class` at admission; an unstamped request defaults to the
-    /// batching lane.
+    /// Queue a request on its (model, epoch, mode, class) lane.  The
+    /// router stamps `class` and the registry entry at admission; an
+    /// unstamped request defaults to the batching lane of the default
+    /// model.
     pub fn push(&mut self, req: Request) {
-        let class = req.class.unwrap_or(DispatchClass::Batch);
-        let i = lane(req.mode, class);
+        let key = LaneKey::of(&req);
+        let lane = self.lanes.entry(key).or_default();
         if let Some(d) = req.deadline {
-            self.deadlined[i] += 1;
-            self.earliest[i] = Some(self.earliest[i].map_or(d, |e| e.min(d)));
+            lane.deadlined += 1;
+            lane.earliest = Some(lane.earliest.map_or(d, |e| e.min(d)));
         }
-        self.lanes[i].push_back(req);
+        lane.q.push_back(req);
     }
 
     pub fn pending(&self) -> usize {
-        self.lanes.iter().map(VecDeque::len).sum()
+        self.lanes.values().map(|l| l.q.len()).sum()
     }
 
     /// Earliest deadline queued anywhere, from the per-lane caches —
@@ -208,7 +270,11 @@ impl Batcher {
     /// refreshing scan), never stale-high (a due shed is never slept
     /// through).  `None` = nothing queued carries a deadline.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.earliest.iter().flatten().min().copied()
+        self.lanes.values().filter_map(|l| l.earliest).min()
+    }
+
+    pub fn cut(&mut self, now: Instant) -> Option<Batch> {
+        self.cut_gated(now, true)
     }
 
     /// Cut the next batch if some lane's policy allows: a lane is ripe
@@ -221,138 +287,86 @@ impl Batcher {
     /// (earliest deadline first, deadline-less requests FIFO behind
     /// them).  An empty lane is never ripe and a cut batch is never
     /// empty — `while let Some(batch) = cut(..)` always terminates.
-    /// Oldest submission in lane `i`: an O(1) front-peek while the lane
-    /// holds no deadlined requests (FIFO invariant), an O(lane) scan
-    /// only where EDF may have reordered it.
-    fn oldest(&self, i: usize) -> Option<Instant> {
-        if self.deadlined[i] == 0 {
-            self.lanes[i].front().map(|r| r.submitted)
-        } else {
-            self.lanes[i].iter().map(|r| r.submitted).min()
-        }
-    }
-
-    /// Most urgent relative slack queued in lane `i` at `now` (see
-    /// [`crate::coordinator::route::relative_slack`]): `None` while the
-    /// lane holds no deadlined request — O(1) via the `deadlined`
-    /// counter — otherwise the minimum over the lane (O(lane), paid only
-    /// by lanes actually carrying deadlines).
-    fn min_rel_slack(&self, i: usize, now: Instant) -> Option<f64> {
-        if self.deadlined[i] == 0 {
-            return None;
-        }
-        self.lanes[i]
-            .iter()
-            .filter_map(|r| {
-                relative_slack(
-                    r.submitted,
-                    r.deadline,
-                    self.classes.spec(r.service).slo,
-                    now,
-                )
-            })
-            .min_by(f64::total_cmp)
-    }
-
-    /// Does ripe lane `i` outrank ripe lane `j` under the configured
-    /// [`Arbitration`]?  `memo` caches each lane's urgency for the
-    /// duration of one cut, so the O(lane) slack scan runs at most once
-    /// per lane per cut however many pairwise comparisons the pick
-    /// makes.
-    fn outranks(
-        &self,
-        i: usize,
-        j: usize,
-        now: Instant,
-        memo: &mut [Option<Option<f64>>; LANES],
-    ) -> bool {
-        match self.arbitration {
-            Arbitration::OldestFirst => self.oldest(i) < self.oldest(j),
-            Arbitration::SloAware => {
-                let a = *memo[i].get_or_insert_with(|| self.min_rel_slack(i, now));
-                let b = *memo[j].get_or_insert_with(|| self.min_rel_slack(j, now));
-                match (a, b) {
-                    (Some(a), Some(b)) if a != b => a < b,
-                    (Some(_), None) => true,
-                    (None, Some(_)) => false,
-                    // tied urgency (or none anywhere): age fairness
-                    _ => self.oldest(i) < self.oldest(j),
-                }
-            }
-        }
-    }
-
-    pub fn cut(&mut self, now: Instant) -> Option<Batch> {
-        self.cut_gated(now, true)
-    }
-
-    /// [`Self::cut`] with the batch lanes gated: when `allow_batch` is
-    /// false only shard-class lanes may cut (the shard orchestrator has
-    /// its own queue).  The router gates batch-lane cuts on an actually
-    /// free card — cutting eagerly and parking the batch would freeze
-    /// the arbitration decision long before a card frees, exactly what
-    /// SLO-aware cross-lane arbitration exists to avoid: work stays in
-    /// the batcher, re-ranked at every card-free event, until it can
-    /// start *now*.
+    ///
+    /// When `allow_batch` is false only shard-class lanes may cut (the
+    /// shard orchestrator has its own queue).  The router gates
+    /// batch-lane cuts on an actually free card — cutting eagerly and
+    /// parking the batch would freeze the arbitration decision long
+    /// before a card frees, exactly what SLO-aware cross-lane
+    /// arbitration exists to avoid: work stays in the batcher,
+    /// re-ranked at every card-free event, until it can start *now*.
     pub fn cut_gated(&mut self, now: Instant, allow_batch: bool) -> Option<Batch> {
-        let ripe = |i: usize| -> bool {
-            let eff = self.policy.effective(lane_class(i));
-            let q = &self.lanes[i];
-            (allow_batch || lane_class(i) == DispatchClass::Shard)
-                && !q.is_empty()
-                && (q.len() >= eff.max_batch
-                    || self
-                        .oldest(i)
-                        .map(|t| now.duration_since(t) >= eff.max_delay)
-                        .unwrap_or(false))
-        };
-
-        let mut urgency: [Option<Option<f64>>; LANES] = [None; LANES];
-        let mut pick: Option<usize> = None;
-        for i in 0..LANES {
-            if ripe(i) {
-                pick = match pick {
-                    None => Some(i),
-                    Some(j) => {
-                        if self.outranks(i, j, now, &mut urgency) {
-                            Some(i)
-                        } else {
-                            Some(j)
-                        }
-                    }
-                };
+        // One pass over the lanes: ripeness test, then the arbitration
+        // pick with each ripe lane's urgency computed exactly once.
+        let mut pick: Option<(LaneKey, Option<f64>)> = None;
+        for (&key, lane) in &self.lanes {
+            let class = lane_class(key);
+            if !allow_batch && class != DispatchClass::Shard {
+                continue;
             }
+            if lane.q.is_empty() {
+                continue;
+            }
+            let eff = self.policy.effective(class);
+            let ripe = lane.q.len() >= eff.max_batch
+                || oldest(lane)
+                    .map(|t| now.duration_since(t) >= eff.max_delay)
+                    .unwrap_or(false);
+            if !ripe {
+                continue;
+            }
+            let urgency = match self.arbitration {
+                Arbitration::OldestFirst => None,
+                Arbitration::SloAware => min_rel_slack(lane, &self.classes, now),
+            };
+            pick = match pick {
+                None => Some((key, urgency)),
+                Some((best_key, best_urgency)) => {
+                    let best = &self.lanes[&best_key];
+                    let outranks = match self.arbitration {
+                        Arbitration::OldestFirst => oldest(lane) < oldest(best),
+                        Arbitration::SloAware => match (urgency, best_urgency) {
+                            (Some(a), Some(b)) if a != b => a < b,
+                            (Some(_), None) => true,
+                            (None, Some(_)) => false,
+                            // tied urgency (or none anywhere): age fairness
+                            _ => oldest(lane) < oldest(best),
+                        },
+                    };
+                    if outranks {
+                        Some((key, urgency))
+                    } else {
+                        Some((best_key, best_urgency))
+                    }
+                }
+            };
         }
-        let i = pick?;
-        let class = lane_class(i);
-        let n = self.lanes[i]
-            .len()
-            .min(self.policy.effective(class).max_batch);
+        let (key, _) = pick?;
+        let class = lane_class(key);
+        let max = self.policy.effective(class).max_batch;
+        let lane = self.lanes.get_mut(&key).expect("picked lane exists");
+        let n = lane.q.len().min(max);
         debug_assert!(n >= 1, "a ripe lane is non-empty and max_batch ≥ 1");
-        let requests: Vec<Request> = if self.deadlined[i] == 0 {
+        let requests: Vec<Request> = if lane.deadlined == 0 {
             // deadline-free lane: plain FIFO, no sort
-            self.lanes[i].drain(..n).collect()
+            lane.q.drain(..n).collect()
         } else {
             // Earliest deadline first; `None` deadlines sort last and
             // the stable sort keeps their FIFO order.  `is_none()`
             // leads the key so best-effort work trails every deadlined
             // request — and the residue put back is deadlined-first,
             // then FIFO, preserving the lane invariant once the last
-            // deadlined request leaves.
-            // The full sort is O(lane·log lane) per cut, paid only
-            // while this lane actually holds deadlined work — EDF needs
-            // a total order and the residue put back must stay
-            // deterministic (deadlined-first, then FIFO) so the
-            // deadline-free fast paths re-arm once the last deadline
-            // leaves.
-            let mut all: Vec<Request> = self.lanes[i].drain(..).collect();
+            // deadlined request leaves.  The full sort is
+            // O(lane·log lane) per cut, paid only while this lane
+            // actually holds deadlined work.
+            let mut all: Vec<Request> = lane.q.drain(..).collect();
             all.sort_by_key(|r| (r.deadline.is_none(), r.deadline, r.submitted, r.id));
             let rest = all.split_off(n);
-            self.lanes[i] = rest.into();
+            lane.q = rest.into();
             let cut_deadlined = all.iter().filter(|r| r.deadline.is_some()).count();
-            self.deadlined[i] -= cut_deadlined;
-            if self.deadlined[i] == 0 {
-                self.earliest[i] = None;
+            lane.deadlined -= cut_deadlined;
+            if lane.deadlined == 0 {
+                lane.earliest = None;
             }
             // else: `earliest` may now be stale-low (the cut may have
             // taken the earliest deadline) — shed_expired refreshes it
@@ -360,9 +374,16 @@ impl Batcher {
             // never miss a shed.
             all
         };
+        if lane.q.is_empty() {
+            self.lanes.remove(&key);
+        }
+        let model = requests[0].model;
+        let entry = requests[0].entry.clone();
         Some(Batch {
-            mode: lane_mode(i),
+            mode: lane_mode(key),
             class,
+            model,
+            entry,
             requests,
         })
     }
@@ -373,24 +394,25 @@ impl Batcher {
     /// on work nobody can use.
     pub fn shed_expired(&mut self, now: Instant) -> Vec<Request> {
         let mut shed = Vec::new();
-        for i in 0..LANES {
+        self.lanes.retain(|_, lane| {
             // This runs after every router message: skip lanes that
             // hold no deadline at all, and lanes whose earliest queued
             // deadline is still in the future — the common cases cost
             // O(1), a scan happens only when something can expire (or
             // once per stale cached minimum).
-            if self.deadlined[i] == 0 {
-                continue;
+            if lane.deadlined == 0 {
+                return true;
             }
-            match self.earliest[i] {
-                Some(e) if now < e => continue,
-                _ => {}
+            if let Some(e) = lane.earliest {
+                if now < e {
+                    return true;
+                }
             }
-            let mut keep = VecDeque::with_capacity(self.lanes[i].len());
+            let mut keep = VecDeque::with_capacity(lane.q.len());
             let mut min_left: Option<Instant> = None;
-            for r in self.lanes[i].drain(..) {
+            for r in lane.q.drain(..) {
                 if r.expired(now) {
-                    self.deadlined[i] -= 1;
+                    lane.deadlined -= 1;
                     shed.push(r);
                 } else {
                     if let Some(d) = r.deadline {
@@ -399,9 +421,10 @@ impl Batcher {
                     keep.push_back(r);
                 }
             }
-            self.lanes[i] = keep;
-            self.earliest[i] = min_left;
-        }
+            lane.q = keep;
+            lane.earliest = min_left;
+            !lane.q.is_empty()
+        });
         shed
     }
 
@@ -409,22 +432,39 @@ impl Batcher {
     /// effective batch size.
     pub fn flush(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        for i in 0..LANES {
-            let class = lane_class(i);
+        for (key, mut lane) in std::mem::take(&mut self.lanes) {
+            let class = lane_class(key);
             let max = self.policy.effective(class).max_batch;
-            while !self.lanes[i].is_empty() {
-                let n = self.lanes[i].len().min(max);
-                let requests: Vec<Request> = self.lanes[i].drain(..n).collect();
+            while !lane.q.is_empty() {
+                let n = lane.q.len().min(max);
+                let requests: Vec<Request> = lane.q.drain(..n).collect();
                 out.push(Batch {
-                    mode: lane_mode(i),
+                    mode: lane_mode(key),
                     class,
+                    model: requests[0].model,
+                    entry: requests[0].entry.clone(),
                     requests,
                 });
             }
-            self.deadlined[i] = 0;
-            self.earliest[i] = None;
         }
         out
+    }
+
+    /// Test introspection: total queued requests carrying a deadline.
+    #[cfg(test)]
+    fn deadlined_total(&self) -> usize {
+        self.lanes.values().map(|l| l.deadlined).sum()
+    }
+
+    /// Test introspection: a (mode, class) lane's cached earliest
+    /// deadline, summed over models (tests use one model per lane).
+    #[cfg(test)]
+    fn earliest_of(&self, mode: Mode, class: DispatchClass) -> Option<Instant> {
+        self.lanes
+            .iter()
+            .filter(|(k, _)| lane_mode(**k) == mode && lane_class(**k) == class)
+            .filter_map(|(_, l)| l.earliest)
+            .min()
     }
 }
 
@@ -439,6 +479,8 @@ mod tests {
             id,
             image: vec![],
             mode,
+            model: ModelId::DEFAULT,
+            entry: None,
             class: Some(DispatchClass::Batch),
             deadline: None,
             service: ServiceClass::Standard,
@@ -474,6 +516,7 @@ mod tests {
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(batch.requests[0].id, 0);
         assert_eq!(batch.class, DispatchClass::Batch);
+        assert_eq!(batch.model, ModelId::DEFAULT);
         assert!(b.cut(t0).is_none(), "2 leftovers, not ripe yet");
         assert_eq!(b.pending(), 2);
     }
@@ -527,6 +570,37 @@ mod tests {
         assert_eq!(first.requests[0].id, 2);
         assert!(b.cut(t0).is_none(), "batch lane still accumulating");
         assert_eq!(b.pending(), 2);
+    }
+
+    /// The new lane dimension: requests naming different models never
+    /// share a batch, however batchable they look otherwise — a batch
+    /// runs on exactly one compiled plan.
+    #[test]
+    fn models_never_mix() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        for i in 0..6 {
+            b.push(Request {
+                model: ModelId((i % 2) as u32),
+                ..req(i, Mode::HighAccuracy, t0)
+            });
+        }
+        let mut per_model = [0usize; 2];
+        let mut batches = 0;
+        while let Some(batch) = b.cut(t0) {
+            assert!(
+                batch.requests.iter().all(|r| r.model == batch.model),
+                "a batch must hold one model only"
+            );
+            per_model[batch.model.0 as usize] += batch.requests.len();
+            batches += 1;
+        }
+        assert_eq!(batches, 2, "one batch per model");
+        assert_eq!(per_model, [3, 3]);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]
@@ -707,29 +781,28 @@ mod tests {
         });
         let t0 = Instant::now();
         let ms = Duration::from_millis(1);
-        let lane_ha = lane(Mode::HighAccuracy, DispatchClass::Batch);
-        assert_eq!(b.deadlined, [0; LANES]);
+        assert_eq!(b.deadlined_total(), 0);
         b.push(req(0, Mode::HighAccuracy, t0));
         b.push(deadline_req(1, t0, t0 + 5 * ms));
         b.push(deadline_req(2, t0, t0 + 50 * ms));
         b.push(deadline_req(3, t0, t0 + 60 * ms));
-        assert_eq!(b.deadlined[lane_ha], 3);
+        assert_eq!(b.deadlined_total(), 3);
         // shed the one expired request
         assert_eq!(b.shed_expired(t0 + 10 * ms).len(), 1);
-        assert_eq!(b.deadlined[lane_ha], 2);
+        assert_eq!(b.deadlined_total(), 2);
         // EDF cut takes both remaining deadlined requests
         let batch = b.cut(t0 + 10 * ms).expect("ripe");
         assert!(batch.requests.iter().all(|r| r.deadline.is_some()));
-        assert_eq!(b.deadlined[lane_ha], 0);
+        assert_eq!(b.deadlined_total(), 0);
         // the deadline-free residue cuts on the FIFO path
         let batch = b.cut(t0 + 10 * ms).expect("residue ripe");
         assert_eq!(batch.requests[0].id, 0);
         assert_eq!(b.pending(), 0);
         // flush resets the counters
         b.push(deadline_req(9, t0, t0 + 50 * ms));
-        assert_eq!(b.deadlined[lane_ha], 1);
+        assert_eq!(b.deadlined_total(), 1);
         b.flush();
-        assert_eq!(b.deadlined, [0; LANES]);
+        assert_eq!(b.deadlined_total(), 0);
     }
 
     /// Cross-lane SLO-aware arbitration: with both lanes ripe, the lane
@@ -797,6 +870,18 @@ mod tests {
         b.push(req(0, Mode::HighThroughput, t0));
         b.push(req(1, Mode::HighAccuracy, t0 + ms));
         assert_eq!(b.cut(t0 + 2 * ms).unwrap().requests[0].id, 0);
+        // case 5: the same urgency rule arbitrates across *models* — a
+        // tight-SLO request on model 1 cuts ahead of an older deadlined
+        // lane on model 0.
+        let mut b = Batcher::with_qos(policy, classes, Arbitration::SloAware);
+        b.push(mk(0, Mode::HighAccuracy, ServiceClass::Bulk, t0 + 200 * ms));
+        b.push(Request {
+            model: ModelId(1),
+            ..mk(1, Mode::HighAccuracy, ServiceClass::Interactive, t0 + 2 * ms)
+        });
+        let first = b.cut(t0).expect("ripe");
+        assert_eq!(first.model, ModelId(1), "urgent model-1 lane wins");
+        assert_eq!(first.requests[0].id, 1);
     }
 
     /// Regression pin for the stale-low `earliest` gate (`cut` may
@@ -814,32 +899,40 @@ mod tests {
         });
         let t0 = Instant::now();
         let ms = Duration::from_millis(1);
-        let i = lane(Mode::HighAccuracy, DispatchClass::Batch);
+        let (mode, class) = (Mode::HighAccuracy, DispatchClass::Batch);
         b.push(deadline_req(0, t0, t0 + 10 * ms)); // the earliest
         b.push(deadline_req(1, t0, t0 + 50 * ms)); // the survivor
         let batch = b.cut(t0).expect("ripe by zero delay");
         assert_eq!(batch.requests[0].id, 0, "EDF takes the earliest");
         // the cache is now stale-low: it still holds request 0's deadline
-        assert_eq!(b.earliest[i], Some(t0 + 10 * ms), "documented stale-low state");
-        assert_eq!(b.deadlined[i], 1);
+        assert_eq!(
+            b.earliest_of(mode, class),
+            Some(t0 + 10 * ms),
+            "documented stale-low state"
+        );
+        assert_eq!(b.deadlined_total(), 1);
         // at the stale instant (past the cached minimum, before the
         // survivor's deadline): nothing expires, one scan refreshes the
         // cache to the true minimum
         let shed = b.shed_expired(t0 + 20 * ms);
         assert!(shed.is_empty(), "survivor not expired — nothing shed");
-        assert_eq!(b.earliest[i], Some(t0 + 50 * ms), "cache refreshed in one scan");
+        assert_eq!(
+            b.earliest_of(mode, class),
+            Some(t0 + 50 * ms),
+            "cache refreshed in one scan"
+        );
         assert_eq!(b.pending(), 1);
         // with the cache refreshed, a pre-deadline call is back on the
         // O(1) skip path (observable: the cache value is untouched) …
         let shed = b.shed_expired(t0 + 30 * ms);
         assert!(shed.is_empty());
-        assert_eq!(b.earliest[i], Some(t0 + 50 * ms));
+        assert_eq!(b.earliest_of(mode, class), Some(t0 + 50 * ms));
         // … and the shed is never missed once the survivor expires
         let shed = b.shed_expired(t0 + 50 * ms);
         assert_eq!(shed.len(), 1, "stale cache must never hide an expiry");
         assert_eq!(shed[0].id, 1);
-        assert_eq!(b.deadlined[i], 0);
-        assert_eq!(b.earliest[i], None);
+        assert_eq!(b.deadlined_total(), 0);
+        assert_eq!(b.earliest_of(mode, class), None);
     }
 
     #[test]

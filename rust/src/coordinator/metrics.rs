@@ -169,6 +169,35 @@ impl ClassMetrics {
     }
 }
 
+/// Per-model serving outcomes — the cross-model arbitration scoreboard.
+/// Keyed by [`super::registry::ModelId`]'s raw u32 in [`Metrics::models`].
+#[derive(Clone, Debug, Default)]
+pub struct ModelMetrics {
+    /// Registry name at the time the counter was recorded.
+    pub name: String,
+    /// Requests naming this model that reached `submit` (admitted or not).
+    pub submitted: u64,
+    /// Requests answered with a result.
+    pub completed: u64,
+    /// Requests refused at admission (capacity, class budget or the
+    /// model's own inflight cap) — never queued, never computed.
+    pub refused: u64,
+    /// End-to-end latency of this model's completions.
+    pub latency: LatencyStats,
+}
+
+impl ModelMetrics {
+    pub fn merge(&mut self, other: &ModelMetrics) {
+        if self.name.is_empty() {
+            self.name = other.name.clone();
+        }
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.refused += other.refused;
+        self.latency.merge(&other.latency);
+    }
+}
+
 /// Aggregated serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -185,6 +214,10 @@ pub struct Metrics {
     pub admission_refused: u64,
     /// Per-service-class outcomes, indexed by `ServiceClass::index()`.
     pub classes: [ClassMetrics; N_CLASSES],
+    /// Per-model outcomes, keyed by the model id's raw u32.  Populated
+    /// only when the router resolves a registry entry — single-model
+    /// rigs that bypass the registry report nothing here.
+    pub models: std::collections::HashMap<u32, ModelMetrics>,
     /// Requests completed.
     pub completed: u64,
     /// Requests that ended in an error reply (bad input, dead card…) —
@@ -253,6 +286,9 @@ impl Metrics {
         self.admission_refused += other.admission_refused;
         for (c, o) in self.classes.iter_mut().zip(&other.classes) {
             c.merge(o);
+        }
+        for (id, o) in &other.models {
+            self.models.entry(*id).or_default().merge(o);
         }
         self.completed += other.completed;
         self.failed += other.failed;
@@ -337,7 +373,36 @@ impl Metrics {
             self.lane_summary(),
         ) + &self.deadline_summary()
             + &self.class_summary()
+            + &self.model_summary()
             + &self.wire_summary()
+    }
+
+    /// Per-model fragment of [`Self::summary`]: elided while the
+    /// registry path is unused (single-model rigs keep the pre-registry
+    /// summary), one fragment per model in id order otherwise.
+    fn model_summary(&self) -> String {
+        if self.models.is_empty() {
+            return String::new();
+        }
+        let mut ids: Vec<u32> = self.models.keys().copied().collect();
+        ids.sort_unstable();
+        let mut s = String::new();
+        for id in ids {
+            let m = &self.models[&id];
+            let label = if m.name.is_empty() {
+                format!("model#{id}")
+            } else {
+                m.name.clone()
+            };
+            s.push_str(&format!(
+                " | {label}: {}/{} done (refused {}) p99 {:?}",
+                m.completed,
+                m.submitted,
+                m.refused,
+                m.latency.percentile(99.0),
+            ));
+        }
+        s
     }
 
     /// Wire fragment of [`Self::summary`] (elided until the TCP
@@ -623,6 +688,36 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("interactive: met 4/8 (shed 2, refused 2)"), "{s}");
         assert!(!s.contains("bulk:"), "quiet classes stay elided: {s}");
+    }
+
+    #[test]
+    fn model_metrics_merge_and_summary_fragment() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("gtsrb"), "elided without registry traffic");
+        let mut other = Metrics::default();
+        let mm = other.models.entry(0).or_default();
+        mm.name = "gtsrb".into();
+        mm.submitted = 5;
+        mm.completed = 4;
+        mm.refused = 1;
+        mm.latency.record(Duration::from_micros(900));
+        let mm1 = other.models.entry(1).or_default();
+        mm1.name = "mobilenet".into();
+        mm1.submitted = 2;
+        mm1.completed = 2;
+        m.merge(&other);
+        m.merge(&other);
+        assert_eq!(m.models[&0].submitted, 10);
+        assert_eq!(m.models[&0].completed, 8);
+        assert_eq!(m.models[&0].refused, 2);
+        assert_eq!(m.models[&0].latency.count(), 2);
+        assert_eq!(m.models[&0].name, "gtsrb", "name survives the merge");
+        let s = m.summary();
+        assert!(s.contains("gtsrb: 8/10 done (refused 2)"), "{s}");
+        assert!(s.contains("mobilenet: 4/4 done (refused 0)"), "{s}");
+        let g = s.find("gtsrb").unwrap();
+        let mn = s.find("mobilenet").unwrap();
+        assert!(g < mn, "fragments in id order: {s}");
     }
 
     #[test]

@@ -54,16 +54,18 @@
 pub mod batcher;
 pub mod capacity;
 pub mod metrics;
+pub mod registry;
 pub mod route;
 pub mod server;
 pub mod wire;
 
 pub use batcher::{Arbitration, Batch, BatchPolicy, Batcher};
 pub use capacity::CapacityModel;
-pub use metrics::{ClassMetrics, LatencyStats, Metrics};
+pub use metrics::{ClassMetrics, LatencyStats, Metrics, ModelMetrics};
+pub use registry::{ModelEntry, ModelId, ModelRegistry};
 pub use route::{ClassSpec, ClassTable, DispatchClass, RoutePolicy, ServiceClass, N_CLASSES};
 pub use server::{
-    Coordinator, CoordinatorConfig, InferError, Reply, ReplyResult, SubmitHandle,
+    Coordinator, CoordinatorConfig, InferError, InferRequest, Reply, ReplyResult, SubmitHandle,
 };
 pub use wire::{WireClient, WireReply, WireServer, WireStatus};
 
@@ -94,6 +96,15 @@ pub struct Request {
     /// int8 image, row-major HWC, at the network's input binary point.
     pub image: Vec<i8>,
     pub mode: Mode,
+    /// Which registered model serves this request
+    /// ([`ModelId::DEFAULT`] = registry slot 0, what v1 wire traffic and
+    /// unqualified submissions get).
+    pub model: ModelId,
+    /// The published [`ModelEntry`] resolved at admission and pinned for
+    /// the request's lifetime — a hot swap never changes what an
+    /// in-flight request runs on.  `None` before admission (and in unit
+    /// rigs that bypass the registry).
+    pub entry: Option<std::sync::Arc<ModelEntry>>,
     /// Dispatch lane: the caller's explicit override, or — stamped by
     /// the router at admission — the [`RoutePolicy`] decision.  Stamped
     /// exactly once; never reassigned afterwards.
@@ -147,6 +158,8 @@ mod tests {
             id: 0,
             image: vec![],
             mode: Mode::HighAccuracy,
+            model: ModelId::DEFAULT,
+            entry: None,
             class: None,
             deadline: None,
             service: ServiceClass::Standard,

@@ -1,0 +1,438 @@
+//! Model registry: named (network, config) entries, each with its own
+//! compiled program, cached [`ExecutionPlan`], [`ShardPlanCache`] and
+//! [`CapacityModel`], atomically published behind an `RwLock` so models
+//! can be registered or hot-swapped with zero downtime.
+//!
+//! BinArray's headline claim is that one instruction-set processor
+//! serves networks of very different sizes (§VI) — unlike fixed-function
+//! binary accelerators synthesized per network.  The registry is the
+//! serving-side realization: the coordinator no longer owns one network
+//! per process; every [`Request`](super::Request) names a model, the
+//! router resolves it at admission, and the resolved [`ModelEntry`] is
+//! *pinned* to the request from that point on.
+//!
+//! **Swap semantics.**  [`ModelRegistry::swap`] compiles the incoming
+//! network outside any lock (registration cost is paid on the caller's
+//! thread, never on the serving path), then replaces the slot under a
+//! short write lock and bumps the entry's epoch.  In-flight requests
+//! keep the `Arc<ModelEntry>` they were admitted under, so they drain on
+//! the old plan; admissions after the swap resolve the new entry.  No
+//! request ever observes a half-published model and no request fails
+//! *because* of a swap — the old plan's workers rebuild lazily on the
+//! first post-swap batch (batches never mix epochs, see the batcher's
+//! lane key).
+//!
+//! **Weight-memory accounting.**  Each entry records its compiled weight
+//! footprint (`Program::wgt_words`); a registry constructed with a
+//! budget refuses registrations that would oversubscribe the modeled
+//! weight BRAM across tenants — the per-model half of the
+//! per-(tenant, model) admission story (the per-class half lives in
+//! [`ClassTable`](super::route::ClassTable)).
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::artifacts::QuantNetwork;
+use crate::binarray::{ArrayConfig, ExecutionPlan, ShardPlanCache};
+use crate::isa::{compile_network, Program};
+use crate::tensor::Shape;
+
+use super::capacity::CapacityModel;
+
+/// Dense handle naming a registry slot.  `ModelId::DEFAULT` (slot 0) is
+/// what v1 wire frames and model-less [`InferRequest`](super::server::InferRequest)s
+/// resolve to.  Ids are stable across swaps — a swap replaces the slot's
+/// entry (bumping its epoch), it never renumbers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub u32);
+
+impl ModelId {
+    /// Slot 0: the model v1 wire traffic and unqualified requests get.
+    pub const DEFAULT: ModelId = ModelId(0);
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "model#{}", self.0)
+    }
+}
+
+/// One published model: everything the serving path needs, immutable
+/// once published.  Requests hold this via `Arc` from admission to
+/// reply, so a concurrent swap can never pull the plan out from under
+/// running work.
+pub struct ModelEntry {
+    pub id: ModelId,
+    pub name: Arc<str>,
+    /// Bumped on every swap of this slot.  Batches never mix epochs, so
+    /// a worker can key its lazily-built accelerator instance on
+    /// `(id, epoch)` and rebuild exactly when the model actually changed.
+    pub epoch: u64,
+    pub cfg: ArrayConfig,
+    pub net: Arc<QuantNetwork>,
+    pub prog: Arc<Program>,
+    pub plan: Arc<ExecutionPlan>,
+    pub cache: Arc<ShardPlanCache>,
+    /// Per-model admission pricing: this entry's plan-derived frame
+    /// costs and its own observed pace.
+    pub capacity: Arc<CapacityModel>,
+    /// Compiled weight-memory footprint (words) — the registry's
+    /// cross-tenant budget currency.
+    pub weight_words: u64,
+    /// Per-model inflight cap (0 = unlimited), checked at admission
+    /// alongside the per-class budget: together per-(tenant, model).
+    pub admission_limit: usize,
+}
+
+impl ModelEntry {
+    pub fn input_shape(&self) -> Shape {
+        self.plan.input_shape
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.plan.input_shape.len()
+    }
+
+    pub fn max_m(&self) -> usize {
+        self.net.max_m()
+    }
+}
+
+impl std::fmt::Debug for ModelEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelEntry")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("epoch", &self.epoch)
+            .field("cfg", &self.cfg)
+            .field("weight_words", &self.weight_words)
+            .finish_non_exhaustive()
+    }
+}
+
+struct Inner {
+    slots: Vec<Arc<ModelEntry>>,
+    /// Monotonic swap counter shared by all slots — an epoch uniquely
+    /// identifies one published entry even across different slots.
+    next_epoch: u64,
+}
+
+/// The registry proper.  Cheap to share (`Arc<ModelRegistry>`); reads
+/// on the admission path are one `RwLock` read + one `Arc` clone.
+pub struct ModelRegistry {
+    inner: RwLock<Inner>,
+    /// Shard-plan fan-out ceiling baked into each entry's cache
+    /// (the coordinator's worker-pool width at construction).
+    max_cards: usize,
+    /// Total weight-word budget across all registered models
+    /// (0 = unlimited).  Models whose combined compiled footprint would
+    /// exceed it are refused at registration.
+    weight_budget: u64,
+}
+
+/// Wire addressing is a u8 model field, so a registry never exceeds 256
+/// slots — every registered model stays wire-addressable.
+pub const MAX_MODELS: usize = 256;
+
+impl ModelRegistry {
+    /// An empty registry whose shard plans will fan out over at most
+    /// `max_cards` cards.
+    pub fn new(max_cards: usize) -> Self {
+        Self {
+            inner: RwLock::new(Inner { slots: Vec::new(), next_epoch: 0 }),
+            max_cards: max_cards.max(1),
+            weight_budget: 0,
+        }
+    }
+
+    /// Like [`Self::new`] with a cross-model weight-memory budget in
+    /// words; registrations that would oversubscribe it are refused.
+    pub fn with_weight_budget(max_cards: usize, weight_budget: u64) -> Self {
+        Self {
+            weight_budget,
+            ..Self::new(max_cards)
+        }
+    }
+
+    /// Compile everything an entry needs.  Runs on the caller's thread,
+    /// outside the registry lock — the expensive half of register/swap.
+    fn compile(
+        &self,
+        id: ModelId,
+        name: Arc<str>,
+        epoch: u64,
+        cfg: ArrayConfig,
+        net: QuantNetwork,
+        admission_limit: usize,
+    ) -> Result<ModelEntry> {
+        if net.layers.is_empty() {
+            bail!("model '{name}': empty network");
+        }
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(cfg, &net, &prog);
+        let cache = ShardPlanCache::new(&plan, self.max_cards);
+        let capacity = CapacityModel::new(&plan, &net);
+        let weight_words = prog.wgt_words as u64;
+        Ok(ModelEntry {
+            id,
+            name,
+            epoch,
+            cfg,
+            net: Arc::new(net),
+            prog: Arc::new(prog),
+            plan: Arc::new(plan),
+            cache: Arc::new(cache),
+            capacity: Arc::new(capacity),
+            weight_words,
+            admission_limit,
+        })
+    }
+
+    /// Register a new named model; returns its id.  Compilation happens
+    /// before the write lock is taken, so serving traffic never stalls
+    /// behind a registration.
+    pub fn register(
+        &self,
+        name: &str,
+        cfg: ArrayConfig,
+        net: QuantNetwork,
+        admission_limit: usize,
+    ) -> Result<ModelId> {
+        // Pre-checks under a read lock (cheap, racy only against other
+        // registrars — re-checked under the write lock below).
+        let (id, epoch) = {
+            let inner = self.inner.read().unwrap();
+            if inner.slots.len() >= MAX_MODELS {
+                bail!("registry full ({MAX_MODELS} models)");
+            }
+            if inner.slots.iter().any(|e| &*e.name == name) {
+                bail!("model '{name}' already registered (use swap)");
+            }
+            (ModelId(inner.slots.len() as u32), inner.next_epoch)
+        };
+        let entry = self.compile(id, Arc::from(name), epoch, cfg, net, admission_limit)?;
+        let mut inner = self.inner.write().unwrap();
+        // Re-validate: another registrar may have won the race.
+        if inner.slots.len() >= MAX_MODELS {
+            bail!("registry full ({MAX_MODELS} models)");
+        }
+        if inner.slots.iter().any(|e| &*e.name == name) {
+            bail!("model '{name}' already registered (use swap)");
+        }
+        if self.weight_budget > 0 {
+            let used: u64 = inner.slots.iter().map(|e| e.weight_words).sum();
+            if used + entry.weight_words > self.weight_budget {
+                bail!(
+                    "model '{name}': weight budget exceeded ({} + {} > {})",
+                    used,
+                    entry.weight_words,
+                    self.weight_budget
+                );
+            }
+        }
+        let id = ModelId(inner.slots.len() as u32);
+        let epoch = inner.next_epoch;
+        inner.next_epoch += 1;
+        // The racy pre-pick may be stale; publish under the final id.
+        let mut entry = entry;
+        entry.id = id;
+        entry.epoch = epoch;
+        inner.slots.push(Arc::new(entry));
+        Ok(id)
+    }
+
+    /// Hot-swap the named model's network/config.  Compiles outside the
+    /// lock, then atomically replaces the slot and bumps its epoch.
+    /// In-flight requests keep their old `Arc<ModelEntry>` and drain on
+    /// the old plan; every admission after this returns resolves the new
+    /// one.
+    pub fn swap(&self, name: &str, cfg: ArrayConfig, net: QuantNetwork) -> Result<ModelId> {
+        let (id, admission_limit) = {
+            let inner = self.inner.read().unwrap();
+            let e = inner
+                .slots
+                .iter()
+                .find(|e| &*e.name == name)
+                .ok_or_else(|| anyhow::anyhow!("model '{name}' not registered"))?;
+            (e.id, e.admission_limit)
+        };
+        let entry = self.compile(id, Arc::from(name), 0, cfg, net, admission_limit)?;
+        let mut inner = self.inner.write().unwrap();
+        let slot = id.0 as usize;
+        if slot >= inner.slots.len() || &*inner.slots[slot].name != name {
+            bail!("model '{name}' disappeared during swap");
+        }
+        if self.weight_budget > 0 {
+            let used: u64 = inner
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != slot)
+                .map(|(_, e)| e.weight_words)
+                .sum();
+            if used + entry.weight_words > self.weight_budget {
+                bail!("model '{name}': weight budget exceeded by swap");
+            }
+        }
+        let epoch = inner.next_epoch;
+        inner.next_epoch += 1;
+        let mut entry = entry;
+        entry.epoch = epoch;
+        inner.slots[slot] = Arc::new(entry);
+        Ok(id)
+    }
+
+    /// Resolve an id to its current published entry.
+    pub fn get(&self, id: ModelId) -> Option<Arc<ModelEntry>> {
+        self.inner.read().unwrap().slots.get(id.0 as usize).cloned()
+    }
+
+    /// Resolve a name to its current published entry.
+    pub fn lookup(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.inner
+            .read()
+            .unwrap()
+            .slots
+            .iter()
+            .find(|e| &*e.name == name)
+            .cloned()
+    }
+
+    /// Slot 0 — what v1 wire frames and unqualified requests serve.
+    pub fn default_model(&self) -> Option<Arc<ModelEntry>> {
+        self.get(ModelId::DEFAULT)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(id, name)` of every registered model, in slot order.
+    pub fn names(&self) -> Vec<(ModelId, String)> {
+        self.inner
+            .read()
+            .unwrap()
+            .slots
+            .iter()
+            .map(|e| (e.id, e.name.to_string()))
+            .collect()
+    }
+
+    /// Combined compiled weight footprint of every registered model.
+    pub fn weight_words(&self) -> u64 {
+        self.inner.read().unwrap().slots.iter().map(|e| e.weight_words).sum()
+    }
+
+    /// The fan-out ceiling entries' shard caches were built for.
+    pub fn max_cards(&self) -> usize {
+        self.max_cards
+    }
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.read().unwrap();
+        f.debug_struct("ModelRegistry")
+            .field("models", &inner.slots.len())
+            .field("max_cards", &self.max_cards)
+            .field("weight_budget", &self.weight_budget)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::compiler::tests_support::cnn_a_quant;
+    use crate::util::rng::Xoshiro256;
+
+    fn net(seed: u64, m: usize) -> QuantNetwork {
+        cnn_a_quant(&mut Xoshiro256::new(seed), m)
+    }
+
+    #[test]
+    fn register_resolve_and_default() {
+        let reg = ModelRegistry::new(2);
+        assert!(reg.is_empty());
+        assert!(reg.default_model().is_none());
+        let a = reg.register("a", ArrayConfig::new(1, 8, 2), net(1, 2), 0).unwrap();
+        let b = reg.register("b", ArrayConfig::new(1, 32, 2), net(2, 4), 3).unwrap();
+        assert_eq!(a, ModelId::DEFAULT);
+        assert_eq!(b, ModelId(1));
+        assert_eq!(reg.len(), 2);
+        let ea = reg.get(a).unwrap();
+        assert_eq!(&*ea.name, "a");
+        assert_eq!(ea.max_m(), 2);
+        assert!(ea.weight_words > 0);
+        let eb = reg.lookup("b").unwrap();
+        assert_eq!(eb.id, b);
+        assert_eq!(eb.admission_limit, 3);
+        assert_eq!(reg.default_model().unwrap().id, a);
+        assert!(reg.get(ModelId(9)).is_none());
+        assert!(reg.lookup("nope").is_none());
+        assert_eq!(
+            reg.names(),
+            vec![(a, "a".to_string()), (b, "b".to_string())]
+        );
+    }
+
+    #[test]
+    fn duplicate_and_empty_registrations_are_refused() {
+        let reg = ModelRegistry::new(1);
+        reg.register("a", ArrayConfig::new(1, 8, 2), net(1, 2), 0).unwrap();
+        let err = reg
+            .register("a", ArrayConfig::new(1, 8, 2), net(1, 2), 0)
+            .expect_err("duplicate name");
+        assert!(err.to_string().contains("already registered"), "{err}");
+        let err = reg
+            .register("empty", ArrayConfig::new(1, 8, 2), QuantNetwork { f_input: 7, layers: vec![] }, 0)
+            .expect_err("empty network");
+        assert!(err.to_string().contains("empty network"), "{err}");
+    }
+
+    #[test]
+    fn swap_replaces_in_place_and_bumps_the_epoch() {
+        let reg = ModelRegistry::new(2);
+        let id = reg.register("a", ArrayConfig::new(1, 8, 2), net(1, 2), 7).unwrap();
+        let before = reg.get(id).unwrap();
+        // old entry survives the swap for whoever holds it
+        let swapped = reg.swap("a", ArrayConfig::new(1, 32, 2), net(9, 4)).unwrap();
+        assert_eq!(swapped, id, "swap keeps the slot id");
+        let after = reg.get(id).unwrap();
+        assert!(after.epoch > before.epoch, "epoch bumped");
+        assert_eq!(after.max_m(), 4, "new network published");
+        assert_eq!(after.admission_limit, 7, "limit carried over");
+        assert_eq!(before.max_m(), 2, "pinned old entry untouched");
+        assert_eq!(reg.len(), 1);
+        assert!(reg.swap("ghost", ArrayConfig::new(1, 8, 2), net(1, 2)).is_err());
+    }
+
+    #[test]
+    fn weight_budget_refuses_oversubscription() {
+        let probe = ModelRegistry::new(1);
+        probe.register("p", ArrayConfig::new(1, 8, 2), net(1, 2), 0).unwrap();
+        let one_model = probe.weight_words();
+        assert!(one_model > 0);
+        // room for one model, not two
+        let reg = ModelRegistry::with_weight_budget(1, one_model + one_model / 2);
+        reg.register("a", ArrayConfig::new(1, 8, 2), net(1, 2), 0).unwrap();
+        let err = reg
+            .register("b", ArrayConfig::new(1, 8, 2), net(2, 2), 0)
+            .expect_err("budget exceeded");
+        assert!(err.to_string().contains("weight budget"), "{err}");
+        // swap within the same slot stays inside the budget
+        reg.swap("a", ArrayConfig::new(1, 8, 2), net(3, 2)).unwrap();
+        // a swap that would blow the budget is refused and the old
+        // entry stays published
+        let err = reg
+            .swap("a", ArrayConfig::new(1, 8, 2), net(4, 4))
+            .expect_err("m=4 doubles the planes");
+        assert!(err.to_string().contains("weight budget"), "{err}");
+        assert_eq!(reg.get(ModelId::DEFAULT).unwrap().max_m(), 2);
+    }
+}

@@ -50,20 +50,19 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 use crate::artifacts::QuantNetwork;
 use crate::binarray::{
-    ArrayConfig, BinArraySystem, ControlUnit, ExecutionPlan, FrameStats, ShardPlan,
-    ShardPlanCache, ShardRun, SimStats,
+    ArrayConfig, BinArraySystem, ControlUnit, FrameStats, ShardPlan, ShardRun, SimStats,
 };
 use crate::golden;
-use crate::isa::{compile_network, Program};
 use crate::tensor::scatter_tile;
 
 use super::batcher::{Arbitration, Batch, BatchPolicy, Batcher};
 use super::capacity::CapacityModel;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ModelMetrics};
+use super::registry::{ModelEntry, ModelId, ModelRegistry};
 use super::route::{ClassTable, DispatchClass, RoutePolicy, ServiceClass, N_CLASSES};
 use super::{Mode, Request};
 
@@ -100,6 +99,12 @@ pub enum InferError {
     /// the model's floor on how much end-to-end budget a resubmission
     /// would need right now.
     AdmissionRefused { id: u64, earliest_feasible: Duration },
+    /// The request named a model the registry doesn't serve.  Like an
+    /// admission refusal it costs nothing: never queued, never computed
+    /// (and counted into the `admission_refused` bucket, so the
+    /// `submitted == completed + failed + admission_refused` identity
+    /// holds per model too).
+    UnknownModel { id: u64, model: u32 },
 }
 
 impl InferError {
@@ -108,7 +113,8 @@ impl InferError {
         match self {
             InferError::Failed { id, .. }
             | InferError::DeadlineExceeded { id }
-            | InferError::AdmissionRefused { id, .. } => *id,
+            | InferError::AdmissionRefused { id, .. }
+            | InferError::UnknownModel { id, .. } => *id,
         }
     }
 
@@ -119,7 +125,10 @@ impl InferError {
 
     /// Was this an admission refusal (never admitted, zero cost)?
     pub fn is_refused(&self) -> bool {
-        matches!(self, InferError::AdmissionRefused { .. })
+        matches!(
+            self,
+            InferError::AdmissionRefused { .. } | InferError::UnknownModel { .. }
+        )
     }
 }
 
@@ -135,6 +144,9 @@ impl std::fmt::Display for InferError {
                 "request {id}: admission refused — SLO provably unmeetable \
                  (earliest feasible budget ≥ {earliest_feasible:?})"
             ),
+            InferError::UnknownModel { id, model } => {
+                write!(f, "request {id}: model#{model} is not registered")
+            }
         }
     }
 }
@@ -222,6 +234,10 @@ enum RouterMsg {
 
 /// One card's slice of one layer of one frame — the scatter payload.
 struct ShardJob {
+    /// The model this frame was admitted under: the worker resolves (or
+    /// lazily builds) its accelerator instance for `(entry.id,
+    /// entry.epoch)` before running the tile.
+    entry: Arc<ModelEntry>,
     m_run: Option<usize>,
     layer: usize,
     /// Card index into the lease/[`ShardPlan`] (not a worker id — the
@@ -253,25 +269,95 @@ enum OrchMsg {
     Shutdown,
 }
 
-/// The shard orchestrator's static state: the compiled program, the
-/// execution plan it indexes per layer, and the shard partitions for
-/// every possible lease width — built directly at start so the
-/// orchestrator doesn't hold a whole card's executor memory just to read
-/// schedules.
+/// The shard orchestrator's static state.  Everything model-specific
+/// (plan, program, shard partitions, capacity) now rides on each frame's
+/// pinned [`ModelEntry`] — the orchestrator itself only keeps the
+/// pool-level lease policy.
 struct ShardOracle {
-    plan: ExecutionPlan,
-    prog: Program,
-    cache: ShardPlanCache,
-    max_m: usize,
-    m_arch: usize,
     /// Most cards one frame asks to lease (`min(max_shard_cards, pool)`).
     max_lease: usize,
     /// Per-frame cap on the lease-width hysteresis wait
     /// ([`CoordinatorConfig::lease_slack`]).
     lease_slack: Duration,
-    /// Shared capacity model — the orchestrator feeds its pace with
-    /// sharded-frame completions like the workers do with batches.
-    capacity: Arc<CapacityModel>,
+}
+
+/// One inference, described declaratively.  This is the single submit
+/// API: every knob the old `submit_*`/`infer_*` method family exposed is
+/// a builder setter here, and the defaults reproduce the plain
+/// `submit(image, mode)` behavior.
+///
+/// ```ignore
+/// let reply = coordinator.infer(
+///     InferRequest::new(image)
+///         .mode(Mode::HighThroughput)
+///         .model(gtsrb_v2)
+///         .service(ServiceClass::Interactive)
+///         .deadline(Instant::now() + Duration::from_millis(5))
+///         .route(DispatchClass::Shard),
+/// )?;
+/// ```
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    image: Vec<i8>,
+    mode: Mode,
+    model: ModelId,
+    route: Option<DispatchClass>,
+    deadline: Option<Instant>,
+    service: ServiceClass,
+}
+
+impl InferRequest {
+    /// A request for `image` with every knob at its default:
+    /// [`Mode::HighAccuracy`], the registry's default model, routing by
+    /// the coordinator's [`RoutePolicy`], no explicit deadline,
+    /// [`ServiceClass::Standard`].
+    pub fn new(image: Vec<i8>) -> Self {
+        Self {
+            image,
+            mode: Mode::HighAccuracy,
+            model: ModelId::DEFAULT,
+            route: None,
+            deadline: None,
+            service: ServiceClass::Standard,
+        }
+    }
+
+    /// Runtime accuracy mode (§IV-D).
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Which registered model serves this request.
+    pub fn model(mut self, model: ModelId) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Explicit dispatch-lane override (an override is final — the
+    /// router never reassigns it).  Accepts a bare [`DispatchClass`] or
+    /// an `Option` for call sites that thread one through.
+    pub fn route(mut self, route: impl Into<Option<DispatchClass>>) -> Self {
+        self.route = route.into();
+        self
+    }
+
+    /// Absolute completion deadline.  Slack feeds adaptive routing and
+    /// lease hysteresis; expired work is answered with
+    /// [`InferError::DeadlineExceeded`] instead of being computed.
+    pub fn deadline(mut self, deadline: impl Into<Option<Instant>>) -> Self {
+        self.deadline = deadline.into();
+        self
+    }
+
+    /// Named QoS class: its SLO becomes the deadline when none is set,
+    /// its dispatch bias applies when no route override is set, and its
+    /// admission budget plus the capacity model may *refuse* the work up
+    /// front with [`InferError::AdmissionRefused`].
+    pub fn service(mut self, service: ServiceClass) -> Self {
+        self.service = service;
+        self
+    }
 }
 
 /// Cloneable submit-side handle: many producer threads can feed one
@@ -284,61 +370,18 @@ pub struct SubmitHandle {
 }
 
 impl SubmitHandle {
-    /// Submit a request; returns a receiver for the reply.  The lane is
-    /// picked by the coordinator's [`RoutePolicy`].
-    pub fn submit(&self, image: Vec<i8>, mode: Mode) -> Receiver<ReplyResult> {
-        self.submit_routed(image, mode, None)
-    }
-
-    /// Submit with an explicit dispatch-class override (`None` lets the
-    /// [`RoutePolicy`] decide).  An override is final — the router never
-    /// reassigns it.
-    pub fn submit_routed(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-    ) -> Receiver<ReplyResult> {
-        self.submit_qos(image, mode, class, None)
-    }
-
-    /// Submit with full QoS control: an optional dispatch-class override
-    /// and an optional absolute deadline.  Slack feeds adaptive routing
-    /// and lease hysteresis; a request whose deadline passes before any
-    /// card starts it is answered with
-    /// [`InferError::DeadlineExceeded`] instead of being computed.
-    pub fn submit_qos(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-    ) -> Receiver<ReplyResult> {
-        self.submit_sla(image, mode, class, deadline, ServiceClass::Standard)
-    }
-
-    /// Submit under a named [`ServiceClass`]: the class's SLO becomes
-    /// the deadline when `deadline` is `None`, its dispatch bias applies
-    /// when `class` is `None`, and its admission budget plus the
-    /// capacity model may *refuse* the work up front with
-    /// [`InferError::AdmissionRefused`] — refused requests are never
-    /// queued and never computed.
-    pub fn submit_sla(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-        service: ServiceClass,
-    ) -> Receiver<ReplyResult> {
+    /// Submit a request; returns a receiver for the reply.
+    pub fn submit(&self, req: InferRequest) -> Receiver<ReplyResult> {
         let (tx, rx) = channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            image,
-            mode,
-            class,
-            deadline,
-            service,
+            image: req.image,
+            mode: req.mode,
+            model: req.model,
+            entry: None, // resolved (and pinned) by the router at admission
+            class: req.route,
+            deadline: req.deadline,
+            service: req.service,
             submitted: Instant::now(),
         };
         // If the router is gone the receiver will simply yield RecvError.
@@ -347,41 +390,8 @@ impl SubmitHandle {
     }
 
     /// Submit and wait.
-    pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
-        Ok(self.submit(image, mode).recv()??)
-    }
-
-    /// Submit with an explicit dispatch class and wait.
-    pub fn infer_routed(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-    ) -> Result<Reply> {
-        Ok(self.submit_routed(image, mode, class).recv()??)
-    }
-
-    /// Submit with full QoS control and wait.
-    pub fn infer_qos(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-    ) -> Result<Reply> {
-        Ok(self.submit_qos(image, mode, class, deadline).recv()??)
-    }
-
-    /// Submit under a service class and wait.
-    pub fn infer_sla(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-        service: ServiceClass,
-    ) -> Result<Reply> {
-        Ok(self.submit_sla(image, mode, class, deadline, service).recv()??)
+    pub fn infer(&self, req: InferRequest) -> Result<Reply> {
+        Ok(self.submit(req).recv()??)
     }
 }
 
@@ -391,30 +401,31 @@ pub struct Coordinator {
     router: Option<JoinHandle<Metrics>>,
     orchestrator: Option<JoinHandle<Metrics>>,
     workers: Vec<JoinHandle<Metrics>>,
+    registry: Arc<ModelRegistry>,
     pub metrics: Arc<Mutex<Metrics>>,
 }
 
 impl Coordinator {
-    /// Spin up the router, `cfg.workers` accelerator workers, and the
-    /// shard orchestrator.  Both dispatch lanes are always live — any
-    /// request may carry an explicit [`DispatchClass`] override, whatever
-    /// the [`RoutePolicy`] says.
+    /// Single-model convenience: build a one-entry registry (the model
+    /// is registered as `"default"` under `cfg.array`) and start the
+    /// pool on it.  Exactly the pre-registry behavior.
     pub fn start(cfg: CoordinatorConfig, net: QuantNetwork) -> Result<Self> {
-        if net.layers.is_empty() {
-            bail!("empty network");
-        }
+        let registry = ModelRegistry::new(cfg.workers.max(1));
+        registry.register("default", cfg.array, net, 0)?;
+        Self::with_registry(cfg, Arc::new(registry))
+    }
+
+    /// Spin up the router, `cfg.workers` accelerator workers, and the
+    /// shard orchestrator over a shared [`ModelRegistry`].  Both
+    /// dispatch lanes are always live — any request may carry an
+    /// explicit [`DispatchClass`] override, whatever the [`RoutePolicy`]
+    /// says.  Models may be registered or hot-swapped on the registry at
+    /// any time; workers build per-model accelerator instances lazily on
+    /// first use.
+    pub fn with_registry(cfg: CoordinatorConfig, registry: Arc<ModelRegistry>) -> Result<Self> {
         let n_workers = cfg.workers.max(1);
         let (router_tx, router_rx) = channel::<RouterMsg>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
-
-        // The shard plans are deterministic from (config, net, cards), so
-        // one cache serves every lease width the pool can grant.  The
-        // capacity model prices every mode off the same cached plan; the
-        // workers calibrate its pace, the router consults it at admission.
-        let prog = compile_network(&net);
-        let plan = ExecutionPlan::new(cfg.array, &net, &prog);
-        let cache = ShardPlanCache::new(&plan, n_workers);
-        let capacity = Arc::new(CapacityModel::new(&plan, &net));
 
         // One channel per card: the router sends batches only to *free*
         // cards and the orchestrator sends shard jobs only to cards it
@@ -424,31 +435,33 @@ impl Coordinator {
         for w in 0..n_workers {
             let (tx, rx) = channel::<WorkerMsg>();
             worker_txs.push(tx);
-            let sys = BinArraySystem::new(cfg.array, net.clone())?;
             let global = Arc::clone(&metrics);
             let rtx = router_tx.clone();
-            let cap = Arc::clone(&capacity);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("binarray-worker-{w}"))
-                    .spawn(move || worker_loop(sys, rx, w, rtx, global, cap))?,
+                    .spawn(move || worker_loop(rx, w, rtx, global))?,
             );
         }
+        // The registry's shard caches were built for its own card
+        // ceiling; leases never exceed what every entry has plans for.
         let max_lease = if cfg.max_shard_cards == 0 {
             n_workers
         } else {
             cfg.max_shard_cards.min(n_workers)
-        };
+        }
+        .min(registry.max_cards());
         let oracle = ShardOracle {
-            cache,
-            plan,
-            prog,
-            max_m: net.max_m(),
-            m_arch: cfg.array.m_arch,
             max_lease,
             lease_slack: cfg.lease_slack,
-            capacity: Arc::clone(&capacity),
         };
+        // The router's fallback pricing when a request carries no
+        // registry entry (unit rigs): the default model's capacity
+        // model, or a plain seed for registries populated after start.
+        let capacity = registry
+            .default_model()
+            .map(|e| Arc::clone(&e.capacity))
+            .unwrap_or_else(|| Arc::new(CapacityModel::fixed(1_000)));
         let (orch_tx, orch_rx) = channel::<OrchMsg>();
         let orchestrator = {
             let global = Arc::clone(&metrics);
@@ -467,6 +480,7 @@ impl Coordinator {
                 policy: cfg.policy,
                 route: cfg.route,
                 classes: cfg.classes,
+                registry: Arc::clone(&registry),
                 capacity: Arc::clone(&capacity),
                 batcher: Batcher::with_qos(cfg.policy, cfg.classes, cfg.arbitration),
                 reply_txs: ReplyMap::new(),
@@ -476,6 +490,7 @@ impl Coordinator {
                 running: vec![0; n_workers],
                 batch_inflight: 0,
                 class_inflight: [0; N_CLASSES],
+                model_inflight: std::collections::HashMap::new(),
                 queued_cycles: [0; N_CLASSES],
                 card_load: vec![CardLoad::default(); n_workers],
                 orch_ledger: VecDeque::new(),
@@ -502,6 +517,7 @@ impl Coordinator {
             router: Some(router),
             orchestrator: Some(orchestrator),
             workers,
+            registry,
             metrics,
         })
     }
@@ -511,80 +527,20 @@ impl Coordinator {
         self.handle.clone()
     }
 
+    /// The model registry this coordinator serves from — register or
+    /// hot-swap models on it at any time.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.registry)
+    }
+
     /// Submit a request; returns a receiver for the reply.
-    pub fn submit(&self, image: Vec<i8>, mode: Mode) -> Receiver<ReplyResult> {
-        self.handle.submit(image, mode)
-    }
-
-    /// Submit with an explicit dispatch-class override.
-    pub fn submit_routed(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-    ) -> Receiver<ReplyResult> {
-        self.handle.submit_routed(image, mode, class)
-    }
-
-    /// Submit with full QoS control (class override + deadline).
-    pub fn submit_qos(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-    ) -> Receiver<ReplyResult> {
-        self.handle.submit_qos(image, mode, class, deadline)
+    pub fn submit(&self, req: InferRequest) -> Receiver<ReplyResult> {
+        self.handle.submit(req)
     }
 
     /// Submit and wait.
-    pub fn infer(&self, image: Vec<i8>, mode: Mode) -> Result<Reply> {
-        self.handle.infer(image, mode)
-    }
-
-    /// Submit with an explicit dispatch class and wait.
-    pub fn infer_routed(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-    ) -> Result<Reply> {
-        self.handle.infer_routed(image, mode, class)
-    }
-
-    /// Submit with full QoS control (class override + deadline) and wait.
-    pub fn infer_qos(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-    ) -> Result<Reply> {
-        self.handle.infer_qos(image, mode, class, deadline)
-    }
-
-    /// Submit under a named service class.
-    pub fn submit_sla(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-        service: ServiceClass,
-    ) -> Receiver<ReplyResult> {
-        self.handle.submit_sla(image, mode, class, deadline, service)
-    }
-
-    /// Submit under a named service class and wait.
-    pub fn infer_sla(
-        &self,
-        image: Vec<i8>,
-        mode: Mode,
-        class: Option<DispatchClass>,
-        deadline: Option<Instant>,
-        service: ServiceClass,
-    ) -> Result<Reply> {
-        self.handle.infer_sla(image, mode, class, deadline, service)
+    pub fn infer(&self, req: InferRequest) -> Result<Reply> {
+        self.handle.infer(req)
     }
 
     /// Drain and stop all threads, returning the final metrics.
@@ -640,13 +596,17 @@ enum LeaseDecision {
 }
 
 /// One card's committed batch-lane work: the estimated cycles it is
-/// running and the per-class request counts — cleared wholesale on
-/// `WorkerDone` (the card answers everything it was handed, shed or
-/// served, before reporting done).
-#[derive(Clone, Copy, Debug, Default)]
+/// running and the per-class/per-model request counts — cleared
+/// wholesale on `WorkerDone` (the card answers everything it was handed,
+/// shed or served, before reporting done).
+#[derive(Clone, Debug, Default)]
 struct CardLoad {
     cycles: u64,
     count: [u64; N_CLASSES],
+    /// Per-model request counts (a batch never mixes models, so this
+    /// holds at most one entry — kept as a vec for the same wholesale
+    /// retirement the class counts get).
+    models: Vec<(u32, u64)>,
 }
 
 /// The router thread's state: admission (SLO stamping, budget/capacity
@@ -661,8 +621,11 @@ struct Router {
     route: RoutePolicy,
     /// Per-class QoS contracts (SLO, lane bias, admission budget).
     classes: ClassTable,
-    /// Admission capacity model (shared with the workers, which
-    /// calibrate its pace).
+    /// The model registry: admission resolves every request's model here
+    /// and pins the published entry onto the request.
+    registry: Arc<ModelRegistry>,
+    /// Fallback admission pricing for requests that carry no registry
+    /// entry (unit rigs driving the router with an empty registry).
     capacity: Arc<CapacityModel>,
     batcher: Batcher,
     reply_txs: ReplyMap,
@@ -687,6 +650,12 @@ struct Router {
     /// wherever the answer leaves the router's sight (batcher shed,
     /// failed batch, `WorkerDone`'s card load, `Unlease`'s ledger pops).
     class_inflight: [u64; N_CLASSES],
+    /// Admitted-but-unanswered requests per model — the per-model half
+    /// of the admission budget (a [`ModelEntry::admission_limit`] caps
+    /// it).  Kept balanced exactly like `class_inflight`: incremented at
+    /// admission, decremented via `CardLoad::models`, the shard ledger's
+    /// model column, batcher sheds and failed batches.
+    model_inflight: std::collections::HashMap<u32, u64>,
     /// Estimated cycles still queued in the batcher, per class — the
     /// class-aware slice of the capacity backlog (SLO-aware arbitration
     /// lets an urgent class cut ahead of laxer queued work, so only
@@ -695,9 +664,9 @@ struct Router {
     /// Per-card committed batch-lane work (see [`CardLoad`]).
     card_load: Vec<CardLoad>,
     /// Shard frames handed to the (FIFO, serial) orchestrator:
-    /// `(class index, estimated cycles)` in hand-off order — popped
-    /// front-first on every `Unlease`-retired frame.
-    orch_ledger: VecDeque<(usize, u64)>,
+    /// `(class index, estimated cycles, model id)` in hand-off order —
+    /// popped front-first on every `Unlease`-retired frame.
+    orch_ledger: VecDeque<(usize, u64, u32)>,
     /// Σ cycles in `orch_ledger`, maintained at push/pop so the admit
     /// path's backlog read is O(1) instead of an O(ledger) walk.
     orch_cycles: u64,
@@ -832,6 +801,9 @@ impl Router {
                 for (ci, n) in load.count.iter().enumerate() {
                     self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(*n);
                 }
+                for (model, n) in load.models {
+                    self.retire_model(model, n);
+                }
                 self.free.push(w);
                 self.service();
             }
@@ -854,9 +826,10 @@ impl Router {
                 // is serial and FIFO), so each retired frame pops the
                 // front of the shard ledger.
                 for _ in 0..frames {
-                    if let Some((ci, cycles)) = self.orch_ledger.pop_front() {
+                    if let Some((ci, cycles, model)) = self.orch_ledger.pop_front() {
                         self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(1);
                         self.orch_cycles = self.orch_cycles.saturating_sub(cycles);
+                        self.retire_model(model, 1);
                     }
                 }
                 self.leased = self.leased.saturating_sub(ids.len());
@@ -897,6 +870,27 @@ impl Router {
                 self.orch_cycles = 0;
                 self.card_load.fill(CardLoad::default());
                 self.class_inflight = [0; N_CLASSES];
+                self.model_inflight.clear();
+            }
+        }
+    }
+
+    /// Per-request estimated cycles: the pinned model entry's pricing,
+    /// or the router's fallback capacity model for rig requests that
+    /// bypassed the registry.
+    fn est_of(&self, req: &Request) -> u64 {
+        match &req.entry {
+            Some(e) => e.capacity.est_cycles(req.mode),
+            None => self.capacity.est_cycles(req.mode),
+        }
+    }
+
+    /// Retire `n` admitted-request slots from a model's inflight count.
+    fn retire_model(&mut self, model: u32, n: u64) {
+        if let Some(v) = self.model_inflight.get_mut(&model) {
+            *v = v.saturating_sub(n);
+            if *v == 0 {
+                self.model_inflight.remove(&model);
             }
         }
     }
@@ -910,8 +904,8 @@ impl Router {
             // the request leaves the queue: retire its admission ledgers
             let ci = req.service.index();
             self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(1);
-            self.queued_cycles[ci] =
-                self.queued_cycles[ci].saturating_sub(self.capacity.est_cycles(req.mode));
+            self.queued_cycles[ci] = self.queued_cycles[ci].saturating_sub(self.est_of(&req));
+            self.retire_model(req.model.0, 1);
             let Some(tx) = self.reply_txs.remove(&req.id) else {
                 continue;
             };
@@ -964,7 +958,7 @@ impl Router {
             .pending_batches
             .iter()
             .flat_map(|(b, _)| b.requests.iter())
-            .map(|r| self.capacity.est_cycles(r.mode))
+            .map(|r| self.est_of(r))
             .sum();
         let running: u64 = self.card_load.iter().map(|l| l.cycles).sum();
         queued
@@ -975,10 +969,10 @@ impl Router {
 
     /// The capacity model's floor on how much end-to-end budget a new
     /// request of `(service, mode)` needs right now (always finite —
-    /// the model is seeded with the plan-derived pace at construction).
-    fn earliest_feasible(&self, service: ServiceClass, mode: Mode) -> Duration {
-        self.capacity
-            .earliest_feasible(mode, self.backlog_cycles(service), self.live.max(1))
+    /// models are seeded with their plan-derived pace at construction).
+    /// `cap` is the request's model's pricing (or the fallback).
+    fn earliest_feasible(&self, cap: &CapacityModel, service: ServiceClass, mode: Mode) -> Duration {
+        cap.earliest_feasible(mode, self.backlog_cycles(service), self.live.max(1))
     }
 
     /// Admit one request: stamp its class SLO as the deadline, apply the
@@ -994,6 +988,7 @@ impl Router {
             let mut delta = Metrics::default();
             delta.submitted = 1;
             delta.classes[ci].submitted = 1;
+            delta.models.entry(req.model.0).or_default().submitted = 1;
             self.note(delta);
         }
         if self.shutting {
@@ -1002,6 +997,26 @@ impl Router {
             self.note(delta);
             return;
         }
+        // Resolve the model.  The registry's *current* published entry
+        // is pinned onto the request here — a concurrent hot swap never
+        // changes what an admitted request runs on.  An unknown model is
+        // a typed refusal; an empty registry (unit rigs driving the
+        // router directly) keeps the pre-registry fallback pricing.
+        match self.registry.get(req.model) {
+            Some(e) => req.entry = Some(e),
+            None if self.registry.is_empty() => {}
+            None => {
+                let mut delta = Metrics::default();
+                send_unknown_model(&mut delta, &req, &tx);
+                self.note(delta);
+                return;
+            }
+        }
+        let cap: Arc<CapacityModel> = req
+            .entry
+            .as_ref()
+            .map(|e| Arc::clone(&e.capacity))
+            .unwrap_or_else(|| Arc::clone(&self.capacity));
         let spec = *self.classes.spec(req.service);
         // A class SLO becomes the request's deadline (explicit deadlines
         // win): from here on the whole deadline machinery — EDF cuts,
@@ -1019,11 +1034,23 @@ impl Router {
         // Gate 1: the class admission budget — at the cap, refuse
         // instead of queueing work the class has no room for.
         if spec.admission_limit > 0 && self.class_inflight[ci] >= spec.admission_limit as u64 {
-            let earliest = self.earliest_feasible(req.service, req.mode);
+            let earliest = self.earliest_feasible(&cap, req.service, req.mode);
             let mut delta = Metrics::default();
             send_refused(&mut delta, &req, &tx, earliest);
             self.note(delta);
             return;
+        }
+        // Gate 1b: the per-model admission budget (together with the
+        // class budget: per-(tenant, model) limits).
+        if let Some(e) = &req.entry {
+            let inflight = self.model_inflight.get(&e.id.0).copied().unwrap_or(0);
+            if e.admission_limit > 0 && inflight >= e.admission_limit as u64 {
+                let earliest = self.earliest_feasible(&cap, req.service, req.mode);
+                let mut delta = Metrics::default();
+                send_refused(&mut delta, &req, &tx, earliest);
+                self.note(delta);
+                return;
+            }
         }
         // Gate 2: the capacity model — refuse a deadline that even the
         // pool's best observed pace can't meet over the committed
@@ -1033,7 +1060,7 @@ impl Router {
         // refusal — a bare deadline on an SLO-free class keeps the
         // scalar-deadline semantics (queue, maybe shed) unchanged.
         if let (Some(_), Some(d)) = (spec.slo, req.deadline) {
-            let need = self.earliest_feasible(req.service, req.mode);
+            let need = self.earliest_feasible(&cap, req.service, req.mode);
             if now + need > d {
                 let mut delta = Metrics::default();
                 send_refused(&mut delta, &req, &tx, need);
@@ -1056,8 +1083,9 @@ impl Router {
         }
         self.note(delta);
         self.class_inflight[ci] += 1;
+        *self.model_inflight.entry(req.model.0).or_insert(0) += 1;
         self.queued_cycles[ci] =
-            self.queued_cycles[ci].saturating_add(self.capacity.est_cycles(req.mode));
+            self.queued_cycles[ci].saturating_add(cap.est_cycles(req.mode));
         self.reply_txs.insert(req.id, tx);
         self.batcher.push(req);
     }
@@ -1069,9 +1097,10 @@ impl Router {
     /// router thread on that overlap, exactly on the failure paths where
     /// the answer mattered most.
     fn dispatch_cut(&mut self, batch: Batch) {
-        let mut requests = Vec::with_capacity(batch.requests.len());
-        let mut txs: ReplyTxs = Vec::with_capacity(batch.requests.len());
-        for r in batch.requests {
+        let Batch { mode, class, model, entry, requests: cut } = batch;
+        let mut requests = Vec::with_capacity(cut.len());
+        let mut txs: ReplyTxs = Vec::with_capacity(cut.len());
+        for r in cut {
             let Some(tx) = self.reply_txs.remove(&r.id) else {
                 continue; // answered elsewhere; nothing left to do
             };
@@ -1079,26 +1108,21 @@ impl Router {
             // cycles out of the queued ledger (it rides the dispatched
             // ledgers from here)
             let ci = r.service.index();
-            self.queued_cycles[ci] =
-                self.queued_cycles[ci].saturating_sub(self.capacity.est_cycles(r.mode));
+            self.queued_cycles[ci] = self.queued_cycles[ci].saturating_sub(self.est_of(&r));
             requests.push(r);
             txs.push(tx);
         }
         if requests.is_empty() {
             return;
         }
-        let batch = Batch {
-            mode: batch.mode,
-            class: batch.class,
-            requests,
-        };
+        let batch = Batch { mode, class, model, entry, requests };
         match batch.class {
             DispatchClass::Batch => self.dispatch_batch(batch, txs),
             DispatchClass::Shard => {
-                let ledger: Vec<(usize, u64)> = batch
+                let ledger: Vec<(usize, u64, u32)> = batch
                     .requests
                     .iter()
-                    .map(|r| (r.service.index(), self.capacity.est_cycles(r.mode)))
+                    .map(|r| (r.service.index(), self.est_of(r), r.model.0))
                     .collect();
                 let n = batch.requests.len();
                 if let Err(e) = self.orch_tx.send(OrchMsg::Run(batch, txs)) {
@@ -1106,7 +1130,7 @@ impl Router {
                     self.fail_batch(b, t, "shard orchestrator is gone");
                 } else {
                     self.shard_inflight += n;
-                    for &(_, cycles) in &ledger {
+                    for &(_, cycles, _) in &ledger {
                         self.orch_cycles = self.orch_cycles.saturating_add(cycles);
                     }
                     self.orch_ledger.extend(ledger);
@@ -1128,8 +1152,12 @@ impl Router {
         let n = batch.requests.len();
         let mut load = CardLoad::default();
         for r in &batch.requests {
-            load.cycles = load.cycles.saturating_add(self.capacity.est_cycles(r.mode));
+            load.cycles = load.cycles.saturating_add(self.est_of(r));
             load.count[r.service.index()] += 1;
+            match load.models.iter_mut().find(|(m, _)| *m == r.model.0) {
+                Some(slot) => slot.1 += 1,
+                None => load.models.push((r.model.0, 1)),
+            }
         }
         while let Some(w) = self.free.pop() {
             match self.worker_txs[w].send(WorkerMsg::Run(batch, txs)) {
@@ -1241,6 +1269,7 @@ impl Router {
         for (req, tx) in batch.requests.into_iter().zip(&txs) {
             let ci = req.service.index();
             self.class_inflight[ci] = self.class_inflight[ci].saturating_sub(1);
+            self.retire_model(req.model.0, 1);
             send_error(&mut delta, req.id, tx, &e);
         }
         self.note(delta);
@@ -1290,6 +1319,9 @@ fn send_reply(
     let cm = &mut delta.classes[req.service.index()];
     cm.completed += 1;
     cm.latency.record(latency);
+    let mm = model_metrics(delta, &req);
+    mm.completed += 1;
+    mm.latency.record(latency);
     if let Some(d) = req.deadline {
         if Instant::now() <= d {
             delta.deadline_met += 1;
@@ -1339,10 +1371,36 @@ fn send_refused(
 ) {
     delta.admission_refused += 1;
     delta.classes[req.service.index()].admission_refused += 1;
+    model_metrics(delta, req).refused += 1;
     let _ = tx.send(Err(InferError::AdmissionRefused {
         id: req.id,
         earliest_feasible,
     }));
+}
+
+/// Refuse a request naming a model the registry doesn't serve: typed,
+/// counted into the refusal bucket (globally, per class and per model),
+/// never queued.
+fn send_unknown_model(delta: &mut Metrics, req: &Request, tx: &Sender<ReplyResult>) {
+    delta.admission_refused += 1;
+    delta.classes[req.service.index()].admission_refused += 1;
+    model_metrics(delta, req).refused += 1;
+    let _ = tx.send(Err(InferError::UnknownModel {
+        id: req.id,
+        model: req.model.0,
+    }));
+}
+
+/// The per-model metrics slot for a request, its display name adopted
+/// from the pinned entry the first time one is seen.
+fn model_metrics<'a>(delta: &'a mut Metrics, req: &Request) -> &'a mut ModelMetrics {
+    let mm = delta.models.entry(req.model.0).or_default();
+    if mm.name.is_empty() {
+        if let Some(e) = &req.entry {
+            mm.name = e.name.to_string();
+        }
+    }
+    mm
 }
 
 /// Drop guard armed around a worker's batch: if the thread panics
@@ -1366,17 +1424,41 @@ impl Drop for WorkerDoneGuard {
     }
 }
 
+/// Resolve (or lazily build) this card's accelerator instance for a
+/// model entry.  Keyed by model id, validated by epoch: a hot swap bumps
+/// the epoch, so the first post-swap batch rebuilds from the entry's
+/// already-compiled parts — no recompile, just executor construction —
+/// and every later batch reuses it.
+fn system_for<'a>(
+    systems: &'a mut std::collections::HashMap<u32, (u64, BinArraySystem)>,
+    entry: &ModelEntry,
+) -> Result<&'a mut BinArraySystem> {
+    let stale = match systems.get(&entry.id.0) {
+        Some((epoch, _)) => *epoch != entry.epoch,
+        None => true,
+    };
+    if stale {
+        let sys = BinArraySystem::from_parts(
+            entry.cfg,
+            (*entry.net).clone(),
+            (*entry.prog).clone(),
+            (*entry.plan).clone(),
+        )?;
+        systems.insert(entry.id.0, (entry.epoch, sys));
+    }
+    Ok(&mut systems.get_mut(&entry.id.0).expect("just inserted").1)
+}
+
 fn worker_loop(
-    mut sys: BinArraySystem,
     rx: Receiver<WorkerMsg>,
     id: usize,
     router_tx: Sender<RouterMsg>,
     global: Arc<Mutex<Metrics>>,
-    capacity: Arc<CapacityModel>,
 ) -> Metrics {
     let mut local = Metrics::default();
-    let max_m = sys.net.max_m();
-    let m_arch = sys.cfg.m_arch;
+    // One accelerator instance per (model, epoch), built on first use.
+    let mut systems: std::collections::HashMap<u32, (u64, BinArraySystem)> =
+        std::collections::HashMap::new();
     let full_threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
@@ -1385,6 +1467,15 @@ fn worker_loop(
         match msg {
             WorkerMsg::Shutdown => break,
             WorkerMsg::Shard(job) => {
+                let sys = match system_for(&mut systems, &job.entry) {
+                    Ok(sys) => sys,
+                    Err(e) => {
+                        // answered like a result — the orchestrator
+                        // counts one reply per dispatched job
+                        let _ = job.reply.send((job.card, Err(e)));
+                        continue;
+                    }
+                };
                 // Leased to the shard orchestrator: this card's share of
                 // the host cores is bounded by the lease width (stamped
                 // on the job), so concurrent cards don't thrash the host.
@@ -1403,65 +1494,86 @@ fn worker_loop(
                     router_tx: router_tx.clone(),
                     armed: true,
                 };
-                sys.set_host_threads(full_threads);
-                // §IV-D: one mode switch per batch, not per frame.
-                let m_run = batch.mode.m_run(max_m, m_arch);
-                sys.set_mode(Some(m_run));
                 let mut delta = Metrics::default();
                 delta.batches += 1;
-                // Answer malformed requests up front (the only way a
-                // request alone can sink `run_frames`), so a poisoned
-                // frame never costs its batchmates any compute — and
-                // never kills this worker, stranding callers on
-                // RecvError.  Expired requests are shed here too: this
-                // is the last gate before the card burns cycles on them.
-                let want_len = sys.input_shape.len();
-                let now = Instant::now();
-                let mut good: Vec<(Request, &Sender<ReplyResult>)> = Vec::new();
-                for (req, tx) in batch.requests.into_iter().zip(&txs) {
-                    if req.expired(now) {
-                        send_shed(&mut delta, &req, tx);
-                    } else if req.image.len() == want_len {
-                        good.push((req, tx));
-                    } else {
-                        let e = anyhow!("image len {} != {want_len}", req.image.len());
-                        send_error(&mut delta, req.id, tx, &e);
-                    }
-                }
-                // The surviving batch runs back-to-back on the
-                // precomputed plan — one `run_frames` call, zero
-                // per-frame setup.
-                let images: Vec<&[i8]> = good.iter().map(|(r, _)| r.image.as_slice()).collect();
-                let t0 = Instant::now();
-                match sys.run_frames(&images) {
-                    Ok(results) => {
-                        let batch_wall = t0.elapsed();
-                        // calibrate the admission capacity model: this
-                        // card just did `results.len()` frames of this
-                        // mode in `batch_wall`
-                        capacity.observe(batch.mode, results.len(), batch_wall, 1);
-                        for ((req, tx), (logits, stats)) in good.into_iter().zip(results) {
-                            send_reply(&mut delta, req, tx, logits, stats.cycles, batch_wall);
+                'run: {
+                    // Batches never mix models (the batcher's lanes are
+                    // keyed by (model, epoch)), so one resolve serves
+                    // the whole batch.
+                    let Some(entry) = batch.entry.clone() else {
+                        let e = anyhow!("batch carries no model entry");
+                        for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                            send_error(&mut delta, req.id, tx, &e);
                         }
-                        delta.sim_wall += batch_wall;
-                        delta.batch_wall += batch_wall;
+                        break 'run;
+                    };
+                    let sys = match system_for(&mut systems, &entry) {
+                        Ok(sys) => sys,
+                        Err(e) => {
+                            for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                                send_error(&mut delta, req.id, tx, &e);
+                            }
+                            break 'run;
+                        }
+                    };
+                    sys.set_host_threads(full_threads);
+                    // §IV-D: one mode switch per batch, not per frame.
+                    let m_run = batch.mode.m_run(entry.max_m(), entry.cfg.m_arch);
+                    sys.set_mode(Some(m_run));
+                    // Answer malformed requests up front (the only way a
+                    // request alone can sink `run_frames`), so a poisoned
+                    // frame never costs its batchmates any compute — and
+                    // never kills this worker, stranding callers on
+                    // RecvError.  Expired requests are shed here too: this
+                    // is the last gate before the card burns cycles on them.
+                    let want_len = sys.input_shape.len();
+                    let now = Instant::now();
+                    let mut good: Vec<(Request, &Sender<ReplyResult>)> = Vec::new();
+                    for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                        if req.expired(now) {
+                            send_shed(&mut delta, &req, tx);
+                        } else if req.image.len() == want_len {
+                            good.push((req, tx));
+                        } else {
+                            let e = anyhow!("image len {} != {want_len}", req.image.len());
+                            send_error(&mut delta, req.id, tx, &e);
+                        }
                     }
-                    Err(_) => {
-                        // Defense in depth for failures validation can't
-                        // see: retry frames one by one so whatever frame
-                        // is poisoned errors alone.
-                        for (req, tx) in good {
-                            let t1 = Instant::now();
-                            match sys.run_frames(&[&req.image]) {
-                                Ok(mut rs) => {
-                                    let (logits, stats) = rs.pop().expect("one frame in/out");
-                                    let wall = t1.elapsed();
-                                    capacity.observe(batch.mode, 1, wall, 1);
-                                    send_reply(&mut delta, req, tx, logits, stats.cycles, wall);
-                                    delta.sim_wall += wall;
-                                    delta.batch_wall += wall;
+                    // The surviving batch runs back-to-back on the
+                    // precomputed plan — one `run_frames` call, zero
+                    // per-frame setup.
+                    let images: Vec<&[i8]> = good.iter().map(|(r, _)| r.image.as_slice()).collect();
+                    let t0 = Instant::now();
+                    match sys.run_frames(&images) {
+                        Ok(results) => {
+                            let batch_wall = t0.elapsed();
+                            // calibrate this model's admission capacity:
+                            // the card just did `results.len()` frames of
+                            // this mode in `batch_wall`
+                            entry.capacity.observe(batch.mode, results.len(), batch_wall, 1);
+                            for ((req, tx), (logits, stats)) in good.into_iter().zip(results) {
+                                send_reply(&mut delta, req, tx, logits, stats.cycles, batch_wall);
+                            }
+                            delta.sim_wall += batch_wall;
+                            delta.batch_wall += batch_wall;
+                        }
+                        Err(_) => {
+                            // Defense in depth for failures validation can't
+                            // see: retry frames one by one so whatever frame
+                            // is poisoned errors alone.
+                            for (req, tx) in good {
+                                let t1 = Instant::now();
+                                match sys.run_frames(&[&req.image]) {
+                                    Ok(mut rs) => {
+                                        let (logits, stats) = rs.pop().expect("one frame in/out");
+                                        let wall = t1.elapsed();
+                                        entry.capacity.observe(batch.mode, 1, wall, 1);
+                                        send_reply(&mut delta, req, tx, logits, stats.cycles, wall);
+                                        delta.sim_wall += wall;
+                                        delta.batch_wall += wall;
+                                    }
+                                    Err(e) => send_error(&mut delta, req.id, tx, &e),
                                 }
-                                Err(e) => send_error(&mut delta, req.id, tx, &e),
                             }
                         }
                     }
@@ -1494,8 +1606,9 @@ fn orchestrator_loop(
 ) -> Metrics {
     let mut local = Metrics::default();
     let mut cu = ControlUnit::new();
-    cu.park_at(oracle.prog.entry);
-    let mut fbuf = vec![0i8; oracle.prog.fbuf_words];
+    // Per-frame scratch: regrown/re-parked per frame, since multi-model
+    // traffic interleaves arbitrarily on this (serial) lane.
+    let mut fbuf: Vec<i8> = Vec::new();
     // Recycled DMA-broadcast buffers (see `run_sharded_frame`).
     let mut spare: Vec<Vec<i8>> = Vec::new();
     let cores = std::thread::available_parallelism()
@@ -1506,10 +1619,22 @@ fn orchestrator_loop(
         match msg {
             OrchMsg::Shutdown => break,
             OrchMsg::Run(batch, txs) => {
-                let m_run = Some(batch.mode.m_run(oracle.max_m, oracle.m_arch));
                 let mut delta = Metrics::default();
                 delta.batches += 1;
                 for (req, tx) in batch.requests.into_iter().zip(&txs) {
+                    // Every frame runs on the model entry pinned at
+                    // admission — a hot swap mid-queue never changes the
+                    // plan an already-admitted frame scatters under.
+                    let Some(entry) = req.entry.clone() else {
+                        let e = anyhow!("request carries no model entry");
+                        send_error(&mut delta, req.id, tx, &e);
+                        let _ = router_tx.send(RouterMsg::Unlease {
+                            ids: Vec::new(),
+                            frames: 1,
+                        });
+                        continue;
+                    };
+                    let m_run = Some(req.mode.m_run(entry.max_m(), entry.cfg.m_arch));
                     // Last gate before a lease is spent: a frame whose
                     // deadline already passed is shed, not scattered.
                     // Its slot in the router's shard-inflight ledger is
@@ -1571,8 +1696,13 @@ fn orchestrator_loop(
                     let width = granted.len();
                     let t0 = Instant::now();
                     let mut dead = Vec::new();
+                    // Park the CU at this model's entry point and size
+                    // the feature buffer for its plan.
+                    fbuf.clear();
+                    fbuf.resize(entry.prog.fbuf_words, 0);
+                    cu.park_at(entry.prog.entry);
                     let res = run_sharded_frame(
-                        &oracle,
+                        &entry,
                         &mut cu,
                         &mut fbuf,
                         &mut spare,
@@ -1601,7 +1731,7 @@ fn orchestrator_loop(
                         Ok((logits, stats)) => {
                             // charged in card-time: `width` cards spent
                             // `frame_wall` each on this frame
-                            oracle.capacity.observe(batch.mode, 1, frame_wall, width);
+                            entry.capacity.observe(req.mode, 1, frame_wall, width);
                             send_reply(&mut delta, req, tx, logits, stats.cycles, frame_wall);
                             delta.sim_wall += frame_wall;
                             delta.shard_wall += frame_wall;
@@ -1635,7 +1765,7 @@ fn orchestrator_loop(
 /// scatter copy overlaps the cards' compute and the gather.
 #[allow(clippy::too_many_arguments)]
 fn run_sharded_frame(
-    oracle: &ShardOracle,
+    entry: &Arc<ModelEntry>,
     cu: &mut ControlUnit,
     fbuf: &mut [i8],
     spare: &mut Vec<Vec<i8>>,
@@ -1647,9 +1777,9 @@ fn run_sharded_frame(
     cores: usize,
 ) -> Result<(Vec<i8>, FrameStats)> {
     let n_cards = leased.len();
-    let shards = oracle.cache.cards(n_cards);
+    let shards = entry.cache.cards(n_cards);
     let intra_threads = (cores / n_cards.max(1)).max(1);
-    let mode = oracle.plan.mode(m_run);
+    let mode = entry.plan.mode(m_run);
     let layer_shards = shards.mode(m_run);
     let n_layers = mode.layers.len();
     let first = mode.layers.first().expect("non-empty plan");
@@ -1673,7 +1803,7 @@ fn run_sharded_frame(
     let sa_stats = &mut stats.sa_stats;
     let err_ref = &mut err;
     let next_ref = &mut next_bcast;
-    let cu_run = cu.run_frame(&oracle.prog, |lr| {
+    let cu_run = cu.run_frame(&entry.prog, |lr| {
         if err_ref.is_some() {
             // A card already failed: fall through the remaining layers
             // without dispatching work so the CU still reaches its HLT.
@@ -1701,6 +1831,7 @@ fn run_sharded_frame(
                 continue; // layer too small for this card — it idles
             }
             let job = ShardJob {
+                entry: Arc::clone(entry),
                 m_run,
                 layer: li,
                 card,
@@ -1777,6 +1908,7 @@ fn run_sharded_frame(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::route::ClassSpec;
     use crate::isa::compiler::tests_support::cnn_a_quant;
     use crate::tensor::Shape;
     use crate::util::{prop, rng::Xoshiro256};
@@ -1839,6 +1971,7 @@ mod tests {
                 policy,
                 route,
                 classes: ClassTable::default(),
+                registry: Arc::new(ModelRegistry::new(workers)),
                 capacity: Arc::new(CapacityModel::fixed(1_000)),
                 batcher: Batcher::new(policy),
                 reply_txs: ReplyMap::new(),
@@ -1848,6 +1981,7 @@ mod tests {
                 running: vec![0; workers],
                 batch_inflight: 0,
                 class_inflight: [0; N_CLASSES],
+                model_inflight: std::collections::HashMap::new(),
                 queued_cycles: [0; N_CLASSES],
                 card_load: vec![CardLoad::default(); workers],
                 orch_ledger: VecDeque::new(),
@@ -1871,10 +2005,23 @@ mod tests {
             id,
             image: vec![0i8; 16],
             mode: Mode::HighAccuracy,
+            model: ModelId::DEFAULT,
+            entry: None,
             class,
             deadline: None,
             service: ServiceClass::Standard,
             submitted: Instant::now(),
+        }
+    }
+
+    /// A rig batch: model-less, like the rig requests it carries.
+    fn rig_batch(class: DispatchClass, requests: Vec<Request>) -> Batch {
+        Batch {
+            mode: Mode::HighAccuracy,
+            class,
+            model: ModelId::DEFAULT,
+            entry: None,
+            requests,
         }
     }
 
@@ -1913,11 +2060,10 @@ mod tests {
         rig.router.free.clear();
         let (reply_tx, reply_rx) = channel::<ReplyResult>();
         rig.router.pending_batches.push_back((
-            Batch {
-                mode: Mode::HighAccuracy,
-                class: DispatchClass::Batch,
-                requests: vec![rig_request(7, Some(DispatchClass::Batch))],
-            },
+            rig_batch(
+                DispatchClass::Batch,
+                vec![rig_request(7, Some(DispatchClass::Batch))],
+            ),
             vec![reply_tx],
         ));
         rig.router.handle(RouterMsg::Retire(alive));
@@ -1967,11 +2113,10 @@ mod tests {
         rig.router.leased = 1;
         let (reply_tx, reply_rx) = channel::<ReplyResult>();
         rig.router.pending_batches.push_back((
-            Batch {
-                mode: Mode::HighAccuracy,
-                class: DispatchClass::Batch,
-                requests: vec![rig_request(3, Some(DispatchClass::Batch))],
-            },
+            rig_batch(
+                DispatchClass::Batch,
+                vec![rig_request(3, Some(DispatchClass::Batch))],
+            ),
             vec![reply_tx],
         ));
         rig.router.handle(RouterMsg::Shutdown);
@@ -2143,11 +2288,8 @@ mod tests {
         // only the survivor is registered — request 0 was answered at
         // another gate
         rig.router.reply_txs.insert(1, tx1);
-        rig.router.dispatch_cut(Batch {
-            mode: Mode::HighAccuracy,
-            class: DispatchClass::Shard,
-            requests: vec![answered, survivor],
-        });
+        rig.router
+            .dispatch_cut(rig_batch(DispatchClass::Shard, vec![answered, survivor]));
         let err = survivor_rx
             .try_recv()
             .expect("survivor answered despite the dead orchestrator")
@@ -2164,14 +2306,13 @@ mod tests {
         rig.router.free.clear();
         let (tx1, survivor_rx) = channel::<ReplyResult>();
         rig.router.reply_txs.insert(1, tx1);
-        rig.router.dispatch_cut(Batch {
-            mode: Mode::HighAccuracy,
-            class: DispatchClass::Batch,
-            requests: vec![
+        rig.router.dispatch_cut(rig_batch(
+            DispatchClass::Batch,
+            vec![
                 rig_request(0, Some(DispatchClass::Batch)),
                 rig_request(1, Some(DispatchClass::Batch)),
             ],
-        });
+        ));
         let err = survivor_rx
             .try_recv()
             .expect("survivor answered despite the dead pool")
@@ -2181,11 +2322,10 @@ mod tests {
         // a batch whose every request was already answered dissolves
         // without touching any lane
         let mut rig = router_rig(1, RoutePolicy::BatchOnly);
-        rig.router.dispatch_cut(Batch {
-            mode: Mode::HighAccuracy,
-            class: DispatchClass::Batch,
-            requests: vec![rig_request(7, Some(DispatchClass::Batch))],
-        });
+        rig.router.dispatch_cut(rig_batch(
+            DispatchClass::Batch,
+            vec![rig_request(7, Some(DispatchClass::Batch))],
+        ));
         assert!(rig.router.pending_batches.is_empty());
         assert!(rig.worker_rxs[0].try_recv().is_err(), "nothing dispatched");
     }
@@ -2260,6 +2400,7 @@ mod tests {
         rig.router.card_load[0] = CardLoad {
             cycles: 10_000, // 10 × the rig's fixed 1 000-cycle frames
             count: [0, 10, 0],
+            ..Default::default()
         };
         let interactive = |id| Request {
             service: ServiceClass::Interactive,
@@ -2322,6 +2463,7 @@ mod tests {
         rig.router.card_load[0] = CardLoad {
             cycles: 8_000,
             count: [0, 1, 0],
+            ..Default::default()
         };
         assert_eq!(
             rig.router.backlog_cycles(ServiceClass::Interactive),
@@ -2339,7 +2481,7 @@ mod tests {
         );
         // the shard ledger counts in full for every class (the
         // orchestrator is FIFO)
-        rig.router.orch_ledger.push_back((ServiceClass::Bulk.index(), 500));
+        rig.router.orch_ledger.push_back((ServiceClass::Bulk.index(), 500, 0));
         rig.router.orch_cycles = 500;
         assert_eq!(rig.router.backlog_cycles(ServiceClass::Interactive), 9_500);
     }
@@ -2390,6 +2532,8 @@ mod tests {
             id: 0,
             image: vec![],
             mode: Mode::HighAccuracy,
+            model: ModelId::DEFAULT,
+            entry: None,
             class: None,
             deadline,
             service: ServiceClass::Standard,
@@ -2420,7 +2564,7 @@ mod tests {
         let net = cnn_a_quant(&mut rng, 2);
         let coord = Coordinator::start(quick_cfg(1), net.clone()).unwrap();
         let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
-        let reply = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
+        let reply = coord.infer(InferRequest::new(img.clone())).unwrap();
         let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
         assert_eq!(reply.logits, want);
         assert_eq!(reply.class, golden::argmax(&want));
@@ -2437,7 +2581,7 @@ mod tests {
         let coord = Coordinator::start(quick_cfg(2), net).unwrap();
         let rxs: Vec<_> = (0..12)
             .map(|_| {
-                coord.submit(prop::i8_vec(&mut rng, 48 * 48 * 3), Mode::HighAccuracy)
+                coord.submit(InferRequest::new(prop::i8_vec(&mut rng, 48 * 48 * 3)))
             })
             .collect();
         let mut ids = Vec::new();
@@ -2457,8 +2601,8 @@ mod tests {
         let net = cnn_a_quant(&mut rng, 4); // M=4 on M_arch=2
         let coord = Coordinator::start(quick_cfg(1), net.clone()).unwrap();
         let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
-        let fast = coord.infer(img.clone(), Mode::HighThroughput).unwrap();
-        let slow = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
+        let fast = coord.infer(InferRequest::new(img.clone()).mode(Mode::HighThroughput)).unwrap();
+        let slow = coord.infer(InferRequest::new(img.clone())).unwrap();
         assert!(slow.cycles > fast.cycles * 3 / 2, "{} vs {}", slow.cycles, fast.cycles);
         let want_fast = golden::forward(&net, &img, Shape::new(48, 48, 3), Some(2));
         assert_eq!(fast.logits, want_fast);
@@ -2481,7 +2625,7 @@ mod tests {
         )
         .unwrap();
         let rxs: Vec<_> = (0..3)
-            .map(|_| coord.submit(prop::i8_vec(&mut rng, 48 * 48 * 3), Mode::HighAccuracy))
+            .map(|_| coord.submit(InferRequest::new(prop::i8_vec(&mut rng, 48 * 48 * 3))))
             .collect();
         std::thread::sleep(Duration::from_millis(5));
         let m = coord.shutdown(); // flush must run the stragglers
@@ -2498,15 +2642,15 @@ mod tests {
         let coord = Coordinator::start(quick_cfg(1), net).unwrap();
         // Wrong-size image: the worker must answer Err, stay alive, and
         // keep serving its batchmates.
-        let bad = coord.submit(vec![0i8; 7], Mode::HighAccuracy);
+        let bad = coord.submit(InferRequest::new(vec![0i8; 7]));
         let good_img = prop::i8_vec(&mut rng, 48 * 48 * 3);
-        let good = coord.submit(good_img, Mode::HighAccuracy);
+        let good = coord.submit(InferRequest::new(good_img));
         let bad_reply = bad.recv().expect("reply, not a dead channel");
         assert!(bad_reply.is_err());
         let good_reply = good.recv().unwrap().expect("batchmate unharmed");
         assert!(!good_reply.logits.is_empty());
         // and infer() surfaces the error as Err, not a hang
-        assert!(coord.infer(vec![1i8; 3], Mode::HighThroughput).is_err());
+        assert!(coord.infer(InferRequest::new(vec![1i8; 3]).mode(Mode::HighThroughput)).is_err());
         let m = coord.shutdown();
         assert_eq!(m.completed, 1);
         assert_eq!(m.failed, 2);
@@ -2522,8 +2666,8 @@ mod tests {
         let mut cycles_by_cards = Vec::new();
         for cards in [1usize, 2] {
             let coord = Coordinator::start(shard_cfg(cards), net.clone()).unwrap();
-            let hi = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
-            let lo = coord.infer(img.clone(), Mode::HighThroughput).unwrap();
+            let hi = coord.infer(InferRequest::new(img.clone())).unwrap();
+            let lo = coord.infer(InferRequest::new(img.clone()).mode(Mode::HighThroughput)).unwrap();
             assert_eq!(hi.logits, want_hi, "{cards} cards");
             assert_eq!(lo.logits, want_lo, "{cards} cards");
             assert!(hi.cycles > lo.cycles);
@@ -2546,9 +2690,9 @@ mod tests {
         let mut rng = Xoshiro256::new(7);
         let net = cnn_a_quant(&mut rng, 2);
         let coord = Coordinator::start(shard_cfg(2), net.clone()).unwrap();
-        assert!(coord.infer(vec![0i8; 5], Mode::HighAccuracy).is_err());
+        assert!(coord.infer(InferRequest::new(vec![0i8; 5])).is_err());
         let img = prop::i8_vec(&mut rng, 48 * 48 * 3);
-        let ok = coord.infer(img.clone(), Mode::HighAccuracy).unwrap();
+        let ok = coord.infer(InferRequest::new(img.clone())).unwrap();
         let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
         assert_eq!(ok.logits, want);
         let m = coord.shutdown();
@@ -2566,11 +2710,11 @@ mod tests {
         let want = golden::forward(&net, &img, Shape::new(48, 48, 3), None);
         let coord = Coordinator::start(quick_cfg(2), net.clone()).unwrap();
         let shard = coord
-            .infer_routed(img.clone(), Mode::HighAccuracy, Some(DispatchClass::Shard))
+            .infer(InferRequest::new(img.clone()).route(DispatchClass::Shard))
             .unwrap();
         assert_eq!(shard.logits, want);
         let batch = coord
-            .infer_routed(img.clone(), Mode::HighAccuracy, Some(DispatchClass::Batch))
+            .infer(InferRequest::new(img.clone()).route(DispatchClass::Batch))
             .unwrap();
         assert_eq!(batch.logits, want);
         let m = coord.shutdown();
@@ -2596,7 +2740,7 @@ mod tests {
             net,
         )
         .unwrap();
-        coord.infer(img, Mode::HighAccuracy).unwrap();
+        coord.infer(InferRequest::new(img)).unwrap();
         let m = coord.shutdown();
         assert_eq!(m.shard_leases, 1);
         assert_eq!(m.shard_cards_granted, 2, "lease capped below pool width");
@@ -2614,7 +2758,7 @@ mod tests {
                 .iter()
                 .map(|img| {
                     let h = coord.handle();
-                    s.spawn(move || h.submit(img.clone(), Mode::HighAccuracy))
+                    s.spawn(move || h.submit(InferRequest::new(img.clone())))
                 })
                 .collect();
             for t in handles {

@@ -31,15 +31,16 @@
 //!
 //! # Request frame
 //!
-//! All integers little-endian.
+//! All integers little-endian.  Two versions share one layout; they
+//! differ only in the meaning of byte 7:
 //!
 //! | offset | size | field |
 //! |--------|------|-------|
 //! | 0      | 4    | magic `b"BNRY"` |
-//! | 4      | 1    | version (`1`) |
+//! | 4      | 1    | version (`1` or `2`) |
 //! | 5      | 1    | mode: 0 = high accuracy, 1 = high throughput |
 //! | 6      | 1    | service class: 0 interactive, 1 standard, 2 bulk |
-//! | 7      | 1    | reserved (must be 0) |
+//! | 7      | 1    | v1: reserved (must be 0) · v2: model id (registry slot) |
 //! | 8      | 8    | request id (client-chosen, echoed verbatim) |
 //! | 16     | 8    | deadline in µs from server receipt (0 = none) |
 //! | 24     | 4    | payload length (must equal `h·w·c`, ≤ 16 MiB) |
@@ -48,12 +49,18 @@
 //! | 32     | 2    | frame channels |
 //! | 34     | …    | payload: `h·w·c` bytes, row-major HWC `i8` |
 //!
+//! A v1 frame is served on the registry's default model (slot 0) —
+//! exactly the pre-registry behavior, byte for byte.  A v2 frame names
+//! any registered model; one naming an unregistered slot is answered
+//! with [`WireStatus::UnknownModel`] and the connection stays open (the
+//! frame was well-formed — only the name was wrong).
+//!
 //! # Response frame
 //!
 //! | offset | size | field |
 //! |--------|------|-------|
 //! | 0      | 4    | magic `b"BNRY"` |
-//! | 4      | 1    | version (`1`) |
+//! | 4      | 1    | version (echoes the request's) |
 //! | 5      | 1    | [`WireStatus`] |
 //! | 6      | 2    | reserved (0) |
 //! | 8      | 8    | request id (echoed) |
@@ -71,13 +78,18 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::metrics::Metrics;
-use super::server::{InferError, Reply, SubmitHandle};
+use super::registry::ModelId;
+use super::server::{InferError, InferRequest, Reply, SubmitHandle};
 use super::{Mode, ServiceClass};
 
 /// Frame magic: every request and response starts with these 4 bytes.
 pub const MAGIC: [u8; 4] = *b"BNRY";
-/// Protocol version this build speaks.
+/// The original, model-less protocol version — still accepted verbatim;
+/// requests carrying it serve the registry's default model.
 pub const VERSION: u8 = 1;
+/// Protocol version 2: identical layout, but byte 7 is the model id
+/// (a [`ModelId`] registry slot) instead of a reserved zero.
+pub const VERSION_2: u8 = 2;
 /// Fixed request-header length (the payload follows).
 pub const REQ_HEADER_LEN: usize = 34;
 /// Fixed response-header length (the logits follow).
@@ -114,6 +126,10 @@ pub enum WireStatus {
     BadRequest = 4,
     /// The server is draining: the frame was decoded but not submitted.
     Draining = 5,
+    /// [`InferError::UnknownModel`] — a v2 frame named a registry slot
+    /// that isn't serving.  Unlike [`WireStatus::BadRequest`] the
+    /// connection stays open: the frame was well-formed.
+    UnknownModel = 6,
 }
 
 impl WireStatus {
@@ -125,6 +141,7 @@ impl WireStatus {
             3 => WireStatus::Failed,
             4 => WireStatus::BadRequest,
             5 => WireStatus::Draining,
+            6 => WireStatus::UnknownModel,
             _ => return None,
         })
     }
@@ -135,6 +152,8 @@ impl WireStatus {
 pub struct WireReply {
     /// The client-chosen request id, echoed.
     pub id: u64,
+    /// The protocol version echoed back (matches the request's).
+    pub version: u8,
     pub status: WireStatus,
     /// `Ok`: end-to-end server latency.  `Refused`: the earliest-feasible
     /// budget.  Otherwise zero.
@@ -146,8 +165,11 @@ pub struct WireReply {
 /// One decoded request header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 struct ReqHeader {
+    version: u8,
     mode: Mode,
     service: ServiceClass,
+    /// Registry slot (always 0 for a v1 frame).
+    model: u8,
     id: u64,
     deadline_us: u64,
     payload_len: u32,
@@ -157,22 +179,24 @@ struct ReqHeader {
 }
 
 /// Why a request header was rejected at the protocol layer.  The id is
-/// carried when the header was intact enough to echo one.
+/// carried when the header was intact enough to echo one; the version is
+/// the request's own when plausible, so the refusal echoes it.
 #[derive(Debug)]
 struct ProtoError {
     id: u64,
+    version: u8,
     what: &'static str,
 }
 
 fn encode_req_header(buf: &mut [u8; REQ_HEADER_LEN], h: &ReqHeader) {
     buf[0..4].copy_from_slice(&MAGIC);
-    buf[4] = VERSION;
+    buf[4] = h.version;
     buf[5] = match h.mode {
         Mode::HighAccuracy => 0,
         Mode::HighThroughput => 1,
     };
     buf[6] = h.service.index() as u8;
-    buf[7] = 0;
+    buf[7] = h.model;
     buf[8..16].copy_from_slice(&h.id.to_le_bytes());
     buf[16..24].copy_from_slice(&h.deadline_us.to_le_bytes());
     buf[24..28].copy_from_slice(&h.payload_len.to_le_bytes());
@@ -186,11 +210,13 @@ fn decode_req_header(buf: &[u8; REQ_HEADER_LEN]) -> std::result::Result<ReqHeade
     // first: even a rejected frame echoes the id when those 8 bytes were
     // at least received, so the client can correlate the refusal.
     let id = u64::from_le_bytes(buf[8..16].try_into().unwrap());
-    let err = |what| ProtoError { id, what };
+    // Echo a plausible version even on rejection; garbage falls back to v1.
+    let version = if buf[4] == VERSION_2 { VERSION_2 } else { VERSION };
+    let err = |what| ProtoError { id, version, what };
     if buf[0..4] != MAGIC {
-        return Err(ProtoError { id: 0, what: "bad magic" });
+        return Err(ProtoError { id: 0, version: VERSION, what: "bad magic" });
     }
-    if buf[4] != VERSION {
+    if buf[4] != VERSION && buf[4] != VERSION_2 {
         return Err(err("unsupported version"));
     }
     let mode = match buf[5] {
@@ -204,9 +230,12 @@ fn decode_req_header(buf: &[u8; REQ_HEADER_LEN]) -> std::result::Result<ReqHeade
         2 => ServiceClass::Bulk,
         _ => return Err(err("unknown service class")),
     };
-    if buf[7] != 0 {
+    // v1 keeps byte 7 reserved-zero (the historical contract, enforced
+    // bit for bit); v2 reads it as the model id.
+    if buf[4] == VERSION && buf[7] != 0 {
         return Err(err("reserved byte set"));
     }
+    let model = if buf[4] == VERSION_2 { buf[7] } else { 0 };
     let deadline_us = u64::from_le_bytes(buf[16..24].try_into().unwrap());
     let payload_len = u32::from_le_bytes(buf[24..28].try_into().unwrap());
     let h = u16::from_le_bytes(buf[28..30].try_into().unwrap());
@@ -218,7 +247,18 @@ fn decode_req_header(buf: &[u8; REQ_HEADER_LEN]) -> std::result::Result<ReqHeade
     if payload_len as u64 != h as u64 * w as u64 * c as u64 || payload_len == 0 {
         return Err(err("payload length does not match dims"));
     }
-    Ok(ReqHeader { mode, service, id, deadline_us, payload_len, h, w, c })
+    Ok(ReqHeader {
+        version: buf[4],
+        mode,
+        service,
+        model,
+        id,
+        deadline_us,
+        payload_len,
+        h,
+        w,
+        c,
+    })
 }
 
 /// Reinterpret raw socket bytes as the `i8` pixel vector the request
@@ -300,6 +340,7 @@ fn read_full(
 
 fn write_response(
     stream: &mut TcpStream,
+    version: u8,
     id: u64,
     status: WireStatus,
     micros: u64,
@@ -307,7 +348,7 @@ fn write_response(
 ) -> io::Result<()> {
     let mut head = [0u8; RESP_HEADER_LEN];
     head[0..4].copy_from_slice(&MAGIC);
-    head[4] = VERSION;
+    head[4] = version;
     head[5] = status as u8;
     head[8..16].copy_from_slice(&id.to_le_bytes());
     head[16..24].copy_from_slice(&micros.to_le_bytes());
@@ -436,7 +477,8 @@ fn connection_loop(
             Err(e) => {
                 metrics.lock().unwrap().wire_protocol_errors += 1;
                 // best-effort reply, then close: framing is untrusted
-                let _ = write_response(&mut stream, e.id, WireStatus::BadRequest, 0, &[]);
+                let _ =
+                    write_response(&mut stream, e.version, e.id, WireStatus::BadRequest, 0, &[]);
                 return;
             }
         };
@@ -453,16 +495,16 @@ fn connection_loop(
         let deadline = (hdr.deadline_us > 0)
             .then(|| Instant::now() + Duration::from_micros(hdr.deadline_us));
         if drain.load(Ordering::Relaxed) {
-            let _ = write_response(&mut stream, hdr.id, WireStatus::Draining, 0, &[]);
+            let _ = write_response(&mut stream, hdr.version, hdr.id, WireStatus::Draining, 0, &[]);
             return;
         }
         metrics.lock().unwrap().wire_requests += 1;
-        let rx = handle.submit_sla(
-            bytes_into_i8(payload),
-            hdr.mode,
-            None,
-            deadline,
-            hdr.service,
+        let rx = handle.submit(
+            InferRequest::new(bytes_into_i8(payload))
+                .mode(hdr.mode)
+                .service(hdr.service)
+                .deadline(deadline)
+                .model(ModelId(hdr.model as u32)),
         );
         let (status, micros, logits) = match rx.recv() {
             Ok(Ok(Reply { logits, latency, .. })) => {
@@ -476,9 +518,12 @@ fn connection_loop(
             Ok(Err(InferError::DeadlineExceeded { .. })) => {
                 (WireStatus::Deadline, 0, Vec::new())
             }
+            Ok(Err(InferError::UnknownModel { .. })) => {
+                (WireStatus::UnknownModel, 0, Vec::new())
+            }
             Ok(Err(InferError::Failed { .. })) | Err(_) => (WireStatus::Failed, 0, Vec::new()),
         };
-        if write_response(&mut stream, hdr.id, status, micros, &logits).is_err() {
+        if write_response(&mut stream, hdr.version, hdr.id, status, micros, &logits).is_err() {
             // the peer vanished after submit: the reply was consumed
             // above, so nothing is stranded — just close
             return;
@@ -509,10 +554,45 @@ impl WireClient {
         Ok(Self { stream: self.stream.try_clone().context("wire client: clone")? })
     }
 
-    /// Send one request frame.  `deadline_us == 0` means no deadline;
-    /// `dims` is `(h, w, c)` and must multiply to `image.len()`.
+    /// Send one v1 request frame (served on the registry's default
+    /// model).  `deadline_us == 0` means no deadline; `dims` is
+    /// `(h, w, c)` and must multiply to `image.len()`.
     pub fn send(
         &mut self,
+        id: u64,
+        mode: Mode,
+        service: ServiceClass,
+        deadline_us: u64,
+        dims: (u16, u16, u16),
+        image: &[i8],
+    ) -> Result<()> {
+        self.send_frame(VERSION, 0, id, mode, service, deadline_us, dims, image)
+    }
+
+    /// Send one v2 request frame naming a registry model.  Model ids on
+    /// the wire are a u8 — the registry never exceeds
+    /// [`super::registry::MAX_MODELS`] slots, so every model is
+    /// addressable.
+    pub fn send_to(
+        &mut self,
+        model: ModelId,
+        id: u64,
+        mode: Mode,
+        service: ServiceClass,
+        deadline_us: u64,
+        dims: (u16, u16, u16),
+        image: &[i8],
+    ) -> Result<()> {
+        let model: u8 = u8::try_from(model.0)
+            .map_err(|_| anyhow::anyhow!("model id {} not wire-addressable", model.0))?;
+        self.send_frame(VERSION_2, model, id, mode, service, deadline_us, dims, image)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn send_frame(
+        &mut self,
+        version: u8,
+        model: u8,
         id: u64,
         mode: Mode,
         service: ServiceClass,
@@ -525,8 +605,10 @@ impl WireClient {
             bail!("dims {dims:?} do not match payload length {}", image.len());
         }
         let hdr = ReqHeader {
+            version,
             mode,
             service,
+            model,
             id,
             deadline_us,
             payload_len: image.len() as u32,
@@ -549,7 +631,7 @@ impl WireClient {
         if head[0..4] != MAGIC {
             bail!("wire client: bad response magic");
         }
-        if head[4] != VERSION {
+        if head[4] != VERSION && head[4] != VERSION_2 {
             bail!("wire client: unsupported response version {}", head[4]);
         }
         let status = WireStatus::from_u8(head[5])
@@ -562,10 +644,10 @@ impl WireClient {
         }
         let mut payload = vec![0u8; len as usize];
         self.stream.read_exact(&mut payload).context("wire client: recv payload")?;
-        Ok(WireReply { id, status, micros, logits: bytes_into_i8(payload) })
+        Ok(WireReply { id, version: head[4], status, micros, logits: bytes_into_i8(payload) })
     }
 
-    /// Send one request and block for its reply.
+    /// Send one v1 request and block for its reply.
     pub fn request(
         &mut self,
         id: u64,
@@ -578,6 +660,22 @@ impl WireClient {
         self.send(id, mode, service, deadline_us, dims, image)?;
         self.recv()
     }
+
+    /// Send one v2 request naming a model and block for its reply.
+    #[allow(clippy::too_many_arguments)]
+    pub fn request_to(
+        &mut self,
+        model: ModelId,
+        id: u64,
+        mode: Mode,
+        service: ServiceClass,
+        deadline_us: u64,
+        dims: (u16, u16, u16),
+        image: &[i8],
+    ) -> Result<WireReply> {
+        self.send_to(model, id, mode, service, deadline_us, dims, image)?;
+        self.recv()
+    }
 }
 
 #[cfg(test)]
@@ -586,8 +684,10 @@ mod tests {
 
     fn header() -> ReqHeader {
         ReqHeader {
+            version: VERSION,
             mode: Mode::HighThroughput,
             service: ServiceClass::Interactive,
+            model: 0,
             id: 0xDEAD_BEEF_CAFE_F00D,
             deadline_us: 2_000,
             payload_len: 300,
@@ -603,6 +703,38 @@ mod tests {
         let mut buf = [0u8; REQ_HEADER_LEN];
         encode_req_header(&mut buf, &hdr);
         assert_eq!(decode_req_header(&buf).unwrap(), hdr);
+    }
+
+    #[test]
+    fn v2_header_round_trips_with_a_model() {
+        let hdr = ReqHeader {
+            version: VERSION_2,
+            model: 7,
+            ..header()
+        };
+        let mut buf = [0u8; REQ_HEADER_LEN];
+        encode_req_header(&mut buf, &hdr);
+        assert_eq!(buf[4], VERSION_2);
+        assert_eq!(buf[7], 7);
+        assert_eq!(decode_req_header(&buf).unwrap(), hdr);
+    }
+
+    #[test]
+    fn byte_7_is_reserved_in_v1_and_the_model_in_v2() {
+        // A v1 frame with byte 7 set is rejected exactly as before…
+        let mut buf = [0u8; REQ_HEADER_LEN];
+        encode_req_header(&mut buf, &header());
+        buf[7] = 3;
+        assert_eq!(decode_req_header(&buf).unwrap_err().what, "reserved byte set");
+        // …while the byte-identical frame under v2 decodes as model 3.
+        buf[4] = VERSION_2;
+        let hdr = decode_req_header(&buf).unwrap();
+        assert_eq!(hdr.model, 3);
+        assert_eq!(hdr.version, VERSION_2);
+        // Rejections echo the request's own version.
+        buf[5] = 9; // unknown mode
+        let e = decode_req_header(&buf).unwrap_err();
+        assert_eq!(e.version, VERSION_2);
     }
 
     #[test]
@@ -660,6 +792,7 @@ mod tests {
             WireStatus::Failed,
             WireStatus::BadRequest,
             WireStatus::Draining,
+            WireStatus::UnknownModel,
         ] {
             assert_eq!(WireStatus::from_u8(s as u8), Some(s));
         }

@@ -7,6 +7,7 @@
 //!                 [--deadline-ms D] [--tight-slack-us T] [--lease-slack-us H]
 //!                 [--class interactive|standard|bulk] [--slo-ms S] [--arbitration slo|oldest]
 //!                 [--listen ADDR] [--listen-secs N]   # TCP wire front-end instead of calib replay
+//!                 [--models N]                        # wire mode: serve N registry models (slot 0 + synthetic)
 //! binarray perf   [--m M]               # Table III analytical model
 //! binarray area                         # Table IV resource model
 //! binarray listing                      # compiled CNN processing program
@@ -22,8 +23,8 @@ use anyhow::{bail, Context, Result};
 use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
 use binarray::coordinator::{
-    Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, Mode,
-    RoutePolicy, ServiceClass, WireServer,
+    Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, InferRequest,
+    Mode, ModelRegistry, RoutePolicy, ServiceClass, WireServer,
 };
 use binarray::tensor::Shape;
 use binarray::{area, golden, isa, nn, perf};
@@ -286,7 +287,12 @@ fn serve(args: &Args) -> Result<()> {
         let idx = i % calib.n;
         let deadline =
             (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
-        rxs.push(coord.submit_sla(calib.image(idx).to_vec(), mode, None, deadline, service));
+        rxs.push(coord.submit(
+            InferRequest::new(calib.image(idx).to_vec())
+                .mode(mode)
+                .deadline(deadline)
+                .service(service),
+        ));
         labels.push(calib.labels[idx]);
     }
     let mut correct = 0u64;
@@ -339,14 +345,23 @@ fn serve(args: &Args) -> Result<()> {
 fn serve_wire(args: &Args, cfg: CoordinatorConfig, listen: &str) -> Result<()> {
     // Built artifacts when present, the synthetic CNN-A stand-in
     // otherwise — the loopback smoke path must run on a bare checkout.
-    let net = load_net().unwrap_or_else(|_| {
-        let mut rng = binarray::util::rng::Xoshiro256::new(0xB14A);
-        binarray::artifacts::synthetic_cnn_a(&mut rng, 2)
-    });
+    let net = binarray::artifacts::cnn_a_or_synthetic(2);
     let dims = binarray::isa::compiler::infer_input_dims(&net);
     let shape = Shape::new(dims.1, dims.0, dims.2);
     let secs: u64 = args.get("listen-secs", 30)?;
-    let coord = Coordinator::start(cfg, net)?;
+    // --models N serves N models from one registry: slot 0 is CNN-A
+    // under the --config array (what v1 frames keep hitting), slots
+    // 1..N are synthetic stand-ins on a [1,32,2] array for v2 clients
+    // (`loadgen --models`) to split traffic across.
+    let n_models: usize = args.get("models", 1)?;
+    let registry = std::sync::Arc::new(ModelRegistry::new(cfg.workers.max(1)));
+    registry.register("cnn-a", cfg.array, net, 0)?;
+    for i in 1..n_models {
+        let mut rng = binarray::util::rng::Xoshiro256::new(0xB14B + i as u64);
+        let extra = binarray::artifacts::synthetic_cnn_a(&mut rng, 4);
+        registry.register(&format!("synth-{i}"), ArrayConfig::new(1, 32, 2), extra, 0)?;
+    }
+    let coord = Coordinator::with_registry(cfg, std::sync::Arc::clone(&registry))?;
     let wire = WireServer::start(listen, coord.handle(), std::sync::Arc::clone(&coord.metrics))?;
     println!(
         "wire: listening on {} — frames are {}x{}x{} ({} bytes), draining after {secs}s",
@@ -356,6 +371,9 @@ fn serve_wire(args: &Args, cfg: CoordinatorConfig, listen: &str) -> Result<()> {
         shape.c,
         shape.len(),
     );
+    for (id, name) in registry.names() {
+        println!("wire: model {} = {name}", id.0);
+    }
     std::thread::sleep(Duration::from_secs(secs));
     // Drain order matters: the wire server first (answer in-flight
     // requests while workers are still alive), the coordinator second.

@@ -13,7 +13,7 @@ use std::time::Duration;
 use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
 use binarray::binarray::ArrayConfig;
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode, RoutePolicy,
+    BatchPolicy, Coordinator, CoordinatorConfig, InferRequest, Mode, RoutePolicy,
 };
 use binarray::golden;
 use binarray::tensor::Shape;
@@ -108,7 +108,7 @@ fn concurrent_producers_all_replied_ids_unique_metrics_consistent() {
                                 Mode::HighThroughput
                             };
                             let reply = h
-                                .submit(image.clone(), mode)
+                                .submit(InferRequest::new(image.clone()).mode(mode))
                                 .recv()
                                 .expect("live channel")
                                 .expect("successful inference");
@@ -179,7 +179,7 @@ fn shutdown_drains_under_multi_producer_load() {
                             } else {
                                 Mode::HighThroughput
                             };
-                            h.submit(image.clone(), mode)
+                            h.submit(InferRequest::new(image.clone()).mode(mode))
                         })
                         .collect::<Vec<_>>()
                 })
@@ -231,7 +231,9 @@ fn sharded_path_survives_concurrent_producers() {
                         } else {
                             (Mode::HighThroughput, want_lo)
                         };
-                        let reply = h.infer(image.clone(), mode).expect("sharded inference");
+                        let reply = h
+                            .infer(InferRequest::new(image.clone()).mode(mode))
+                            .expect("sharded inference");
                         assert_eq!(
                             &reply.logits, want,
                             "producer {p} frame {i} mode {mode:?} ({cards} cards)"

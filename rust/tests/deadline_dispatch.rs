@@ -14,7 +14,8 @@ use std::time::{Duration, Instant};
 use binarray::artifacts::{self, LayerKind, QuantLayer, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem};
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, InferError, Mode, RoutePolicy,
+    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, InferError, InferRequest, Mode,
+    RoutePolicy,
 };
 use binarray::golden;
 use binarray::tensor::Shape;
@@ -95,18 +96,16 @@ fn expired_on_arrival_is_shed_before_any_compute() {
         let coord = Coordinator::start(cfg(cards, RoutePolicy::BatchOnly), net.clone()).unwrap();
         let expired = Instant::now();
         let err = coord
-            .infer_qos(image.clone(), Mode::HighAccuracy, None, Some(expired))
+            .infer(InferRequest::new(image.clone()).deadline(expired))
             .expect_err("expired work must be refused");
         let err: InferError = err.downcast().expect("typed InferError");
         assert!(err.is_deadline(), "typed shed, got {err:?}");
         assert!(matches!(err, InferError::DeadlineExceeded { .. }));
         // the pool is unharmed and still bit-exact
         let ok = coord
-            .infer_qos(
-                image.clone(),
-                Mode::HighAccuracy,
-                None,
-                Some(Instant::now() + Duration::from_secs(60)),
+            .infer(
+                InferRequest::new(image.clone())
+                    .deadline(Instant::now() + Duration::from_secs(60)),
             )
             .expect("live request served");
         assert_eq!(ok.logits, want, "{cards} cards");
@@ -139,25 +138,15 @@ fn tight_slack_routes_small_frames_to_the_shard_lane() {
     let coord = Coordinator::start(cfg(2, route), net).unwrap();
     // tight slack (3s ≤ 5s) ⇒ latency lane
     let urgent = coord
-        .infer_qos(
-            image.clone(),
-            Mode::HighAccuracy,
-            None,
-            Some(Instant::now() + Duration::from_secs(3)),
-        )
+        .infer(InferRequest::new(image.clone()).deadline(Instant::now() + Duration::from_secs(3)))
         .unwrap();
     assert_eq!(urgent.logits, want);
     // no deadline ⇒ never tight ⇒ batch lane
-    let relaxed = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+    let relaxed = coord.infer(InferRequest::new(image.clone())).unwrap();
     assert_eq!(relaxed.logits, want);
     // plenty of slack (60s > 5s) ⇒ batch lane
     let lazy = coord
-        .infer_qos(
-            image,
-            Mode::HighAccuracy,
-            None,
-            Some(Instant::now() + Duration::from_secs(60)),
-        )
+        .infer(InferRequest::new(image).deadline(Instant::now() + Duration::from_secs(60)))
         .unwrap();
     assert_eq!(lazy.logits, want);
     let m = coord.shutdown();
@@ -199,11 +188,11 @@ fn deadlined_replies_stay_bit_exact_on_both_lanes() {
                 } else {
                     Mode::HighThroughput
                 };
-                coord.submit_qos(
-                    image.clone(),
-                    mode,
-                    Some(class),
-                    Some(Instant::now() + Duration::from_secs(120)),
+                coord.submit(
+                    InferRequest::new(image.clone())
+                        .mode(mode)
+                        .route(class)
+                        .deadline(Instant::now() + Duration::from_secs(120)),
                 )
             })
             .collect();
@@ -243,7 +232,7 @@ fn max_batch_zero_coordinator_serves_and_shuts_down() {
     )
     .unwrap();
     for _ in 0..3 {
-        let reply = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+        let reply = coord.infer(InferRequest::new(image.clone())).unwrap();
         assert_eq!(reply.logits, want);
     }
     let m = coord.shutdown();
@@ -294,19 +283,16 @@ fn aware_router_meets_strictly_more_deadlines_than_fifo() {
             net.clone(),
         )
         .unwrap();
-        coord.infer(image.clone(), Mode::HighAccuracy).unwrap(); // warmup
+        coord.infer(InferRequest::new(image.clone())).unwrap(); // warmup
         let t0 = Instant::now();
         let mut rxs = Vec::new();
         // the expired pile first, the feasible tail behind it — FIFO
         // order is the worst case the deadline signal exists to fix
         for i in 0..junk + feasible {
             let deadline = if i < junk { t0 } else { t0 + budget };
-            rxs.push(coord.submit_qos(
-                image.clone(),
-                Mode::HighAccuracy,
-                None,
-                aware.then_some(deadline),
-            ));
+            rxs.push(
+                coord.submit(InferRequest::new(image.clone()).deadline(aware.then_some(deadline))),
+            );
         }
         let (mut met, mut missed, mut shed) = (0u64, 0u64, 0u64);
         for (i, rx) in rxs.into_iter().enumerate() {

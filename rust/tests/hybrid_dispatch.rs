@@ -11,7 +11,7 @@ use std::time::Duration;
 use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
 use binarray::binarray::ArrayConfig;
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, Mode, RoutePolicy,
+    BatchPolicy, Coordinator, CoordinatorConfig, DispatchClass, InferRequest, Mode, RoutePolicy,
 };
 use binarray::golden;
 use binarray::tensor::Shape;
@@ -116,7 +116,7 @@ fn mixed_traffic_both_lanes_active_and_bit_exact() {
                             (Mode::HighThroughput, want_lo)
                         };
                         let reply = h
-                            .infer_routed(image.clone(), mode, Some(class))
+                            .infer(InferRequest::new(image.clone()).mode(mode).route(class))
                             .expect("mixed-traffic inference");
                         assert_eq!(
                             &reply.logits, want,
@@ -174,7 +174,7 @@ fn adaptive_policy_serves_and_partitions_traffic() {
     .unwrap();
     let total = 32u64;
     let rxs: Vec<_> = (0..total)
-        .map(|_| coord.submit(image.clone(), Mode::HighAccuracy))
+        .map(|_| coord.submit(InferRequest::new(image.clone())))
         .collect();
     for rx in rxs {
         let reply = rx.recv().unwrap().expect("adaptive inference");
@@ -283,10 +283,10 @@ fn explicit_override_survives_opposing_policy() {
     )
     .unwrap();
     let forced = coord
-        .infer_routed(image.clone(), Mode::HighAccuracy, Some(DispatchClass::Batch))
+        .infer(InferRequest::new(image.clone()).route(DispatchClass::Batch))
         .unwrap();
     assert_eq!(forced.logits, want);
-    let routed = coord.infer(image, Mode::HighAccuracy).unwrap();
+    let routed = coord.infer(InferRequest::new(image)).unwrap();
     assert_eq!(routed.logits, want);
     let m = coord.shutdown();
     assert_eq!(m.completed, 2);

@@ -11,7 +11,7 @@
 
 use binarray::artifacts::{CalibBatch, GoldenLogits, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem, PAPER_CONFIGS};
-use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Mode};
+use binarray::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, InferRequest};
 use binarray::tensor::Shape;
 use binarray::{golden, isa, nn, perf};
 
@@ -131,7 +131,7 @@ fn serving_path_equals_direct_simulation() {
     .unwrap();
     let shape = Shape::new(calib.h, calib.w, calib.c);
     let rxs: Vec<_> = (0..16)
-        .map(|i| coord.submit(calib.image(i).to_vec(), Mode::HighAccuracy))
+        .map(|i| coord.submit(InferRequest::new(calib.image(i).to_vec())))
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let reply = rx.recv().unwrap().unwrap();

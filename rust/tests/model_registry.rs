@@ -1,0 +1,227 @@
+//! Multi-model registry coverage: several (network, config) entries
+//! behind one coordinator, requests pinned to the model they name, and
+//! zero-downtime hot swaps.
+//!
+//! * cross-model exactness: every paper config registered as its own
+//!   model in a single coordinator, hit by interleaved concurrent
+//!   producers — each reply must be bit-identical to *its own* model's
+//!   `golden::forward`, never a neighbour's;
+//! * unknown models answer a typed refusal and leave the pool serving;
+//! * a hot swap under load never fails a request: pre-swap admissions
+//!   drain on the plan they were admitted under, post-swap admissions
+//!   run the new weights, and the accounting identity
+//!   `submitted == completed + failed + refused` holds across the swap.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::{ArrayConfig, PAPER_CONFIGS};
+use binarray::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, InferError, InferRequest, ModelId, ModelRegistry,
+};
+use binarray::golden;
+use binarray::tensor::Shape;
+use binarray::util::{prop, rng::Xoshiro256};
+
+/// The stress-suite's tiny-but-complete net (conv+pool, two dense):
+/// each call draws fresh weights, so successive calls give *different*
+/// models with the same 10×10×3 input geometry — ideal for proving
+/// requests land on the model they named.
+fn tiny_net(rng: &mut Xoshiro256) -> (QuantNetwork, Shape) {
+    let m = 2;
+    let conv = QuantLayer {
+        kind: LayerKind::Conv,
+        planes: prop::sign_vec(rng, 4 * m * 3 * 3 * 3),
+        alpha_q: (0..4 * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..4).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d: 4,
+        m,
+        kh: 3,
+        kw: 3,
+        c: 3,
+        f_alpha: 5,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool: 2,
+        stride: 1,
+    };
+    let dense = |rng: &mut Xoshiro256, d: usize, n_in: usize, relu: bool| QuantLayer {
+        kind: LayerKind::Dense,
+        planes: prop::sign_vec(rng, d * m * n_in),
+        alpha_q: (0..d * m).map(|_| rng.range_i64(1, 80) as i8).collect(),
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 5,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    };
+    let net = QuantNetwork {
+        f_input: 7,
+        layers: vec![conv, dense(rng, 8, 64, true), dense(rng, 5, 8, false)],
+    };
+    assert_eq!(binarray::isa::compiler::infer_input_dims(&net), (10, 10, 3));
+    (net, Shape::new(10, 10, 3))
+}
+
+fn cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        array: ArrayConfig::new(1, 8, 2),
+        workers,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_micros(200),
+        },
+        ..Default::default()
+    }
+}
+
+/// All four paper configs as distinct models in one coordinator, one
+/// producer thread per model submitting concurrently: interleaving is
+/// a scheduling concern, never an arithmetic one.
+#[test]
+fn every_paper_config_serves_its_own_model_bit_exactly() {
+    let mut rng = Xoshiro256::new(0xC0DE);
+    let registry = Arc::new(ModelRegistry::new(2));
+    // (id, image, want) per paper config — fresh weights each, so a
+    // reply computed by the wrong model cannot match its golden
+    let mut models = Vec::new();
+    for (i, array) in PAPER_CONFIGS.into_iter().enumerate() {
+        let (net, shape) = tiny_net(&mut rng);
+        let image = prop::i8_vec(&mut rng, shape.len());
+        let want = golden::forward(&net, &image, shape, None);
+        let id = registry
+            .register(&format!("paper-{i}"), array, net, 0)
+            .expect("every paper config must register");
+        models.push((id, image, want));
+    }
+    let coord = Coordinator::with_registry(cfg(2), Arc::clone(&registry)).unwrap();
+    let per_model = 12usize;
+    std::thread::scope(|s| {
+        for (id, image, want) in &models {
+            let h = coord.handle();
+            s.spawn(move || {
+                for i in 0..per_model {
+                    let reply = h
+                        .infer(InferRequest::new(image.clone()).model(*id))
+                        .expect("interleaved multi-model traffic is served");
+                    assert_eq!(&reply.logits, want, "model {id:?} frame {i}");
+                }
+            });
+        }
+    });
+    let m = coord.shutdown();
+    let total = (models.len() * per_model) as u64;
+    assert_eq!(m.submitted, total);
+    assert_eq!(m.completed, total);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.admission_refused, 0);
+    // per-model counters saw exactly their own slice of the traffic
+    for (id, _, _) in &models {
+        let s = &m.models[&id.0];
+        assert_eq!(s.submitted, per_model as u64, "model {id:?}");
+        assert_eq!(s.completed, per_model as u64, "model {id:?}");
+        assert_eq!(s.latency.count(), per_model, "model {id:?}");
+    }
+}
+
+/// A request naming a slot the registry does not serve is answered with
+/// the typed `UnknownModel` refusal — counted into the admission
+/// identity, never a dropped receiver — and the pool keeps serving.
+#[test]
+fn unknown_model_is_a_typed_refusal_not_a_fault() {
+    let mut rng = Xoshiro256::new(0x0D0);
+    let (net, shape) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want = golden::forward(&net, &image, shape, None);
+    let registry = Arc::new(ModelRegistry::new(1));
+    registry.register("only", ArrayConfig::new(1, 8, 2), net, 0).unwrap();
+    let coord = Coordinator::with_registry(cfg(1), Arc::clone(&registry)).unwrap();
+    let err = coord
+        .infer(InferRequest::new(image.clone()).model(ModelId(7)))
+        .expect_err("slot 7 is not registered");
+    let ie: InferError = err.downcast().expect("typed InferError");
+    assert!(matches!(ie, InferError::UnknownModel { .. }), "got {ie:?}");
+    assert!(ie.is_refused(), "unknown models count as refusals");
+    let ok = coord.infer(InferRequest::new(image)).unwrap();
+    assert_eq!(ok.logits, want, "the pool still serves the known model");
+    let m = coord.shutdown();
+    assert_eq!(m.submitted, 2);
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.admission_refused, 1);
+    assert_eq!(m.completed + m.failed + m.admission_refused, m.submitted);
+}
+
+/// Zero-downtime hot swap: traffic in flight when `swap` publishes new
+/// weights drains on the plan it was admitted under, everything
+/// admitted after the swap runs the new weights, and no request is
+/// failed or refused because of the swap.
+#[test]
+fn hot_swap_under_load_never_fails_a_request() {
+    let mut rng = Xoshiro256::new(0x5A17);
+    let (net_a, shape) = tiny_net(&mut rng);
+    let (net_b, _) = tiny_net(&mut rng);
+    let image = prop::i8_vec(&mut rng, shape.len());
+    let want_a = golden::forward(&net_a, &image, shape, None);
+    let want_b = golden::forward(&net_b, &image, shape, None);
+    assert_ne!(want_a, want_b, "the two generations must be tellable apart");
+    let registry = Arc::new(ModelRegistry::new(2));
+    let id = registry.register("live", ArrayConfig::new(1, 8, 2), net_a, 0).unwrap();
+    let coord = Coordinator::with_registry(cfg(2), Arc::clone(&registry)).unwrap();
+    let h = coord.handle();
+    let total = 64usize;
+    let swap_at = total / 2;
+    let mut rxs = Vec::with_capacity(total);
+    for i in 0..total {
+        if i == swap_at {
+            // compile + publish the replacement while the pool is busy;
+            // the slot id survives, the epoch bumps
+            let swapped = registry
+                .swap("live", ArrayConfig::new(1, 32, 2), net_b.clone())
+                .expect("hot swap");
+            assert_eq!(swapped, id, "a swap keeps the slot id");
+        }
+        rxs.push(h.submit(InferRequest::new(image.clone())));
+    }
+    let (mut served_a, mut served_b) = (0u64, 0u64);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .recv()
+            .expect("answered, not dropped")
+            .unwrap_or_else(|e| panic!("frame {i} failed across the swap: {e}"));
+        if reply.logits == want_a {
+            served_a += 1;
+        } else if reply.logits == want_b {
+            served_b += 1;
+            // old weights can only appear on pre-swap admissions
+        } else {
+            panic!("frame {i} matches neither generation's golden");
+        }
+        // everything submitted after `swap` returned must run new weights
+        if i >= swap_at {
+            assert_eq!(reply.logits, want_b, "post-swap frame {i} served stale weights");
+        }
+    }
+    assert!(served_b >= (total - swap_at) as u64, "the new generation took over");
+    assert_eq!(served_a + served_b, total as u64, "every frame answered exactly once");
+    let m = coord.shutdown();
+    assert_eq!(m.submitted, total as u64);
+    assert_eq!(m.completed, total as u64, "a swap never fails in-flight work");
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.admission_refused, 0);
+    assert_eq!(m.completed + m.failed + m.admission_refused, m.submitted);
+    // the slot's counters span both epochs under one id
+    let s = &m.models[&id.0];
+    assert_eq!(s.submitted, total as u64);
+    assert_eq!(s.completed, total as u64);
+}

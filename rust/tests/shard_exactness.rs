@@ -13,7 +13,7 @@
 use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
 use binarray::binarray::{BinArraySystem, PAPER_CONFIGS};
 use binarray::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Mode, RoutePolicy,
+    BatchPolicy, Coordinator, CoordinatorConfig, InferRequest, Mode, RoutePolicy,
 };
 use binarray::golden;
 use binarray::tensor::Shape;
@@ -107,7 +107,7 @@ fn sharded_equals_unsharded_equals_golden_all_configs_modes_cards() {
                     net.clone(),
                 )
                 .unwrap();
-                let reply = coord.infer(image.clone(), mode).unwrap();
+                let reply = coord.infer(InferRequest::new(image.clone()).mode(mode)).unwrap();
                 assert_eq!(
                     reply.logits,
                     want,

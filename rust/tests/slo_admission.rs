@@ -16,7 +16,7 @@ use binarray::artifacts::{self, LayerKind, QuantLayer, QuantNetwork};
 use binarray::binarray::{ArrayConfig, BinArraySystem};
 use binarray::coordinator::{
     Arbitration, BatchPolicy, ClassSpec, ClassTable, Coordinator, CoordinatorConfig, InferError,
-    Metrics, Mode, RoutePolicy, ServiceClass,
+    InferRequest, Metrics, Mode, RoutePolicy, ServiceClass,
 };
 use binarray::golden;
 use binarray::tensor::Shape;
@@ -136,12 +136,8 @@ fn admission_budget_refuses_before_any_cost() {
         .unwrap();
         let rxs: Vec<_> = (0..5)
             .map(|_| {
-                coord.submit_sla(
-                    image.clone(),
-                    Mode::HighAccuracy,
-                    None,
-                    None,
-                    ServiceClass::Interactive,
+                coord.submit(
+                    InferRequest::new(image.clone()).service(ServiceClass::Interactive),
                 )
             })
             .collect();
@@ -210,7 +206,7 @@ fn capacity_gate_refuses_unmeetable_slo_after_calibration() {
     {
         let coord = Coordinator::start(cfg(1, classes), net.clone()).unwrap();
         let err = coord
-            .infer_sla(image.clone(), Mode::HighAccuracy, None, None, ServiceClass::Interactive)
+            .infer(InferRequest::new(image.clone()).service(ServiceClass::Interactive))
             .expect_err("the seeded model proves a 100 µs SLO hopeless at startup");
         let ie: InferError = err.downcast().expect("typed InferError");
         assert!(ie.is_refused(), "typed refusal on a fresh coordinator, got {ie:?}");
@@ -226,11 +222,11 @@ fn capacity_gate_refuses_unmeetable_slo_after_calibration() {
     // counts are asserted on the post-shutdown totals, which are exact.
     let coord = Coordinator::start(cfg(1, classes), net).unwrap();
     for _ in 0..2 {
-        let reply = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+        let reply = coord.infer(InferRequest::new(image.clone())).unwrap();
         assert_eq!(reply.logits, want);
     }
     let err = coord
-        .infer_sla(image.clone(), Mode::HighAccuracy, None, None, ServiceClass::Interactive)
+        .infer(InferRequest::new(image.clone()).service(ServiceClass::Interactive))
         .expect_err("a 100 µs SLO on a ms-scale frame must be refused");
     let ie: InferError = err.downcast().expect("typed InferError");
     let InferError::AdmissionRefused { earliest_feasible, .. } = ie else {
@@ -242,7 +238,7 @@ fn capacity_gate_refuses_unmeetable_slo_after_calibration() {
     );
     // SLO-free traffic on the same calibrated coordinator is never
     // refused — admission control is a class contract.
-    let reply = coord.infer(image.clone(), Mode::HighAccuracy).unwrap();
+    let reply = coord.infer(InferRequest::new(image.clone())).unwrap();
     assert_eq!(reply.logits, want);
     let m = coord.shutdown();
     assert_identity(&m);
@@ -283,12 +279,8 @@ fn fresh_coordinator_admits_a_full_burst_under_a_generous_slo() {
         let burst = 64usize;
         let rxs: Vec<_> = (0..burst)
             .map(|_| {
-                coord.submit_sla(
-                    image.clone(),
-                    Mode::HighAccuracy,
-                    None,
-                    None,
-                    ServiceClass::Interactive,
+                coord.submit(
+                    InferRequest::new(image.clone()).service(ServiceClass::Interactive),
                 )
             })
             .collect();
@@ -357,12 +349,10 @@ fn identity_holds_under_concurrent_mixed_class_load() {
                             // (exercises the shed gates alongside refusal)
                             let deadline = (i % 5 == 0).then(Instant::now);
                             let reply = h
-                                .submit_sla(
-                                    image.clone(),
-                                    Mode::HighAccuracy,
-                                    None,
-                                    deadline,
-                                    service,
+                                .submit(
+                                    InferRequest::new(image.clone())
+                                        .deadline(deadline)
+                                        .service(service),
                                 )
                                 .recv()
                                 .expect("every request answered exactly once");
@@ -459,26 +449,18 @@ fn slo_aware_arbitration_meets_strictly_more_interactive_slos() {
             net.clone(),
         )
         .unwrap();
-        coord.infer(image.clone(), Mode::HighAccuracy).unwrap(); // warmup
+        coord.infer(InferRequest::new(image.clone())).unwrap(); // warmup
         let h = coord.handle();
         let mut rxs = Vec::new();
         // the flood first (the older lane), the urgent trickle behind it
         for _ in 0..bulk {
-            rxs.push(h.submit_sla(
-                image.clone(),
-                Mode::HighAccuracy,
-                None,
-                None,
-                ServiceClass::Bulk,
-            ));
+            rxs.push(h.submit(InferRequest::new(image.clone()).service(ServiceClass::Bulk)));
         }
         for _ in 0..interactive {
-            rxs.push(h.submit_sla(
-                image.clone(),
-                Mode::HighThroughput,
-                None,
-                None,
-                ServiceClass::Interactive,
+            rxs.push(h.submit(
+                InferRequest::new(image.clone())
+                    .mode(Mode::HighThroughput)
+                    .service(ServiceClass::Interactive),
             ));
         }
         for (i, rx) in rxs.into_iter().enumerate() {
