@@ -607,6 +607,69 @@ impl BinArraySystem {
     pub fn set_mode(&mut self, m_run: Option<usize>) {
         self.m_run = m_run;
     }
+
+    /// Execute one full frame over `cards`, sharded per `shards` — the
+    /// orchestrator's scatter/gather data path without the coordinator
+    /// threads: per layer, every claiming card runs its sub-schedule over
+    /// the layer's full input region and the host stitches the returned
+    /// tiles into a ping-pong feature buffer.  All cards must be built
+    /// from the same network and config as the plan behind `shards`; the
+    /// cards' accuracy mode is set to `m_run` here.  Returns the logits
+    /// and the sharded frame's critical path (sum over layers of the
+    /// slowest card's wall cycles).
+    ///
+    /// This is the reference data path the sharded arms of the
+    /// differential racer ([`crate::verify`]) and the exactness suites
+    /// drive; the threaded orchestrator in `coordinator::server` must be
+    /// output-identical to it.
+    pub fn run_frame_sharded(
+        cards: &mut [BinArraySystem],
+        shards: &super::plan::ShardPlan,
+        image: &[i8],
+        m_run: Option<usize>,
+    ) -> Result<(Vec<i8>, u64)> {
+        use crate::tensor::scatter_tile;
+        let Some(first_card) = cards.first() else {
+            bail!("run_frame_sharded needs at least one card");
+        };
+        let plan = first_card.plan.clone();
+        for c in cards.iter_mut() {
+            c.set_mode(m_run);
+        }
+        let mode = plan.mode(m_run);
+        let Some(first) = mode.layers.first() else {
+            bail!("plan has no layers");
+        };
+        if image.len() != first.in_len {
+            bail!("image len {} != {}", image.len(), first.in_len);
+        }
+        let mut fbuf = vec![0i8; plan.fbuf_words];
+        fbuf[first.in_base..first.in_base + first.in_len].copy_from_slice(image);
+        let mut critical = 0u64;
+        for (li, lp) in mode.layers.iter().enumerate() {
+            let input = fbuf[lp.in_base..lp.in_base + lp.in_len].to_vec();
+            let mut wall = 0u64;
+            let mut tiles = Vec::new();
+            for (ci, shard) in shards.mode(m_run)[li].cards.iter().enumerate() {
+                if shard.n_units() == 0 {
+                    continue;
+                }
+                let run = cards[ci].run_shard(li, &input, shard)?;
+                wall = wall.max(run.wall);
+                tiles.extend(run.tiles);
+            }
+            let out = &mut fbuf[lp.out_base..lp.out_base + lp.out_len];
+            for t in tiles {
+                scatter_tile(lp.out_shape, out, t.rows, t.chans, &t.data);
+            }
+            critical += wall;
+        }
+        let last = mode.layers.last().expect("checked non-empty");
+        Ok((
+            fbuf[last.out_base..last.out_base + last.out_len].to_vec(),
+            critical,
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -740,7 +803,6 @@ mod tests {
         // layer over N card systems, gather tiles into a host-held
         // ping-pong buffer, and check logits + latency accounting.
         use crate::binarray::plan::ShardPlan;
-        use crate::tensor::scatter_tile;
         let mut rng = Xoshiro256::new(9);
         let net = cnn_a_quant(&mut rng, 4);
         let img = image(&mut rng);
@@ -749,37 +811,10 @@ mod tests {
             let mut cards: Vec<BinArraySystem> = (0..n_cards)
                 .map(|_| BinArraySystem::with_host_threads(cfg, net.clone(), 1).unwrap())
                 .collect();
-            for c in &mut cards {
-                c.set_mode(m_run);
-            }
             let plan = cards[0].plan.clone();
             let shards = ShardPlan::new(&plan, n_cards);
-            let mode = plan.mode(m_run);
-            let mut fbuf = vec![0i8; plan.fbuf_words];
-            let first = &mode.layers[0];
-            fbuf[first.in_base..first.in_base + first.in_len].copy_from_slice(&img);
-            let mut sharded_layer_sum = 0u64;
-            for (li, lp) in mode.layers.iter().enumerate() {
-                let input = fbuf[lp.in_base..lp.in_base + lp.in_len].to_vec();
-                let mut outs = Vec::new();
-                for (ci, shard) in shards.mode(m_run)[li].cards.iter().enumerate() {
-                    if shard.n_units() == 0 {
-                        continue;
-                    }
-                    outs.push(cards[ci].run_shard(li, &input, shard).unwrap());
-                }
-                let out = &mut fbuf[lp.out_base..lp.out_base + lp.out_len];
-                let mut wall = 0u64;
-                for run in outs {
-                    wall = wall.max(run.wall);
-                    for t in run.tiles {
-                        scatter_tile(lp.out_shape, out, t.rows, t.chans, &t.data);
-                    }
-                }
-                sharded_layer_sum += wall;
-            }
-            let last = mode.layers.last().unwrap();
-            let logits = fbuf[last.out_base..last.out_base + last.out_len].to_vec();
+            let (logits, sharded_layer_sum) =
+                BinArraySystem::run_frame_sharded(&mut cards, &shards, &img, m_run).unwrap();
             let want = golden::forward(&net, &img, Shape::new(48, 48, 3), m_run);
             assert_eq!(logits, want, "cards={n_cards} mode={m_run:?}");
             // latency: the sharded machine's layer walls must beat one card

@@ -12,16 +12,44 @@ use crate::artifacts::{LayerKind, QuantLayer, QuantNetwork};
 use crate::fixp;
 use crate::tensor::{FeatureMap, Shape};
 
+/// Below this plane length the per-call activation packing of the
+/// popcount path costs more than it saves, so [`binary_dot`] keeps the
+/// scalar walk.  At or above it, one [`PackedActs::pack`] of the patch is
+/// amortized over the layer's `m_run` binary levels, and each level's dot
+/// shrinks from `n_c` multiply-adds to `n_c/64` AND+popcount words per
+/// activation bit.
+const POPCOUNT_MIN_NC: usize = 64;
+
 /// Run one binary dot product (Eq. 8) over an im2col patch / dense input.
 ///
 /// `m_run` truncates to the first `m_run` binary levels (high-throughput
 /// mode, §IV-D); pass `layer.m` for high-accuracy mode.
+///
+/// Long patches take the explicit `count_ones` path (the `2P − S`
+/// identity of [`signed_dot_popcount`], activations packed once per call
+/// and reused across all `m_run` levels); short ones keep the scalar
+/// walk.  Both are exact — `tests` race them on every length.
 #[inline]
 pub fn binary_dot(layer: &QuantLayer, d: usize, x: &[i8], m_run: usize) -> i32 {
     let n_c = layer.n_c();
     debug_assert_eq!(x.len(), n_c);
+    let levels = m_run.min(layer.m);
     let mut acc_total: i32 = layer.bias_q[d];
-    for m in 0..m_run.min(layer.m) {
+    if n_c >= POPCOUNT_MIN_NC && levels > 0 {
+        return ACTS_SCRATCH.with(|cell| {
+            let mut acts = cell.borrow_mut();
+            acts.pack(x);
+            for m in 0..levels {
+                let base = (d * layer.m + m) * n_c;
+                let plane = &layer.planes[base..base + n_c];
+                let p = signed_dot_popcount(plane, &acts);
+                debug_assert!(fixp::fits_mulw(p), "PE accumulator overflow: {p}");
+                acc_total += p * i32::from(layer.alpha(d, m));
+            }
+            acc_total
+        });
+    }
+    for m in 0..levels {
         // PE: sign-controlled accumulation, Eq. 9
         let base = (d * layer.m + m) * n_c;
         let plane = &layer.planes[base..base + n_c];
@@ -31,6 +59,91 @@ pub fn binary_dot(layer: &QuantLayer, d: usize, x: &[i8], m_run: usize) -> i32 {
         acc_total += p * i32::from(layer.alpha(d, m));
     }
     acc_total
+}
+
+thread_local! {
+    /// Per-thread activation-pack scratch for [`binary_dot`] — keeps the
+    /// oracle's public API stateless while avoiding an allocation per dot.
+    static ACTS_SCRATCH: std::cell::RefCell<PackedActs> =
+        std::cell::RefCell::new(PackedActs::default());
+}
+
+/// An int8 activation vector sliced into its 8 two's-complement bitplanes
+/// (bit `k` of every element gathered into one `u64`-packed plane) — the
+/// activation half of the `2P − S` popcount identity, mirrored from the
+/// product kernel's `BitPatch` but kept dependency-free so the oracle
+/// never shares code with the implementation it checks.
+#[derive(Default)]
+pub struct PackedActs {
+    /// `planes[k][w]` holds bit `k` of elements `64w .. 64w+63`.
+    planes: [Vec<u64>; 8],
+    /// Per-bitplane total popcount `S_k` (element count with bit `k`
+    /// set), precomputed at pack time — plane-independent in `2P − S`.
+    s: [i32; 8],
+    len: usize,
+}
+
+impl PackedActs {
+    /// Pack `x` into bitplanes, reusing the existing buffers.
+    pub fn pack(&mut self, x: &[i8]) {
+        let words = x.len().div_ceil(64);
+        for plane in &mut self.planes {
+            plane.clear();
+            plane.resize(words, 0);
+        }
+        for (w, chunk) in x.chunks(64).enumerate() {
+            for (j, &xi) in chunk.iter().enumerate() {
+                let v = xi as u8 as u64;
+                for k in 0..8 {
+                    self.planes[k][w] |= ((v >> k) & 1) << j;
+                }
+            }
+        }
+        for k in 0..8 {
+            self.s[k] = self.planes[k].iter().map(|w| w.count_ones() as i32).sum();
+        }
+        self.len = x.len();
+    }
+
+    /// Number of packed activations.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// `Σ b_i·x_i` via the explicit `count_ones` path: with `x_i =
+/// Σ_{k<7} 2^k·bit_k(x_i) − 128·bit_7(x_i)` and `b ∈ {±1}`,
+///
+/// ```text
+/// Σ b_i·x_i = Σ_k w_k·(2·P_k − S_k),   w_k = 2^k (k<7), −128 (k=7)
+/// ```
+///
+/// where `S_k` is the popcount of activation bitplane `k` and `P_k` its
+/// popcount restricted to positions with `b_i = +1` — the same `2P − S`
+/// identity the paper's PE (Eq. 9) and the product kernel
+/// ([`crate::kernel`]) are built on, derived independently here so the
+/// oracle and the kernel can disagree only if one of them is wrong.
+pub fn signed_dot_popcount(plane: &[i8], acts: &PackedActs) -> i32 {
+    assert_eq!(plane.len(), acts.len, "plane/activation length mismatch");
+    let mut p = [0i32; 8];
+    for (w, chunk) in plane.chunks(64).enumerate() {
+        let mut bplus = 0u64;
+        for (j, &b) in chunk.iter().enumerate() {
+            bplus |= u64::from(b > 0) << j;
+        }
+        for (k, pk) in p.iter_mut().enumerate() {
+            *pk += (acts.planes[k][w] & bplus).count_ones() as i32;
+        }
+    }
+    let mut total = 0i32;
+    for k in 0..7 {
+        total += (2 * p[k] - acts.s[k]) << k;
+    }
+    total - ((2 * p[7] - acts.s[7]) << 7)
 }
 
 /// `Σ b_i·x_i` with `b ∈ {±1}` — the PE datapath's arithmetic, written to
@@ -275,6 +388,78 @@ mod tests {
         assert_eq!(signed_dot(&plane, &x), 192 * 128);
         let plane = vec![1i8; 192];
         assert_eq!(signed_dot(&plane, &x), -192 * 128);
+    }
+
+    #[test]
+    fn signed_dot_popcount_matches_scalar_walk() {
+        // the explicit count_ones path must agree with the scalar walk on
+        // every length: word boundaries, tails, and the sign extremes
+        prop::check(200, "popcount 2P−S == scalar walk", |rng| {
+            let n = rng.below(400) as usize;
+            let plane = prop::sign_vec(rng, n);
+            let x = prop::i8_vec(rng, n);
+            let mut acts = PackedActs::default();
+            acts.pack(&x);
+            assert_eq!(acts.len(), n);
+            assert_eq!(signed_dot_popcount(&plane, &acts), signed_dot(&plane, &x), "n={n}");
+        });
+        // extremes: ±1 planes against the most negative activation, where
+        // the bit-7 weight (−128) dominates every other bitplane
+        let mut acts = PackedActs::default();
+        for n in [0usize, 1, 63, 64, 65, 192] {
+            let x = vec![-128i8; n];
+            acts.pack(&x);
+            let plane = vec![-1i8; n];
+            assert_eq!(signed_dot_popcount(&plane, &acts), n as i32 * 128);
+            let plane = vec![1i8; n];
+            assert_eq!(signed_dot_popcount(&plane, &acts), -(n as i32) * 128);
+        }
+    }
+
+    #[test]
+    fn binary_dot_popcount_branch_matches_naive() {
+        // n_c straddles POPCOUNT_MIN_NC so both binary_dot branches race
+        // the same naive i64 reference
+        prop::check(60, "binary_dot (both branches) == naive", |rng| {
+            let (d, m) = (1 + rng.below(3) as usize, 1 + rng.below(4) as usize);
+            let nc = POPCOUNT_MIN_NC - 8 + rng.below(200) as usize;
+            let layer = QuantLayer {
+                kind: LayerKind::Dense,
+                planes: prop::sign_vec(rng, d * m * nc),
+                alpha_q: (0..d * m).map(|_| rng.i8()).collect(),
+                bias_q: (0..d).map(|_| rng.range_i64(-1000, 1000) as i32).collect(),
+                d,
+                m,
+                kh: nc,
+                kw: 0,
+                c: 0,
+                f_alpha: 5,
+                f_in: 7,
+                f_out: 6,
+                shift: 6,
+                relu: false,
+                pool: 1,
+                stride: 1,
+            };
+            let x = prop::i8_vec(rng, nc);
+            for dd in 0..d {
+                for m_run in 0..=m {
+                    let mut want: i64 = layer.bias_q[dd] as i64;
+                    for mm in 0..m_run {
+                        let mut p: i64 = 0;
+                        for i in 0..nc {
+                            p += i64::from(layer.plane(dd, mm, i)) * i64::from(x[i]);
+                        }
+                        want += p * i64::from(layer.alpha(dd, mm));
+                    }
+                    assert_eq!(
+                        binary_dot(&layer, dd, &x, m_run) as i64,
+                        want,
+                        "d={dd} m_run={m_run} nc={nc}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

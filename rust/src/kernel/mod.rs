@@ -86,21 +86,33 @@ impl KernelKind {
         }
     }
 
+    /// Resolve a raw `BINARRAY_KERNEL` value.  Unset (`None`) defaults to
+    /// `Packed`; an unrecognized value is an error naming the accepted
+    /// set.  Pure so the rejection is unit-testable — [`Self::from_env`]
+    /// is this plus the env read and the cache.
+    pub fn from_env_value(v: Option<&str>) -> Result<Self, String> {
+        match v {
+            None => Ok(Self::Packed),
+            Some(s) => Self::parse(s).ok_or_else(|| {
+                format!(
+                    "BINARRAY_KERNEL={s:?} is not a recognized kernel \
+                     (accepted: scalar | packed | auto | portable)"
+                )
+            }),
+        }
+    }
+
     /// Process-wide default from the `BINARRAY_KERNEL` env var, read once
-    /// and cached.  Unset or unrecognized values default to `Packed` (an
-    /// unrecognized value also warns on stderr).
+    /// and cached.  Unset defaults to `Packed`; an unrecognized value
+    /// PANICS with the accepted set — a differential or fuzz arm forced
+    /// to one kernel must never silently run another (the old fall-back
+    /// to `Packed` turned a typo'd `BINARRAY_KERNEL=scaler` CI leg into a
+    /// second packed run that "passed" without testing anything).
     pub fn from_env() -> Self {
         static KIND: OnceLock<KernelKind> = OnceLock::new();
         *KIND.get_or_init(|| {
-            let Ok(v) = std::env::var("BINARRAY_KERNEL") else {
-                return KernelKind::Packed;
-            };
-            KernelKind::parse(&v).unwrap_or_else(|| {
-                eprintln!(
-                    "BINARRAY_KERNEL={v:?} unrecognized (scalar|packed|portable); using packed"
-                );
-                KernelKind::Packed
-            })
+            let v = std::env::var("BINARRAY_KERNEL").ok();
+            Self::from_env_value(v.as_deref()).unwrap_or_else(|e| panic!("{e}"))
         })
     }
 }
@@ -532,6 +544,24 @@ mod tests {
         assert_eq!(KernelKind::parse(" Scalar "), Some(KernelKind::Scalar));
         assert_eq!(KernelKind::parse("simd"), None);
         assert_eq!(KernelKind::parse(""), None);
+    }
+
+    #[test]
+    fn kernel_kind_from_env_value_rejects_unknown() {
+        assert_eq!(KernelKind::from_env_value(None), Ok(KernelKind::Packed));
+        assert_eq!(
+            KernelKind::from_env_value(Some("scalar")),
+            Ok(KernelKind::Scalar)
+        );
+        assert_eq!(
+            KernelKind::from_env_value(Some("portable")),
+            Ok(KernelKind::Packed)
+        );
+        // an unknown value is a hard error (from_env panics with it), and
+        // the message names both the bad value and the accepted set
+        let err = KernelKind::from_env_value(Some("scaler")).unwrap_err();
+        assert!(err.contains("scaler"), "{err}");
+        assert!(err.contains("scalar | packed | auto | portable"), "{err}");
     }
 
     #[test]

@@ -57,6 +57,9 @@
 //!   without the `xla` cargo feature)
 //! * [`data`] — synthetic GTSRB-like workload generator
 //! * [`util`] — PRNG, property-test harness, binary IO
+//! * [`verify`] — differential racer: random-network generator + arm
+//!   racing (golden vs. scalar/packed plan vs. sharded widths) with
+//!   seed replay (`BINARRAY_FUZZ_SEED`) and budget shrinking
 
 pub mod approx;
 pub mod area;
@@ -73,3 +76,4 @@ pub mod perf;
 pub mod runtime;
 pub mod tensor;
 pub mod util;
+pub mod verify;

@@ -18,11 +18,36 @@ use super::rng::Xoshiro256;
 /// Base seed for all property runs; change to re-roll the corpus.
 pub const BASE_SEED: u64 = 0xB1AA_4201;
 
+/// The per-case seed derivation every fuzz harness in the repo shares
+/// (`check` here, the differential racer in [`crate::verify`], the
+/// coordinator schedule fuzzer) — so a printed case index and a printed
+/// seed always agree.
+pub fn case_seed(case: u64) -> u64 {
+    BASE_SEED ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Read a replay seed from an environment variable (`BINARRAY_FUZZ_SEED`,
+/// `BINARRAY_SCHED_SEED`).  Accepts decimal or `0x`-prefixed hex — the
+/// formats the fuzz harnesses print in their failure messages.  An unset
+/// variable is `None`; a set-but-unparsable one panics (a typo'd replay
+/// must never silently run the whole corpus instead).
+pub fn env_seed(var: &str) -> Option<u64> {
+    let raw = std::env::var(var).ok()?;
+    let s = raw.trim();
+    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse::<u64>(),
+    };
+    Some(parsed.unwrap_or_else(|_| {
+        panic!("{var}={raw:?} is not a seed (expected decimal or 0x-hex u64)")
+    }))
+}
+
 /// Run `property` on `cases` seeded inputs. Panics with case/seed info on
 /// the first failure.
 pub fn check<F: FnMut(&mut Xoshiro256)>(cases: u32, name: &str, mut property: F) {
     for case in 0..cases {
-        let seed = BASE_SEED ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let seed = case_seed(case as u64);
         let mut rng = Xoshiro256::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             property(&mut rng)
@@ -73,6 +98,26 @@ mod tests {
         check(50, "must fail", |rng| {
             assert!(rng.below(100) < 1, "value too big");
         });
+    }
+
+    #[test]
+    fn env_seed_parses_both_radixes() {
+        // set/remove an env var unique to this test: safe even with the
+        // parallel test runner, nothing else reads it
+        std::env::set_var("BINARRAY_PROP_TEST_SEED", "0xB1AA");
+        assert_eq!(env_seed("BINARRAY_PROP_TEST_SEED"), Some(0xB1AA));
+        std::env::set_var("BINARRAY_PROP_TEST_SEED", "12345");
+        assert_eq!(env_seed("BINARRAY_PROP_TEST_SEED"), Some(12345));
+        std::env::remove_var("BINARRAY_PROP_TEST_SEED");
+        assert_eq!(env_seed("BINARRAY_PROP_TEST_SEED"), None);
+    }
+
+    #[test]
+    fn case_seed_matches_check_derivation() {
+        // `check` prints seeds derived through `case_seed` — a drift here
+        // would break every printed reproducer
+        assert_eq!(case_seed(0), BASE_SEED);
+        assert_ne!(case_seed(1), case_seed(2));
     }
 
     #[test]

@@ -1,0 +1,602 @@
+//! Differential racing of every inference path against the golden model.
+//!
+//! The exactness suites pin the four paper configs; this module is the
+//! *generative* half of the correctness story: it builds random-but-
+//! compilable networks (random layer counts, channel widths, kernel
+//! sizes, pooling geometries, M ∈ 1..=4 approximation orders) and races
+//! every independent implementation of the same arithmetic to
+//! bit-identity:
+//!
+//! - [`crate::golden::forward`] — the bit-accurate reference;
+//! - the plan executor with the **scalar** kernel forced;
+//! - the plan executor with the **packed** popcount kernel forced;
+//! - the sharded data path at widths 1, 2 and 4
+//!   ([`BinArraySystem::run_frame_sharded`]);
+//! - high-throughput mode (`m_run = 1`) on both kernels when `M > 1`.
+//!
+//! Every case derives from one `u64` seed, so a failure replays exactly:
+//!
+//! ```text
+//! BINARRAY_FUZZ_SEED=0x1234abcd cargo test --test differential
+//! BINARRAY_FUZZ_SEED=0x1234abcd/c1d4k2p1m1f1 cargo test --test differential
+//! ```
+//!
+//! (the optional `/c..d..k..p..m..f..` suffix is the generator [`Budget`]
+//! the shrinker minimized the failure under — omitted, the full default
+//! budget is used).  On a mismatch the corpus runner shrinks the budget
+//! dimension by dimension until the failure stops reproducing, then
+//! prints the minimal `seed/budget` reproducer.  See EXPERIMENTS.md
+//! §Correctness for the workflow.
+
+use crate::approx::algorithm2;
+use crate::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use crate::binarray::plan::ShardPlan;
+use crate::binarray::{ArrayConfig, BinArraySystem};
+use crate::golden;
+use crate::kernel::KernelKind;
+use crate::tensor::Shape;
+use crate::util::{prop, rng::Xoshiro256};
+
+/// Size caps for the network generator — the shrinker's knobs.  Every
+/// field is a cap, not an exact count: the generator draws below it.
+/// Shrinking lowers one cap at a time and re-races; a failure that still
+/// reproduces under `c1d2k1p1m1f1` involves one 1×1-kernel conv with ≤ 2
+/// output channels, one classifier dense and a single binary level —
+/// about the smallest network the compiler accepts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Budget {
+    /// Max conv layers (≥ 1).
+    pub convs: usize,
+    /// Max output channels per layer (≥ 1).
+    pub max_d: usize,
+    /// Max conv kernel height/width (≥ 1; 1 = 1×1 convs only).
+    pub max_kh: usize,
+    /// Max pooling factor (≥ 1; 1 = no pooling).
+    pub max_pool: usize,
+    /// Max approximation order M (≥ 1).
+    pub max_m: usize,
+    /// Max dense layers before the classifier (≥ 1 total dense layers).
+    pub denses: usize,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self {
+            convs: 3,
+            max_d: 16,
+            max_kh: 4,
+            max_pool: 3,
+            max_m: 4,
+            denses: 2,
+        }
+    }
+}
+
+impl std::fmt::Display for Budget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "c{}d{}k{}p{}m{}f{}",
+            self.convs, self.max_d, self.max_kh, self.max_pool, self.max_m, self.denses
+        )
+    }
+}
+
+impl std::str::FromStr for Budget {
+    type Err = String;
+
+    /// Parse the `c..d..k..p..m..f..` form [`Display`](std::fmt::Display)
+    /// prints (the replay suffix of `BINARRAY_FUZZ_SEED`).
+    fn from_str(s: &str) -> Result<Self, String> {
+        let mut vals = [0usize; 6];
+        let mut rest = s;
+        for (i, tag) in ['c', 'd', 'k', 'p', 'm', 'f'].into_iter().enumerate() {
+            rest = rest
+                .strip_prefix(tag)
+                .ok_or_else(|| format!("budget {s:?}: expected '{tag}' next"))?;
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if digits.is_empty() {
+                return Err(format!("budget {s:?}: '{tag}' needs a number"));
+            }
+            vals[i] = digits.parse().map_err(|e| format!("budget {s:?}: {e}"))?;
+            if vals[i] == 0 {
+                return Err(format!("budget {s:?}: '{tag}' must be ≥ 1"));
+            }
+            rest = &rest[digits.len()..];
+        }
+        if !rest.is_empty() {
+            return Err(format!("budget {s:?}: trailing {rest:?}"));
+        }
+        Ok(Self {
+            convs: vals[0],
+            max_d: vals[1],
+            max_kh: vals[2],
+            max_pool: vals[3],
+            max_m: vals[4],
+            denses: vals[5],
+        })
+    }
+}
+
+/// Build a random conv layer whose planes/alphas come from a *real*
+/// Algorithm 2 run on random float weights (not just random signs), so
+/// value distributions match production networks.
+fn random_conv(
+    rng: &mut Xoshiro256,
+    c_in: usize,
+    m: usize,
+    max_d: usize,
+    kh: usize,
+    pool: usize,
+) -> QuantLayer {
+    let d = 1 + rng.below(max_d as u64) as usize;
+    let n_c = kh * kh * c_in;
+    let mut planes = Vec::with_capacity(d * m * n_c);
+    let mut alpha_q = Vec::with_capacity(d * m);
+    for _ in 0..d {
+        let w: Vec<f32> = (0..n_c).map(|_| rng.normal() as f32 * 0.3).collect();
+        let ap = algorithm2(&w, m, 50);
+        for p in &ap.planes {
+            planes.extend_from_slice(p);
+        }
+        for &a in &ap.alpha {
+            alpha_q.push(((a * 64.0).round() as i32).clamp(1, 127) as i8);
+        }
+    }
+    QuantLayer {
+        kind: LayerKind::Conv,
+        planes,
+        alpha_q,
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh,
+        kw: kh,
+        c: c_in,
+        f_alpha: 6,
+        f_in: 7,
+        f_out: 6,
+        shift: 7,
+        relu: true,
+        pool,
+        stride: 1,
+    }
+}
+
+/// Build a random dense layer the same way.
+fn random_dense(
+    rng: &mut Xoshiro256,
+    n_in: usize,
+    m: usize,
+    max_d: usize,
+    relu: bool,
+) -> QuantLayer {
+    let d = 2 + rng.below(2 * max_d as u64) as usize;
+    let mut planes = Vec::new();
+    let mut alpha_q = Vec::new();
+    for _ in 0..d {
+        let w: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32 * 0.2).collect();
+        let ap = algorithm2(&w, m, 50);
+        for p in &ap.planes {
+            planes.extend_from_slice(p);
+        }
+        for &a in &ap.alpha {
+            alpha_q.push(((a * 64.0).round() as i32).clamp(1, 127) as i8);
+        }
+    }
+    QuantLayer {
+        kind: LayerKind::Dense,
+        planes,
+        alpha_q,
+        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
+        d,
+        m,
+        kh: n_in,
+        kw: 0,
+        c: 0,
+        f_alpha: 6,
+        f_in: 6,
+        f_out: 6,
+        shift: 6,
+        relu,
+        pool: 1,
+        stride: 1,
+    }
+}
+
+/// Generate a random but *compilable* network under `budget`: a conv
+/// stack whose dims walk cleanly forward (every pool divides its conv
+/// output), then dense layers.  Returns the network and the input
+/// height/width it was built for.  The caller must still skip networks
+/// whose geometry is ambiguous to [`crate::isa::compiler::infer_input_dims`]
+/// (the compiler would pick a different-but-valid input size).
+pub fn random_network(rng: &mut Xoshiro256, m: usize, budget: &Budget) -> (QuantNetwork, usize) {
+    let mut layers = Vec::new();
+    let c0 = 1 + rng.below(3) as usize;
+    let mut c = c0;
+
+    // First conv: pick (kernel, pool), then an input size that works.
+    let kh1 = 1 + rng.below(budget.max_kh as u64) as usize;
+    let pool1 = 1 + rng.below(budget.max_pool as u64) as usize;
+    let conv_out1 = pool1 * (2 + rng.below(5) as usize); // pooled-divisible
+    let hw = conv_out1 + kh1 - 1;
+    let l1 = random_conv(rng, c, m, budget.max_d, kh1, pool1);
+    c = l1.d;
+    layers.push(l1);
+    let mut cur_hw = conv_out1 / pool1;
+
+    // Deeper convs while the budget and the geometry allow.
+    let extra_convs = rng.below(budget.convs as u64) as usize;
+    for _ in 0..extra_convs {
+        if cur_hw < 2 {
+            break;
+        }
+        let kh = 1 + rng.below(budget.max_kh.min(cur_hw) as u64) as usize;
+        let conv_out = cur_hw - kh + 1;
+        // random pool among the factors of conv_out within budget
+        let pools: Vec<usize> = (1..=budget.max_pool)
+            .filter(|p| conv_out % p == 0)
+            .collect();
+        let pool = pools[rng.below(pools.len() as u64) as usize];
+        let l = random_conv(rng, c, m, budget.max_d, kh, pool);
+        c = l.d;
+        cur_hw = conv_out / pool;
+        layers.push(l);
+    }
+
+    // Dense stack: 0..budget.denses hidden relu denses + one classifier.
+    let mut flat = cur_hw * cur_hw * c;
+    for _ in 0..rng.below(budget.denses as u64) as usize {
+        let l = random_dense(rng, flat, m, budget.max_d, true);
+        flat = l.d;
+        layers.push(l);
+    }
+    layers.push(random_dense(rng, flat, m, budget.max_d, false));
+
+    (QuantNetwork { f_input: 7, layers }, hw)
+}
+
+/// One fully-drawn differential case: the network, its input image, and
+/// the array config the plan arms compile for.
+pub struct Case {
+    pub net: QuantNetwork,
+    pub hw: usize,
+    pub image: Vec<i8>,
+    pub cfg: ArrayConfig,
+    pub m: usize,
+}
+
+/// Draw the case for `seed` under `budget`.  `None` = the drawn geometry
+/// is ambiguous to the compiler, or degenerate — a legitimate skip, not
+/// a failure (the corpus runner draws another seed).
+pub fn gen_case(seed: u64, budget: &Budget) -> Option<Case> {
+    let mut rng = Xoshiro256::new(seed);
+    let m = 1 + rng.below(budget.max_m as u64) as usize;
+    let (net, hw) = random_network(&mut rng, m, budget);
+    if crate::isa::compiler::infer_input_dims(&net).0 != hw {
+        return None; // ambiguous geometry
+    }
+    let c0 = net.layers[0].c;
+    if hw * hw * c0 > 8192 {
+        return None; // keep the corpus cheap enough for tier-1
+    }
+    let image = prop::i8_vec(&mut rng, hw * hw * c0);
+    let n_sa = [1usize, 2, 3][rng.below(3) as usize];
+    let d_arch = [4usize, 8, 16][rng.below(3) as usize];
+    let m_arch = 1 + rng.below(m as u64) as usize;
+    Some(Case {
+        net,
+        hw,
+        image,
+        cfg: ArrayConfig::new(n_sa, d_arch, m_arch),
+        m,
+    })
+}
+
+/// One divergence between an arm and the golden reference.
+#[derive(Debug)]
+pub struct Mismatch {
+    /// Which arm diverged (`"plan+scalar"`, `"shard×2"`, …).
+    pub arm: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Mismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.arm, self.detail)
+    }
+}
+
+fn check_arm(arm: &'static str, got: &[i8], want: &[i8]) -> Result<(), Mismatch> {
+    if got == want {
+        return Ok(())
+    }
+    Err(Mismatch {
+        arm,
+        detail: format!("logits diverge from golden: got {got:?}, want {want:?}"),
+    })
+}
+
+/// Race every arm of `case` against the supplied oracle logits.  Split
+/// from [`race_case`] so the comparator itself is testable: feeding a
+/// deliberately perturbed oracle must report a mismatch on every arm.
+pub fn race_case_against(case: &Case, want: &[i8], want_fast: &[i8]) -> Result<(), Mismatch> {
+    let fail = |arm: &'static str, e: anyhow::Error| Mismatch {
+        arm,
+        detail: format!("arm failed to build/run: {e:#}"),
+    };
+    let shape = Shape::new(case.hw, case.hw, case.net.layers[0].c);
+    debug_assert_eq!(shape.len(), case.image.len());
+
+    // Arm: plan executor, scalar kernel forced.
+    let mut scalar = BinArraySystem::with_host_threads(case.cfg, case.net.clone(), 1)
+        .map_err(|e| fail("plan+scalar", e))?;
+    scalar.set_kernel(KernelKind::Scalar);
+    let (logits, _) = scalar.run_frame(&case.image).map_err(|e| fail("plan+scalar", e))?;
+    check_arm("plan+scalar", &logits, want)?;
+
+    // Arm: plan executor, packed popcount kernel forced.
+    let mut packed = BinArraySystem::with_host_threads(case.cfg, case.net.clone(), 1)
+        .map_err(|e| fail("plan+packed", e))?;
+    packed.set_kernel(KernelKind::Packed);
+    let (logits, _) = packed.run_frame(&case.image).map_err(|e| fail("plan+packed", e))?;
+    check_arm("plan+packed", &logits, want)?;
+
+    // Arms: the sharded data path at widths 1, 2 and 4.  Four cards are
+    // built once; width w uses the first w (the shard partition, not the
+    // card, changes per width).  The cards run the process default
+    // kernel, so the CI kernel matrix re-races these arms per kernel.
+    let mut cards: Vec<BinArraySystem> = Vec::with_capacity(4);
+    for _ in 0..4 {
+        cards.push(
+            BinArraySystem::with_host_threads(case.cfg, case.net.clone(), 1)
+                .map_err(|e| fail("shard", e))?,
+        );
+    }
+    let plan = cards[0].plan.clone();
+    for (width, arm) in [(1usize, "shard×1"), (2, "shard×2"), (4, "shard×4")] {
+        let shards = ShardPlan::new(&plan, width);
+        let (logits, _) =
+            BinArraySystem::run_frame_sharded(&mut cards[..width], &shards, &case.image, None)
+                .map_err(|e| fail(arm, e))?;
+        check_arm(arm, &logits, want)?;
+    }
+
+    // Arms: high-throughput mode (m_run = 1) on both kernels.
+    if case.m > 1 {
+        scalar.set_mode(Some(1));
+        let (logits, _) = scalar.run_frame(&case.image).map_err(|e| fail("plan+scalar/m1", e))?;
+        check_arm("plan+scalar/m1", &logits, want_fast)?;
+        packed.set_mode(Some(1));
+        let (logits, _) = packed.run_frame(&case.image).map_err(|e| fail("plan+packed/m1", e))?;
+        check_arm("plan+packed/m1", &logits, want_fast)?;
+    }
+    Ok(())
+}
+
+/// Race every arm of `case` to bit-identity with [`golden::forward`].
+pub fn race_case(case: &Case) -> Result<(), Mismatch> {
+    let shape = Shape::new(case.hw, case.hw, case.net.layers[0].c);
+    let want = golden::forward(&case.net, &case.image, shape, None);
+    let want_fast = if case.m > 1 {
+        golden::forward(&case.net, &case.image, shape, Some(1))
+    } else {
+        want.clone()
+    };
+    race_case_against(case, &want, &want_fast)
+}
+
+/// Outcome of racing one seed.
+pub enum Outcome {
+    /// The seed drew an uncompilable/ambiguous geometry; nothing raced.
+    Skip,
+    /// Every arm was bit-identical to golden.
+    Pass,
+    Fail(Mismatch),
+}
+
+/// Generate and race one seed under `budget`.
+pub fn run_one(seed: u64, budget: &Budget) -> Outcome {
+    match gen_case(seed, budget) {
+        None => Outcome::Skip,
+        Some(case) => match race_case(&case) {
+            Ok(()) => Outcome::Pass,
+            Err(m) => Outcome::Fail(m),
+        },
+    }
+}
+
+/// Candidate one-step reductions of `b`, hardest-hitting first.
+fn reductions(b: &Budget) -> Vec<Budget> {
+    let mut out = Vec::new();
+    if b.max_m > 1 {
+        out.push(Budget { max_m: 1, ..*b });
+        out.push(Budget { max_m: b.max_m - 1, ..*b });
+    }
+    if b.convs > 1 {
+        out.push(Budget { convs: 1, ..*b });
+        out.push(Budget { convs: b.convs - 1, ..*b });
+    }
+    if b.max_d > 1 {
+        out.push(Budget { max_d: (b.max_d / 2).max(1), ..*b });
+        out.push(Budget { max_d: b.max_d - 1, ..*b });
+    }
+    if b.denses > 1 {
+        out.push(Budget { denses: b.denses - 1, ..*b });
+    }
+    if b.max_kh > 1 {
+        out.push(Budget { max_kh: b.max_kh - 1, ..*b });
+    }
+    if b.max_pool > 1 {
+        out.push(Budget { max_pool: b.max_pool - 1, ..*b });
+    }
+    out
+}
+
+/// Shrink a failing `(seed, budget)` to a minimal reproducer: repeatedly
+/// try every one-step budget reduction (probing a few derived seeds per
+/// reduction, since a smaller budget redraws the network), keeping any
+/// that still fails, until no reduction reproduces.  Bounded at ~300
+/// races.  Returns the minimal failing pair — always itself a failure.
+pub fn shrink(seed: u64, budget: Budget) -> (u64, Budget) {
+    let mut cur = (seed, budget);
+    let mut races = 0usize;
+    loop {
+        let mut improved = false;
+        'cand: for cand in reductions(&cur.1) {
+            // same seed first, then derived probes: any failure under the
+            // smaller budget is a strictly better reproducer
+            for probe in 0..8u64 {
+                let s = if probe == 0 {
+                    cur.0
+                } else {
+                    cur.0 ^ probe.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                };
+                races += 1;
+                if races > 300 {
+                    return cur;
+                }
+                if let Outcome::Fail(_) = run_one(s, &cand) {
+                    cur = (s, cand);
+                    improved = true;
+                    break 'cand;
+                }
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+/// Parse a `BINARRAY_FUZZ_SEED` replay value: `<seed>` or
+/// `<seed>/<budget>` (seed decimal or `0x`-hex, budget as printed by the
+/// shrinker, e.g. `0xb1aa4201/c1d4k2p1m1f1`).
+fn replay_from_env() -> Option<(u64, Budget)> {
+    let raw = std::env::var("BINARRAY_FUZZ_SEED").ok()?;
+    let s = raw.trim();
+    let (seed_s, budget) = match s.split_once('/') {
+        Some((a, b)) => (
+            a,
+            b.parse::<Budget>()
+                .unwrap_or_else(|e| panic!("BINARRAY_FUZZ_SEED={raw:?}: {e}")),
+        ),
+        None => (s, Budget::default()),
+    };
+    let seed_s = seed_s.trim();
+    let seed = match seed_s.strip_prefix("0x").or_else(|| seed_s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => seed_s.parse::<u64>(),
+    }
+    .unwrap_or_else(|_| panic!("BINARRAY_FUZZ_SEED={raw:?}: bad seed {seed_s:?}"));
+    Some((seed, budget))
+}
+
+/// Race `races` random networks (each across every arm) and panic with a
+/// shrunk reproducer on the first mismatch.  With `BINARRAY_FUZZ_SEED`
+/// set, replays exactly that seed (and optional budget) instead.
+pub fn run_corpus(races: usize) {
+    if let Some((seed, budget)) = replay_from_env() {
+        match run_one(seed, &budget) {
+            Outcome::Pass => println!("replay {seed:#x}/{budget}: every arm bit-identical"),
+            Outcome::Skip => panic!(
+                "replay {seed:#x}/{budget}: seed generates no compilable network \
+                 (did the generator change since the seed was printed?)"
+            ),
+            Outcome::Fail(m) => panic!("replay {seed:#x}/{budget}: {m}"),
+        }
+        return;
+    }
+    let budget = Budget::default();
+    let mut done = 0usize;
+    let mut case = 0u64;
+    while done < races {
+        assert!(
+            case < 8 * races as u64,
+            "generator skip rate too high: {done}/{races} races after {case} seeds"
+        );
+        let seed = prop::case_seed(case);
+        case += 1;
+        match run_one(seed, &budget) {
+            Outcome::Skip => continue,
+            Outcome::Pass => done += 1,
+            Outcome::Fail(m) => {
+                let (s2, b2) = shrink(seed, budget);
+                // re-race the minimal case to print *its* arm/detail
+                let detail = match run_one(s2, &b2) {
+                    Outcome::Fail(m2) => m2.to_string(),
+                    _ => m.to_string(), // races exhausted mid-shrink; report the original
+                };
+                panic!(
+                    "differential mismatch at case {case} — minimal reproducer: {detail}\n\
+                     replay with: BINARRAY_FUZZ_SEED={s2:#x}/{b2} cargo test --test differential\n\
+                     (original failing seed: BINARRAY_FUZZ_SEED={seed:#x}/{budget})"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let b = Budget::default();
+        let (a, b1) = {
+            let mut rng = Xoshiro256::new(42);
+            random_network(&mut rng, 2, &b)
+        };
+        let (c, b2) = {
+            let mut rng = Xoshiro256::new(42);
+            random_network(&mut rng, 2, &b)
+        };
+        assert_eq!(b1, b2);
+        assert_eq!(a.layers.len(), c.layers.len());
+        for (la, lc) in a.layers.iter().zip(&c.layers) {
+            assert_eq!(la.planes, lc.planes);
+            assert_eq!(la.alpha_q, lc.alpha_q);
+            assert_eq!(la.bias_q, lc.bias_q);
+        }
+    }
+
+    #[test]
+    fn budget_roundtrips_through_display() {
+        for b in [
+            Budget::default(),
+            Budget { convs: 1, max_d: 2, max_kh: 1, max_pool: 1, max_m: 1, denses: 1 },
+            Budget { convs: 9, max_d: 31, max_kh: 5, max_pool: 4, max_m: 3, denses: 2 },
+        ] {
+            let s = b.to_string();
+            assert_eq!(s.parse::<Budget>().unwrap(), b, "{s}");
+        }
+        assert!("c1d2".parse::<Budget>().is_err());
+        assert!("c0d1k1p1m1f1".parse::<Budget>().is_err());
+        assert!("c1d1k1p1m1f1x".parse::<Budget>().is_err());
+    }
+
+    #[test]
+    fn budgets_vary_the_topology() {
+        // a minimal budget must actually produce minimal networks
+        let tiny = Budget { convs: 1, max_d: 2, max_kh: 1, max_pool: 1, max_m: 1, denses: 1 };
+        let mut rng = Xoshiro256::new(7);
+        let (net, _) = random_network(&mut rng, 1, &tiny);
+        for l in &net.layers {
+            assert!(l.d <= 4, "dense caps at 2·max_d, conv at max_d");
+            assert_eq!(l.m, 1);
+            if l.kind == LayerKind::Conv {
+                assert_eq!(l.kh, 1);
+                assert_eq!(l.pool, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_case_skips_are_not_universal() {
+        // the corpus runner needs a healthy acceptance rate
+        let b = Budget::default();
+        let accepted = (0..32u64).filter(|&s| gen_case(prop::case_seed(s), &b).is_some()).count();
+        assert!(accepted >= 8, "only {accepted}/32 seeds accepted");
+    }
+}

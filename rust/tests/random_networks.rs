@@ -7,133 +7,29 @@
 //! simulator must be output-identical to the bit-accurate functional
 //! model, in both accuracy modes.
 
-use binarray::approx::algorithm2;
-use binarray::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use binarray::artifacts::QuantNetwork;
 use binarray::binarray::{ArrayConfig, BinArraySystem};
 use binarray::golden;
 use binarray::tensor::Shape;
 use binarray::util::{prop, rng::Xoshiro256};
+use binarray::verify::Budget;
 
-/// Build a random conv layer whose planes/alphas come from a *real*
-/// Algorithm 2 run on random float weights (not just random signs) so the
-/// value distributions match production use.
-fn random_conv(
-    rng: &mut Xoshiro256,
-    c_in: usize,
-    m: usize,
-    max_d: usize,
-    kh: usize,
-    pool: usize,
-) -> QuantLayer {
-    let d = 1 + rng.below(max_d as u64) as usize;
-    let n_c = kh * kh * c_in;
-    let mut planes = Vec::with_capacity(d * m * n_c);
-    let mut alpha_q = Vec::with_capacity(d * m);
-    for _ in 0..d {
-        let w: Vec<f32> = (0..n_c).map(|_| rng.normal() as f32 * 0.3).collect();
-        let ap = algorithm2(&w, m, 50);
-        for p in &ap.planes {
-            planes.extend_from_slice(p);
-        }
-        for &a in &ap.alpha {
-            alpha_q.push(((a * 64.0).round() as i32).clamp(1, 127) as i8);
-        }
-    }
-    QuantLayer {
-        kind: LayerKind::Conv,
-        planes,
-        alpha_q,
-        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
-        d,
-        m,
-        kh,
-        kw: kh,
-        c: c_in,
-        f_alpha: 6,
-        f_in: 7,
-        f_out: 6,
-        shift: 7,
-        relu: true,
-        pool,
-        stride: 1,
-    }
-}
-
-fn random_dense(rng: &mut Xoshiro256, n_in: usize, m: usize, relu: bool) -> QuantLayer {
-    let d = 2 + rng.below(24) as usize;
-    let mut planes = Vec::new();
-    let mut alpha_q = Vec::new();
-    for _ in 0..d {
-        let w: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32 * 0.2).collect();
-        let ap = algorithm2(&w, m, 50);
-        for p in &ap.planes {
-            planes.extend_from_slice(p);
-        }
-        for &a in &ap.alpha {
-            alpha_q.push(((a * 64.0).round() as i32).clamp(1, 127) as i8);
-        }
-    }
-    QuantLayer {
-        kind: LayerKind::Dense,
-        planes,
-        alpha_q,
-        bias_q: (0..d).map(|_| rng.range_i64(-200, 200) as i32).collect(),
-        d,
-        m,
-        kh: n_in,
-        kw: 0,
-        c: 0,
-        f_alpha: 6,
-        f_in: 6,
-        f_out: 6,
-        shift: 6,
-        relu,
-        pool: 1,
-        stride: 1,
-    }
-}
-
-/// Generate a random but *compilable* network: conv stack whose dims walk
-/// cleanly (pool divides conv output), then 1–2 dense layers.
+/// Generate a random but *compilable* network via the shared generator
+/// in `binarray::verify` (the differential racer's corpus source —
+/// keeping this suite on the same generator means any topology it can
+/// draw is also raced across kernels and shard widths over there).
 fn random_network(rng: &mut Xoshiro256, m: usize) -> (QuantNetwork, usize) {
-    // choose geometry walking forward from a random input size
-    let mut layers = Vec::new();
-    let c0 = 1 + rng.below(3) as usize;
-    let mut c = c0;
-    // first conv: pick (kh, pool) then input size that works
-    let kh1 = 2 + rng.below(3) as usize; // 2..4
-    let pool1 = 1 + rng.below(2) as usize; // 1..2
-    let conv_out1 = pool1 * (3 + rng.below(5) as usize); // pooled-divisible
-    let hw = conv_out1 + kh1 - 1;
-    let l1 = random_conv(rng, c, m, 8, kh1, pool1);
-    c = l1.d;
-    layers.push(l1);
-    let hw1 = conv_out1 / pool1;
-
-    // optional second conv
-    let mut flat_hw = hw1;
-    if rng.below(2) == 0 && hw1 >= 5 {
-        let kh2 = 2;
-        let conv_out2 = hw1 - kh2 + 1;
-        // pool that divides conv_out2 (1 always works)
-        let pool2 = if conv_out2 % 2 == 0 { 2 } else { 1 };
-        let l2 = random_conv(rng, c, m, 12, kh2, pool2);
-        c = l2.d;
-        flat_hw = conv_out2 / pool2;
-        layers.push(l2);
-    }
-
-    let flat = flat_hw * flat_hw * c;
-    layers.push(random_dense(rng, flat, m, true));
-    let d_last = layers.last().unwrap().d;
-    layers.push(random_dense(rng, d_last, m, false));
-
-    (
-        QuantNetwork {
-            f_input: 7,
-            layers,
+    binarray::verify::random_network(
+        rng,
+        m,
+        &Budget {
+            convs: 2,
+            max_d: 12,
+            max_kh: 4,
+            max_pool: 2,
+            max_m: 4,
+            denses: 2,
         },
-        hw,
     )
 }
 
