@@ -1,0 +1,1177 @@
+//! Static plan verifier — compile-time proofs over every artifact the
+//! serving stack publishes.
+//!
+//! The datapath is only correct inside hard static envelopes: `i8`
+//! activations (DW = 8), a 28-bit DSP accumulate path
+//! ([`fixp::MULW`]), `i8` α factors, a bounded QS shift, and a 32-bit
+//! ISA with 21-bit immediates.  Until now the only enforcement was a
+//! `debug_assert!` in `pe.rs` that vanishes in release builds, and the
+//! dynamic racers in [`crate::verify`] that can only *sample* inputs.
+//! This module proves the envelopes once per compiled artifact, before
+//! a single frame is served:
+//!
+//! 1. **Fixed-point range analysis** ([`analyze_ranges`]) — abstract
+//!    interpretation over per-layer intervals.  Starting from the full
+//!    admissible input range `[-128, 127]`, it walks every ±1 weight
+//!    plane element by element (the PE's sign-controlled accumulation
+//!    order), tracking the *hull of all prefix sums* — exactly the
+//!    values the per-tick `debug_assert!(fits_mulw(acc))` in
+//!    [`crate::binarray::pe`] samples — then the DSP α product and the
+//!    cascade after every binary level (which covers every truncated
+//!    `m_run` mode at once, truncations being prefixes of the
+//!    cascade).  If every hull stays inside `[MULW_MIN, MULW_MAX]`,
+//!    the accumulator provably cannot overflow for *any* admissible
+//!    input; otherwise the error carries a concrete witness
+//!    (layer, channel, level, bound).  Intervals are computed in
+//!    `i64`, so a would-be `i32` overflow is detected, never wrapped.
+//!    Layer output ranges are the QS image of the cascade hull
+//!    (round/saturate are monotone, so endpoints map to endpoints),
+//!    clamped by ReLU / the AMU's zero-seeded max-pool, and become the
+//!    next layer's input range.
+//! 2. **Schedule linting** ([`lint_plan`], [`lint_shards`],
+//!    [`lint_cover`]) — for every accuracy mode and shard width:
+//!    every output cell written exactly once, tiles in bounds, claims
+//!    in sync with units, shard partitions disjoint-and-covering with
+//!    group structure preserved, ping-pong feature views never
+//!    aliased within a layer, buffers in bounds, layers chained.
+//! 3. **ISA linting** ([`lint_program`]) — a register-file simulation
+//!    of the compiled program: STI/STIH immediates inside the 21-bit
+//!    encoding, every CONV/DENSE issued with exactly the register
+//!    values its layer requires, memory bases disjoint and ordered,
+//!    HLT/BRA frame-loop scaffolding intact.
+//! 4. **Cycle pricing** ([`lint_cycles`]) — an independent
+//!    recomputation of the per-mode frame cost cross-checked against
+//!    what [`CapacityModel`] prices admission on, plus the sanity law
+//!    that no truncated mode prices above high accuracy.
+//!
+//! [`verify_model`] bundles all four; [`crate::coordinator::registry`]
+//! runs it before publishing any model, the `binarray analyze` CLI
+//! prints the per-layer report for the paper configs, and
+//! [`crate::verify`] races it as one more oracle arm.
+
+use std::fmt;
+
+use crate::artifacts::{LayerKind, QuantLayer, QuantNetwork};
+use crate::binarray::plan::{ExecutionPlan, ShardPlan, WorkUnit};
+use crate::coordinator::CapacityModel;
+use crate::fixp;
+use crate::isa::{flags, Instr, Program, Reg, IMM_BITS};
+
+/// Largest QS shift the barrel shifter / rounding path supports:
+/// `round_shift` computes `1 << (shift - 1)` in 32 bits, so any shift
+/// past 31 is a malformed layer regardless of accumulator range.
+pub const MAX_SHIFT: u32 = 31;
+
+/// Why a compiled artifact failed static verification.  Every variant
+/// carries a concrete witness — the analyzer never says just "no".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AnalysisError {
+    /// The interval analysis found admissible inputs that drive the
+    /// MULW accumulator to `[lo, hi]`, outside the 28-bit range.
+    /// `m` is the binary level at which the bound is first exceeded.
+    MulwOverflow {
+        layer: usize,
+        d: usize,
+        m: usize,
+        lo: i64,
+        hi: i64,
+    },
+    /// QS shift outside the datapath's representable range.
+    BadShift { layer: usize, shift: u32 },
+    /// A work unit reaches outside the layer's output grid.
+    UnitOutOfBounds {
+        layer: usize,
+        cards: usize,
+        rows: usize,
+        d_out: usize,
+    },
+    /// Output cell `(row, d)` written `count` times (want exactly 1).
+    /// `cards == 0` means the unsharded schedule, otherwise the shard
+    /// width whose flattened partition failed.
+    Coverage {
+        layer: usize,
+        cards: usize,
+        row: usize,
+        d: usize,
+        count: usize,
+    },
+    /// Precomputed tile claims disagree with the unit list.
+    ClaimMismatch { layer: usize },
+    /// Input and output feature views share a ping-pong half.
+    PingPongAlias { layer: usize },
+    /// A feature view reaches past the feature buffer.
+    BufferOverrun { layer: usize },
+    /// Chained layers do not hand their buffer over.
+    ChainBreak { layer: usize },
+    /// A shard partition lost the parent's logical-SA group structure.
+    GroupMismatch { layer: usize, cards: usize },
+    /// An STI/STIH immediate exceeds the 21-bit encoding.
+    ImmOutOfRange { pc: usize, imm: u32 },
+    /// A layer was issued with a register differing from what its
+    /// binding and parameters require.
+    RegisterMismatch {
+        layer: usize,
+        reg: Reg,
+        got: u32,
+        want: u32,
+    },
+    /// Program or plan scaffolding broken (missing HLT/BRA, layer
+    /// ids out of order, memory bases overlapping, …).
+    ProgramShape(String),
+    /// The independent cycle recomputation disagrees with what
+    /// [`CapacityModel`] prices admission on.
+    CycleMismatch { mode_idx: usize, got: u64, want: u64 },
+    /// A truncated accuracy mode prices above high accuracy.
+    ModeCostInverted {
+        mode_idx: usize,
+        cost: u64,
+        high_cost: u64,
+    },
+}
+
+impl fmt::Display for AnalysisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AnalysisError::MulwOverflow { layer, d, m, lo, hi } => write!(
+                f,
+                "layer {layer} channel {d} level {m}: accumulator range [{lo}, {hi}] \
+                 exceeds MULW [{}, {}]",
+                fixp::MULW_MIN,
+                fixp::MULW_MAX
+            ),
+            AnalysisError::BadShift { layer, shift } => {
+                write!(f, "layer {layer}: QS shift {shift} exceeds {MAX_SHIFT}")
+            }
+            AnalysisError::UnitOutOfBounds { layer, cards, rows, d_out } => write!(
+                f,
+                "layer {layer} ({}): work unit outside the {rows}×{d_out} output grid",
+                width_label(*cards)
+            ),
+            AnalysisError::Coverage { layer, cards, row, d, count } => write!(
+                f,
+                "layer {layer} ({}): output cell (row {row}, ch {d}) written {count} \
+                 times, want exactly once",
+                width_label(*cards)
+            ),
+            AnalysisError::ClaimMismatch { layer } => {
+                write!(f, "layer {layer}: tile claims out of sync with work units")
+            }
+            AnalysisError::PingPongAlias { layer } => write!(
+                f,
+                "layer {layer}: input and output views share a ping-pong half"
+            ),
+            AnalysisError::BufferOverrun { layer } => {
+                write!(f, "layer {layer}: feature view past the buffer end")
+            }
+            AnalysisError::ChainBreak { layer } => write!(
+                f,
+                "layer {layer}: output base differs from the next layer's input base"
+            ),
+            AnalysisError::GroupMismatch { layer, cards } => write!(
+                f,
+                "layer {layer} ({}): shard lost the logical-SA group structure",
+                width_label(*cards)
+            ),
+            AnalysisError::ImmOutOfRange { pc, imm } => write!(
+                f,
+                "instruction {pc}: immediate {imm} exceeds {IMM_BITS} bits"
+            ),
+            AnalysisError::RegisterMismatch { layer, reg, got, want } => write!(
+                f,
+                "layer {layer}: issued with {} = {got}, binding requires {want}",
+                reg.name()
+            ),
+            AnalysisError::ProgramShape(msg) => write!(f, "program shape: {msg}"),
+            AnalysisError::CycleMismatch { mode_idx, got, want } => write!(
+                f,
+                "mode {mode_idx}: recomputed {got} cycles, CapacityModel prices {want}"
+            ),
+            AnalysisError::ModeCostInverted { mode_idx, cost, high_cost } => write!(
+                f,
+                "mode {mode_idx}: truncated cost {cost} exceeds high-accuracy {high_cost}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AnalysisError {}
+
+fn width_label(cards: usize) -> String {
+    if cards == 0 {
+        "unsharded".into()
+    } else {
+        format!("{cards}-card shard")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Interval arithmetic
+// ---------------------------------------------------------------------------
+
+/// A closed integer interval, the abstract value of the range analysis.
+/// Kept in `i64` so a computation that would overflow the concrete
+/// `i32` datapath is *detected* rather than wrapped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub fn point(v: i64) -> Self {
+        Self { lo: v, hi: v }
+    }
+
+    pub fn new(lo: i64, hi: i64) -> Self {
+        debug_assert!(lo <= hi);
+        Self { lo, hi }
+    }
+
+    /// Smallest interval containing both.
+    pub fn hull(self, o: Self) -> Self {
+        Self {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+        }
+    }
+
+    pub fn add(self, o: Self) -> Self {
+        Self {
+            lo: self.lo + o.lo,
+            hi: self.hi + o.hi,
+        }
+    }
+
+    pub fn neg(self) -> Self {
+        Self {
+            lo: -self.hi,
+            hi: -self.lo,
+        }
+    }
+
+    /// Multiply by a scalar (negative scalars flip the endpoints).
+    pub fn scale(self, k: i64) -> Self {
+        if k >= 0 {
+            Self {
+                lo: self.lo * k,
+                hi: self.hi * k,
+            }
+        } else {
+            Self {
+                lo: self.hi * k,
+                hi: self.lo * k,
+            }
+        }
+    }
+
+    /// Does every value fit the 28-bit MULW accumulator?
+    pub fn fits_mulw(&self) -> bool {
+        self.lo >= i64::from(fixp::MULW_MIN) && self.hi <= i64::from(fixp::MULW_MAX)
+    }
+
+    /// Largest absolute value in the interval.
+    pub fn peak(&self) -> i64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+}
+
+/// `round_shift` lifted to `i64` (round half away from zero); monotone
+/// in `acc`, so applying it to interval endpoints is exact.
+fn round_shift_i64(acc: i64, shift: u32) -> i64 {
+    if shift == 0 {
+        return acc;
+    }
+    let half = 1i64 << (shift - 1);
+    if acc >= 0 {
+        (acc + half) >> shift
+    } else {
+        -((-acc + half) >> shift)
+    }
+}
+
+/// The QS block on an interval: round, then saturate into `i8`.
+fn qs_interval(v: Interval, shift: u32) -> Interval {
+    let sat = |x: i64| x.clamp(i64::from(i8::MIN), i64::from(i8::MAX));
+    Interval::new(sat(round_shift_i64(v.lo, shift)), sat(round_shift_i64(v.hi, shift)))
+}
+
+// ---------------------------------------------------------------------------
+// Range analysis
+// ---------------------------------------------------------------------------
+
+/// Per-layer outcome of the range proof (one row of the analyze report).
+#[derive(Clone, Debug)]
+pub struct LayerRange {
+    pub layer: usize,
+    pub kind: LayerKind,
+    /// Activation range feeding this layer.
+    pub input: Interval,
+    /// Hull of every PE prefix sum — the values the per-tick
+    /// `debug_assert!(fits_mulw(..))` samples dynamically.
+    pub pe: Interval,
+    /// Hull of the DSP cascade across all channels and level counts
+    /// (bias + Σ αᵢ·planeᵢ), i.e. everything the QS block can see.
+    pub acc: Interval,
+    /// Activation range this layer emits (after QS and ReLU/pool).
+    pub output: Interval,
+    pub shift: u32,
+    /// Unused MULW magnitude bits at the accumulator peak.
+    pub headroom_bits: u32,
+}
+
+/// Range analysis of one layer given its input activation interval.
+/// Returns the layer record; the output interval inside it feeds the
+/// next layer.
+pub fn layer_range(layer: &QuantLayer, idx: usize, input: Interval) -> Result<LayerRange, AnalysisError> {
+    if layer.shift > MAX_SHIFT {
+        return Err(AnalysisError::BadShift {
+            layer: idx,
+            shift: layer.shift,
+        });
+    }
+    let n_c = layer.n_c();
+    let mut pe_hull = Interval::point(0);
+    let mut acc_hull: Option<Interval> = None;
+    // QS sees the cascade after `m_run` levels for every runtime mode
+    // `1 ≤ m_run ≤ m` — the hull over those prefixes bounds them all.
+    let mut qs_hull: Option<Interval> = None;
+
+    for d in 0..layer.d {
+        let bias = i64::from(layer.bias_q[d]);
+        let mut casc = Interval::point(bias);
+        if !casc.fits_mulw() {
+            return Err(AnalysisError::MulwOverflow {
+                layer: idx,
+                d,
+                m: 0,
+                lo: casc.lo,
+                hi: casc.hi,
+            });
+        }
+        acc_hull = Some(acc_hull.map_or(casc, |h| h.hull(casc)));
+        if layer.m == 0 {
+            qs_hull = Some(qs_hull.map_or(casc, |h| h.hull(casc)));
+        }
+        for mi in 0..layer.m {
+            // PE walk: sign-controlled accumulation in plane order —
+            // the hull of the running prefix covers every per-tick
+            // value the hardware accumulator takes.
+            let base = (d * layer.m + mi) * n_c;
+            let plane = &layer.planes[base..base + n_c];
+            let mut run = Interval::point(0);
+            let mut prefix = Interval::point(0);
+            for &s in plane {
+                let contrib = if s >= 0 { input } else { input.neg() };
+                run = run.add(contrib);
+                prefix = prefix.hull(run);
+            }
+            if !prefix.fits_mulw() {
+                return Err(AnalysisError::MulwOverflow {
+                    layer: idx,
+                    d,
+                    m: mi,
+                    lo: prefix.lo,
+                    hi: prefix.hi,
+                });
+            }
+            pe_hull = pe_hull.hull(prefix);
+            // DSP: α product, then cascade-add (Eq. 11) — both live in
+            // the same MULW path and both must fit.
+            let r = run.scale(i64::from(layer.alpha(d, mi)));
+            if !r.fits_mulw() {
+                return Err(AnalysisError::MulwOverflow {
+                    layer: idx,
+                    d,
+                    m: mi,
+                    lo: r.lo,
+                    hi: r.hi,
+                });
+            }
+            casc = casc.add(r);
+            if !casc.fits_mulw() {
+                return Err(AnalysisError::MulwOverflow {
+                    layer: idx,
+                    d,
+                    m: mi,
+                    lo: casc.lo,
+                    hi: casc.hi,
+                });
+            }
+            acc_hull = Some(acc_hull.map_or(casc, |h| h.hull(casc)));
+            qs_hull = Some(qs_hull.map_or(casc, |h| h.hull(casc)));
+        }
+    }
+
+    let acc = acc_hull.unwrap_or_else(|| Interval::point(0));
+    let mut out = qs_interval(qs_hull.unwrap_or_else(|| Interval::point(0)), layer.shift);
+    // The AMU's zero-seeded max-pool implements ReLU for free; plain
+    // ReLU clamps the same way.
+    let pooled = layer.kind == LayerKind::Conv && layer.pool > 1;
+    if layer.relu || pooled {
+        out = Interval::new(out.lo.max(0), out.hi.max(0));
+    }
+    let peak_bits = 64 - acc.peak().max(1).leading_zeros();
+    Ok(LayerRange {
+        layer: idx,
+        kind: layer.kind,
+        input,
+        pe: pe_hull,
+        acc,
+        output: out,
+        shift: layer.shift,
+        headroom_bits: (fixp::MULW - 1).saturating_sub(peak_bits),
+    })
+}
+
+/// Prove the whole network overflow-free for any admissible `i8`
+/// input, or return the first concrete witness.  The per-layer records
+/// are the range half of the analyze report.
+pub fn analyze_ranges(net: &QuantNetwork) -> Result<Vec<LayerRange>, AnalysisError> {
+    let mut input = Interval::new(i64::from(i8::MIN), i64::from(i8::MAX));
+    let mut out = Vec::with_capacity(net.layers.len());
+    for (idx, layer) in net.layers.iter().enumerate() {
+        let r = layer_range(layer, idx, input)?;
+        input = r.output;
+        out.push(r);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Schedule linting
+// ---------------------------------------------------------------------------
+
+/// Exactly-once coverage: every cell of the `rows × d_out` output grid
+/// must be written by exactly one unit.  `cards = 0` labels the
+/// unsharded schedule in errors, `cards = n` a flattened n-card shard.
+pub fn lint_cover(
+    units: &[WorkUnit],
+    rows: usize,
+    d_out: usize,
+    layer: usize,
+    cards: usize,
+) -> Result<(), AnalysisError> {
+    for u in units {
+        if u.rows.end > rows || u.d.end > d_out {
+            return Err(AnalysisError::UnitOutOfBounds {
+                layer,
+                cards,
+                rows,
+                d_out,
+            });
+        }
+    }
+    let mut seen = vec![0u32; rows * d_out];
+    for u in units {
+        for r in u.rows.clone() {
+            for d in u.d.clone() {
+                seen[r * d_out + d] += 1;
+            }
+        }
+    }
+    for (cell, &count) in seen.iter().enumerate() {
+        if count != 1 {
+            return Err(AnalysisError::Coverage {
+                layer,
+                cards,
+                row: cell / d_out,
+                d: cell % d_out,
+                count: count as usize,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// The output grid a layer's schedule must cover: pooled rows × D.
+fn layer_grid(net: &QuantNetwork, plan: &ExecutionPlan, mode: Option<usize>, li: usize) -> (usize, usize) {
+    let lp = &plan.mode(mode).layers[li];
+    let l = &net.layers[lp.layer];
+    match l.kind {
+        LayerKind::Conv => (lp.out_shape.h, l.d),
+        LayerKind::Dense => (1, l.d),
+    }
+}
+
+/// Lint one [`ExecutionPlan`]: for every accuracy mode, exactly-once
+/// coverage, claims/unit agreement, truncation bookkeeping and the
+/// ping-pong buffer invariants.
+pub fn lint_plan(net: &QuantNetwork, plan: &ExecutionPlan) -> Result<(), AnalysisError> {
+    let half = plan.fbuf_words / 2;
+    for mode_idx in 0..=plan.max_m {
+        let mode = if mode_idx == 0 { None } else { Some(mode_idx) };
+        let mp = plan.mode(mode);
+        if mp.layers.len() != net.layers.len() {
+            return Err(AnalysisError::ProgramShape(format!(
+                "mode {mode_idx}: {} layer plans for {} layers",
+                mp.layers.len(),
+                net.layers.len()
+            )));
+        }
+        for (li, lp) in mp.layers.iter().enumerate() {
+            if lp.layer != li {
+                return Err(AnalysisError::ProgramShape(format!(
+                    "mode {mode_idx}: plan {li} points at layer {}",
+                    lp.layer
+                )));
+            }
+            let l = &net.layers[li];
+            let want_m = mode.unwrap_or(l.m).min(l.m).max(1);
+            if lp.m_run != want_m {
+                return Err(AnalysisError::ProgramShape(format!(
+                    "mode {mode_idx} layer {li}: m_run {} want {want_m}",
+                    lp.m_run
+                )));
+            }
+            // ping-pong: opposite halves, in bounds, chained
+            if (lp.in_base < half) == (lp.out_base < half) {
+                return Err(AnalysisError::PingPongAlias { layer: li });
+            }
+            if lp.in_base + lp.in_len > plan.fbuf_words
+                || lp.out_base + lp.out_len > plan.fbuf_words
+            {
+                return Err(AnalysisError::BufferOverrun { layer: li });
+            }
+            if li + 1 < mp.layers.len() && lp.out_base != mp.layers[li + 1].in_base {
+                return Err(AnalysisError::ChainBreak { layer: li });
+            }
+            // coverage + claims
+            let (rows, d_out) = layer_grid(net, plan, mode, li);
+            let flat: Vec<WorkUnit> = lp.assignments.iter().flatten().cloned().collect();
+            lint_cover(&flat, rows, d_out, li, 0)?;
+            let claims = lp.claims();
+            if claims.len() != flat.len()
+                || claims
+                    .iter()
+                    .zip(&flat)
+                    .any(|(c, u)| c.0 != u.rows || c.1 != u.d)
+            {
+                return Err(AnalysisError::ClaimMismatch { layer: li });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Lint the `width`-card shard partition of a plan: per mode and layer,
+/// the per-card sub-schedules must preserve the parent's group count
+/// and flatten back to exactly-once coverage (disjoint and covering).
+pub fn lint_shards(net: &QuantNetwork, plan: &ExecutionPlan, width: usize) -> Result<(), AnalysisError> {
+    let sp = ShardPlan::new(plan, width);
+    for mode_idx in 0..=plan.max_m {
+        let mode = if mode_idx == 0 { None } else { Some(mode_idx) };
+        let layers = sp.mode(mode);
+        for (li, ls) in layers.iter().enumerate() {
+            let parent = &plan.mode(mode).layers[li];
+            if ls.cards.len() != width.max(1) {
+                return Err(AnalysisError::GroupMismatch { layer: li, cards: width });
+            }
+            let mut flat = Vec::new();
+            for card in &ls.cards {
+                if card.assignments.len() != parent.assignments.len() {
+                    return Err(AnalysisError::GroupMismatch { layer: li, cards: width });
+                }
+                let card_units: Vec<WorkUnit> =
+                    card.assignments.iter().flatten().cloned().collect();
+                let claims = card.claims();
+                if claims.len() != card_units.len()
+                    || claims
+                        .iter()
+                        .zip(&card_units)
+                        .any(|(c, u)| c.0 != u.rows || c.1 != u.d)
+                {
+                    return Err(AnalysisError::ClaimMismatch { layer: li });
+                }
+                flat.extend(card_units);
+            }
+            let (rows, d_out) = layer_grid(net, plan, mode, li);
+            lint_cover(&flat, rows, d_out, li, width)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ISA linting
+// ---------------------------------------------------------------------------
+
+/// The register values a layer's CONV/DENSE must be issued with,
+/// derived independently from its binding and parameters (the same
+/// contract `compile_network` emits — recomputed, not reused).
+fn expected_regs(net: &QuantNetwork, prog: &Program, i: usize) -> [u32; Reg::COUNT] {
+    let b = &prog.bindings[i];
+    let l = &net.layers[i];
+    let mut fl = 0u32;
+    if l.relu {
+        fl |= flags::RELU;
+    }
+    if l.kind == LayerKind::Dense {
+        fl |= flags::DENSE;
+    }
+    if i + 1 == net.layers.len() {
+        fl |= flags::LAST;
+    }
+    let mut want = [0u32; Reg::COUNT];
+    want[Reg::WIn as usize] = b.in_dims.0 as u32;
+    want[Reg::HIn as usize] = b.in_dims.1 as u32;
+    want[Reg::CIn as usize] = b.in_dims.2 as u32;
+    want[Reg::WKer as usize] = l.kw.max(1) as u32;
+    want[Reg::HKer as usize] = l.kh.max(1) as u32;
+    want[Reg::DOut as usize] = l.d as u32;
+    want[Reg::Stride as usize] = l.stride.max(1) as u32;
+    want[Reg::Pool as usize] = l.pool.max(1) as u32;
+    want[Reg::MLvl as usize] = l.m as u32;
+    want[Reg::WgtBase as usize] = b.wgt_base as u32;
+    want[Reg::AlphaBase as usize] = b.alpha_base as u32;
+    want[Reg::InBase as usize] = b.in_base as u32;
+    want[Reg::OutBase as usize] = b.out_base as u32;
+    want[Reg::QsShift as usize] = l.shift;
+    want[Reg::Flags as usize] = fl;
+    want[Reg::NIn as usize] = l.n_c() as u32;
+    want
+}
+
+/// Lint a compiled program against its network: immediate encodings,
+/// register-file contents at every layer issue, memory-base layout and
+/// the HLT/BRA frame loop.
+pub fn lint_program(net: &QuantNetwork, prog: &Program) -> Result<(), AnalysisError> {
+    if prog.bindings.len() != net.layers.len() {
+        return Err(AnalysisError::ProgramShape(format!(
+            "{} bindings for {} layers",
+            prog.bindings.len(),
+            net.layers.len()
+        )));
+    }
+    // memory planning: weight/α bases must tile the memories exactly
+    let (mut wb, mut ab) = (0usize, 0usize);
+    for (i, (b, l)) in prog.bindings.iter().zip(&net.layers).enumerate() {
+        if b.layer != i || b.wgt_base != wb || b.alpha_base != ab {
+            return Err(AnalysisError::ProgramShape(format!(
+                "layer {i}: binding bases (wgt {}, α {}) want ({wb}, {ab})",
+                b.wgt_base, b.alpha_base
+            )));
+        }
+        wb += l.d * l.m * l.n_c();
+        ab += l.d * l.m + l.d;
+    }
+    if prog.wgt_words != wb || prog.alpha_words != ab {
+        return Err(AnalysisError::ProgramShape(format!(
+            "memory totals (wgt {}, α {}) want ({wb}, {ab})",
+            prog.wgt_words, prog.alpha_words
+        )));
+    }
+    // frame-loop scaffolding
+    if prog.entry >= prog.instrs.len() || prog.instrs[prog.entry] != Instr::Hlt {
+        return Err(AnalysisError::ProgramShape(format!(
+            "entry {} is not a HLT",
+            prog.entry
+        )));
+    }
+    if prog.instrs.last() != Some(&Instr::Bra(prog.entry as u32)) {
+        return Err(AnalysisError::ProgramShape(
+            "program does not loop back to its entry HLT".into(),
+        ));
+    }
+    // register-file simulation
+    let mask: u32 = (1u32 << IMM_BITS) - 1;
+    let mut regs = [0u32; Reg::COUNT];
+    let mut next_layer = 0usize;
+    for (pc, ins) in prog.instrs.iter().enumerate() {
+        match *ins {
+            Instr::Sti(r, v) => {
+                if v > mask {
+                    return Err(AnalysisError::ImmOutOfRange { pc, imm: v });
+                }
+                regs[r as usize] = v;
+            }
+            Instr::StiH(r, v) => {
+                if v > mask {
+                    return Err(AnalysisError::ImmOutOfRange { pc, imm: v });
+                }
+                regs[r as usize] = (regs[r as usize] & mask) | (v << IMM_BITS);
+            }
+            Instr::Conv(id) | Instr::Dense(id) => {
+                if id > mask {
+                    return Err(AnalysisError::ImmOutOfRange { pc, imm: id });
+                }
+                if id as usize != next_layer || next_layer >= net.layers.len() {
+                    return Err(AnalysisError::ProgramShape(format!(
+                        "instruction {pc} issues layer {id}, expected {next_layer}"
+                    )));
+                }
+                let want_dense = net.layers[next_layer].kind == LayerKind::Dense;
+                let is_dense = matches!(ins, Instr::Dense(_));
+                if want_dense != is_dense {
+                    return Err(AnalysisError::ProgramShape(format!(
+                        "layer {next_layer}: issued as {}",
+                        if is_dense { "DENSE" } else { "CONV" }
+                    )));
+                }
+                let want = expected_regs(net, prog, next_layer);
+                for ri in 0..Reg::COUNT {
+                    if regs[ri] != want[ri] {
+                        return Err(AnalysisError::RegisterMismatch {
+                            layer: next_layer,
+                            reg: Reg::from_u8(ri as u8).expect("ri < COUNT"),
+                            got: regs[ri],
+                            want: want[ri],
+                        });
+                    }
+                }
+                next_layer += 1;
+            }
+            Instr::Bra(a) => {
+                if a > mask {
+                    return Err(AnalysisError::ImmOutOfRange { pc, imm: a });
+                }
+            }
+            Instr::Hlt | Instr::Nop => {}
+        }
+    }
+    if next_layer != net.layers.len() {
+        return Err(AnalysisError::ProgramShape(format!(
+            "program issues {next_layer} of {} layers",
+            net.layers.len()
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Cycle pricing
+// ---------------------------------------------------------------------------
+
+/// Recompute the per-mode frame cost from the plan alone and cross-check
+/// it against what [`CapacityModel`] prices admission on.  Also checks
+/// the sanity law the brownout premise rests on: truncating levels never
+/// makes a frame *more* expensive.  Returns the per-mode cycle vector
+/// (index 0 = high accuracy) for the report.
+pub fn lint_cycles(net: &QuantNetwork, plan: &ExecutionPlan) -> Result<Vec<u64>, AnalysisError> {
+    let est: Vec<u64> = (0..=plan.max_m)
+        .map(|i| {
+            let mode = if i == 0 { None } else { Some(i) };
+            plan.mode(mode)
+                .layers
+                .iter()
+                .map(|lp| {
+                    let l = &net.layers[lp.layer];
+                    let np = l.pool.max(1);
+                    let n_c = l.n_c().max(1) as u64;
+                    let widest = lp
+                        .assignments
+                        .iter()
+                        .map(|units| {
+                            units
+                                .iter()
+                                .map(|u| match lp.kind {
+                                    LayerKind::Conv => {
+                                        (u.rows.len() * np) as u64
+                                            * (lp.out_shape.w * np) as u64
+                                            * n_c
+                                    }
+                                    LayerKind::Dense => n_c,
+                                })
+                                .sum::<u64>()
+                        })
+                        .max()
+                        .unwrap_or(0);
+                    widest * lp.seq_m
+                })
+                .sum::<u64>()
+                .max(1)
+        })
+        .collect();
+    let model = CapacityModel::new(plan, net);
+    for (i, &got) in est.iter().enumerate() {
+        let want = model.est_by_index(i).ok_or_else(|| {
+            AnalysisError::ProgramShape(format!("CapacityModel has no mode {i}"))
+        })?;
+        if got != want {
+            return Err(AnalysisError::CycleMismatch {
+                mode_idx: i,
+                got,
+                want,
+            });
+        }
+        if i > 0 && got > est[0] {
+            return Err(AnalysisError::ModeCostInverted {
+                mode_idx: i,
+                cost: got,
+                high_cost: est[0],
+            });
+        }
+    }
+    Ok(est)
+}
+
+// ---------------------------------------------------------------------------
+// Top-level verdict + report
+// ---------------------------------------------------------------------------
+
+/// Everything [`verify_model`] proved, in printable form — the payload
+/// of the `binarray analyze` CLI report.
+#[derive(Clone, Debug)]
+pub struct AnalysisReport {
+    pub layers: Vec<LayerRange>,
+    /// Per-mode frame cost (index 0 = high accuracy, `m` = truncated).
+    pub mode_cycles: Vec<u64>,
+    pub n_instrs: usize,
+    /// Shard widths whose partitions were proved disjoint-and-covering.
+    pub widths: Vec<usize>,
+}
+
+impl fmt::Display for AnalysisReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "  {:<5} {:<5} {:>6} {:>22} {:>24} {:>13} {:>5}",
+            "layer", "kind", "shift", "input", "accumulator", "headroom", "out"
+        )?;
+        for r in &self.layers {
+            writeln!(
+                f,
+                "  {:<5} {:<5} {:>6} {:>22} {:>24} {:>10} bits {:>5}",
+                r.layer,
+                match r.kind {
+                    LayerKind::Conv => "conv",
+                    LayerKind::Dense => "dense",
+                },
+                r.shift,
+                format!("[{}, {}]", r.input.lo, r.input.hi),
+                format!("[{}, {}]", r.acc.lo, r.acc.hi),
+                r.headroom_bits,
+                format!("[{}, {}]", r.output.lo, r.output.hi),
+            )?;
+        }
+        let cycles: Vec<String> = self
+            .mode_cycles
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                if i == 0 {
+                    format!("full={c}")
+                } else {
+                    format!("m{i}={c}")
+                }
+            })
+            .collect();
+        writeln!(f, "  cycles/frame: {}", cycles.join(" "))?;
+        writeln!(
+            f,
+            "  proved: MULW({}b) overflow-free for all i8 inputs; exactly-once \
+             schedules at widths {:?}; {} instructions in ISA range; \
+             cycle pricing consistent with admission",
+            fixp::MULW,
+            self.widths,
+            self.n_instrs
+        )
+    }
+}
+
+/// Run the full static verifier over one compiled model: range proof,
+/// program lint, plan lint over every accuracy mode, shard lint over
+/// every width `1..=max_cards`, and the cycle-pricing cross-check.
+/// `Ok` is a per-(network, config, mode) theorem that the release
+/// datapath cannot overflow and the schedules cannot double-write or
+/// drop an output; `Err` carries the concrete witness.
+pub fn verify_model(
+    net: &QuantNetwork,
+    prog: &Program,
+    plan: &ExecutionPlan,
+    max_cards: usize,
+) -> Result<AnalysisReport, AnalysisError> {
+    let layers = analyze_ranges(net)?;
+    lint_program(net, prog)?;
+    lint_plan(net, plan)?;
+    let widths: Vec<usize> = (1..=max_cards.max(1)).collect();
+    for &w in &widths {
+        lint_shards(net, plan, w)?;
+    }
+    let mode_cycles = lint_cycles(net, plan)?;
+    Ok(AnalysisReport {
+        layers,
+        mode_cycles,
+        n_instrs: prog.instrs.len(),
+        widths,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::synthetic_cnn_a;
+    use crate::binarray::ArrayConfig;
+    use crate::isa::compile_network;
+    use crate::util::rng::Xoshiro256;
+
+    fn cnn_a(m: usize) -> QuantNetwork {
+        let mut rng = Xoshiro256::new(0xA11A);
+        synthetic_cnn_a(&mut rng, m)
+    }
+
+    /// A single dense layer sized so the proof passes with small α and
+    /// fails once α widens: n_c·128·127 > MULW_MAX but n_c·128·m stays
+    /// far inside it.
+    fn big_dense(alpha: i8) -> QuantNetwork {
+        let n_c = 16_384usize;
+        let d = 2usize;
+        let m = 2usize;
+        QuantNetwork {
+            f_input: 7,
+            layers: vec![QuantLayer {
+                kind: LayerKind::Dense,
+                planes: vec![1i8; d * m * n_c],
+                alpha_q: vec![alpha; d * m],
+                bias_q: vec![5; d],
+                d,
+                m,
+                kh: n_c,
+                kw: 0,
+                c: 0,
+                f_alpha: 6,
+                f_in: 7,
+                f_out: 7,
+                shift: 7,
+                relu: false,
+                pool: 1,
+                stride: 1,
+            }],
+        }
+    }
+
+    #[test]
+    fn paper_configs_prove_clean() {
+        for cfg in crate::binarray::PAPER_CONFIGS {
+            let net = cnn_a(cfg.m_arch.max(2));
+            let prog = compile_network(&net);
+            let plan = ExecutionPlan::new(cfg, &net, &prog);
+            let report = verify_model(&net, &prog, &plan, 4)
+                .unwrap_or_else(|e| panic!("{} rejected: {e}", cfg.label()));
+            assert_eq!(report.layers.len(), net.layers.len());
+            assert_eq!(report.mode_cycles.len(), plan.max_m + 1);
+            assert_eq!(report.widths, vec![1, 2, 3, 4]);
+            // every layer keeps real MULW headroom and i8 outputs
+            for r in &report.layers {
+                assert!(r.acc.fits_mulw());
+                assert!(r.output.lo >= -128 && r.output.hi <= 127);
+            }
+            // the report renders
+            let text = report.to_string();
+            assert!(text.contains("overflow-free"), "{text}");
+        }
+    }
+
+    #[test]
+    fn relu_and_pool_clamp_propagated_ranges() {
+        let net = cnn_a(2);
+        let ranges = analyze_ranges(&net).unwrap();
+        // layer 0 pools (AMU zero-seed) → non-negative activations into
+        // layer 1
+        assert!(ranges[0].output.lo >= 0);
+        assert_eq!(ranges[1].input, ranges[0].output);
+        // the classifier head (no relu) may go negative
+        assert!(ranges.last().unwrap().output.lo < 0);
+    }
+
+    #[test]
+    fn widened_alpha_is_a_concrete_overflow_witness() {
+        // known-good at α = 1 …
+        analyze_ranges(&big_dense(1)).expect("narrow α proves clean");
+        // … widening α past the envelope yields a witness at layer 0
+        let err = analyze_ranges(&big_dense(127)).unwrap_err();
+        match err {
+            AnalysisError::MulwOverflow { layer, m, lo, hi, .. } => {
+                assert_eq!(layer, 0);
+                assert_eq!(m, 0, "first level already overflows");
+                assert!(hi > i64::from(fixp::MULW_MAX) || lo < i64::from(fixp::MULW_MIN));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn monster_bias_is_caught_before_any_level() {
+        let mut net = big_dense(1);
+        net.layers[0].bias_q[1] = i32::MAX;
+        match analyze_ranges(&net).unwrap_err() {
+            AnalysisError::MulwOverflow { d, m, .. } => {
+                assert_eq!(d, 1);
+                assert_eq!(m, 0);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn per_tick_prefix_can_overflow_even_when_the_sum_cancels() {
+        // +1 block then −1 block: the final dot is ~0, but the running
+        // prefix peaks at n_c/2 · 128 — only the prefix hull sees it.
+        let n_c = 3_000_000usize; // 1.5M·128 = 192M > MULW_MAX
+        let mut planes = vec![1i8; n_c];
+        for p in planes.iter_mut().skip(n_c / 2) {
+            *p = -1;
+        }
+        let layer = QuantLayer {
+            kind: LayerKind::Dense,
+            planes,
+            alpha_q: vec![1],
+            bias_q: vec![0],
+            d: 1,
+            m: 1,
+            kh: n_c,
+            kw: 0,
+            c: 0,
+            f_alpha: 6,
+            f_in: 7,
+            f_out: 7,
+            shift: 7,
+            relu: false,
+            pool: 1,
+            stride: 1,
+        };
+        let err = layer_range(&layer, 0, Interval::new(-128, 127)).unwrap_err();
+        assert!(matches!(err, AnalysisError::MulwOverflow { m: 0, .. }), "{err:?}");
+    }
+
+    #[test]
+    fn dropped_qs_shift_is_rejected() {
+        let mut net = cnn_a(2);
+        net.layers[2].shift = 40;
+        assert_eq!(
+            analyze_ranges(&net).unwrap_err(),
+            AnalysisError::BadShift { layer: 2, shift: 40 }
+        );
+    }
+
+    #[test]
+    fn overlapping_and_gapped_tiles_are_flagged() {
+        let good = vec![
+            WorkUnit { rows: 0..2, d: 0..4 },
+            WorkUnit { rows: 2..4, d: 0..4 },
+        ];
+        lint_cover(&good, 4, 4, 7, 2).expect("disjoint cover passes");
+        // overlap: both tiles claim row 2
+        let overlap = vec![
+            WorkUnit { rows: 0..3, d: 0..4 },
+            WorkUnit { rows: 2..4, d: 0..4 },
+        ];
+        match lint_cover(&overlap, 4, 4, 7, 2).unwrap_err() {
+            AnalysisError::Coverage { layer, cards, row, count, .. } => {
+                assert_eq!((layer, cards, row, count), (7, 2, 2, 2));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // gap: row 3 never written
+        let gap = vec![WorkUnit { rows: 0..3, d: 0..4 }];
+        match lint_cover(&gap, 4, 4, 7, 0).unwrap_err() {
+            AnalysisError::Coverage { row, count, .. } => {
+                assert_eq!((row, count), (3, 0));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // out of bounds
+        let oob = vec![WorkUnit { rows: 0..5, d: 0..4 }];
+        assert!(matches!(
+            lint_cover(&oob, 4, 4, 0, 0).unwrap_err(),
+            AnalysisError::UnitOutOfBounds { .. }
+        ));
+    }
+
+    #[test]
+    fn out_of_range_sti_immediate_is_flagged() {
+        let net = cnn_a(2);
+        let mut prog = compile_network(&net);
+        lint_program(&net, &prog).expect("compiler output lints clean");
+        // an in-memory Instr can hold what encode() would refuse —
+        // exactly the corruption the lint must catch before emission
+        let pc = prog
+            .instrs
+            .iter()
+            .position(|i| matches!(i, Instr::Sti(Reg::WgtBase, _)))
+            .unwrap();
+        prog.instrs[pc] = Instr::Sti(Reg::WgtBase, 1 << IMM_BITS);
+        assert_eq!(
+            lint_program(&net, &prog).unwrap_err(),
+            AnalysisError::ImmOutOfRange { pc, imm: 1 << IMM_BITS }
+        );
+    }
+
+    #[test]
+    fn corrupted_qs_shift_register_is_flagged() {
+        let net = cnn_a(2);
+        let mut prog = compile_network(&net);
+        let pc = prog
+            .instrs
+            .iter()
+            .position(|i| matches!(i, Instr::Sti(Reg::QsShift, _)))
+            .unwrap();
+        let Instr::Sti(r, v) = prog.instrs[pc] else { unreachable!() };
+        prog.instrs[pc] = Instr::Sti(r, v + 1);
+        match lint_program(&net, &prog).unwrap_err() {
+            AnalysisError::RegisterMismatch { layer, reg, got, want } => {
+                assert_eq!(layer, 0);
+                assert_eq!(reg, Reg::QsShift);
+                assert_eq!(got, want + 1);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_loop_is_flagged() {
+        let net = cnn_a(2);
+        let mut prog = compile_network(&net);
+        prog.instrs.pop(); // drop the BRA
+        assert!(matches!(
+            lint_program(&net, &prog).unwrap_err(),
+            AnalysisError::ProgramShape(_)
+        ));
+    }
+
+    #[test]
+    fn stih_wide_address_roundtrips_through_the_simulated_cu() {
+        // CNN-A with m = 4 pushes late weight bases past 21 bits, so the
+        // compiler emits STI+STIH pairs — the lint's register-file
+        // simulation must reassemble them, not flag them.
+        let net = cnn_a(4);
+        let prog = compile_network(&net);
+        assert!(
+            prog.instrs.iter().any(|i| matches!(i, Instr::StiH(..))),
+            "test premise: wide addresses present"
+        );
+        lint_program(&net, &prog).expect("wide addresses lint clean");
+    }
+
+    #[test]
+    fn cycle_cross_check_matches_capacity_model() {
+        let net = cnn_a(4);
+        let prog = compile_network(&net);
+        let plan = ExecutionPlan::new(ArrayConfig::new(4, 32, 4), &net, &prog);
+        let est = lint_cycles(&net, &plan).unwrap();
+        assert_eq!(est.len(), plan.max_m + 1);
+        // truncated modes never price above high accuracy
+        for (i, &c) in est.iter().enumerate().skip(1) {
+            assert!(c <= est[0], "mode {i}: {c} > {}", est[0]);
+        }
+    }
+
+    #[test]
+    fn qs_interval_matches_scalar_qs_on_endpoints() {
+        for shift in [0u32, 1, 5, 9] {
+            for v in [-4_000_000i64, -129, -1, 0, 1, 127, 4_000_000] {
+                let got = qs_interval(Interval::point(v), shift);
+                let want = i64::from(fixp::qs(v as i32, shift));
+                assert_eq!(got, Interval::point(want), "v={v} shift={shift}");
+            }
+        }
+    }
+
+    #[test]
+    fn interval_scale_flips_on_negative_alpha() {
+        let v = Interval::new(-3, 10);
+        assert_eq!(v.scale(2), Interval::new(-6, 20));
+        assert_eq!(v.scale(-2), Interval::new(-20, 6));
+        assert_eq!(v.neg(), Interval::new(-10, 3));
+        assert_eq!(v.hull(Interval::point(50)), Interval::new(-3, 50));
+    }
+}

@@ -299,6 +299,24 @@ fn run() -> Result<Outcome, String> {
     }
 }
 
+/// The loud multi-line form of the "no baseline" outcome.  A quiet
+/// one-liner let a seed-only trajectory pass every CI run while the
+/// numeric gate silently proved nothing; the banner makes the unarmed
+/// state impossible to misread in a log, and CI mirrors it into the
+/// job summary.  The first line keeps the stable
+/// `bench_gate: SKIP (no baseline, exit 2)` prefix scripts match on.
+fn unarmed_banner(msg: &str) -> String {
+    format!(
+        "bench_gate: SKIP (no baseline, exit {EXIT_NO_BASELINE}) — {msg}\n\
+         bench_gate: ==========================================================\n\
+         bench_gate: ==  PERF GATE UNARMED — this run verified NOTHING about ==\n\
+         bench_gate: ==  performance: the trajectory has no numeric baseline ==\n\
+         bench_gate: ==  to compare against. Seed one with `bench_gate       ==\n\
+         bench_gate: ==  record` on a runner-class machine to arm the gate.  ==\n\
+         bench_gate: ==========================================================\n"
+    )
+}
+
 fn main() -> ExitCode {
     match run() {
         Ok(Outcome::Pass(msg)) => {
@@ -306,7 +324,7 @@ fn main() -> ExitCode {
             ExitCode::SUCCESS
         }
         Ok(Outcome::NoBaseline(msg)) => {
-            println!("bench_gate: SKIP (no baseline, exit {EXIT_NO_BASELINE}) — {msg}");
+            print!("{}", unarmed_banner(&msg));
             ExitCode::from(EXIT_NO_BASELINE)
         }
         Ok(Outcome::ClassSkip(msg)) => {
@@ -323,6 +341,19 @@ fn main() -> ExitCode {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn unarmed_banner_is_loud_but_keeps_the_stable_prefix() {
+        let b = unarmed_banner("trajectory has no numeric baseline");
+        let first = b.lines().next().unwrap();
+        assert!(
+            first.starts_with("bench_gate: SKIP (no baseline, exit 2)"),
+            "{first}"
+        );
+        assert!(first.contains("no numeric baseline"));
+        assert!(b.contains("PERF GATE UNARMED"));
+        assert!(b.lines().count() >= 5, "banner must be hard to miss:\n{b}");
+    }
 
     const SAMPLE: &str = r#"{
   "bench": "sim_hotpath",

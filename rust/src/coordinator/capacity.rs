@@ -140,6 +140,14 @@ impl CapacityModel {
         self.est[idx]
     }
 
+    /// Estimated cycles by raw plan mode index (0 = high accuracy,
+    /// `m` = the truncated `m_run = m` plan).  The static analyzer
+    /// cross-checks its independent recomputation against these
+    /// priced values without going through [`Mode`].
+    pub fn est_by_index(&self, idx: usize) -> Option<u64> {
+        self.est.get(idx).copied()
+    }
+
     /// Record a completion: `frames` frames of `mode` took `wall` using
     /// `cards` cards at once (1 for a batch-lane run, the lease width
     /// for a sharded frame).  The pace is charged in *card-time* —

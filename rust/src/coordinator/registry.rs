@@ -31,7 +31,7 @@
 
 use std::sync::{Arc, RwLock};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::artifacts::QuantNetwork;
 use crate::binarray::{ArrayConfig, ExecutionPlan, ShardPlanCache};
@@ -171,6 +171,11 @@ impl ModelRegistry {
         }
         let prog = compile_network(&net);
         let plan = ExecutionPlan::new(cfg, &net, &prog);
+        // Static verification gates publication: a model whose MULW
+        // range proof or schedule/ISA lint fails never reaches a slot
+        // (register and swap both funnel through here).
+        crate::analysis::verify_model(&net, &prog, &plan, self.max_cards)
+            .map_err(|e| anyhow!("model '{name}': static analysis rejected the plan: {e}"))?;
         let cache = ShardPlanCache::new(&plan, self.max_cards);
         let capacity = CapacityModel::new(&plan, &net);
         let weight_words = prog.wgt_words as u64;

@@ -197,6 +197,9 @@ impl BitPatch {
         }
         #[cfg(target_arch = "x86_64")]
         if backend() == Backend::Avx2 {
+            // SAFETY: `backend()` returned Avx2, so runtime CPUID detection
+            // proved the `avx2` target feature is available on this host —
+            // the only contract the `#[target_feature]` fn imposes.
             unsafe { x86::pack_slices_avx2(x, self.stride, &mut self.slices) };
             pack_tail_portable(x, self.stride, &mut self.slices);
             return;
@@ -289,13 +292,21 @@ fn transpose8(mut x: u64) -> u64 {
 /// this when both sides were packed for the same length).
 #[inline]
 pub fn plane_dot(plane: &[u64], patch: &BitPatch) -> i32 {
+    // Each `#[target_feature]` fn below is only reached through its own
+    // `backend()` arm, and `backend()` returns that variant only after
+    // runtime CPUID/auxv detection proved the feature is present — the
+    // sole precondition the fns impose (slice-shape invariants are
+    // ordinary debug-asserted contracts, same as the portable body's).
     match backend() {
         Backend::Portable => plane_dot_generic(plane, patch),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection proved `popcnt` (see above).
         Backend::Popcnt => unsafe { x86::plane_dot_popcnt(plane, patch) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: detection proved `avx2` (see above).
         Backend::Avx2 => unsafe { x86::plane_dot_avx2(plane, patch) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: detection proved `neon` (see above).
         Backend::Neon => unsafe { arm::plane_dot_neon(plane, patch) },
     }
 }
@@ -381,32 +392,39 @@ mod x86 {
         let stride = patch.stride;
         debug_assert_eq!(plane.len(), stride);
         debug_assert_eq!(stride % 4, 0);
-        let lut = _mm256_loadu_si256(NIBBLE_POP.as_ptr().cast::<__m256i>());
-        let low = _mm256_set1_epi8(0x0F);
-        let zero = _mm256_setzero_si256();
-        let mut pos = 0i64;
-        for (k, &w) in SLICE_WEIGHT.iter().enumerate() {
-            let slice = &patch.slices[k * stride..(k + 1) * stride];
-            let mut acc = zero;
-            for j in (0..stride).step_by(4) {
-                let a = _mm256_loadu_si256(plane.as_ptr().add(j).cast::<__m256i>());
-                let b = _mm256_loadu_si256(slice.as_ptr().add(j).cast::<__m256i>());
-                let v = _mm256_and_si256(a, b);
-                let lo = _mm256_and_si256(v, low);
-                let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low);
-                let cnt = _mm256_add_epi8(
-                    _mm256_shuffle_epi8(lut, lo),
-                    _mm256_shuffle_epi8(lut, hi),
-                );
-                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+        // SAFETY: the caller established `avx2` (the fn's only feature
+        // precondition).  Every 32-byte load reads 4 `u64`s at offset
+        // `j ≤ stride − 4` from slices the `plane_stride` contract sizes
+        // to exactly `stride` words (zero-padded, stride % 4 == 0), and
+        // `loadu` has no alignment requirement.
+        unsafe {
+            let lut = _mm256_loadu_si256(NIBBLE_POP.as_ptr().cast::<__m256i>());
+            let low = _mm256_set1_epi8(0x0F);
+            let zero = _mm256_setzero_si256();
+            let mut pos = 0i64;
+            for (k, &w) in SLICE_WEIGHT.iter().enumerate() {
+                let slice = &patch.slices[k * stride..(k + 1) * stride];
+                let mut acc = zero;
+                for j in (0..stride).step_by(4) {
+                    let a = _mm256_loadu_si256(plane.as_ptr().add(j).cast::<__m256i>());
+                    let b = _mm256_loadu_si256(slice.as_ptr().add(j).cast::<__m256i>());
+                    let v = _mm256_and_si256(a, b);
+                    let lo = _mm256_and_si256(v, low);
+                    let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low);
+                    let cnt = _mm256_add_epi8(
+                        _mm256_shuffle_epi8(lut, lo),
+                        _mm256_shuffle_epi8(lut, hi),
+                    );
+                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+                }
+                let c = _mm256_extract_epi64(acc, 0)
+                    + _mm256_extract_epi64(acc, 1)
+                    + _mm256_extract_epi64(acc, 2)
+                    + _mm256_extract_epi64(acc, 3);
+                pos += i64::from(w) * c;
             }
-            let c = _mm256_extract_epi64(acc, 0)
-                + _mm256_extract_epi64(acc, 1)
-                + _mm256_extract_epi64(acc, 2)
-                + _mm256_extract_epi64(acc, 3);
-            pos += i64::from(w) * c;
+            (2 * pos - i64::from(patch.sum)) as i32
         }
-        (2 * pos - i64::from(patch.sum)) as i32
     }
 
     /// Bit-slice all full 64-element groups of `x` with `movemask`:
@@ -415,17 +433,23 @@ mod x86 {
     /// tail group (if any) is left to the portable stager.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn pack_slices_avx2(x: &[i8], stride: usize, slices: &mut [u64]) {
-        for w in 0..x.len() / 64 {
-            let p = x.as_ptr().add(w * 64).cast::<__m256i>();
-            let mut lo = _mm256_loadu_si256(p);
-            let mut hi = _mm256_loadu_si256(p.add(1));
-            for k in (0..8).rev() {
-                let mlo = _mm256_movemask_epi8(lo) as u32 as u64;
-                let mhi = _mm256_movemask_epi8(hi) as u32 as u64;
-                slices[k * stride + w] = (mhi << 32) | mlo;
-                if k > 0 {
-                    lo = _mm256_add_epi8(lo, lo);
-                    hi = _mm256_add_epi8(hi, hi);
+        // SAFETY: the caller established `avx2`.  Each iteration loads
+        // the two unaligned 32-byte halves of the 64-byte group at
+        // `x[w * 64..]` with `w < x.len() / 64`, so both loads stay in
+        // bounds; the `slices` writes are ordinary checked indexing.
+        unsafe {
+            for w in 0..x.len() / 64 {
+                let p = x.as_ptr().add(w * 64).cast::<__m256i>();
+                let mut lo = _mm256_loadu_si256(p);
+                let mut hi = _mm256_loadu_si256(p.add(1));
+                for k in (0..8).rev() {
+                    let mlo = _mm256_movemask_epi8(lo) as u32 as u64;
+                    let mhi = _mm256_movemask_epi8(hi) as u32 as u64;
+                    slices[k * stride + w] = (mhi << 32) | mlo;
+                    if k > 0 {
+                        lo = _mm256_add_epi8(lo, lo);
+                        hi = _mm256_add_epi8(hi, hi);
+                    }
                 }
             }
         }
@@ -446,18 +470,24 @@ mod arm {
         let stride = patch.stride;
         debug_assert_eq!(plane.len(), stride);
         debug_assert_eq!(stride % 2, 0);
-        let mut pos = 0i32;
-        for (k, &w) in SLICE_WEIGHT.iter().enumerate() {
-            let slice = &patch.slices[k * stride..(k + 1) * stride];
-            let mut c = 0u32;
-            for j in (0..stride).step_by(2) {
-                let a = vld1q_u8(plane.as_ptr().add(j).cast::<u8>());
-                let b = vld1q_u8(slice.as_ptr().add(j).cast::<u8>());
-                c += u32::from(vaddlvq_u8(vcntq_u8(vandq_u8(a, b))));
+        // SAFETY: the caller established `neon`.  Each 16-byte load
+        // reads 2 `u64`s at offset `j ≤ stride − 2` from slices the
+        // `plane_stride` contract sizes to exactly `stride` words
+        // (stride is a multiple of LANE_WORDS = 4, hence of 2).
+        unsafe {
+            let mut pos = 0i32;
+            for (k, &w) in SLICE_WEIGHT.iter().enumerate() {
+                let slice = &patch.slices[k * stride..(k + 1) * stride];
+                let mut c = 0u32;
+                for j in (0..stride).step_by(2) {
+                    let a = vld1q_u8(plane.as_ptr().add(j).cast::<u8>());
+                    let b = vld1q_u8(slice.as_ptr().add(j).cast::<u8>());
+                    c += u32::from(vaddlvq_u8(vcntq_u8(vandq_u8(a, b))));
+                }
+                pos += w * c as i32;
             }
-            pos += w * c as i32;
+            2 * pos - patch.sum
         }
-        2 * pos - patch.sum
     }
 }
 

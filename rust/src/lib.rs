@@ -60,7 +60,13 @@
 //! * [`verify`] — differential racer: random-network generator + arm
 //!   racing (golden vs. scalar/packed plan vs. sharded widths) with
 //!   seed replay (`BINARRAY_FUZZ_SEED`) and budget shrinking
+//! * [`analysis`] — static plan verifier: interval range proof of
+//!   MULW overflow-freedom plus schedule/shard/ISA/cycle linting, run
+//!   before the registry publishes any model (`binarray analyze`)
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod approx;
 pub mod area;
 pub mod artifacts;

@@ -12,6 +12,7 @@
 //! binarray area                         # Table IV resource model
 //! binarray listing                      # compiled CNN processing program
 //! binarray verify                       # golden model vs golden.bin + simulator
+//! binarray analyze [--widths N]         # static verifier report, all paper configs
 //! ```
 //!
 //! Argument parsing is hand-rolled (the build is fully offline; no clap).
@@ -107,11 +108,12 @@ fn run() -> Result<()> {
         "area" => area_cmd(),
         "listing" => listing(),
         "verify" => verify(),
+        "analyze" => analyze(&args),
         "asm" => asm(&args),
         "disasm" => disasm(&args),
         _ => {
             println!(
-                "usage: binarray <info|serve|perf|area|listing|verify|asm|disasm> [--flags]\n\
+                "usage: binarray <info|serve|perf|area|listing|verify|analyze|asm|disasm> [--flags]\n\
                  see `rust/src/main.rs` docs for details"
             );
             Ok(())
@@ -440,6 +442,38 @@ fn area_cmd() -> Result<()> {
 fn listing() -> Result<()> {
     let net = load_net()?;
     println!("{}", isa::compile_network(&net).listing());
+    Ok(())
+}
+
+/// `binarray analyze`: run the static verifier over every paper config
+/// and print the per-layer range/cycle report.  CNN-A is loaded from
+/// built artifacts when present, the synthetic stand-in otherwise, each
+/// with the config's native M.  `verify_model` internally covers every
+/// accuracy mode (0..=max_m) and every shard width up to `--widths`
+/// (default 4, i.e. widths 1/2/3/4 — a superset of the CI 1/2/4
+/// matrix).  Exits nonzero on the first unproved plan, so CI can gate
+/// on it directly.
+fn analyze(args: &Args) -> Result<()> {
+    let max_cards: usize = args.get("widths", 4)?;
+    println!(
+        "static analyzer — MULW({}-bit) range proof + schedule/ISA/cycle lint",
+        binarray::fixp::MULW
+    );
+    for cfg in PAPER_CONFIGS {
+        let net = binarray::artifacts::cnn_a_or_synthetic(cfg.m_arch);
+        let prog = isa::compile_network(&net);
+        let plan = binarray::binarray::plan::ExecutionPlan::new(cfg, &net, &prog);
+        let report = binarray::analysis::verify_model(&net, &prog, &plan, max_cards)
+            .map_err(|e| anyhow::anyhow!("config {}: UNPROVED — {e}", cfg.label()))?;
+        println!(
+            "\nconfig {} — CNN-A (M = {}), modes 0..={}:",
+            cfg.label(),
+            cfg.m_arch,
+            plan.max_m
+        );
+        print!("{report}");
+    }
+    println!("\nall paper configs proved");
     Ok(())
 }
 

@@ -12,7 +12,11 @@
 //! - the plan executor with the **packed** popcount kernel forced;
 //! - the sharded data path at widths 1, 2 and 4
 //!   ([`BinArraySystem::run_frame_sharded`]);
-//! - high-throughput mode (`m_run = 1`) on both kernels when `M > 1`.
+//! - high-throughput mode (`m_run = 1`) on both kernels when `M > 1`;
+//! - the static analyzer ([`crate::analysis::verify_model`]) as a
+//!   proof-side arm: every compilable case must also *verify* (range
+//!   proof + schedule/ISA lint), so analyzer false-positives surface
+//!   under the same seed-replayable fuzz loop as logits divergences.
 //!
 //! Every case derives from one `u64` seed, so a failure replays exactly:
 //!
@@ -327,6 +331,21 @@ pub fn race_case_against(case: &Case, want: &[i8], want_fast: &[i8]) -> Result<(
     };
     let shape = Shape::new(case.hw, case.hw, case.net.layers[0].c);
     debug_assert_eq!(shape.len(), case.image.len());
+
+    // Arm: the static analyzer.  Not a logits comparison — the proof
+    // obligation is that every randomly generated, compilable network
+    // verifies: the MULW range analysis must not reject a network the
+    // dynamic arms execute correctly (the generator's worst-case
+    // activation mass sits far inside the 28-bit envelope), and the
+    // schedule/ISA lints must accept every plan the racers run.
+    {
+        let prog = crate::isa::compile_network(&case.net);
+        let plan = crate::binarray::plan::ExecutionPlan::new(case.cfg, &case.net, &prog);
+        crate::analysis::verify_model(&case.net, &prog, &plan, 4).map_err(|e| Mismatch {
+            arm: "analysis",
+            detail: format!("static analyzer rejected a racing-clean case: {e}"),
+        })?;
+    }
 
     // Arm: plan executor, scalar kernel forced.
     let mut scalar = BinArraySystem::with_host_threads(case.cfg, case.net.clone(), 1)

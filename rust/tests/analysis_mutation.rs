@@ -1,0 +1,184 @@
+//! Mutation tests for the static plan verifier (tier-1).
+//!
+//! The analyzer is only worth trusting if it is non-vacuous: every
+//! corruption class it claims to catch must actually be caught, with
+//! the *right* typed [`AnalysisError`] variant, through the same public
+//! entry points production uses (`verify_model`, `ModelRegistry::
+//! register`).  Mirrors PR 9's perturbed-oracle test for the dynamic
+//! racers: first prove the clean artifact verifies, then corrupt one
+//! thing and assert the verdict flips.
+
+use binarray::analysis::{self, AnalysisError};
+use binarray::artifacts::{cnn_a_or_synthetic, LayerKind, QuantLayer, QuantNetwork};
+use binarray::binarray::plan::{ExecutionPlan, WorkUnit};
+use binarray::binarray::{ArrayConfig, PAPER_CONFIGS};
+use binarray::coordinator::ModelRegistry;
+use binarray::isa::{compile_network, Instr, Reg, IMM_BITS};
+
+/// Compile + plan a network under one config, the way the registry does.
+fn compiled(cfg: ArrayConfig, net: &QuantNetwork) -> (binarray::isa::Program, ExecutionPlan) {
+    let prog = compile_network(net);
+    let plan = ExecutionPlan::new(cfg, net, &prog);
+    (prog, plan)
+}
+
+/// A single-dense-layer network sized so the MULW proof holds at α = 1
+/// but fails once α widens: `n_c · 128 · 127 > MULW_MAX` while
+/// `n_c · 128 · m` stays far inside it.
+fn big_dense(alpha: i8) -> QuantNetwork {
+    let n_c = 16_384usize;
+    let (d, m) = (2usize, 2usize);
+    QuantNetwork {
+        f_input: 7,
+        layers: vec![QuantLayer {
+            kind: LayerKind::Dense,
+            planes: vec![1i8; d * m * n_c],
+            alpha_q: vec![alpha; d * m],
+            bias_q: vec![5; d],
+            d,
+            m,
+            kh: n_c,
+            kw: 0,
+            c: 0,
+            f_alpha: 6,
+            f_in: 7,
+            f_out: 7,
+            shift: 7,
+            relu: false,
+            pool: 1,
+            stride: 1,
+        }],
+    }
+}
+
+/// The CI acceptance criterion, runnable locally: every paper config ×
+/// accuracy mode × shard width 1..4 proves MULW-overflow-freedom and
+/// exactly-once coverage (`verify_model` iterates modes and widths
+/// internally).
+#[test]
+fn every_paper_config_proves() {
+    for cfg in PAPER_CONFIGS {
+        let net = cnn_a_or_synthetic(cfg.m_arch);
+        let (prog, plan) = compiled(cfg, &net);
+        let report = analysis::verify_model(&net, &prog, &plan, 4)
+            .unwrap_or_else(|e| panic!("config {}: {e}", cfg.label()));
+        assert_eq!(report.widths, vec![1, 2, 3, 4]);
+        assert_eq!(report.mode_cycles.len(), plan.max_m + 1);
+    }
+}
+
+/// Mutation 1 — widen an α: the same network that proves clean at α = 1
+/// is rejected with a concrete `MulwOverflow` witness at α = 127, all
+/// the way through `verify_model`.
+#[test]
+fn widened_alpha_flips_the_verdict() {
+    let cfg = ArrayConfig::new(1, 8, 2);
+    let good = big_dense(1);
+    let (prog, plan) = compiled(cfg, &good);
+    analysis::verify_model(&good, &prog, &plan, 4).expect("α = 1 proves clean");
+
+    let bad = big_dense(127);
+    let (prog, plan) = compiled(cfg, &bad);
+    match analysis::verify_model(&bad, &prog, &plan, 4).unwrap_err() {
+        AnalysisError::MulwOverflow { layer, m, .. } => {
+            assert_eq!((layer, m), (0, 0), "witness pins the first bad level");
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+}
+
+/// Mutation 2 — drop the QS shift out of the barrel shifter's range.
+#[test]
+fn bad_qs_shift_flips_the_verdict() {
+    let cfg = ArrayConfig::new(1, 8, 2);
+    let mut net = cnn_a_or_synthetic(2);
+    let (prog, plan) = compiled(cfg, &net);
+    analysis::verify_model(&net, &prog, &plan, 4).expect("clean network proves");
+
+    net.layers[1].shift = 33;
+    let (prog, plan) = compiled(cfg, &net);
+    assert_eq!(
+        analysis::verify_model(&net, &prog, &plan, 4).unwrap_err(),
+        AnalysisError::BadShift { layer: 1, shift: 33 }
+    );
+}
+
+/// Mutation 3 — overlap two shard tiles: the coverage lint (the exact
+/// function `lint_plan`/`lint_shards` run over every real partition)
+/// reports the doubly-written cell; a gapped partition reports the
+/// dropped cell.
+#[test]
+fn overlapping_shard_tiles_flip_the_verdict() {
+    let disjoint = vec![
+        WorkUnit { rows: 0..3, d: 0..8 },
+        WorkUnit { rows: 3..6, d: 0..8 },
+    ];
+    analysis::lint_cover(&disjoint, 6, 8, 2, 2).expect("disjoint cover proves");
+
+    let overlapping = vec![
+        WorkUnit { rows: 0..4, d: 0..8 },
+        WorkUnit { rows: 3..6, d: 0..8 },
+    ];
+    match analysis::lint_cover(&overlapping, 6, 8, 2, 2).unwrap_err() {
+        AnalysisError::Coverage { layer, cards, row, count, .. } => {
+            assert_eq!((layer, cards, row, count), (2, 2, 3, 2));
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+
+    let gapped = vec![WorkUnit { rows: 0..5, d: 0..8 }];
+    match analysis::lint_cover(&gapped, 6, 8, 2, 2).unwrap_err() {
+        AnalysisError::Coverage { row, count, .. } => assert_eq!((row, count), (5, 0)),
+        other => panic!("wrong variant: {other:?}"),
+    }
+}
+
+/// Mutation 4 — an out-of-range STI immediate: an in-memory `Instr` can
+/// hold what `encode()` would refuse, and the lint must catch it before
+/// emission rather than trust the assembler's panic.
+#[test]
+fn out_of_range_sti_immediate_flips_the_verdict() {
+    let cfg = ArrayConfig::new(1, 8, 2);
+    let net = cnn_a_or_synthetic(2);
+    let mut prog = compile_network(&net);
+    let plan = ExecutionPlan::new(cfg, &net, &prog);
+    analysis::verify_model(&net, &prog, &plan, 4).expect("compiler output proves");
+
+    let pc = prog
+        .instrs
+        .iter()
+        .position(|i| matches!(i, Instr::Sti(Reg::InBase, _)))
+        .expect("every program loads InBase");
+    prog.instrs[pc] = Instr::Sti(Reg::InBase, 1 << IMM_BITS);
+    assert_eq!(
+        analysis::verify_model(&net, &prog, &plan, 4).unwrap_err(),
+        AnalysisError::ImmOutOfRange { pc, imm: 1 << IMM_BITS }
+    );
+}
+
+/// The publication gate end-to-end: the registry compiles-and-verifies
+/// on `register` (and `swap`, which funnels through the same path) and
+/// refuses to publish an unprovable model with a typed error message —
+/// no slot is ever occupied by a plan the analyzer rejected.
+#[test]
+fn registry_refuses_unprovable_models() {
+    let registry = ModelRegistry::new(2);
+    registry
+        .register("good", ArrayConfig::new(1, 8, 2), big_dense(1), 0)
+        .expect("provable model publishes");
+
+    let err = registry
+        .register("bad", ArrayConfig::new(1, 8, 2), big_dense(127), 0)
+        .expect_err("unprovable model must be refused");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("static analysis rejected the plan"),
+        "refusal must name the analyzer: {msg}"
+    );
+    assert!(
+        msg.contains("exceeds MULW"),
+        "refusal must carry the concrete witness: {msg}"
+    );
+    // the refusal left no trace: only the good model is registered
+    assert_eq!(registry.names().len(), 1);
+}
